@@ -1,0 +1,82 @@
+"""AOT compile path: lower every exported Layer-2 graph to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs ``<name>.hlo.txt`` per exported function plus ``manifest.json``
+describing argument/output shapes so the rust runtime can marshal literals
+without touching Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    outputs = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.tree_util.tree_leaves(out_avals)
+    ]
+    args = [{"shape": list(a.shape), "dtype": a.dtype.name} for a in arg_specs]
+    return text, {"name": name, "args": args, "outputs": outputs}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated subset of export names")
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    table = model.exports()
+    if args.only:
+        keep = set(args.only.split(","))
+        table = {k: v for k, v in table.items() if k in keep}
+
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, (fn, specs) in sorted(table.items()):
+        text, entry = lower_entry(name, fn, specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["path"] = f"{name}.hlo.txt"
+        manifest["entries"].append(entry)
+        print(f"  {name:24s} -> {path} ({len(text)} chars, "
+              f"{len(entry['args'])} args, {len(entry['outputs'])} outputs)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernels: complex matrix multiplication via squares.
+
+Two variants, matching the paper's §6 and §9:
+
+* ``cpm_matmul``  — 4 squares per complex multiplication (eq. 17/19, the
+  CPM of Fig. 9a).
+* ``cpm3_matmul`` — 3 squares per complex multiplication (eq. 32/34, the
+  CPM3 of Fig. 12a); the term ``(c+a+b)²`` is computed once and shared
+  between the real and imaginary accumulators, which is the whole point.
+
+Complex operands travel as separate (re, im) planes — planar layout keeps
+each plane MXU/VPU-tile friendly and is what the rust runtime marshals.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .square_matmul import _pick_tile, _halve
+
+
+def _tiles(m, p, k):
+    return _pick_tile(m, 32), _pick_tile(p, 32), _pick_tile(k, 32)
+
+
+# ---------------------------------------------------------------------------
+# CPM — 4 squares (eq. 17/19)
+# ---------------------------------------------------------------------------
+
+def _cpm_kernel(a_ref, b_ref, c_ref, s_ref, sx_ref, sy_ref,
+                re_ref, im_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        corr = sx_ref[...][:, None] + sy_ref[...][None, :]
+        re_ref[...] = corr
+        im_ref[...] = corr
+
+    a = a_ref[...][:, :, None]
+    b = b_ref[...][:, :, None]
+    c = c_ref[...][None, :, :]
+    s = s_ref[...][None, :, :]
+    t1 = a + c          # (TM, TK, TP)
+    t2 = b - s
+    t3 = b + c
+    t4 = a + s
+    re_ref[...] += jnp.sum(t1 * t1 + t2 * t2, axis=1)
+    im_ref[...] += jnp.sum(t3 * t3 + t4 * t4, axis=1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        re_ref[...] = _halve(re_ref[...])
+        im_ref[...] = _halve(im_ref[...])
+
+
+def cpm_matmul(a, b, c, s):
+    """Z = (a+jb)(c+js) with 4 squares per complex product (eq. 17/19).
+
+    a, b: (M, K); c, s: (K, P). Returns (re, im) each (M, P).
+    """
+    m, ka = a.shape
+    _, p = c.shape
+    tm, tp, tk = _tiles(m, p, ka)
+    nk = ka // tk
+
+    sx = -jnp.sum(a * a + b * b, axis=1)       # (M,) eq. (18)
+    sy = -jnp.sum(c * c + s * s, axis=0)       # (P,) eq. (18)
+
+    kernel = functools.partial(_cpm_kernel, nk=nk)
+    out_shape = [jax.ShapeDtypeStruct((m, p), a.dtype)] * 2
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, p // tp, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tk, tp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tm,), lambda i, j, k: (i,)),
+            pl.BlockSpec((tp,), lambda i, j, k: (j,)),
+        ],
+        out_specs=[pl.BlockSpec((tm, tp), lambda i, j, k: (i, j))] * 2,
+        out_shape=out_shape,
+        interpret=True,
+    )(a, b, c, s, sx, sy)
+
+
+# ---------------------------------------------------------------------------
+# CPM3 — 3 squares (eq. 32/34)
+# ---------------------------------------------------------------------------
+
+def _cpm3_kernel(a_ref, b_ref, c_ref, s_ref, rc_ref, ic_ref,
+                 re_ref, im_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        re_ref[...] = rc_ref[...]
+        im_ref[...] = ic_ref[...]
+
+    a = a_ref[...][:, :, None]
+    b = b_ref[...][:, :, None]
+    c = c_ref[...][None, :, :]
+    s = s_ref[...][None, :, :]
+    t = c + a + b                      # shared square (eq. 32 ∩ eq. 34)
+    t = t * t
+    u = b + c + s
+    v = a + s - c
+    re_ref[...] += jnp.sum(t - u * u, axis=1)
+    im_ref[...] += jnp.sum(t + v * v, axis=1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        re_ref[...] = _halve(re_ref[...])
+        im_ref[...] = _halve(im_ref[...])
+
+
+def cpm3_matmul(a, b, c, s):
+    """Z = (a+jb)(c+js) with 3 squares per complex product (eq. 32/34)."""
+    m, ka = a.shape
+    _, p = c.shape
+    tm, tp, tk = _tiles(m, p, ka)
+    nk = ka // tk
+
+    # eq. (33)/(35) rank-1 corrections, combined into per-output seeds
+    ab2 = (a + b) * (a + b)
+    sab = jnp.sum(-ab2 + b * b, axis=1)             # (M,)
+    sba = jnp.sum(-ab2 - a * a, axis=1)             # (M,)
+    c2 = c * c
+    cs = c + s
+    sc = s - c
+    scs = jnp.sum(-c2 + cs * cs, axis=0)            # (P,)
+    ssc = jnp.sum(-c2 - sc * sc, axis=0)            # (P,)
+    re_corr = sab[:, None] + scs[None, :]           # (M, P)
+    im_corr = sba[:, None] + ssc[None, :]
+
+    kernel = functools.partial(_cpm3_kernel, nk=nk)
+    out_shape = [jax.ShapeDtypeStruct((m, p), a.dtype)] * 2
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, p // tp, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tk, tp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tm, tp), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tm, tp), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((tm, tp), lambda i, j, k: (i, j))] * 2,
+        out_shape=out_shape,
+        interpret=True,
+    )(a, b, c, s, re_corr, im_corr)

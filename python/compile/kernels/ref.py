@@ -1,0 +1,303 @@
+"""Pure-jnp oracles for every identity in the paper.
+
+Each function implements one of the paper's equations *literally* (squares
+only on the hot path) so that the Pallas kernels, the JAX model and the rust
+reference stack can all be validated against the same formulas:
+
+  eq. (1)/(2)    pm / pm_neg            — the basic mechanism
+  eq. (4)/(5)    square_matmul          — real matmul via squares
+  eq. (8)/(9)    square_transform       — linear transform via squares
+  eq. (11)       square_conv1d          — 1-D convolution via squares
+  eq. (13)/(14)  square_conv2d          — 2-D convolution via squares
+  eq. (17)/(19)  cpm_matmul (4 squares) — complex matmul, CPM
+  eq. (21)/(22)  cpm                    — complex partial multiplication
+  eq. (24)/(26)  cpm_transform          — complex transform, CPM
+  eq. (28)/(29)  cpm_conv1d             — complex convolution, CPM
+  eq. (32)/(34)  cpm3_matmul (3 squares)— complex matmul, CPM3
+  eq. (37)/(38)  cpm3                   — complex partial mult, 3 squares
+  eq. (40)/(42)  cpm3_transform         — complex transform, CPM3
+  eq. (45)/(46)  cpm3_conv1d            — complex convolution, CPM3
+
+No multiplication between *data* operands appears in any of these: only
+additions, subtractions, element-wise squares (x*x of a single value is a
+square, not a general multiplication) and the final exact halving.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _sq(x):
+    """Square of a single operand — the only 'multiplier' the paper allows."""
+    return x * x
+
+
+def _halve(x):
+    """Exact ÷2: floor-div for integers (sums are provably even), *0.5 else."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x // 2
+    return x * jnp.asarray(0.5, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# eq. (1) / (2) — the basic mechanism
+# ---------------------------------------------------------------------------
+
+def pm(a, b):
+    """ab = ½((a+b)² − a² − b²)   (eq. 1)."""
+    return _halve(_sq(a + b) - _sq(a) - _sq(b))
+
+
+def pm_neg(a, b):
+    """−ab = ½((a−b)² − a² − b²)   (eq. 2)."""
+    return _halve(_sq(a - b) - _sq(a) - _sq(b))
+
+
+# ---------------------------------------------------------------------------
+# eq. (4)/(5) — real matrix multiplication
+# ---------------------------------------------------------------------------
+
+def square_matmul_terms(a, b):
+    """Return (Sab, Sa, Sb) of eq. (5) for A (M,K), B (K,P)."""
+    sab = jnp.sum(_sq(a[:, :, None] + b[None, :, :]), axis=1)   # (M,P)
+    sa = -jnp.sum(_sq(a), axis=1)                               # (M,)
+    sb = -jnp.sum(_sq(b), axis=0)                               # (P,)
+    return sab, sa, sb
+
+
+def square_matmul(a, b):
+    """C = AB via eq. (4): ½(Sab + Sa + Sb)."""
+    sab, sa, sb = square_matmul_terms(a, b)
+    return _halve(sab + sa[:, None] + sb[None, :])
+
+
+# ---------------------------------------------------------------------------
+# eq. (8)/(9) — real linear transform X_k = Σ_i w_ki x_i
+# ---------------------------------------------------------------------------
+
+def square_transform(w, x):
+    """Transform of eq. (8) for coefficient matrix w (N,N) and vector x (N,).
+
+    Pre-computes Sw_k (eq. 9); the common x_i² term is computed once.
+    """
+    sw = -jnp.sum(_sq(w), axis=1)                  # (N,)  eq. (9)
+    sx = jnp.sum(_sq(x))                           # common term
+    part = jnp.sum(_sq(w + x[None, :]), axis=1)    # (N,)
+    return _halve(part - sx + sw)
+
+
+# ---------------------------------------------------------------------------
+# eq. (11) — 1-D convolution / correlation   y_k = Σ_i w_i x_{i+k}
+# ---------------------------------------------------------------------------
+
+def square_conv1d(w, x):
+    """Correlation of eq. (10) computed via eq. (11) (valid mode)."""
+    n = w.shape[0]
+    k_out = x.shape[0] - n + 1
+    sw = -jnp.sum(_sq(w))
+    idx = jnp.arange(k_out)[:, None] + jnp.arange(n)[None, :]   # (K,N)
+    xs = x[idx]                                                 # windows
+    part = jnp.sum(_sq(w[None, :] + xs), axis=1)                # (K,)
+    sx = jnp.sum(_sq(xs), axis=1)                               # (K,)
+    return _halve(part - sx + sw)
+
+
+def direct_conv1d(w, x):
+    """Reference eq. (10) with ordinary multiplications (valid mode)."""
+    n = w.shape[0]
+    k_out = x.shape[0] - n + 1
+    idx = jnp.arange(k_out)[:, None] + jnp.arange(n)[None, :]
+    return jnp.sum(w[None, :] * x[idx], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# eq. (13)/(14) — 2-D convolution
+# ---------------------------------------------------------------------------
+
+def square_conv2d(w, x):
+    """2-D valid correlation of eq. (12) via eq. (13)/(14).
+
+    w: (Kh, Kw) kernel, x: (H, W) samples → (H-Kh+1, W-Kw+1).
+    """
+    kh, kw = w.shape
+    oh = x.shape[0] - kh + 1
+    ow = x.shape[1] - kw + 1
+    sw = -jnp.sum(_sq(w))
+    # gather all windows: (oh, ow, kh, kw)
+    ih = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
+    iw = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
+    xs = x[ih[:, None, :, None], iw[None, :, None, :]]
+    part = jnp.sum(_sq(w[None, None, :, :] + xs), axis=(2, 3))
+    sx = jnp.sum(_sq(xs), axis=(2, 3))
+    return _halve(part - sx + sw)
+
+
+def direct_conv2d(w, x):
+    kh, kw = w.shape
+    oh = x.shape[0] - kh + 1
+    ow = x.shape[1] - kw + 1
+    ih = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
+    iw = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
+    xs = x[ih[:, None, :, None], iw[None, :, None, :]]
+    return jnp.sum(w[None, None, :, :] * xs, axis=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# eq. (17)/(19) — complex matmul with 4 squares (CPM)
+# ---------------------------------------------------------------------------
+
+def cpm(a, b, c, s):
+    """Complex partial multiplication, eq. (21)/(22): returns (re, im) parts
+    of the *partial* product of (a+jb)(c+js) — still needs the Sx/Sy
+    correction and the ÷2."""
+    re = _sq(a + c) + _sq(b - s)
+    im = _sq(b + c) + _sq(a + s)
+    return re, im
+
+
+def cpm_matmul(a, b, c, s):
+    """Complex matmul Z = XY via eq. (17)/(19). X = a+jb (M,K), Y = c+js (K,P).
+
+    Returns (re, im) of Z. Uses 4·M·K·P + 2·M·K + 2·K·P squares.
+    """
+    sx = -jnp.sum(_sq(a) + _sq(b), axis=1)          # (M,)  eq. (18)
+    sy = -jnp.sum(_sq(c) + _sq(s), axis=0)          # (P,)  eq. (18)
+    re = jnp.sum(_sq(a[:, :, None] + c[None, :, :]) +
+                 _sq(b[:, :, None] - s[None, :, :]), axis=1)
+    im = jnp.sum(_sq(b[:, :, None] + c[None, :, :]) +
+                 _sq(a[:, :, None] + s[None, :, :]), axis=1)
+    corr = sx[:, None] + sy[None, :]
+    return _halve(re + corr), _halve(im + corr)
+
+
+# ---------------------------------------------------------------------------
+# eq. (24)/(26) — complex linear transform with CPM
+# ---------------------------------------------------------------------------
+
+def cpm_transform(c, s, x, y):
+    """Complex transform of eq. (23) via eq. (24)/(26).
+
+    Coefficients c+js (N,N), sample vector x+jy (N,). Returns (X, Y).
+    """
+    sxy = -jnp.sum(_sq(x) + _sq(y))                          # eq. (25)
+    sk = -jnp.sum(_sq(c) + _sq(s), axis=1)                   # (N,) eq. (25)
+    re = jnp.sum(_sq(c + x[None, :]) + _sq(s - y[None, :]), axis=1)
+    im = jnp.sum(_sq(c + y[None, :]) + _sq(s + x[None, :]), axis=1)
+    return _halve(re + sxy + sk), _halve(im + sxy + sk)
+
+
+# ---------------------------------------------------------------------------
+# eq. (28)/(29) — complex convolution with CPM
+# ---------------------------------------------------------------------------
+
+def cpm_conv1d(c, s, x, y):
+    """Complex correlation of eq. (27) via eq. (28)/(29) (valid mode).
+
+    Kernel c+js (N,), samples x+jy (L,) → (L-N+1,) complex as (re, im).
+    """
+    n = c.shape[0]
+    k_out = x.shape[0] - n + 1
+    idx = jnp.arange(k_out)[:, None] + jnp.arange(n)[None, :]
+    xs, ys = x[idx], y[idx]
+    sw = -jnp.sum(_sq(c) + _sq(s))                           # eq. (30)
+    sxy = jnp.sum(_sq(xs) + _sq(ys), axis=1)                 # per-window
+    re = jnp.sum(_sq(c[None, :] + xs) + _sq(s[None, :] - ys), axis=1)
+    im = jnp.sum(_sq(s[None, :] + xs) + _sq(c[None, :] + ys), axis=1)
+    return _halve(re - sxy + sw), _halve(im - sxy + sw)
+
+
+# ---------------------------------------------------------------------------
+# eq. (32)/(34) — complex matmul with 3 squares (CPM3)
+# ---------------------------------------------------------------------------
+
+def cpm3(a, b, c, s):
+    """Complex partial multiplication with 3 squares, eq. (37)/(38)."""
+    t = _sq(c + a + b)                     # shared between re and im
+    re = t - _sq(b + c + s)
+    im = t + _sq(a + s - c)
+    return re, im
+
+
+def cpm3_matmul_terms(a, b, c, s):
+    """Correction terms of eq. (33)/(35)."""
+    sab = jnp.sum(-_sq(a + b) + _sq(b), axis=1)      # (M,) eq. (33)
+    scs = jnp.sum(-_sq(c) + _sq(c + s), axis=0)      # (P,) eq. (33)
+    sba = jnp.sum(-_sq(a + b) - _sq(a), axis=1)      # (M,) eq. (35)
+    ssc = jnp.sum(-_sq(c) - _sq(s - c), axis=0)      # (P,) eq. (35)
+    return sab, scs, sba, ssc
+
+
+def cpm3_matmul(a, b, c, s):
+    """Complex matmul Z = XY via eq. (32)/(34): 3·M·K·P (+ low-order) squares."""
+    sab, scs, sba, ssc = cpm3_matmul_terms(a, b, c, s)
+    t = _sq(c[None, :, :] + a[:, :, None] + b[:, :, None])   # shared term
+    re = jnp.sum(t - _sq(b[:, :, None] + c[None, :, :] + s[None, :, :]), axis=1)
+    im = jnp.sum(t + _sq(a[:, :, None] + s[None, :, :] - c[None, :, :]), axis=1)
+    re = _halve(re + sab[:, None] + scs[None, :])
+    im = _halve(im + sba[:, None] + ssc[None, :])
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# eq. (40)/(42) — complex linear transform with CPM3
+# ---------------------------------------------------------------------------
+
+def cpm3_transform(c, s, x, y):
+    """Complex transform of eq. (39) via eq. (40)/(42)."""
+    sxy = jnp.sum(-_sq(x + y) + _sq(y))                      # eq. (41)
+    sxk = jnp.sum(-_sq(c) + _sq(c + s), axis=1)              # (N,) eq. (41)
+    syx = jnp.sum(-_sq(x + y) - _sq(x))                      # eq. (43)
+    syk = jnp.sum(-_sq(c) - _sq(s - c), axis=1)              # (N,) eq. (43)
+    t = _sq(c + (x + y)[None, :])                            # shared
+    xk = jnp.sum(t - _sq(y[None, :] + c + s), axis=1)
+    yk = jnp.sum(t + _sq(x[None, :] + s - c), axis=1)
+    return _halve(xk + sxy + sxk), _halve(yk + syx + syk)
+
+
+# ---------------------------------------------------------------------------
+# eq. (45)/(46) — complex convolution with CPM3
+# ---------------------------------------------------------------------------
+
+def cpm3_conv1d(c, s, x, y):
+    """Complex correlation of eq. (44) via eq. (45)/(46) (valid mode)."""
+    n = c.shape[0]
+    k_out = x.shape[0] - n + 1
+    idx = jnp.arange(k_out)[:, None] + jnp.arange(n)[None, :]
+    xs, ys = x[idx], y[idx]
+    # eq. (47) split into real/imag parts of Sw
+    sw_re = jnp.sum(-_sq(c) + _sq(c + s))
+    sw_im = jnp.sum(-_sq(c) - _sq(s - c))
+    # common per-window terms
+    sxy = jnp.sum(-_sq(xs + ys) + _sq(ys), axis=1)
+    syx = jnp.sum(-_sq(xs + ys) - _sq(xs), axis=1)
+    t = _sq(c[None, :] + xs + ys)
+    re = jnp.sum(t - _sq(ys + c[None, :] + s[None, :]), axis=1)
+    im = jnp.sum(t + _sq(xs + s[None, :] - c[None, :]), axis=1)
+    return _halve(re + sxy + sw_re), _halve(im + syx + sw_im)
+
+
+# ---------------------------------------------------------------------------
+# direct references (ordinary multiplications) for comparison
+# ---------------------------------------------------------------------------
+
+def direct_matmul(a, b):
+    return a @ b
+
+
+def direct_cmatmul(a, b, c, s):
+    """(re, im) of (a+jb)(c+js) matrix product, 4-real-mult definition."""
+    re = a @ c - b @ s
+    im = b @ c + a @ s
+    return re, im
+
+
+def direct_transform(w, x):
+    return w @ x
+
+
+def dft_matrix(n, dtype=jnp.float32):
+    """(c, s) planes of the DFT matrix W_ki = exp(-2πj·ki/n)."""
+    k = jnp.arange(n)[:, None] * jnp.arange(n)[None, :]
+    ang = -2.0 * jnp.pi * k / n
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)

@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernels: convolution / correlation via squares.
+
+1-D (eq. 10/11) and 2-D (eq. 12–14) valid-mode correlation where every
+kernel-tap multiplication is replaced by a partial multiplication
+``(w + x)²`` plus the shared ``x²`` term and the pre-computed ``Sw``
+(eq. 11). The dataflow mirrors the paper's Fig. 8 engine: one new sample
+enters per step, its square is computed once and shared by all taps.
+
+Note on BlockSpecs: conv windows overlap by N−1 samples, which block-unit
+index maps cannot express; the signal therefore resides in a single VMEM
+block (fine for the sizes we AOT — a 4096-sample f32 signal is 16 KiB) and
+each grid step slices its own receptive field with ``dynamic_slice``. On a
+real TPU this is exactly the Fig. 8 shift-register: samples stay resident,
+taps stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .square_matmul import _pick_tile, _halve
+
+
+# ---------------------------------------------------------------------------
+# 1-D convolution (eq. 11, Fig. 8)
+# ---------------------------------------------------------------------------
+
+def _square_conv1d_kernel(w_ref, x_ref, sw_ref, o_ref, *, n: int, to: int):
+    """One output tile of eq. (11).
+
+    The loop accumulates the partial products Σ_i (w_i + x_{i+k})² and the
+    shared sample-energy term Σ_i x_{i+k}² in lock-step — the Fig. 8 wiring
+    where x² is computed once per sample and subtracted at every tap.
+    """
+    w = w_ref[...]
+    x = x_ref[...]
+    base = pl.program_id(0) * to
+
+    def body(i, carry):
+        acc, sx = carry
+        win = jax.lax.dynamic_slice(x, (base + i,), (to,))
+        t = w[i] + win
+        return acc + t * t, sx + win * win
+
+    zeros = jnp.zeros((to,), dtype=x.dtype)
+    acc, sx = jax.lax.fori_loop(0, n, body, (zeros, zeros))
+    o_ref[...] = _halve(acc - sx + sw_ref[0])
+
+
+def square_conv1d(w: jax.Array, x: jax.Array) -> jax.Array:
+    """y_k = Σ_i w_i·x_{i+k} (valid correlation) with squares only.
+
+    w: (N,), x: (L,) → (L−N+1,).
+    """
+    n = w.shape[0]
+    l = x.shape[0]
+    k_out = l - n + 1
+    assert k_out >= 1, "kernel longer than signal"
+    to = _pick_tile(k_out, 128)
+    sw = -jnp.sum(w * w)[None]
+
+    kernel = functools.partial(_square_conv1d_kernel, n=n, to=to)
+    return pl.pallas_call(
+        kernel,
+        grid=(k_out // to,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((to,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k_out,), x.dtype),
+        interpret=True,
+    )(w, x, sw)
+
+
+# ---------------------------------------------------------------------------
+# 2-D convolution (eq. 13/14)
+# ---------------------------------------------------------------------------
+
+def _square_conv2d_kernel(w_ref, x_ref, sw_ref, o_ref, *, kh: int, kw: int):
+    w = w_ref[...]
+    x = x_ref[...]
+    oh, ow = o_ref.shape
+
+    def body(t, carry):
+        acc, sx = carry
+        i, j = t // kw, t % kw
+        win = jax.lax.dynamic_slice(x, (i, j), (oh, ow))
+        u = w[i, j] + win
+        return acc + u * u, sx + win * win
+
+    zeros = jnp.zeros((oh, ow), dtype=x.dtype)
+    acc, sx = jax.lax.fori_loop(0, kh * kw, body, (zeros, zeros))
+    o_ref[...] = _halve(acc - sx + sw_ref[0])
+
+
+def square_conv2d(w: jax.Array, x: jax.Array) -> jax.Array:
+    """2-D valid correlation via eq. (13)/(14). w: (Kh,Kw), x: (H,W)."""
+    kh, kw = w.shape
+    h, ww_ = x.shape
+    oh, ow = h - kh + 1, ww_ - kw + 1
+    assert oh >= 1 and ow >= 1
+    sw = -jnp.sum(w * w)[None]
+
+    kernel = functools.partial(_square_conv2d_kernel, kh=kh, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((kh, kw), lambda i: (0, 0)),
+            pl.BlockSpec((h, ww_), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), x.dtype),
+        interpret=True,
+    )(w, x, sw)

@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels: real matrix multiplication via squares (eq. 4/5).
+
+The kernel is output-stationary over (TM, TP) tiles with the contraction
+dimension K streamed through VMEM in TK-sized slices — the same schedule the
+paper's square-based systolic array (Fig. 2) realises in silicon. Per K
+slice the PE work is a broadcast add ``A[:,k] ⊕ B[k,:]`` followed by an
+element-wise square-accumulate: *no general multiplication between data
+operands appears anywhere in the hot loop*.
+
+The rank-1 correction terms Sa_i / Sb_j (eq. 5) are produced by their own
+small Pallas kernels (``row_sumsq`` / ``col_sumsq``) and fused into the
+epilogue of the last K step, together with the exact ÷2 (eq. 4 outputs 2c).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and numerics are identical under interpret (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred tile edges, largest first. For hypothesis-generated odd shapes we
+# fall back to a divisor (worst case 1) — correctness first, the production
+# shapes (multiples of 8/128) always get the wide tiles.
+_TILE_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim: int, cap: int = 128) -> int:
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _halve(x):
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x // 2
+    return x * jnp.asarray(0.5, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# correction-term kernels
+# ---------------------------------------------------------------------------
+
+def _row_sumsq_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    o_ref[...] = -jnp.sum(a * a, axis=1)
+
+
+def row_sumsq(a: jax.Array) -> jax.Array:
+    """Sa_i = −Σ_k a_ik² (eq. 5) for a (M,K) matrix, tiled over rows."""
+    m, _ = a.shape
+    tm = _pick_tile(m)
+    return pl.pallas_call(
+        _row_sumsq_kernel,
+        grid=(m // tm,),
+        in_specs=[pl.BlockSpec((tm, a.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def col_sumsq(b: jax.Array) -> jax.Array:
+    """Sb_j = −Σ_k b_kj² (eq. 5) for a (K,P) matrix, tiled over columns."""
+    _, p = b.shape
+    tp = _pick_tile(p)
+
+    def kernel(b_ref, o_ref):
+        x = b_ref[...]
+        o_ref[...] = -jnp.sum(x * x, axis=0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // tp,),
+        in_specs=[pl.BlockSpec((b.shape[0], tp), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((tp,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((p,), b.dtype),
+        interpret=True,
+    )(b)
+
+
+# ---------------------------------------------------------------------------
+# the square-matmul kernel
+# ---------------------------------------------------------------------------
+
+def _square_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step of eq. (4).
+
+    Accumulates Σ_k (a_ik + b_kj)² into the output tile; on the first K step
+    the accumulator is seeded with the rank-1 correction Sa_i + Sb_j, and on
+    the last step the exact ÷2 is applied.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = sa_ref[...][:, None] + sb_ref[...][None, :]
+
+    t = a_ref[...][:, :, None] + b_ref[...][None, :, :]   # (TM, TK, TP)
+    o_ref[...] += jnp.sum(t * t, axis=1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _halve(o_ref[...])
+
+
+def square_matmul(a: jax.Array, b: jax.Array,
+                  tm: int | None = None, tk: int | None = None,
+                  tp: int | None = None) -> jax.Array:
+    """C = A @ B computed with squares only (eq. 4/5).
+
+    a: (M, K), b: (K, P) → (M, P). Exact for integers within the bit-growth
+    budget (see rust ``arith::fixed``); for floats agrees with ``a @ b`` up
+    to the cancellation error characterised in experiment E5.
+    """
+    m, ka = a.shape
+    kb, p = b.shape
+    assert ka == kb, f"contraction mismatch {ka} vs {kb}"
+    # Tile selection (perf pass, EXPERIMENTS.md §Perf-L2): interpret-mode
+    # pallas pays a large fixed cost per grid step, so prefer FEW, BIG
+    # steps. The 3-D broadcast tile is TM·TK·TP f32 values; cap it at
+    # ≈2 MiB (512k elements) which still fits a VMEM-sized budget when
+    # double-buffered on real hardware.
+    # measured on this host (EXPERIMENTS.md §Perf-L2): wide TP collapses
+    # grid steps on rectangular layers (the MLP case, p50 −30%), while TK
+    # beyond 32 inflates the 3-D broadcast intermediate and slows XLA's
+    # CPU loop fusion (64³ kernel 132 µs → 396 µs) — so cap TK at 32 and
+    # bound the whole tile by a ≈1 MiB budget.
+    tm = tm or _pick_tile(m, 64)
+    tp = tp or _pick_tile(p, 256)
+    budget = (1 << 18) // max(tm * tp, 1)
+    tk = tk or _pick_tile(ka, max(min(budget, 32), 8))
+    nk = ka // tk
+
+    sa = row_sumsq(a)
+    sb = col_sumsq(b)
+
+    kernel = functools.partial(_square_matmul_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, p // tp, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tp), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tm,), lambda i, j, k: (i,)),
+            pl.BlockSpec((tp,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), a.dtype),
+        interpret=True,
+    )(a, b, sa, sb)
+
+
+def square_matvec(a: jax.Array, x: jax.Array) -> jax.Array:
+    """A @ x via squares; thin wrapper used by the transform layer."""
+    return square_matmul(a, x[:, None])[:, 0]

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernels: linear transforms via squares (Fig. 6b/10/13).
+
+A transform is a matrix–vector product X = Wx (eq. 7). The paper's engines
+process one sample per cycle against all N coefficient rows; batched over B
+input vectors this is exactly the square matmul with A = X_batch (B, N) and
+B = Wᵀ, so the real-valued engine reuses ``square_matmul``. The complex
+engines (CPM of Fig. 10, CPM3 of Fig. 13) get dedicated kernels: the
+coefficient corrections S_k (eq. 25/41/43) are pre-computed — the paper's
+"coefficients are constants" assumption — and baked into the artifact as
+HLO constants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .square_matmul import _pick_tile, _halve, square_matmul
+
+
+def square_transform(w: jax.Array, xb: jax.Array) -> jax.Array:
+    """Real transform (eq. 8), batched: xb (B, N) → (B, N) via W (N, N)."""
+    return square_matmul(xb, w.T)
+
+
+def _cpm3_transform_kernel(c_ref, s_ref, x_ref, y_ref,
+                           sxk_ref, syk_ref, xo_ref, yo_ref):
+    """One batch-tile of the Fig. 13 engine (eq. 40/42).
+
+    All N coefficient rows are resident (weight-stationary); the batch of
+    sample vectors streams through. The common per-sample terms
+    (−(x+y)²+y²) and (−(x+y)²−x²) are computed once per sample (the single
+    shared square unit at the input of Fig. 13) and the shared CPM3 square
+    (c+x+y)² is reused between real and imaginary parts.
+    """
+    c = c_ref[...]                       # (N, N)
+    s = s_ref[...]
+    x = x_ref[...]                       # (TB, N)
+    y = y_ref[...]
+    xy = x + y
+    xy2 = xy * xy
+    sxy = jnp.sum(-xy2 + y * y, axis=1)  # (TB,) eq. (41) common term
+    syx = jnp.sum(-xy2 - x * x, axis=1)  # (TB,) eq. (43) common term
+
+    t = c[None, :, :] + xy[:, None, :]   # (TB, N, N) shared square
+    t = t * t
+    u = y[:, None, :] + (c + s)[None, :, :]
+    v = x[:, None, :] + (s - c)[None, :, :]
+    xk = jnp.sum(t - u * u, axis=2)      # (TB, N)
+    yk = jnp.sum(t + v * v, axis=2)
+    xo_ref[...] = _halve(xk + sxy[:, None] + sxk_ref[...][None, :])
+    yo_ref[...] = _halve(yk + syx[:, None] + syk_ref[...][None, :])
+
+
+def cpm3_transform(c: jax.Array, s: jax.Array,
+                   xb: jax.Array, yb: jax.Array):
+    """Complex transform with CPM3 (eq. 39–43), batched.
+
+    c, s: (N, N) coefficient planes; xb, yb: (B, N) sample planes.
+    Returns (X, Y) each (B, N).
+    """
+    n = c.shape[0]
+    bsz = xb.shape[0]
+    tb = _pick_tile(bsz, 8)
+
+    c2 = c * c
+    sxk = jnp.sum(-c2 + (c + s) * (c + s), axis=1)   # (N,) eq. (41)
+    syk = jnp.sum(-c2 - (s - c) * (s - c), axis=1)   # (N,) eq. (43)
+
+    out_shape = [jax.ShapeDtypeStruct((bsz, n), xb.dtype)] * 2
+    return pl.pallas_call(
+        _cpm3_transform_kernel,
+        grid=(bsz // tb,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0))] * 2,
+        out_shape=out_shape,
+        interpret=True,
+    )(c, s, xb, yb, sxk, syk)
+
+
+def dft_planes(n: int, dtype=jnp.float32):
+    """(cos, sin) planes of the DFT matrix W_ki = exp(−2πj·ki/n)."""
+    k = jnp.arange(n)[:, None] * jnp.arange(n)[None, :]
+    ang = -2.0 * jnp.pi * k / n
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def dft_cpm3(xb: jax.Array, yb: jax.Array):
+    """DFT of a batch of complex vectors via the CPM3 engine (Fig. 13)."""
+    n = xb.shape[1]
+    c, s = dft_planes(n, xb.dtype)
+    return cpm3_transform(c, s, xb, yb)

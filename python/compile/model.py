@@ -1,0 +1,165 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to artifacts.
+
+Everything here is build-time only. Each exported function is a pure JAX
+function whose hot path goes through the Layer-1 Pallas kernels; ``aot.py``
+lowers them to HLO text once and the rust runtime executes them forever
+after.
+
+The end-to-end workload (experiment E6) is a small MLP classifier
+(784 → 256 → 128 → 10, ≈235k parameters) in two twin builds:
+
+* ``mlp_direct`` — ordinary jnp matmuls (the baseline a user would run);
+* ``mlp_square`` — every dense layer computed with the paper's square
+  trick via the Pallas ``square_matmul`` kernel.
+
+Weights are generated deterministically at trace time and baked into the
+HLO as constants — the serving path only ships activations, mirroring an
+inference deployment where the Sb_j column corrections of eq. (5) are
+pre-computed at weight-load time (paper §3, "one of the two matrices is
+constant").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.square_matmul import square_matmul
+from .kernels.square_conv import square_conv1d
+from .kernels.cpm_matmul import cpm3_matmul, cpm_matmul
+from .kernels.transform import dft_cpm3
+
+# ---------------------------------------------------------------------------
+# deterministic parameters
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+MLP_BATCH = 32
+MATMUL_SHAPES = {"s": (32, 32, 32), "m": (64, 64, 64), "l": (128, 128, 128)}
+CMATMUL_SHAPE = (32, 32, 32)
+FIR_TAPS = 64
+FIR_SIGNAL = 1024 + FIR_TAPS - 1     # 1024 valid outputs
+DFT_N = 64
+DFT_BATCH = 8
+
+
+def mlp_params(seed: int = 0):
+    """He-initialised weights/biases, deterministic across runs."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for din, dout in zip(MLP_DIMS[:-1], MLP_DIMS[1:]):
+        w = rng.normal(0.0, np.sqrt(2.0 / din), (din, dout)).astype(np.float32)
+        b = np.zeros((dout,), np.float32)
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+    return params
+
+
+def fir_taps(seed: int = 1):
+    """A realistic low-pass FIR: windowed sinc, 64 taps."""
+    n = np.arange(FIR_TAPS, dtype=np.float32)
+    m = (FIR_TAPS - 1) / 2.0
+    cutoff = 0.2
+    h = np.sinc(2 * cutoff * (n - m)) * np.hamming(FIR_TAPS)
+    h = (h / h.sum()).astype(np.float32)
+    return jnp.asarray(h)
+
+
+# ---------------------------------------------------------------------------
+# exported graphs
+# ---------------------------------------------------------------------------
+
+def matmul_direct(a, b):
+    return (jnp.matmul(a, b),)
+
+
+def matmul_square(a, b):
+    return (square_matmul(a, b),)
+
+
+def _mlp(x, dense):
+    """Shared MLP body; ``dense`` is the matmul implementation."""
+    params = mlp_params()
+    h = x
+    for li, (w, b) in enumerate(params):
+        h = dense(h, w) + b[None, :]
+        if li + 1 < len(params):
+            h = jax.nn.relu(h)
+    return (h,)
+
+
+def mlp_direct(x):
+    return _mlp(x, jnp.matmul)
+
+
+def mlp_square(x):
+    return _mlp(x, square_matmul)
+
+
+def conv1d_square(x):
+    """FIR low-pass filter via the Fig. 8 square engine."""
+    return (square_conv1d(fir_taps(), x),)
+
+
+def conv1d_direct(x):
+    w = fir_taps()
+    n = w.shape[0]
+    k_out = x.shape[0] - n + 1
+    idx = jnp.arange(k_out)[:, None] + jnp.arange(n)[None, :]
+    return (jnp.sum(w[None, :] * x[idx], axis=1),)
+
+
+def cmatmul_3sq(a, b, c, s):
+    """Complex matmul with 3 squares per product (eq. 32/34)."""
+    return cpm3_matmul(a, b, c, s)
+
+
+def cmatmul_4sq(a, b, c, s):
+    """Complex matmul with 4 squares per product (eq. 17/19)."""
+    return cpm_matmul(a, b, c, s)
+
+
+def cmatmul_direct(a, b, c, s):
+    re = a @ c - b @ s
+    im = b @ c + a @ s
+    return re, im
+
+
+def dft_cpm3_batch(x, y):
+    """Batched complex DFT through the CPM3 transform engine (Fig. 13)."""
+    return dft_cpm3(x, y)
+
+
+# ---------------------------------------------------------------------------
+# export table: name -> (fn, example-arg shapes)
+# ---------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def exports():
+    m, k, p = MATMUL_SHAPES["m"]
+    cm, ck, cp = CMATMUL_SHAPE
+    table = {
+        "matmul_direct": (matmul_direct, [_f32(m, k), _f32(k, p)]),
+        "matmul_square": (matmul_square, [_f32(m, k), _f32(k, p)]),
+        "mlp_direct": (mlp_direct, [_f32(MLP_BATCH, MLP_DIMS[0])]),
+        "mlp_square": (mlp_square, [_f32(MLP_BATCH, MLP_DIMS[0])]),
+        "conv1d_direct": (conv1d_direct, [_f32(FIR_SIGNAL)]),
+        "conv1d_square": (conv1d_square, [_f32(FIR_SIGNAL)]),
+        "cmatmul_direct": (cmatmul_direct,
+                           [_f32(cm, ck), _f32(cm, ck), _f32(ck, cp), _f32(ck, cp)]),
+        "cmatmul_4sq": (cmatmul_4sq,
+                        [_f32(cm, ck), _f32(cm, ck), _f32(ck, cp), _f32(ck, cp)]),
+        "cmatmul_3sq": (cmatmul_3sq,
+                        [_f32(cm, ck), _f32(cm, ck), _f32(ck, cp), _f32(ck, cp)]),
+        "dft_cpm3": (dft_cpm3_batch,
+                     [_f32(DFT_BATCH, DFT_N), _f32(DFT_BATCH, DFT_N)]),
+    }
+    # per-size matmul twins for the serving benches
+    for tag, (mm, kk, pp) in MATMUL_SHAPES.items():
+        table[f"matmul_direct_{tag}"] = (matmul_direct, [_f32(mm, kk), _f32(kk, pp)])
+        table[f"matmul_square_{tag}"] = (matmul_square, [_f32(mm, kk), _f32(kk, pp)])
+    return table

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# allow `pytest python/tests` from the repo root as well as `cd python && pytest`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+# several oracles validate in f64; jax disables x64 by default
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,116 @@
+"""Layer-2 model twins + the AOT lowering path."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, aot
+
+
+def test_mlp_square_matches_direct(rng):
+    x = jnp.asarray(rng.normal(0, 1, (model.MLP_BATCH, model.MLP_DIMS[0]))
+                    .astype(np.float32))
+    (direct,) = model.mlp_direct(x)
+    (square,) = model.mlp_square(x)
+    assert direct.shape == (model.MLP_BATCH, model.MLP_DIMS[-1])
+    np.testing.assert_allclose(np.asarray(square), np.asarray(direct),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_mlp_argmax_agreement(rng):
+    """Predicted classes must agree — the serving-level invariant."""
+    x = jnp.asarray(rng.normal(0, 1, (model.MLP_BATCH, model.MLP_DIMS[0]))
+                    .astype(np.float32))
+    (direct,) = model.mlp_direct(x)
+    (square,) = model.mlp_square(x)
+    agree = np.mean(np.argmax(np.asarray(direct), 1) ==
+                    np.argmax(np.asarray(square), 1))
+    assert agree >= 0.97
+
+
+def test_conv1d_twins(rng):
+    x = jnp.asarray(rng.normal(0, 1, (model.FIR_SIGNAL,)).astype(np.float32))
+    (direct,) = model.conv1d_direct(x)
+    (square,) = model.conv1d_square(x)
+    np.testing.assert_allclose(np.asarray(square), np.asarray(direct),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_cmatmul_twins(rng):
+    m, k, p = model.CMATMUL_SHAPE
+    a, b = (jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+            for _ in range(2))
+    c, s = (jnp.asarray(rng.normal(0, 1, (k, p)).astype(np.float32))
+            for _ in range(2))
+    dre, dim = model.cmatmul_direct(a, b, c, s)
+    for f in (model.cmatmul_4sq, model.cmatmul_3sq):
+        re, im = f(a, b, c, s)
+        np.testing.assert_allclose(np.asarray(re), np.asarray(dre),
+                                   atol=5e-3, rtol=5e-3)
+        np.testing.assert_allclose(np.asarray(im), np.asarray(dim),
+                                   atol=5e-3, rtol=5e-3)
+
+
+def test_exports_complete():
+    table = model.exports()
+    # every *_square/_3sq/_4sq entry must have a *_direct baseline twin
+    names = set(table)
+    assert {"matmul_square", "mlp_square", "conv1d_square",
+            "cmatmul_3sq", "cmatmul_4sq", "dft_cpm3"} <= names
+    for n in names:
+        if n.endswith("_square"):
+            assert n.replace("_square", "_direct") in names
+
+
+def test_mlp_params_deterministic():
+    p1, p2 = model.mlp_params(), model.mlp_params()
+    for (w1, b1), (w2, b2) in zip(p1, p2):
+        assert jnp.array_equal(w1, w2) and jnp.array_equal(b1, b2)
+
+
+def test_fir_taps_lowpass():
+    h = np.asarray(model.fir_taps())
+    assert h.shape == (model.FIR_TAPS,)
+    assert h.sum() == pytest.approx(1.0, abs=1e-5)   # unity DC gain
+    # symmetric (linear phase)
+    np.testing.assert_allclose(h, h[::-1], atol=1e-7)
+
+
+# ----------------------------------------------------------------- AOT path
+
+def test_lower_entry_produces_hlo_text():
+    fn, specs = model.exports()["matmul_square_s"]
+    text, entry = aot.lower_entry("matmul_square_s", fn, specs)
+    assert text.startswith("HloModule")
+    assert entry["args"][0]["shape"] == [32, 32]
+    assert entry["outputs"][0]["shape"] == [32, 32]
+    # squares-only hot path: the lowered module must contain no `dot` op
+    # (direct twin does); multiplies remain only as x*x squares.
+    assert " dot(" not in text
+
+
+def test_lower_direct_has_dot():
+    fn, specs = model.exports()["matmul_direct_s"]
+    text, _ = aot.lower_entry("matmul_direct_s", fn, specs)
+    assert " dot(" in text
+
+
+def test_manifest_round_trip(tmp_path):
+    """End-to-end aot.main on a subset, then parse the manifest."""
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path), "--only",
+                "matmul_square_s,matmul_direct_s"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["format"] == "hlo-text"
+    assert len(man["entries"]) == 2
+    for e in man["entries"]:
+        assert (tmp_path / e["path"]).exists()

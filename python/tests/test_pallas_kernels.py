@@ -1,0 +1,200 @@
+"""Pallas kernels vs the pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including primes, 1-sized dims and non-tile
+multiples) and dtypes; fixed parametrized cases cover the production
+artifact shapes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.square_matmul import (square_matmul, row_sumsq,
+                                           col_sumsq, square_matvec)
+from compile.kernels.square_conv import square_conv1d, square_conv2d
+from compile.kernels.cpm_matmul import cpm_matmul, cpm3_matmul
+from compile.kernels.transform import (square_transform, cpm3_transform,
+                                       dft_cpm3, dft_planes)
+
+F32 = np.float32
+dims = st.integers(1, 24)
+
+
+def _assert_close(got, want, atol=1e-3, rtol=1e-3):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=rtol)
+
+
+def _mk(data, dtype):
+    return jnp.asarray(np.asarray(data).astype(dtype))
+
+
+# ------------------------------------------------------------- square_matmul
+
+@given(m=dims, k=dims, p=dims, seed=st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_square_matmul_hypothesis(m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    a = _mk(rng.normal(0, 2, (m, k)), F32)
+    b = _mk(rng.normal(0, 2, (k, p)), F32)
+    _assert_close(square_matmul(a, b), ref.direct_matmul(a, b))
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-3), (np.float64, 1e-9)])
+def test_square_matmul_dtypes(rng, dtype, tol):
+    a = _mk(rng.normal(0, 2, (16, 24)), dtype)
+    b = _mk(rng.normal(0, 2, (24, 8)), dtype)
+    _assert_close(square_matmul(a, b), a @ b, atol=tol, rtol=tol)
+
+
+def test_square_matmul_bf16(rng):
+    a = _mk(rng.normal(0, 1, (8, 16)), np.float32).astype(jnp.bfloat16)
+    b = _mk(rng.normal(0, 1, (16, 8)), np.float32).astype(jnp.bfloat16)
+    got = square_matmul(a, b).astype(jnp.float32)
+    want = (a.astype(jnp.float32) @ b.astype(jnp.float32))
+    # bf16 has ~8 mantissa bits; the trick costs ~1 bit extra
+    _assert_close(got, want, atol=0.5, rtol=0.15)
+
+
+def test_square_matmul_int32_exact(rng):
+    a = _mk(rng.integers(-100, 100, (12, 16)), np.int32)
+    b = _mk(rng.integers(-100, 100, (16, 8)), np.int32)
+    assert jnp.array_equal(square_matmul(a, b), a @ b)
+
+
+@pytest.mark.parametrize("m,k,p", [(32, 32, 32), (64, 64, 64), (128, 128, 128)])
+def test_square_matmul_artifact_shapes(rng, m, k, p):
+    """The exact shapes that get AOT-compiled into artifacts/."""
+    a = _mk(rng.normal(0, 1, (m, k)), F32)
+    b = _mk(rng.normal(0, 1, (k, p)), F32)
+    _assert_close(square_matmul(a, b), a @ b, atol=5e-3, rtol=5e-3)
+
+
+def test_row_col_sumsq(rng):
+    a = _mk(rng.normal(0, 2, (12, 7)), F32)
+    _assert_close(row_sumsq(a), -np.sum(np.asarray(a) ** 2, axis=1))
+    _assert_close(col_sumsq(a), -np.sum(np.asarray(a) ** 2, axis=0))
+
+
+def test_square_matvec(rng):
+    a = _mk(rng.normal(0, 2, (9, 14)), F32)
+    x = _mk(rng.normal(0, 2, (14,)), F32)
+    _assert_close(square_matvec(a, x), a @ x)
+
+
+def test_square_matmul_tile_override(rng):
+    a = _mk(rng.normal(0, 1, (16, 16)), F32)
+    b = _mk(rng.normal(0, 1, (16, 16)), F32)
+    for tm, tk, tp in [(1, 1, 1), (16, 16, 16), (8, 4, 2)]:
+        _assert_close(square_matmul(a, b, tm=tm, tk=tk, tp=tp), a @ b)
+
+
+# ------------------------------------------------------------- convolutions
+
+@given(n=st.integers(1, 16), l=st.integers(0, 48), seed=st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_square_conv1d_hypothesis(n, l, seed):
+    rng = np.random.default_rng(seed)
+    w = _mk(rng.normal(0, 2, (n,)), F32)
+    x = _mk(rng.normal(0, 2, (n + l,)), F32)
+    _assert_close(square_conv1d(w, x), ref.direct_conv1d(w, x))
+
+
+def test_square_conv1d_artifact_shape(rng):
+    from compile import model
+    w = model.fir_taps()
+    x = _mk(rng.normal(0, 1, (model.FIR_SIGNAL,)), F32)
+    got = square_conv1d(w, x)
+    assert got.shape == (1024,)
+    _assert_close(got, ref.direct_conv1d(w, x), atol=1e-4)
+
+
+@given(kh=st.integers(1, 5), kw=st.integers(1, 5),
+       eh=st.integers(0, 8), ew=st.integers(0, 8), seed=st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_square_conv2d_hypothesis(kh, kw, eh, ew, seed):
+    rng = np.random.default_rng(seed)
+    w = _mk(rng.normal(0, 2, (kh, kw)), F32)
+    x = _mk(rng.normal(0, 2, (kh + eh, kw + ew)), F32)
+    _assert_close(square_conv2d(w, x), ref.direct_conv2d(w, x))
+
+
+# ------------------------------------------------------------- complex matmul
+
+@given(m=st.integers(1, 12), k=st.integers(1, 12), p=st.integers(1, 12),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_cpm_matmul_hypothesis(m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    a, b = (_mk(rng.normal(0, 2, (m, k)), F32) for _ in range(2))
+    c, s = (_mk(rng.normal(0, 2, (k, p)), F32) for _ in range(2))
+    want_re, want_im = ref.direct_cmatmul(a, b, c, s)
+    got_re, got_im = cpm_matmul(a, b, c, s)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+@given(m=st.integers(1, 12), k=st.integers(1, 12), p=st.integers(1, 12),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_cpm3_matmul_hypothesis(m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    a, b = (_mk(rng.normal(0, 2, (m, k)), F32) for _ in range(2))
+    c, s = (_mk(rng.normal(0, 2, (k, p)), F32) for _ in range(2))
+    want_re, want_im = ref.direct_cmatmul(a, b, c, s)
+    got_re, got_im = cpm3_matmul(a, b, c, s)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+def test_cpm_vs_cpm3_agree(rng):
+    a, b = (_mk(rng.normal(0, 2, (8, 16)), F32) for _ in range(2))
+    c, s = (_mk(rng.normal(0, 2, (16, 8)), F32) for _ in range(2))
+    r4, i4 = cpm_matmul(a, b, c, s)
+    r3, i3 = cpm3_matmul(a, b, c, s)
+    _assert_close(r4, r3, atol=5e-3)
+    _assert_close(i4, i3, atol=5e-3)
+
+
+# ------------------------------------------------------------- transforms
+
+def test_square_transform_batched(rng):
+    n, bsz = 16, 4
+    w = _mk(rng.normal(0, 1, (n, n)), F32)
+    xb = _mk(rng.normal(0, 1, (bsz, n)), F32)
+    _assert_close(square_transform(w, xb), xb @ np.asarray(w).T)
+
+
+@given(n=st.sampled_from([1, 2, 4, 8, 16]), bsz=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_cpm3_transform_hypothesis(n, bsz, seed):
+    rng = np.random.default_rng(seed)
+    c = _mk(rng.normal(0, 1, (n, n)), F32)
+    s = _mk(rng.normal(0, 1, (n, n)), F32)
+    xb = _mk(rng.normal(0, 1, (bsz, n)), F32)
+    yb = _mk(rng.normal(0, 1, (bsz, n)), F32)
+    want_re = xb @ np.asarray(c).T - yb @ np.asarray(s).T
+    want_im = yb @ np.asarray(c).T + xb @ np.asarray(s).T
+    got_re, got_im = cpm3_transform(c, s, xb, yb)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+def test_dft_cpm3_vs_fft(rng):
+    n, bsz = 64, 8
+    xb = _mk(rng.normal(0, 1, (bsz, n)), F32)
+    yb = _mk(rng.normal(0, 1, (bsz, n)), F32)
+    z = np.asarray(xb) + 1j * np.asarray(yb)
+    want = np.fft.fft(z, axis=1)
+    got_re, got_im = dft_cpm3(xb, yb)
+    _assert_close(got_re, want.real, atol=5e-2, rtol=5e-2)
+    _assert_close(got_im, want.imag, atol=5e-2, rtol=5e-2)
+
+
+def test_dft_planes_unit_modulus():
+    c, s = dft_planes(32)
+    _assert_close(np.asarray(c) ** 2 + np.asarray(s) ** 2,
+                  np.ones((32, 32)), atol=1e-6)

@@ -1,0 +1,245 @@
+"""Oracle-level validation: every equation in the paper vs the direct form.
+
+These tests exercise ``ref.py`` only (no Pallas) and double as executable
+documentation of the paper's identities, eq. (1) through eq. (47).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _arr(rng, *shape, scale=2.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(F32))
+
+
+def _assert_close(got, want, atol=1e-3, rtol=1e-3):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=rtol)
+
+
+# --------------------------------------------------------------------- eq 1/2
+
+@given(st.floats(-1e3, 1e3), st.floats(-1e3, 1e3))
+@settings(max_examples=200, deadline=None)
+def test_pm_identity(a, b):
+    """eq. (1): ab == ½((a+b)² − a² − b²) in f64."""
+    got = float(ref.pm(jnp.float64(a), jnp.float64(b)))
+    assert got == pytest.approx(a * b, rel=1e-9, abs=1e-6)
+
+
+@given(st.floats(-1e3, 1e3), st.floats(-1e3, 1e3))
+@settings(max_examples=200, deadline=None)
+def test_pm_neg_identity(a, b):
+    """eq. (2): −ab == ½((a−b)² − a² − b²) in f64."""
+    got = float(ref.pm_neg(jnp.float64(a), jnp.float64(b)))
+    assert got == pytest.approx(-a * b, rel=1e-9, abs=1e-6)
+
+
+@given(st.integers(-2**20, 2**20), st.integers(-2**20, 2**20))
+@settings(max_examples=200, deadline=None)
+def test_pm_exact_integers(a, b):
+    """The rewrite is *exact* over integers (no rounding at all)."""
+    got = int(ref.pm(jnp.int64(a), jnp.int64(b)))
+    assert got == a * b
+
+
+# --------------------------------------------------------------------- eq 4/5
+
+@pytest.mark.parametrize("m,k,p", [(1, 1, 1), (3, 5, 2), (8, 8, 8),
+                                   (16, 32, 8), (7, 13, 11)])
+def test_square_matmul_all_shapes(rng, m, k, p):
+    a, b = _arr(rng, m, k), _arr(rng, k, p)
+    _assert_close(ref.square_matmul(a, b), a @ b)
+
+
+def test_square_matmul_terms_structure(rng):
+    """Sa depends only on i, Sb only on j — the paper's reuse argument."""
+    a, b = _arr(rng, 4, 6), _arr(rng, 6, 5)
+    _, sa, sb = ref.square_matmul_terms(a, b)
+    assert sa.shape == (4,) and sb.shape == (5,)
+    _assert_close(sa, -jnp.sum(a * a, axis=1))
+    _assert_close(sb, -jnp.sum(b * b, axis=0))
+
+
+def test_square_matmul_int_exact(rng):
+    a = jnp.asarray(rng.integers(-100, 100, (6, 9)), jnp.int32)
+    b = jnp.asarray(rng.integers(-100, 100, (9, 4)), jnp.int32)
+    assert jnp.array_equal(ref.square_matmul(a, b), a @ b)
+
+
+# --------------------------------------------------------------------- eq 8/9
+
+@pytest.mark.parametrize("n", [1, 2, 8, 16, 33])
+def test_square_transform(rng, n):
+    w, x = _arr(rng, n, n), _arr(rng, n)
+    _assert_close(ref.square_transform(w, x), w @ x)
+
+
+def test_square_transform_complex_coeff_real_sample(rng):
+    """§4: complex coefficients × real samples = two real engines (DFT of a
+    real vector)."""
+    n = 16
+    c, s = ref.dft_matrix(n)
+    x = _arr(rng, n)
+    want = np.fft.fft(np.asarray(x))
+    _assert_close(ref.square_transform(c, x), want.real, atol=1e-2)
+    _assert_close(ref.square_transform(s, x), want.imag, atol=1e-2)
+
+
+# --------------------------------------------------------------------- eq 10/11
+
+@pytest.mark.parametrize("n,l", [(1, 1), (3, 10), (16, 64), (5, 5)])
+def test_square_conv1d(rng, n, l):
+    w, x = _arr(rng, n), _arr(rng, l + n - 1)
+    _assert_close(ref.square_conv1d(w, x), ref.direct_conv1d(w, x))
+
+
+def test_square_conv1d_int_exact(rng):
+    w = jnp.asarray(rng.integers(-50, 50, (7,)), jnp.int32)
+    x = jnp.asarray(rng.integers(-50, 50, (30,)), jnp.int32)
+    assert jnp.array_equal(ref.square_conv1d(w, x), ref.direct_conv1d(w, x))
+
+
+# --------------------------------------------------------------------- eq 12-14
+
+@pytest.mark.parametrize("kh,kw,h,w", [(1, 1, 3, 3), (3, 3, 8, 8),
+                                       (2, 5, 6, 9), (5, 3, 12, 7)])
+def test_square_conv2d(rng, kh, kw, h, w):
+    ker, x = _arr(rng, kh, kw), _arr(rng, h, w)
+    _assert_close(ref.square_conv2d(ker, x), ref.direct_conv2d(ker, x))
+
+
+# --------------------------------------------------------------------- eq 17-22
+
+def test_cpm_partial_product(rng):
+    """eq. (21)/(22): CPM + correction + ÷2 == complex product."""
+    a, b, c, s = (float(v) for v in rng.normal(0, 3, 4))
+    re_p, im_p = ref.cpm(jnp.float64(a), jnp.float64(b),
+                         jnp.float64(c), jnp.float64(s))
+    corr = -(a * a + b * b) - (c * c + s * s)
+    z = complex(a, b) * complex(c, s)
+    assert 0.5 * (float(re_p) + corr) == pytest.approx(z.real, abs=1e-9)
+    assert 0.5 * (float(im_p) + corr) == pytest.approx(z.imag, abs=1e-9)
+
+
+@pytest.mark.parametrize("m,k,p", [(1, 1, 1), (4, 6, 3), (8, 8, 8)])
+def test_cpm_matmul(rng, m, k, p):
+    a, b = _arr(rng, m, k), _arr(rng, m, k)
+    c, s = _arr(rng, k, p), _arr(rng, k, p)
+    want_re, want_im = ref.direct_cmatmul(a, b, c, s)
+    got_re, got_im = ref.cpm_matmul(a, b, c, s)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+def test_cpm_unit_modulus_simplification(rng):
+    """§6: for unit-modulus Y (e.g. DFT matrix), Sy_k = −N exactly."""
+    n = 8
+    c, s = ref.dft_matrix(n, jnp.float64)
+    sy = -jnp.sum(c * c + s * s, axis=0)
+    _assert_close(sy, -n * jnp.ones(n), atol=1e-9)
+
+
+# --------------------------------------------------------------------- eq 24-26
+
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_cpm_transform(rng, n):
+    c, s = _arr(rng, n, n), _arr(rng, n, n)
+    x, y = _arr(rng, n), _arr(rng, n)
+    want_re = c @ x - s @ y
+    want_im = c @ y + s @ x
+    got_re, got_im = ref.cpm_transform(c, s, x, y)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+# --------------------------------------------------------------------- eq 27-30
+
+@pytest.mark.parametrize("n,l", [(1, 4), (5, 20), (8, 33)])
+def test_cpm_conv1d(rng, n, l):
+    c, s = _arr(rng, n), _arr(rng, n)
+    x, y = _arr(rng, l), _arr(rng, l)
+    want_re = ref.direct_conv1d(c, x) - ref.direct_conv1d(s, y)
+    want_im = ref.direct_conv1d(c, y) + ref.direct_conv1d(s, x)
+    got_re, got_im = ref.cpm_conv1d(c, s, x, y)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+# --------------------------------------------------------------------- eq 31-38
+
+def test_three_mult_complex_rewrite(rng):
+    """eq. (31): the 3-real-mult complex product identity itself."""
+    a, b, c, s = (float(v) for v in rng.normal(0, 3, 4))
+    z = complex(a, b) * complex(c, s)
+    re = c * (a + b) - b * (c + s)
+    im = c * (a + b) + a * (s - c)
+    assert re == pytest.approx(z.real, abs=1e-9)
+    assert im == pytest.approx(z.imag, abs=1e-9)
+
+
+def test_cpm3_partial_product(rng):
+    """eq. (37)/(38) + eq. (33)/(35) corrections reproduce the product."""
+    a, b, c, s = (float(v) for v in rng.normal(0, 3, 4))
+    re_p, im_p = ref.cpm3(jnp.float64(a), jnp.float64(b),
+                          jnp.float64(c), jnp.float64(s))
+    sab = -((a + b) ** 2) + b * b
+    scs = -(c * c) + (c + s) ** 2
+    sba = -((a + b) ** 2) - a * a
+    ssc = -(c * c) - (s - c) ** 2
+    z = complex(a, b) * complex(c, s)
+    assert 0.5 * (float(re_p) + sab + scs) == pytest.approx(z.real, abs=1e-9)
+    assert 0.5 * (float(im_p) + sba + ssc) == pytest.approx(z.imag, abs=1e-9)
+
+
+@pytest.mark.parametrize("m,k,p", [(1, 1, 1), (4, 6, 3), (8, 8, 8), (5, 7, 9)])
+def test_cpm3_matmul(rng, m, k, p):
+    a, b = _arr(rng, m, k), _arr(rng, m, k)
+    c, s = _arr(rng, k, p), _arr(rng, k, p)
+    want_re, want_im = ref.direct_cmatmul(a, b, c, s)
+    got_re, got_im = ref.cpm3_matmul(a, b, c, s)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+# --------------------------------------------------------------------- eq 39-43
+
+@pytest.mark.parametrize("n", [1, 4, 16, 32])
+def test_cpm3_transform(rng, n):
+    c, s = _arr(rng, n, n), _arr(rng, n, n)
+    x, y = _arr(rng, n), _arr(rng, n)
+    want_re = c @ x - s @ y
+    want_im = c @ y + s @ x
+    got_re, got_im = ref.cpm3_transform(c, s, x, y)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)
+
+
+def test_cpm3_transform_is_dft(rng):
+    n = 16
+    c, s = ref.dft_matrix(n)
+    x, y = _arr(rng, n, scale=1.0), _arr(rng, n, scale=1.0)
+    z = np.asarray(x) + 1j * np.asarray(y)
+    want = np.fft.fft(z)
+    got_re, got_im = ref.cpm3_transform(c, s, x, y)
+    _assert_close(got_re, want.real, atol=1e-2)
+    _assert_close(got_im, want.imag, atol=1e-2)
+
+
+# --------------------------------------------------------------------- eq 44-47
+
+@pytest.mark.parametrize("n,l", [(1, 4), (5, 20), (8, 33)])
+def test_cpm3_conv1d(rng, n, l):
+    c, s = _arr(rng, n), _arr(rng, n)
+    x, y = _arr(rng, l), _arr(rng, l)
+    want_re = ref.direct_conv1d(c, x) - ref.direct_conv1d(s, y)
+    want_im = ref.direct_conv1d(c, y) + ref.direct_conv1d(s, x)
+    got_re, got_im = ref.cpm3_conv1d(c, s, x, y)
+    _assert_close(got_re, want_re)
+    _assert_close(got_im, want_im)

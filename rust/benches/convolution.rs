@@ -1,0 +1,162 @@
+//! F7/F8 + F11/F14: convolution engines — real direct/transposed/square
+//! and complex CPM/CPM3 — op ledgers per output, bit-exactness and engine
+//! simulation throughput; plus the 2-D convolution (eq. 12–14) sharing
+//! analysis of §5.1.
+
+use fairsquare::arith::Complex;
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::conv::{
+    cconv1d_cpm, cconv1d_cpm3, cconv1d_direct, conv1d_direct,
+    conv2d_direct, conv2d_square,
+};
+use fairsquare::linalg::Matrix;
+use fairsquare::sim::conv::{run_fir, Cpm3Fir, CpmFir, DirectFir, SquareFir, TransposedFir};
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF7);
+    let bench = Bench::default();
+
+    let mut t = Table::new(
+        "F7/F8 — real FIR engines (N taps over 1024+N−1 samples)",
+        &["N", "engine", "mults/out", "squares/out", "exact", "sim time"],
+    );
+    for n in [8usize, 16, 64] {
+        let w = rng.vec_i64(n, -500, 500);
+        let x = rng.vec_i64(1024 + n - 1, -500, 500);
+        let want = conv1d_direct(&w, &x).0;
+        let outs = want.len() as f64;
+
+        {
+            let mut e = DirectFir::new(w.clone());
+            let got = run_fir(|v| e.step(v), &x);
+            let meas = bench.run(|| {
+                let mut e = DirectFir::new(w.clone());
+                run_fir(|v| e.step(v), &x)
+            });
+            t.row(&[n.to_string(), "direct (7a)".into(),
+                    f(e.ops().mults as f64 / outs, 2), "0".into(),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+        {
+            let mut e = TransposedFir::new(w.clone());
+            let got = run_fir(|v| e.step(v), &x);
+            let meas = bench.run(|| {
+                let mut e = TransposedFir::new(w.clone());
+                run_fir(|v| e.step(v), &x)
+            });
+            t.row(&[n.to_string(), "transposed (7b)".into(),
+                    f(e.ops().mults as f64 / outs, 2), "0".into(),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+        {
+            let mut e = SquareFir::new(w.clone());
+            let got = run_fir(|v| e.step(v), &x);
+            let meas = bench.run(|| {
+                let mut e = SquareFir::new(w.clone());
+                run_fir(|v| e.step(v), &x)
+            });
+            t.row(&[n.to_string(), "square (8)".into(), "0".into(),
+                    f(e.ops().squares as f64 / outs, 2),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+    }
+    t.print();
+
+    // complex engines
+    let mut t = Table::new(
+        "F11/F14 — complex FIR engines (N taps, 512+N−1 samples)",
+        &["N", "engine", "squares/out", "exact", "sim time"],
+    );
+    for n in [8usize, 32] {
+        let w: Vec<Complex<i64>> = (0..n)
+            .map(|_| Complex::new(rng.i64_in(-300, 300), rng.i64_in(-300, 300)))
+            .collect();
+        let x: Vec<Complex<i64>> = (0..512 + n - 1)
+            .map(|_| Complex::new(rng.i64_in(-300, 300), rng.i64_in(-300, 300)))
+            .collect();
+        let want = cconv1d_direct(&w, &x).0;
+        let outs = want.len() as f64;
+        {
+            let mut e = CpmFir::new(w.clone());
+            let got = run_fir(|v| e.step(v), &x);
+            let meas = bench.run(|| {
+                let mut e = CpmFir::new(w.clone());
+                run_fir(|v| e.step(v), &x)
+            });
+            t.row(&[n.to_string(), "CPM (11)".into(),
+                    f(e.ops().squares as f64 / outs, 2),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+        {
+            let mut e = Cpm3Fir::new(w.clone());
+            let got = run_fir(|v| e.step(v), &x);
+            let meas = bench.run(|| {
+                let mut e = Cpm3Fir::new(w.clone());
+                run_fir(|v| e.step(v), &x)
+            });
+            t.row(&[n.to_string(), "CPM3 (14)".into(),
+                    f(e.ops().squares as f64 / outs, 2),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+        // reference-level ledgers for the same shapes
+        let (_, c4) = cconv1d_cpm(&w, &x);
+        let (_, c3) = cconv1d_cpm3(&w, &x);
+        t.row(&[n.to_string(), "ref CPM ledger".into(),
+                f(c4.squares as f64 / outs, 2), "true".into(), "-".into()]);
+        t.row(&[n.to_string(), "ref CPM3 ledger".into(),
+                f(c3.squares as f64 / outs, 2), "true".into(), "-".into()]);
+    }
+    t.print();
+
+    // IIR (§5: "For IIR filters we can apply the same principles")
+    let mut t = Table::new(
+        "F8c — IIR via squares (direct-form I, Nb ff + Na fb taps)",
+        &["Nb", "Na", "engine", "squares/out", "mults/out", "exact", "sim time"],
+    );
+    for (nb, na) in [(4usize, 2usize), (8, 4)] {
+        let b_taps = rng.vec_i64(nb, -8, 8);
+        // marginally-stable feedback: a single ±1 tap (exact integer math)
+        let mut a_taps = vec![0i64; na];
+        a_taps[na - 1] = 1;
+        let x = rng.vec_i64(512, -50, 50);
+
+        let mut d = fairsquare::sim::iir::DirectIir::new(b_taps.clone(), a_taps.clone());
+        let want: Vec<i64> = x.iter().map(|&v| d.step(v)).collect();
+        let mut s = fairsquare::sim::iir::SquareIir::new(b_taps.clone(), a_taps.clone());
+        let got: Vec<i64> = x.iter().map(|&v| s.step(v)).collect();
+        let outs = x.len() as f64;
+        let meas = bench.run(|| {
+            let mut s = fairsquare::sim::iir::SquareIir::new(b_taps.clone(), a_taps.clone());
+            x.iter().map(|&v| s.step(v)).collect::<Vec<_>>()
+        });
+        t.row(&[nb.to_string(), na.to_string(), "direct".into(), "0".into(),
+                f(d.ops().mults as f64 / outs, 2), "true".into(), "-".into()]);
+        t.row(&[nb.to_string(), na.to_string(), "square".into(),
+                f(s.ops().squares as f64 / outs, 2), "0".into(),
+                (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+    }
+    t.print();
+
+    // 2-D convolution: the §5.1 x² sharing
+    let mut t = Table::new(
+        "F8b — 2-D convolution (eq. 12–14): shared x² amortisation",
+        &["kernel", "image", "mults(direct)", "squares(square)",
+          "squares/mult", "exact"],
+    );
+    for (kh, kw, h, w_) in [(3usize, 3usize, 32usize, 32usize), (5, 5, 64, 64)] {
+        let ker = Matrix::random(&mut rng, kh, kw, -100, 100);
+        let img = Matrix::random(&mut rng, h, w_, -100, 100);
+        let (d, od) = conv2d_direct(&ker, &img);
+        let (s, os) = conv2d_square(&ker, &img);
+        t.row(&[
+            format!("{kh}x{kw}"),
+            format!("{h}x{w_}"),
+            od.mults.to_string(),
+            os.squares.to_string(),
+            f(os.squares as f64 / od.mults as f64, 4),
+            (d == s).to_string(),
+        ]);
+    }
+    t.print();
+}

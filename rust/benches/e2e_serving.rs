@@ -1,0 +1,132 @@
+//! E6: end-to-end serving through the full three-layer stack — PJRT
+//! executables from the AOT Pallas artifacts behind the batching
+//! coordinator. Reports throughput/latency for the direct and square MLP
+//! twins and raw kernel execute times for the matmul artifact family.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise, so `cargo bench`
+//! stays green on a fresh checkout).
+
+use std::time::{Duration, Instant};
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::coordinator::{InferenceServer, PjrtExecutor, WorkloadGen};
+use fairsquare::runtime::Engine;
+
+fn main() {
+    qnn_table(); // artifact-independent: exact integer inference
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("e2e_serving: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+
+    raw_kernel_table();
+    serving_table();
+}
+
+/// E6c — the paper's natural AI domain: int8 MLP inference where the
+/// square trick is bit-exact and the weight corrections are load-time
+/// constants (§3 "constant matrix" case).
+fn qnn_table() {
+    use fairsquare::linalg::qnn::{QArith, QMlp};
+    use fairsquare::linalg::Matrix;
+    use fairsquare::testkit::Rng;
+
+    let bench = Bench::quick();
+    let mut t = Table::new(
+        "E6c — int8 quantized MLP (784-256-128-10), exact integer domain",
+        &["arith", "squares/mult ratio", "bit-exact", "time/batch(32)", "rows/s"],
+    );
+    let mlp = QMlp::random(&[784, 256, 128, 10], 0xE6C);
+    let mut rng = Rng::new(1);
+    let x = Matrix::random(&mut rng, 32, 784, 0, 127);
+    let (zd, od) = mlp.forward(&x, QArith::Direct);
+    let (zs, os) = mlp.forward(&x, QArith::Square);
+    let exact = zd == zs;
+    let md = bench.run(|| mlp.forward(&x, QArith::Direct));
+    let ms = bench.run(|| mlp.forward(&x, QArith::Square));
+    t.row(&["direct MAC".into(), "-".into(), exact.to_string(),
+            fmt_ns(md.mean_ns), f(32.0 / (md.mean_ns * 1e-9), 0)]);
+    t.row(&["square PMAC".into(),
+            f(os.squares as f64 / od.mults as f64, 4), exact.to_string(),
+            fmt_ns(ms.mean_ns), f(32.0 / (ms.mean_ns * 1e-9), 0)]);
+    t.print();
+}
+
+fn raw_kernel_table() {
+    let mut engine = Engine::new(std::path::Path::new("artifacts")).unwrap();
+    let bench = Bench::quick();
+    let mut t = Table::new(
+        "E6a — raw PJRT execute times (compiled once, steady state)",
+        &["artifact", "time/call", "calls/s"],
+    );
+    for (name, nelems) in [
+        ("matmul_direct_s", 32 * 32),
+        ("matmul_square_s", 32 * 32),
+        ("matmul_direct_m", 64 * 64),
+        ("matmul_square_m", 64 * 64),
+        ("matmul_direct_l", 128 * 128),
+        ("matmul_square_l", 128 * 128),
+    ] {
+        let a: Vec<f32> = (0..nelems).map(|i| (i % 17) as f32 * 0.1 - 0.8).collect();
+        let b: Vec<f32> = (0..nelems).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+        engine.run_f32(name, &[a.clone(), b.clone()]).unwrap(); // compile+warm
+        let m = bench.run(|| engine.run_f32(name, &[a.clone(), b.clone()]).unwrap());
+        t.row(&[name.into(), fmt_ns(m.mean_ns), f(1e9 / m.mean_ns, 0)]);
+    }
+    t.print();
+}
+
+fn serving_table() {
+    let mut t = Table::new(
+        "E6b — coordinator serving (256 reqs, open loop 4k rps)",
+        &["model", "throughput rows/s", "p50 µs", "p99 µs", "mean batch",
+          "shadow fails"],
+    );
+    for model in ["mlp_direct", "mlp_square"] {
+        let dir = std::path::PathBuf::from("artifacts");
+        let dir2 = dir.clone();
+        let shadow = model == "mlp_square";
+        let srv = InferenceServer::start(
+            32,
+            Duration::from_millis(2),
+            2048,
+            if shadow { 8 } else { 0 },
+            move || PjrtExecutor::new(&dir, model),
+            move || {
+                shadow
+                    .then(|| PjrtExecutor::new(&dir2, "mlp_direct"))
+                    .transpose()
+            },
+        )
+        .unwrap();
+
+        let mut gen = WorkloadGen::new(0xE6B);
+        for _ in 0..2 {
+            let _ = srv.infer(gen.mnist_like()).unwrap(); // warm
+        }
+        let n = 256;
+        let gaps = gen.arrival_gaps_us(n, 4000.0);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for gap in gaps {
+            std::thread::sleep(Duration::from_micros(gap.min(2000)));
+            pending.push(srv.submit(gen.mnist_like()).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = srv.shutdown().unwrap();
+        t.row(&[
+            model.into(),
+            f(n as f64 / wall, 0),
+            f(stats.latency.p50_us, 0),
+            f(stats.latency.p99_us, 0),
+            f(stats.mean_batch, 2),
+            stats.shadow_failures.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(square twin trades CPU time for silicon area — the ratio bench");
+    println!(" and gate tables carry the paper's actual claim; see EXPERIMENTS.md)");
+}

@@ -1,0 +1,107 @@
+//! E4 + F9 + F12: gate-level cost tables — the paper's economic claim
+//! ("an n-bit squarer needs about half the gates of an n×n multiplier",
+//! §1 citing Chen et al.) measured on verified structural netlists, plus
+//! the composed datapath blocks of Fig. 1, 9 and 12, plus netlist
+//! *generation* throughput (the models are used inside design-space loops).
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::gates::multiplier::csa_multiplier;
+use fairsquare::gates::report::{ablation, block_comparison, core_comparison};
+use fairsquare::gates::squarer::folded_squarer;
+
+fn main() {
+    let widths = [4usize, 8, 12, 16, 20, 24];
+
+    let mut t = Table::new(
+        "E4 — n×n multiplier vs n-bit squarer (area in NAND2-eq, delay in unit gates)",
+        &["n", "mult gates", "mult area", "mult delay", "sq gates", "sq area",
+          "sq delay", "area ratio", "power ratio"],
+    );
+    for r in core_comparison(&widths, 400) {
+        t.row(&[
+            r.n.to_string(),
+            r.mult_gates.to_string(),
+            f(r.mult_area, 1),
+            f(r.mult_delay, 1),
+            r.sq_gates.to_string(),
+            f(r.sq_area, 1),
+            f(r.sq_delay, 1),
+            f(r.area_ratio, 3),
+            // switching·gates ∝ dynamic power
+            f(r.sq_switching * r.sq_gates as f64
+                  / (r.mult_switching * r.mult_gates as f64), 3),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "E4 ablation — reduction-tree and folding variants",
+        &["variant", "n", "gates", "area", "delay"],
+    );
+    for r in ablation(&widths) {
+        t.row(&[r.name.into(), r.n.to_string(), r.gates.to_string(),
+                f(r.area, 1), f(r.delay, 1)]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "F1/F9/F12 — datapath blocks (256-term accumulation)",
+        &["block", "n", "comb", "regs", "total", "delay", "rel area"],
+    );
+    for r in block_comparison(&[8, 12, 16], 256) {
+        t.row(&[
+            r.name.into(),
+            r.n.to_string(),
+            f(r.comb_area, 1),
+            f(r.reg_area, 1),
+            f(r.total_area, 1),
+            f(r.critical_path, 1),
+            f(r.rel_area, 3),
+        ]);
+    }
+    t.print();
+
+    // approximate squaring (paper abstract: "approximate squaring is also
+    // a possibility") — area vs measured error, exhaustively evaluated
+    let mut t = Table::new(
+        "E4b — approximate squarers (n = 12, truncate k LSB columns)",
+        &["k", "compensated", "area", "vs exact", "mean |err| (norm)",
+          "max |err| (norm)", "mean rel err"],
+    );
+    let exact_area = folded_squarer(12).cost(0, 0).area;
+    for k in [0usize, 4, 8, 12] {
+        for comp in [false, true] {
+            let nl = fairsquare::gates::approx::truncated_squarer(12, k, comp);
+            let cost = nl.cost(0, 0);
+            let e = fairsquare::gates::approx::measure_error(&nl, 12, 0xE4B);
+            t.row(&[
+                k.to_string(),
+                comp.to_string(),
+                f(cost.area, 1),
+                f(cost.area / exact_area, 3),
+                format!("{:.3e}", e.mean_abs_norm),
+                format!("{:.3e}", e.max_abs_norm),
+                format!("{:.3e}", e.mean_rel),
+            ]);
+        }
+    }
+    t.print();
+
+    // throughput of netlist generation + evaluation (design-loop cost)
+    let bench = Bench::default();
+    let mut t = Table::new(
+        "netlist model throughput",
+        &["operation", "time", "per-second"],
+    );
+    let g = bench.run(|| csa_multiplier(16));
+    t.row(&["generate csa_multiplier(16)".into(), fmt_ns(g.mean_ns),
+            f(1e9 / g.mean_ns, 0)]);
+    let g = bench.run(|| folded_squarer(16));
+    t.row(&["generate folded_squarer(16)".into(), fmt_ns(g.mean_ns),
+            f(1e9 / g.mean_ns, 0)]);
+    let nl = csa_multiplier(16);
+    let e = bench.run(|| nl.eval_u64(&[(12345, 16), (54321, 16)]));
+    t.row(&["evaluate csa_multiplier(16)".into(), fmt_ns(e.mean_ns),
+            f(1e9 / e.mean_ns, 0)]);
+    t.print();
+}

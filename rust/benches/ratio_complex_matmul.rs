@@ -1,0 +1,77 @@
+//! E2/E3 (eq. 20/36): complex matmul — 4-square CPM and 3-square CPM3
+//! ratios, measured on instrumented runs, plus software timings of all
+//! four implementations (direct 4-mult, Karatsuba 3-mult, CPM, CPM3).
+
+use fairsquare::arith::Complex;
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::complex::{
+    cmatmul_3mult, cmatmul_cpm, cmatmul_cpm3, cmatmul_direct, CMatrix,
+};
+use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio};
+use fairsquare::testkit::Rng;
+
+fn rand_c(rng: &mut Rng, r: usize, c: usize, lim: i64) -> CMatrix {
+    CMatrix::from_fn(r, c, |_, _| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+}
+
+fn main() {
+    let mut rng = Rng::new(0xE2);
+    let bench = Bench::default();
+
+    let mut t = Table::new(
+        "E2/E3 — eq.(20)/(36): squares per complex multiplication",
+        &["M=N=P", "CPM meas", "eq20", "CPM3 meas", "eq36",
+          "t(direct)", "t(3mult)", "t(CPM)", "t(CPM3)"],
+    );
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let x = rand_c(&mut rng, n, n, 500);
+        let y = rand_c(&mut rng, n, n, 500);
+        let (_, d) = cmatmul_direct(&x, &y);
+        let (_, c4) = cmatmul_cpm(&x, &y);
+        let (_, c3) = cmatmul_cpm3(&x, &y);
+        let cmults = (d.mults / 4) as f64;
+
+        let td = bench.run(|| cmatmul_direct(&x, &y));
+        let tk = bench.run(|| cmatmul_3mult(&x, &y));
+        let t4 = bench.run(|| cmatmul_cpm(&x, &y));
+        let t3 = bench.run(|| cmatmul_cpm3(&x, &y));
+        t.row(&[
+            n.to_string(),
+            f(c4.squares as f64 / cmults, 4),
+            f(eq20_ratio(n as u64, n as u64), 4),
+            f(c3.squares as f64 / cmults, 4),
+            f(eq36_ratio(n as u64, n as u64), 4),
+            fmt_ns(td.mean_ns),
+            fmt_ns(tk.mean_ns),
+            fmt_ns(t4.mean_ns),
+            fmt_ns(t3.mean_ns),
+        ]);
+    }
+    t.print();
+
+    // the §6 unit-modulus note: DFT-like Y makes Sy trivial
+    let mut t = Table::new(
+        "E2b — unit-modulus Y (DFT-matrix case): Sy_k = −N exactly",
+        &["N", "distinct Sy values", "Sy value"],
+    );
+    for n in [8usize, 16, 32] {
+        let units = [
+            Complex::new(1i64, 0),
+            Complex::new(-1, 0),
+            Complex::new(0, 1),
+            Complex::new(0, -1),
+        ];
+        let y = CMatrix::from_fn(n, n, |_, _| *rng.choose(&units));
+        let sy: Vec<i64> = (0..n)
+            .map(|k| -(0..n).map(|i| {
+                let v = y.get(i, k);
+                v.re * v.re + v.im * v.im
+            }).sum::<i64>())
+            .collect();
+        let mut uniq = sy.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        t.row(&[n.to_string(), uniq.len().to_string(), sy[0].to_string()]);
+    }
+    t.print();
+}

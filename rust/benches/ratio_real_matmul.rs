@@ -1,0 +1,67 @@
+//! E1 (eq. 6): real matmul — measured squares-per-multiplication ratio and
+//! software timing of the direct vs square reference paths.
+//!
+//! Regenerates the paper's §3 claim table: ratio = 1 + 1/P + 1/M → 1.
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::counts::eq6_ratio;
+use fairsquare::linalg::matmul::{matmul_direct, matmul_square, matmul_square_const_b, col_corrections};
+use fairsquare::linalg::{Matrix, OpCounts};
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xE1);
+    let bench = Bench::default();
+
+    let mut t = Table::new(
+        "E1 — eq.(6): squares per multiplication, measured on instrumented runs",
+        &["M=N=P", "mults(direct)", "squares(sq)", "measured", "analytic",
+          "const-B measured", "t(direct)", "t(square)"],
+    );
+    for n in [2usize, 4, 8, 16, 32, 64, 128] {
+        let a = Matrix::random(&mut rng, n, n, -1000, 1000);
+        let b = Matrix::random(&mut rng, n, n, -1000, 1000);
+        let (_, d) = matmul_direct(&a, &b);
+        let (_, s) = matmul_square(&a, &b);
+
+        // AI-inference case: B constant, Sb pre-computed (§3)
+        let mut pre = OpCounts::ZERO;
+        let sb = col_corrections(&b, &mut pre);
+        let (_, s_const) = matmul_square_const_b(&a, &b, &sb);
+
+        let td = bench.run(|| matmul_direct(&a, &b));
+        let ts = bench.run(|| matmul_square(&a, &b));
+        t.row(&[
+            n.to_string(),
+            d.mults.to_string(),
+            s.squares.to_string(),
+            f(s.square_ratio_vs(&d), 4),
+            f(eq6_ratio(n as u64, n as u64), 4),
+            f(s_const.squares as f64 / d.mults as f64, 4),
+            fmt_ns(td.mean_ns),
+            fmt_ns(ts.mean_ns),
+        ]);
+    }
+    t.print();
+
+    // rectangular sweep — the 1/M and 1/P terms separately
+    let mut t = Table::new(
+        "E1b — rectangular shapes: the 1/M and 1/P correction terms",
+        &["M", "N", "P", "measured", "analytic"],
+    );
+    for (m, n, p) in [(1usize, 64usize, 64usize), (64, 64, 1), (4, 256, 4),
+                      (256, 4, 256), (16, 1024, 16)] {
+        let a = Matrix::random(&mut rng, m, n, -100, 100);
+        let b = Matrix::random(&mut rng, n, p, -100, 100);
+        let (_, d) = matmul_direct(&a, &b);
+        let (_, s) = matmul_square(&a, &b);
+        t.row(&[
+            m.to_string(),
+            n.to_string(),
+            p.to_string(),
+            f(s.square_ratio_vs(&d), 4),
+            f(eq6_ratio(m as u64, p as u64), 4),
+        ]);
+    }
+    t.print();
+}

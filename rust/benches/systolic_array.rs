@@ -1,0 +1,76 @@
+//! F2/F3: the square-based weight-stationary systolic array vs the MAC
+//! baseline — identical cycle schedules (the drop-in claim), simulation
+//! throughput, and utilization across shapes.
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::Matrix;
+use fairsquare::sim::systolic::{systolic_matmul, PeKind, SystolicArray};
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF2);
+    let bench = Bench::default();
+
+    let mut t = Table::new(
+        "F2/F3 — systolic array: cycles, utilization, sim throughput",
+        &["MxKxP", "kind", "cycles", "PE ops", "util", "exact", "sim time",
+          "PE-ops/s"],
+    );
+    for (m, k, p) in [(8usize, 8usize, 8usize), (16, 16, 16), (32, 32, 32),
+                      (16, 64, 16), (64, 16, 64)] {
+        let a = Matrix::random(&mut rng, m, k, -500, 500);
+        let b = Matrix::random(&mut rng, k, p, -500, 500);
+        let want = fairsquare::linalg::matmul::matmul_direct(&a, &b).0;
+        for kind in [PeKind::Mac, PeKind::Square] {
+            let run = systolic_matmul(kind, &a, &b);
+            let meas = bench.run(|| systolic_matmul(kind, &a, &b));
+            t.row(&[
+                format!("{m}x{k}x{p}"),
+                format!("{kind:?}"),
+                run.stats.cycles.to_string(),
+                run.stats.pe_ops.to_string(),
+                f(run.stats.utilization(), 3),
+                (run.c == want).to_string(),
+                fmt_ns(meas.mean_ns),
+                f(run.stats.pe_ops as f64 / (meas.mean_ns * 1e-9), 0),
+            ]);
+        }
+    }
+    t.print();
+
+    // weight reuse: load once, stream many B panels (the paper's
+    // weight-stationary motivation)
+    let mut t = Table::new(
+        "F2b — weight reuse: one load, many B panels (16×16 array)",
+        &["panels", "total cycles", "cycles/output", "util"],
+    );
+    let a = Matrix::random(&mut rng, 16, 16, -500, 500);
+    let array = SystolicArray::load(PeKind::Square, &a);
+    let sa: Vec<i64> = (0..16)
+        .map(|i| -a.row(i).iter().map(|&x| x * x).sum::<i64>())
+        .collect();
+    for panels in [1usize, 4, 16] {
+        let mut cycles = 16u64; // load once
+        let mut outputs = 0u64;
+        let mut util_num = 0u64;
+        let mut util_den = 0u64;
+        for _ in 0..panels {
+            let b = Matrix::random(&mut rng, 16, 16, -500, 500);
+            let sb: Vec<i64> = (0..16)
+                .map(|j| -(0..16).map(|k2| b.get(k2, j)).map(|x| x * x).sum::<i64>())
+                .collect();
+            let run = array.run(&b, &sa, &sb);
+            cycles += run.stats.cycles - 16; // loading already counted
+            outputs += (16 * 16) as u64;
+            util_num += run.stats.pe_ops;
+            util_den += run.stats.pe_cycles;
+        }
+        t.row(&[
+            panels.to_string(),
+            cycles.to_string(),
+            f(cycles as f64 / outputs as f64, 3),
+            f(util_num as f64 / util_den as f64, 3),
+        ]);
+    }
+    t.print();
+}

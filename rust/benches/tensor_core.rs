@@ -1,0 +1,88 @@
+//! F1 + F4/F5: the partial-multiplication accumulator (Fig. 1) and the
+//! square-based tensor core (Fig. 4/5) — bit-exactness, tile-accumulation
+//! schedules and simulation throughput, plus the eq. (5) ledger across
+//! tile depths.
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::Matrix;
+use fairsquare::sim::mac::{Mac, Pmac};
+use fairsquare::sim::tensor_core::{tiled_matmul, TcKind};
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF4);
+    let bench = Bench::default();
+
+    // F1: MAC vs PMAC single-unit throughput
+    let n = 256usize;
+    let a = rng.vec_i64(n, -1000, 1000);
+    let b = rng.vec_i64(n, -1000, 1000);
+    let sa: i64 = -a.iter().map(|x| x * x).sum::<i64>();
+    let sb: i64 = -b.iter().map(|x| x * x).sum::<i64>();
+
+    let mut t = Table::new(
+        "F1 — Fig.1 accumulators over a 256-term dot product",
+        &["unit", "result", "time", "steps/s"],
+    );
+    let mac_run = || {
+        let mut m = Mac::new();
+        m.init();
+        for (&x, &y) in a.iter().zip(&b) {
+            m.step(x, y);
+        }
+        m.read()
+    };
+    let pmac_run = || {
+        let mut p = Pmac::new();
+        p.init(sa + sb);
+        for (&x, &y) in a.iter().zip(&b) {
+            p.step(x, y);
+        }
+        p.read()
+    };
+    assert_eq!(mac_run(), pmac_run());
+    let tm = bench.run(mac_run);
+    let tp = bench.run(pmac_run);
+    t.row(&["MAC (Fig.1a)".into(), mac_run().to_string(), fmt_ns(tm.mean_ns),
+            f(n as f64 / (tm.mean_ns * 1e-9), 0)]);
+    t.row(&["PMAC (Fig.1b)".into(), pmac_run().to_string(), fmt_ns(tp.mean_ns),
+            f(n as f64 / (tp.mean_ns * 1e-9), 0)]);
+    t.print();
+
+    // F4/F5: tensor core over tile depths
+    let mut t = Table::new(
+        "F4/F5 — tensor core 64×64×64, tile depth sweep",
+        &["tile N", "kind", "cycles", "exact", "squares", "sim time"],
+    );
+    let a = Matrix::random(&mut rng, 64, 64, -500, 500);
+    let b = Matrix::random(&mut rng, 64, 64, -500, 500);
+    let want = fairsquare::linalg::matmul::matmul_direct(&a, &b).0;
+    for tn in [4usize, 8, 16, 32, 64] {
+        for kind in [TcKind::Mac, TcKind::Square] {
+            let (c, stats, ops) = tiled_matmul(kind, &a, &b, tn);
+            let meas = bench.run(|| tiled_matmul(kind, &a, &b, tn));
+            t.row(&[
+                tn.to_string(),
+                format!("{kind:?}"),
+                stats.cycles.to_string(),
+                (c == want).to_string(),
+                ops.squares.to_string(),
+                fmt_ns(meas.mean_ns),
+            ]);
+        }
+    }
+    t.print();
+
+    // ledger invariance: squares don't depend on the tiling (§3.3)
+    let mut t = Table::new(
+        "F4b — eq.(5) ledger is tiling-invariant",
+        &["tile N", "squares", "expected M·N·P + M·N + N·P"],
+    );
+    let expected = 64u64 * 64 * 64 + 64 * 64 + 64 * 64;
+    for tn in [4usize, 16, 64] {
+        let (_, _, ops) = tiled_matmul(TcKind::Square, &a, &b, tn);
+        assert_eq!(ops.squares, expected);
+        t.row(&[tn.to_string(), ops.squares.to_string(), expected.to_string()]);
+    }
+    t.print();
+}

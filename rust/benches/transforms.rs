@@ -1,0 +1,116 @@
+//! F6 + F10/F13: linear-transform engines — real (Fig. 6), complex CPM
+//! (Fig. 10) and complex CPM3 (Fig. 13) — cycle counts, op ledgers and
+//! simulation throughput, including the DFT-matrix case of §7/§10.
+
+use fairsquare::arith::Complex;
+use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
+use fairsquare::linalg::transform::{ctransform_direct, transform_direct};
+use fairsquare::linalg::Matrix;
+use fairsquare::sim::transform::{
+    Cpm3TransformEngine, CpmTransformEngine, EngineKind, TransformEngine,
+};
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF6);
+    let bench = Bench::default();
+
+    let mut t = Table::new(
+        "F6 — real transform engine (N samples in N cycles)",
+        &["N", "engine", "cycles", "squares", "mults", "exact", "sim time"],
+    );
+    for n in [8usize, 16, 64, 128] {
+        let w = Matrix::random(&mut rng, n, n, -300, 300);
+        let x = rng.vec_i64(n, -300, 300);
+        let want = transform_direct(&w, &x).0;
+        for kind in [EngineKind::Mult, EngineKind::Square] {
+            let mut e = TransformEngine::new(kind, w.clone());
+            let (got, stats) = e.run(&x);
+            let meas = bench.run(|| TransformEngine::new(kind, w.clone()).run(&x));
+            t.row(&[
+                n.to_string(),
+                format!("{kind:?}"),
+                stats.cycles.to_string(),
+                e.ops().squares.to_string(),
+                e.ops().mults.to_string(),
+                (got == want).to_string(),
+                fmt_ns(meas.mean_ns),
+            ]);
+        }
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "F10/F13 — complex transform engines",
+        &["N", "engine", "squares", "sq/cmult", "exact", "sim time"],
+    );
+    for n in [8usize, 32, 64] {
+        let w = Matrix::from_fn(n, n, |_, _| {
+            Complex::new(rng.i64_in(-200, 200), rng.i64_in(-200, 200))
+        });
+        let x: Vec<Complex<i64>> = (0..n)
+            .map(|_| Complex::new(rng.i64_in(-200, 200), rng.i64_in(-200, 200)))
+            .collect();
+        let want = ctransform_direct(&w, &x).0;
+        {
+            let mut e = CpmTransformEngine::new(w.clone());
+            let (got, _) = e.run(&x);
+            let meas = bench.run(|| CpmTransformEngine::new(w.clone()).run(&x));
+            t.row(&[n.to_string(), "CPM (Fig.10)".into(),
+                    e.ops().squares.to_string(),
+                    f(e.ops().squares as f64 / (n * n) as f64, 3),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+        {
+            let mut e = Cpm3TransformEngine::new(w.clone());
+            let (got, _) = e.run(&x);
+            let meas = bench.run(|| Cpm3TransformEngine::new(w.clone()).run(&x));
+            t.row(&[n.to_string(), "CPM3 (Fig.13)".into(),
+                    e.ops().squares.to_string(),
+                    f(e.ops().squares as f64 / (n * n) as f64, 3),
+                    (got == want).to_string(), fmt_ns(meas.mean_ns)]);
+        }
+    }
+    t.print();
+
+    // DFT-matrix case (§7/§10): unit-modulus coefficients, real input DFT
+    // via two real engines (§4 note)
+    let mut t = Table::new(
+        "F6b — real-input DFT via two real square engines (§4)",
+        &["N", "max |err| vs f64 DFT", "squares total"],
+    );
+    for n in [16usize, 64] {
+        let scale = 1 << 12;
+        let wc = Matrix::from_fn(n, n, |k, i| {
+            ((-std::f64::consts::TAU * (k * i) as f64 / n as f64).cos() * scale as f64)
+                .round() as i64
+        });
+        let ws = Matrix::from_fn(n, n, |k, i| {
+            ((-std::f64::consts::TAU * (k * i) as f64 / n as f64).sin() * scale as f64)
+                .round() as i64
+        });
+        let x = rng.vec_i64(n, -1000, 1000);
+        let mut ec = TransformEngine::new(EngineKind::Square, wc);
+        let mut es = TransformEngine::new(EngineKind::Square, ws);
+        let (re, _) = ec.run(&x);
+        let (im, _) = es.run(&x);
+        let mut max_err = 0.0f64;
+        for k in 0..n {
+            let (mut fre, mut fim) = (0.0, 0.0);
+            for (i, &xi) in x.iter().enumerate() {
+                let ang = -std::f64::consts::TAU * (k * i) as f64 / n as f64;
+                fre += xi as f64 * ang.cos();
+                fim += xi as f64 * ang.sin();
+            }
+            max_err = max_err
+                .max((re[k] as f64 / scale as f64 - fre).abs())
+                .max((im[k] as f64 / scale as f64 - fim).abs());
+        }
+        t.row(&[
+            n.to_string(),
+            format!("{max_err:.3} (coefficient quantisation)"),
+            (ec.ops().squares + es.ops().squares).to_string(),
+        ]);
+    }
+    t.print();
+}

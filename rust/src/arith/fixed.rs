@@ -1,0 +1,182 @@
+//! Fixed-point formats and the square-trick bit-growth budget.
+//!
+//! The paper's datapaths are integer/fixed-point (§1 cites gate counts of
+//! n-bit squarers vs n×n multipliers). The rewrite is exact there, but the
+//! *intermediate* `(a+b)²` needs more headroom than `a·b`:
+//!
+//! * `a, b` n-bit signed  ⇒  `a+b` needs n+1 bits
+//! * `(a+b)²` needs `2(n+1) = 2n+2` bits (vs `2n` for the product)
+//! * accumulating N terms adds `⌈log₂N⌉` bits
+//!
+//! [`BitBudget`] encodes exactly this and is enforced by the simulators in
+//! [`crate::sim`] and property-tested in `rust/tests/`.
+
+/// Signed fixed-point format: `bits` total including sign, `frac`
+/// fractional bits (Qm.f with m = bits − 1 − frac).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Q {
+    pub bits: u32,
+    pub frac: u32,
+}
+
+impl Q {
+    pub const fn new(bits: u32, frac: u32) -> Self {
+        assert!(bits >= 2 && bits <= 32 && frac < bits);
+        Self { bits, frac }
+    }
+
+    /// Smallest representable value.
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Largest representable value.
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Quantise a real number to this format (round-to-nearest, saturate).
+    pub fn quantise(&self, x: f64) -> i64 {
+        let scaled = (x * (1i64 << self.frac) as f64).round() as i64;
+        scaled.clamp(self.min_raw(), self.max_raw())
+    }
+
+    /// Back to a real number.
+    pub fn to_f64(&self, raw: i64) -> f64 {
+        raw as f64 / (1i64 << self.frac) as f64
+    }
+
+    /// Does `raw` fit this format?
+    pub fn fits(&self, raw: i64) -> bool {
+        (self.min_raw()..=self.max_raw()).contains(&raw)
+    }
+}
+
+/// Bit-width budget for a square-based accumulation of `n_terms` partial
+/// multiplications of two `operand_bits`-wide signed operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitBudget {
+    /// width of each input operand (signed)
+    pub operand_bits: u32,
+    /// number of accumulated terms (N of eq. 4/11)
+    pub n_terms: u64,
+}
+
+impl BitBudget {
+    pub const fn new(operand_bits: u32, n_terms: u64) -> Self {
+        Self { operand_bits, n_terms }
+    }
+
+    /// Bits needed by the sum `a+b` before squaring.
+    pub const fn sum_bits(&self) -> u32 {
+        self.operand_bits + 1
+    }
+
+    /// Bits produced by one partial multiplication `(a+b)²`.
+    /// A signed n-bit square fits in 2n−1 bits *except* for the single
+    /// value (−2ⁿ⁻¹)² which needs the full 2n; we budget 2n of the n+1-bit
+    /// sum, i.e. 2·(n+1).
+    pub const fn square_bits(&self) -> u32 {
+        2 * self.sum_bits()
+    }
+
+    /// Bits of accumulator growth from summing `n_terms` squares.
+    pub fn accum_growth_bits(&self) -> u32 {
+        64 - u64::leading_zeros(self.n_terms.max(1) - 1).min(63)
+    }
+
+    /// Total accumulator width for the square-based datapath (the register
+    /// in Fig. 1b / the PE accumulator of Fig. 3): squares are
+    /// non-negative but the seeded corrections make the running value
+    /// signed, so we add one sign bit on top.
+    pub fn accumulator_bits(&self) -> u32 {
+        self.square_bits() + self.accum_growth_bits() + 1
+    }
+
+    /// Accumulator width a *direct* MAC datapath would need (Fig. 1a).
+    pub fn mac_accumulator_bits(&self) -> u32 {
+        2 * self.operand_bits + self.accum_growth_bits() + 1
+    }
+
+    /// Extra register bits the square-based datapath pays vs direct MAC —
+    /// the paper's silent cost: +2 bits on the accumulator plus wider
+    /// square output. Always ≥ 2.
+    pub fn register_overhead_bits(&self) -> u32 {
+        self.accumulator_bits() - self.mac_accumulator_bits()
+    }
+
+    /// Maximum safe operand magnitude so that everything fits in i64
+    /// during simulation (guards the test harnesses, not the hardware).
+    pub fn fits_i64(&self) -> bool {
+        self.accumulator_bits() <= 62
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn q_round_trip() {
+        let q = Q::new(16, 8);
+        for x in [-127.0, -1.5, 0.0, 0.00390625, 1.0, 127.99] {
+            let raw = q.quantise(x);
+            assert!(q.fits(raw));
+            assert!((q.to_f64(raw) - x).abs() <= 1.0 / 512.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn q_saturates() {
+        let q = Q::new(8, 0);
+        assert_eq!(q.quantise(1e9), 127);
+        assert_eq!(q.quantise(-1e9), -128);
+    }
+
+    #[test]
+    fn square_fits_budget() {
+        let mut rng = Rng::new(21);
+        for bits in [4u32, 8, 12, 16] {
+            let bb = BitBudget::new(bits, 1);
+            let lim = (1i64 << (bits - 1)) - 1;
+            for _ in 0..2000 {
+                let a = rng.i64_in(-lim - 1, lim);
+                let b = rng.i64_in(-lim - 1, lim);
+                let sq = (a + b) * (a + b);
+                // must fit in square_bits as an unsigned magnitude
+                assert!(sq < (1i64 << bb.square_bits()), "bits={bits} a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_budget_is_sound() {
+        // worst case accumulation: every term is the max square
+        for bits in [4u32, 8] {
+            for n in [1u64, 2, 7, 8, 64, 1000] {
+                let bb = BitBudget::new(bits, n);
+                let max_sum = 1i64 << bb.sum_bits();       // |−2ⁿ + (−2ⁿ)| = 2ⁿ⁺¹... sum of two mins
+                let max_sq = (max_sum >> 1) * (max_sum >> 1) * 4; // (2·2ⁿ⁻¹)² = full 2n+2 value
+                let total = (max_sq as i128) * n as i128;
+                assert!(total < (1i128 << bb.accumulator_bits()),
+                        "bits={bits} n={n} total={total} acc={}", bb.accumulator_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_is_at_least_two_bits() {
+        for bits in [4u32, 8, 16, 24] {
+            for n in [1u64, 16, 256] {
+                assert!(BitBudget::new(bits, n).register_overhead_bits() >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn fits_i64_guard() {
+        assert!(BitBudget::new(16, 4096).fits_i64());
+        assert!(!BitBudget::new(30, 1 << 20).fits_i64());
+    }
+}

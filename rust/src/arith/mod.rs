@@ -1,0 +1,117 @@
+//! Scalar square-trick primitives — the paper's §2 "basic mechanism".
+//!
+//! Everything else in the library is built from the two identities
+//!
+//! ```text
+//! (a+b)² = a² + b² + 2ab  ⇒   ab = ½((a+b)² − a² − b²)     (eq. 1)
+//! (a−b)² = a² + b² − 2ab  ⇒  −ab = ½((a−b)² − a² − b²)     (eq. 2)
+//! ```
+//!
+//! plus their complex extensions: the 4-square CPM (eq. 21/22) and the
+//! 3-square CPM3 (eq. 37/38).
+//!
+//! The *partial multiplication* `(a+b)²` is the paper's replacement for a
+//! multiplier inside accumulating datapaths: the `−a²−b²` corrections are
+//! rank-1 and hoisted out of the inner loop (eq. 5). [`pm`] & friends here
+//! are the scalar form used by tests and by the op-counted reference stack
+//! in [`crate::linalg`]; the bit-level hardware realisations live in
+//! [`crate::gates`], the cycle-accurate datapaths in [`crate::sim`].
+
+pub mod complex;
+pub mod fixed;
+
+pub use complex::{cmul_3mult, cmul_direct, cpm, cpm3, cpm3_corrections, Complex};
+pub use fixed::{BitBudget, Q};
+
+/// Partial multiplication: `(a+b)²` (the square in eq. 1).
+///
+/// This is *not* `a·b`; it is the quantity a square-based MAC accumulates.
+/// Recover the product with [`pm_product`].
+#[inline]
+pub fn pm(a: i64, b: i64) -> i64 {
+    let s = a + b;
+    s * s
+}
+
+/// Negated-product partial multiplication: `(a−b)²` (the square in eq. 2).
+#[inline]
+pub fn pm_neg(a: i64, b: i64) -> i64 {
+    let d = a - b;
+    d * d
+}
+
+/// Full eq. (1): `ab = ½((a+b)² − a² − b²)`. Exact for all `i64` inputs
+/// whose squares do not overflow (|a|,|b| ≤ 2³⁰ is always safe).
+#[inline]
+pub fn pm_product(a: i64, b: i64) -> i64 {
+    // (a+b)² − a² − b² = 2ab is always even ⇒ the shift is exact.
+    (pm(a, b) - a * a - b * b) >> 1
+}
+
+/// Full eq. (2): `−ab = ½((a−b)² − a² − b²)`.
+#[inline]
+pub fn pm_neg_product(a: i64, b: i64) -> i64 {
+    (pm_neg(a, b) - a * a - b * b) >> 1
+}
+
+/// Floating-point eq. (1) — used by the numerical-error experiment (E5).
+#[inline]
+pub fn pm_product_f64(a: f64, b: f64) -> f64 {
+    let s = a + b;
+    0.5 * (s * s - a * a - b * b)
+}
+
+/// Floating-point eq. (1) evaluated in `f32` end to end.
+#[inline]
+pub fn pm_product_f32(a: f32, b: f32) -> f32 {
+    let s = a + b;
+    0.5 * (s * s - a * a - b * b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn pm_identity_exhaustive_small() {
+        for a in -64..=64i64 {
+            for b in -64..=64i64 {
+                assert_eq!(pm_product(a, b), a * b, "a={a} b={b}");
+                assert_eq!(pm_neg_product(a, b), -(a * b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pm_identity_random_wide() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let a = rng.i64_in(-(1 << 30), 1 << 30);
+            let b = rng.i64_in(-(1 << 30), 1 << 30);
+            assert_eq!(pm_product(a, b), a * b);
+            assert_eq!(pm_neg_product(a, b), -(a * b));
+        }
+    }
+
+    #[test]
+    fn pm_is_square_of_sum() {
+        assert_eq!(pm(3, 4), 49);
+        assert_eq!(pm_neg(3, 4), 1);
+        assert_eq!(pm(-5, 5), 0);
+    }
+
+    #[test]
+    fn pm_f64_close() {
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let a = rng.f64_in(-100.0, 100.0);
+            let b = rng.f64_in(-100.0, 100.0);
+            let err = (pm_product_f64(a, b) - a * b).abs();
+            // cancellation bound: ~2 ulp of max(a², b², (a+b)²)
+            let scale = (a * a).max(b * b).max((a + b) * (a + b));
+            assert!(err <= 4.0 * f64::EPSILON * scale + 1e-300,
+                    "a={a} b={b} err={err}");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! First-party benchmark harness (offline substitute for criterion).
+//!
+//! [`Bench`] runs a closure with warm-up, adaptive iteration count and
+//! robust statistics; [`Table`] renders the paper-style result tables the
+//! `cargo bench` targets print. Used by every file in `rust/benches/`.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Result of measuring one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// target wall time per case
+    pub budget: Duration,
+    /// number of timed samples
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { budget: Duration::from_millis(300), samples: 12 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { budget: Duration::from_millis(80), samples: 6 }
+    }
+
+    /// Measure `f`, preventing the result from being optimised away via
+    /// the returned value sink.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Measurement {
+        // warm-up + iteration calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.budget / 10 {
+            std::hint::black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1 << 24 {
+                break;
+            }
+        }
+        let per_iter = (self.budget.as_nanos() as f64 / 10.0) / calib_iters as f64;
+        let per_sample_ns = self.budget.as_nanos() as f64 / self.samples as f64;
+        let iters = ((per_sample_ns / per_iter).ceil() as u64).max(1);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let median = times[times.len() / 2];
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        Measurement {
+            iters,
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            min_ns: times[0],
+        }
+    }
+}
+
+/// Plain-text table with aligned columns, in the style the paper's tables
+/// would print.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                let _ = write!(s, " {c:>w$} |", w = w);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals — table cell helper.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench { budget: Duration::from_millis(20), samples: 4 };
+        let m = b.run(|| (0..100u64).sum::<u64>());
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 1);
+        assert!(m.min_ns <= m.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["m", "ratio"]);
+        t.row(&["8".into(), "1.250".into()]);
+        t.row(&["128".into(), "1.016".into()]);
+        let s = t.render();
+        assert!(s.contains("=== demo ==="));
+        assert!(s.contains("|   8 |"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert!(fmt_ns(12_300.0).contains("µs"));
+        assert!(fmt_ns(12_300_000.0).contains("ms"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,130 @@
+//! First-party CLI argument parsing (offline substitute for clap).
+//!
+//! Flags are `--name value` or `--name` (boolean); the first bare word is
+//! the subcommand. Strict: unknown flags are errors, so typos fail fast.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) with a schema of known
+    /// value-flags and boolean-flags.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        argv: I,
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else if value_flags.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    bail!("unknown flag --{name}");
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse(value_flags: &[&str], bool_flags: &[&str]) -> Result<Self> {
+        Self::parse_from(std::env::args().skip(1), value_flags, bool_flags)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_and_bools() {
+        let a = Args::parse_from(
+            argv("serve --model mlp_square --requests 100 --verbose"),
+            &["model", "requests"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("mlp_square"));
+        assert_eq!(a.get_usize("requests", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse_from(argv("x --nope 1"), &["model"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse_from(argv("x --model"), &["model"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(argv("bench"), &["n"], &[]).unwrap();
+        assert_eq!(a.get_or("n", "64"), "64");
+        assert_eq!(a.get_usize("n", 64).unwrap(), 64);
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = Args::parse_from(argv("x --n abc"), &["n"], &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

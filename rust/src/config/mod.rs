@@ -1,0 +1,132 @@
+//! Configuration types and a first-party JSON layer.
+//!
+//! The offline build environment carries no `serde`/`serde_json`, so
+//! [`json`] implements the small, strict JSON subset the project needs
+//! (the AOT `manifest.json` and the server config). [`ServerConfig`] is
+//! the coordinator's configuration surface.
+
+pub mod json;
+
+pub use json::Json;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Coordinator/server configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// directory containing `manifest.json` + `*.hlo.txt`
+    pub artifacts_dir: PathBuf,
+    /// artifact served on the hot path (e.g. "mlp_square")
+    pub model: String,
+    /// baseline artifact for shadow verification (e.g. "mlp_direct")
+    pub baseline: Option<String>,
+    /// maximum rows per batch (the AOT batch dimension)
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch, in microseconds
+    pub batch_timeout_us: u64,
+    /// number of requests the queue may hold before back-pressure
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "mlp_square".into(),
+            baseline: Some("mlp_direct".into()),
+            max_batch: 32,
+            batch_timeout_us: 2_000,
+            queue_depth: 1024,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a JSON file; missing keys fall back to defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing server config")?;
+        let d = Self::default();
+        Ok(Self {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts_dir),
+            model: v
+                .get("model")
+                .and_then(Json::as_str)
+                .map(str::to_owned)
+                .unwrap_or(d.model),
+            baseline: match v.get("baseline") {
+                Some(Json::Null) => None,
+                Some(j) => j.as_str().map(str::to_owned),
+                None => d.baseline,
+            },
+            max_batch: v
+                .get("max_batch")
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .unwrap_or(d.max_batch),
+            batch_timeout_us: v
+                .get("batch_timeout_us")
+                .and_then(Json::as_u64)
+                .unwrap_or(d.batch_timeout_us),
+            queue_depth: v
+                .get("queue_depth")
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .unwrap_or(d.queue_depth),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.insert("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string()));
+        o.insert("model", Json::Str(self.model.clone()));
+        o.insert(
+            "baseline",
+            self.baseline
+                .as_ref()
+                .map(|b| Json::Str(b.clone()))
+                .unwrap_or(Json::Null),
+        );
+        o.insert("max_batch", Json::Num(self.max_batch as f64));
+        o.insert("batch_timeout_us", Json::Num(self.batch_timeout_us as f64));
+        o.insert("queue_depth", Json::Num(self.queue_depth as f64));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trip() {
+        let c = ServerConfig::default();
+        let text = c.to_json().to_string();
+        let back = ServerConfig::from_json_str(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let c = ServerConfig::from_json_str(r#"{"model": "matmul_square_m"}"#).unwrap();
+        assert_eq!(c.model, "matmul_square_m");
+        assert_eq!(c.max_batch, ServerConfig::default().max_batch);
+    }
+
+    #[test]
+    fn null_baseline_disables_shadow() {
+        let c = ServerConfig::from_json_str(r#"{"baseline": null}"#).unwrap();
+        assert_eq!(c.baseline, None);
+    }
+}

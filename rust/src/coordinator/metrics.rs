@@ -1,0 +1,124 @@
+//! Serving metrics: latency distribution + throughput counters.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over recorded latencies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// Metrics recorder. Latencies are stored raw (µs) — serving runs here are
+/// bounded, so exact percentiles beat HDR approximations.
+#[derive(Debug)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    pub batches: u64,
+    pub rows: u64,
+    pub shadow_checks: u64,
+    pub shadow_failures: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            latencies_us: Vec::new(),
+            batches: 0,
+            rows: 0,
+            shadow_checks: 0,
+            shadow_failures: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_batch(&mut self, rows: usize) {
+        self.batches += 1;
+        self.rows += rows as u64;
+    }
+
+    /// Rows per second since construction.
+    pub fn throughput(&self) -> f64 {
+        self.rows as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.batches as f64
+        }
+    }
+
+    pub fn latency_stats(&self) -> LatencyStats {
+        if self.latencies_us.is_empty() {
+            return LatencyStats {
+                count: 0,
+                mean_us: 0.0,
+                p50_us: 0.0,
+                p95_us: 0.0,
+                p99_us: 0.0,
+                max_us: 0.0,
+            };
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| v[((v.len() as f64 - 1.0) * p).round() as usize];
+        LatencyStats {
+            count: v.len() as u64,
+            mean_us: v.iter().sum::<f64>() / v.len() as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: *v.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        let s = m.latency_stats();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert!((s.p50_us - 50.0).abs() <= 1.5);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(32);
+        m.record_batch(16);
+        assert_eq!(m.rows, 48);
+        assert!((m.mean_batch_size() - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = Metrics::new().latency_stats();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max_us, 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: a thread-based batching inference server over the
+//! PJRT runtime.
+//!
+//! The paper's contribution lives in the arithmetic (L1/L2) and the
+//! hardware models, so per the architecture rules the coordinator is the
+//! thin-but-real serving shell around them: a bounded request queue, a
+//! dynamic batcher (size- and deadline-triggered, Fig. vLLM-style), a
+//! worker that owns the non-`Send` PJRT engine, per-request latency
+//! metrics, and an optional shadow baseline that cross-checks the
+//! square-based model against the direct twin on sampled batches.
+//!
+//! The offline environment has no tokio; the runtime is `std::thread` +
+//! `mpsc`, which for a single-device CPU serving loop is exactly as
+//! capable and considerably more debuggable.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod workload;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::{LatencyStats, Metrics};
+pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats};
+pub use workload::WorkloadGen;

@@ -1,0 +1,456 @@
+//! The inference server: a worker thread owning the (non-`Send`) PJRT
+//! engine, fed by a bounded mpsc queue through the dynamic batcher.
+//!
+//! Request path: client → [`InferenceServer::submit`] → queue → batcher →
+//! executor (PJRT artifact) → per-request response channel. Optionally a
+//! *shadow baseline* runs every k-th batch through the direct-matmul twin
+//! artifact and cross-checks outputs — how a cautious operator would roll
+//! out the square-based model.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Batcher;
+use super::metrics::{LatencyStats, Metrics};
+
+/// Executes one padded batch of rows. Implemented by the PJRT engine and
+/// by in-process mocks for tests.
+pub trait BatchExecutor {
+    /// number of features per row
+    fn row_len(&self) -> usize;
+    /// fixed batch size the artifact was compiled for
+    fn batch_rows(&self) -> usize;
+    /// run exactly `batch_rows()` rows (flattened) → flattened outputs
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>>;
+    /// output features per row
+    fn out_len(&self) -> usize;
+}
+
+/// PJRT-backed executor over a named artifact. Construct *inside* the
+/// worker thread (the engine is not `Send`).
+pub struct PjrtExecutor {
+    engine: crate::runtime::Engine,
+    model: String,
+    rows: usize,
+    row_len: usize,
+    out_len: usize,
+}
+
+impl PjrtExecutor {
+    pub fn new(artifacts_dir: &std::path::Path, model: &str) -> Result<Self> {
+        let mut engine = crate::runtime::Engine::new(artifacts_dir)?;
+        let spec = engine.load(model)?.spec.clone();
+        if spec.args.len() != 1 || spec.args[0].shape.len() != 2 {
+            return Err(anyhow!(
+                "{model}: expected a single (batch, features) argument, got {:?}",
+                spec.args
+            ));
+        }
+        Ok(Self {
+            rows: spec.args[0].shape[0],
+            row_len: spec.args[0].shape[1],
+            out_len: spec.outputs[0].shape[1],
+            model: model.to_string(),
+            engine,
+        })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        let out = self.engine.run_f32(&self.model, &[rows_flat.to_vec()])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Result<Vec<f32>, String>>,
+}
+
+enum Msg {
+    Req(Request),
+    Stats(Sender<ServerStats>),
+    Shutdown,
+}
+
+/// Snapshot of server metrics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub latency: LatencyStats,
+    pub batches: u64,
+    pub rows: u64,
+    pub mean_batch: f64,
+    pub shadow_checks: u64,
+    pub shadow_failures: u64,
+    pub rejected: u64,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: SyncSender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    row_len: usize,
+}
+
+impl InferenceServer {
+    /// Start the worker. `make_exec`/`make_shadow` run inside the worker
+    /// thread so non-`Send` engines are fine. `shadow_every` > 0 verifies
+    /// every k-th batch against the shadow executor.
+    pub fn start<E, S>(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        shadow_every: u64,
+        make_exec: impl FnOnce() -> Result<E> + Send + 'static,
+        make_shadow: impl FnOnce() -> Result<Option<S>> + Send + 'static,
+    ) -> Result<Self>
+    where
+        E: BatchExecutor,
+        S: BatchExecutor,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+
+        let worker = std::thread::Builder::new()
+            .name("fairsquare-worker".into())
+            .spawn(move || {
+                let mut exec = match make_exec() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("executor init: {e:#}")));
+                        return;
+                    }
+                };
+                let mut shadow = match make_shadow() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("shadow init: {e:#}")));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(exec.row_len()));
+                worker_loop(rx, &mut exec, shadow.as_mut(), max_batch, max_wait, queue_depth, shadow_every);
+            })
+            .expect("spawning worker");
+
+        let row_len = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during init"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Self { tx, worker: Some(worker), row_len })
+    }
+
+    /// Submit one row; blocks until the response arrives.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(input)?
+            .recv()
+            .map_err(|_| anyhow!("server shut down"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Submit one row; returns the response channel (pipelined use).
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+        if input.len() != self.row_len {
+            return Err(anyhow!(
+                "input has {} features, model wants {}",
+                input.len(),
+                self.row_len
+            ));
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .try_send(Msg::Req(Request {
+                input,
+                enqueued: Instant::now(),
+                resp: resp_tx,
+            }))
+            .map_err(|e| anyhow!("queue full or closed: {e}"))?;
+        Ok(resp_rx)
+    }
+
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| anyhow!("server shut down"))?;
+        rx.recv().map_err(|_| anyhow!("server shut down"))
+    }
+
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        let stats = self.stats()?;
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
+    rx: Receiver<Msg>,
+    exec: &mut E,
+    mut shadow: Option<&mut S>,
+    max_batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    shadow_every: u64,
+) {
+    let rows = exec.batch_rows();
+    let row_len = exec.row_len();
+    let out_len = exec.out_len();
+    let max_batch = max_batch.min(rows);
+    let mut batcher: Batcher<Request> = Batcher::new(max_batch, max_wait, queue_depth);
+    let mut metrics = Metrics::new();
+    let mut rejected = 0u64;
+
+    'outer: loop {
+        // wait for work, bounded by the batcher's next deadline
+        let timeout = batcher
+            .deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(r)) => {
+                if batcher.push(r, Instant::now()).is_err() {
+                    rejected += 1;
+                }
+            }
+            Ok(Msg::Stats(tx)) => {
+                let _ = tx.send(ServerStats {
+                    latency: metrics.latency_stats(),
+                    batches: metrics.batches,
+                    rows: metrics.rows,
+                    mean_batch: metrics.mean_batch_size(),
+                    shadow_checks: metrics.shadow_checks,
+                    shadow_failures: metrics.shadow_failures,
+                    rejected,
+                });
+                continue;
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // drain any further queued messages without blocking
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Req(r) => {
+                    if batcher.push(r, Instant::now()).is_err() {
+                        rejected += 1;
+                    }
+                }
+                Msg::Stats(tx) => {
+                    let _ = tx.send(ServerStats {
+                        latency: metrics.latency_stats(),
+                        batches: metrics.batches,
+                        rows: metrics.rows,
+                        mean_batch: metrics.mean_batch_size(),
+                        shadow_checks: metrics.shadow_checks,
+                        shadow_failures: metrics.shadow_failures,
+                        rejected,
+                    });
+                }
+                Msg::Shutdown => break 'outer,
+            }
+        }
+
+        while let Some(batch) = batcher.take(Instant::now()) {
+            run_batch(batch.items, exec, shadow.as_deref_mut(), rows, row_len, out_len,
+                      shadow_every, &mut metrics);
+        }
+    }
+
+    // shutdown: flush what's left
+    while let Some(batch) = batcher.drain() {
+        run_batch(batch.items, exec, shadow.as_deref_mut(), rows, row_len, out_len,
+                  shadow_every, &mut metrics);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batch<E: BatchExecutor, S: BatchExecutor>(
+    items: Vec<super::batcher::Pending<Request>>,
+    exec: &mut E,
+    shadow: Option<&mut S>,
+    rows: usize,
+    row_len: usize,
+    out_len: usize,
+    shadow_every: u64,
+    metrics: &mut Metrics,
+) {
+    // pad to the artifact's fixed batch dimension
+    let mut flat = vec![0.0f32; rows * row_len];
+    for (i, p) in items.iter().enumerate() {
+        flat[i * row_len..(i + 1) * row_len].copy_from_slice(&p.payload.input);
+    }
+    metrics.record_batch(items.len());
+
+    match exec.run(&flat) {
+        Ok(out) => {
+            // optional shadow verification
+            if let Some(sh) = shadow {
+                if shadow_every > 0 && (metrics.batches - 1) % shadow_every == 0 {
+                    metrics.shadow_checks += 1;
+                    if let Ok(want) = sh.run(&flat) {
+                        let used = items.len() * out_len;
+                        let ok = out[..used]
+                            .iter()
+                            .zip(&want[..used])
+                            .all(|(a, b)| (a - b).abs() <= 1e-2 * b.abs().max(1.0));
+                        if !ok {
+                            metrics.shadow_failures += 1;
+                        }
+                    }
+                }
+            }
+            let now = Instant::now();
+            for (i, p) in items.into_iter().enumerate() {
+                metrics.record_latency(now - p.payload.enqueued);
+                let slice = out[i * out_len..(i + 1) * out_len].to_vec();
+                let _ = p.payload.resp.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in items {
+                let _ = p.payload.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock: "model" that doubles every feature; 4-row batches.
+    struct Doubler {
+        fail: bool,
+    }
+
+    impl BatchExecutor for Doubler {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+            if self.fail {
+                return Err(anyhow!("injected failure"));
+            }
+            Ok(rows_flat.iter().map(|x| x * 2.0).collect())
+        }
+    }
+
+    fn start_doubler(fail: bool) -> InferenceServer {
+        InferenceServer::start(
+            4,
+            Duration::from_millis(2),
+            64,
+            0,
+            move || Ok(Doubler { fail }),
+            || Ok(None::<Doubler>),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let srv = start_doubler(false);
+        let out = srv.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn many_requests_batched() {
+        let srv = start_doubler(false);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| srv.submit(vec![i as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], 2.0 * i as f32);
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rows, 16);
+        assert!(stats.mean_batch > 1.0, "batching never kicked in");
+    }
+
+    #[test]
+    fn wrong_arity_rejected_at_submit() {
+        let srv = start_doubler(false);
+        assert!(srv.submit(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn executor_failure_propagates() {
+        let srv = start_doubler(true);
+        let err = srv.infer(vec![0.0; 3]).unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+    }
+
+    /// shadow that disagrees on purpose
+    struct WrongShadow;
+
+    impl BatchExecutor for WrongShadow {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+            Ok(rows_flat.iter().map(|x| x * 3.0).collect())
+        }
+    }
+
+    #[test]
+    fn shadow_mismatch_detected() {
+        let srv = InferenceServer::start(
+            4,
+            Duration::from_millis(1),
+            64,
+            1,
+            || Ok(Doubler { fail: false }),
+            || Ok(Some(WrongShadow)),
+        )
+        .unwrap();
+        let _ = srv.infer(vec![1.0, 1.0, 1.0]).unwrap();
+        let stats = srv.shutdown().unwrap();
+        assert!(stats.shadow_checks >= 1);
+        assert_eq!(stats.shadow_failures, stats.shadow_checks);
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic workload generation for the e2e experiments (E6).
+//!
+//! The paper motivates the technique with AI inference and DSP; the
+//! workloads here exercise exactly those paths: MNIST-like feature vectors
+//! for the MLP artifacts, noisy multi-tone signals for the FIR artifacts,
+//! and Poisson-ish arrival jitter for open-loop serving benches.
+
+use crate::testkit::Rng;
+
+/// Deterministic workload generator.
+#[derive(Debug)]
+pub struct WorkloadGen {
+    rng: Rng,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    /// One MNIST-like input: 784 values in [0, 1] with a sparse "stroke"
+    /// structure (most pixels near zero, a contiguous band activated).
+    pub fn mnist_like(&mut self) -> Vec<f32> {
+        let mut v = vec![0.0f32; 784];
+        let strokes = self.rng.usize_in(2, 5);
+        for _ in 0..strokes {
+            let start = self.rng.usize_in(0, 783);
+            let len = self.rng.usize_in(10, 60);
+            for i in start..(start + len).min(784) {
+                v[i] = (self.rng.f64_in(0.3, 1.0)) as f32;
+            }
+        }
+        // sensor noise
+        for x in v.iter_mut() {
+            *x += self.rng.f64_in(0.0, 0.05) as f32;
+        }
+        v
+    }
+
+    /// A batch of MNIST-like rows, flattened row-major.
+    pub fn mnist_batch(&mut self, rows: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(rows * 784);
+        for _ in 0..rows {
+            out.extend(self.mnist_like());
+        }
+        out
+    }
+
+    /// Multi-tone signal + white noise, for the FIR low-pass experiment:
+    /// a 0.05·fs tone the filter must keep and a 0.4·fs tone it must kill.
+    pub fn two_tone_signal(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64;
+                let keep = (std::f64::consts::TAU * 0.05 * t).sin();
+                let kill = 0.8 * (std::f64::consts::TAU * 0.40 * t).sin();
+                let noise = 0.05 * self.rng.normal();
+                (keep + kill + noise) as f32
+            })
+            .collect()
+    }
+
+    /// Inter-arrival gaps (µs) for an open-loop request stream at `rps`
+    /// requests/second — exponential(λ) jitter.
+    pub fn arrival_gaps_us(&mut self, n: usize, rps: f64) -> Vec<u64> {
+        let mean_us = 1e6 / rps;
+        (0..n)
+            .map(|_| {
+                let u = self.rng.f64_in(f64::MIN_POSITIVE, 1.0);
+                (-u.ln() * mean_us) as u64
+            })
+            .collect()
+    }
+
+    /// Complex OFDM-ish symbol: QPSK constellation points per subcarrier,
+    /// returned as (re, im) planes of length `n`.
+    pub fn qpsk_symbol(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut re = Vec::with_capacity(n);
+        let mut im = Vec::with_capacity(n);
+        let l = std::f32::consts::FRAC_1_SQRT_2;
+        for _ in 0..n {
+            re.push(if self.rng.next_u64() & 1 == 0 { l } else { -l });
+            im.push(if self.rng.next_u64() & 1 == 0 { l } else { -l });
+        }
+        (re, im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_shape_and_range() {
+        let mut g = WorkloadGen::new(1);
+        let v = g.mnist_like();
+        assert_eq!(v.len(), 784);
+        assert!(v.iter().all(|&x| (0.0..=1.1).contains(&x)));
+        // sparse-ish: plenty of near-zero pixels
+        let dark = v.iter().filter(|&&x| x < 0.1).count();
+        assert!(dark > 200, "dark={dark}");
+    }
+
+    #[test]
+    fn batches_are_deterministic_per_seed() {
+        let a = WorkloadGen::new(7).mnist_batch(4);
+        let b = WorkloadGen::new(7).mnist_batch(4);
+        assert_eq!(a, b);
+        let c = WorkloadGen::new(8).mnist_batch(4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn two_tone_has_both_tones() {
+        let mut g = WorkloadGen::new(2);
+        let s = g.two_tone_signal(512);
+        // Goertzel-ish energy at the two bins
+        let energy = |f: f64| {
+            let (mut re, mut im) = (0.0f64, 0.0f64);
+            for (i, &x) in s.iter().enumerate() {
+                let ang = std::f64::consts::TAU * f * i as f64;
+                re += x as f64 * ang.cos();
+                im += x as f64 * ang.sin();
+            }
+            (re * re + im * im).sqrt()
+        };
+        assert!(energy(0.05) > 50.0);
+        assert!(energy(0.40) > 50.0);
+        assert!(energy(0.22) < 40.0); // quiet in between
+    }
+
+    #[test]
+    fn arrival_gaps_mean_is_close() {
+        let mut g = WorkloadGen::new(3);
+        let gaps = g.arrival_gaps_us(20_000, 1000.0); // mean 1000 µs
+        let mean = gaps.iter().sum::<u64>() as f64 / gaps.len() as f64;
+        assert!((mean - 1000.0).abs() < 50.0, "mean={mean}");
+    }
+
+    #[test]
+    fn qpsk_unit_power() {
+        let mut g = WorkloadGen::new(4);
+        let (re, im) = g.qpsk_symbol(64);
+        for (r, i) in re.iter().zip(&im) {
+            assert!((r * r + i * i - 1.0).abs() < 1e-6);
+        }
+    }
+}

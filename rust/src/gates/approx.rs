@@ -1,0 +1,179 @@
+//! Approximate squarers — the paper's abstract notes the technique
+//! "transcends the particular implementation of a squaring circuit.
+//! Approximate squaring is also a possibility." This module makes that
+//! concrete with the two standard approximation families from the Chen et
+//! al. reference [1], with measured (not modelled) error statistics:
+//!
+//! * [`truncated_squarer`] — drop the k least-significant partial-product
+//!   columns (plus an optional constant compensation bias);
+//! * [`approx_squarer_lsb`] — replace the LSB half of the folded PP matrix
+//!   with its probabilistic expectation (constant), keeping only the MSB
+//!   reduction exact.
+//!
+//! Error metrics are computed by exhaustive/sampled evaluation of the
+//! actual netlist, so the area-vs-accuracy trade-off table in the
+//! `gate_counts` bench is backed by real gate evaluations.
+
+use super::netlist::{Netlist, NodeId};
+use crate::testkit::Rng;
+
+/// Folded squarer with the `k` least-significant output columns truncated
+/// (their partial products never generated). `compensate` adds the
+/// expected value of the dropped mass as a constant.
+pub fn truncated_squarer(n: usize, k: usize, compensate: bool) -> Netlist {
+    assert!(n >= 1 && n <= 24 && k < 2 * n);
+    let mut nl = Netlist::new();
+    let x = nl.inputs(n);
+    let mut cols: Vec<Vec<NodeId>> = vec![Vec::new(); 2 * n];
+
+    let mut dropped_weight = 0.0f64;
+    // diagonal: x_i at weight 2i
+    for i in 0..n {
+        if 2 * i >= k {
+            cols[2 * i].push(x[i]);
+        } else {
+            dropped_weight += 0.5 * (1u64 << (2 * i)) as f64; // E[x_i]=½
+        }
+    }
+    // folded pairs at weight i+j+1
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let w = i + j + 1;
+            if w >= k {
+                let pp = nl.and(x[i], x[j]);
+                cols[w].push(pp);
+            } else {
+                dropped_weight += 0.25 * (1u64 << w) as f64; // E[x_i x_j]=¼
+            }
+        }
+    }
+    if compensate && dropped_weight > 0.0 {
+        // add round(E[dropped]) as a constant
+        let bias = dropped_weight.round() as u64;
+        for (w, col) in cols.iter_mut().enumerate() {
+            if (bias >> w) & 1 == 1 {
+                let one = nl.constant(true);
+                col.push(one);
+            }
+        }
+    }
+    while cols.last().is_some_and(Vec::is_empty) {
+        cols.pop();
+    }
+    let mut out = nl.reduce_columns(cols);
+    out.truncate(2 * n);
+    nl.outputs = out;
+    nl
+}
+
+/// Folded squarer that zeroes every partial product whose weight falls in
+/// the lower half (weights < n), replacing the whole lower half with the
+/// mean compensation constant — the aggressive "half-exact" design point.
+pub fn approx_squarer_lsb(n: usize) -> Netlist {
+    truncated_squarer(n, n, true)
+}
+
+/// Measured error statistics of an approximate squarer against exact x².
+#[derive(Debug, Clone, Copy)]
+pub struct ApproxError {
+    /// mean of |approx − exact| / 2^{2n}
+    pub mean_abs_norm: f64,
+    /// max of |approx − exact| / 2^{2n}
+    pub max_abs_norm: f64,
+    /// mean relative error |approx − exact| / max(exact, 1)
+    pub mean_rel: f64,
+}
+
+/// Evaluate an approximate squarer netlist against exact squaring —
+/// exhaustive for n ≤ 12, sampled otherwise.
+pub fn measure_error(nl: &Netlist, n: usize, seed: u64) -> ApproxError {
+    let mask = (1u64 << n) - 1;
+    let norm = (1u64 << (2 * n)) as f64;
+    let mut count = 0u64;
+    let mut sum_abs = 0.0f64;
+    let mut max_abs = 0.0f64;
+    let mut sum_rel = 0.0f64;
+    let mut eval = |v: u64| {
+        let got = nl.eval_u64(&[(v, n as u32)]) as i64;
+        let want = (v * v) as i64;
+        let err = (got - want).abs() as f64;
+        sum_abs += err / norm;
+        max_abs = max_abs.max(err / norm);
+        sum_rel += err / (want.max(1)) as f64;
+        count += 1;
+    };
+    if n <= 12 {
+        for v in 0..=mask {
+            eval(v);
+        }
+    } else {
+        let mut rng = Rng::new(seed);
+        for _ in 0..4096 {
+            eval(rng.next_u64() & mask);
+        }
+    }
+    ApproxError {
+        mean_abs_norm: sum_abs / count as f64,
+        max_abs_norm: max_abs,
+        mean_rel: sum_rel / count as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::squarer::folded_squarer;
+
+    #[test]
+    fn zero_truncation_is_exact() {
+        let nl = truncated_squarer(8, 0, false);
+        for v in 0..256u64 {
+            assert_eq!(nl.eval_u64(&[(v, 8)]), v * v);
+        }
+    }
+
+    #[test]
+    fn truncation_saves_area_monotonically() {
+        let base = folded_squarer(12).cost(0, 0).area;
+        let mut prev = base + 1.0;
+        for k in [0usize, 4, 8, 12] {
+            let a = truncated_squarer(12, k, false).cost(0, 0).area;
+            assert!(a <= prev, "k={k}: {a} > {prev}");
+            prev = a;
+        }
+        assert!(truncated_squarer(12, 12, false).cost(0, 0).area < 0.8 * base);
+    }
+
+    #[test]
+    fn error_grows_with_truncation_but_stays_bounded() {
+        let mut prev = -1.0;
+        for k in [0usize, 2, 4, 6, 8] {
+            let nl = truncated_squarer(10, k, true);
+            let e = measure_error(&nl, 10, 1);
+            assert!(e.max_abs_norm >= prev - 1e-12, "k={k}");
+            prev = e.max_abs_norm;
+            // dropped mass is bounded by sum of dropped column weights
+            let bound = (1u64 << k) as f64 / (1u64 << 20) as f64 * 4.0;
+            assert!(e.max_abs_norm <= bound + 1e-9, "k={k}: {} > {bound}", e.max_abs_norm);
+        }
+    }
+
+    #[test]
+    fn compensation_reduces_mean_error() {
+        let raw = measure_error(&truncated_squarer(10, 8, false), 10, 2);
+        let comp = measure_error(&truncated_squarer(10, 8, true), 10, 2);
+        assert!(comp.mean_abs_norm <= raw.mean_abs_norm,
+                "comp {} vs raw {}", comp.mean_abs_norm, raw.mean_abs_norm);
+    }
+
+    #[test]
+    fn lsb_half_design_point() {
+        let nl = approx_squarer_lsb(12);
+        let e = measure_error(&nl, 12, 3);
+        // half the columns dropped: relative error small vs full scale
+        assert!(e.max_abs_norm < 1e-2, "{e:?}");
+        let exact_area = folded_squarer(12).cost(0, 0).area;
+        let approx_area = nl.cost(0, 0).area;
+        assert!(approx_area < 0.75 * exact_area);
+    }
+}

@@ -1,0 +1,173 @@
+//! Datapath blocks composed from the gate-level cores: the MAC vs PMAC of
+//! Fig. 1, the complex multiplier vs CPM of Fig. 9 and the CPM3 of Fig. 12.
+//!
+//! Blocks are *cost compositions*: combinational cores are generated as
+//! real netlists (and therefore carry verified area/delay), while adders
+//! and registers around them are added with closed-form costs (a ripple
+//! stage per bit: 1 FA ≈ 2 XOR + 2 AND + 1 OR ≈ 9.5 NAND2; a DFF ≈ 6
+//! NAND2). This mirrors how an RTL estimator would price the Fig. 1/9/12
+//! schematics.
+
+use super::multiplier::csa_multiplier;
+use super::netlist::CostSummary;
+use super::squarer::folded_squarer;
+
+/// NAND2-equivalent area of one full-adder stage.
+pub const FA_AREA: f64 = 2.0 * 2.5 + 2.0 * 1.5 + 1.5; // 2 XOR + 2 AND + 1 OR
+/// NAND2-equivalent area of one D flip-flop bit.
+pub const DFF_AREA: f64 = 6.0;
+/// Unit-delay of one ripple stage.
+pub const FA_DELAY: f64 = 3.0;
+
+/// Cost roll-up of a datapath block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockCost {
+    pub name: &'static str,
+    /// combinational NAND2-equivalent area
+    pub comb_area: f64,
+    /// register NAND2-equivalent area
+    pub reg_area: f64,
+    /// critical path, unit gate delays
+    pub critical_path: f64,
+}
+
+impl BlockCost {
+    pub fn total_area(&self) -> f64 {
+        self.comb_area + self.reg_area
+    }
+}
+
+fn adder_area(bits: u32) -> f64 {
+    bits as f64 * FA_AREA
+}
+
+fn reg_area(bits: u32) -> f64 {
+    bits as f64 * DFF_AREA
+}
+
+/// Fig. 1a: classic multiply–accumulator for n-bit operands over N terms.
+/// multiplier (2n out) + accumulator adder + accumulator register.
+pub fn mac_block(n: usize, n_terms: u64) -> BlockCost {
+    let mult: CostSummary = csa_multiplier(n).cost(0, 0);
+    let growth = 64 - u64::leading_zeros(n_terms.max(1) - 1).min(63);
+    let acc_bits = 2 * n as u32 + growth + 1;
+    BlockCost {
+        name: "MAC (Fig.1a)",
+        comb_area: mult.area + adder_area(acc_bits),
+        reg_area: reg_area(acc_bits),
+        critical_path: mult.critical_path + FA_DELAY * acc_bits as f64 / 4.0,
+    }
+}
+
+/// Fig. 1b: partial-multiplication accumulator — one (n+1)-bit operand
+/// adder, one (n+1)-bit squarer, accumulator adder + register (2 bits
+/// wider, see `arith::fixed::BitBudget`).
+pub fn pmac_block(n: usize, n_terms: u64) -> BlockCost {
+    let sq: CostSummary = folded_squarer(n + 1).cost(0, 0);
+    let growth = 64 - u64::leading_zeros(n_terms.max(1) - 1).min(63);
+    let acc_bits = 2 * (n as u32 + 1) + growth + 1;
+    BlockCost {
+        name: "PMAC (Fig.1b)",
+        comb_area: adder_area(n as u32 + 1) + sq.area + adder_area(acc_bits),
+        reg_area: reg_area(acc_bits),
+        critical_path: FA_DELAY + sq.critical_path + FA_DELAY * acc_bits as f64 / 4.0,
+    }
+}
+
+/// Fig. 9b: complex multiplier from 3 real multipliers (the paper's
+/// comparison baseline) + 5 operand adders.
+pub fn complex_mult_3m_block(n: usize) -> BlockCost {
+    let mult = csa_multiplier(n).cost(0, 0);
+    BlockCost {
+        name: "CMUL-3M (Fig.9b)",
+        comb_area: 3.0 * mult.area + 5.0 * adder_area(2 * n as u32),
+        reg_area: 0.0,
+        critical_path: FA_DELAY + mult.critical_path + FA_DELAY,
+    }
+}
+
+/// Fig. 9a: CPM — 4 squarers of width n+1 plus 4 operand adders and 2
+/// combine adders.
+pub fn cpm_block(n: usize) -> BlockCost {
+    let sq = folded_squarer(n + 1).cost(0, 0);
+    BlockCost {
+        name: "CPM (Fig.9a)",
+        comb_area: 4.0 * sq.area
+            + 4.0 * adder_area(n as u32 + 1)
+            + 2.0 * adder_area(2 * (n as u32 + 1)),
+        reg_area: 0.0,
+        critical_path: FA_DELAY + sq.critical_path + FA_DELAY,
+    }
+}
+
+/// Fig. 12a: CPM3 — 3 squarers of width n+2 (three-operand sums), 5
+/// operand adders, 2 combine adders.
+pub fn cpm3_block(n: usize) -> BlockCost {
+    let sq = folded_squarer(n + 2).cost(0, 0);
+    BlockCost {
+        name: "CPM3 (Fig.12a)",
+        comb_area: 3.0 * sq.area
+            + 5.0 * adder_area(n as u32 + 2)
+            + 2.0 * adder_area(2 * (n as u32 + 2)),
+        reg_area: 0.0,
+        critical_path: 2.0 * FA_DELAY + sq.critical_path + FA_DELAY,
+    }
+}
+
+/// Fig. 9-equivalent direct complex multiplier with 4 real multipliers.
+pub fn complex_mult_4m_block(n: usize) -> BlockCost {
+    let mult = csa_multiplier(n).cost(0, 0);
+    BlockCost {
+        name: "CMUL-4M (eq.16)",
+        comb_area: 4.0 * mult.area + 2.0 * adder_area(2 * n as u32),
+        reg_area: 0.0,
+        critical_path: mult.critical_path + FA_DELAY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmac_saves_combinational_area_vs_mac() {
+        // the paper's headline: squarer ≈ ½ multiplier ⇒ PMAC < MAC
+        for n in [8usize, 12, 16] {
+            let mac = mac_block(n, 256);
+            let pmac = pmac_block(n, 256);
+            assert!(
+                pmac.comb_area < mac.comb_area,
+                "n={n}: pmac={} mac={}",
+                pmac.comb_area,
+                mac.comb_area
+            );
+        }
+    }
+
+    #[test]
+    fn pmac_register_overhead_is_real() {
+        // honest accounting: the PMAC register is wider
+        let mac = mac_block(12, 256);
+        let pmac = pmac_block(12, 256);
+        assert!(pmac.reg_area > mac.reg_area);
+    }
+
+    #[test]
+    fn cpm_beats_4m_and_cpm3_beats_cpm() {
+        for n in [8usize, 12, 16] {
+            let m4 = complex_mult_4m_block(n);
+            let m3 = complex_mult_3m_block(n);
+            let c4 = cpm_block(n);
+            let c3 = cpm3_block(n);
+            assert!(c4.comb_area < m4.comb_area, "n={n} CPM vs 4M");
+            assert!(c3.comb_area < c4.comb_area, "n={n} CPM3 vs CPM");
+            assert!(c3.comb_area < m3.comb_area, "n={n} CPM3 vs 3M");
+        }
+    }
+
+    #[test]
+    fn block_totals_add_up() {
+        let b = mac_block(8, 16);
+        assert!((b.total_area() - (b.comb_area + b.reg_area)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Gate-level n×n unsigned multipliers.
+//!
+//! Two partial-product reductions are provided: a plain ripple **array**
+//! multiplier (what "n×n multiplier gate count" classically means) and a
+//! **CSA-tree** (Wallace-style) variant sharing the same column reducer the
+//! squarer uses, so multiplier-vs-squarer comparisons are apples-to-apples.
+
+use super::netlist::{Netlist, NodeId};
+
+/// Generate the n² AND partial products of `a × b` as weight-indexed
+/// columns: `columns[w]` holds every `a_i·b_j` with `i+j = w`.
+fn partial_product_columns(nl: &mut Netlist, a: &[NodeId], b: &[NodeId]) -> Vec<Vec<NodeId>> {
+    let n = a.len();
+    let m = b.len();
+    let mut cols: Vec<Vec<NodeId>> = vec![Vec::new(); n + m - 1];
+    for i in 0..n {
+        for j in 0..m {
+            let pp = nl.and(a[i], b[j]);
+            cols[i + j].push(pp);
+        }
+    }
+    cols
+}
+
+/// n×n unsigned multiplier with CSA-tree reduction. Output is 2n bits.
+pub fn csa_multiplier(n: usize) -> Netlist {
+    assert!(n >= 1 && n <= 24, "sim budget: n in 1..=24");
+    let mut nl = Netlist::new();
+    let a = nl.inputs(n);
+    let b = nl.inputs(n);
+    let cols = partial_product_columns(&mut nl, &a, &b);
+    let mut out = nl.reduce_columns(cols);
+    out.truncate(2 * n);
+    nl.outputs = out;
+    nl
+}
+
+/// Classic ripple array multiplier: n rows of n AND gates, each row added
+/// with a ripple-carry adder. Same function, deeper critical path —
+/// included as the conservative "gate count of a multiplier" baseline.
+pub fn array_multiplier(n: usize) -> Netlist {
+    assert!(n >= 1 && n <= 24);
+    let mut nl = Netlist::new();
+    let a = nl.inputs(n);
+    let b = nl.inputs(n);
+    let zero = nl.constant(false);
+
+    // acc holds the running partial sum, LSB first, growing to 2n bits
+    let mut acc: Vec<NodeId> = a.iter().map(|&ai| nl.and(ai, b[0])).collect();
+    for j in 1..n {
+        let row: Vec<NodeId> = a.iter().map(|&ai| nl.and(ai, b[j])).collect();
+        // add the j-shifted row into acc[j..]
+        let mut hi: Vec<NodeId> = acc[j..].to_vec();
+        let width = hi.len().max(row.len());
+        hi.resize(width, zero);
+        let mut rw = row;
+        rw.resize(width, zero);
+        let sum = nl.ripple_add(&hi, &rw); // width+1 bits
+        acc.truncate(j);
+        acc.extend(sum);
+    }
+    acc.truncate(2 * n);
+    nl.outputs = acc;
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn check_multiplier(make: fn(usize) -> Netlist, n: usize, cases: usize) {
+        let nl = make(n);
+        let mut rng = Rng::new(60 + n as u64);
+        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        for _ in 0..cases {
+            let a = rng.next_u64() & mask;
+            let b = rng.next_u64() & mask;
+            assert_eq!(
+                nl.eval_u64(&[(a, n as u32), (b, n as u32)]),
+                a * b,
+                "n={n} a={a} b={b}"
+            );
+        }
+        // corner cases (n ≤ 24 so the product always fits u64)
+        for (a, b) in [(0, 0), (mask, mask), (1, mask), (mask, 1)] {
+            assert_eq!(nl.eval_u64(&[(a, n as u32), (b, n as u32)]), a * b,
+                       "corner n={n}");
+        }
+    }
+
+    #[test]
+    fn csa_multiplier_exact() {
+        for n in [1, 2, 3, 4, 8, 12, 16] {
+            check_multiplier(csa_multiplier, n, 100);
+        }
+    }
+
+    #[test]
+    fn array_multiplier_exact() {
+        for n in [1, 2, 3, 4, 8, 12, 16] {
+            check_multiplier(array_multiplier, n, 100);
+        }
+    }
+
+    #[test]
+    fn csa_is_shallower_than_array() {
+        let c = csa_multiplier(16).cost(0, 0);
+        let a = array_multiplier(16).cost(0, 0);
+        assert!(c.critical_path < a.critical_path,
+                "csa={} array={}", c.critical_path, a.critical_path);
+    }
+
+    #[test]
+    fn area_grows_quadratically() {
+        let a8 = csa_multiplier(8).cost(0, 0).area;
+        let a16 = csa_multiplier(16).cost(0, 0).area;
+        let ratio = a16 / a8;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,387 @@
+//! Evaluable combinational netlist with area/delay/power accounting.
+//!
+//! Gates reference only earlier nodes, so construction order is a valid
+//! topological order: evaluation is a single forward pass and the critical
+//! path falls out of a running per-node depth. Costs use the standard
+//! NAND2-equivalent area model and unit gate delays (XOR counted double),
+//! which is what "gate count" means in the paper's reference [1].
+
+/// Index of a node in the netlist.
+pub type NodeId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// primary input `k`
+    Input(u16),
+    Const(bool),
+    Not(NodeId),
+    And(NodeId, NodeId),
+    Or(NodeId, NodeId),
+    Xor(NodeId, NodeId),
+}
+
+/// NAND2-equivalent areas (typical standard-cell figures).
+const AREA_NOT: f64 = 0.5;
+const AREA_AND: f64 = 1.5;
+const AREA_OR: f64 = 1.5;
+const AREA_XOR: f64 = 2.5;
+
+/// Unit delays.
+const DELAY_NOT: f64 = 0.5;
+const DELAY_AND: f64 = 1.0;
+const DELAY_OR: f64 = 1.0;
+const DELAY_XOR: f64 = 2.0;
+
+/// A combinational netlist under construction / analysis.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    gates: Vec<Gate>,
+    depth: Vec<f64>,
+    pub outputs: Vec<NodeId>,
+    n_inputs: u16,
+}
+
+/// Aggregate cost numbers for a finished netlist.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostSummary {
+    /// number of logic gates (excluding inputs/constants)
+    pub gate_count: u64,
+    /// NAND2-equivalent area
+    pub area: f64,
+    /// critical path in unit gate delays
+    pub critical_path: f64,
+    /// mean toggles per gate per random input pair — switching power proxy
+    pub switching: f64,
+    pub and_gates: u64,
+    pub xor_gates: u64,
+    pub or_gates: u64,
+    pub not_gates: u64,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, g: Gate, d: f64) -> NodeId {
+        let id = self.gates.len() as NodeId;
+        self.gates.push(g);
+        self.depth.push(d);
+        id
+    }
+
+    fn depth_of(&self, n: NodeId) -> f64 {
+        self.depth[n as usize]
+    }
+
+    /// Add a primary input.
+    pub fn input(&mut self) -> NodeId {
+        let k = self.n_inputs;
+        self.n_inputs += 1;
+        self.push(Gate::Input(k), 0.0)
+    }
+
+    /// Add `n` primary inputs (LSB first).
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.push(Gate::Const(v), 0.0)
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        let d = self.depth_of(a) + DELAY_NOT;
+        self.push(Gate::Not(a), d)
+    }
+
+    pub fn and(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let d = self.depth_of(a).max(self.depth_of(b)) + DELAY_AND;
+        self.push(Gate::And(a, b), d)
+    }
+
+    pub fn or(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let d = self.depth_of(a).max(self.depth_of(b)) + DELAY_OR;
+        self.push(Gate::Or(a, b), d)
+    }
+
+    pub fn xor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let d = self.depth_of(a).max(self.depth_of(b)) + DELAY_XOR;
+        self.push(Gate::Xor(a, b), d)
+    }
+
+    /// Half adder → (sum, carry).
+    pub fn half_adder(&mut self, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Full adder → (sum, carry).
+    pub fn full_adder(&mut self, a: NodeId, b: NodeId, cin: NodeId) -> (NodeId, NodeId) {
+        let s1 = self.xor(a, b);
+        let sum = self.xor(s1, cin);
+        let c1 = self.and(a, b);
+        let c2 = self.and(s1, cin);
+        let carry = self.or(c1, c2);
+        (sum, carry)
+    }
+
+    /// Ripple-carry adder over two equal-width vectors (LSB first);
+    /// returns `width+1` sum bits.
+    pub fn ripple_add(&mut self, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry: Option<NodeId> = None;
+        for (&x, &y) in a.iter().zip(b) {
+            let (s, c) = match carry {
+                None => self.half_adder(x, y),
+                Some(cin) => self.full_adder(x, y, cin),
+            };
+            out.push(s);
+            carry = Some(c);
+        }
+        out.push(carry.unwrap());
+        out
+    }
+
+    /// Carry-save reduction of partial-product columns to ≤2 rows, then a
+    /// final ripple add — the Wallace/Dadda-style reducer both the
+    /// multiplier and squarer share. `columns[w]` lists the bits of weight
+    /// `w` (LSB first). Returns the binary sum (LSB first).
+    pub fn reduce_columns(&mut self, mut columns: Vec<Vec<NodeId>>) -> Vec<NodeId> {
+        loop {
+            let max_h = columns.iter().map(Vec::len).max().unwrap_or(0);
+            if max_h <= 2 {
+                break;
+            }
+            let mut next: Vec<Vec<NodeId>> = vec![Vec::new(); columns.len() + 1];
+            for (w, col) in columns.iter().enumerate() {
+                let mut i = 0;
+                while col.len() - i >= 3 {
+                    let (s, c) = self.full_adder(col[i], col[i + 1], col[i + 2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    i += 3;
+                }
+                if col.len() - i == 2 {
+                    let (s, c) = self.half_adder(col[i], col[i + 1]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                } else if col.len() - i == 1 {
+                    next[w].push(col[i]);
+                }
+            }
+            while next.last().is_some_and(Vec::is_empty) {
+                next.pop();
+            }
+            columns = next;
+        }
+        // final 2-row add (ripple; a CPA in silicon)
+        let width = columns.len();
+        let zero = self.constant(false);
+        let mut row_a = Vec::with_capacity(width);
+        let mut row_b = Vec::with_capacity(width);
+        for col in &columns {
+            row_a.push(*col.first().unwrap_or(&zero));
+            row_b.push(*col.get(1).unwrap_or(&zero));
+        }
+        self.ripple_add(&row_a, &row_b)
+    }
+
+    /// Evaluate the netlist for the given input bits.
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs as usize, "input arity");
+        let mut vals = vec![false; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            vals[i] = match *g {
+                Gate::Input(k) => inputs[k as usize],
+                Gate::Const(v) => v,
+                Gate::Not(a) => !vals[a as usize],
+                Gate::And(a, b) => vals[a as usize] & vals[b as usize],
+                Gate::Or(a, b) => vals[a as usize] | vals[b as usize],
+                Gate::Xor(a, b) => vals[a as usize] ^ vals[b as usize],
+            };
+        }
+        self.outputs.iter().map(|&o| vals[o as usize]).collect()
+    }
+
+    /// Evaluate with integer input/output packing (LSB first).
+    pub fn eval_u64(&self, words: &[(u64, u32)]) -> u64 {
+        let mut bits = Vec::new();
+        for &(w, n) in words {
+            for i in 0..n {
+                bits.push((w >> i) & 1 == 1);
+            }
+        }
+        let out = self.eval(&bits);
+        out.iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &b)| acc | ((b as u64) << i))
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs as usize
+    }
+
+    /// Static cost summary plus a Monte-Carlo switching estimate
+    /// (`samples` random consecutive input pairs).
+    pub fn cost(&self, samples: usize, seed: u64) -> CostSummary {
+        let (mut and_g, mut or_g, mut xor_g, mut not_g) = (0u64, 0u64, 0u64, 0u64);
+        let mut area = 0.0;
+        for g in &self.gates {
+            match g {
+                Gate::And(..) => {
+                    and_g += 1;
+                    area += AREA_AND;
+                }
+                Gate::Or(..) => {
+                    or_g += 1;
+                    area += AREA_OR;
+                }
+                Gate::Xor(..) => {
+                    xor_g += 1;
+                    area += AREA_XOR;
+                }
+                Gate::Not(_) => {
+                    not_g += 1;
+                    area += AREA_NOT;
+                }
+                Gate::Input(_) | Gate::Const(_) => {}
+            }
+        }
+        let critical_path = self
+            .outputs
+            .iter()
+            .map(|&o| self.depth[o as usize])
+            .fold(0.0, f64::max);
+
+        // switching proxy: expected toggles per random input transition
+        let mut rng = crate::testkit::Rng::new(seed);
+        let mut toggles = 0u64;
+        let gate_count = and_g + or_g + xor_g + not_g;
+        if samples > 0 && gate_count > 0 {
+            let n_in = self.n_inputs as usize;
+            let mut prev = self.eval_all(&random_bits(&mut rng, n_in));
+            for _ in 0..samples {
+                let cur = self.eval_all(&random_bits(&mut rng, n_in));
+                toggles += prev
+                    .iter()
+                    .zip(&cur)
+                    .filter(|(a, b)| a != b)
+                    .count() as u64;
+                prev = cur;
+            }
+        }
+        let switching = if samples > 0 && gate_count > 0 {
+            toggles as f64 / samples as f64 / gate_count as f64
+        } else {
+            0.0
+        };
+
+        CostSummary {
+            gate_count,
+            area,
+            critical_path,
+            switching,
+            and_gates: and_g,
+            xor_gates: xor_g,
+            or_gates: or_g,
+            not_gates: not_g,
+        }
+    }
+
+    fn eval_all(&self, inputs: &[bool]) -> Vec<bool> {
+        let mut vals = vec![false; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            vals[i] = match *g {
+                Gate::Input(k) => inputs[k as usize],
+                Gate::Const(v) => v,
+                Gate::Not(a) => !vals[a as usize],
+                Gate::And(a, b) => vals[a as usize] & vals[b as usize],
+                Gate::Or(a, b) => vals[a as usize] | vals[b as usize],
+                Gate::Xor(a, b) => vals[a as usize] ^ vals[b as usize],
+            };
+        }
+        vals
+    }
+}
+
+fn random_bits(rng: &mut crate::testkit::Rng, n: usize) -> Vec<bool> {
+    (0..n).map(|_| rng.next_u64() & 1 == 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    let mut nl = Netlist::new();
+                    let (ia, ib, ic) = (nl.input(), nl.input(), nl.input());
+                    let (s, cy) = nl.full_adder(ia, ib, ic);
+                    nl.outputs = vec![s, cy];
+                    let out = nl.eval(&[a, b, c]);
+                    let total = a as u8 + b as u8 + c as u8;
+                    assert_eq!(out[0], total & 1 == 1);
+                    assert_eq!(out[1], total >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ripple_add_matches_u64() {
+        let mut rng = crate::testkit::Rng::new(50);
+        for _ in 0..200 {
+            let n = rng.usize_in(1, 16) as u32;
+            let a = rng.next_u64() & ((1 << n) - 1);
+            let b = rng.next_u64() & ((1 << n) - 1);
+            let mut nl = Netlist::new();
+            let ia = nl.inputs(n as usize);
+            let ib = nl.inputs(n as usize);
+            let sum = nl.ripple_add(&ia, &ib);
+            nl.outputs = sum;
+            assert_eq!(nl.eval_u64(&[(a, n), (b, n)]), a + b);
+        }
+    }
+
+    #[test]
+    fn reduce_columns_matches_sum() {
+        // columns encode 7 + 6·2 + 3·4 = 31
+        let mut nl = Netlist::new();
+        let one = nl.constant(true);
+        let cols = vec![vec![one; 7], vec![one; 6], vec![one; 3]];
+        let out = nl.reduce_columns(cols);
+        nl.outputs = out;
+        assert_eq!(nl.eval_u64(&[]), 7 + 12 + 12);
+    }
+
+    #[test]
+    fn cost_counts_gates() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let y = nl.and(a, b);
+        let z = nl.or(x, y);
+        nl.outputs = vec![z];
+        let c = nl.cost(0, 0);
+        assert_eq!(c.gate_count, 3);
+        assert_eq!((c.and_gates, c.or_gates, c.xor_gates), (1, 1, 1));
+        assert!((c.area - (1.5 + 1.5 + 2.5)).abs() < 1e-12);
+        assert!((c.critical_path - 3.0).abs() < 1e-12); // xor(2) + or(1)
+    }
+
+    #[test]
+    fn switching_nonzero_for_active_logic() {
+        let mut nl = Netlist::new();
+        let a = nl.inputs(8);
+        let b = nl.inputs(8);
+        let s = nl.ripple_add(&a, &b);
+        nl.outputs = s;
+        let c = nl.cost(200, 9);
+        assert!(c.switching > 0.05 && c.switching < 1.0, "{}", c.switching);
+    }
+}

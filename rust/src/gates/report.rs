@@ -1,0 +1,157 @@
+//! Report generator for the gate-level experiments (E4, F9, F12).
+
+use super::blocks::{
+    complex_mult_3m_block, complex_mult_4m_block, cpm3_block, cpm_block, mac_block,
+    pmac_block,
+};
+use super::multiplier::{array_multiplier, csa_multiplier};
+use super::squarer::{folded_squarer, folded_squarer_opt};
+
+/// One row of the E4 table: multiplier vs squarer at width n.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreRow {
+    pub n: usize,
+    pub mult_gates: u64,
+    pub mult_area: f64,
+    pub mult_delay: f64,
+    pub sq_gates: u64,
+    pub sq_area: f64,
+    pub sq_delay: f64,
+    /// squarer area / multiplier area — the paper's ≈0.5 claim
+    pub area_ratio: f64,
+    pub mult_switching: f64,
+    pub sq_switching: f64,
+}
+
+/// Generate the E4 core comparison for the given operand widths.
+/// `switching_samples > 0` adds the Monte-Carlo power proxy (slower).
+pub fn core_comparison(widths: &[usize], switching_samples: usize) -> Vec<CoreRow> {
+    widths
+        .iter()
+        .map(|&n| {
+            let m = csa_multiplier(n).cost(switching_samples, 0xE4);
+            let s = folded_squarer(n).cost(switching_samples, 0xE4);
+            CoreRow {
+                n,
+                mult_gates: m.gate_count,
+                mult_area: m.area,
+                mult_delay: m.critical_path,
+                sq_gates: s.gate_count,
+                sq_area: s.area,
+                sq_delay: s.critical_path,
+                area_ratio: s.area / m.area,
+                mult_switching: m.switching,
+                sq_switching: s.switching,
+            }
+        })
+        .collect()
+}
+
+/// Ablation row: reduction/architecture variants at width n.
+#[derive(Debug, Clone, Copy)]
+pub struct AblationRow {
+    pub name: &'static str,
+    pub n: usize,
+    pub gates: u64,
+    pub area: f64,
+    pub delay: f64,
+}
+
+/// E4 ablation: array vs CSA multiplier, folded vs merged squarer.
+pub fn ablation(widths: &[usize]) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for &n in widths {
+        for (name, nl) in [
+            ("mult/array", array_multiplier(n)),
+            ("mult/csa", csa_multiplier(n)),
+            ("square/folded", folded_squarer(n)),
+            ("square/folded+merge", folded_squarer_opt(n)),
+        ] {
+            let c = nl.cost(0, 0);
+            rows.push(AblationRow { name, n, gates: c.gate_count, area: c.area, delay: c.critical_path });
+        }
+    }
+    rows
+}
+
+/// One row of the F9/F12 block table.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockRow {
+    pub name: &'static str,
+    pub n: usize,
+    pub comb_area: f64,
+    pub reg_area: f64,
+    pub total_area: f64,
+    pub critical_path: f64,
+    /// area relative to the baseline block of its group
+    pub rel_area: f64,
+}
+
+/// F1 (MAC vs PMAC) and F9/F12 (complex multiplier vs CPM vs CPM3) tables.
+pub fn block_comparison(widths: &[usize], n_terms: u64) -> Vec<BlockRow> {
+    let mut rows = Vec::new();
+    for &n in widths {
+        let mac = mac_block(n, n_terms);
+        let pmac = pmac_block(n, n_terms);
+        let base = mac.total_area();
+        for b in [mac, pmac] {
+            rows.push(BlockRow {
+                name: b.name,
+                n,
+                comb_area: b.comb_area,
+                reg_area: b.reg_area,
+                total_area: b.total_area(),
+                critical_path: b.critical_path,
+                rel_area: b.total_area() / base,
+            });
+        }
+        let m4 = complex_mult_4m_block(n);
+        let base_c = m4.total_area();
+        for b in [m4, complex_mult_3m_block(n), cpm_block(n), cpm3_block(n)] {
+            rows.push(BlockRow {
+                name: b.name,
+                n,
+                comb_area: b.comb_area,
+                reg_area: b.reg_area,
+                total_area: b.total_area(),
+                critical_path: b.critical_path,
+                rel_area: b.total_area() / base_c,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_ratio_near_half() {
+        let rows = core_comparison(&[8, 12, 16], 0);
+        for r in &rows {
+            assert!(r.area_ratio > 0.35 && r.area_ratio < 0.65,
+                    "n={} ratio={}", r.n, r.area_ratio);
+        }
+        // ratio should not *grow* with width
+        assert!(rows.last().unwrap().area_ratio <= rows[0].area_ratio + 0.05);
+    }
+
+    #[test]
+    fn ablation_has_all_variants() {
+        let rows = ablation(&[8]);
+        assert_eq!(rows.len(), 4);
+        let csa = rows.iter().find(|r| r.name == "mult/csa").unwrap();
+        let arr = rows.iter().find(|r| r.name == "mult/array").unwrap();
+        assert!(csa.delay < arr.delay);
+    }
+
+    #[test]
+    fn block_rows_have_sane_relatives() {
+        let rows = block_comparison(&[12], 256);
+        let pmac = rows.iter().find(|r| r.name.starts_with("PMAC")).unwrap();
+        assert!(pmac.rel_area < 1.0, "PMAC rel={}", pmac.rel_area);
+        let cpm3 = rows.iter().find(|r| r.name.starts_with("CPM3")).unwrap();
+        assert!(cpm3.rel_area < 1.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # fairsquare
+//!
+//! Production reproduction of *"Fair and Square: Replacing One Real
+//! Multiplication with a Single Square and One Complex Multiplication with
+//! Three Squares When Performing Matrix Multiplication and Convolutions"*
+//! (V. Liguori, CS.AR 2026).
+//!
+//! The paper's claim: matrix multiplication, convolutions and linear
+//! transforms can be computed with (asymptotically) **one squaring
+//! operation per real multiplication** (eq. 4–6) and **three squares per
+//! complex multiplication** (eq. 31–36); since an n-bit squarer costs about
+//! half the gates of an n×n multiplier, datapaths built this way save
+//! large amounts of silicon.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`arith`]       | scalar square-trick primitives (eq. 1/2, CPM, CPM3), fixed-point bit budgets |
+//! | [`linalg`]      | op-counted reference stack: every operation in direct and square-based form |
+//! | [`gates`]       | gate-level cost models: array multiplier vs folded squarer, MAC/PMAC/CPM blocks |
+//! | [`sim`]         | cycle-accurate simulators of the paper's Fig. 1–14 architectures |
+//! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts |
+//! | [`coordinator`] | thread-based batching inference server over the runtime |
+//! | [`config`]      | configuration types + first-party JSON |
+//! | [`testkit`]     | deterministic PRNG + property-testing runner (offline substitute for proptest) |
+//! | [`benchkit`]    | measurement harness + table printer (offline substitute for criterion) |
+//!
+//! The three-layer architecture (rust coordinator / JAX model / Pallas
+//! kernels, AOT via HLO text) is described in `DESIGN.md`; experiment
+//! mapping in `EXPERIMENTS.md`.
+
+pub mod arith;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod gates;
+pub mod linalg;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;

@@ -1,0 +1,275 @@
+//! Complex matrix multiplication: direct (eq. 15/16), 3-mult (eq. 31),
+//! CPM 4-square (eq. 17–19) and CPM3 3-square (eq. 32–35) — all with exact
+//! operation ledgers for the eq. (20)/(36) ratio benches.
+
+use crate::arith::complex::{cmul_3mult, cmul_direct, Complex};
+
+use super::counts::OpCounts;
+use super::matrix::Matrix;
+
+pub type CMatrix = Matrix<Complex<i64>>;
+
+/// Direct complex matmul (eq. 15/16): M·N·P complex mults = 4·M·N·P real
+/// mults. The ledger counts *real* operations.
+pub fn cmatmul_direct(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
+    assert_eq!(x.cols, y.rows);
+    let mut ops = OpCounts::ZERO;
+    let mut z = CMatrix::zeros(x.rows, y.cols);
+    for h in 0..x.rows {
+        for k in 0..y.cols {
+            let mut acc = Complex::ZERO;
+            for i in 0..x.cols {
+                acc += cmul_direct(x.get(h, i), y.get(i, k));
+                ops.mults += 4;
+                ops.add_n(2 + 2); // product combine + accumulate
+            }
+            z.set(h, k, acc);
+        }
+    }
+    (z, ops)
+}
+
+/// 3-real-mult complex matmul baseline (eq. 31, Karatsuba-style).
+pub fn cmatmul_3mult(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
+    assert_eq!(x.cols, y.rows);
+    let mut ops = OpCounts::ZERO;
+    let mut z = CMatrix::zeros(x.rows, y.cols);
+    for h in 0..x.rows {
+        for k in 0..y.cols {
+            let mut acc = Complex::ZERO;
+            for i in 0..x.cols {
+                acc += cmul_3mult(x.get(h, i), y.get(i, k));
+                ops.mults += 3;
+                ops.add_n(3 + 2 + 2);
+            }
+            z.set(h, k, acc);
+        }
+    }
+    (z, ops)
+}
+
+/// CPM complex matmul (eq. 17–19): 4 squares per complex product plus the
+/// reusable `Sx_h`/`Sy_k` corrections (2·M·N + 2·N·P squares).
+pub fn cmatmul_cpm(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
+    assert_eq!(x.cols, y.rows);
+    let mut ops = OpCounts::ZERO;
+
+    // Sx_h = −Σ_i (a² + b²)  — 2 squares per element of X
+    let sx: Vec<i64> = (0..x.rows)
+        .map(|h| {
+            -x.row(h)
+                .iter()
+                .map(|v| {
+                    ops.squares += 2;
+                    ops.add_n(2);
+                    v.re * v.re + v.im * v.im
+                })
+                .sum::<i64>()
+        })
+        .collect();
+    // Sy_k = −Σ_i (c² + s²)
+    let sy: Vec<i64> = (0..y.cols)
+        .map(|k| {
+            -(0..y.rows)
+                .map(|i| {
+                    ops.squares += 2;
+                    ops.add_n(2);
+                    let v = y.get(i, k);
+                    v.re * v.re + v.im * v.im
+                })
+                .sum::<i64>()
+        })
+        .collect();
+
+    let mut z = CMatrix::zeros(x.rows, y.cols);
+    for h in 0..x.rows {
+        for k in 0..y.cols {
+            let corr = sx[h] + sy[k];
+            ops.add();
+            let (mut re, mut im) = (corr, corr);
+            for i in 0..x.cols {
+                let xv = x.get(h, i);
+                let yv = y.get(i, k);
+                let t1 = xv.re + yv.re; // (a+c)
+                let t2 = xv.im - yv.im; // (b−s)
+                let t3 = xv.im + yv.re; // (b+c)
+                let t4 = xv.re + yv.im; // (a+s)
+                re += t1 * t1 + t2 * t2;
+                im += t3 * t3 + t4 * t4;
+                ops.squares += 4;
+                ops.add_n(4 + 4);
+            }
+            ops.shifts += 2;
+            z.set(h, k, Complex::new(re >> 1, im >> 1));
+        }
+    }
+    (z, ops)
+}
+
+/// CPM3 complex matmul (eq. 32–35): 3 squares per complex product — the
+/// `(c+a+b)²` term is computed once and feeds both accumulators — plus the
+/// reusable `Sab/Sba/Scs/Ssc` corrections (3·M·N + 3·N·P squares).
+pub fn cmatmul_cpm3(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
+    assert_eq!(x.cols, y.rows);
+    let mut ops = OpCounts::ZERO;
+
+    // eq. (33)/(35) row corrections: (a+b)², a², b² → 3 squares per element
+    let mut sab = vec![0i64; x.rows];
+    let mut sba = vec![0i64; x.rows];
+    for h in 0..x.rows {
+        for v in x.row(h) {
+            let ab = v.re + v.im;
+            let ab2 = ab * ab;
+            sab[h] += -ab2 + v.im * v.im;
+            sba[h] += -ab2 - v.re * v.re;
+            ops.squares += 3;
+            ops.add_n(5);
+        }
+    }
+    // eq. (33)/(35) column corrections: c², (c+s)², (s−c)² → 3 squares
+    let mut scs = vec![0i64; y.cols];
+    let mut ssc = vec![0i64; y.cols];
+    for k in 0..y.cols {
+        for i in 0..y.rows {
+            let v = y.get(i, k);
+            let c2 = v.re * v.re;
+            let cs = v.re + v.im;
+            let sc = v.im - v.re;
+            scs[k] += -c2 + cs * cs;
+            ssc[k] += -c2 - sc * sc;
+            ops.squares += 3;
+            ops.add_n(6);
+        }
+    }
+
+    let mut z = CMatrix::zeros(x.rows, y.cols);
+    for h in 0..x.rows {
+        for k in 0..y.cols {
+            let mut re = sab[h] + scs[k];
+            let mut im = sba[h] + ssc[k];
+            ops.add_n(2);
+            for i in 0..x.cols {
+                let xv = x.get(h, i);
+                let yv = y.get(i, k);
+                let t = yv.re + xv.re + xv.im; // (c+a+b) — shared
+                let t = t * t;
+                let u = xv.im + yv.re + yv.im; // (b+c+s)
+                let v = xv.re + yv.im - yv.re; // (a+s−c)
+                re += t - u * u;
+                im += t + v * v;
+                ops.squares += 3;
+                ops.add_n(6 + 2);
+            }
+            ops.shifts += 2;
+            z.set(h, k, Complex::new(re >> 1, im >> 1));
+        }
+    }
+    (z, ops)
+}
+
+/// Build a complex matrix from planar parts.
+pub fn from_planes(re: &Matrix<i64>, im: &Matrix<i64>) -> CMatrix {
+    assert_eq!((re.rows, re.cols), (im.rows, im.cols));
+    CMatrix::from_fn(re.rows, re.cols, |i, j| Complex::new(re.get(i, j), im.get(i, j)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn random_c(rng: &mut Rng, r: usize, c: usize, lim: i64) -> CMatrix {
+        CMatrix::from_fn(r, c, |_, _| {
+            Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim))
+        })
+    }
+
+    #[test]
+    fn all_four_agree() {
+        let mut rng = Rng::new(10);
+        for _ in 0..30 {
+            let (m, n, p) = (
+                rng.usize_in(1, 8),
+                rng.usize_in(1, 8),
+                rng.usize_in(1, 8),
+            );
+            let x = random_c(&mut rng, m, n, 500);
+            let y = random_c(&mut rng, n, p, 500);
+            let (d, _) = cmatmul_direct(&x, &y);
+            let (k3, _) = cmatmul_3mult(&x, &y);
+            let (c4, _) = cmatmul_cpm(&x, &y);
+            let (c3, _) = cmatmul_cpm3(&x, &y);
+            assert_eq!(d, k3);
+            assert_eq!(d, c4);
+            assert_eq!(d, c3);
+        }
+    }
+
+    #[test]
+    fn ledgers_match_paper() {
+        let mut rng = Rng::new(11);
+        for (m, n, p) in [(1usize, 1usize, 1usize), (4, 6, 3), (8, 8, 8)] {
+            let x = random_c(&mut rng, m, n, 100);
+            let y = random_c(&mut rng, n, p, 100);
+            let (_, d) = cmatmul_direct(&x, &y);
+            let (_, c4) = cmatmul_cpm(&x, &y);
+            let (_, c3) = cmatmul_cpm3(&x, &y);
+            let (mu, nu, pu) = (m as u64, n as u64, p as u64);
+            assert_eq!(d.mults, 4 * mu * nu * pu);
+            // §6: 4·MNP + 2·MN + 2·NP squares
+            assert_eq!(c4.squares, 4 * mu * nu * pu + 2 * mu * nu + 2 * nu * pu);
+            // §9: 3·MNP + 3·MN + 3·NP squares
+            assert_eq!(c3.squares, 3 * mu * nu * pu + 3 * mu * nu + 3 * nu * pu);
+            assert_eq!(c4.mults, 0);
+            assert_eq!(c3.mults, 0);
+        }
+    }
+
+    #[test]
+    fn eq20_eq36_ratios_measured() {
+        let mut rng = Rng::new(12);
+        for (m, n, p) in [(4usize, 8usize, 4usize), (16, 8, 16)] {
+            let x = random_c(&mut rng, m, n, 50);
+            let y = random_c(&mut rng, n, p, 50);
+            let (_, d) = cmatmul_direct(&x, &y);
+            let (_, c4) = cmatmul_cpm(&x, &y);
+            let (_, c3) = cmatmul_cpm3(&x, &y);
+            let cmults = (d.mults / 4).max(1); // complex mult count
+            let r4 = c4.squares as f64 / cmults as f64;
+            let r3 = c3.squares as f64 / cmults as f64;
+            let (mu, pu) = (m as u64, p as u64);
+            assert!((r4 - super::super::counts::eq20_ratio(mu, pu)).abs() < 1e-12);
+            assert!((r3 - super::super::counts::eq36_ratio(mu, pu)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unit_modulus_simplification() {
+        // §6: if Y's entries are unit complex numbers (±1, ±j), Sy_k = −N.
+        let mut rng = Rng::new(13);
+        let n = 8;
+        let units = [
+            Complex::new(1, 0),
+            Complex::new(-1, 0),
+            Complex::new(0, 1),
+            Complex::new(0, -1),
+        ];
+        let y = CMatrix::from_fn(n, 5, |_, _| *rng.choose(&units));
+        let sy: Vec<i64> = (0..y.cols)
+            .map(|k| -(0..y.rows).map(|i| {
+                let v = y.get(i, k);
+                v.re * v.re + v.im * v.im
+            }).sum::<i64>())
+            .collect();
+        assert!(sy.iter().all(|&v| v == -(n as i64)));
+    }
+
+    #[test]
+    fn from_planes_round_trip() {
+        let mut rng = Rng::new(14);
+        let re = Matrix::random(&mut rng, 3, 4, -9, 9);
+        let im = Matrix::random(&mut rng, 3, 4, -9, 9);
+        let c = from_planes(&re, &im);
+        assert_eq!(c.get(2, 3), Complex::new(re.get(2, 3), im.get(2, 3)));
+    }
+}

@@ -1,0 +1,374 @@
+//! Convolutions / correlations: direct (eq. 10/12) vs square-based
+//! (eq. 11/13–14), real and complex (eq. 27–30, 44–47), with ledgers.
+//!
+//! All functions compute *valid-mode correlation* (the paper does not
+//! distinguish convolution from correlation, §5).
+
+use crate::arith::complex::{cmul_direct, Complex};
+
+use super::counts::OpCounts;
+use super::matrix::Matrix;
+
+/// Direct 1-D correlation (eq. 10): y_k = Σ_i w_i·x_{i+k}.
+pub fn conv1d_direct(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
+    let n = w.len();
+    assert!(x.len() >= n, "signal shorter than kernel");
+    let mut ops = OpCounts::ZERO;
+    let y = (0..=x.len() - n)
+        .map(|k| {
+            (0..n)
+                .map(|i| {
+                    ops.mult();
+                    ops.add();
+                    w[i] * x[i + k]
+                })
+                .sum()
+        })
+        .collect();
+    (y, ops)
+}
+
+/// Square-based 1-D correlation (eq. 11, the Fig. 8 engine):
+/// `y_k = ½(Σ_i (w_i+x_{i+k})² − Σ_i x_{i+k}² + Sw)`.
+///
+/// The per-sample `x²` is computed **once** per input sample and shared by
+/// every window it participates in — the Fig. 8 dataflow — so the steady-
+/// state cost is N+1 squares per output against N multiplications.
+pub fn conv1d_square(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
+    let n = w.len();
+    assert!(x.len() >= n);
+    let mut ops = OpCounts::ZERO;
+
+    // Sw = −Σ w² — pre-computable (constant kernel), still ledgered
+    let sw: i64 = -w
+        .iter()
+        .map(|&v| {
+            ops.square();
+            ops.add();
+            v * v
+        })
+        .sum::<i64>();
+
+    // per-sample squares, one each (shared across windows)
+    let x2: Vec<i64> = x
+        .iter()
+        .map(|&v| {
+            ops.square();
+            v * v
+        })
+        .collect();
+
+    let y = (0..=x.len() - n)
+        .map(|k| {
+            let mut acc = sw;
+            ops.add();
+            for i in 0..n {
+                let s = w[i] + x[i + k];
+                acc += s * s - x2[i + k];
+                ops.square();
+                ops.add_n(3);
+            }
+            ops.shift();
+            acc >> 1
+        })
+        .collect();
+    (y, ops)
+}
+
+/// Direct 2-D valid correlation (eq. 12).
+pub fn conv2d_direct(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+    let (kh, kw) = (w.rows, w.cols);
+    assert!(x.rows >= kh && x.cols >= kw);
+    let mut ops = OpCounts::ZERO;
+    let out = Matrix::from_fn(x.rows - kh + 1, x.cols - kw + 1, |h, k| {
+        let mut acc = 0;
+        for i in 0..kh {
+            for j in 0..kw {
+                acc += w.get(i, j) * x.get(h + i, k + j);
+                ops.mult();
+                ops.add();
+            }
+        }
+        acc
+    });
+    (out, ops)
+}
+
+/// Square-based 2-D correlation (eq. 13/14): per-sample x² shared across
+/// every kernel placement covering it (§5.1).
+pub fn conv2d_square(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+    let (kh, kw) = (w.rows, w.cols);
+    assert!(x.rows >= kh && x.cols >= kw);
+    let mut ops = OpCounts::ZERO;
+
+    let sw: i64 = -(0..kh)
+        .flat_map(|i| (0..kw).map(move |j| (i, j)))
+        .map(|(i, j)| {
+            ops.square();
+            ops.add();
+            let v = w.get(i, j);
+            v * v
+        })
+        .sum::<i64>();
+
+    // one square per input sample, shared (§5.1)
+    let mut x2 = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        for j in 0..x.cols {
+            let v = x.get(i, j);
+            x2.set(i, j, v * v);
+            ops.square();
+        }
+    }
+
+    let out = Matrix::from_fn(x.rows - kh + 1, x.cols - kw + 1, |h, k| {
+        let mut acc = sw;
+        ops.add();
+        for i in 0..kh {
+            for j in 0..kw {
+                let s = w.get(i, j) + x.get(h + i, k + j);
+                acc += s * s - x2.get(h + i, k + j);
+                ops.square();
+                ops.add_n(3);
+            }
+        }
+        ops.shift();
+        acc >> 1
+    });
+    (out, ops)
+}
+
+/// Direct complex correlation (eq. 27).
+pub fn cconv1d_direct(
+    w: &[Complex<i64>],
+    x: &[Complex<i64>],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    let n = w.len();
+    assert!(x.len() >= n);
+    let mut ops = OpCounts::ZERO;
+    let y = (0..=x.len() - n)
+        .map(|k| {
+            let mut acc = Complex::ZERO;
+            for i in 0..n {
+                acc += cmul_direct(w[i], x[i + k]);
+                ops.mults += 4;
+                ops.add_n(4);
+            }
+            acc
+        })
+        .collect();
+    (y, ops)
+}
+
+/// Complex correlation with the 4-square CPM (eq. 28/29, Fig. 11).
+pub fn cconv1d_cpm(
+    w: &[Complex<i64>],
+    x: &[Complex<i64>],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    let n = w.len();
+    assert!(x.len() >= n);
+    let mut ops = OpCounts::ZERO;
+
+    // Sw = −Σ (c² + s²)  (eq. 30)
+    let sw: i64 = -w
+        .iter()
+        .map(|v| {
+            ops.squares += 2;
+            ops.add_n(2);
+            v.re * v.re + v.im * v.im
+        })
+        .sum::<i64>();
+
+    // per-sample energy x²+y², one pair of squares per sample, shared
+    let e: Vec<i64> = x
+        .iter()
+        .map(|v| {
+            ops.squares += 2;
+            ops.add();
+            v.re * v.re + v.im * v.im
+        })
+        .collect();
+
+    let y = (0..=x.len() - n)
+        .map(|k| {
+            let (mut re, mut im) = (sw, sw);
+            ops.add_n(2);
+            for i in 0..n {
+                let wv = w[i];
+                let xv = x[i + k];
+                let t1 = wv.re + xv.re;
+                let t2 = wv.im - xv.im;
+                let t3 = wv.im + xv.re;
+                let t4 = wv.re + xv.im;
+                re += t1 * t1 + t2 * t2 - e[i + k];
+                im += t3 * t3 + t4 * t4 - e[i + k];
+                ops.squares += 4;
+                ops.add_n(10);
+            }
+            ops.shifts += 2;
+            Complex::new(re >> 1, im >> 1)
+        })
+        .collect();
+    (y, ops)
+}
+
+/// Complex correlation with the 3-square CPM3 (eq. 45/46, Fig. 14).
+pub fn cconv1d_cpm3(
+    w: &[Complex<i64>],
+    x: &[Complex<i64>],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    let n = w.len();
+    assert!(x.len() >= n);
+    let mut ops = OpCounts::ZERO;
+
+    // eq. (47): Sw = Σ(−c² + (c+s)²) + j·Σ(−c² − (s−c)²)
+    let (mut sw_re, mut sw_im) = (0i64, 0i64);
+    for v in w {
+        let c2 = v.re * v.re;
+        let cs = v.re + v.im;
+        let sc = v.im - v.re;
+        sw_re += -c2 + cs * cs;
+        sw_im += -c2 - sc * sc;
+        ops.squares += 3;
+        ops.add_n(6);
+    }
+
+    // common per-sample terms (−(x+y)²+y²) and (−(x+y)²−x²): 3 squares per
+    // sample — (x+y)², x², y² — shared across windows
+    let mut com_re = Vec::with_capacity(x.len());
+    let mut com_im = Vec::with_capacity(x.len());
+    for v in x {
+        let xy = v.re + v.im;
+        let xy2 = xy * xy;
+        com_re.push(-xy2 + v.im * v.im);
+        com_im.push(-xy2 - v.re * v.re);
+        ops.squares += 3;
+        ops.add_n(5);
+    }
+
+    let y = (0..=x.len() - n)
+        .map(|k| {
+            let (mut re, mut im) = (sw_re, sw_im);
+            for i in 0..n {
+                let wv = w[i];
+                let xv = x[i + k];
+                let t = wv.re + xv.re + xv.im; // c + x + y — shared square
+                let t = t * t;
+                let u = xv.im + wv.re + wv.im; // y + c + s
+                let v2 = xv.re + wv.im - wv.re; // x + s − c
+                re += t - u * u + com_re[i + k];
+                im += t + v2 * v2 + com_im[i + k];
+                ops.squares += 3;
+                ops.add_n(10);
+            }
+            ops.shifts += 2;
+            Complex::new(re >> 1, im >> 1)
+        })
+        .collect();
+    (y, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn conv1d_square_exact() {
+        forall(
+            20,
+            80,
+            |rng, size| {
+                let n = rng.usize_in(1, (size + 1).min(12));
+                let l = n + rng.usize_in(0, 40);
+                (rng.vec_i64(n, -500, 500), rng.vec_i64(l, -500, 500))
+            },
+            |(w, x)| {
+                let (d, _) = conv1d_direct(w, x);
+                let (s, _) = conv1d_square(w, x);
+                if d == s { Ok(()) } else { Err(format!("n={} l={}", w.len(), x.len())) }
+            },
+        );
+    }
+
+    #[test]
+    fn conv1d_ledger_steady_state() {
+        // N-tap kernel over L samples: direct = N·K mults; square =
+        // K·N window squares + L sample squares + N kernel squares
+        let mut rng = Rng::new(21);
+        let (n, l) = (16usize, 128usize);
+        let w = rng.vec_i64(n, -100, 100);
+        let x = rng.vec_i64(l, -100, 100);
+        let k = (l - n + 1) as u64;
+        let (_, d) = conv1d_direct(&w, &x);
+        let (_, s) = conv1d_square(&w, &x);
+        assert_eq!(d.mults, n as u64 * k);
+        assert_eq!(s.mults, 0);
+        assert_eq!(s.squares, n as u64 * k + l as u64 + n as u64);
+        // per-output steady state → N + 1 squares vs N mults (§5)
+        let per_out = s.squares as f64 / k as f64;
+        assert!(per_out < (n as f64 + 1.0) + 0.3, "per_out={per_out}");
+    }
+
+    #[test]
+    fn conv2d_square_exact() {
+        let mut rng = Rng::new(22);
+        for _ in 0..20 {
+            let (kh, kw) = (rng.usize_in(1, 5), rng.usize_in(1, 5));
+            let (h, w_) = (kh + rng.usize_in(0, 8), kw + rng.usize_in(0, 8));
+            let ker = Matrix::random(&mut rng, kh, kw, -200, 200);
+            let x = Matrix::random(&mut rng, h, w_, -200, 200);
+            let (d, _) = conv2d_direct(&ker, &x);
+            let (s, _) = conv2d_square(&ker, &x);
+            assert_eq!(d, s);
+        }
+    }
+
+    #[test]
+    fn conv2d_ledger() {
+        let mut rng = Rng::new(23);
+        let ker = Matrix::random(&mut rng, 3, 3, -50, 50);
+        let x = Matrix::random(&mut rng, 10, 10, -50, 50);
+        let (_, d) = conv2d_direct(&ker, &x);
+        let (_, s) = conv2d_square(&ker, &x);
+        assert_eq!(d.mults, 9 * 8 * 8);
+        assert_eq!(s.squares, 9 * 8 * 8 + 100 + 9); // window + shared x² + Sw
+    }
+
+    fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {
+        (0..n)
+            .map(|_| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+            .collect()
+    }
+
+    #[test]
+    fn complex_convs_exact() {
+        let mut rng = Rng::new(24);
+        for _ in 0..30 {
+            let n = rng.usize_in(1, 10);
+            let l = n + rng.usize_in(0, 30);
+            let w = rand_cvec(&mut rng, n, 300);
+            let x = rand_cvec(&mut rng, l, 300);
+            let (d, _) = cconv1d_direct(&w, &x);
+            let (c4, _) = cconv1d_cpm(&w, &x);
+            let (c3, _) = cconv1d_cpm3(&w, &x);
+            assert_eq!(d, c4);
+            assert_eq!(d, c3);
+        }
+    }
+
+    #[test]
+    fn complex_conv_ledgers() {
+        let mut rng = Rng::new(25);
+        let (n, l) = (8usize, 64usize);
+        let w = rand_cvec(&mut rng, n, 100);
+        let x = rand_cvec(&mut rng, l, 100);
+        let k = (l - n + 1) as u64;
+        let (_, c4) = cconv1d_cpm(&w, &x);
+        let (_, c3) = cconv1d_cpm3(&w, &x);
+        // CPM: 4 per tap·output + 2 per sample + 2 per tap
+        assert_eq!(c4.squares, 4 * n as u64 * k + 2 * l as u64 + 2 * n as u64);
+        // CPM3: 3 per tap·output + 3 per sample + 3 per tap
+        assert_eq!(c3.squares, 3 * n as u64 * k + 3 * l as u64 + 3 * n as u64);
+    }
+}

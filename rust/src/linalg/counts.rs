@@ -1,0 +1,144 @@
+//! The operation ledger behind the paper's ratio claims.
+//!
+//! Eq. (6), (20) and (36) compare *numbers of squaring operations* against
+//! *numbers of multiplications*. [`OpCounts`] is an exact ledger every
+//! reference implementation fills in as it runs, so the benches measure the
+//! ratios rather than re-deriving them.
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// Exact operation counts for one computation.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    /// general multiplications a·b between distinct data operands
+    pub mults: u64,
+    /// squaring operations x²
+    pub squares: u64,
+    /// additions/subtractions
+    pub adds: u64,
+    /// shifts (the final ÷2 recovery and any scaling)
+    pub shifts: u64,
+}
+
+impl OpCounts {
+    pub const ZERO: Self = Self { mults: 0, squares: 0, adds: 0, shifts: 0 };
+
+    pub fn mult(&mut self) {
+        self.mults += 1;
+    }
+
+    pub fn square(&mut self) {
+        self.squares += 1;
+    }
+
+    pub fn add(&mut self) {
+        self.adds += 1;
+    }
+
+    pub fn shift(&mut self) {
+        self.shifts += 1;
+    }
+
+    pub fn add_n(&mut self, n: u64) {
+        self.adds += n;
+    }
+
+    /// squares-per-multiplication ratio vs a given direct-form ledger —
+    /// the quantity eq. (6)/(20)/(36) bound.
+    pub fn square_ratio_vs(&self, direct: &OpCounts) -> f64 {
+        assert_eq!(self.mults, 0, "square-based path performed a general mult");
+        self.squares as f64 / direct.mults.max(1) as f64
+    }
+
+    /// Gate-area-weighted cost in NAND2-equivalents given per-op costs.
+    /// Used by the E4/E6 roll-ups where a squarer ≈ half a multiplier.
+    pub fn weighted_cost(&self, mult_cost: f64, square_cost: f64, add_cost: f64) -> f64 {
+        self.mults as f64 * mult_cost
+            + self.squares as f64 * square_cost
+            + self.adds as f64 * add_cost
+    }
+}
+
+impl Add for OpCounts {
+    type Output = Self;
+    fn add(self, o: Self) -> Self {
+        Self {
+            mults: self.mults + o.mults,
+            squares: self.squares + o.squares,
+            adds: self.adds + o.adds,
+            shifts: self.shifts + o.shifts,
+        }
+    }
+}
+
+impl AddAssign for OpCounts {
+    fn add_assign(&mut self, o: Self) {
+        *self = *self + o;
+    }
+}
+
+impl fmt::Display for OpCounts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "mults={} squares={} adds={} shifts={}",
+            self.mults, self.squares, self.adds, self.shifts
+        )
+    }
+}
+
+/// Analytic ratio of eq. (6): squares per mult for an (M,N)·(N,P) product.
+pub fn eq6_ratio(m: u64, p: u64) -> f64 {
+    1.0 + 1.0 / p as f64 + 1.0 / m as f64
+}
+
+/// Analytic ratio of eq. (20): 4-square CPM complex matmul.
+pub fn eq20_ratio(m: u64, p: u64) -> f64 {
+    4.0 + 2.0 / p as f64 + 2.0 / m as f64
+}
+
+/// Analytic ratio of eq. (36): 3-square CPM3 complex matmul.
+pub fn eq36_ratio(m: u64, p: u64) -> f64 {
+    3.0 + 3.0 / p as f64 + 3.0 / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_arithmetic() {
+        let mut a = OpCounts::ZERO;
+        a.mult();
+        a.add_n(3);
+        let mut b = OpCounts::ZERO;
+        b.square();
+        b.shift();
+        let c = a + b;
+        assert_eq!(c, OpCounts { mults: 1, squares: 1, adds: 3, shifts: 1 });
+    }
+
+    #[test]
+    fn ratios_tend_to_limits() {
+        assert!((eq6_ratio(1, 1) - 3.0).abs() < 1e-12);
+        assert!((eq6_ratio(1 << 20, 1 << 20) - 1.0) < 1e-5);
+        assert!((eq20_ratio(1 << 20, 1 << 20) - 4.0) < 1e-5);
+        assert!((eq36_ratio(1 << 20, 1 << 20) - 3.0) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "general mult")]
+    fn ratio_rejects_contaminated_ledger() {
+        let mut sq = OpCounts::ZERO;
+        sq.mult();
+        let direct = OpCounts { mults: 10, ..OpCounts::ZERO };
+        let _ = sq.square_ratio_vs(&direct);
+    }
+
+    #[test]
+    fn weighted_cost_matches_hand_calc() {
+        let c = OpCounts { mults: 2, squares: 4, adds: 10, shifts: 0 };
+        assert_eq!(c.weighted_cost(100.0, 50.0, 10.0), 200.0 + 200.0 + 100.0);
+    }
+}

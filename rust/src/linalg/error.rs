@@ -1,0 +1,168 @@
+//! Numerical-error characterisation of the square trick (experiment E5).
+//!
+//! The paper treats the rewrite as exact — true for integers, *not* for
+//! floating point: `½((a+b)² − a² − b²)` cancels catastrophically when
+//! `|ab| ≪ a² + b²`, and the accumulated `Sab + Sa + Sb` of eq. (4) sums
+//! large positive and negative parts whose difference is the (small)
+//! result. This module quantifies that against an f64 ground truth, because
+//! a downstream user deciding between fp32 direct and fp32 square-based
+//! matmul needs the honest number.
+
+use super::matmul::{matmul_direct_f64, matmul_square_f32, matmul_square_f64};
+use super::matrix::Matrix;
+use crate::testkit::Rng;
+
+/// Error statistics of one computation vs a reference.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ErrorStats {
+    pub max_abs: f64,
+    pub mean_abs: f64,
+    pub rel_fro: f64,
+}
+
+impl ErrorStats {
+    /// Compare `got` against `want` element-wise.
+    pub fn compare(got: &[f64], want: &[f64]) -> Self {
+        assert_eq!(got.len(), want.len());
+        assert!(!got.is_empty());
+        let mut max_abs = 0.0f64;
+        let mut sum_abs = 0.0f64;
+        let mut err_sq = 0.0f64;
+        let mut ref_sq = 0.0f64;
+        for (&g, &w) in got.iter().zip(want) {
+            let e = (g - w).abs();
+            max_abs = max_abs.max(e);
+            sum_abs += e;
+            err_sq += e * e;
+            ref_sq += w * w;
+        }
+        Self {
+            max_abs,
+            mean_abs: sum_abs / got.len() as f64,
+            rel_fro: (err_sq / ref_sq.max(f64::MIN_POSITIVE)).sqrt(),
+        }
+    }
+}
+
+/// One row of the E5 table: error of direct-f32, square-f32 and square-f64
+/// matmul vs the f64 direct ground truth, for one (n, scale) setting.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulErrorRow {
+    pub n: usize,
+    /// operand magnitude scale (σ of the normal entries)
+    pub scale: f64,
+    pub direct_f32: ErrorStats,
+    pub square_f32: ErrorStats,
+    pub square_f64: ErrorStats,
+    /// amplification = square_f32.rel_fro / direct_f32.rel_fro
+    pub amplification: f64,
+}
+
+/// Run the E5 sweep for square n×n matmuls.
+pub fn matmul_error_sweep(ns: &[usize], scales: &[f64], seed: u64) -> Vec<MatmulErrorRow> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &scale in scales {
+            let mut rng = Rng::new(seed ^ (n as u64) << 8 ^ scale.to_bits());
+            let a64 = Matrix::from_vec(
+                n,
+                n,
+                rng.vec_normal(n * n).iter().map(|v| v * scale).collect(),
+            );
+            let b64 = Matrix::from_vec(
+                n,
+                n,
+                rng.vec_normal(n * n).iter().map(|v| v * scale).collect(),
+            );
+            // ground truth in f64 direct
+            let truth = matmul_direct_f64(&a64, &b64);
+
+            let a32 = a64.map(|v| v as f32);
+            let b32 = b64.map(|v| v as f32);
+            let d32 = super::matmul::matmul_direct_f32(&a32, &b32);
+            let s32 = matmul_square_f32(&a32, &b32);
+            let s64 = matmul_square_f64(&a64, &b64);
+
+            let t = truth.data();
+            let row = MatmulErrorRow {
+                n,
+                scale,
+                direct_f32: ErrorStats::compare(
+                    &d32.data().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                    t,
+                ),
+                square_f32: ErrorStats::compare(
+                    &s32.data().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                    t,
+                ),
+                square_f64: ErrorStats::compare(s64.data(), t),
+                amplification: 0.0,
+            };
+            let amp = row.square_f32.rel_fro / row.direct_f32.rel_fro.max(f64::MIN_POSITIVE);
+            rows.push(MatmulErrorRow { amplification: amp, ..row });
+        }
+    }
+    rows
+}
+
+/// Worst-case scalar demonstration: the relative error of the f32 square
+/// trick for `a·b` with `|a| ≫ |b|` grows like `a²/(ab)` ulps.
+pub fn scalar_cancellation_demo(ratio: f64) -> (f64, f64) {
+    let a = ratio as f32;
+    let b = 1.0f32;
+    let direct = (a as f64) * (b as f64);
+    let s = a + b;
+    let tricked = 0.5 * ((s * s) as f64 - (a * a) as f64 - (b * b) as f64)
+        .max(f64::MIN_POSITIVE);
+    let rel = ((tricked - direct) / direct).abs();
+    (direct, rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_identical_inputs_are_zero() {
+        let v = vec![1.0, -2.0, 3.0];
+        let s = ErrorStats::compare(&v, &v);
+        assert_eq!(s.max_abs, 0.0);
+        assert_eq!(s.rel_fro, 0.0);
+    }
+
+    #[test]
+    fn stats_detect_known_error() {
+        let got = vec![1.0, 2.0, 3.0];
+        let want = vec![1.0, 2.0, 4.0];
+        let s = ErrorStats::compare(&got, &want);
+        assert_eq!(s.max_abs, 1.0);
+        assert!((s.mean_abs - 1.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn square_f64_is_tight() {
+        let rows = matmul_error_sweep(&[16, 32], &[1.0], 77);
+        for r in rows {
+            // f64 square trick vs f64 direct: both ~1e-14 territory
+            assert!(r.square_f64.rel_fro < 1e-12, "{:?}", r.square_f64);
+        }
+    }
+
+    #[test]
+    fn f32_amplification_is_bounded_but_real() {
+        let rows = matmul_error_sweep(&[32], &[1.0], 78);
+        for r in rows {
+            // square-f32 loses ~1 bit (amp ~2×) at unit scale; it must not
+            // be catastrophically worse, nor mysteriously better than ~0.5×
+            assert!(r.amplification > 0.5 && r.amplification < 64.0,
+                    "amp={}", r.amplification);
+        }
+    }
+
+    #[test]
+    fn cancellation_grows_with_operand_ratio() {
+        let (_, rel_small) = scalar_cancellation_demo(4.0);
+        let (_, rel_big) = scalar_cancellation_demo(4096.0);
+        assert!(rel_big > rel_small, "rel {rel_small} -> {rel_big}");
+    }
+}

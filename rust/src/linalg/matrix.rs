@@ -1,0 +1,163 @@
+//! Minimal dense row-major matrix used across the reference stack and the
+//! simulators. First-party on purpose: the offline environment carries no
+//! ndarray, and the library only needs predictable row-major storage.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::testkit::Rng;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Matrix<T> {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row slice (row-major ⇒ contiguous).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Self {
+        Self::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Matrix<U> {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|&x| f(x)).collect())
+    }
+}
+
+impl Matrix<i64> {
+    /// Random matrix with entries in `[lo, hi]`.
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize, lo: i64, hi: i64) -> Self {
+        Self::from_vec(rows, cols, rng.vec_i64(rows * cols, lo, hi))
+    }
+}
+
+impl Matrix<f64> {
+    pub fn random_normal(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        Self::from_vec(rows, cols, rng.vec_normal(rows * cols))
+    }
+
+    pub fn max_abs_diff(&self, o: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        self.data
+            .iter()
+            .zip(&o.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Matrix<f32> {
+    pub fn random_normal_f32(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        Self::from_vec(rows, cols, rng.vec_f32_normal(rows * cols))
+    }
+}
+
+impl<T> Index<(usize, usize)> for Matrix<T> {
+    type Output = T;
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T> IndexMut<(usize, usize)> for Matrix<T> {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: fmt::Display> fmt::Display for Matrix<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                write!(f, "{:>10} ", self.data[i * self.cols + j])?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as i64);
+        assert_eq!(m.get(1, 2), 12);
+        assert_eq!(m.row(1), &[10, 11, 12]);
+        assert_eq!(m.col(2), vec![2, 12]);
+        assert_eq!(m[(0, 1)], 1);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::random(&mut rng, 5, 7, -9, 9);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn map_preserves_shape() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i + j) as i64);
+        let d = m.map(|x| x as f64 * 0.5);
+        assert_eq!((d.rows, d.cols), (3, 2));
+        assert_eq!(d.get(2, 1), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1i64, 2, 3]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Op-counted linear-algebra reference stack.
+//!
+//! This is the software embodiment of the paper's math: every operation
+//! (§3 matmul, §4 transforms, §5 convolutions, §6/§9 complex matmul,
+//! §7/§10 complex transforms, §8/§11 complex convolutions) exists in a
+//! *direct* (multiplier) form and a *square-based* form, and both report an
+//! exact [`OpCounts`] ledger so the benches can regenerate the paper's
+//! ratio claims (eq. 6, 20, 36) empirically instead of quoting formulas.
+//!
+//! Integer (`i64`) entry points are bit-exact (the hardware domain);
+//! `f64`/`f32` entry points feed the numerical-error experiment E5.
+
+pub mod complex;
+pub mod conv;
+pub mod counts;
+pub mod error;
+pub mod matmul;
+pub mod qnn;
+pub mod matrix;
+pub mod transform;
+
+pub use counts::OpCounts;
+pub use matrix::Matrix;

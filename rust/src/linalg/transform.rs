@@ -1,0 +1,314 @@
+//! Linear transforms: direct (eq. 7) vs square-based (eq. 8/9), real and
+//! complex (eq. 23–26 CPM, eq. 39–43 CPM3), with ledgers.
+
+use crate::arith::complex::{cmul_direct, Complex};
+
+use super::counts::OpCounts;
+use super::matrix::Matrix;
+
+/// Direct transform X_k = Σ_i w_ki·x_i (eq. 7): N² multiplications.
+pub fn transform_direct(w: &Matrix<i64>, x: &[i64]) -> (Vec<i64>, OpCounts) {
+    assert_eq!(w.cols, x.len());
+    let mut ops = OpCounts::ZERO;
+    let out = (0..w.rows)
+        .map(|k| {
+            (0..w.cols)
+                .map(|i| {
+                    ops.mult();
+                    ops.add();
+                    w.get(k, i) * x[i]
+                })
+                .sum()
+        })
+        .collect();
+    (out, ops)
+}
+
+/// Pre-computed coefficient corrections `Sw_k = −Σ_i w_ki²` (eq. 9).
+pub fn transform_corrections(w: &Matrix<i64>, ops: &mut OpCounts) -> Vec<i64> {
+    (0..w.rows)
+        .map(|k| {
+            -w.row(k)
+                .iter()
+                .map(|&v| {
+                    ops.square();
+                    ops.add();
+                    v * v
+                })
+                .sum::<i64>()
+        })
+        .collect()
+}
+
+/// Square-based transform (eq. 8, the Fig. 6b engine) with pre-computed
+/// `sw` (the paper's "coefficients are constants" case): N² + N squares
+/// per transform — the common x_i² term is computed once per sample.
+pub fn transform_square(
+    w: &Matrix<i64>,
+    x: &[i64],
+    sw: &[i64],
+) -> (Vec<i64>, OpCounts) {
+    assert_eq!(w.cols, x.len());
+    assert_eq!(sw.len(), w.rows);
+    let mut ops = OpCounts::ZERO;
+
+    // Σ x² — N squares, shared by every output (the single square unit at
+    // the input of Fig. 6b)
+    let sx: i64 = x
+        .iter()
+        .map(|&v| {
+            ops.square();
+            ops.add();
+            v * v
+        })
+        .sum();
+
+    let out = (0..w.rows)
+        .map(|k| {
+            let mut acc = sw[k] - sx;
+            ops.add();
+            for i in 0..w.cols {
+                let s = w.get(k, i) + x[i];
+                acc += s * s;
+                ops.square();
+                ops.add_n(2);
+            }
+            ops.shift();
+            acc >> 1
+        })
+        .collect();
+    (out, ops)
+}
+
+/// Direct complex transform (eq. 23).
+pub fn ctransform_direct(
+    w: &Matrix<Complex<i64>>,
+    x: &[Complex<i64>],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    assert_eq!(w.cols, x.len());
+    let mut ops = OpCounts::ZERO;
+    let out = (0..w.rows)
+        .map(|k| {
+            let mut acc = Complex::ZERO;
+            for i in 0..w.cols {
+                acc += cmul_direct(w.get(k, i), x[i]);
+                ops.mults += 4;
+                ops.add_n(4);
+            }
+            acc
+        })
+        .collect();
+    (out, ops)
+}
+
+/// Complex transform with CPM (eq. 24–26, Fig. 10), pre-computed `S_k`.
+pub fn ctransform_cpm(
+    w: &Matrix<Complex<i64>>,
+    x: &[Complex<i64>],
+    sk: &[i64],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    assert_eq!(w.cols, x.len());
+    assert_eq!(sk.len(), w.rows);
+    let mut ops = OpCounts::ZERO;
+
+    // Sxy = −Σ(x²+y²) — 2N squares shared by all outputs (eq. 25)
+    let sxy: i64 = -x
+        .iter()
+        .map(|v| {
+            ops.squares += 2;
+            ops.add_n(2);
+            v.re * v.re + v.im * v.im
+        })
+        .sum::<i64>();
+
+    let out = (0..w.rows)
+        .map(|k| {
+            let corr = sxy + sk[k];
+            ops.add();
+            let (mut re, mut im) = (corr, corr);
+            for i in 0..w.cols {
+                let cv = w.get(k, i);
+                let xv = x[i];
+                let t1 = cv.re + xv.re;
+                let t2 = cv.im - xv.im;
+                let t3 = cv.re + xv.im;
+                let t4 = cv.im + xv.re;
+                re += t1 * t1 + t2 * t2;
+                im += t3 * t3 + t4 * t4;
+                ops.squares += 4;
+                ops.add_n(8);
+            }
+            ops.shifts += 2;
+            Complex::new(re >> 1, im >> 1)
+        })
+        .collect();
+    (out, ops)
+}
+
+/// `S_k = −Σ_i (c_ki² + s_ki²)` of eq. (25) — pre-computable.
+pub fn ctransform_cpm_corrections(
+    w: &Matrix<Complex<i64>>,
+    ops: &mut OpCounts,
+) -> Vec<i64> {
+    (0..w.rows)
+        .map(|k| {
+            -w.row(k)
+                .iter()
+                .map(|v| {
+                    ops.squares += 2;
+                    ops.add_n(2);
+                    v.re * v.re + v.im * v.im
+                })
+                .sum::<i64>()
+        })
+        .collect()
+}
+
+/// CPM3 coefficient corrections `(Sx_k, Sy_k)` of eq. (41)/(43).
+pub fn ctransform_cpm3_corrections(
+    w: &Matrix<Complex<i64>>,
+    ops: &mut OpCounts,
+) -> (Vec<i64>, Vec<i64>) {
+    let mut sxk = vec![0i64; w.rows];
+    let mut syk = vec![0i64; w.rows];
+    for k in 0..w.rows {
+        for v in w.row(k) {
+            let c2 = v.re * v.re;
+            let cs = v.re + v.im;
+            let sc = v.im - v.re;
+            sxk[k] += -c2 + cs * cs;
+            syk[k] += -c2 - sc * sc;
+            ops.squares += 3;
+            ops.add_n(6);
+        }
+    }
+    (sxk, syk)
+}
+
+/// Complex transform with CPM3 (eq. 39–43, Fig. 13), pre-computed
+/// corrections.
+pub fn ctransform_cpm3(
+    w: &Matrix<Complex<i64>>,
+    x: &[Complex<i64>],
+    sxk: &[i64],
+    syk: &[i64],
+) -> (Vec<Complex<i64>>, OpCounts) {
+    assert_eq!(w.cols, x.len());
+    let mut ops = OpCounts::ZERO;
+
+    // common sample terms (eq. 41/43): 3 squares per sample, shared
+    let mut sxy = 0i64;
+    let mut syx = 0i64;
+    for v in x {
+        let xy = v.re + v.im;
+        let xy2 = xy * xy;
+        sxy += -xy2 + v.im * v.im;
+        syx += -xy2 - v.re * v.re;
+        ops.squares += 3;
+        ops.add_n(5);
+    }
+
+    let out = (0..w.rows)
+        .map(|k| {
+            let mut re = sxy + sxk[k];
+            let mut im = syx + syk[k];
+            ops.add_n(2);
+            for i in 0..w.cols {
+                let cv = w.get(k, i);
+                let xv = x[i];
+                let t = cv.re + xv.re + xv.im; // c + x + y — shared
+                let t = t * t;
+                let u = xv.im + cv.re + cv.im; // y + c + s
+                let v2 = xv.re + cv.im - cv.re; // x + s − c
+                re += t - u * u;
+                im += t + v2 * v2;
+                ops.squares += 3;
+                ops.add_n(8);
+            }
+            ops.shifts += 2;
+            Complex::new(re >> 1, im >> 1)
+        })
+        .collect();
+    (out, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn real_transform_exact() {
+        let mut rng = Rng::new(30);
+        for _ in 0..30 {
+            let n = rng.usize_in(1, 16);
+            let w = Matrix::random(&mut rng, n, n, -300, 300);
+            let x = rng.vec_i64(n, -300, 300);
+            let (d, _) = transform_direct(&w, &x);
+            let mut pre = OpCounts::ZERO;
+            let sw = transform_corrections(&w, &mut pre);
+            let (s, _) = transform_square(&w, &x, &sw);
+            assert_eq!(d, s);
+        }
+    }
+
+    #[test]
+    fn real_transform_ledger_is_n_plus_1_squares_per_output() {
+        // §4: N+1 squares per output (amortised) vs N multipliers
+        let mut rng = Rng::new(31);
+        let n = 16usize;
+        let w = Matrix::random(&mut rng, n, n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let mut pre = OpCounts::ZERO;
+        let sw = transform_corrections(&w, &mut pre);
+        let (_, ops) = transform_square(&w, &x, &sw);
+        // per transform: N² window squares + N shared x² squares
+        assert_eq!(ops.squares as usize, n * n + n);
+        assert_eq!(pre.squares as usize, n * n); // one-off Sw cost
+    }
+
+    fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {
+        (0..n)
+            .map(|_| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+            .collect()
+    }
+
+    #[test]
+    fn complex_transforms_exact() {
+        let mut rng = Rng::new(32);
+        for _ in 0..20 {
+            let n = rng.usize_in(1, 12);
+            let w = Matrix::from_fn(n, n, |_, _| {
+                Complex::new(rng.i64_in(-200, 200), rng.i64_in(-200, 200))
+            });
+            let x = rand_cvec(&mut rng, n, 200);
+            let (d, _) = ctransform_direct(&w, &x);
+
+            let mut pre = OpCounts::ZERO;
+            let sk = ctransform_cpm_corrections(&w, &mut pre);
+            let (c4, _) = ctransform_cpm(&w, &x, &sk);
+            assert_eq!(d, c4);
+
+            let mut pre3 = OpCounts::ZERO;
+            let (sxk, syk) = ctransform_cpm3_corrections(&w, &mut pre3);
+            let (c3, _) = ctransform_cpm3(&w, &x, &sxk, &syk);
+            assert_eq!(d, c3);
+        }
+    }
+
+    #[test]
+    fn cpm3_transform_ledger() {
+        let mut rng = Rng::new(33);
+        let n = 8usize;
+        let w = Matrix::from_fn(n, n, |_, _| {
+            Complex::new(rng.i64_in(-50, 50), rng.i64_in(-50, 50))
+        });
+        let x = rand_cvec(&mut rng, n, 50);
+        let mut pre = OpCounts::ZERO;
+        let (sxk, syk) = ctransform_cpm3_corrections(&w, &mut pre);
+        let (_, ops) = ctransform_cpm3(&w, &x, &sxk, &syk);
+        // 3 squares per (k,i) + 3 per sample; corrections pre-computed
+        assert_eq!(ops.squares as usize, 3 * n * n + 3 * n);
+        assert_eq!(pre.squares as usize, 3 * n * n);
+    }
+}

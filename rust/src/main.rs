@@ -1,0 +1,361 @@
+//! `fairsquare` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `ratios`   — measured squares-per-mult ratios vs eq. (6)/(20)/(36)
+//! * `gates`    — gate-level multiplier-vs-squarer report (E4/F9/F12)
+//! * `simulate` — cycle-accurate runs of the Fig. 1–14 architectures
+//! * `errors`   — floating-point error characterisation (E5)
+//! * `serve`    — batching inference server over the AOT artifacts (E6)
+//! * `list`     — artifacts available in the manifest
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use fairsquare::benchkit::{f, Table};
+use fairsquare::cli::Args;
+use fairsquare::coordinator::{InferenceServer, PjrtExecutor, WorkloadGen};
+use fairsquare::gates::report;
+use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio, eq6_ratio};
+use fairsquare::linalg::{error, Matrix};
+use fairsquare::sim;
+use fairsquare::testkit::Rng;
+
+const USAGE: &str = "\
+fairsquare — square-based matmul/convolution reproduction
+
+USAGE: fairsquare <command> [flags]
+
+COMMANDS:
+  ratios                         measured op-count ratios vs eq. 6/20/36
+  gates     [--widths 4,8,..]    gate-level cost report (E4, F9, F12)
+  simulate  [--size N]           cycle-accurate architecture runs
+  errors                         float error of the square trick (E5)
+  serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
+                                 batching inference server demo (E6)
+  list      [--artifacts DIR]    artifacts in the manifest
+";
+
+fn main() {
+    let args = match Args::parse(
+        &["artifacts", "model", "requests", "rps", "widths", "size", "seed"],
+        &["verbose", "no-shadow"],
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("ratios") => run(ratios(&args)),
+        Some("gates") => run(gates(&args)),
+        Some("simulate") => run(simulate(&args)),
+        Some("errors") => run(errors(&args)),
+        Some("serve") => run(serve(&args)),
+        Some("list") => run(list(&args)),
+        _ => {
+            print!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn ratios(_args: &Args) -> Result<()> {
+    let mut rng = Rng::new(1);
+    let sizes = [2usize, 4, 8, 16, 32, 64, 128];
+
+    let mut t = Table::new(
+        "E1 — real matmul, squares per multiplication (eq. 6)",
+        &["M=N=P", "measured", "analytic", "limit"],
+    );
+    for &n in &sizes {
+        let a = Matrix::random(&mut rng, n, n, -100, 100);
+        let b = Matrix::random(&mut rng, n, n, -100, 100);
+        let (_, d) = fairsquare::linalg::matmul::matmul_direct(&a, &b);
+        let (_, s) = fairsquare::linalg::matmul::matmul_square(&a, &b);
+        t.row(&[
+            n.to_string(),
+            f(s.square_ratio_vs(&d), 4),
+            f(eq6_ratio(n as u64, n as u64), 4),
+            "1.0".into(),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "E2/E3 — complex matmul, squares per complex multiplication (eq. 20/36)",
+        &["M=N=P", "CPM meas", "eq20", "CPM3 meas", "eq36"],
+    );
+    for &n in &sizes[..6] {
+        let x = fairsquare::linalg::complex::CMatrix::from_fn(n, n, |_, _| {
+            fairsquare::arith::Complex::new(rng.i64_in(-50, 50), rng.i64_in(-50, 50))
+        });
+        let y = fairsquare::linalg::complex::CMatrix::from_fn(n, n, |_, _| {
+            fairsquare::arith::Complex::new(rng.i64_in(-50, 50), rng.i64_in(-50, 50))
+        });
+        let (_, d) = fairsquare::linalg::complex::cmatmul_direct(&x, &y);
+        let (_, c4) = fairsquare::linalg::complex::cmatmul_cpm(&x, &y);
+        let (_, c3) = fairsquare::linalg::complex::cmatmul_cpm3(&x, &y);
+        let cmults = (d.mults / 4) as f64;
+        t.row(&[
+            n.to_string(),
+            f(c4.squares as f64 / cmults, 4),
+            f(eq20_ratio(n as u64, n as u64), 4),
+            f(c3.squares as f64 / cmults, 4),
+            f(eq36_ratio(n as u64, n as u64), 4),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn parse_widths(args: &Args) -> Result<Vec<usize>> {
+    let spec = args.get_or("widths", "4,8,12,16,20,24");
+    spec.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad width {s:?}"))
+        })
+        .collect()
+}
+
+fn gates(args: &Args) -> Result<()> {
+    let widths = parse_widths(args)?;
+    let samples = if args.has("verbose") { 500 } else { 0 };
+
+    let mut t = Table::new(
+        "E4 — n×n multiplier vs n-bit squarer (verified netlists)",
+        &["n", "mult gates", "mult area", "mult delay", "sq gates", "sq area",
+          "sq delay", "area ratio"],
+    );
+    for r in report::core_comparison(&widths, samples) {
+        t.row(&[
+            r.n.to_string(),
+            r.mult_gates.to_string(),
+            f(r.mult_area, 1),
+            f(r.mult_delay, 1),
+            r.sq_gates.to_string(),
+            f(r.sq_area, 1),
+            f(r.sq_delay, 1),
+            f(r.area_ratio, 3),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "E4 ablation — reduction/architecture variants",
+        &["variant", "n", "gates", "area", "delay"],
+    );
+    for r in report::ablation(&widths) {
+        t.row(&[
+            r.name.into(),
+            r.n.to_string(),
+            r.gates.to_string(),
+            f(r.area, 1),
+            f(r.delay, 1),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "F1/F9/F12 — datapath blocks (N=256 accumulation)",
+        &["block", "n", "comb area", "reg area", "total", "delay", "rel"],
+    );
+    for r in report::block_comparison(&widths, 256) {
+        t.row(&[
+            r.name.into(),
+            r.n.to_string(),
+            f(r.comb_area, 1),
+            f(r.reg_area, 1),
+            f(r.total_area, 1),
+            f(r.critical_path, 1),
+            f(r.rel_area, 3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let n = args.get_usize("size", 16)?;
+    let seed = args.get_u64("seed", 42)?;
+    let mut rng = Rng::new(seed);
+
+    let a = Matrix::random(&mut rng, n, n, -100, 100);
+    let b = Matrix::random(&mut rng, n, n, -100, 100);
+    let want = fairsquare::linalg::matmul::matmul_direct(&a, &b).0;
+
+    let mut t = Table::new(
+        &format!("Fig. 2/3 + 4/5 — {n}×{n}×{n} on cycle-accurate engines"),
+        &["engine", "cycles", "PE ops", "util", "exact"],
+    );
+    for (name, kind) in [("systolic/MAC", sim::systolic::PeKind::Mac),
+                         ("systolic/square", sim::systolic::PeKind::Square)] {
+        let run = sim::systolic::systolic_matmul(kind, &a, &b);
+        t.row(&[
+            name.into(),
+            run.stats.cycles.to_string(),
+            run.stats.pe_ops.to_string(),
+            f(run.stats.utilization(), 3),
+            (run.c == want).to_string(),
+        ]);
+    }
+    for (name, kind) in [("tensorcore/MAC", sim::tensor_core::TcKind::Mac),
+                         ("tensorcore/square", sim::tensor_core::TcKind::Square)] {
+        let tn = 4.min(n);
+        let (c, stats, _) = sim::tensor_core::tiled_matmul(kind, &a, &b, tn);
+        t.row(&[
+            name.into(),
+            stats.cycles.to_string(),
+            stats.pe_ops.to_string(),
+            f(stats.utilization(), 3),
+            (c == want).to_string(),
+        ]);
+    }
+    t.print();
+
+    // FIR engines
+    let taps = rng.vec_i64(8, -50, 50);
+    let signal = rng.vec_i64(n * 16, -100, 100);
+    let direct = fairsquare::linalg::conv::conv1d_direct(&taps, &signal).0;
+    let mut t = Table::new(
+        &format!("Fig. 7/8 — 8-tap FIR over {} samples", signal.len()),
+        &["engine", "squares", "mults", "exact"],
+    );
+    {
+        let mut e = sim::conv::DirectFir::new(taps.clone());
+        let out = sim::conv::run_fir(|x| e.step(x), &signal);
+        t.row(&["direct (7a)".into(), "0".into(), e.ops().mults.to_string(),
+                (out == direct).to_string()]);
+        let mut e = sim::conv::TransposedFir::new(taps.clone());
+        let out = sim::conv::run_fir(|x| e.step(x), &signal);
+        t.row(&["transposed (7b)".into(), "0".into(), e.ops().mults.to_string(),
+                (out == direct).to_string()]);
+        let mut e = sim::conv::SquareFir::new(taps.clone());
+        let out = sim::conv::run_fir(|x| e.step(x), &signal);
+        t.row(&["square (8)".into(), e.ops().squares.to_string(), "0".into(),
+                (out == direct).to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn errors(_args: &Args) -> Result<()> {
+    let rows = error::matmul_error_sweep(&[16, 64, 256], &[1.0, 100.0], 7);
+    let mut t = Table::new(
+        "E5 — float error vs f64 ground truth (relative Frobenius)",
+        &["n", "scale", "direct f32", "square f32", "square f64", "amplify"],
+    );
+    for r in rows {
+        t.row(&[
+            r.n.to_string(),
+            f(r.scale, 1),
+            format!("{:.3e}", r.direct_f32.rel_fro),
+            format!("{:.3e}", r.square_f32.rel_fro),
+            format!("{:.3e}", r.square_f64.rel_fro),
+            f(r.amplification, 2),
+        ]);
+    }
+    t.print();
+    println!("note: the paper treats the rewrite as exact; in floating point the");
+    println!("cancellation in eq. (4) costs ~½log2(n) extra bits (amplification");
+    println!("grows like sqrt(n): ≈4x at n=16, ≈16x at n=256) — see DESIGN.md §6.");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = args.get_or("model", "mlp_square").to_string();
+    let baseline = model.replace("_square", "_direct");
+    let requests = args.get_usize("requests", 256)?;
+    let rps = args.get_u64("rps", 2_000)? as f64;
+    let shadow = !args.has("no-shadow") && baseline != model;
+
+    println!("starting server: model={model} shadow={}",
+             if shadow { baseline.as_str() } else { "off" });
+    let dir2 = dir.clone();
+    let model2 = model.clone();
+    let baseline2 = baseline.clone();
+    let srv = InferenceServer::start(
+        32,
+        Duration::from_millis(2),
+        1024,
+        if shadow { 8 } else { 0 },
+        move || PjrtExecutor::new(&dir2, &model2),
+        move || {
+            if shadow {
+                Ok(Some(PjrtExecutor::new(&dir, &baseline2)?))
+            } else {
+                Ok(None)
+            }
+        },
+    )?;
+
+    let mut gen = WorkloadGen::new(0xE6);
+    let gaps = gen.arrival_gaps_us(requests, rps);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for gap in gaps {
+        std::thread::sleep(Duration::from_micros(gap.min(5_000)));
+        pending.push(srv.submit(gen.mnist_like())?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = srv.shutdown()?;
+
+    let l = stats.latency;
+    let mut t = Table::new("E6 — serving report", &["metric", "value"]);
+    t.row(&["completed".into(), format!("{ok}/{requests}")]);
+    t.row(&["wall time".into(), format!("{wall:.2?}")]);
+    t.row(&["throughput".into(),
+            format!("{:.0} rows/s", ok as f64 / wall.as_secs_f64())]);
+    t.row(&["mean batch".into(), f(stats.mean_batch, 2)]);
+    t.row(&["p50 latency".into(), format!("{:.0} µs", l.p50_us)]);
+    t.row(&["p95 latency".into(), format!("{:.0} µs", l.p95_us)]);
+    t.row(&["p99 latency".into(), format!("{:.0} µs", l.p99_us)]);
+    t.row(&["shadow checks".into(), stats.shadow_checks.to_string()]);
+    t.row(&["shadow failures".into(), stats.shadow_failures.to_string()]);
+    t.row(&["rejected".into(), stats.rejected.to_string()]);
+    t.print();
+    if stats.shadow_failures > 0 {
+        bail!("shadow verification failed");
+    }
+    Ok(())
+}
+
+fn list(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let reg = fairsquare::runtime::Registry::load(&dir)?;
+    let mut t = Table::new("artifacts", &["name", "args", "outputs"]);
+    for e in reg.entries() {
+        let fmt_specs = |specs: &[fairsquare::runtime::TensorSpec]| {
+            specs
+                .iter()
+                .map(|s| format!("{:?}", s.shape))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        t.row(&[e.name.clone(), fmt_specs(&e.args), fmt_specs(&e.outputs)]);
+    }
+    t.print();
+    Ok(())
+}

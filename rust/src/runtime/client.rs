@@ -1,0 +1,121 @@
+//! PJRT CPU engine: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::registry::{ArtifactSpec, Registry};
+
+/// A compiled artifact plus its marshalling metadata.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs. `args[i]` must have exactly
+    /// `spec.args[i].elements()` values; outputs come back as flat vectors
+    /// in manifest order.
+    pub fn run_f32(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.spec.name,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, spec) in args.iter().zip(&self.spec.args) {
+            if a.len() != spec.elements() {
+                bail!(
+                    "{}: arg size {} != spec {:?}",
+                    self.spec.name,
+                    a.len(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(a);
+            literals.push(if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)?
+            });
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// The PJRT engine: one CPU client, a registry, and a cache of compiled
+/// executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub registry: Registry,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = Registry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, registry, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.cache.contains_key(name) {
+            let spec = self.registry.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), LoadedModel { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run_f32(&mut self, name: &str, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?.run_f32(args)
+    }
+}
+
+// Integration tests live in rust/tests/runtime_e2e.rs (they need built
+// artifacts); unit tests here cover only argument validation plumbing.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn engine_errors_without_manifest() {
+        let dir = std::env::temp_dir().join("fairsq_no_manifest");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(super::Engine::new(&dir).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from rust — Python never runs
+//! on this path.
+//!
+//! * [`registry`] parses `artifacts/manifest.json` into typed
+//!   [`ArtifactSpec`]s (shapes/dtypes for literal marshalling);
+//! * [`client`] wraps the `xla` crate's PJRT CPU client and compiled
+//!   executables behind a shape-checked `run_f32` call.
+//!
+//! Interchange is **HLO text**: jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod client;
+pub mod registry;
+
+pub use client::{Engine, LoadedModel};
+pub use registry::{ArtifactSpec, Registry, TensorSpec};

@@ -1,0 +1,157 @@
+//! Artifact registry: typed view of `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Json;
+
+/// Shape + dtype of one argument or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|d| d as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor spec missing dtype")?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// absolute path of the `.hlo.txt`
+    pub path: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        match v.get("format").and_then(Json::as_str) {
+            Some("hlo-text") => {}
+            other => bail!("unsupported artifact format {other:?}"),
+        }
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries")?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("entry missing name")?
+                    .to_string();
+                let rel = e
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("entry missing path")?;
+                let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                    e.get(key)
+                        .and_then(Json::as_arr)
+                        .with_context(|| format!("entry missing {key}"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                Ok(ArtifactSpec {
+                    name,
+                    path: dir.join(rel),
+                    args: parse_list("args")?,
+                    outputs: parse_list("outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn entries(&self) -> &[ArtifactSpec] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","entries":[
+                {"name":"m1","path":"m1.hlo.txt",
+                 "args":[{"shape":[2,3],"dtype":"float32"}],
+                 "outputs":[{"shape":[2],"dtype":"float32"}]}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("fairsq_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let r = Registry::load(&dir).unwrap();
+        let e = r.get("m1").unwrap();
+        assert_eq!(e.args[0].shape, vec![2, 3]);
+        assert_eq!(e.args[0].elements(), 6);
+        assert_eq!(e.path, dir.join("m1.hlo.txt"));
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("fairsq_registry_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"protobuf","entries":[]}"#)
+            .unwrap();
+        assert!(Registry::load(&dir).is_err());
+    }
+}

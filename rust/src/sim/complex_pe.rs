@@ -1,0 +1,177 @@
+//! Fig. 9/12: complex partial multipliers as clocked processing elements.
+//!
+//! [`CpmUnit`]/[`Cpm3Unit`] are the combinational blocks of Fig. 9a/12a
+//! (thin wrappers over [`crate::arith::complex`], present so the simulators
+//! and benches can talk about them as PEs), and [`Cpm3Mac`] is the complex
+//! partial multiply–accumulator of Fig. 12b: seed with the corrections,
+//! stream operand pairs, read `z` (the register holds `2z`).
+
+use crate::arith::complex::{cpm, cpm3, cpm3_corrections, Complex};
+use crate::linalg::OpCounts;
+
+/// Fig. 9a: 4-square CPM block.
+#[derive(Debug, Default)]
+pub struct CpmUnit {
+    ops: OpCounts,
+}
+
+impl CpmUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Combinational: the 4-square partial product of eq. (21)/(22).
+    pub fn eval(&mut self, x: Complex<i64>, y: Complex<i64>) -> Complex<i64> {
+        self.ops.squares += 4;
+        self.ops.add_n(6);
+        cpm(x, y)
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 12a: 3-square CPM3 block.
+#[derive(Debug, Default)]
+pub struct Cpm3Unit {
+    ops: OpCounts,
+}
+
+impl Cpm3Unit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Combinational: the 3-square partial product of eq. (37)/(38).
+    pub fn eval(&mut self, x: Complex<i64>, y: Complex<i64>) -> Complex<i64> {
+        self.ops.squares += 3;
+        self.ops.add_n(7);
+        cpm3(x, y)
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 12b: complex partial multiply–accumulator around a CPM3.
+///
+/// Protocol (§9.1): initialise with
+/// `(Sab_h + Scs_k) + j(Sba_h + Ssc_k)`, then input one operand pair
+/// `(x_hi, y_ik)` per cycle; after N cycles the register holds `2·z_hk`.
+#[derive(Debug, Default)]
+pub struct Cpm3Mac {
+    acc: Complex<i64>,
+    unit: Cpm3Unit,
+    steps: u64,
+}
+
+impl Cpm3Mac {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn init(&mut self, corrections: Complex<i64>) {
+        self.acc = corrections;
+        self.steps = 0;
+    }
+
+    pub fn step(&mut self, x: Complex<i64>, y: Complex<i64>) {
+        self.acc += self.unit.eval(x, y);
+        self.steps += 1;
+    }
+
+    /// The register holds `2z`; read applies the right shift.
+    pub fn read(&self) -> Complex<i64> {
+        Complex::new(self.acc.re >> 1, self.acc.im >> 1)
+    }
+
+    pub fn read_raw(&self) -> Complex<i64> {
+        self.acc
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.unit.ops
+    }
+}
+
+/// Accumulate the eq. (33)/(35) corrections for an operand-pair stream —
+/// what the host computes per row h / column k before seeding a [`Cpm3Mac`].
+pub fn stream_corrections(
+    xs: &[Complex<i64>],
+    ys: &[Complex<i64>],
+) -> Complex<i64> {
+    assert_eq!(xs.len(), ys.len());
+    let mut re = 0;
+    let mut im = 0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let (sab, sba, scs, ssc) = cpm3_corrections(x, y);
+        re += sab + scs;
+        im += sba + ssc;
+    }
+    Complex::new(re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::complex::cmul_direct;
+    use crate::testkit::Rng;
+
+    fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {
+        (0..n)
+            .map(|_| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+            .collect()
+    }
+
+    #[test]
+    fn cpm3_mac_computes_complex_dot_product() {
+        let mut rng = Rng::new(120);
+        for _ in 0..100 {
+            let n = rng.usize_in(1, 32);
+            let xs = rand_cvec(&mut rng, n, 1000);
+            let ys = rand_cvec(&mut rng, n, 1000);
+            let want = xs
+                .iter()
+                .zip(&ys)
+                .fold(Complex::ZERO, |acc, (&x, &y)| acc + cmul_direct(x, y));
+
+            let mut mac = Cpm3Mac::new();
+            mac.init(stream_corrections(&xs, &ys));
+            for (&x, &y) in xs.iter().zip(&ys) {
+                mac.step(x, y);
+            }
+            assert_eq!(mac.read(), want);
+        }
+    }
+
+    #[test]
+    fn raw_register_holds_twice_z() {
+        let mut rng = Rng::new(121);
+        let xs = rand_cvec(&mut rng, 8, 100);
+        let ys = rand_cvec(&mut rng, 8, 100);
+        let want = xs
+            .iter()
+            .zip(&ys)
+            .fold(Complex::ZERO, |acc, (&x, &y)| acc + cmul_direct(x, y));
+        let mut mac = Cpm3Mac::new();
+        mac.init(stream_corrections(&xs, &ys));
+        for (&x, &y) in xs.iter().zip(&ys) {
+            mac.step(x, y);
+        }
+        assert_eq!(mac.read_raw(), Complex::new(2 * want.re, 2 * want.im));
+    }
+
+    #[test]
+    fn unit_op_counts() {
+        let mut u4 = CpmUnit::new();
+        let mut u3 = Cpm3Unit::new();
+        let x = Complex::new(3, -4);
+        let y = Complex::new(-2, 7);
+        let _ = u4.eval(x, y);
+        let _ = u3.eval(x, y);
+        assert_eq!(u4.ops().squares, 4);
+        assert_eq!(u3.ops().squares, 3);
+    }
+}

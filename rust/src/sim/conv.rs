@@ -1,0 +1,393 @@
+//! Fig. 7/8/11/14: FIR convolution engines.
+//!
+//! * [`DirectFir`]      — Fig. 7a: sample shift register, taps multiply;
+//! * [`TransposedFir`]  — Fig. 7b: broadcast sample, result pipeline;
+//! * [`SquareFir`]      — Fig. 8: transposed form with partial
+//!   multiplications, the shared per-sample x² and the Sw output fix-up;
+//! * [`CpmFir`]         — Fig. 11: complex weights/samples with CPMs;
+//! * [`Cpm3Fir`]        — Fig. 14: complex with CPM3s.
+//!
+//! All engines consume **one sample per clock** and, once primed (N−1
+//! cycles), emit one output per clock — the paper's throughput claim. The
+//! engines compute correlation `y_k = Σ_i w_i·x_{i+k}` (§5 treats
+//! convolution and correlation as the same mechanism).
+
+use crate::arith::complex::Complex;
+use crate::linalg::OpCounts;
+
+/// Fig. 7a: direct-form engine. Samples travel through a shift register;
+/// all taps fire each cycle.
+#[derive(Debug)]
+pub struct DirectFir {
+    w: Vec<i64>,
+    window: Vec<i64>,
+    filled: usize,
+    ops: OpCounts,
+}
+
+impl DirectFir {
+    pub fn new(w: Vec<i64>) -> Self {
+        let n = w.len();
+        assert!(n >= 1);
+        Self { w, window: vec![0; n], filled: 0, ops: OpCounts::ZERO }
+    }
+
+    /// One clock: shift in a sample; `Some(y)` once the window is primed.
+    /// Output order: y_k for k = 0, 1, … (correlation, valid mode).
+    pub fn step(&mut self, x: i64) -> Option<i64> {
+        self.window.rotate_left(1);
+        *self.window.last_mut().unwrap() = x;
+        self.filled += 1;
+        if self.filled < self.w.len() {
+            return None;
+        }
+        let mut acc = 0;
+        for (wi, xi) in self.w.iter().zip(&self.window) {
+            acc += wi * xi;
+            self.ops.mult();
+            self.ops.add();
+        }
+        Some(acc)
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 7b: transposed-form engine. The incoming sample is broadcast to
+/// all taps; partial results ride a register pipeline toward the output.
+#[derive(Debug)]
+pub struct TransposedFir {
+    w: Vec<i64>,
+    regs: Vec<i64>,
+    primed: usize,
+    ops: OpCounts,
+}
+
+impl TransposedFir {
+    pub fn new(w: Vec<i64>) -> Self {
+        let n = w.len();
+        Self { w, regs: vec![0; n], primed: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn step(&mut self, x: i64) -> Option<i64> {
+        let n = self.w.len();
+        // y_k = Σ w_i x_{k+i}: when x_{k+N−1} arrives, y_k completes.
+        // reg[i] holds the partial sum that still needs taps 0..=i applied
+        // in *reverse* arrival order: tap N−1 sees the newest sample.
+        let mut out = None;
+        let completed = self.regs[0] + self.w[n - 1] * x;
+        self.ops.mult();
+        self.ops.add();
+        for i in 0..n - 1 {
+            self.regs[i] = self.regs[i + 1] + self.w[n - 2 - i] * x;
+            self.ops.mult();
+            self.ops.add();
+        }
+        if n >= 1 {
+            self.regs[n - 1] = 0;
+        }
+        self.primed += 1;
+        if self.primed >= n {
+            out = Some(completed);
+        }
+        out
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 8: square-based transposed engine. Each tap's multiplier becomes a
+/// partial multiplier `(w_i+x)²`; the sample's `x²` is computed **once**
+/// (the input-side square unit) and subtracted at every tap; `Sw` is added
+/// at the output port ("subtract them all at once at the end").
+#[derive(Debug)]
+pub struct SquareFir {
+    w: Vec<i64>,
+    sw: i64,
+    regs: Vec<i64>,
+    primed: usize,
+    ops: OpCounts,
+}
+
+impl SquareFir {
+    pub fn new(w: Vec<i64>) -> Self {
+        let n = w.len();
+        let sw = -w.iter().map(|&v| v * v).sum::<i64>();
+        Self { w, sw, regs: vec![0; n], primed: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn step(&mut self, x: i64) -> Option<i64> {
+        let n = self.w.len();
+        // shared square unit — one x² per sample (Fig. 8)
+        let x2 = x * x;
+        self.ops.square();
+
+        let pm = |w: i64, ops: &mut OpCounts| {
+            ops.square();
+            ops.add_n(3);
+            let s = w + x;
+            s * s - x2
+        };
+        let completed = self.regs[0] + pm(self.w[n - 1], &mut self.ops);
+        for i in 0..n - 1 {
+            self.regs[i] = self.regs[i + 1] + pm(self.w[n - 2 - i], &mut self.ops);
+        }
+        self.regs[n - 1] = 0;
+        self.primed += 1;
+        if self.primed >= n {
+            // output fix-up: add Sw, then the single right shift
+            self.ops.add();
+            self.ops.shift();
+            Some((completed + self.sw) >> 1)
+        } else {
+            None
+        }
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 11: complex transposed engine with 4-square CPMs (eq. 28/29).
+#[derive(Debug)]
+pub struct CpmFir {
+    w: Vec<Complex<i64>>,
+    sw: i64,
+    regs: Vec<Complex<i64>>,
+    primed: usize,
+    ops: OpCounts,
+}
+
+impl CpmFir {
+    pub fn new(w: Vec<Complex<i64>>) -> Self {
+        let n = w.len();
+        let sw = -w.iter().map(|v| v.re * v.re + v.im * v.im).sum::<i64>();
+        Self { w, sw, regs: vec![Complex::ZERO; n], primed: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn step(&mut self, x: Complex<i64>) -> Option<Complex<i64>> {
+        let n = self.w.len();
+        // shared sample energy (x²+y²), one pair of squares (Fig. 11)
+        let e = x.re * x.re + x.im * x.im;
+        self.ops.squares += 2;
+        self.ops.add();
+
+        let cpm = |w: Complex<i64>, ops: &mut OpCounts| {
+            let t1 = w.re + x.re;
+            let t2 = w.im - x.im;
+            let t3 = w.im + x.re;
+            let t4 = w.re + x.im;
+            ops.squares += 4;
+            ops.add_n(10);
+            Complex::new(t1 * t1 + t2 * t2 - e, t3 * t3 + t4 * t4 - e)
+        };
+        let completed = self.regs[0] + cpm(self.w[n - 1], &mut self.ops);
+        for i in 0..n - 1 {
+            self.regs[i] = self.regs[i + 1] + cpm(self.w[n - 2 - i], &mut self.ops);
+        }
+        self.regs[n - 1] = Complex::ZERO;
+        self.primed += 1;
+        if self.primed >= n {
+            self.ops.add_n(2);
+            self.ops.shifts += 2;
+            Some(Complex::new(
+                (completed.re + self.sw) >> 1,
+                (completed.im + self.sw) >> 1,
+            ))
+        } else {
+            None
+        }
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 14: complex transposed engine with 3-square CPM3s (eq. 45/46).
+#[derive(Debug)]
+pub struct Cpm3Fir {
+    w: Vec<Complex<i64>>,
+    /// eq. (47): Sw as (re, im)
+    sw: Complex<i64>,
+    regs: Vec<Complex<i64>>,
+    primed: usize,
+    ops: OpCounts,
+}
+
+impl Cpm3Fir {
+    pub fn new(w: Vec<Complex<i64>>) -> Self {
+        let n = w.len();
+        let mut sw = Complex::ZERO;
+        for v in &w {
+            let c2 = v.re * v.re;
+            let cs = v.re + v.im;
+            let sc = v.im - v.re;
+            sw.re += -c2 + cs * cs;
+            sw.im += -c2 - sc * sc;
+        }
+        Self { w, sw, regs: vec![Complex::ZERO; n], primed: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn step(&mut self, x: Complex<i64>) -> Option<Complex<i64>> {
+        let n = self.w.len();
+        // common sample terms (−(x+y)²+y²), (−(x+y)²−x²): 3 shared squares
+        let xy = x.re + x.im;
+        let xy2 = xy * xy;
+        let com_re = -xy2 + x.im * x.im;
+        let com_im = -xy2 - x.re * x.re;
+        self.ops.squares += 3;
+        self.ops.add_n(3);
+
+        let cpm3 = |w: Complex<i64>, ops: &mut OpCounts| {
+            let t = w.re + xy;
+            let t = t * t;
+            let u = x.im + w.re + w.im;
+            let v = x.re + w.im - w.re;
+            ops.squares += 3;
+            ops.add_n(9);
+            Complex::new(t - u * u + com_re, t + v * v + com_im)
+        };
+        let completed = self.regs[0] + cpm3(self.w[n - 1], &mut self.ops);
+        for i in 0..n - 1 {
+            self.regs[i] = self.regs[i + 1] + cpm3(self.w[n - 2 - i], &mut self.ops);
+        }
+        self.regs[n - 1] = Complex::ZERO;
+        self.primed += 1;
+        if self.primed >= n {
+            self.ops.add_n(2);
+            self.ops.shifts += 2;
+            Some(Complex::new(
+                (completed.re + self.sw.re) >> 1,
+                (completed.im + self.sw.im) >> 1,
+            ))
+        } else {
+            None
+        }
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Drive any engine over a full signal, collecting the valid outputs.
+pub fn run_fir<T: Copy, O>(
+    mut step: impl FnMut(T) -> Option<O>,
+    signal: &[T],
+) -> Vec<O> {
+    signal.iter().filter_map(|&x| step(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::conv::{cconv1d_direct, conv1d_direct};
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn all_real_engines_match_reference() {
+        forall(
+            110,
+            60,
+            |rng, size| {
+                let n = rng.usize_in(1, size.min(12).max(1));
+                let l = n + rng.usize_in(0, 40);
+                (rng.vec_i64(n, -300, 300), rng.vec_i64(l, -300, 300))
+            },
+            |(w, x)| {
+                let want = conv1d_direct(w, x).0;
+                let mut d = DirectFir::new(w.clone());
+                let mut t = TransposedFir::new(w.clone());
+                let mut s = SquareFir::new(w.clone());
+                let dv = run_fir(|x| d.step(x), x);
+                let tv = run_fir(|x| t.step(x), x);
+                let sv = run_fir(|x| s.step(x), x);
+                if dv != want {
+                    return Err("direct-form mismatch".into());
+                }
+                if tv != want {
+                    return Err("transposed-form mismatch".into());
+                }
+                if sv != want {
+                    return Err("square-form mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn square_fir_is_n_plus_1_squares_per_sample() {
+        let mut rng = Rng::new(111);
+        let n = 16usize;
+        let w = rng.vec_i64(n, -99, 99);
+        let x = rng.vec_i64(256, -99, 99);
+        let mut e = SquareFir::new(w);
+        let _ = run_fir(|v| e.step(v), &x);
+        let per_sample = e.ops().squares as f64 / x.len() as f64;
+        assert!((per_sample - (n as f64 + 1.0)).abs() < 1e-9, "{per_sample}");
+    }
+
+    #[test]
+    fn one_output_per_cycle_once_primed() {
+        let mut rng = Rng::new(112);
+        let w = rng.vec_i64(8, -50, 50);
+        let x = rng.vec_i64(64, -50, 50);
+        let mut e = SquareFir::new(w.clone());
+        let mut outputs = 0;
+        for (i, &v) in x.iter().enumerate() {
+            let o = e.step(v);
+            if i < w.len() - 1 {
+                assert!(o.is_none(), "premature output at {i}");
+            } else {
+                assert!(o.is_some(), "missing output at {i}");
+                outputs += 1;
+            }
+        }
+        assert_eq!(outputs, x.len() - w.len() + 1);
+    }
+
+    fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {
+        (0..n)
+            .map(|_| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+            .collect()
+    }
+
+    #[test]
+    fn complex_engines_match_reference() {
+        let mut rng = Rng::new(113);
+        for _ in 0..25 {
+            let n = rng.usize_in(1, 10);
+            let l = n + rng.usize_in(0, 30);
+            let w = rand_cvec(&mut rng, n, 200);
+            let x = rand_cvec(&mut rng, l, 200);
+            let want = cconv1d_direct(&w, &x).0;
+            let mut c4 = CpmFir::new(w.clone());
+            let mut c3 = Cpm3Fir::new(w.clone());
+            let v4 = run_fir(|v| c4.step(v), &x);
+            let v3 = run_fir(|v| c3.step(v), &x);
+            assert_eq!(v4, want, "CPM n={n} l={l}");
+            assert_eq!(v3, want, "CPM3 n={n} l={l}");
+        }
+    }
+
+    #[test]
+    fn cpm3_saves_a_quarter_of_squares() {
+        let mut rng = Rng::new(114);
+        let n = 12usize;
+        let w = rand_cvec(&mut rng, n, 99);
+        let x = rand_cvec(&mut rng, 128, 99);
+        let mut c4 = CpmFir::new(w.clone());
+        let mut c3 = Cpm3Fir::new(w);
+        let _ = run_fir(|v| c4.step(v), &x);
+        let _ = run_fir(|v| c3.step(v), &x);
+        let r = c3.ops().squares as f64 / c4.ops().squares as f64;
+        assert!(r > 0.70 && r < 0.80, "ratio={r}");
+    }
+}

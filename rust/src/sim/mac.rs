@@ -1,0 +1,178 @@
+//! Fig. 1: the multiply-accumulator (a) and the partial-multiplication
+//! accumulator (b) — the paper's smallest building block, modelled as
+//! clocked units with the exact register protocol the figure describes.
+
+use crate::arith::fixed::BitBudget;
+
+/// Fig. 1a: classic MAC. `init` clears the register; each [`step`]
+/// multiplies the operand pair and accumulates.
+///
+/// [`step`]: Mac::step
+#[derive(Debug, Clone, Default)]
+pub struct Mac {
+    acc: i64,
+    steps: u64,
+}
+
+impl Mac {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear the accumulator (the figure's register initialised to zero).
+    pub fn init(&mut self) {
+        self.acc = 0;
+        self.steps = 0;
+    }
+
+    /// One clock: accumulate `a·b`.
+    pub fn step(&mut self, a: i64, b: i64) {
+        self.acc += a * b;
+        self.steps += 1;
+    }
+
+    /// Register contents = `c_ij` after N steps.
+    pub fn read(&self) -> i64 {
+        self.acc
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Fig. 1b: partial-multiplication accumulator (PMAC). The register is
+/// seeded with `Sa_i + Sb_j`; each step adds `(a+b)²`; the register then
+/// holds `2·c_ij` and [`read`] applies the single right shift.
+///
+/// [`read`]: Pmac::read
+#[derive(Debug, Clone, Default)]
+pub struct Pmac {
+    acc: i64,
+    steps: u64,
+    budget: Option<BitBudget>,
+}
+
+impl Pmac {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Like `new`, but every step asserts the accumulator stays within the
+    /// given hardware bit budget (the Fig. 3 PE register width).
+    pub fn with_budget(budget: BitBudget) -> Self {
+        Self { acc: 0, steps: 0, budget: Some(budget) }
+    }
+
+    /// Seed the register with the pre-computed corrections `Sa_i + Sb_j`.
+    pub fn init(&mut self, sa_plus_sb: i64) {
+        self.acc = sa_plus_sb;
+        self.steps = 0;
+    }
+
+    /// One clock: accumulate the partial multiplication `(a+b)²`.
+    pub fn step(&mut self, a: i64, b: i64) {
+        let s = a + b;
+        self.acc += s * s;
+        self.steps += 1;
+        if let Some(bb) = self.budget {
+            let bits = bb.accumulator_bits();
+            debug_assert!(
+                bits >= 63 || (self.acc.abs() as u128) < (1u128 << bits),
+                "accumulator overflowed its {bits}-bit budget: {}",
+                self.acc
+            );
+        }
+    }
+
+    /// Register holds `2·c_ij`; the figure's final right shift recovers it.
+    pub fn read(&self) -> i64 {
+        debug_assert!(self.acc & 1 == 0, "2c must be even");
+        self.acc >> 1
+    }
+
+    /// Raw register contents (the `2c_ij` value on the output pins).
+    pub fn read_raw(&self) -> i64 {
+        self.acc
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    /// drive both units with the same operand stream, per the Fig. 1 text
+    fn run_pair(a: &[i64], b: &[i64]) -> (i64, i64) {
+        assert_eq!(a.len(), b.len());
+        let mut mac = Mac::new();
+        mac.init();
+        let sa: i64 = -a.iter().map(|x| x * x).sum::<i64>();
+        let sb: i64 = -b.iter().map(|x| x * x).sum::<i64>();
+        let mut pmac = Pmac::new();
+        pmac.init(sa + sb);
+        for (&x, &y) in a.iter().zip(b) {
+            mac.step(x, y);
+            pmac.step(x, y);
+        }
+        (mac.read(), pmac.read())
+    }
+
+    #[test]
+    fn pmac_equals_mac() {
+        forall(
+            40,
+            100,
+            |rng, size| {
+                let n = rng.usize_in(1, size.max(2) * 4);
+                (rng.vec_i64(n, -1000, 1000), rng.vec_i64(n, -1000, 1000))
+            },
+            |(a, b)| {
+                let (m, p) = run_pair(a, b);
+                if m == p { Ok(()) } else { Err(format!("mac={m} pmac={p}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn pmac_raw_is_twice_result() {
+        let mut rng = Rng::new(41);
+        let a = rng.vec_i64(16, -100, 100);
+        let b = rng.vec_i64(16, -100, 100);
+        let (m, _) = run_pair(&a, &b);
+        let sa: i64 = -a.iter().map(|x| x * x).sum::<i64>();
+        let sb: i64 = -b.iter().map(|x| x * x).sum::<i64>();
+        let mut pmac = Pmac::new();
+        pmac.init(sa + sb);
+        for (&x, &y) in a.iter().zip(&b) {
+            pmac.step(x, y);
+        }
+        assert_eq!(pmac.read_raw(), 2 * m);
+    }
+
+    #[test]
+    fn pmac_budget_holds_at_worst_case() {
+        // all operands at the extreme of an 8-bit format
+        let bb = BitBudget::new(8, 64);
+        let mut pmac = Pmac::with_budget(bb);
+        pmac.init(-2 * 64 * 128 * 128); // worst corrections
+        for _ in 0..64 {
+            pmac.step(-128, -128);
+        }
+        let _ = pmac.read_raw();
+    }
+
+    #[test]
+    fn reinit_resets_state() {
+        let mut pmac = Pmac::new();
+        pmac.init(-50);
+        pmac.step(3, 4);
+        pmac.init(0);
+        assert_eq!(pmac.read_raw(), 0);
+        assert_eq!(pmac.steps(), 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Cycle-accurate simulators of the paper's hardware architectures
+//! (Fig. 1–14).
+//!
+//! Every engine exists in a *multiplier* flavour and a *square* flavour
+//! with identical external timing — the paper's drop-in-replacement claim —
+//! and every square flavour is tested bit-exact (after the ×2 output
+//! scaling) against the op-counted reference stack in [`crate::linalg`].
+//!
+//! | figure | module | engine |
+//! |--------|--------|--------|
+//! | Fig. 1a/1b  | [`mac`]         | MAC vs partial-multiplication accumulator |
+//! | Fig. 2/3    | [`systolic`]    | weight-stationary systolic array, square PEs |
+//! | Fig. 4/5    | [`tensor_core`] | tensor core, MAC vs partial-dot PEs |
+//! | Fig. 6      | [`transform`]   | linear-transform engine, real |
+//! | Fig. 7/8    | [`conv`]        | FIR engines: direct, transposed, square |
+//! | Fig. 9/12   | [`complex_pe`]  | CPM / CPM3 blocks and accumulators |
+//! | Fig. 10/13  | [`transform`]   | complex transform engines (CPM / CPM3) |
+//! | Fig. 11/14  | [`conv`]        | complex convolution engines (CPM / CPM3) |
+
+pub mod complex_pe;
+pub mod conv;
+pub mod iir;
+pub mod mac;
+pub mod systolic;
+pub mod tensor_core;
+pub mod trace;
+pub mod transform;
+
+pub use trace::CycleStats;

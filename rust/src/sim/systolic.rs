@@ -1,0 +1,292 @@
+//! Fig. 2/3: weight-stationary systolic array with square-based PEs.
+//!
+//! Geometry: a K×M grid (K = contraction length, M = rows of A). PE(k,i)
+//! holds `a_ik` in its REGA (loaded through the mux of Fig. 3). Operands
+//! `b_kj` stream in from the west edge of row k, staggered by k; partial
+//! sums flow south. Column i is seeded at the north edge with `Sa_i`, and
+//! the south-edge combine stage adds `Sb_j` as results drain — exactly the
+//! protocol described in §3.2. The array outputs `2·c_ij`; the driver
+//! applies the final right shift.
+//!
+//! Data moving through the array carries its wavefront index `j`; a PE
+//! asserts that the `b` operand and the partial sum meeting in a cycle
+//! belong to the same wavefront — the staggering proof the paper leaves
+//! implicit, checked on every cycle here.
+
+use crate::linalg::{Matrix, OpCounts};
+
+use super::trace::CycleStats;
+
+/// Token moving through the array: a value plus its output-column index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Token {
+    v: i64,
+    j: usize,
+}
+
+/// PE flavour: classic MAC (baseline array) or square-based (Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeKind {
+    Mac,
+    Square,
+}
+
+/// Result of a systolic run.
+#[derive(Debug)]
+pub struct SystolicRun {
+    pub c: Matrix<i64>,
+    pub stats: CycleStats,
+    pub ops: OpCounts,
+}
+
+/// Weight-stationary systolic array multiplying A (M×K) by B (K×P).
+#[derive(Debug)]
+pub struct SystolicArray {
+    kind: PeKind,
+    /// REGA of PE(k,i) = a_ik — the loaded weights
+    rega: Matrix<i64>,
+    k_dim: usize,
+    m_dim: usize,
+}
+
+impl SystolicArray {
+    /// Load phase (§3.2 first step): shift A into the REGA registers.
+    /// Costs M loading cycles (one column per cycle), accounted in `run`.
+    pub fn load(kind: PeKind, a: &Matrix<i64>) -> Self {
+        Self {
+            kind,
+            rega: a.transpose(), // rega[(k, i)] = a_ik
+            k_dim: a.cols,
+            m_dim: a.rows,
+        }
+    }
+
+    /// Stream B through the loaded array, producing C = A·B (exact —
+    /// square flavour internally computes 2c then shifts at the combine
+    /// stage).
+    ///
+    /// `sa`/`sb` are ignored by the MAC flavour. For the square flavour
+    /// they are the eq. (5) corrections, pre-computed by the host (§3.2
+    /// discusses computing them on the fly when array size == matrix
+    /// size; the host-side computation is ledgered in `ops`).
+    pub fn run(&self, b: &Matrix<i64>, sa: &[i64], sb: &[i64]) -> SystolicRun {
+        assert_eq!(b.rows, self.k_dim, "contraction mismatch");
+        let (kd, md, pd) = (self.k_dim, self.m_dim, b.cols);
+        if self.kind == PeKind::Square {
+            assert_eq!(sa.len(), md);
+            assert_eq!(sb.len(), pd);
+        }
+
+        let mut ops = OpCounts::ZERO;
+        if self.kind == PeKind::Square {
+            // host-side correction cost (M·K + K·P squares)
+            ops.squares += (md * kd) as u64 + (kd * pd) as u64;
+            ops.adds += (md * kd) as u64 + (kd * pd) as u64;
+        }
+
+        // Pipeline state, flattened row-major (PE(k,i) at k·md+i).
+        // Perf (§Perf-L3): a PE(k,i) is active at cycle t iff its
+        // wavefront index j = t−k−i lies in [0, P). Iterating only that
+        // band skips the ~⅔ of PE visits that are idle during fill/drain
+        // without changing the cycle-level schedule; stale registers
+        // outside the band are never read because readers apply the same
+        // band predicate (one-cycle shifted).
+        let mut b_reg: Vec<Token> = vec![Token { v: 0, j: 0 }; kd * md];
+        let mut psum: Vec<Token> = vec![Token { v: 0, j: 0 }; kd * md];
+        let mut c = Matrix::zeros(md, pd);
+        let mut produced = 0usize;
+        let mut pe_ops = 0u64;
+        let mut cycle = 0u64;
+
+        // total schedule length: last wavefront j=P−1 leaves row K−1 of
+        // column M−1 at cycle (K−1)+(P−1)+(M−1); +1 for the combine stage
+        let total = kd + pd + md - 1;
+        for t in 0..total {
+            // 1. collect south-edge outputs computed in the previous cycle:
+            //    row K−1, columns with t−1−(K−1)−i ∈ [0,P)
+            {
+                let base = t as i64 - kd as i64; // (t-1)-(kd-1)
+                let i_lo = (base - (pd as i64 - 1)).max(0);
+                let i_hi = base.min(md as i64 - 1);
+                if i_hi >= i_lo {
+                    for i in i_lo as usize..=i_hi as usize {
+                        let tok = psum[(kd - 1) * md + i];
+                        debug_assert_eq!(tok.j as i64, base - i as i64);
+                        let v = match self.kind {
+                            PeKind::Square => {
+                                ops.add();
+                                ops.shift();
+                                (tok.v + sb[tok.j]) >> 1
+                            }
+                            PeKind::Mac => tok.v,
+                        };
+                        c.set(i, tok.j, v);
+                        produced += 1;
+                    }
+                }
+            }
+
+            // 2. advance the active band (south/east moves), bottom-up so
+            //    values move exactly one PE per cycle
+            for k in (0..kd).rev() {
+                let base = t as i64 - k as i64; // j = base − i
+                let i_lo = (base - (pd as i64 - 1)).max(0);
+                let i_hi = base.min(md as i64 - 1);
+                if i_hi < i_lo {
+                    continue;
+                }
+                let rega_row = self.rega.row(k);
+                for i in (i_lo as usize..=i_hi as usize).rev() {
+                    let j = (base - i as i64) as usize;
+                    let b_in: Token = if i == 0 {
+                        Token { v: b.get(k, j), j }
+                    } else {
+                        b_reg[k * md + i - 1]
+                    };
+                    let p_in: Token = if k == 0 {
+                        Token {
+                            v: if self.kind == PeKind::Square { sa[i] } else { 0 },
+                            j,
+                        }
+                    } else {
+                        psum[(k - 1) * md + i]
+                    };
+                    // the staggering invariant the paper relies on
+                    debug_assert_eq!(p_in.j, j, "psum wavefront misalignment");
+                    debug_assert_eq!(b_in.j, j, "b wavefront misalignment");
+                    pe_ops += 1;
+                    let a = rega_row[i];
+                    let v = match self.kind {
+                        PeKind::Square => {
+                            ops.square();
+                            ops.add_n(2);
+                            let s = a + b_in.v;
+                            p_in.v + s * s
+                        }
+                        PeKind::Mac => {
+                            ops.mult();
+                            ops.add();
+                            p_in.v + a * b_in.v
+                        }
+                    };
+                    psum[k * md + i] = Token { v, j };
+                    b_reg[k * md + i] = b_in;
+                }
+            }
+            cycle += 1;
+        }
+        assert_eq!(produced, md * pd, "not all outputs drained");
+
+        SystolicRun {
+            c,
+            stats: CycleStats {
+                // +M load cycles for the REGA shift-in phase
+                cycles: cycle + md as u64,
+                pe_ops,
+                pe_cycles: cycle * (kd * md) as u64,
+            },
+            ops,
+        }
+    }
+}
+
+/// Convenience: full A·B through a freshly loaded array.
+pub fn systolic_matmul(kind: PeKind, a: &Matrix<i64>, b: &Matrix<i64>) -> SystolicRun {
+    let sa: Vec<i64> = (0..a.rows)
+        .map(|i| -a.row(i).iter().map(|&x| x * x).sum::<i64>())
+        .collect();
+    let sb: Vec<i64> = (0..b.cols)
+        .map(|j| -(0..b.rows).map(|k| b.get(k, j)).map(|x| x * x).sum::<i64>())
+        .collect();
+    SystolicArray::load(kind, a).run(b, &sa, &sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_direct;
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn square_array_matches_reference() {
+        forall(
+            80,
+            40,
+            |rng, size| {
+                let m = rng.usize_in(1, size.min(10).max(1));
+                let k = rng.usize_in(1, size.min(10).max(1));
+                let p = rng.usize_in(1, size.min(10).max(1));
+                (
+                    Matrix::random(rng, m, k, -500, 500),
+                    Matrix::random(rng, k, p, -500, 500),
+                )
+            },
+            |(a, b)| {
+                let want = matmul_direct(a, b).0;
+                let got = systolic_matmul(PeKind::Square, a, b).c;
+                if got == want { Ok(()) } else { Err("systolic mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    fn mac_array_matches_reference() {
+        let mut rng = Rng::new(81);
+        for _ in 0..20 {
+            let (m, k, p) = (
+                rng.usize_in(1, 8),
+                rng.usize_in(1, 8),
+                rng.usize_in(1, 8),
+            );
+            let a = Matrix::random(&mut rng, m, k, -99, 99);
+            let b = Matrix::random(&mut rng, k, p, -99, 99);
+            assert_eq!(systolic_matmul(PeKind::Mac, &a, &b).c, matmul_direct(&a, &b).0);
+        }
+    }
+
+    #[test]
+    fn square_and_mac_have_identical_timing() {
+        // the drop-in-replacement claim: same cycle count either way
+        let mut rng = Rng::new(82);
+        let a = Matrix::random(&mut rng, 6, 9, -50, 50);
+        let b = Matrix::random(&mut rng, 9, 7, -50, 50);
+        let s = systolic_matmul(PeKind::Square, &a, &b);
+        let m = systolic_matmul(PeKind::Mac, &a, &b);
+        assert_eq!(s.stats.cycles, m.stats.cycles);
+        assert_eq!(s.stats.pe_ops, m.stats.pe_ops);
+    }
+
+    #[test]
+    fn cycle_count_formula() {
+        // streaming cycles = K+P+M−1, plus M load cycles
+        let mut rng = Rng::new(83);
+        let (m, k, p) = (5usize, 6usize, 4usize);
+        let a = Matrix::random(&mut rng, m, k, -9, 9);
+        let b = Matrix::random(&mut rng, k, p, -9, 9);
+        let run = systolic_matmul(PeKind::Square, &a, &b);
+        assert_eq!(run.stats.cycles as usize, (k + p + m - 1) + m);
+    }
+
+    #[test]
+    fn op_ledger_matches_eq5() {
+        let mut rng = Rng::new(84);
+        let (m, k, p) = (4usize, 8usize, 3usize);
+        let a = Matrix::random(&mut rng, m, k, -9, 9);
+        let b = Matrix::random(&mut rng, k, p, -9, 9);
+        let run = systolic_matmul(PeKind::Square, &a, &b);
+        assert_eq!(run.ops.squares as usize, m * k * p + m * k + k * p);
+        assert_eq!(run.ops.mults, 0);
+    }
+
+    #[test]
+    fn utilization_improves_with_batch() {
+        // more wavefronts amortise fill/drain
+        let mut rng = Rng::new(85);
+        let a = Matrix::random(&mut rng, 8, 8, -9, 9);
+        let b_small = Matrix::random(&mut rng, 8, 2, -9, 9);
+        let b_big = Matrix::random(&mut rng, 8, 64, -9, 9);
+        let u_small = systolic_matmul(PeKind::Square, &a, &b_small).stats.utilization();
+        let u_big = systolic_matmul(PeKind::Square, &a, &b_big).stats.utilization();
+        assert!(u_big > u_small, "{u_big} <= {u_small}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Fig. 4/5: tensor core — an M×P grid of dot-product PEs that multiplies
+//! an M×N tile of A by an N×P tile of B every clock and accumulates
+//! `C ← A·B + C`, used to multiply large matrices tile by tile (§3.3).
+//!
+//! The MAC flavour uses the Fig. 5a PE (clear on Init); the square flavour
+//! uses Fig. 5b (Init loads `Sa_i + Sb_j`, partial dot products accumulate,
+//! one right shift at the end). Crucially, §3.3 notes that for tiled
+//! operation `Sa_i`/`Sb_j` come from the **full rows/columns of the large
+//! matrices**, not per tile — which is why the ×2 scaling survives across
+//! tile accumulation. The simulator implements exactly that.
+
+use crate::linalg::{Matrix, OpCounts};
+
+use super::trace::CycleStats;
+
+/// PE flavour, as in Fig. 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TcKind {
+    Mac,
+    Square,
+}
+
+/// A tensor core of fixed tile geometry (M, N, P).
+#[derive(Debug)]
+pub struct TensorCore {
+    pub kind: TcKind,
+    pub m: usize,
+    pub n: usize,
+    pub p: usize,
+    acc: Matrix<i64>,
+    cycles: u64,
+    pe_ops: u64,
+    ops: OpCounts,
+}
+
+impl TensorCore {
+    pub fn new(kind: TcKind, m: usize, n: usize, p: usize) -> Self {
+        Self {
+            kind,
+            m,
+            n,
+            p,
+            acc: Matrix::zeros(m, p),
+            cycles: 0,
+            pe_ops: 0,
+            ops: OpCounts::ZERO,
+        }
+    }
+
+    /// Raise Init (Fig. 4): MAC clears the accumulators; the square core
+    /// loads `seed[i][j] = Sa_i + Sb_j` (one cycle).
+    pub fn init(&mut self, seed: Option<&Matrix<i64>>) {
+        match (self.kind, seed) {
+            (TcKind::Mac, None) => self.acc = Matrix::zeros(self.m, self.p),
+            (TcKind::Square, Some(s)) => {
+                assert_eq!((s.rows, s.cols), (self.m, self.p));
+                self.acc = s.clone();
+            }
+            (TcKind::Mac, Some(_)) => panic!("MAC core takes no seed"),
+            (TcKind::Square, None) => panic!("square core needs Sa+Sb seed"),
+        }
+        self.cycles += 1;
+    }
+
+    /// One clock: feed an M×N tile of A and an N×P tile of B; every PE
+    /// computes its (partial) dot product and accumulates.
+    pub fn step(&mut self, a_tile: &Matrix<i64>, b_tile: &Matrix<i64>) {
+        assert_eq!((a_tile.rows, a_tile.cols), (self.m, self.n));
+        assert_eq!((b_tile.rows, b_tile.cols), (self.n, self.p));
+        for i in 0..self.m {
+            for j in 0..self.p {
+                let mut dot = 0i64;
+                for k in 0..self.n {
+                    match self.kind {
+                        TcKind::Mac => {
+                            dot += a_tile.get(i, k) * b_tile.get(k, j);
+                            self.ops.mult();
+                            self.ops.add();
+                        }
+                        TcKind::Square => {
+                            let s = a_tile.get(i, k) + b_tile.get(k, j);
+                            dot += s * s;
+                            self.ops.square();
+                            self.ops.add_n(2);
+                        }
+                    }
+                }
+                self.acc[(i, j)] += dot;
+                self.pe_ops += 1;
+            }
+        }
+        self.cycles += 1;
+    }
+
+    /// Read the outputs O (Fig. 4); the square flavour applies the final
+    /// right shift (§3.3 "corrected with single right shift when done").
+    pub fn read(&mut self) -> Matrix<i64> {
+        match self.kind {
+            TcKind::Mac => self.acc.clone(),
+            TcKind::Square => {
+                self.ops.shifts += (self.m * self.p) as u64;
+                self.acc.map(|v| v >> 1)
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CycleStats {
+        CycleStats {
+            cycles: self.cycles,
+            pe_ops: self.pe_ops,
+            pe_cycles: self.cycles * (self.m * self.p) as u64,
+        }
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Multiply large matrices A (M×K) by B (K×P) on a core with tile depth
+/// `tn` (K must divide evenly; pad externally otherwise). Returns the
+/// product, the stats, and the op ledger including host-side corrections.
+pub fn tiled_matmul(
+    kind: TcKind,
+    a: &Matrix<i64>,
+    b: &Matrix<i64>,
+    tn: usize,
+) -> (Matrix<i64>, CycleStats, OpCounts) {
+    assert_eq!(a.cols, b.rows);
+    assert!(a.cols % tn == 0, "K must be a multiple of the tile depth");
+    let mut core = TensorCore::new(kind, a.rows, tn, b.cols);
+    let mut host_ops = OpCounts::ZERO;
+
+    let seed = match kind {
+        TcKind::Mac => None,
+        TcKind::Square => {
+            // §3.3: corrections from the FULL rows/columns of A and B
+            let sa: Vec<i64> = (0..a.rows)
+                .map(|i| {
+                    host_ops.squares += a.cols as u64;
+                    host_ops.adds += a.cols as u64;
+                    -a.row(i).iter().map(|&x| x * x).sum::<i64>()
+                })
+                .collect();
+            let sb: Vec<i64> = (0..b.cols)
+                .map(|j| {
+                    host_ops.squares += b.rows as u64;
+                    host_ops.adds += b.rows as u64;
+                    -(0..b.rows).map(|k| b.get(k, j)).map(|x| x * x).sum::<i64>()
+                })
+                .collect();
+            Some(Matrix::from_fn(a.rows, b.cols, |i, j| sa[i] + sb[j]))
+        }
+    };
+    core.init(seed.as_ref());
+
+    for t in 0..a.cols / tn {
+        let a_tile = Matrix::from_fn(a.rows, tn, |i, k| a.get(i, t * tn + k));
+        let b_tile = Matrix::from_fn(tn, b.cols, |k, j| b.get(t * tn + k, j));
+        core.step(&a_tile, &b_tile);
+    }
+    let out = core.read();
+    (out, core.stats(), core.ops() + host_ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_direct;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn tiled_square_core_exact() {
+        let mut rng = Rng::new(90);
+        for tn in [1usize, 2, 4, 8] {
+            let (m, p) = (rng.usize_in(1, 6), rng.usize_in(1, 6));
+            let k = tn * rng.usize_in(1, 6);
+            let a = Matrix::random(&mut rng, m, k, -300, 300);
+            let b = Matrix::random(&mut rng, k, p, -300, 300);
+            let (got, _, _) = tiled_matmul(TcKind::Square, &a, &b, tn);
+            assert_eq!(got, matmul_direct(&a, &b).0, "tn={tn}");
+        }
+    }
+
+    #[test]
+    fn tiled_mac_core_exact() {
+        let mut rng = Rng::new(91);
+        let a = Matrix::random(&mut rng, 4, 12, -99, 99);
+        let b = Matrix::random(&mut rng, 12, 5, -99, 99);
+        let (got, _, _) = tiled_matmul(TcKind::Mac, &a, &b, 4);
+        assert_eq!(got, matmul_direct(&a, &b).0);
+    }
+
+    #[test]
+    fn both_kinds_same_cycle_count() {
+        let mut rng = Rng::new(92);
+        let a = Matrix::random(&mut rng, 8, 32, -50, 50);
+        let b = Matrix::random(&mut rng, 32, 8, -50, 50);
+        let (_, s1, _) = tiled_matmul(TcKind::Mac, &a, &b, 8);
+        let (_, s2, _) = tiled_matmul(TcKind::Square, &a, &b, 8);
+        assert_eq!(s1.cycles, s2.cycles); // init + K/tn steps
+        assert_eq!(s1.cycles, 1 + 4);
+    }
+
+    #[test]
+    fn ledger_matches_eq6_scaling() {
+        let mut rng = Rng::new(93);
+        let (m, k, p, tn) = (4usize, 16usize, 4usize, 4usize);
+        let a = Matrix::random(&mut rng, m, k, -50, 50);
+        let b = Matrix::random(&mut rng, k, p, -50, 50);
+        let (_, _, ops) = tiled_matmul(TcKind::Square, &a, &b, tn);
+        assert_eq!(ops.squares as usize, m * k * p + m * k + k * p);
+        assert_eq!(ops.mults, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs Sa+Sb seed")]
+    fn square_core_requires_seed() {
+        let mut core = TensorCore::new(TcKind::Square, 2, 2, 2);
+        core.init(None);
+    }
+
+    #[test]
+    fn accumulation_across_inits_is_independent() {
+        // two back-to-back products on the same core must not leak state
+        let mut rng = Rng::new(94);
+        let a1 = Matrix::random(&mut rng, 3, 6, -40, 40);
+        let b1 = Matrix::random(&mut rng, 6, 3, -40, 40);
+        let a2 = Matrix::random(&mut rng, 3, 6, -40, 40);
+        let b2 = Matrix::random(&mut rng, 6, 3, -40, 40);
+        let (c1, _, _) = tiled_matmul(TcKind::Square, &a1, &b1, 3);
+        let (c2, _, _) = tiled_matmul(TcKind::Square, &a2, &b2, 3);
+        assert_eq!(c1, matmul_direct(&a1, &b1).0);
+        assert_eq!(c2, matmul_direct(&a2, &b2).0);
+    }
+}

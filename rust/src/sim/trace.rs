@@ -1,0 +1,36 @@
+//! Cycle/utilisation accounting shared by all engine simulators.
+
+/// Statistics of one engine run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// total clock cycles from first input to last output
+    pub cycles: u64,
+    /// PE-level operations actually performed (a MAC step or a PM step)
+    pub pe_ops: u64,
+    /// PE-cycles available (cycles × number of PEs)
+    pub pe_cycles: u64,
+}
+
+impl CycleStats {
+    /// Fraction of PE-cycles doing useful work (pipeline fill/drain shows
+    /// up here).
+    pub fn utilization(&self) -> f64 {
+        if self.pe_cycles == 0 {
+            0.0
+        } else {
+            self.pe_ops as f64 / self.pe_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_bounds() {
+        let s = CycleStats { cycles: 10, pe_ops: 50, pe_cycles: 100 };
+        assert!((s.utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(CycleStats::default().utilization(), 0.0);
+    }
+}

@@ -1,0 +1,392 @@
+//! Fig. 6/10/13: linear-transform engines — N parallel accumulator lanes,
+//! one input sample per clock cycle, coefficients stationary.
+//!
+//! * [`TransformEngine`] — Fig. 6a (multipliers) / Fig. 6b (squares), real;
+//! * [`CpmTransformEngine`] — Fig. 10, complex with 4-square CPMs;
+//! * [`Cpm3TransformEngine`] — Fig. 13, complex with 3-square CPM3s.
+//!
+//! All square engines share the figure's single input-side square unit:
+//! the common per-sample term is computed once per cycle and broadcast to
+//! every lane — that is what makes the engine N+1 squares instead of 2N.
+
+use crate::arith::complex::Complex;
+use crate::linalg::{Matrix, OpCounts};
+
+use super::trace::CycleStats;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Mult,
+    Square,
+}
+
+/// Fig. 6: real linear transform X_k = Σ_i w_ki·x_i over an N×N constant
+/// coefficient matrix.
+#[derive(Debug)]
+pub struct TransformEngine {
+    kind: EngineKind,
+    w: Matrix<i64>,
+    /// pre-computed Sw_k (eq. 9) — the "coefficients are constants" case
+    sw: Vec<i64>,
+    regs: Vec<i64>,
+    cycle: usize,
+    ops: OpCounts,
+}
+
+impl TransformEngine {
+    pub fn new(kind: EngineKind, w: Matrix<i64>) -> Self {
+        assert_eq!(w.rows, w.cols, "square coefficient matrix expected");
+        let sw = (0..w.rows)
+            .map(|k| -w.row(k).iter().map(|&v| v * v).sum::<i64>())
+            .collect();
+        let n = w.rows;
+        Self { kind, w, sw, regs: vec![0; n], cycle: 0, ops: OpCounts::ZERO }
+    }
+
+    /// Initialise the lanes: zero (Fig. 6a) or Sw_k (Fig. 6b).
+    pub fn init(&mut self) {
+        self.cycle = 0;
+        self.ops = OpCounts::ZERO;
+        match self.kind {
+            EngineKind::Mult => self.regs.fill(0),
+            EngineKind::Square => self.regs.copy_from_slice(&self.sw),
+        }
+    }
+
+    /// One clock: consume sample `x_i` (i = current cycle index).
+    pub fn step(&mut self, x: i64) {
+        let i = self.cycle;
+        assert!(i < self.w.cols, "more samples than N");
+        match self.kind {
+            EngineKind::Mult => {
+                for k in 0..self.w.rows {
+                    self.regs[k] += self.w.get(k, i) * x;
+                    self.ops.mult();
+                    self.ops.add();
+                }
+            }
+            EngineKind::Square => {
+                // the shared input square unit of Fig. 6b
+                let x2 = x * x;
+                self.ops.square();
+                for k in 0..self.w.rows {
+                    let s = self.w.get(k, i) + x;
+                    self.regs[k] += s * s - x2;
+                    self.ops.square();
+                    self.ops.add_n(3);
+                }
+            }
+        }
+        self.cycle += 1;
+    }
+
+    /// After N cycles: the transform result (square engine shifts out ×2).
+    pub fn read(&mut self) -> Vec<i64> {
+        assert_eq!(self.cycle, self.w.cols, "engine not full");
+        match self.kind {
+            EngineKind::Mult => self.regs.clone(),
+            EngineKind::Square => {
+                self.ops.shifts += self.regs.len() as u64;
+                self.regs.iter().map(|&v| v >> 1).collect()
+            }
+        }
+    }
+
+    pub fn run(&mut self, x: &[i64]) -> (Vec<i64>, CycleStats) {
+        self.init();
+        for &v in x {
+            self.step(v);
+        }
+        let out = self.read();
+        let n = self.w.rows as u64;
+        (out, CycleStats { cycles: n, pe_ops: n * n, pe_cycles: n * n })
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 10: complex transform engine with CPM lanes (eq. 24/26).
+#[derive(Debug)]
+pub struct CpmTransformEngine {
+    w: Matrix<Complex<i64>>,
+    /// S_k of eq. (25), pre-computed
+    sk: Vec<i64>,
+    regs: Vec<Complex<i64>>,
+    cycle: usize,
+    ops: OpCounts,
+}
+
+impl CpmTransformEngine {
+    pub fn new(w: Matrix<Complex<i64>>) -> Self {
+        assert_eq!(w.rows, w.cols);
+        let sk = (0..w.rows)
+            .map(|k| {
+                -w.row(k)
+                    .iter()
+                    .map(|v| v.re * v.re + v.im * v.im)
+                    .sum::<i64>()
+            })
+            .collect();
+        let n = w.rows;
+        Self { w, sk, regs: vec![Complex::ZERO; n], cycle: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn init(&mut self) {
+        self.cycle = 0;
+        self.ops = OpCounts::ZERO;
+        // registers initialised with S_k·(1+j) (§7)
+        for (r, &s) in self.regs.iter_mut().zip(&self.sk) {
+            *r = Complex::new(s, s);
+        }
+    }
+
+    pub fn step(&mut self, x: Complex<i64>) {
+        let i = self.cycle;
+        assert!(i < self.w.cols);
+        // common term (x² + y²)(1+j), one pair of squares per cycle (§7)
+        let e = x.re * x.re + x.im * x.im;
+        self.ops.squares += 2;
+        self.ops.add();
+        for k in 0..self.w.rows {
+            let c = self.w.get(k, i);
+            let t1 = c.re + x.re;
+            let t2 = c.im - x.im;
+            let t3 = c.re + x.im;
+            let t4 = c.im + x.re;
+            self.regs[k].re += t1 * t1 + t2 * t2 - e;
+            self.regs[k].im += t3 * t3 + t4 * t4 - e;
+            self.ops.squares += 4;
+            self.ops.add_n(10);
+        }
+        self.cycle += 1;
+    }
+
+    pub fn read(&mut self) -> Vec<Complex<i64>> {
+        assert_eq!(self.cycle, self.w.cols);
+        self.ops.shifts += 2 * self.regs.len() as u64;
+        self.regs
+            .iter()
+            .map(|r| Complex::new(r.re >> 1, r.im >> 1))
+            .collect()
+    }
+
+    pub fn run(&mut self, x: &[Complex<i64>]) -> (Vec<Complex<i64>>, CycleStats) {
+        self.init();
+        for &v in x {
+            self.step(v);
+        }
+        let out = self.read();
+        let n = self.w.rows as u64;
+        (out, CycleStats { cycles: n, pe_ops: n * n, pe_cycles: n * n })
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+/// Fig. 13: complex transform engine with CPM3 lanes (eq. 40/42).
+#[derive(Debug)]
+pub struct Cpm3TransformEngine {
+    w: Matrix<Complex<i64>>,
+    /// (Sx_k, Sy_k) of eq. (41)/(43), pre-computed
+    sxk: Vec<i64>,
+    syk: Vec<i64>,
+    regs: Vec<Complex<i64>>,
+    cycle: usize,
+    ops: OpCounts,
+}
+
+impl Cpm3TransformEngine {
+    pub fn new(w: Matrix<Complex<i64>>) -> Self {
+        assert_eq!(w.rows, w.cols);
+        let mut sxk = vec![0i64; w.rows];
+        let mut syk = vec![0i64; w.rows];
+        for k in 0..w.rows {
+            for v in w.row(k) {
+                let c2 = v.re * v.re;
+                let cs = v.re + v.im;
+                let sc = v.im - v.re;
+                sxk[k] += -c2 + cs * cs;
+                syk[k] += -c2 - sc * sc;
+            }
+        }
+        let n = w.rows;
+        Self { w, sxk, syk, regs: vec![Complex::ZERO; n], cycle: 0, ops: OpCounts::ZERO }
+    }
+
+    pub fn init(&mut self) {
+        self.cycle = 0;
+        self.ops = OpCounts::ZERO;
+        // registers initialised to Sx_k + j·Sy_k (§10)
+        for (k, r) in self.regs.iter_mut().enumerate() {
+            *r = Complex::new(self.sxk[k], self.syk[k]);
+        }
+    }
+
+    pub fn step(&mut self, x: Complex<i64>) {
+        let i = self.cycle;
+        assert!(i < self.w.cols);
+        // common terms (−(x+y)²+y²) + j(−(x+y)²−x²): 3 squares per sample
+        let xy = x.re + x.im;
+        let xy2 = xy * xy;
+        let com_re = -xy2 + x.im * x.im;
+        let com_im = -xy2 - x.re * x.re;
+        self.ops.squares += 3;
+        self.ops.add_n(3);
+        for k in 0..self.w.rows {
+            let c = self.w.get(k, i);
+            let t = c.re + xy; // (c + x + y) — the shared CPM3 square
+            let t = t * t;
+            let u = x.im + c.re + c.im;
+            let v = x.re + c.im - c.re;
+            self.regs[k].re += t - u * u + com_re;
+            self.regs[k].im += t + v * v + com_im;
+            self.ops.squares += 3;
+            self.ops.add_n(9);
+        }
+        self.cycle += 1;
+    }
+
+    pub fn read(&mut self) -> Vec<Complex<i64>> {
+        assert_eq!(self.cycle, self.w.cols);
+        self.ops.shifts += 2 * self.regs.len() as u64;
+        self.regs
+            .iter()
+            .map(|r| Complex::new(r.re >> 1, r.im >> 1))
+            .collect()
+    }
+
+    pub fn run(&mut self, x: &[Complex<i64>]) -> (Vec<Complex<i64>>, CycleStats) {
+        self.init();
+        for &v in x {
+            self.step(v);
+        }
+        let out = self.read();
+        let n = self.w.rows as u64;
+        (out, CycleStats { cycles: n, pe_ops: n * n, pe_cycles: n * n })
+    }
+
+    pub fn ops(&self) -> OpCounts {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::transform::{ctransform_direct, transform_direct};
+    use crate::testkit::Rng;
+
+    fn rand_cmat(rng: &mut Rng, n: usize, lim: i64) -> Matrix<Complex<i64>> {
+        Matrix::from_fn(n, n, |_, _| {
+            Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim))
+        })
+    }
+
+    fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {
+        (0..n)
+            .map(|_| Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim)))
+            .collect()
+    }
+
+    #[test]
+    fn real_engines_agree() {
+        let mut rng = Rng::new(100);
+        for _ in 0..20 {
+            let n = rng.usize_in(1, 16);
+            let w = Matrix::random(&mut rng, n, n, -200, 200);
+            let x = rng.vec_i64(n, -200, 200);
+            let want = transform_direct(&w, &x).0;
+            let (mult_out, s1) = TransformEngine::new(EngineKind::Mult, w.clone()).run(&x);
+            let (sq_out, s2) = TransformEngine::new(EngineKind::Square, w).run(&x);
+            assert_eq!(mult_out, want);
+            assert_eq!(sq_out, want);
+            assert_eq!(s1.cycles, s2.cycles); // same N-cycle latency
+        }
+    }
+
+    #[test]
+    fn square_engine_op_count_is_n_plus_1_per_cycle() {
+        let mut rng = Rng::new(101);
+        let n = 12;
+        let w = Matrix::random(&mut rng, n, n, -99, 99);
+        let x = rng.vec_i64(n, -99, 99);
+        let mut e = TransformEngine::new(EngineKind::Square, w);
+        let _ = e.run(&x);
+        // N lanes + 1 shared square per cycle, N cycles (§4)
+        assert_eq!(e.ops().squares as usize, n * (n + 1));
+    }
+
+    #[test]
+    fn cpm_engine_matches_direct() {
+        let mut rng = Rng::new(102);
+        for _ in 0..15 {
+            let n = rng.usize_in(1, 12);
+            let w = rand_cmat(&mut rng, n, 150);
+            let x = rand_cvec(&mut rng, n, 150);
+            let want = ctransform_direct(&w, &x).0;
+            let (got, _) = CpmTransformEngine::new(w).run(&x);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn cpm3_engine_matches_direct() {
+        let mut rng = Rng::new(103);
+        for _ in 0..15 {
+            let n = rng.usize_in(1, 12);
+            let w = rand_cmat(&mut rng, n, 150);
+            let x = rand_cvec(&mut rng, n, 150);
+            let want = ctransform_direct(&w, &x).0;
+            let (got, _) = Cpm3TransformEngine::new(w).run(&x);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn cpm3_uses_three_quarters_of_cpm_squares() {
+        let mut rng = Rng::new(104);
+        let n = 16;
+        let w = rand_cmat(&mut rng, n, 99);
+        let x = rand_cvec(&mut rng, n, 99);
+        let mut e4 = CpmTransformEngine::new(w.clone());
+        let _ = e4.run(&x);
+        let mut e3 = Cpm3TransformEngine::new(w);
+        let _ = e3.run(&x);
+        // steady-state lane squares: 4·N² vs 3·N² (plus shared input units)
+        let r = e3.ops().squares as f64 / e4.ops().squares as f64;
+        assert!(r > 0.70 && r < 0.80, "ratio={r}");
+    }
+
+    #[test]
+    fn dft_like_unit_coefficients() {
+        // §7: unit-modulus coefficients → S_k = −N; engine must still be
+        // exact with e.g. a {±1, ±j} Hadamard-ish matrix
+        let mut rng = Rng::new(105);
+        let n = 8;
+        let units = [
+            Complex::new(1, 0),
+            Complex::new(-1, 0),
+            Complex::new(0, 1),
+            Complex::new(0, -1),
+        ];
+        let w = Matrix::from_fn(n, n, |_, _| *rng.choose(&units));
+        let x = rand_cvec(&mut rng, n, 500);
+        let want = ctransform_direct(&w, &x).0;
+        let (got, _) = Cpm3TransformEngine::new(w).run(&x);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine not full")]
+    fn early_read_rejected() {
+        let w = Matrix::zeros(4, 4);
+        let mut e = TransformEngine::new(EngineKind::Square, w);
+        e.init();
+        e.step(1);
+        let _ = e.read();
+    }
+}

@@ -1,0 +1,184 @@
+//! First-party test support: deterministic PRNG and a lightweight
+//! property-testing runner.
+//!
+//! The offline build environment has no `rand`/`proptest`, so the library
+//! ships its own: [`Rng`] is SplitMix64 (Steele et al., 2014) — tiny, fast,
+//! passes BigCrush for this use — and [`forall`] runs a property over
+//! generated cases with failure reporting and a bounded shrink pass for
+//! integer-vector inputs.
+
+use std::fmt::Debug;
+
+/// SplitMix64 deterministic PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_in(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        lo + u * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_in(f64::MIN_POSITIVE, 1.0);
+        let u2 = self.f64_in(0.0, 1.0);
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Vector of uniform i64 in `[lo, hi]`.
+    pub fn vec_i64(&mut self, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..n).map(|_| self.i64_in(lo, hi)).collect()
+    }
+
+    /// Vector of standard-normal f64.
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    pub fn vec_f32_normal(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_normal()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: fail a property with a formatted message.
+#[macro_export]
+macro_rules! prop_fail {
+    ($($t:tt)*) => { return Err(format!($($t)*)) };
+}
+
+/// Run `prop` over `cases` generated inputs; on failure, attempt a bounded
+/// shrink (halving integer magnitudes / truncating vectors via the
+/// generator's `resize` hook is out of scope — we shrink by re-generating
+/// with smaller size hints) and panic with the smallest failing case found.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // size hint grows with the case index, like proptest/hypothesis
+        let size = 1 + case * 32 / cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // shrink: retry with progressively smaller size hints, same rng
+            // stream, keep the smallest failure
+            let mut smallest = (size, input, msg);
+            for shrink_size in (1..size).rev() {
+                let candidate = gen(&mut rng, shrink_size);
+                if let Err(m) = prop(&candidate) {
+                    smallest = (shrink_size, candidate, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, size={}):\n  input: {:?}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_ranges_respected() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = rng.i64_in(-5, 7);
+            assert!((-5..=7).contains(&v));
+            let f = rng.f64_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn rng_covers_range() {
+        let mut rng = Rng::new(2);
+        let mut seen = [false; 13];
+        for _ in 0..1000 {
+            seen[(rng.i64_in(-5, 7) + 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(3);
+        let xs = rng.vec_normal(50_000);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn forall_passes_sound_property() {
+        forall(0, 200, |rng, size| rng.vec_i64(size, -100, 100), |v| {
+            let s: i64 = v.iter().sum();
+            let r: i64 = v.iter().rev().sum();
+            if s == r { Ok(()) } else { Err("sum not commutative?!".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(0, 50, |rng, _| rng.i64_in(0, 1000), |&x| {
+            if x < 900 { Ok(()) } else { Err(format!("x={x} too big")) }
+        });
+    }
+}

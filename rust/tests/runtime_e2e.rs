@@ -1,0 +1,151 @@
+//! Integration: the AOT artifacts through the PJRT runtime, cross-checked
+//! against the rust reference stack — the three layers agreeing is the
+//! repository's core end-to-end signal.
+//!
+//! These tests skip (not fail) when `artifacts/` hasn't been built, so
+//! `cargo test` is green on a fresh checkout; `make test` always builds
+//! artifacts first.
+
+use std::path::Path;
+
+use fairsquare::linalg::{matmul, Matrix};
+use fairsquare::runtime::Engine;
+use fairsquare::testkit::Rng;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_all_twins() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(dir).unwrap();
+    let names = engine.registry.names();
+    for required in [
+        "matmul_direct_s", "matmul_square_s",
+        "matmul_direct_m", "matmul_square_m",
+        "matmul_direct_l", "matmul_square_l",
+        "mlp_direct", "mlp_square",
+        "conv1d_direct", "conv1d_square",
+        "cmatmul_direct", "cmatmul_4sq", "cmatmul_3sq",
+        "dft_cpm3",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+}
+
+#[test]
+fn square_matmul_artifact_matches_direct_artifact() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(dir).unwrap();
+    let mut rng = Rng::new(1);
+    for (name_s, name_d, n) in [
+        ("matmul_square_s", "matmul_direct_s", 32usize),
+        ("matmul_square_m", "matmul_direct_m", 64),
+    ] {
+        let a: Vec<f32> = rng.vec_f32_normal(n * n);
+        let b: Vec<f32> = rng.vec_f32_normal(n * n);
+        let got = engine.run_f32(name_s, &[a.clone(), b.clone()]).unwrap();
+        let want = engine.run_f32(name_d, &[a, b]).unwrap();
+        let max = got[0]
+            .iter()
+            .zip(&want[0])
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < 5e-3, "{name_s}: max err {max}");
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_reference_matmul() {
+    // L1 (Pallas) vs the rust linalg stack on identical integer-valued data
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(dir).unwrap();
+    let n = 32;
+    let mut rng = Rng::new(2);
+    let ai = Matrix::random(&mut rng, n, n, -8, 8);
+    let bi = Matrix::random(&mut rng, n, n, -8, 8);
+    let (ci, _) = matmul::matmul_square(&ai, &bi);
+
+    let a: Vec<f32> = ai.data().iter().map(|&v| v as f32).collect();
+    let b: Vec<f32> = bi.data().iter().map(|&v| v as f32).collect();
+    let got = engine.run_f32("matmul_square_s", &[a, b]).unwrap();
+    for (g, w) in got[0].iter().zip(ci.data()) {
+        // integer-valued f32 inputs → the kernel result is exact
+        assert_eq!(*g, *w as f32);
+    }
+}
+
+#[test]
+fn mlp_twins_agree_and_classify_identically() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(dir).unwrap();
+    let mut gen = fairsquare::coordinator::WorkloadGen::new(3);
+    let x = gen.mnist_batch(32);
+    let d = engine.run_f32("mlp_direct", &[x.clone()]).unwrap();
+    let s = engine.run_f32("mlp_square", &[x]).unwrap();
+    let mut agree = 0;
+    for row in 0..32 {
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let dd = argmax(&d[0][row * 10..(row + 1) * 10]);
+        let ss = argmax(&s[0][row * 10..(row + 1) * 10]);
+        if dd == ss {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 31, "classification agreement {agree}/32");
+}
+
+#[test]
+fn complex_artifacts_agree() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(dir).unwrap();
+    let mut rng = Rng::new(4);
+    let n = 32 * 32;
+    let args: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32_normal(n)).collect();
+    let want = engine.run_f32("cmatmul_direct", &args).unwrap();
+    for name in ["cmatmul_4sq", "cmatmul_3sq"] {
+        let got = engine.run_f32(name, &args).unwrap();
+        for part in 0..2 {
+            let max = got[part]
+                .iter()
+                .zip(&want[part])
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 5e-3, "{name} part {part}: {max}");
+        }
+    }
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(dir).unwrap();
+    // too few args
+    assert!(engine.run_f32("matmul_square_s", &[vec![0.0; 32 * 32]]).is_err());
+    // wrong element count
+    assert!(engine
+        .run_f32("matmul_square_s", &[vec![0.0; 7], vec![0.0; 32 * 32]])
+        .is_err());
+    // unknown artifact
+    assert!(engine.run_f32("nonexistent", &[]).is_err());
+}
