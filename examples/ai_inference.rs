@@ -61,6 +61,10 @@ fn run_one(model: &'static str, shadow: Option<&'static str>) -> Result<(f64, f6
 }
 
 fn main() -> Result<()> {
+    if !fairsquare::runtime::client::HAVE_PJRT {
+        bail!("built without the `pjrt` feature — rebuild with a vendored xla crate, \
+               or use `fairsquare serve --native` for the in-process engine");
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         bail!("artifacts/ missing — run `make artifacts` first");
     }

@@ -113,7 +113,9 @@ fn main() -> Result<()> {
 
     // ---- the AOT Pallas artifact (f32) ----------------------------------
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if !fairsquare::runtime::client::HAVE_PJRT {
+        println!("\n(built without the `pjrt` feature — PJRT leg skipped)");
+    } else if dir.join("manifest.json").exists() {
         let mut eng = Engine::new(dir)?;
         let got = eng.run_f32("conv1d_square", &[signal_f32.clone()])?;
         let want = eng.run_f32("conv1d_direct", &[signal_f32])?;

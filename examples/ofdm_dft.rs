@@ -76,6 +76,10 @@ fn main() -> Result<()> {
 
     // ---- AOT artifacts: batched DFT + channel equalisation --------------
     let dir = std::path::Path::new("artifacts");
+    if !fairsquare::runtime::client::HAVE_PJRT {
+        println!("\n(built without the `pjrt` feature — PJRT leg skipped)");
+        return Ok(());
+    }
     if !dir.join("manifest.json").exists() {
         println!("\n(artifacts/ missing — run `make artifacts` for the PJRT leg)");
         return Ok(());

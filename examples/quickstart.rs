@@ -45,7 +45,9 @@ fn main() -> Result<()> {
 
     // (4) the AOT-compiled Pallas kernel through the PJRT runtime
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if !fairsquare::runtime::client::HAVE_PJRT {
+        println!("L1 Pallas kernel via PJRT       SKIP (built without the `pjrt` feature)");
+    } else if dir.join("manifest.json").exists() {
         let mut engine = Engine::new(dir)?;
         let af: Vec<f32> = (0..64 * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
         let bf: Vec<f32> = (0..64 * 64).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();

@@ -1,0 +1,107 @@
+//! Perf gate for the blocked, multi-threaded square-kernel engine.
+//!
+//! Compares, per shape:
+//!   * `naive`    — the pre-engine per-element `get`/`set` square matmul
+//!   * `blocked`  — cache-blocked row-sliced engine, single thread
+//!   * `threaded` — same tiling, one worker per core
+//!   * `prepared` — threaded + constant-B corrections cached (§3 serving)
+//!   * `direct`   — the multiplier baseline in blocked form, for context
+//!
+//! Acceptance: blocked+threaded ≥ 2× the naive square matmul at
+//! 256×256×256. Writes `BENCH_blocked_engine.json` (schema: benchkit's
+//! JsonReport) so the perf trajectory accumulates from this PR on.
+//!
+//! `--quick` (as passed by `scripts/verify.sh`) shrinks budgets, not
+//! coverage: every shape still runs and the JSON artifact is still
+//! written.
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, JsonReport, Table};
+use fairsquare::linalg::engine::{
+    matmul_direct_blocked, matmul_square_blocked, matmul_square_naive,
+    matmul_square_prepared, max_threads, EngineConfig, PreparedB,
+};
+use fairsquare::linalg::Matrix;
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let threads = max_threads();
+    let mut rng = Rng::new(0xB10C);
+    let mut report = JsonReport::new("blocked_engine");
+
+    let mut t = Table::new(
+        &format!(
+            "blocked_engine — square-kernel engine vs naive baseline ({threads} threads)"
+        ),
+        &["M=N=P", "naive", "blocked", "threaded", "prepared", "direct",
+          "blk/naive", "thr/naive"],
+    );
+
+    let shapes: &[usize] = if quick { &[64, 128, 256] } else { &[32, 64, 128, 256, 384] };
+    let single = EngineConfig::default();
+    let multi = EngineConfig::threaded();
+
+    for &n in shapes {
+        let a = Matrix::random(&mut rng, n, n, -1000, 1000);
+        let b = Matrix::random(&mut rng, n, n, -1000, 1000);
+
+        // correctness cross-check before timing anything
+        let want = matmul_square_naive(&a, &b);
+        let (got, _) = matmul_square_blocked(&a, &b, &multi);
+        assert_eq!(got, want, "engine diverged from naive at n={n}");
+
+        let m_naive = bench.run(|| matmul_square_naive(&a, &b));
+        let m_blocked = bench.run(|| matmul_square_blocked(&a, &b, &single));
+        let m_threaded = bench.run(|| matmul_square_blocked(&a, &b, &multi));
+        let (pb, _) = PreparedB::new(b.clone());
+        let m_prepared = bench.run(|| matmul_square_prepared(&a, &pb, &multi));
+        let m_direct = bench.run(|| matmul_direct_blocked(&a, &b, &single));
+
+        let blk_speedup = m_naive.mean_ns / m_blocked.mean_ns;
+        let thr_speedup = m_naive.mean_ns / m_threaded.mean_ns;
+        t.row(&[
+            n.to_string(),
+            fmt_ns(m_naive.mean_ns),
+            fmt_ns(m_blocked.mean_ns),
+            fmt_ns(m_threaded.mean_ns),
+            fmt_ns(m_prepared.mean_ns),
+            fmt_ns(m_direct.mean_ns),
+            f(blk_speedup, 2),
+            f(thr_speedup, 2),
+        ]);
+
+        let nf = n as f64;
+        report.case(&format!("naive_{n}"), &m_naive, &[("n", nf)]);
+        report.case(
+            &format!("blocked_{n}"),
+            &m_blocked,
+            &[("n", nf), ("speedup_vs_naive", blk_speedup)],
+        );
+        report.case(
+            &format!("threaded_{n}"),
+            &m_threaded,
+            &[("n", nf), ("speedup_vs_naive", thr_speedup), ("threads", threads as f64)],
+        );
+        report.case(&format!("prepared_{n}"), &m_prepared, &[("n", nf)]);
+        report.case(&format!("direct_{n}"), &m_direct, &[("n", nf)]);
+
+        if n == 256 {
+            // the PR's acceptance gate, enforced where the numbers are made
+            println!(
+                "\n256³ gate: blocked+threaded is {thr_speedup:.2}× the naive \
+                 square matmul (target ≥ 2×)"
+            );
+            assert!(
+                thr_speedup >= 2.0,
+                "perf gate failed: threaded speedup {thr_speedup:.2}× < 2× at 256³"
+            );
+        }
+    }
+    t.print();
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_blocked_engine.json: {e}"),
+    }
+}

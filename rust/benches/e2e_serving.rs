@@ -14,7 +14,11 @@ use fairsquare::runtime::Engine;
 
 fn main() {
     qnn_table(); // artifact-independent: exact integer inference
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !fairsquare::runtime::client::HAVE_PJRT {
+        println!("e2e_serving: built without the `pjrt` feature — PJRT legs skipped");
+        return;
+    }
+    if !fairsquare::runtime::client::artifacts_present(std::path::Path::new("artifacts")) {
         println!("e2e_serving: artifacts/ missing — run `make artifacts`; skipping");
         return;
     }

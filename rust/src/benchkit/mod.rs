@@ -2,10 +2,15 @@
 //!
 //! [`Bench`] runs a closure with warm-up, adaptive iteration count and
 //! robust statistics; [`Table`] renders the paper-style result tables the
-//! `cargo bench` targets print. Used by every file in `rust/benches/`.
+//! `cargo bench` targets print; [`JsonReport`] writes the same numbers as
+//! a machine-readable `BENCH_<name>.json` artifact so the perf trajectory
+//! accumulates PR over PR. Used by every file in `rust/benches/`.
 
 use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::config::Json;
 
 /// Result of measuring one benchmark case.
 #[derive(Debug, Clone, Copy)]
@@ -159,6 +164,69 @@ pub fn f(x: f64, decimals: usize) -> String {
     format!("{x:.decimals$}")
 }
 
+/// Machine-readable benchmark artifact writer.
+///
+/// Accumulates named cases (each a [`Measurement`] plus arbitrary extra
+/// numeric fields — shapes, speedups, throughput) and writes
+/// `BENCH_<name>.json`, using the first-party [`Json`] printer. The
+/// artifact is append-friendly history: one file per bench target per
+/// run, committed or diffed as the perf trajectory demands.
+pub struct JsonReport {
+    name: String,
+    cases: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), cases: Vec::new() }
+    }
+
+    /// Record one measured case with extra numeric fields.
+    pub fn case(&mut self, case: &str, m: &Measurement, extra: &[(&str, f64)]) {
+        let mut obj = Json::object();
+        obj.insert("name", Json::Str(case.to_string()));
+        obj.insert("mean_ns", Json::Num(m.mean_ns));
+        obj.insert("median_ns", Json::Num(m.median_ns));
+        obj.insert("stddev_ns", Json::Num(m.stddev_ns));
+        obj.insert("min_ns", Json::Num(m.min_ns));
+        obj.insert("iters", Json::Num(m.iters as f64));
+        for &(k, v) in extra {
+            obj.insert(k, Json::Num(v));
+        }
+        self.cases.push(obj);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::object();
+        root.insert("bench", Json::Str(self.name.clone()));
+        root.insert("schema", Json::Num(1.0));
+        let secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        root.insert("created_unix", Json::Num(secs));
+        root.insert("cases", Json::Arr(self.cases.clone()));
+        root
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the written path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write into the current directory — `cargo bench` runs in the
+    /// package root, so the artifact lands next to `Cargo.toml`.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +262,36 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let m = Measurement {
+            iters: 3,
+            mean_ns: 1500.0,
+            median_ns: 1400.0,
+            stddev_ns: 100.0,
+            min_ns: 1300.0,
+        };
+        let mut r = JsonReport::new("unit_test");
+        assert!(r.is_empty());
+        r.case("case_a", &m, &[("speedup", 2.5), ("n", 256.0)]);
+        assert!(!r.is_empty());
+
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("unit_test"));
+        let cases = parsed.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("case_a"));
+        assert_eq!(cases[0].get("mean_ns").and_then(Json::as_f64), Some(1500.0));
+        assert_eq!(cases[0].get("speedup").and_then(Json::as_f64), Some(2.5));
+
+        let dir = std::env::temp_dir().join("fairsq_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = r.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -12,13 +12,20 @@
 //! The offline environment has no tokio; the runtime is `std::thread` +
 //! `mpsc`, which for a single-device CPU serving loop is exactly as
 //! capable and considerably more debuggable.
+//!
+//! Two executor families plug into the worker: the PJRT artifact path
+//! ([`PjrtExecutor`], needs the `pjrt` feature) and the native in-process
+//! path ([`native`]) running the blocked multi-threaded square-kernel
+//! engine with per-model cached corrections — no external runtime at all.
 
 pub mod batcher;
 pub mod metrics;
+pub mod native;
 pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, Batcher};
 pub use metrics::{LatencyStats, Metrics};
+pub use native::{DirectKernelExecutor, SquareKernelExecutor};
 pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats};
 pub use workload::WorkloadGen;

@@ -1,0 +1,170 @@
+//! Native in-process executors: serve square-based models without PJRT.
+//!
+//! [`SquareKernelExecutor`] implements [`BatchExecutor`] directly on the
+//! blocked, multi-threaded square-kernel engine
+//! ([`linalg::engine`](crate::linalg::engine)): one linear layer
+//! `Y = X·W` computed entirely with squares (eq. 4). The weight
+//! corrections `Sw_j = −Σ_k w_kj²` are computed **once** at construction
+//! ([`PreparedB`]) and reused for every request — the paper's §3
+//! constant-matrix inference case, amortised across the server's lifetime.
+//!
+//! [`DirectKernelExecutor`] is the multiplier twin over the same weights,
+//! used as the shadow baseline so a cautious operator can cross-check the
+//! square-based model on sampled batches — exactly the rollout story the
+//! PJRT twins tell, but with zero external runtime.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::engine::{
+    matmul_direct_blocked, matmul_square_prepared, EngineConfig, PreparedB,
+};
+use crate::linalg::Matrix;
+
+use super::server::BatchExecutor;
+
+/// Square-kernel batch executor: one constant weight matrix
+/// (`in_features × out_features`), corrections cached, blocked+threaded
+/// inner loops.
+pub struct SquareKernelExecutor {
+    weights: PreparedB<f32>,
+    batch_rows: usize,
+    cfg: EngineConfig,
+}
+
+impl SquareKernelExecutor {
+    /// Prepare `weights` (computing the cached `Sw` corrections) for
+    /// fixed-size batches of `batch_rows`, with one worker per core.
+    pub fn new(weights: Matrix<f32>, batch_rows: usize) -> Self {
+        Self::with_config(weights, batch_rows, EngineConfig::threaded())
+    }
+
+    pub fn with_config(weights: Matrix<f32>, batch_rows: usize, cfg: EngineConfig) -> Self {
+        assert!(batch_rows >= 1, "batch_rows must be positive");
+        let (weights, _prep_ops) = PreparedB::new(weights);
+        Self { weights, batch_rows, cfg }
+    }
+}
+
+impl BatchExecutor for SquareKernelExecutor {
+    fn row_len(&self) -> usize {
+        self.weights.in_features()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.weights.out_features()
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.batch_rows * self.weights.in_features();
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        let x = Matrix::from_vec(
+            self.batch_rows,
+            self.weights.in_features(),
+            rows_flat.to_vec(),
+        );
+        let (y, _ops) = matmul_square_prepared(&x, &self.weights, &self.cfg);
+        Ok(y.data().to_vec())
+    }
+}
+
+/// Direct (multiplier) twin over the same weights — the shadow baseline.
+pub struct DirectKernelExecutor {
+    weights: Matrix<f32>,
+    batch_rows: usize,
+    cfg: EngineConfig,
+}
+
+impl DirectKernelExecutor {
+    pub fn new(weights: Matrix<f32>, batch_rows: usize) -> Self {
+        Self::with_config(weights, batch_rows, EngineConfig::default())
+    }
+
+    pub fn with_config(weights: Matrix<f32>, batch_rows: usize, cfg: EngineConfig) -> Self {
+        assert!(batch_rows >= 1, "batch_rows must be positive");
+        Self { weights, batch_rows, cfg }
+    }
+}
+
+impl BatchExecutor for DirectKernelExecutor {
+    fn row_len(&self) -> usize {
+        self.weights.rows
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.weights.cols
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.batch_rows * self.weights.rows;
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        let x = Matrix::from_vec(self.batch_rows, self.weights.rows, rows_flat.to_vec());
+        let (y, _ops) = matmul_direct_blocked(&x, &self.weights, &self.cfg);
+        Ok(y.data().to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_direct_f64;
+    use crate::testkit::Rng;
+
+    fn int_matrix_f32(rng: &mut Rng, r: usize, c: usize, lim: i64) -> (Matrix<f32>, Matrix<f64>) {
+        let m = Matrix::random(rng, r, c, -lim, lim);
+        (m.map(|v| v as f32), m.map(|v| v as f64))
+    }
+
+    #[test]
+    fn square_executor_is_exact_on_integer_data() {
+        let mut rng = Rng::new(0x5E);
+        let (w32, w64) = int_matrix_f32(&mut rng, 12, 5, 10);
+        let mut exec = SquareKernelExecutor::with_config(w32, 4, EngineConfig::with_threads(2));
+        assert_eq!(exec.row_len(), 12);
+        assert_eq!(exec.out_len(), 5);
+        assert_eq!(exec.batch_rows(), 4);
+
+        let (x32, x64) = int_matrix_f32(&mut rng, 4, 12, 10);
+        let got = exec.run(x32.data()).unwrap();
+        let want = matmul_direct_f64(&x64, &w64);
+        assert_eq!(got.len(), 4 * 5);
+        for (g, w) in got.iter().zip(want.data()) {
+            assert_eq!(*g as f64, *w, "square executor drifted from f64 reference");
+        }
+    }
+
+    #[test]
+    fn direct_twin_agrees_with_square_executor() {
+        let mut rng = Rng::new(0x5F);
+        let (w32, _) = int_matrix_f32(&mut rng, 20, 7, 8);
+        let mut sq = SquareKernelExecutor::new(w32.clone(), 6);
+        let mut di = DirectKernelExecutor::new(w32, 6);
+        let (x32, _) = int_matrix_f32(&mut rng, 6, 20, 8);
+        assert_eq!(sq.run(x32.data()).unwrap(), di.run(x32.data()).unwrap());
+    }
+
+    #[test]
+    fn wrong_batch_size_is_rejected() {
+        let mut rng = Rng::new(0x60);
+        let (w32, _) = int_matrix_f32(&mut rng, 4, 2, 5);
+        let mut exec = SquareKernelExecutor::new(w32, 3);
+        assert!(exec.run(&[0.0; 11]).is_err());
+    }
+}

@@ -18,10 +18,11 @@
 //! |--------|------|
 //! | [`arith`]       | scalar square-trick primitives (eq. 1/2, CPM, CPM3), fixed-point bit budgets |
 //! | [`linalg`]      | op-counted reference stack: every operation in direct and square-based form |
+//! | [`linalg::engine`] | the serving hot path: cache-blocked, multi-threaded square kernels with cached constant-B corrections |
 //! | [`gates`]       | gate-level cost models: array multiplier vs folded squarer, MAC/PMAC/CPM blocks |
 //! | [`sim`]         | cycle-accurate simulators of the paper's Fig. 1–14 architectures |
-//! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts |
-//! | [`coordinator`] | thread-based batching inference server over the runtime |
+//! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts (`pjrt` feature; stub otherwise) |
+//! | [`coordinator`] | thread-based batching inference server over the runtime or the native square-kernel executors |
 //! | [`config`]      | configuration types + first-party JSON |
 //! | [`testkit`]     | deterministic PRNG + property-testing runner (offline substitute for proptest) |
 //! | [`benchkit`]    | measurement harness + table printer (offline substitute for criterion) |

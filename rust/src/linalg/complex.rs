@@ -2,168 +2,162 @@
 //! CPM 4-square (eq. 17–19) and CPM3 3-square (eq. 32–35) — all with exact
 //! operation ledgers for the eq. (20)/(36) ratio benches.
 
-use crate::arith::complex::{cmul_3mult, cmul_direct, Complex};
+use crate::arith::complex::Complex;
 
 use super::counts::OpCounts;
+use super::engine::kernels;
 use super::matrix::Matrix;
 
 pub type CMatrix = Matrix<Complex<i64>>;
 
 /// Direct complex matmul (eq. 15/16): M·N·P complex mults = 4·M·N·P real
-/// mults. The ledger counts *real* operations.
+/// mults. The ledger counts *real* operations and is hoisted; the hot
+/// loop is row-sliced i-k-j through the engine's complex row kernel.
 pub fn cmatmul_direct(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
     assert_eq!(x.cols, y.rows);
-    let mut ops = OpCounts::ZERO;
-    let mut z = CMatrix::zeros(x.rows, y.cols);
-    for h in 0..x.rows {
-        for k in 0..y.cols {
-            let mut acc = Complex::ZERO;
-            for i in 0..x.cols {
-                acc += cmul_direct(x.get(h, i), y.get(i, k));
-                ops.mults += 4;
-                ops.add_n(2 + 2); // product combine + accumulate
-            }
-            z.set(h, k, acc);
+    let (m, n, p) = (x.rows, x.cols, y.cols);
+    let mut z = CMatrix::zeros(m, p);
+    for h in 0..m {
+        let z_row = &mut z.data_mut()[h * p..(h + 1) * p];
+        let x_row = x.row(h);
+        for (i, &xv) in x_row.iter().enumerate() {
+            kernels::cmul_acc_crow(z_row, xv, y.row(i));
         }
     }
+    let mnp = (m * n * p) as u64;
+    let ops = OpCounts { mults: 4 * mnp, adds: 4 * mnp, ..OpCounts::ZERO };
     (z, ops)
 }
 
-/// 3-real-mult complex matmul baseline (eq. 31, Karatsuba-style).
+/// 3-real-mult complex matmul baseline (eq. 31, Karatsuba-style),
+/// row-sliced i-k-j with a hoisted ledger.
 pub fn cmatmul_3mult(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
     assert_eq!(x.cols, y.rows);
-    let mut ops = OpCounts::ZERO;
-    let mut z = CMatrix::zeros(x.rows, y.cols);
-    for h in 0..x.rows {
-        for k in 0..y.cols {
-            let mut acc = Complex::ZERO;
-            for i in 0..x.cols {
-                acc += cmul_3mult(x.get(h, i), y.get(i, k));
-                ops.mults += 3;
-                ops.add_n(3 + 2 + 2);
-            }
-            z.set(h, k, acc);
+    let (m, n, p) = (x.rows, x.cols, y.cols);
+    let mut z = CMatrix::zeros(m, p);
+    for h in 0..m {
+        let z_row = &mut z.data_mut()[h * p..(h + 1) * p];
+        let x_row = x.row(h);
+        for (i, &xv) in x_row.iter().enumerate() {
+            kernels::cmul3_acc_crow(z_row, xv, y.row(i));
         }
     }
+    let mnp = (m * n * p) as u64;
+    let ops = OpCounts { mults: 3 * mnp, adds: 7 * mnp, ..OpCounts::ZERO };
     (z, ops)
 }
 
 /// CPM complex matmul (eq. 17–19): 4 squares per complex product plus the
 /// reusable `Sx_h`/`Sy_k` corrections (2·M·N + 2·N·P squares).
+///
+/// Row-sliced i-k-j: each output row is seeded with its rank-1 correction
+/// and then swept tap-major by the engine's CPM row kernel. Hoisted ledger.
 pub fn cmatmul_cpm(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
     assert_eq!(x.cols, y.rows);
-    let mut ops = OpCounts::ZERO;
+    let (m, n, p) = (x.rows, x.cols, y.cols);
 
     // Sx_h = −Σ_i (a² + b²)  — 2 squares per element of X
-    let sx: Vec<i64> = (0..x.rows)
-        .map(|h| {
-            -x.row(h)
-                .iter()
-                .map(|v| {
-                    ops.squares += 2;
-                    ops.add_n(2);
-                    v.re * v.re + v.im * v.im
-                })
-                .sum::<i64>()
-        })
+    let sx: Vec<i64> = (0..m)
+        .map(|h| -x.row(h).iter().map(|v| v.re * v.re + v.im * v.im).sum::<i64>())
         .collect();
-    // Sy_k = −Σ_i (c² + s²)
-    let sy: Vec<i64> = (0..y.cols)
-        .map(|k| {
-            -(0..y.rows)
-                .map(|i| {
-                    ops.squares += 2;
-                    ops.add_n(2);
-                    let v = y.get(i, k);
-                    v.re * v.re + v.im * v.im
-                })
-                .sum::<i64>()
-        })
-        .collect();
-
-    let mut z = CMatrix::zeros(x.rows, y.cols);
-    for h in 0..x.rows {
-        for k in 0..y.cols {
-            let corr = sx[h] + sy[k];
-            ops.add();
-            let (mut re, mut im) = (corr, corr);
-            for i in 0..x.cols {
-                let xv = x.get(h, i);
-                let yv = y.get(i, k);
-                let t1 = xv.re + yv.re; // (a+c)
-                let t2 = xv.im - yv.im; // (b−s)
-                let t3 = xv.im + yv.re; // (b+c)
-                let t4 = xv.re + yv.im; // (a+s)
-                re += t1 * t1 + t2 * t2;
-                im += t3 * t3 + t4 * t4;
-                ops.squares += 4;
-                ops.add_n(4 + 4);
-            }
-            ops.shifts += 2;
-            z.set(h, k, Complex::new(re >> 1, im >> 1));
+    // Sy_k = −Σ_i (c² + s²), accumulated row-sweep (contiguous access)
+    let mut sy = vec![0i64; p];
+    for i in 0..y.rows {
+        for (s, v) in sy.iter_mut().zip(y.row(i)) {
+            *s += v.re * v.re + v.im * v.im;
         }
     }
+    for s in sy.iter_mut() {
+        *s = -*s;
+    }
+
+    let mut z = CMatrix::zeros(m, p);
+    for h in 0..m {
+        let z_row = &mut z.data_mut()[h * p..(h + 1) * p];
+        let sxh = sx[h];
+        for (zv, &syk) in z_row.iter_mut().zip(&sy) {
+            let corr = sxh + syk;
+            *zv = Complex::new(corr, corr);
+        }
+        let x_row = x.row(h);
+        for (i, &xv) in x_row.iter().enumerate() {
+            kernels::cpm_acc_crow(z_row, xv, y.row(i));
+        }
+        for zv in z_row.iter_mut() {
+            zv.re >>= 1;
+            zv.im >>= 1;
+        }
+    }
+
+    // hoisted ledger ≡ per-element counting (asserted by tests)
+    let (mu, nu, pu) = (m as u64, n as u64, p as u64);
+    let ops = OpCounts {
+        mults: 0,
+        squares: 2 * mu * nu + 2 * nu * pu + 4 * mu * nu * pu,
+        adds: 2 * mu * nu + 2 * nu * pu + mu * pu + 8 * mu * nu * pu,
+        shifts: 2 * mu * pu,
+    };
     (z, ops)
 }
 
 /// CPM3 complex matmul (eq. 32–35): 3 squares per complex product — the
 /// `(c+a+b)²` term is computed once and feeds both accumulators — plus the
 /// reusable `Sab/Sba/Scs/Ssc` corrections (3·M·N + 3·N·P squares).
+///
+/// Row-sliced i-k-j through the engine's CPM3 row kernel; hoisted ledger.
 pub fn cmatmul_cpm3(x: &CMatrix, y: &CMatrix) -> (CMatrix, OpCounts) {
     assert_eq!(x.cols, y.rows);
-    let mut ops = OpCounts::ZERO;
+    let (m, n, p) = (x.rows, x.cols, y.cols);
 
     // eq. (33)/(35) row corrections: (a+b)², a², b² → 3 squares per element
-    let mut sab = vec![0i64; x.rows];
-    let mut sba = vec![0i64; x.rows];
-    for h in 0..x.rows {
+    let mut sab = vec![0i64; m];
+    let mut sba = vec![0i64; m];
+    for h in 0..m {
         for v in x.row(h) {
             let ab = v.re + v.im;
             let ab2 = ab * ab;
             sab[h] += -ab2 + v.im * v.im;
             sba[h] += -ab2 - v.re * v.re;
-            ops.squares += 3;
-            ops.add_n(5);
         }
     }
-    // eq. (33)/(35) column corrections: c², (c+s)², (s−c)² → 3 squares
-    let mut scs = vec![0i64; y.cols];
-    let mut ssc = vec![0i64; y.cols];
-    for k in 0..y.cols {
-        for i in 0..y.rows {
-            let v = y.get(i, k);
+    // eq. (33)/(35) column corrections: c², (c+s)², (s−c)² → 3 squares,
+    // accumulated row-sweep (contiguous access)
+    let mut scs = vec![0i64; p];
+    let mut ssc = vec![0i64; p];
+    for i in 0..y.rows {
+        for ((cs_acc, sc_acc), v) in scs.iter_mut().zip(ssc.iter_mut()).zip(y.row(i)) {
             let c2 = v.re * v.re;
             let cs = v.re + v.im;
             let sc = v.im - v.re;
-            scs[k] += -c2 + cs * cs;
-            ssc[k] += -c2 - sc * sc;
-            ops.squares += 3;
-            ops.add_n(6);
+            *cs_acc += -c2 + cs * cs;
+            *sc_acc += -c2 - sc * sc;
         }
     }
 
-    let mut z = CMatrix::zeros(x.rows, y.cols);
-    for h in 0..x.rows {
-        for k in 0..y.cols {
-            let mut re = sab[h] + scs[k];
-            let mut im = sba[h] + ssc[k];
-            ops.add_n(2);
-            for i in 0..x.cols {
-                let xv = x.get(h, i);
-                let yv = y.get(i, k);
-                let t = yv.re + xv.re + xv.im; // (c+a+b) — shared
-                let t = t * t;
-                let u = xv.im + yv.re + yv.im; // (b+c+s)
-                let v = xv.re + yv.im - yv.re; // (a+s−c)
-                re += t - u * u;
-                im += t + v * v;
-                ops.squares += 3;
-                ops.add_n(6 + 2);
-            }
-            ops.shifts += 2;
-            z.set(h, k, Complex::new(re >> 1, im >> 1));
+    let mut z = CMatrix::zeros(m, p);
+    for h in 0..m {
+        let z_row = &mut z.data_mut()[h * p..(h + 1) * p];
+        for ((zv, &cs), &sc) in z_row.iter_mut().zip(&scs).zip(&ssc) {
+            *zv = Complex::new(sab[h] + cs, sba[h] + sc);
+        }
+        let x_row = x.row(h);
+        for (i, &xv) in x_row.iter().enumerate() {
+            kernels::cpm3_acc_crow(z_row, xv, y.row(i));
+        }
+        for zv in z_row.iter_mut() {
+            zv.re >>= 1;
+            zv.im >>= 1;
         }
     }
+
+    // hoisted ledger ≡ per-element counting (asserted by tests)
+    let (mu, nu, pu) = (m as u64, n as u64, p as u64);
+    let ops = OpCounts {
+        mults: 0,
+        squares: 3 * mu * nu + 3 * nu * pu + 3 * mu * nu * pu,
+        adds: 5 * mu * nu + 6 * nu * pu + 2 * mu * pu + 8 * mu * nu * pu,
+        shifts: 2 * mu * pu,
+    };
     (z, ops)
 }
 
@@ -222,6 +216,57 @@ mod tests {
             assert_eq!(c3.squares, 3 * mu * nu * pu + 3 * mu * nu + 3 * nu * pu);
             assert_eq!(c4.mults, 0);
             assert_eq!(c3.mults, 0);
+        }
+    }
+
+    /// Re-derive every complex-matmul ledger the way the seed tree did —
+    /// per-element closure counting — and assert the hoisted formulas are
+    /// identical, field by field.
+    #[test]
+    fn hoisted_ledgers_equal_per_element() {
+        fn refs(m: usize, n: usize, p: usize) -> [OpCounts; 4] {
+            let (mut direct, mut k3, mut c4, mut c3) =
+                (OpCounts::ZERO, OpCounts::ZERO, OpCounts::ZERO, OpCounts::ZERO);
+            for _ in 0..m * n {
+                c4.squares += 2;
+                c4.add_n(2);
+                c3.squares += 3;
+                c3.add_n(5);
+            }
+            for _ in 0..n * p {
+                c4.squares += 2;
+                c4.add_n(2);
+                c3.squares += 3;
+                c3.add_n(6);
+            }
+            for _out in 0..m * p {
+                c4.add();
+                c3.add_n(2);
+                for _i in 0..n {
+                    direct.mults += 4;
+                    direct.add_n(4);
+                    k3.mults += 3;
+                    k3.add_n(7);
+                    c4.squares += 4;
+                    c4.add_n(8);
+                    c3.squares += 3;
+                    c3.add_n(8);
+                }
+                c4.shifts += 2;
+                c3.shifts += 2;
+            }
+            [direct, k3, c4, c3]
+        }
+
+        let mut rng = Rng::new(15);
+        for (m, n, p) in [(1usize, 1usize, 1usize), (2, 5, 3), (8, 8, 8)] {
+            let x = random_c(&mut rng, m, n, 40);
+            let y = random_c(&mut rng, n, p, 40);
+            let [dref, kref, c4ref, c3ref] = refs(m, n, p);
+            assert_eq!(cmatmul_direct(&x, &y).1, dref, "direct {m}x{n}x{p}");
+            assert_eq!(cmatmul_3mult(&x, &y).1, kref, "3mult {m}x{n}x{p}");
+            assert_eq!(cmatmul_cpm(&x, &y).1, c4ref, "cpm {m}x{n}x{p}");
+            assert_eq!(cmatmul_cpm3(&x, &y).1, c3ref, "cpm3 {m}x{n}x{p}");
         }
     }
 

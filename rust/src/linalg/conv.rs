@@ -4,27 +4,30 @@
 //! All functions compute *valid-mode correlation* (the paper does not
 //! distinguish convolution from correlation, §5).
 
-use crate::arith::complex::{cmul_direct, Complex};
+use crate::arith::complex::Complex;
 
 use super::counts::OpCounts;
+use super::engine::kernels;
 use super::matrix::Matrix;
 
 /// Direct 1-D correlation (eq. 10): y_k = Σ_i w_i·x_{i+k}.
+///
+/// Tap-major row-sliced accumulation (each tap streams over a contiguous
+/// signal slice); ledger hoisted — N·K mults/adds, asserted equal to
+/// per-element counting by `tests::hoisted_ledgers_equal_per_element`.
 pub fn conv1d_direct(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
     let n = w.len();
     assert!(x.len() >= n, "signal shorter than kernel");
-    let mut ops = OpCounts::ZERO;
-    let y = (0..=x.len() - n)
-        .map(|k| {
-            (0..n)
-                .map(|i| {
-                    ops.mult();
-                    ops.add();
-                    w[i] * x[i + k]
-                })
-                .sum()
-        })
-        .collect();
+    let k_out = x.len() - n + 1;
+    let mut y = vec![0i64; k_out];
+    for (i, &wi) in w.iter().enumerate() {
+        kernels::mul_acc_row(&mut y, wi, &x[i..i + k_out]);
+    }
+    let ops = OpCounts {
+        mults: (n * k_out) as u64,
+        adds: (n * k_out) as u64,
+        ..OpCounts::ZERO
+    };
     (y, ops)
 }
 
@@ -33,193 +36,192 @@ pub fn conv1d_direct(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
 ///
 /// The per-sample `x²` is computed **once** per input sample and shared by
 /// every window it participates in — the Fig. 8 dataflow — so the steady-
-/// state cost is N+1 squares per output against N multiplications.
+/// state cost is N+1 squares per output against N multiplications. The
+/// window accumulation is tap-major through the engine's fused
+/// `(s+x)² − x²` row kernel; the ledger is hoisted out of the loops.
 pub fn conv1d_square(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
     let n = w.len();
     assert!(x.len() >= n);
-    let mut ops = OpCounts::ZERO;
+    let l = x.len();
+    let k_out = l - n + 1;
 
     // Sw = −Σ w² — pre-computable (constant kernel), still ledgered
-    let sw: i64 = -w
-        .iter()
-        .map(|&v| {
-            ops.square();
-            ops.add();
-            v * v
-        })
-        .sum::<i64>();
+    let sw: i64 = -w.iter().map(|&v| v * v).sum::<i64>();
 
     // per-sample squares, one each (shared across windows)
-    let x2: Vec<i64> = x
-        .iter()
-        .map(|&v| {
-            ops.square();
-            v * v
-        })
-        .collect();
+    let x2: Vec<i64> = x.iter().map(|&v| v * v).collect();
 
-    let y = (0..=x.len() - n)
-        .map(|k| {
-            let mut acc = sw;
-            ops.add();
-            for i in 0..n {
-                let s = w[i] + x[i + k];
-                acc += s * s - x2[i + k];
-                ops.square();
-                ops.add_n(3);
-            }
-            ops.shift();
-            acc >> 1
-        })
-        .collect();
+    // seed every output with Sw, then accumulate tap-major: for tap i the
+    // window term (w_i + x_{i+k})² − x²_{i+k} is one contiguous row sweep
+    let mut y = vec![sw; k_out];
+    for (i, &wi) in w.iter().enumerate() {
+        kernels::sq_sub_acc_row(&mut y, wi, &x[i..i + k_out], &x2[i..i + k_out]);
+    }
+    for v in y.iter_mut() {
+        *v >>= 1; // the trailing exact ÷2 of eq. (11)
+    }
+
+    // hoisted ledger ≡ per-element counting (asserted by tests):
+    // Sw: N squares + N adds; shared x²: L squares; window: N·K squares,
+    // 3 adds each, plus the per-output seed add and final shift
+    let (nu, lu, ku) = (n as u64, l as u64, k_out as u64);
+    let ops = OpCounts {
+        mults: 0,
+        squares: nu + lu + nu * ku,
+        adds: nu + ku + 3 * nu * ku,
+        shifts: ku,
+    };
     (y, ops)
 }
 
-/// Direct 2-D valid correlation (eq. 12).
+/// Direct 2-D valid correlation (eq. 12), tap-major over contiguous
+/// output rows; hoisted ledger.
 pub fn conv2d_direct(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
     let (kh, kw) = (w.rows, w.cols);
     assert!(x.rows >= kh && x.cols >= kw);
-    let mut ops = OpCounts::ZERO;
-    let out = Matrix::from_fn(x.rows - kh + 1, x.cols - kw + 1, |h, k| {
-        let mut acc = 0;
+    let (out_h, out_w) = (x.rows - kh + 1, x.cols - kw + 1);
+    let mut out = Matrix::zeros(out_h, out_w);
+    for h in 0..out_h {
+        let out_row = &mut out.data_mut()[h * out_w..(h + 1) * out_w];
         for i in 0..kh {
-            for j in 0..kw {
-                acc += w.get(i, j) * x.get(h + i, k + j);
-                ops.mult();
-                ops.add();
+            let w_row = w.row(i);
+            let x_row = x.row(h + i);
+            for (j, &wij) in w_row.iter().enumerate() {
+                kernels::mul_acc_row(out_row, wij, &x_row[j..j + out_w]);
             }
         }
-        acc
-    });
+    }
+    let taps = (kh * kw * out_h * out_w) as u64;
+    let ops = OpCounts { mults: taps, adds: taps, ..OpCounts::ZERO };
     (out, ops)
 }
 
 /// Square-based 2-D correlation (eq. 13/14): per-sample x² shared across
-/// every kernel placement covering it (§5.1).
+/// every kernel placement covering it (§5.1). Tap-major: each kernel
+/// weight sweeps one contiguous output row through the fused
+/// `(s+x)² − x²` engine kernel; the ledger is hoisted.
 pub fn conv2d_square(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
     let (kh, kw) = (w.rows, w.cols);
     assert!(x.rows >= kh && x.cols >= kw);
-    let mut ops = OpCounts::ZERO;
+    let (out_h, out_w) = (x.rows - kh + 1, x.cols - kw + 1);
 
-    let sw: i64 = -(0..kh)
-        .flat_map(|i| (0..kw).map(move |j| (i, j)))
-        .map(|(i, j)| {
-            ops.square();
-            ops.add();
-            let v = w.get(i, j);
-            v * v
-        })
-        .sum::<i64>();
+    // Sw = −Σ w² over the flat kernel
+    let sw: i64 = -w.data().iter().map(|&v| v * v).sum::<i64>();
 
     // one square per input sample, shared (§5.1)
-    let mut x2 = Matrix::zeros(x.rows, x.cols);
-    for i in 0..x.rows {
-        for j in 0..x.cols {
-            let v = x.get(i, j);
-            x2.set(i, j, v * v);
-            ops.square();
+    let x2 = x.map(|v| v * v);
+
+    let mut out = Matrix::zeros(out_h, out_w);
+    for h in 0..out_h {
+        let out_row = &mut out.data_mut()[h * out_w..(h + 1) * out_w];
+        for v in out_row.iter_mut() {
+            *v = sw;
+        }
+        for i in 0..kh {
+            let w_row = w.row(i);
+            let x_row = x.row(h + i);
+            let x2_row = x2.row(h + i);
+            for (j, &wij) in w_row.iter().enumerate() {
+                kernels::sq_sub_acc_row(
+                    out_row,
+                    wij,
+                    &x_row[j..j + out_w],
+                    &x2_row[j..j + out_w],
+                );
+            }
+        }
+        for v in out_row.iter_mut() {
+            *v >>= 1;
         }
     }
 
-    let out = Matrix::from_fn(x.rows - kh + 1, x.cols - kw + 1, |h, k| {
-        let mut acc = sw;
-        ops.add();
-        for i in 0..kh {
-            for j in 0..kw {
-                let s = w.get(i, j) + x.get(h + i, k + j);
-                acc += s * s - x2.get(h + i, k + j);
-                ops.square();
-                ops.add_n(3);
-            }
-        }
-        ops.shift();
-        acc >> 1
-    });
+    // hoisted ledger ≡ per-element counting (asserted by tests)
+    let t = (kh * kw) as u64; // taps
+    let l = (x.rows * x.cols) as u64; // shared sample squares
+    let k = (out_h * out_w) as u64; // outputs
+    let ops = OpCounts {
+        mults: 0,
+        squares: t + l + t * k,
+        adds: t + k + 3 * t * k,
+        shifts: k,
+    };
     (out, ops)
 }
 
-/// Direct complex correlation (eq. 27).
+/// Direct complex correlation (eq. 27), tap-major with a hoisted ledger.
 pub fn cconv1d_direct(
     w: &[Complex<i64>],
     x: &[Complex<i64>],
 ) -> (Vec<Complex<i64>>, OpCounts) {
     let n = w.len();
     assert!(x.len() >= n);
-    let mut ops = OpCounts::ZERO;
-    let y = (0..=x.len() - n)
-        .map(|k| {
-            let mut acc = Complex::ZERO;
-            for i in 0..n {
-                acc += cmul_direct(w[i], x[i + k]);
-                ops.mults += 4;
-                ops.add_n(4);
-            }
-            acc
-        })
-        .collect();
+    let k_out = x.len() - n + 1;
+    let mut y = vec![Complex::ZERO; k_out];
+    for (i, &wi) in w.iter().enumerate() {
+        kernels::cmul_acc_crow(&mut y, wi, &x[i..i + k_out]);
+    }
+    let nk = (n * k_out) as u64;
+    let ops = OpCounts { mults: 4 * nk, adds: 4 * nk, ..OpCounts::ZERO };
     (y, ops)
 }
 
 /// Complex correlation with the 4-square CPM (eq. 28/29, Fig. 11).
+///
+/// Planar (re/im) accumulators, tap-major through the engine's CPM
+/// convolution row kernel; the per-sample energy `x²+y²` is computed once
+/// and shared by every window (Fig. 11 dataflow). Hoisted ledger.
 pub fn cconv1d_cpm(
     w: &[Complex<i64>],
     x: &[Complex<i64>],
 ) -> (Vec<Complex<i64>>, OpCounts) {
     let n = w.len();
     assert!(x.len() >= n);
-    let mut ops = OpCounts::ZERO;
+    let l = x.len();
+    let k_out = l - n + 1;
 
     // Sw = −Σ (c² + s²)  (eq. 30)
-    let sw: i64 = -w
-        .iter()
-        .map(|v| {
-            ops.squares += 2;
-            ops.add_n(2);
-            v.re * v.re + v.im * v.im
-        })
-        .sum::<i64>();
+    let sw: i64 = -w.iter().map(|v| v.re * v.re + v.im * v.im).sum::<i64>();
 
     // per-sample energy x²+y², one pair of squares per sample, shared
-    let e: Vec<i64> = x
-        .iter()
-        .map(|v| {
-            ops.squares += 2;
-            ops.add();
-            v.re * v.re + v.im * v.im
-        })
+    let e: Vec<i64> = x.iter().map(|v| v.re * v.re + v.im * v.im).collect();
+
+    let mut re = vec![sw; k_out];
+    let mut im = vec![sw; k_out];
+    for (i, &wi) in w.iter().enumerate() {
+        kernels::cpm_conv_acc_rows(&mut re, &mut im, wi, &x[i..i + k_out], &e[i..i + k_out]);
+    }
+    let y = re
+        .into_iter()
+        .zip(im)
+        .map(|(r, i)| Complex::new(r >> 1, i >> 1))
         .collect();
 
-    let y = (0..=x.len() - n)
-        .map(|k| {
-            let (mut re, mut im) = (sw, sw);
-            ops.add_n(2);
-            for i in 0..n {
-                let wv = w[i];
-                let xv = x[i + k];
-                let t1 = wv.re + xv.re;
-                let t2 = wv.im - xv.im;
-                let t3 = wv.im + xv.re;
-                let t4 = wv.re + xv.im;
-                re += t1 * t1 + t2 * t2 - e[i + k];
-                im += t3 * t3 + t4 * t4 - e[i + k];
-                ops.squares += 4;
-                ops.add_n(10);
-            }
-            ops.shifts += 2;
-            Complex::new(re >> 1, im >> 1)
-        })
-        .collect();
+    // hoisted ledger ≡ per-element counting (asserted by tests):
+    // Sw 2N sq + 2N add; energy 2L sq + L add; window 4 sq + 10 add per
+    // tap·output, 2 seed adds and 2 shifts per output
+    let (nu, lu, ku) = (n as u64, l as u64, k_out as u64);
+    let ops = OpCounts {
+        mults: 0,
+        squares: 2 * nu + 2 * lu + 4 * nu * ku,
+        adds: 2 * nu + lu + 2 * ku + 10 * nu * ku,
+        shifts: 2 * ku,
+    };
     (y, ops)
 }
 
 /// Complex correlation with the 3-square CPM3 (eq. 45/46, Fig. 14).
+///
+/// Planar accumulators, tap-major through the engine's CPM3 convolution
+/// row kernel; the three per-sample common squares are computed once and
+/// shared across windows. Hoisted ledger.
 pub fn cconv1d_cpm3(
     w: &[Complex<i64>],
     x: &[Complex<i64>],
 ) -> (Vec<Complex<i64>>, OpCounts) {
     let n = w.len();
     assert!(x.len() >= n);
-    let mut ops = OpCounts::ZERO;
+    let l = x.len();
+    let k_out = l - n + 1;
 
     // eq. (47): Sw = Σ(−c² + (c+s)²) + j·Σ(−c² − (s−c)²)
     let (mut sw_re, mut sw_im) = (0i64, 0i64);
@@ -229,42 +231,47 @@ pub fn cconv1d_cpm3(
         let sc = v.im - v.re;
         sw_re += -c2 + cs * cs;
         sw_im += -c2 - sc * sc;
-        ops.squares += 3;
-        ops.add_n(6);
     }
 
     // common per-sample terms (−(x+y)²+y²) and (−(x+y)²−x²): 3 squares per
     // sample — (x+y)², x², y² — shared across windows
-    let mut com_re = Vec::with_capacity(x.len());
-    let mut com_im = Vec::with_capacity(x.len());
+    let mut com_re = Vec::with_capacity(l);
+    let mut com_im = Vec::with_capacity(l);
     for v in x {
         let xy = v.re + v.im;
         let xy2 = xy * xy;
         com_re.push(-xy2 + v.im * v.im);
         com_im.push(-xy2 - v.re * v.re);
-        ops.squares += 3;
-        ops.add_n(5);
     }
 
-    let y = (0..=x.len() - n)
-        .map(|k| {
-            let (mut re, mut im) = (sw_re, sw_im);
-            for i in 0..n {
-                let wv = w[i];
-                let xv = x[i + k];
-                let t = wv.re + xv.re + xv.im; // c + x + y — shared square
-                let t = t * t;
-                let u = xv.im + wv.re + wv.im; // y + c + s
-                let v2 = xv.re + wv.im - wv.re; // x + s − c
-                re += t - u * u + com_re[i + k];
-                im += t + v2 * v2 + com_im[i + k];
-                ops.squares += 3;
-                ops.add_n(10);
-            }
-            ops.shifts += 2;
-            Complex::new(re >> 1, im >> 1)
-        })
+    let mut re = vec![sw_re; k_out];
+    let mut im = vec![sw_im; k_out];
+    for (i, &wi) in w.iter().enumerate() {
+        kernels::cpm3_conv_acc_rows(
+            &mut re,
+            &mut im,
+            wi,
+            &x[i..i + k_out],
+            &com_re[i..i + k_out],
+            &com_im[i..i + k_out],
+        );
+    }
+    let y = re
+        .into_iter()
+        .zip(im)
+        .map(|(r, i)| Complex::new(r >> 1, i >> 1))
         .collect();
+
+    // hoisted ledger ≡ per-element counting (asserted by tests):
+    // Sw 3N sq + 6N add; common terms 3L sq + 5L add; window 3 sq + 10 add
+    // per tap·output, 2 shifts per output
+    let (nu, lu, ku) = (n as u64, l as u64, k_out as u64);
+    let ops = OpCounts {
+        mults: 0,
+        squares: 3 * nu + 3 * lu + 3 * nu * ku,
+        adds: 6 * nu + 5 * lu + 10 * nu * ku,
+        shifts: 2 * ku,
+    };
     (y, ops)
 }
 
@@ -354,6 +361,116 @@ mod tests {
             let (c3, _) = cconv1d_cpm3(&w, &x);
             assert_eq!(d, c4);
             assert_eq!(d, c3);
+        }
+    }
+
+    /// Re-derive every conv ledger the way the seed tree did — one closure
+    /// call per scalar operation — and assert the hoisted formulas are
+    /// identical, field by field.
+    #[test]
+    fn hoisted_ledgers_equal_per_element() {
+        fn conv1d_direct_ref(n: usize, l: usize) -> OpCounts {
+            let mut ops = OpCounts::ZERO;
+            for _k in 0..=(l - n) {
+                for _i in 0..n {
+                    ops.mult();
+                    ops.add();
+                }
+            }
+            ops
+        }
+        fn conv1d_square_ref(n: usize, l: usize) -> OpCounts {
+            let mut ops = OpCounts::ZERO;
+            for _ in 0..n {
+                ops.square();
+                ops.add();
+            }
+            for _ in 0..l {
+                ops.square();
+            }
+            for _k in 0..=(l - n) {
+                ops.add();
+                for _i in 0..n {
+                    ops.square();
+                    ops.add_n(3);
+                }
+                ops.shift();
+            }
+            ops
+        }
+        fn conv2d_ref(kh: usize, kw: usize, h: usize, w: usize) -> (OpCounts, OpCounts) {
+            let mut direct = OpCounts::ZERO;
+            let mut square = OpCounts::ZERO;
+            for _ in 0..kh * kw {
+                square.square();
+                square.add();
+            }
+            for _ in 0..h * w {
+                square.square();
+            }
+            for _out in 0..(h - kh + 1) * (w - kw + 1) {
+                square.add();
+                for _tap in 0..kh * kw {
+                    direct.mult();
+                    direct.add();
+                    square.square();
+                    square.add_n(3);
+                }
+                square.shift();
+            }
+            (direct, square)
+        }
+        fn cconv_refs(n: usize, l: usize) -> (OpCounts, OpCounts, OpCounts) {
+            let (mut direct, mut cpm, mut cpm3) =
+                (OpCounts::ZERO, OpCounts::ZERO, OpCounts::ZERO);
+            for _ in 0..n {
+                cpm.squares += 2;
+                cpm.add_n(2);
+                cpm3.squares += 3;
+                cpm3.add_n(6);
+            }
+            for _ in 0..l {
+                cpm.squares += 2;
+                cpm.add();
+                cpm3.squares += 3;
+                cpm3.add_n(5);
+            }
+            for _k in 0..=(l - n) {
+                cpm.add_n(2);
+                for _i in 0..n {
+                    direct.mults += 4;
+                    direct.add_n(4);
+                    cpm.squares += 4;
+                    cpm.add_n(10);
+                    cpm3.squares += 3;
+                    cpm3.add_n(10);
+                }
+                cpm.shifts += 2;
+                cpm3.shifts += 2;
+            }
+            (direct, cpm, cpm3)
+        }
+
+        let mut rng = Rng::new(26);
+        for (n, l) in [(1usize, 1usize), (3, 17), (16, 128)] {
+            let w = rng.vec_i64(n, -50, 50);
+            let x = rng.vec_i64(l, -50, 50);
+            assert_eq!(conv1d_direct(&w, &x).1, conv1d_direct_ref(n, l), "direct {n}/{l}");
+            assert_eq!(conv1d_square(&w, &x).1, conv1d_square_ref(n, l), "square {n}/{l}");
+
+            let cw = rand_cvec(&mut rng, n, 50);
+            let cx = rand_cvec(&mut rng, l, 50);
+            let (dref, c4ref, c3ref) = cconv_refs(n, l);
+            assert_eq!(cconv1d_direct(&cw, &cx).1, dref, "cdirect {n}/{l}");
+            assert_eq!(cconv1d_cpm(&cw, &cx).1, c4ref, "cpm {n}/{l}");
+            assert_eq!(cconv1d_cpm3(&cw, &cx).1, c3ref, "cpm3 {n}/{l}");
+        }
+        for (kh, kw, h, w_) in [(1usize, 1usize, 1usize, 1usize), (3, 2, 9, 11)] {
+            let ker = Matrix::random(&mut rng, kh, kw, -30, 30);
+            let x = Matrix::random(&mut rng, h, w_, -30, 30);
+            let (dref, sref) = conv2d_ref(kh, kw, h, w_);
+            assert_eq!(conv2d_direct(&ker, &x).1, dref);
+            assert_eq!(conv2d_square(&ker, &x).1, sref);
         }
     }
 

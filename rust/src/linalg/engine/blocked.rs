@@ -1,0 +1,460 @@
+//! Cache-blocked square-based matmul with precomputed-correction caching.
+//!
+//! The compute is eq. (4): `C = ½(Sab + Sa·1ᵀ + 1·Sbᵀ)` with
+//! `Sab_ij = Σ_k (a_ik + b_kj)²`. The engine tiles the k and j loops so a
+//! `block_k × block_n` panel of B stays cache-resident while every output
+//! row in the partition streams over it, seeds each output row with the
+//! rank-1 corrections (the Fig. 1b register protocol), and finishes with
+//! the exact ÷2. Ledgers are hoisted — deterministic in the shape — so the
+//! inner loops carry no bookkeeping.
+
+use super::super::counts::OpCounts;
+use super::super::matrix::Matrix;
+use super::{kernels, threaded, SquareScalar};
+
+/// Tiling / parallelism knobs for the engine.
+///
+/// Defaults suit the CI machine: 64 k-steps × 512 output columns of `i64`
+/// is a 256 KiB B-panel (fits L2) and the C-row slice stays in L1.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// contraction-dimension tile (rows of B per panel)
+    pub block_k: usize,
+    /// output-column tile (columns of B/C per panel)
+    pub block_n: usize,
+    /// worker threads for the row-partitioned driver; 1 = single-threaded
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { block_k: 64, block_n: 512, threads: 1 }
+    }
+}
+
+impl EngineConfig {
+    /// Default blocking with one worker per available core.
+    pub fn threaded() -> Self {
+        Self { threads: threaded::max_threads(), ..Self::default() }
+    }
+
+    /// Default blocking with an explicit thread count.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1), ..Self::default() }
+    }
+}
+
+/// Row corrections `Sa_i = −Σ_k a_ik²` over contiguous row slices.
+pub fn row_corrections_flat<T: SquareScalar>(a: &Matrix<T>) -> Vec<T> {
+    (0..a.rows)
+        .map(|i| {
+            let mut acc = T::default();
+            for &v in a.row(i) {
+                acc += v * v;
+            }
+            -acc
+        })
+        .collect()
+}
+
+/// Column corrections `Sb_j = −Σ_k b_kj²`, accumulated row-sweep so the
+/// access pattern stays contiguous (no strided column walks).
+pub fn col_corrections_flat<T: SquareScalar>(b: &Matrix<T>) -> Vec<T> {
+    let mut sb = vec![T::default(); b.cols];
+    for k in 0..b.rows {
+        for (s, &v) in sb.iter_mut().zip(b.row(k)) {
+            *s += v * v;
+        }
+    }
+    for s in sb.iter_mut() {
+        *s = -*s;
+    }
+    sb
+}
+
+/// Hoisted ledger of the full square-based matmul (corrections included):
+/// `M·N·P + M·N + N·P` squares, zero general multiplications — eq. (5)/(6).
+pub fn square_matmul_ledger(m: usize, n: usize, p: usize) -> OpCounts {
+    let (m, n, p) = (m as u64, n as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        squares: m * n * p + m * n + n * p,
+        adds: m * n + n * p + 2 * m * n * p + m * p,
+        shifts: m * p,
+    }
+}
+
+/// Hoisted ledger of the constant-B case (§3 inference): the `N·P`
+/// correction squares are amortised away, leaving `M·N·P + M·N`.
+pub fn square_matmul_const_b_ledger(m: usize, n: usize, p: usize) -> OpCounts {
+    let (m, n, p) = (m as u64, n as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        squares: m * n * p + m * n,
+        adds: m * n + m * p + 2 * m * n * p,
+        shifts: m * p,
+    }
+}
+
+/// The two-level tile sweep shared by every kernel flavour: for each
+/// `block_k × block_n` panel of B, every row of the partition `[i0, i1)`
+/// streams over it through `kernel(c_slice, a_ik, b_row_slice)`.
+fn tile_sweep<T: SquareScalar>(
+    c_rows: &mut [T],
+    i0: usize,
+    i1: usize,
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    cfg: &EngineConfig,
+    kernel: impl Fn(&mut [T], T, &[T]),
+) {
+    let n = a.cols;
+    let p = b.cols;
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * p);
+    let bk = cfg.block_k.max(1);
+    let bn = cfg.block_n.max(1);
+    let mut kc = 0;
+    while kc < n {
+        let k_end = (kc + bk).min(n);
+        let mut jc = 0;
+        while jc < p {
+            let j_end = (jc + bn).min(p);
+            for ri in 0..(i1 - i0) {
+                let a_row = a.row(i0 + ri);
+                let c_row = &mut c_rows[ri * p + jc..ri * p + j_end];
+                for k in kc..k_end {
+                    kernel(c_row, a_row[k], &b.row(k)[jc..j_end]);
+                }
+            }
+            jc = j_end;
+        }
+        kc = k_end;
+    }
+}
+
+/// The tiled square core over a contiguous row partition `[i0, i1)` of C.
+/// `c_rows` is exactly that partition's row-major storage.
+fn block_rows_into<T: SquareScalar>(
+    c_rows: &mut [T],
+    i0: usize,
+    i1: usize,
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    sa: &[T],
+    sb: &[T],
+    cfg: &EngineConfig,
+) {
+    let p = b.cols;
+
+    // seed each output row with the rank-1 corrections
+    for ri in 0..(i1 - i0) {
+        let sai = sa[i0 + ri];
+        for (cv, &sbj) in c_rows[ri * p..(ri + 1) * p].iter_mut().zip(sb) {
+            *cv = sai + sbj;
+        }
+    }
+
+    // tiled i-k-j accumulation of the (a+b)² window terms
+    tile_sweep(c_rows, i0, i1, a, b, cfg, kernels::sq_acc_row);
+
+    // the trailing exact ÷2 of eq. (4)
+    for v in c_rows.iter_mut() {
+        *v = v.halve();
+    }
+}
+
+/// Threads actually worth spawning for `m·n·p` useful operations:
+/// `std::thread::scope` creates and joins OS threads per call, which only
+/// pays off once each worker gets a substantial slice. Below the
+/// threshold the work degrades gracefully toward single-threaded. Public
+/// so callers (CLI banners, capacity planning) can report the real
+/// parallelism a shape will get rather than the requested knob.
+pub fn effective_threads(cfg_threads: usize, m: usize, n: usize, p: usize) -> usize {
+    // ≈128k inner-loop ops (~100 µs) per additional thread
+    const MIN_WORK_PER_THREAD: usize = 1 << 17;
+    let work = m.saturating_mul(n).saturating_mul(p);
+    cfg_threads
+        .max(1)
+        .min(m.max(1))
+        .min(work / MIN_WORK_PER_THREAD + 1)
+}
+
+/// Compute-only core shared by every public entry point (and by the
+/// reference stack in `linalg::matmul`): corrections are supplied by the
+/// caller, the ledger is the caller's business.
+pub(crate) fn matmul_square_core<T: SquareScalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    sa: &[T],
+    sb: &[T],
+    cfg: &EngineConfig,
+) -> Matrix<T> {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    debug_assert_eq!(sa.len(), a.rows);
+    debug_assert_eq!(sb.len(), b.cols);
+    let (m, p) = (a.rows, b.cols);
+    let mut c = Matrix::zeros(m, p);
+    let threads = effective_threads(cfg.threads, m, a.cols, p);
+    if threads <= 1 {
+        block_rows_into(c.data_mut(), 0, m, a, b, sa, sb, cfg);
+    } else {
+        threaded::for_row_chunks(c.data_mut(), m, p, threads, |i0, i1, chunk| {
+            block_rows_into(chunk, i0, i1, a, b, sa, sb, cfg);
+        });
+    }
+    c
+}
+
+/// Blocked (and, with `cfg.threads > 1`, multi-threaded) square-based
+/// `C = AB`. Bit-exact for `i64`; for floats it is the same arithmetic as
+/// [`matmul_square_f64`](super::super::matmul::matmul_square_f64) in a
+/// cache-friendly order.
+pub fn matmul_square_blocked<T: SquareScalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    cfg: &EngineConfig,
+) -> (Matrix<T>, OpCounts) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let sa = row_corrections_flat(a);
+    let sb = col_corrections_flat(b);
+    let c = matmul_square_core(a, b, &sa, &sb, cfg);
+    (c, square_matmul_ledger(a.rows, a.cols, b.cols))
+}
+
+/// A constant B operand with its `Sb_j` corrections precomputed — the
+/// paper's §3 inference case. Build once per model (weights), reuse for
+/// every request: each call then pays only the `M·N` activation
+/// corrections, never the `N·P` weight corrections.
+#[derive(Debug, Clone)]
+pub struct PreparedB<T> {
+    b: Matrix<T>,
+    sb: Vec<T>,
+}
+
+impl<T: SquareScalar> PreparedB<T> {
+    /// Prepare a weight matrix: computes and caches `Sb`. The returned
+    /// ledger is the one-time preparation cost (`N·P` squares).
+    pub fn new(b: Matrix<T>) -> (Self, OpCounts) {
+        let np = (b.rows * b.cols) as u64;
+        let sb = col_corrections_flat(&b);
+        (Self { b, sb }, OpCounts { squares: np, adds: np, ..OpCounts::ZERO })
+    }
+
+    pub fn matrix(&self) -> &Matrix<T> {
+        &self.b
+    }
+
+    /// The cached `Sb_j = −Σ_k b_kj²` corrections.
+    pub fn corrections(&self) -> &[T] {
+        &self.sb
+    }
+
+    /// Input features a request row must carry (rows of B).
+    pub fn in_features(&self) -> usize {
+        self.b.rows
+    }
+
+    /// Output features per request row (columns of B).
+    pub fn out_features(&self) -> usize {
+        self.b.cols
+    }
+}
+
+/// Square-based `C = A·B` against a prepared (constant) B: the per-call
+/// ledger drops the `N·P` correction squares that [`PreparedB::new`]
+/// already paid.
+pub fn matmul_square_prepared<T: SquareScalar>(
+    a: &Matrix<T>,
+    pb: &PreparedB<T>,
+    cfg: &EngineConfig,
+) -> (Matrix<T>, OpCounts) {
+    assert_eq!(a.cols, pb.b.rows, "contraction mismatch");
+    let sa = row_corrections_flat(a);
+    let c = matmul_square_core(a, &pb.b, &sa, &pb.sb, cfg);
+    (c, square_matmul_const_b_ledger(a.rows, a.cols, pb.b.cols))
+}
+
+/// Direct `C = AB` in the same blocked row-sliced form — the multiplier
+/// baseline for perf comparisons and the shadow executor.
+pub fn matmul_direct_blocked<T: SquareScalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    cfg: &EngineConfig,
+) -> (Matrix<T>, OpCounts) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let (m, n, p) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, p);
+    let threads = effective_threads(cfg.threads, m, n, p);
+    if threads <= 1 {
+        tile_sweep(c.data_mut(), 0, m, a, b, cfg, kernels::mul_acc_row);
+    } else {
+        threaded::for_row_chunks(c.data_mut(), m, p, threads, |i0, i1, chunk| {
+            tile_sweep(chunk, i0, i1, a, b, cfg, kernels::mul_acc_row);
+        });
+    }
+    let mnp = (m * n * p) as u64;
+    (c, OpCounts { mults: mnp, adds: mnp, ..OpCounts::ZERO })
+}
+
+/// The pre-engine baseline: per-element `get`/`set` square-based matmul,
+/// exactly as the seed tree computed it. Kept (unused by the hot path) as
+/// the comparison point for the `blocked_engine` perf gate and as a
+/// second, independently-written implementation for the equivalence tests.
+pub fn matmul_square_naive<T: SquareScalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let (m, n, p) = (a.rows, a.cols, b.cols);
+    let sa: Vec<T> = (0..m)
+        .map(|i| {
+            let mut acc = T::default();
+            for k in 0..n {
+                acc += a.get(i, k) * a.get(i, k);
+            }
+            -acc
+        })
+        .collect();
+    let sb: Vec<T> = (0..p)
+        .map(|j| {
+            let mut acc = T::default();
+            for k in 0..n {
+                acc += b.get(k, j) * b.get(k, j);
+            }
+            -acc
+        })
+        .collect();
+    let mut c = Matrix::zeros(m, p);
+    for i in 0..m {
+        for j in 0..p {
+            let mut acc = sa[i] + sb[j];
+            for k in 0..n {
+                let s = a.get(i, k) + b.get(k, j);
+                acc += s * s;
+            }
+            c.set(i, j, acc.halve());
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::matmul::{matmul_direct, matmul_direct_f64, matmul_square};
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    fn tiny_cfg(threads: usize) -> EngineConfig {
+        // tiny tiles so even small matrices cross several block boundaries
+        EngineConfig { block_k: 3, block_n: 5, threads }
+    }
+
+    #[test]
+    fn blocked_matches_direct_and_naive_across_shapes() {
+        forall(
+            0xB10C,
+            60,
+            |rng, size| {
+                let m = rng.usize_in(1, size.max(1).min(14));
+                let n = rng.usize_in(1, size.max(1).min(14));
+                let p = rng.usize_in(1, size.max(1).min(14));
+                (
+                    Matrix::random(rng, m, n, -1000, 1000),
+                    Matrix::random(rng, n, p, -1000, 1000),
+                )
+            },
+            |(a, b)| {
+                let want = matmul_direct(a, b).0;
+                let (got, _) = matmul_square_blocked(a, b, &tiny_cfg(1));
+                if got != want {
+                    return Err(format!(
+                        "blocked mismatch at {}x{}x{}",
+                        a.rows, a.cols, b.cols
+                    ));
+                }
+                if matmul_square_naive(a, b) != want {
+                    return Err("naive mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threaded_equals_single_threaded() {
+        let mut rng = Rng::new(0x7412);
+        for (m, n, p) in [(1usize, 7usize, 9usize), (5, 16, 3), (33, 20, 41), (64, 64, 64)] {
+            let a = Matrix::random(&mut rng, m, n, -500, 500);
+            let b = Matrix::random(&mut rng, n, p, -500, 500);
+            let (single, ops1) = matmul_square_blocked(&a, &b, &tiny_cfg(1));
+            let (multi, ops4) = matmul_square_blocked(&a, &b, &tiny_cfg(4));
+            assert_eq!(single, multi, "{m}x{n}x{p}");
+            assert_eq!(ops1, ops4);
+        }
+    }
+
+    #[test]
+    fn ledger_matches_reference_matmul_square() {
+        let mut rng = Rng::new(0x1ED6);
+        for (m, n, p) in [(1usize, 1usize, 1usize), (4, 6, 3), (16, 16, 16), (7, 11, 5)] {
+            let a = Matrix::random(&mut rng, m, n, -100, 100);
+            let b = Matrix::random(&mut rng, n, p, -100, 100);
+            let (c_ref, ops_ref) = matmul_square(&a, &b);
+            let (c, ops) = matmul_square_blocked(&a, &b, &EngineConfig::default());
+            assert_eq!(c, c_ref);
+            assert_eq!(ops, ops_ref, "hoisted engine ledger diverged at {m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn prepared_b_amortises_weight_corrections() {
+        let mut rng = Rng::new(0xCAC4E);
+        let a = Matrix::random(&mut rng, 6, 8, -50, 50);
+        let b = Matrix::random(&mut rng, 8, 4, -50, 50);
+        let (full, full_ops) = matmul_square_blocked(&a, &b, &tiny_cfg(1));
+        let (pb, prep_ops) = PreparedB::new(b);
+        assert_eq!(pb.in_features(), 8);
+        assert_eq!(pb.out_features(), 4);
+        let (amortised, call_ops) = matmul_square_prepared(&a, &pb, &tiny_cfg(2));
+        assert_eq!(amortised, full);
+        // one-time prep + per-call == full ledger (the §3 amortisation claim)
+        assert_eq!(call_ops.squares + prep_ops.squares, full_ops.squares);
+        assert_eq!(call_ops.squares, 6 * 8 * 4 + 6 * 8);
+    }
+
+    #[test]
+    fn f32_engine_is_exact_on_integer_data() {
+        // integer-valued f32 inputs keep every intermediate below 2^24, so
+        // the float engine must agree exactly with the f64 direct product
+        let mut rng = Rng::new(0xF32);
+        let ai = Matrix::random(&mut rng, 9, 13, -64, 64);
+        let bi = Matrix::random(&mut rng, 13, 7, -64, 64);
+        let a32 = ai.map(|v| v as f32);
+        let b32 = bi.map(|v| v as f32);
+        let (c32, _) = matmul_square_blocked(&a32, &b32, &tiny_cfg(2));
+        let want = matmul_direct_f64(&ai.map(|v| v as f64), &bi.map(|v| v as f64));
+        for (g, w) in c32.data().iter().zip(want.data()) {
+            assert_eq!(*g as f64, *w);
+        }
+    }
+
+    #[test]
+    fn direct_blocked_matches_reference() {
+        let mut rng = Rng::new(0xD1);
+        let a = Matrix::random(&mut rng, 12, 19, -300, 300);
+        let b = Matrix::random(&mut rng, 19, 8, -300, 300);
+        let (want, want_ops) = matmul_direct(&a, &b);
+        let (got, ops) = matmul_direct_blocked(&a, &b, &tiny_cfg(3));
+        assert_eq!(got, want);
+        assert_eq!(ops, want_ops);
+    }
+
+    #[test]
+    fn degenerate_empty_shapes() {
+        let a: Matrix<i64> = Matrix::zeros(0, 5);
+        let b: Matrix<i64> = Matrix::zeros(5, 4);
+        let (c, _) = matmul_square_blocked(&a, &b, &EngineConfig::threaded());
+        assert_eq!((c.rows, c.cols), (0, 4));
+        let a: Matrix<i64> = Matrix::zeros(3, 0);
+        let b: Matrix<i64> = Matrix::zeros(0, 2);
+        let (c, _) = matmul_square_blocked(&a, &b, &EngineConfig::default());
+        assert_eq!(c, Matrix::zeros(3, 2));
+    }
+}

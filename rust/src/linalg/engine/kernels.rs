@@ -1,0 +1,223 @@
+//! Flat row-slice inner loops — the one place the hot arithmetic lives.
+//!
+//! Every kernel walks contiguous slices with no index arithmetic beyond the
+//! zip, so the compiler can unroll/vectorise, and carries **no** ledger
+//! bookkeeping: callers hoist their [`OpCounts`](crate::linalg::OpCounts)
+//! as a function of the shape (the tests in `linalg::conv`/`linalg::complex`
+//! assert the hoisted ledgers equal per-element counting).
+
+use crate::arith::complex::Complex;
+
+use super::SquareScalar;
+
+/// Square-accumulate one row: `acc[j] += (s + b[j])²` — the eq. (4) window
+/// term for one `(i, k)` pair spread across a row of C.
+#[inline(always)]
+pub fn sq_acc_row<T: SquareScalar>(acc: &mut [T], s: T, b: &[T]) {
+    debug_assert_eq!(acc.len(), b.len());
+    for (c, &bv) in acc.iter_mut().zip(b) {
+        let t = s + bv;
+        *c += t * t;
+    }
+}
+
+/// Square-accumulate with a shared-energy correction:
+/// `acc[j] += (s + x[j])² − x2[j]` — the eq. (11)/(13) convolution window
+/// term, where `x2` is the per-sample square shared across windows.
+#[inline(always)]
+pub fn sq_sub_acc_row<T: SquareScalar>(acc: &mut [T], s: T, x: &[T], x2: &[T]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), x2.len());
+    for ((c, &xv), &ev) in acc.iter_mut().zip(x).zip(x2) {
+        let t = s + xv;
+        *c += t * t - ev;
+    }
+}
+
+/// Multiply-accumulate one row: `acc[j] += a · b[j]` — the direct (eq. 3)
+/// baseline in the same row-sliced form.
+#[inline(always)]
+pub fn mul_acc_row<T: SquareScalar>(acc: &mut [T], a: T, b: &[T]) {
+    debug_assert_eq!(acc.len(), b.len());
+    for (c, &bv) in acc.iter_mut().zip(b) {
+        *c += a * bv;
+    }
+}
+
+/// Direct complex multiply-accumulate row: `z[k] += x · y[k]` (eq. 16,
+/// 4 real mults per element).
+#[inline(always)]
+pub fn cmul_acc_crow(z: &mut [Complex<i64>], x: Complex<i64>, y: &[Complex<i64>]) {
+    debug_assert_eq!(z.len(), y.len());
+    let (a, b) = (x.re, x.im);
+    for (zv, &yv) in z.iter_mut().zip(y) {
+        let (c, s) = (yv.re, yv.im);
+        zv.re += a * c - b * s;
+        zv.im += b * c + a * s;
+    }
+}
+
+/// 3-real-mult complex multiply-accumulate row (eq. 31, Karatsuba-style).
+#[inline(always)]
+pub fn cmul3_acc_crow(z: &mut [Complex<i64>], x: Complex<i64>, y: &[Complex<i64>]) {
+    debug_assert_eq!(z.len(), y.len());
+    let (a, b) = (x.re, x.im);
+    for (zv, &yv) in z.iter_mut().zip(y) {
+        let (c, s) = (yv.re, yv.im);
+        let shared = c * (a + b);
+        zv.re += shared - b * (c + s);
+        zv.im += a * (s - c) + shared;
+    }
+}
+
+/// CPM (4-square) partial-multiplication accumulate row (eq. 17–19):
+/// `z[k].re += (a+c)² + (b−s)²`, `z[k].im += (b+c)² + (a+s)²`.
+#[inline(always)]
+pub fn cpm_acc_crow(z: &mut [Complex<i64>], x: Complex<i64>, y: &[Complex<i64>]) {
+    debug_assert_eq!(z.len(), y.len());
+    let (a, b) = (x.re, x.im);
+    for (zv, &yv) in z.iter_mut().zip(y) {
+        let (c, s) = (yv.re, yv.im);
+        let t1 = a + c;
+        let t2 = b - s;
+        let t3 = b + c;
+        let t4 = a + s;
+        zv.re += t1 * t1 + t2 * t2;
+        zv.im += t3 * t3 + t4 * t4;
+    }
+}
+
+/// CPM3 (3-square) partial-multiplication accumulate row (eq. 32–35): the
+/// `(c+a+b)²` square is computed once and feeds both accumulators.
+#[inline(always)]
+pub fn cpm3_acc_crow(z: &mut [Complex<i64>], x: Complex<i64>, y: &[Complex<i64>]) {
+    debug_assert_eq!(z.len(), y.len());
+    let (a, b) = (x.re, x.im);
+    for (zv, &yv) in z.iter_mut().zip(y) {
+        let (c, s) = (yv.re, yv.im);
+        let t = c + a + b;
+        let t = t * t;
+        let u = b + c + s;
+        let v = a + s - c;
+        zv.re += t - u * u;
+        zv.im += t + v * v;
+    }
+}
+
+/// CPM convolution window accumulate (eq. 28/29): one tap `w` against a
+/// run of samples, planar accumulators, per-sample energy `e[j] = x²+y²`
+/// shared across windows: `re[j] += (c+x)² + (s−y)²... − e[j]` per eq. 28.
+#[inline(always)]
+pub fn cpm_conv_acc_rows(
+    re: &mut [i64],
+    im: &mut [i64],
+    w: Complex<i64>,
+    x: &[Complex<i64>],
+    e: &[i64],
+) {
+    debug_assert_eq!(re.len(), im.len());
+    debug_assert_eq!(re.len(), x.len());
+    debug_assert_eq!(re.len(), e.len());
+    let (c, s) = (w.re, w.im);
+    for (((rv, iv), &xv), &ev) in re.iter_mut().zip(im.iter_mut()).zip(x).zip(e) {
+        let t1 = c + xv.re;
+        let t2 = s - xv.im;
+        let t3 = s + xv.re;
+        let t4 = c + xv.im;
+        *rv += t1 * t1 + t2 * t2 - ev;
+        *iv += t3 * t3 + t4 * t4 - ev;
+    }
+}
+
+/// CPM3 convolution window accumulate (eq. 45/46): one tap `w` against a
+/// run of samples with the shared per-sample common terms `com_re`/`com_im`
+/// (3 squares per sample, shared across every window).
+#[inline(always)]
+pub fn cpm3_conv_acc_rows(
+    re: &mut [i64],
+    im: &mut [i64],
+    w: Complex<i64>,
+    x: &[Complex<i64>],
+    com_re: &[i64],
+    com_im: &[i64],
+) {
+    debug_assert_eq!(re.len(), im.len());
+    debug_assert_eq!(re.len(), x.len());
+    debug_assert_eq!(re.len(), com_re.len());
+    debug_assert_eq!(re.len(), com_im.len());
+    let (c, s) = (w.re, w.im);
+    for ((((rv, iv), &xv), &cr), &ci) in re
+        .iter_mut()
+        .zip(im.iter_mut())
+        .zip(x)
+        .zip(com_re)
+        .zip(com_im)
+    {
+        let t = c + xv.re + xv.im;
+        let t = t * t;
+        let u = xv.im + c + s;
+        let v = xv.re + s - c;
+        *rv += t - u * u + cr;
+        *iv += t + v * v + ci;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::complex::{cmul_direct, cpm, cpm3};
+    use crate::testkit::Rng;
+
+    #[test]
+    fn sq_acc_row_matches_scalar() {
+        let mut rng = Rng::new(1);
+        let b = rng.vec_i64(17, -100, 100);
+        let s = rng.i64_in(-100, 100);
+        let mut acc = rng.vec_i64(17, -100, 100);
+        let want: Vec<i64> = acc.iter().zip(&b).map(|(&a, &bv)| a + (s + bv) * (s + bv)).collect();
+        sq_acc_row(&mut acc, s, &b);
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn sq_sub_acc_row_matches_scalar() {
+        let mut rng = Rng::new(2);
+        let x = rng.vec_i64(11, -50, 50);
+        let x2: Vec<i64> = x.iter().map(|&v| v * v).collect();
+        let s = 7;
+        let mut acc = vec![0i64; 11];
+        sq_sub_acc_row(&mut acc, s, &x, &x2);
+        for (a, &xv) in acc.iter().zip(&x) {
+            assert_eq!(*a, (s + xv) * (s + xv) - xv * xv);
+        }
+    }
+
+    #[test]
+    fn complex_rows_match_scalar_cpms() {
+        let mut rng = Rng::new(3);
+        let rc = |rng: &mut Rng| Complex::new(rng.i64_in(-99, 99), rng.i64_in(-99, 99));
+        let x = rc(&mut rng);
+        let y: Vec<Complex<i64>> = (0..9).map(|_| rc(&mut rng)).collect();
+
+        let mut z = vec![Complex::ZERO; 9];
+        cpm_acc_crow(&mut z, x, &y);
+        for (zv, &yv) in z.iter().zip(&y) {
+            assert_eq!(*zv, cpm(x, yv));
+        }
+
+        let mut z = vec![Complex::ZERO; 9];
+        cpm3_acc_crow(&mut z, x, &y);
+        for (zv, &yv) in z.iter().zip(&y) {
+            assert_eq!(*zv, cpm3(x, yv));
+        }
+
+        let mut z = vec![Complex::ZERO; 9];
+        cmul_acc_crow(&mut z, x, &y);
+        let mut z3 = vec![Complex::ZERO; 9];
+        cmul3_acc_crow(&mut z3, x, &y);
+        for ((zv, z3v), &yv) in z.iter().zip(&z3).zip(&y) {
+            assert_eq!(*zv, cmul_direct(x, yv));
+            assert_eq!(z3v, zv);
+        }
+    }
+}

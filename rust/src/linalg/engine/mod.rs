@@ -1,0 +1,88 @@
+//! The blocked, multi-threaded square-kernel engine — the serving hot path.
+//!
+//! The reference stack in [`super::matmul`]/[`super::conv`]/[`super::complex`]
+//! exists to make the paper's op-count claims *auditable*; this module makes
+//! the square-based kernels *fast in software* so the claims survive contact
+//! with production traffic:
+//!
+//! * [`kernels`] — flat row-slice inner loops (`acc[j] += (s + b[j])²` and
+//!   friends, including the CPM/CPM3 complex forms). Every hot loop in the
+//!   reference stack delegates here, so there is exactly one place the
+//!   compiler must vectorise.
+//! * [`blocked`] — cache-blocked (tiled) square-based matmul over any
+//!   [`SquareScalar`] (`i64` bit-exact, `f32`/`f64` for float serving), plus
+//!   [`PreparedB`], the precomputed-correction cache for constant weights:
+//!   the paper's §3 inference case, where `Sb_j = −Σ_k b_kj²` is computed
+//!   once per model and amortised across every request.
+//! * [`threaded`] — a row-partitioned parallel driver on
+//!   `std::thread::scope` (no dependencies): output rows are split into
+//!   contiguous chunks, one scoped thread per chunk, no locks because the
+//!   chunks are disjoint `&mut` slices.
+//!
+//! Ledgers are *hoisted*: an [`OpCounts`](super::OpCounts) is a
+//! deterministic function of the shape (asserted equal to per-element
+//! counting by the tests), so the engine spends zero instructions on
+//! bookkeeping inside the inner loops.
+//!
+//! The serving integration lives in `coordinator::native`: a
+//! [`BatchExecutor`](crate::coordinator::BatchExecutor) backed by these
+//! kernels, so the inference server can serve square-based models without
+//! the PJRT runtime.
+
+pub mod blocked;
+pub mod kernels;
+pub mod threaded;
+
+pub use blocked::{
+    col_corrections_flat, effective_threads, matmul_direct_blocked,
+    matmul_square_blocked, matmul_square_naive, matmul_square_prepared,
+    row_corrections_flat, square_matmul_const_b_ledger, square_matmul_ledger,
+    EngineConfig, PreparedB,
+};
+pub use threaded::max_threads;
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Scalar the square-kernel engine runs on.
+///
+/// `i64` is the bit-exact hardware domain (the trailing ÷2 of eq. 4 is an
+/// arithmetic shift — exact because the sum is always even); `f32`/`f64`
+/// are the float serving domain (÷2 is an exact ×0.5).
+pub trait SquareScalar:
+    Copy
+    + Default
+    + Send
+    + Sync
+    + PartialEq
+    + std::fmt::Debug
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + 'static
+{
+    /// The exact ÷2 recovering eq. (4) from the partial-multiplication sum.
+    fn halve(self) -> Self;
+}
+
+impl SquareScalar for i64 {
+    #[inline(always)]
+    fn halve(self) -> Self {
+        self >> 1
+    }
+}
+
+impl SquareScalar for f32 {
+    #[inline(always)]
+    fn halve(self) -> Self {
+        0.5 * self
+    }
+}
+
+impl SquareScalar for f64 {
+    #[inline(always)]
+    fn halve(self) -> Self {
+        0.5 * self
+    }
+}

@@ -1,0 +1,80 @@
+//! Row-partitioned parallel driver on `std::thread::scope`.
+//!
+//! The output matrix's rows are split into contiguous chunks — one scoped
+//! worker per chunk. Chunks are disjoint `&mut` slices carved with
+//! `chunks_mut`, so there is no locking and no unsafe; the borrow checker
+//! proves the partition. Scoped threads mean the borrowed A/B/corrections
+//! need no `Arc`, keeping the driver dependency-free.
+
+/// Worker count the machine supports (≥ 1 always).
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i0, i1, chunk)` over contiguous row partitions of `data`
+/// (row-major, `rows × cols`), one scoped thread per partition.
+///
+/// `f` sees the absolute row range `[i0, i1)` and that range's storage.
+/// With `threads == 1` (or a single row) it runs inline on the caller's
+/// thread — no spawn cost on the small-shape path.
+pub fn for_row_chunks<T, F>(data: &mut [T], rows: usize, cols: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows);
+    if threads == 1 {
+        f(0, rows, data);
+        return;
+    }
+    let rows_per = (rows + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (ci, chunk) in data.chunks_mut(rows_per * cols).enumerate() {
+            let i0 = ci * rows_per;
+            let i1 = i0 + chunk.len() / cols;
+            let f = &f;
+            scope.spawn(move || f(i0, i1, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_cover_exactly_once() {
+        let (rows, cols) = (13usize, 7usize);
+        let mut data = vec![0u64; rows * cols];
+        for threads in [1, 2, 3, 5, 13, 64] {
+            data.iter_mut().for_each(|v| *v = 0);
+            for_row_chunks(&mut data, rows, cols, threads, |i0, i1, chunk| {
+                assert_eq!(chunk.len(), (i1 - i0) * cols);
+                for (r, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row {
+                        *v += (i0 + r + 1) as u64; // row id, applied once
+                    }
+                }
+            });
+            for (idx, &v) in data.iter().enumerate() {
+                assert_eq!(v, (idx / cols + 1) as u64, "threads={threads} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let mut empty: Vec<i64> = Vec::new();
+        for_row_chunks(&mut empty, 0, 4, 8, |_, _, _| panic!("must not run"));
+        for_row_chunks(&mut empty, 4, 0, 8, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

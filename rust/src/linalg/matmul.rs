@@ -2,6 +2,7 @@
 //! both with exact operation ledgers.
 
 use super::counts::OpCounts;
+use super::engine::{self, EngineConfig};
 use super::matrix::Matrix;
 
 /// Direct `C = AB` (eq. 3), counting M·N·P multiplications.
@@ -29,36 +30,22 @@ pub fn matmul_direct(a: &Matrix<i64>, b: &Matrix<i64>) -> (Matrix<i64>, OpCounts
     (c, ops)
 }
 
-/// Row corrections `Sa_i = −Σ_k a_ik²` (eq. 5). M·N squares.
+/// Row corrections `Sa_i = −Σ_k a_ik²` (eq. 5). M·N squares, ledger
+/// hoisted (one square + one add per element of A).
 pub fn row_corrections(a: &Matrix<i64>, ops: &mut OpCounts) -> Vec<i64> {
-    (0..a.rows)
-        .map(|i| {
-            -a.row(i)
-                .iter()
-                .map(|&x| {
-                    ops.square();
-                    ops.add();
-                    x * x
-                })
-                .sum::<i64>()
-        })
-        .collect()
+    let mn = (a.rows * a.cols) as u64;
+    ops.squares += mn;
+    ops.adds += mn;
+    engine::row_corrections_flat(a)
 }
 
-/// Column corrections `Sb_j = −Σ_k b_kj²` (eq. 5). N·P squares.
+/// Column corrections `Sb_j = −Σ_k b_kj²` (eq. 5). N·P squares, ledger
+/// hoisted; the engine sweeps rows so the access stays contiguous.
 pub fn col_corrections(b: &Matrix<i64>, ops: &mut OpCounts) -> Vec<i64> {
-    (0..b.cols)
-        .map(|j| {
-            -(0..b.rows)
-                .map(|k| {
-                    ops.square();
-                    ops.add();
-                    let x = b.get(k, j);
-                    x * x
-                })
-                .sum::<i64>()
-        })
-        .collect()
+    let np = (b.rows * b.cols) as u64;
+    ops.squares += np;
+    ops.adds += np;
+    engine::col_corrections_flat(b)
 }
 
 /// Square-based `C = AB` via eq. (4): `½(Sab_ij + Sa_i + Sb_j)`.
@@ -72,33 +59,11 @@ pub fn matmul_square(a: &Matrix<i64>, b: &Matrix<i64>) -> (Matrix<i64>, OpCounts
     let sb = col_corrections(b, &mut ops);
     let (m, n, p) = (a.rows, a.cols, b.cols);
 
-    // i-k-j hot loop over contiguous rows (§Perf-L3): seed each output row
-    // with the rank-1 corrections (the Fig. 1b register protocol), then
-    // accumulate partial multiplications per K slice.
-    let mut c = Matrix::zeros(m, p);
-    for i in 0..m {
-        {
-            let sai = sa[i];
-            let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
-            for j in 0..p {
-                c_row[j] = sai + sb[j];
-            }
-        }
-        let a_row = a.row(i);
-        for k in 0..n {
-            let aik = a_row[k];
-            let b_row = b.row(k);
-            let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
-            for j in 0..p {
-                let s = aik + b_row[j];
-                c_row[j] += s * s;
-            }
-        }
-        let c_row = &mut c.data_mut()[i * p..(i + 1) * p];
-        for v in c_row {
-            *v >>= 1; // the trailing exact ÷2 of eq. (4)
-        }
-    }
+    // hot loop delegated to the cache-blocked engine core (§Perf-L3):
+    // row-sliced i-k-j with the rank-1 correction seed (Fig. 1b register
+    // protocol) and the trailing exact ÷2 of eq. (4)
+    let c = engine::blocked::matmul_square_core(a, b, &sa, &sb, &EngineConfig::default());
+
     // ledger, hoisted (deterministic in the shape; tests assert eq. 5):
     // M·N·P window squares, 2 adds each, plus the per-output seed add/shift
     let mnp = (m * n * p) as u64;
@@ -118,23 +83,19 @@ pub fn matmul_square_const_b(
 ) -> (Matrix<i64>, OpCounts) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(sb.len(), b.cols);
+    let (m, n, p) = (a.rows, a.cols, b.cols);
     let mut ops = OpCounts::ZERO;
     let sa = row_corrections(a, &mut ops);
-    let mut c = Matrix::zeros(a.rows, b.cols);
-    for i in 0..a.rows {
-        for j in 0..b.cols {
-            let mut acc = sa[i] + sb[j];
-            ops.add();
-            for k in 0..a.cols {
-                let s = a.get(i, k) + b.get(k, j);
-                acc += s * s;
-                ops.square();
-                ops.add_n(2);
-            }
-            ops.shift();
-            c.set(i, j, acc >> 1);
-        }
-    }
+
+    // row-sliced i-k-j through the blocked engine core — same inner loops
+    // as matmul_square, minus the Sb computation the caller amortised
+    let c = engine::blocked::matmul_square_core(a, b, &sa, sb, &EngineConfig::default());
+
+    // hoisted per-call ledger: the N·P correction squares are gone
+    let mnp = (m * n * p) as u64;
+    ops.squares += mnp;
+    ops.adds += 2 * mnp + (m * p) as u64;
+    ops.shifts += (m * p) as u64;
     (c, ops)
 }
 
@@ -285,6 +246,59 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn const_b_matches_square_matmul_property() {
+        // the row-sliced i-k-j rewrite must be bit-identical to the full
+        // square path whenever it is handed the true Sb corrections
+        forall(
+            0xCB,
+            60,
+            |rng, size| {
+                let m = rng.usize_in(1, size.max(1).min(12));
+                let n = rng.usize_in(1, size.max(1).min(12));
+                let p = rng.usize_in(1, size.max(1).min(12));
+                (
+                    Matrix::random(rng, m, n, -(1 << 12), 1 << 12),
+                    Matrix::random(rng, n, p, -(1 << 12), 1 << 12),
+                )
+            },
+            |(a, b)| {
+                let mut pre = OpCounts::ZERO;
+                let sb = col_corrections(b, &mut pre);
+                let (c_const, ops_const) = matmul_square_const_b(a, b, &sb);
+                let (c_full, ops_full) = matmul_square(a, b);
+                if c_const != c_full {
+                    return Err(format!(
+                        "value mismatch at {}x{}x{}",
+                        a.rows, a.cols, b.cols
+                    ));
+                }
+                if ops_const + pre != ops_full {
+                    return Err(format!(
+                        "ledger mismatch: {ops_const} + {pre} != {ops_full}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn hoisted_ledgers_equal_engine_formulas() {
+        use crate::linalg::engine::{square_matmul_const_b_ledger, square_matmul_ledger};
+        let mut rng = Rng::new(0x4ED);
+        for (m, n, p) in [(1usize, 1usize, 1usize), (3, 9, 2), (16, 8, 16)] {
+            let a = Matrix::random(&mut rng, m, n, -100, 100);
+            let b = Matrix::random(&mut rng, n, p, -100, 100);
+            let (_, s) = matmul_square(&a, &b);
+            assert_eq!(s, square_matmul_ledger(m, n, p));
+            let mut pre = OpCounts::ZERO;
+            let sb = col_corrections(&b, &mut pre);
+            let (_, sc) = matmul_square_const_b(&a, &b, &sb);
+            assert_eq!(sc, square_matmul_const_b_ledger(m, n, p));
+        }
     }
 
     #[test]

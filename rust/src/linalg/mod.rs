@@ -9,10 +9,16 @@
 //!
 //! Integer (`i64`) entry points are bit-exact (the hardware domain);
 //! `f64`/`f32` entry points feed the numerical-error experiment E5.
+//!
+//! The performance-bearing implementation is [`engine`]: cache-blocked,
+//! optionally multi-threaded square kernels with hoisted ledgers and a
+//! precomputed-correction cache for constant weights. The reference
+//! functions here delegate their hot loops to it.
 
 pub mod complex;
 pub mod conv;
 pub mod counts;
+pub mod engine;
 pub mod error;
 pub mod matmul;
 pub mod qnn;
@@ -20,4 +26,5 @@ pub mod matrix;
 pub mod transform;
 
 pub use counts::OpCounts;
+pub use engine::{EngineConfig, PreparedB, SquareScalar};
 pub use matrix::Matrix;

@@ -33,14 +33,17 @@ COMMANDS:
   simulate  [--size N]           cycle-accurate architecture runs
   errors                         float error of the square trick (E5)
   serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
-                                 batching inference server demo (E6)
+            [--native] [--threads T]
+                                 batching inference server demo (E6);
+                                 --native serves the blocked square-kernel
+                                 engine in-process (no PJRT artifacts)
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
 fn main() {
     let args = match Args::parse(
-        &["artifacts", "model", "requests", "rps", "widths", "size", "seed"],
-        &["verbose", "no-shadow"],
+        &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads"],
+        &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -278,32 +281,77 @@ fn errors(_args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let model = args.get_or("model", "mlp_square").to_string();
-    let baseline = model.replace("_square", "_direct");
     let requests = args.get_usize("requests", 256)?;
     let rps = args.get_u64("rps", 2_000)? as f64;
-    let shadow = !args.has("no-shadow") && baseline != model;
+    let shadow_wanted = !args.has("no-shadow");
 
-    println!("starting server: model={model} shadow={}",
-             if shadow { baseline.as_str() } else { "off" });
-    let dir2 = dir.clone();
-    let model2 = model.clone();
-    let baseline2 = baseline.clone();
-    let srv = InferenceServer::start(
-        32,
-        Duration::from_millis(2),
-        1024,
-        if shadow { 8 } else { 0 },
-        move || PjrtExecutor::new(&dir2, &model2),
-        move || {
-            if shadow {
-                Ok(Some(PjrtExecutor::new(&dir, &baseline2)?))
-            } else {
-                Ok(None)
-            }
-        },
-    )?;
+    let srv = if args.has("native") {
+        // native path: the blocked multi-threaded square-kernel engine
+        // serves a random-but-deterministic 784→10 linear model in-process
+        // (weight corrections cached once), shadowed by its direct twin
+        let threads = args.get_usize("threads", fairsquare::linalg::engine::max_threads())?;
+        let mut rng = Rng::new(0xE6);
+        let weights =
+            Matrix::from_fn(784, 10, |_, _| (rng.normal() * 0.05) as f32);
+        // report the parallelism this batch shape actually gets: the engine
+        // caps workers by useful work, so small models run fewer threads
+        // than requested no matter the knob
+        let effective =
+            fairsquare::linalg::engine::effective_threads(threads, 32, 784, 10);
+        println!(
+            "starting server: native square-kernel engine \
+             ({threads} threads requested, {effective} effective per 32-row batch) \
+             shadow={}",
+            if shadow_wanted { "direct twin" } else { "off" }
+        );
+        let shadow_w = weights.clone();
+        let cfg = fairsquare::linalg::engine::EngineConfig::with_threads(threads);
+        fairsquare::coordinator::InferenceServer::start(
+            32,
+            Duration::from_millis(2),
+            1024,
+            if shadow_wanted { 8 } else { 0 },
+            move || {
+                Ok(fairsquare::coordinator::SquareKernelExecutor::with_config(
+                    weights, 32, cfg,
+                ))
+            },
+            move || {
+                if shadow_wanted {
+                    Ok(Some(fairsquare::coordinator::DirectKernelExecutor::new(
+                        shadow_w, 32,
+                    )))
+                } else {
+                    Ok(None)
+                }
+            },
+        )?
+    } else {
+        let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+        let model = args.get_or("model", "mlp_square").to_string();
+        let baseline = model.replace("_square", "_direct");
+        let shadow = shadow_wanted && baseline != model;
+
+        println!("starting server: model={model} shadow={}",
+                 if shadow { baseline.as_str() } else { "off" });
+        let dir2 = dir.clone();
+        let model2 = model.clone();
+        let baseline2 = baseline.clone();
+        InferenceServer::start(
+            32,
+            Duration::from_millis(2),
+            1024,
+            if shadow { 8 } else { 0 },
+            move || PjrtExecutor::new(&dir2, &model2),
+            move || {
+                if shadow {
+                    Ok(Some(PjrtExecutor::new(&dir, &baseline2)?))
+                } else {
+                    Ok(None)
+                }
+            },
+        )?
+    };
 
     let mut gen = WorkloadGen::new(0xE6);
     let gaps = gen.arrival_gaps_us(requests, rps);

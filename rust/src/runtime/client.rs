@@ -1,114 +1,196 @@
 //! PJRT CPU engine: compile HLO text once, execute many times.
+//!
+//! The real engine needs the `xla` PJRT bindings, which the offline build
+//! environment does not ship; it is gated behind the `pjrt` cargo feature.
+//! Without the feature a stub [`Engine`] with the same surface loads the
+//! artifact registry (so `fairsquare list` and manifest validation still
+//! work) but returns a descriptive error from `load`/`run_f32`. The
+//! coordinator's native executors (`coordinator::native`) serve square-based
+//! models without any of this.
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use super::registry::{ArtifactSpec, Registry};
+    use anyhow::{bail, Context, Result};
 
-/// A compiled artifact plus its marshalling metadata.
-pub struct LoadedModel {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+    use crate::runtime::registry::{ArtifactSpec, Registry};
 
-impl LoadedModel {
-    /// Execute with f32 inputs. `args[i]` must have exactly
-    /// `spec.args[i].elements()` values; outputs come back as flat vectors
-    /// in manifest order.
-    pub fn run_f32(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        if args.len() != self.spec.args.len() {
-            bail!(
-                "{}: expected {} args, got {}",
-                self.spec.name,
-                self.spec.args.len(),
-                args.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(args.len());
-        for (a, spec) in args.iter().zip(&self.spec.args) {
-            if a.len() != spec.elements() {
+    /// A compiled artifact plus its marshalling metadata.
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl LoadedModel {
+        /// Execute with f32 inputs. `args[i]` must have exactly
+        /// `spec.args[i].elements()` values; outputs come back as flat
+        /// vectors in manifest order.
+        pub fn run_f32(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if args.len() != self.spec.args.len() {
                 bail!(
-                    "{}: arg size {} != spec {:?}",
+                    "{}: expected {} args, got {}",
                     self.spec.name,
-                    a.len(),
-                    spec.shape
+                    self.spec.args.len(),
+                    args.len()
                 );
             }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(a);
-            literals.push(if dims.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims)?
-            });
+            let mut literals = Vec::with_capacity(args.len());
+            for (a, spec) in args.iter().zip(&self.spec.args) {
+                if a.len() != spec.elements() {
+                    bail!(
+                        "{}: arg size {} != spec {:?}",
+                        self.spec.name,
+                        a.len(),
+                        spec.shape
+                    );
+                }
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(a);
+                literals.push(if dims.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(&dims)?
+                });
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → always a tuple
+            let parts = result.to_tuple()?;
+            if parts.len() != self.spec.outputs.len() {
+                bail!(
+                    "{}: got {} outputs, manifest says {}",
+                    self.spec.name,
+                    parts.len(),
+                    self.spec.outputs.len()
+                );
+            }
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<f32>().map_err(Into::into))
+                .collect()
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → always a tuple
-        let parts = result.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: got {} outputs, manifest says {}",
-                self.spec.name,
-                parts.len(),
-                self.spec.outputs.len()
-            );
+    }
+
+    /// The PJRT engine: one CPU client, a registry, and a cache of compiled
+    /// executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        pub registry: Registry,
+        cache: HashMap<String, LoadedModel>,
+    }
+
+    impl Engine {
+        /// Create a CPU engine over an artifact directory.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let registry = Registry::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client, registry, cache: HashMap::new() })
         }
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(Into::into))
-            .collect()
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+            if !self.cache.contains_key(name) {
+                let spec = self.registry.get(name)?.clone();
+                let proto = xla::HloModuleProto::from_text_file(
+                    spec.path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                self.cache.insert(name.to_string(), LoadedModel { spec, exe });
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// One-shot convenience: load + run.
+        pub fn run_f32(&mut self, name: &str, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?.run_f32(args)
+        }
     }
 }
 
-/// The PJRT engine: one CPU client, a registry, and a cache of compiled
-/// executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub registry: Registry,
-    cache: HashMap<String, LoadedModel>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::Path;
 
-impl Engine {
-    /// Create a CPU engine over an artifact directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let registry = Registry::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, registry, cache: HashMap::new() })
+    use anyhow::{anyhow, Result};
+
+    use crate::runtime::registry::{ArtifactSpec, Registry};
+
+    fn unavailable(what: &str) -> anyhow::Error {
+        anyhow!(
+            "{what}: fairsquare was built without the `pjrt` feature, so the \
+             XLA/PJRT runtime is unavailable; use the native square-kernel \
+             executors (coordinator::native) or rebuild with --features pjrt \
+             and a vendored xla crate"
+        )
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub stand-in for a compiled artifact: carries the spec only.
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
     }
 
-    /// Compile (or fetch from cache) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
-        if !self.cache.contains_key(name) {
-            let spec = self.registry.get(name)?.clone();
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.cache.insert(name.to_string(), LoadedModel { spec, exe });
+    impl LoadedModel {
+        pub fn run_f32(&self, _args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(unavailable(&self.spec.name))
         }
-        Ok(&self.cache[name])
     }
 
-    /// One-shot convenience: load + run.
-    pub fn run_f32(&mut self, name: &str, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?.run_f32(args)
+    /// Stub engine: loads the registry (manifest listing still works) but
+    /// cannot compile or execute artifacts.
+    pub struct Engine {
+        pub registry: Registry,
+    }
+
+    impl Engine {
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let registry = Registry::load(artifacts_dir)?;
+            Ok(Self { registry })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without `pjrt`)".to_string()
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+            // validate the name against the registry first so callers get
+            // the more specific error for typos
+            let _ = self.registry.get(name)?;
+            Err(unavailable(name))
+        }
+
+        pub fn run_f32(&mut self, name: &str, _args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let _ = self.registry.get(name)?;
+            Err(unavailable(name))
+        }
     }
 }
 
-// Integration tests live in rust/tests/runtime_e2e.rs (they need built
-// artifacts); unit tests here cover only argument validation plumbing.
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Engine, LoadedModel};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{Engine, LoadedModel};
+
+/// True when this build carries the real PJRT runtime.
+pub const HAVE_PJRT: bool = cfg!(feature = "pjrt");
+
+/// Shared helper: does `dir` look like a built artifact directory?
+pub fn artifacts_present(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

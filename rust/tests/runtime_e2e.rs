@@ -14,7 +14,7 @@ use fairsquare::testkit::Rng;
 
 fn artifacts() -> Option<&'static Path> {
     let p = Path::new("artifacts");
-    p.join("manifest.json").exists().then_some(p)
+    fairsquare::runtime::client::artifacts_present(p).then_some(p)
 }
 
 macro_rules! require_artifacts {
@@ -25,6 +25,18 @@ macro_rules! require_artifacts {
                 eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
                 return;
             }
+        }
+    };
+}
+
+/// Tests that *execute* artifacts additionally need the real PJRT engine;
+/// on a default (stub) build they skip instead of tripping over the
+/// stub's "built without `pjrt`" error.
+macro_rules! require_pjrt {
+    () => {
+        if !fairsquare::runtime::client::HAVE_PJRT {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return;
         }
     };
 }
@@ -49,6 +61,7 @@ fn manifest_covers_all_twins() {
 
 #[test]
 fn square_matmul_artifact_matches_direct_artifact() {
+    require_pjrt!();
     let dir = require_artifacts!();
     let mut engine = Engine::new(dir).unwrap();
     let mut rng = Rng::new(1);
@@ -71,6 +84,7 @@ fn square_matmul_artifact_matches_direct_artifact() {
 
 #[test]
 fn pjrt_matches_rust_reference_matmul() {
+    require_pjrt!();
     // L1 (Pallas) vs the rust linalg stack on identical integer-valued data
     let dir = require_artifacts!();
     let mut engine = Engine::new(dir).unwrap();
@@ -91,6 +105,7 @@ fn pjrt_matches_rust_reference_matmul() {
 
 #[test]
 fn mlp_twins_agree_and_classify_identically() {
+    require_pjrt!();
     let dir = require_artifacts!();
     let mut engine = Engine::new(dir).unwrap();
     let mut gen = fairsquare::coordinator::WorkloadGen::new(3);
@@ -117,6 +132,7 @@ fn mlp_twins_agree_and_classify_identically() {
 
 #[test]
 fn complex_artifacts_agree() {
+    require_pjrt!();
     let dir = require_artifacts!();
     let mut engine = Engine::new(dir).unwrap();
     let mut rng = Rng::new(4);
@@ -136,8 +152,61 @@ fn complex_artifacts_agree() {
     }
 }
 
+/// The native square-kernel serving path end-to-end: no artifacts, no
+/// PJRT — requests flow client → batcher → worker → blocked multi-threaded
+/// square engine (weight corrections cached once per model) and the
+/// results are cross-checked against the f64 direct-multiplier reference.
+/// Runs unconditionally: this path must work on a fresh checkout.
+#[test]
+fn native_square_executor_serves_without_artifacts() {
+    use std::time::Duration;
+
+    use fairsquare::coordinator::{InferenceServer, SquareKernelExecutor};
+    use fairsquare::linalg::engine::EngineConfig;
+
+    let mut rng = Rng::new(0xE2E);
+    let w_int = Matrix::random(&mut rng, 24, 6, -8, 8);
+    let w32 = w_int.map(|v| v as f32);
+    let w64 = w_int.map(|v| v as f64);
+
+    let srv = InferenceServer::start(
+        8,
+        Duration::from_millis(2),
+        128,
+        0,
+        move || Ok(SquareKernelExecutor::with_config(w32, 8, EngineConfig::with_threads(2))),
+        || Ok(None::<SquareKernelExecutor>),
+    )
+    .unwrap();
+
+    // integer-valued f32 features keep every intermediate below 2^24, so
+    // the square path must agree with the f64 direct product *exactly*
+    let inputs: Vec<Vec<i64>> = (0..20).map(|_| rng.vec_i64(24, -8, 8)).collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|row| {
+            srv.submit(row.iter().map(|&v| v as f32).collect()).unwrap()
+        })
+        .collect();
+    for (row, rx) in inputs.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.len(), 6);
+        let a64 = Matrix::from_vec(1, 24, row.iter().map(|&v| v as f64).collect());
+        let want = matmul::matmul_direct_f64(&a64, &w64);
+        for (g, w) in got.iter().zip(want.data()) {
+            assert_eq!(*g as f64, *w, "native serving drifted from f64 reference");
+        }
+    }
+
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.rows, 20);
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.mean_batch > 1.0, "batching never engaged");
+}
+
 #[test]
 fn wrong_arity_and_shape_are_rejected() {
+    require_pjrt!();
     let dir = require_artifacts!();
     let mut engine = Engine::new(dir).unwrap();
     // too few args

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# One-command verification: tier-1 build+tests plus the perf smoke gate.
+#
+#   scripts/verify.sh          # tier-1 + blocked_engine bench in --quick mode
+#   scripts/verify.sh --full   # same, but full bench budgets
+#
+# The bench enforces the blocked+threaded ≥ 2× naive gate at 256³ and
+# writes rust/BENCH_blocked_engine.json for the perf trajectory.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+MODE="--quick"
+if [[ "${1:-}" == "--full" ]]; then
+    MODE=""
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo bench --bench blocked_engine -- ${MODE:-(full)}"
+# shellcheck disable=SC2086
+cargo bench --bench blocked_engine -- $MODE
+
+echo "==> verify OK"
