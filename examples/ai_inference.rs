@@ -22,13 +22,16 @@ fn run_one(model: &'static str, shadow: Option<&'static str>) -> Result<(f64, f6
     let dir = std::path::PathBuf::from("artifacts");
     let dir2 = dir.clone();
     let shadow_every = if shadow.is_some() { 4 } else { 0 };
+    // workers = 1: the PJRT engine is not `Send`, so the artifact path
+    // cannot shard (the native engine can — see `serve --native --workers`)
     let srv = InferenceServer::start(
         32,
         Duration::from_millis(2),
         2048,
         shadow_every,
-        move || PjrtExecutor::new(&dir, model),
-        move || shadow.map(|s| PjrtExecutor::new(&dir2, s)).transpose(),
+        1,
+        move |_| PjrtExecutor::new(&dir, model),
+        move |_| shadow.map(|s| PjrtExecutor::new(&dir2, s)).transpose(),
     )?;
 
     // warm the executables so the measurement sees steady state

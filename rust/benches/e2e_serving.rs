@@ -1,19 +1,39 @@
-//! E6: end-to-end serving through the full three-layer stack — PJRT
-//! executables from the AOT Pallas artifacts behind the batching
-//! coordinator. Reports throughput/latency for the direct and square MLP
-//! twins and raw kernel execute times for the matmul artifact family.
+//! E6: end-to-end serving benchmarks.
 //!
-//! Requires `make artifacts` (skips gracefully otherwise, so `cargo bench`
-//! stays green on a fresh checkout).
+//! Always runs (and always writes `BENCH_e2e_serving.json`):
+//!   * E6c — exact int8 quantized MLP inference (artifact-independent)
+//!   * E6d — the native square-kernel pool swept over workers ∈ {1, 2, 4}
+//!     on a many-small-requests load: one dispatcher, N workers, every
+//!     worker sharing one `Arc<PreparedB>` so the §3 weight corrections
+//!     are computed exactly once for the whole pool. This is the
+//!     sharding trajectory gate: `workers = 4` must reach ≥ 1.5× the
+//!     rows/s of `workers = 1` (enforced when the machine has ≥ 4 cores).
+//!
+//! The PJRT legs additionally require `make artifacts` and the `pjrt`
+//! feature (they skip gracefully otherwise, so `cargo bench` stays green
+//! on a fresh checkout).
+//!
+//! `--quick` (as passed by `scripts/verify.sh`) shrinks request counts,
+//! not coverage: every pool width still runs and the JSON artifact is
+//! still written.
 
 use std::time::{Duration, Instant};
 
-use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
-use fairsquare::coordinator::{InferenceServer, PjrtExecutor, WorkloadGen};
+use fairsquare::benchkit::{f, fmt_ns, Bench, JsonReport, Measurement, Table};
+use fairsquare::coordinator::{
+    InferenceServer, PjrtExecutor, SquareKernelExecutor, WorkloadGen,
+};
+use fairsquare::linalg::engine::{max_threads, EngineConfig, PreparedB};
+use fairsquare::linalg::Matrix;
 use fairsquare::runtime::Engine;
+use fairsquare::testkit::Rng;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
     qnn_table(); // artifact-independent: exact integer inference
+    native_pool_sweep(quick); // artifact-independent: the sharded pool
+
     if !fairsquare::runtime::client::HAVE_PJRT {
         println!("e2e_serving: built without the `pjrt` feature — PJRT legs skipped");
         return;
@@ -27,13 +47,148 @@ fn main() {
     serving_table();
 }
 
+/// E6d — many small requests against the native square-kernel pool.
+/// Throughput must come from replicating workers behind the dispatcher
+/// (each worker's engine runs single-threaded), exactly the multi-PE
+/// scaling the paper's hardware story tells.
+fn native_pool_sweep(quick: bool) {
+    let (in_f, out_f, batch) = (256usize, 128usize, 16usize);
+    let requests = if quick { 1024 } else { 4096 };
+    let cores = max_threads();
+
+    let mut rng = Rng::new(0xE6D);
+    let weights = Matrix::from_fn(in_f, out_f, |_, _| (rng.normal() * 0.05) as f32);
+    // §3 amortisation, pool-wide: corrections computed once, here, and
+    // shared read-only by every worker of every sweep leg
+    let (prepared, prep_ops) = PreparedB::new_shared(weights);
+    assert_eq!(prep_ops.squares, (in_f * out_f) as u64);
+
+    // pre-generate the request stream so generation cost stays off the clock
+    let inputs: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..in_f).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    let mut t = Table::new(
+        &format!(
+            "E6d — native square-kernel pool, {requests} small requests \
+             ({in_f}→{out_f}, batch {batch}, 1 engine thread/worker, {cores} cores)"
+        ),
+        &["workers", "rows/s", "p50 µs", "p99 µs", "mean batch", "speedup"],
+    );
+    let mut report = JsonReport::new("e2e_serving");
+    let mut base_rps: Option<f64> = None;
+    let mut reference_outs: Option<Vec<Vec<f32>>> = None;
+    let mut w4_speedup = 0.0f64;
+
+    for &workers in &[1usize, 2, 4] {
+        let pb = prepared.clone();
+        let srv = InferenceServer::start(
+            batch,
+            Duration::from_micros(200),
+            requests, // deep enough that the open loop never rejects
+            0,
+            workers,
+            move |_wid| {
+                Ok(SquareKernelExecutor::from_shared(
+                    pb.clone(),
+                    batch,
+                    EngineConfig::with_threads(1),
+                ))
+            },
+            |_wid| Ok(None::<SquareKernelExecutor>),
+        )
+        .unwrap();
+
+        // warm: one round trip so thread spawn cost is off the wall clock
+        // (its single size-1 batch does ride along in the latency/mean
+        // batch columns — one sample out of `requests`, same for each leg)
+        let _ = srv.infer(inputs[0].clone()).unwrap();
+
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(requests);
+        for row in &inputs {
+            pending.push(srv.submit(row.clone()).unwrap());
+        }
+        let outs: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = srv.shutdown().unwrap();
+
+        // sharding must never change results: every leg reproduces the
+        // workers=1 outputs bit-for-bit (deterministic kernel, fixed seed)
+        if let Some(want) = &reference_outs {
+            assert_eq!(&outs, want, "worker pool changed results");
+        } else {
+            reference_outs = Some(outs);
+        }
+
+        let rps = requests as f64 / wall;
+        let speedup = rps / *base_rps.get_or_insert(rps);
+        if workers == 4 {
+            w4_speedup = speedup;
+        }
+        t.row(&[
+            workers.to_string(),
+            f(rps, 0),
+            f(stats.latency.p50_us, 0),
+            f(stats.latency.p99_us, 0),
+            f(stats.mean_batch, 2),
+            f(speedup, 2),
+        ]);
+
+        let m = Measurement {
+            iters: 1,
+            mean_ns: wall * 1e9 / requests as f64, // wall time per request
+            median_ns: stats.latency.p50_us * 1e3,
+            stddev_ns: 0.0,
+            min_ns: 0.0,
+        };
+        report.case(
+            &format!("native_pool_w{workers}"),
+            &m,
+            &[
+                ("workers", workers as f64),
+                ("requests", requests as f64),
+                ("rows_per_s", rps),
+                ("speedup_vs_w1", speedup),
+                ("p50_us", stats.latency.p50_us),
+                ("p99_us", stats.latency.p99_us),
+                ("mean_batch", stats.mean_batch),
+                ("rejected", stats.rejected as f64),
+                ("cores", cores as f64),
+            ],
+        );
+    }
+    t.print();
+
+    // write the trajectory artifact first: a failing gate should still
+    // leave the numbers behind for diagnosis
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_e2e_serving.json: {e}"),
+    }
+
+    println!(
+        "\npool gate: workers=4 is {w4_speedup:.2}× the rows/s of workers=1 \
+         (target ≥ 1.5×)"
+    );
+    if cores >= 4 {
+        assert!(
+            w4_speedup >= 1.5,
+            "pool gate failed: workers=4 speedup {w4_speedup:.2}× < 1.5×"
+        );
+    } else {
+        println!("(gate not enforced: only {cores} cores available)");
+    }
+}
+
 /// E6c — the paper's natural AI domain: int8 MLP inference where the
 /// square trick is bit-exact and the weight corrections are load-time
 /// constants (§3 "constant matrix" case).
 fn qnn_table() {
     use fairsquare::linalg::qnn::{QArith, QMlp};
-    use fairsquare::linalg::Matrix;
-    use fairsquare::testkit::Rng;
 
     let bench = Bench::quick();
     let mut t = Table::new(
@@ -90,13 +245,16 @@ fn serving_table() {
         let dir = std::path::PathBuf::from("artifacts");
         let dir2 = dir.clone();
         let shadow = model == "mlp_square";
+        // workers = 1: the PJRT engine is not `Send`; pool scaling is the
+        // native sweep's job (E6d above)
         let srv = InferenceServer::start(
             32,
             Duration::from_millis(2),
             2048,
             if shadow { 8 } else { 0 },
-            move || PjrtExecutor::new(&dir, model),
-            move || {
+            1,
+            move |_| PjrtExecutor::new(&dir, model),
+            move |_| {
                 shadow
                     .then(|| PjrtExecutor::new(&dir2, "mlp_direct"))
                     .transpose()

@@ -14,14 +14,19 @@ pub struct LatencyStats {
 }
 
 /// Metrics recorder. Latencies are stored raw (µs) — serving runs here are
-/// bounded, so exact percentiles beat HDR approximations.
+/// bounded, so exact percentiles beat HDR approximations, and a worker
+/// pool can merge raw vectors into exact pooled percentiles instead of
+/// averaging per-worker summaries.
 #[derive(Debug)]
 pub struct Metrics {
     latencies_us: Vec<f64>,
     pub batches: u64,
     pub rows: u64,
     pub shadow_checks: u64,
+    /// shadow ran and disagreed, or errored (errors are also failures)
     pub shadow_failures: u64,
+    /// shadow executor itself returned `Err` — distinct from a mismatch
+    pub shadow_errors: u64,
     started: Instant,
 }
 
@@ -39,6 +44,7 @@ impl Metrics {
             rows: 0,
             shadow_checks: 0,
             shadow_failures: 0,
+            shadow_errors: 0,
             started: Instant::now(),
         }
     }
@@ -65,28 +71,40 @@ impl Metrics {
         }
     }
 
+    /// The raw recorded latencies (µs), for pooled-percentile merging.
+    pub fn latencies_us(&self) -> &[f64] {
+        &self.latencies_us
+    }
+
     pub fn latency_stats(&self) -> LatencyStats {
-        if self.latencies_us.is_empty() {
-            return LatencyStats {
-                count: 0,
-                mean_us: 0.0,
-                p50_us: 0.0,
-                p95_us: 0.0,
-                p99_us: 0.0,
-                max_us: 0.0,
-            };
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| v[((v.len() as f64 - 1.0) * p).round() as usize];
-        LatencyStats {
-            count: v.len() as u64,
-            mean_us: v.iter().sum::<f64>() / v.len() as f64,
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
-            max_us: *v.last().unwrap(),
-        }
+        latency_stats_from(&self.latencies_us)
+    }
+}
+
+/// Exact summary statistics over any raw µs latency sample — one worker's
+/// recorder or a pool-merged view (percentiles of a union can't be
+/// recovered from per-worker summaries, so the pool merges raw samples).
+pub fn latency_stats_from(latencies_us: &[f64]) -> LatencyStats {
+    if latencies_us.is_empty() {
+        return LatencyStats {
+            count: 0,
+            mean_us: 0.0,
+            p50_us: 0.0,
+            p95_us: 0.0,
+            p99_us: 0.0,
+            max_us: 0.0,
+        };
+    }
+    let mut v = latencies_us.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| v[((v.len() as f64 - 1.0) * p).round() as usize];
+    LatencyStats {
+        count: v.len() as u64,
+        mean_us: v.iter().sum::<f64>() / v.len() as f64,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        max_us: *v.last().unwrap(),
     }
 }
 
@@ -120,5 +138,29 @@ mod tests {
         let s = Metrics::new().latency_stats();
         assert_eq!(s.count, 0);
         assert_eq!(s.max_us, 0.0);
+    }
+
+    #[test]
+    fn merged_raw_latencies_give_exact_pooled_percentiles() {
+        // two disjoint "workers": one fast, one slow — the pooled median
+        // must come from the union, not from averaging the two medians
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        for i in 1..=50 {
+            a.record_latency(Duration::from_micros(i)); // 1..=50
+            b.record_latency(Duration::from_micros(1000 + i)); // 1001..=1050
+        }
+        let merged: Vec<f64> = a
+            .latencies_us()
+            .iter()
+            .chain(b.latencies_us())
+            .copied()
+            .collect();
+        let s = latency_stats_from(&merged);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_us, 1050.0);
+        // union median sits at the boundary between the two workers
+        assert!(s.p50_us <= 1001.0, "p50={}", s.p50_us);
+        assert!(s.p99_us >= 1040.0, "p99={}", s.p99_us);
     }
 }

@@ -1,22 +1,30 @@
-//! Layer-3 coordinator: a thread-based batching inference server over the
-//! PJRT runtime.
+//! Layer-3 coordinator: a thread-based, sharded batching inference server.
 //!
 //! The paper's contribution lives in the arithmetic (L1/L2) and the
 //! hardware models, so per the architecture rules the coordinator is the
 //! thin-but-real serving shell around them: a bounded request queue, a
-//! dynamic batcher (size- and deadline-triggered, Fig. vLLM-style), a
-//! worker that owns the non-`Send` PJRT engine, per-request latency
-//! metrics, and an optional shadow baseline that cross-checks the
-//! square-based model against the direct twin on sampled batches.
+//! dynamic batcher (size- and deadline-triggered, vLLM-style), a
+//! dispatcher that routes formed batches to a pool of N worker threads
+//! (each owning its own executor, all sharing one `Arc<PreparedB>` of
+//! cached weight corrections), per-request latency metrics with pooled
+//! and per-worker views, and an optional shadow baseline that
+//! cross-checks the square-based model against the direct twin on
+//! sampled batches.
+//!
+//! Throughput scales the way the paper's multi-PE hardware does: by
+//! replicating cheap square units behind one dispatcher, not by growing
+//! one unit — `workers = N` gives N concurrent batch executions while
+//! the §3 corrections are still computed exactly once.
 //!
 //! The offline environment has no tokio; the runtime is `std::thread` +
-//! `mpsc`, which for a single-device CPU serving loop is exactly as
-//! capable and considerably more debuggable.
+//! `mpsc`, which for a CPU serving pool is exactly as capable and
+//! considerably more debuggable.
 //!
-//! Two executor families plug into the worker: the PJRT artifact path
-//! ([`PjrtExecutor`], needs the `pjrt` feature) and the native in-process
-//! path ([`native`]) running the blocked multi-threaded square-kernel
-//! engine with per-model cached corrections — no external runtime at all.
+//! Two executor families plug into the workers: the PJRT artifact path
+//! ([`PjrtExecutor`], needs the `pjrt` feature, pinned to `workers = 1`
+//! because its engine is not `Send`) and the native in-process path
+//! ([`native`]) running the blocked multi-threaded square-kernel engine
+//! with per-model cached corrections — no external runtime at all.
 
 pub mod batcher;
 pub mod metrics;
@@ -25,7 +33,7 @@ pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{latency_stats_from, LatencyStats, Metrics};
 pub use native::{DirectKernelExecutor, SquareKernelExecutor};
-pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats};
+pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats, WorkerStats};
 pub use workload::WorkloadGen;

@@ -13,6 +13,8 @@
 //! square-based model on sampled batches — exactly the rollout story the
 //! PJRT twins tell, but with zero external runtime.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::linalg::engine::{
@@ -24,9 +26,11 @@ use super::server::BatchExecutor;
 
 /// Square-kernel batch executor: one constant weight matrix
 /// (`in_features × out_features`), corrections cached, blocked+threaded
-/// inner loops.
+/// inner loops. The prepared weights live behind an `Arc` so a sharded
+/// server pool can hand every worker the same corrections — computed once
+/// for the whole pool, per the §3 amortisation story.
 pub struct SquareKernelExecutor {
-    weights: PreparedB<f32>,
+    weights: Arc<PreparedB<f32>>,
     batch_rows: usize,
     cfg: EngineConfig,
 }
@@ -39,8 +43,20 @@ impl SquareKernelExecutor {
     }
 
     pub fn with_config(weights: Matrix<f32>, batch_rows: usize, cfg: EngineConfig) -> Self {
-        assert!(batch_rows >= 1, "batch_rows must be positive");
         let (weights, _prep_ops) = PreparedB::new(weights);
+        Self::from_shared(Arc::new(weights), batch_rows, cfg)
+    }
+
+    /// Build an executor over weights some other owner already prepared —
+    /// the pool path: `InferenceServer` workers each clone the `Arc`, so
+    /// `PreparedB::new` (and its `N·P` correction squares) runs exactly
+    /// once no matter how many workers serve the model.
+    pub fn from_shared(
+        weights: Arc<PreparedB<f32>>,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Self {
+        assert!(batch_rows >= 1, "batch_rows must be positive");
         Self { weights, batch_rows, cfg }
     }
 }
@@ -158,6 +174,25 @@ mod tests {
         let mut di = DirectKernelExecutor::new(w32, 6);
         let (x32, _) = int_matrix_f32(&mut rng, 6, 20, 8);
         assert_eq!(sq.run(x32.data()).unwrap(), di.run(x32.data()).unwrap());
+    }
+
+    #[test]
+    fn shared_prepared_weights_serve_identically() {
+        // the pool path: several executors over one Arc<PreparedB> must
+        // behave exactly like an executor that prepared its own weights
+        let mut rng = Rng::new(0x61);
+        let (w32, _) = int_matrix_f32(&mut rng, 10, 3, 7);
+        let (prepared, prep_ops) = PreparedB::new_shared(w32.clone());
+        assert_eq!(prep_ops.squares, 10 * 3);
+        let mut owned = SquareKernelExecutor::with_config(w32, 2, EngineConfig::default());
+        let mut a =
+            SquareKernelExecutor::from_shared(prepared.clone(), 2, EngineConfig::default());
+        let mut b =
+            SquareKernelExecutor::from_shared(prepared, 2, EngineConfig::with_threads(2));
+        let (x32, _) = int_matrix_f32(&mut rng, 2, 10, 7);
+        let want = owned.run(x32.data()).unwrap();
+        assert_eq!(a.run(x32.data()).unwrap(), want);
+        assert_eq!(b.run(x32.data()).unwrap(), want);
     }
 
     #[test]

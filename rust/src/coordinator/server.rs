@@ -1,20 +1,36 @@
-//! The inference server: a worker thread owning the (non-`Send`) PJRT
-//! engine, fed by a bounded mpsc queue through the dynamic batcher.
+//! The inference server: a dispatcher thread owning the dynamic batcher,
+//! fanned out to a pool of N worker threads, each owning its own
+//! (possibly non-`Send`) executor constructed in-thread.
 //!
-//! Request path: client → [`InferenceServer::submit`] → queue → batcher →
-//! executor (PJRT artifact) → per-request response channel. Optionally a
-//! *shadow baseline* runs every k-th batch through the direct-matmul twin
-//! artifact and cross-checks outputs — how a cautious operator would roll
-//! out the square-based model.
+//! Request path: client → [`InferenceServer::submit`] → bounded queue →
+//! dispatcher (batcher) → per-worker channel → executor → per-request
+//! response channel. The paper's §3 constant-matrix case makes the cheap
+//! unit a *square kernel with cached corrections*; throughput therefore
+//! comes from replicating that unit behind one dispatcher (the same
+//! scaling story as multi-PE systolic arrays), not from growing one
+//! worker. Routing is idle-token based: a worker posts its id on a shared
+//! channel when free, the dispatcher pops an id per formed batch, so a
+//! slow batch never blocks the other workers.
+//!
+//! Optionally a *shadow baseline* runs every k-th batch (per worker)
+//! through the direct-multiplier twin and cross-checks outputs — how a
+//! cautious operator would roll out the square-based model. A shadow that
+//! *errors* counts as a failed check (plus a distinct `shadow_errors`
+//! counter): a crashing shadow must never look like a passing one.
+//!
+//! Back-pressure is explicit end to end: when the batcher rejects a row,
+//! the client's response channel receives an `Err("queue full …")`
+//! immediately — the request is never silently dropped.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::Batcher;
-use super::metrics::{LatencyStats, Metrics};
+use super::batcher::{Batcher, Pending};
+use super::metrics::{latency_stats_from, LatencyStats, Metrics};
 
 /// Executes one padded batch of rows. Implemented by the PJRT engine and
 /// by in-process mocks for tests.
@@ -30,7 +46,8 @@ pub trait BatchExecutor {
 }
 
 /// PJRT-backed executor over a named artifact. Construct *inside* the
-/// worker thread (the engine is not `Send`).
+/// worker thread (the engine is not `Send`) — which also means the PJRT
+/// serving path stays at `workers = 1`; see `main.rs`'s guard.
 pub struct PjrtExecutor {
     engine: crate::runtime::Engine,
     model: String,
@@ -78,19 +95,61 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+/// The explicit back-pressure response body; kept stable so clients and
+/// tests can match on it.
+const QUEUE_FULL: &str = "queue full: server rejected the request under back-pressure";
+
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
     resp: Sender<Result<Vec<f32>, String>>,
 }
 
+/// Client → dispatcher messages. `Shutdown` optionally carries a reply
+/// channel so [`InferenceServer::shutdown`] can collect the *final*
+/// pooled stats — taken after the batcher flush, so batches served
+/// during the drain are counted too.
 enum Msg {
     Req(Request),
     Stats(Sender<ServerStats>),
+    Shutdown(Option<Sender<ServerStats>>),
+}
+
+/// Dispatcher → worker jobs. At most one `Batch` is in flight per worker
+/// (the idle-token protocol guarantees it), so a worker's queue only ever
+/// holds small control messages plus that one batch.
+enum Job {
+    Batch(Vec<Pending<Request>>),
+    Stats(Sender<WorkerSnapshot>),
     Shutdown,
 }
 
-/// Snapshot of server metrics.
+/// Raw per-worker state shipped to the dispatcher on a stats request —
+/// includes the raw latency samples so pooled percentiles are exact.
+struct WorkerSnapshot {
+    worker: usize,
+    batches: u64,
+    rows: u64,
+    shadow_checks: u64,
+    shadow_failures: u64,
+    shadow_errors: u64,
+    latencies_us: Vec<f64>,
+}
+
+/// Public per-worker stats view.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub latency: LatencyStats,
+    pub batches: u64,
+    pub rows: u64,
+    pub mean_batch: f64,
+    pub shadow_checks: u64,
+    pub shadow_failures: u64,
+    pub shadow_errors: u64,
+}
+
+/// Snapshot of server metrics: the pooled view plus one entry per worker.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub latency: LatencyStats,
@@ -99,62 +158,134 @@ pub struct ServerStats {
     pub mean_batch: f64,
     pub shadow_checks: u64,
     pub shadow_failures: u64,
+    /// shadow executor calls that returned `Err` (each also counts as a
+    /// `shadow_failures` entry — a crashing shadow is not a passing one)
+    pub shadow_errors: u64,
     pub rejected: u64,
+    /// pool width the server was started with
+    pub workers: usize,
+    /// workers that no longer answer (e.g. a panicking executor killed
+    /// the thread) — their history is gone from `per_worker`, and the
+    /// pool is serving at reduced capacity; anything non-zero is trouble
+    pub lost_workers: usize,
+    pub per_worker: Vec<WorkerStats>,
 }
 
 /// Handle to a running server.
 pub struct InferenceServer {
     tx: SyncSender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     row_len: usize,
 }
 
 impl InferenceServer {
-    /// Start the worker. `make_exec`/`make_shadow` run inside the worker
-    /// thread so non-`Send` engines are fine. `shadow_every` > 0 verifies
-    /// every k-th batch against the shadow executor.
+    /// Start a pool of `workers` worker threads behind one dispatcher.
+    ///
+    /// `make_exec(w)`/`make_shadow(w)` run *inside* worker thread `w`, so
+    /// non-`Send` engines are fine (at `workers = 1`); with `workers > 1`
+    /// the factories are invoked once per worker and should hand out
+    /// cheap clones of shared read-only state (e.g. an
+    /// `Arc<PreparedB<f32>>`, so the §3 weight corrections are computed
+    /// once for the whole pool). `shadow_every > 0` verifies every k-th
+    /// batch of each worker against its shadow executor.
     pub fn start<E, S>(
         max_batch: usize,
         max_wait: Duration,
         queue_depth: usize,
         shadow_every: u64,
-        make_exec: impl FnOnce() -> Result<E> + Send + 'static,
-        make_shadow: impl FnOnce() -> Result<Option<S>> + Send + 'static,
+        workers: usize,
+        make_exec: impl Fn(usize) -> Result<E> + Send + Sync + 'static,
+        make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
     where
         E: BatchExecutor,
         S: BatchExecutor,
     {
+        let workers = workers.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth.max(1));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
+        let (idle_tx, idle_rx) = mpsc::channel::<usize>();
+        let make_exec = Arc::new(make_exec);
+        let make_shadow = Arc::new(make_shadow);
 
-        let worker = std::thread::Builder::new()
-            .name("fairsquare-worker".into())
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            job_txs.push(job_tx);
+            let ready = ready_tx.clone();
+            let idle = idle_tx.clone();
+            let me = Arc::clone(&make_exec);
+            let ms = Arc::clone(&make_shadow);
+            let handle = std::thread::Builder::new()
+                .name(format!("fairsquare-worker-{wid}"))
+                .spawn(move || {
+                    let mut exec = match me(wid) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let _ = ready.send(Err(format!("worker {wid} executor init: {e:#}")));
+                            return;
+                        }
+                    };
+                    let mut shadow = match ms(wid) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let _ = ready.send(Err(format!("worker {wid} shadow init: {e:#}")));
+                            return;
+                        }
+                    };
+                    let _ = ready.send(Ok((exec.row_len(), exec.batch_rows())));
+                    worker_loop(wid, job_rx, idle, &mut exec, shadow.as_mut(), shadow_every);
+                })
+                .expect("spawning worker");
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        drop(idle_tx);
+
+        // all workers must come up with one consistent model shape; on any
+        // failure the job senders are dropped on return, which unblocks and
+        // terminates the workers that did start
+        let mut shape: Option<(usize, usize)> = None;
+        for _ in 0..workers {
+            let got = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during init"))?
+                .map_err(|e| anyhow!(e))?;
+            match shape {
+                None => shape = Some(got),
+                Some(s) if s != got => {
+                    return Err(anyhow!(
+                        "workers disagree on model shape: {s:?} vs {got:?}"
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        let (row_len, batch_rows) = shape.expect("workers >= 1");
+
+        let dispatcher = std::thread::Builder::new()
+            .name("fairsquare-dispatch".into())
             .spawn(move || {
-                let mut exec = match make_exec() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("executor init: {e:#}")));
-                        return;
-                    }
-                };
-                let mut shadow = match make_shadow() {
-                    Ok(s) => s,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("shadow init: {e:#}")));
-                        return;
-                    }
-                };
-                let _ = ready_tx.send(Ok(exec.row_len()));
-                worker_loop(rx, &mut exec, shadow.as_mut(), max_batch, max_wait, queue_depth, shadow_every);
+                dispatch_loop(
+                    rx,
+                    job_txs,
+                    idle_rx,
+                    workers,
+                    max_batch.min(batch_rows).max(1),
+                    max_wait,
+                    queue_depth,
+                );
             })
-            .expect("spawning worker");
+            .expect("spawning dispatcher");
 
-        let row_len = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during init"))?
-            .map_err(|e| anyhow!(e))?;
-        Ok(Self { tx, worker: Some(worker), row_len })
+        Ok(Self {
+            tx,
+            dispatcher: Some(dispatcher),
+            workers: handles,
+            row_len,
+        })
     }
 
     /// Submit one row; blocks until the response arrives.
@@ -193,41 +324,60 @@ impl InferenceServer {
         rx.recv().map_err(|_| anyhow!("server shut down"))
     }
 
+    /// Stop the server, flushing queued rows first. The returned stats
+    /// are taken *after* that flush, so every batch the server ever ran —
+    /// including ones drained at shutdown — is counted.
     pub fn shutdown(mut self) -> Result<ServerStats> {
-        let stats = self.stats()?;
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(Some(tx)))
+            .map_err(|_| anyhow!("server shut down"))?;
+        let stats = rx.recv().map_err(|_| anyhow!("server shut down"))?;
+        self.join();
+        Ok(stats)
+    }
+
+    fn join(&mut self) {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        Ok(stats)
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        let _ = self.tx.send(Msg::Shutdown(None));
+        self.join();
     }
 }
 
-fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
+/// Push a row into the batcher; on back-pressure the client hears an
+/// explicit `Err` on its response channel instead of a dropped sender
+/// (which `recv()` would misreport as "server shut down").
+fn push_or_reject(batcher: &mut Batcher<Request>, r: Request, rejected: &mut u64) {
+    if let Err(r) = batcher.push(r, Instant::now()) {
+        *rejected += 1;
+        let _ = r.resp.send(Err(QUEUE_FULL.to_string()));
+    }
+}
+
+/// The dispatcher: owns the batcher and the rejection counter, routes
+/// formed batches to idle workers, aggregates pool-wide stats on demand.
+fn dispatch_loop(
     rx: Receiver<Msg>,
-    exec: &mut E,
-    mut shadow: Option<&mut S>,
+    job_txs: Vec<Sender<Job>>,
+    idle_rx: Receiver<usize>,
+    workers: usize,
     max_batch: usize,
     max_wait: Duration,
     queue_depth: usize,
-    shadow_every: u64,
 ) {
-    let rows = exec.batch_rows();
-    let row_len = exec.row_len();
-    let out_len = exec.out_len();
-    let max_batch = max_batch.min(rows);
     let mut batcher: Batcher<Request> = Batcher::new(max_batch, max_wait, queue_depth);
-    let mut metrics = Metrics::new();
     let mut rejected = 0u64;
+    let mut final_reply: Option<Sender<ServerStats>> = None;
 
     'outer: loop {
         // wait for work, bounded by the batcher's next deadline
@@ -236,66 +386,189 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(r)) => {
-                if batcher.push(r, Instant::now()).is_err() {
-                    rejected += 1;
-                }
-            }
+            Ok(Msg::Req(r)) => push_or_reject(&mut batcher, r, &mut rejected),
             Ok(Msg::Stats(tx)) => {
-                let _ = tx.send(ServerStats {
-                    latency: metrics.latency_stats(),
-                    batches: metrics.batches,
-                    rows: metrics.rows,
-                    mean_batch: metrics.mean_batch_size(),
-                    shadow_checks: metrics.shadow_checks,
-                    shadow_failures: metrics.shadow_failures,
-                    rejected,
-                });
-                continue;
+                // no `continue` here: fall through to the drain and batch
+                // routing below, so a stream of stats polls cannot defer
+                // dispatch of already-formed batches. (The poll itself
+                // still waits on each worker's FIFO — at most one
+                // in-flight batch — before routing resumes; lock-free
+                // counters are a noted follow-on if polling ever gets hot.)
+                let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
             }
-            Ok(Msg::Shutdown) => break,
+            Ok(Msg::Shutdown(reply)) => {
+                final_reply = reply;
+                break;
+            }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
         // drain any further queued messages without blocking
         while let Ok(msg) = rx.try_recv() {
             match msg {
-                Msg::Req(r) => {
-                    if batcher.push(r, Instant::now()).is_err() {
-                        rejected += 1;
-                    }
-                }
+                Msg::Req(r) => push_or_reject(&mut batcher, r, &mut rejected),
                 Msg::Stats(tx) => {
-                    let _ = tx.send(ServerStats {
-                        latency: metrics.latency_stats(),
-                        batches: metrics.batches,
-                        rows: metrics.rows,
-                        mean_batch: metrics.mean_batch_size(),
-                        shadow_checks: metrics.shadow_checks,
-                        shadow_failures: metrics.shadow_failures,
-                        rejected,
-                    });
+                    let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
                 }
-                Msg::Shutdown => break 'outer,
+                Msg::Shutdown(reply) => {
+                    final_reply = reply;
+                    break 'outer;
+                }
             }
         }
 
+        // route every formed batch to the next idle worker; if all workers
+        // are busy this blocks until one frees, while submitted requests
+        // buffer in the bounded client queue
         while let Some(batch) = batcher.take(Instant::now()) {
-            run_batch(batch.items, exec, shadow.as_deref_mut(), rows, row_len, out_len,
-                      shadow_every, &mut metrics);
+            match idle_rx.recv() {
+                Ok(wid) => {
+                    let _ = job_txs[wid].send(Job::Batch(batch.items));
+                }
+                Err(_) => return, // every worker is gone; nothing to route to
+            }
         }
     }
 
-    // shutdown: flush what's left
+    // shutdown: flush what's left to whichever workers free up
     while let Some(batch) = batcher.drain() {
-        run_batch(batch.items, exec, shadow.as_deref_mut(), rows, row_len, out_len,
-                  shadow_every, &mut metrics);
+        match idle_rx.recv() {
+            Ok(wid) => {
+                let _ = job_txs[wid].send(Job::Batch(batch.items));
+            }
+            Err(_) => break,
+        }
+    }
+    // the final snapshot happens before Job::Shutdown but after the flush:
+    // each worker's stats reply queues FIFO behind its last batch, so the
+    // numbers include everything the server ever served
+    if let Some(tx) = final_reply {
+        let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
+    }
+    for jt in &job_txs {
+        let _ = jt.send(Job::Shutdown);
+    }
+}
+
+/// Collect a snapshot from every worker and merge: counters sum, raw
+/// latencies concatenate (exact pooled percentiles), and the per-worker
+/// views ride along for skew diagnosis. A worker that no longer answers
+/// (its thread died, e.g. a panicking executor) is *counted*, not
+/// silently dropped: `lost_workers` makes the capacity loss visible.
+fn pooled_stats(job_txs: &[Sender<Job>], workers: usize, rejected: u64) -> ServerStats {
+    let rxs: Vec<_> = job_txs
+        .iter()
+        .map(|jt| {
+            let (tx, rx) = mpsc::channel();
+            jt.send(Job::Stats(tx)).ok().map(|_| rx)
+        })
+        .collect();
+    let mut snaps: Vec<WorkerSnapshot> = rxs
+        .into_iter()
+        .flatten()
+        .filter_map(|rx| rx.recv().ok())
+        .collect();
+    snaps.sort_by_key(|s| s.worker);
+    let lost_workers = workers - snaps.len();
+
+    fn mean_batch(rows: u64, batches: u64) -> f64 {
+        if batches == 0 {
+            0.0
+        } else {
+            rows as f64 / batches as f64
+        }
+    }
+
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let (mut batches, mut rows) = (0u64, 0u64);
+    let (mut checks, mut failures, mut errors) = (0u64, 0u64, 0u64);
+    let mut per_worker = Vec::with_capacity(snaps.len());
+    for s in &snaps {
+        batches += s.batches;
+        rows += s.rows;
+        checks += s.shadow_checks;
+        failures += s.shadow_failures;
+        errors += s.shadow_errors;
+        all_latencies.extend_from_slice(&s.latencies_us);
+        per_worker.push(WorkerStats {
+            worker: s.worker,
+            latency: latency_stats_from(&s.latencies_us),
+            batches: s.batches,
+            rows: s.rows,
+            mean_batch: mean_batch(s.rows, s.batches),
+            shadow_checks: s.shadow_checks,
+            shadow_failures: s.shadow_failures,
+            shadow_errors: s.shadow_errors,
+        });
+    }
+    ServerStats {
+        latency: latency_stats_from(&all_latencies),
+        batches,
+        rows,
+        mean_batch: mean_batch(rows, batches),
+        shadow_checks: checks,
+        shadow_failures: failures,
+        shadow_errors: errors,
+        rejected,
+        workers,
+        lost_workers,
+        per_worker,
+    }
+}
+
+/// One worker: pull jobs, run batches, announce idleness. The idle token
+/// is sent once at startup and once after every batch, so the dispatcher
+/// sees each worker in the idle channel exactly when it can accept work.
+fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
+    wid: usize,
+    jobs: Receiver<Job>,
+    idle: Sender<usize>,
+    exec: &mut E,
+    mut shadow: Option<&mut S>,
+    shadow_every: u64,
+) {
+    let rows = exec.batch_rows();
+    let row_len = exec.row_len();
+    let out_len = exec.out_len();
+    let mut metrics = Metrics::new();
+
+    let _ = idle.send(wid);
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Batch(items) => {
+                run_batch(
+                    items,
+                    exec,
+                    shadow.as_deref_mut(),
+                    rows,
+                    row_len,
+                    out_len,
+                    shadow_every,
+                    &mut metrics,
+                );
+                if idle.send(wid).is_err() {
+                    break; // dispatcher is gone; no more work can arrive
+                }
+            }
+            Job::Stats(tx) => {
+                let _ = tx.send(WorkerSnapshot {
+                    worker: wid,
+                    batches: metrics.batches,
+                    rows: metrics.rows,
+                    shadow_checks: metrics.shadow_checks,
+                    shadow_failures: metrics.shadow_failures,
+                    shadow_errors: metrics.shadow_errors,
+                    latencies_us: metrics.latencies_us().to_vec(),
+                });
+            }
+            Job::Shutdown => break,
+        }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_batch<E: BatchExecutor, S: BatchExecutor>(
-    items: Vec<super::batcher::Pending<Request>>,
+    items: Vec<Pending<Request>>,
     exec: &mut E,
     shadow: Option<&mut S>,
     rows: usize,
@@ -317,14 +590,22 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
             if let Some(sh) = shadow {
                 if shadow_every > 0 && (metrics.batches - 1) % shadow_every == 0 {
                     metrics.shadow_checks += 1;
-                    if let Ok(want) = sh.run(&flat) {
-                        let used = items.len() * out_len;
-                        let ok = out[..used]
-                            .iter()
-                            .zip(&want[..used])
-                            .all(|(a, b)| (a - b).abs() <= 1e-2 * b.abs().max(1.0));
-                        if !ok {
+                    match sh.run(&flat) {
+                        Ok(want) => {
+                            let used = items.len() * out_len;
+                            let ok = out[..used]
+                                .iter()
+                                .zip(&want[..used])
+                                .all(|(a, b)| (a - b).abs() <= 1e-2 * b.abs().max(1.0));
+                            if !ok {
+                                metrics.shadow_failures += 1;
+                            }
+                        }
+                        Err(_) => {
+                            // a crashing shadow is a failed check, not a
+                            // passed one — and its own counter
                             metrics.shadow_failures += 1;
+                            metrics.shadow_errors += 1;
                         }
                     }
                 }
@@ -373,13 +654,18 @@ mod tests {
     }
 
     fn start_doubler(fail: bool) -> InferenceServer {
+        start_doubler_pool(fail, 1)
+    }
+
+    fn start_doubler_pool(fail: bool, workers: usize) -> InferenceServer {
         InferenceServer::start(
             4,
             Duration::from_millis(2),
             64,
             0,
-            move || Ok(Doubler { fail }),
-            || Ok(None::<Doubler>),
+            workers,
+            move |_| Ok(Doubler { fail }),
+            |_| Ok(None::<Doubler>),
         )
         .unwrap()
     }
@@ -419,6 +705,89 @@ mod tests {
         assert!(format!("{err:#}").contains("injected failure"));
     }
 
+    #[test]
+    fn pool_answers_every_request_and_stats_add_up() {
+        let srv = start_doubler_pool(false, 4);
+        let rxs: Vec<_> = (0..64)
+            .map(|i| srv.submit(vec![i as f32, 1.0, -1.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out, vec![2.0 * i as f32, 2.0, -2.0]);
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.workers, 4);
+        assert_eq!(stats.lost_workers, 0);
+        assert_eq!(stats.rows, 64);
+        assert_eq!(stats.per_worker.len(), 4);
+        assert_eq!(
+            stats.per_worker.iter().map(|w| w.rows).sum::<u64>(),
+            stats.rows,
+            "per-worker rows must sum to the pooled total"
+        );
+        assert_eq!(
+            stats.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+            stats.batches,
+            "per-worker batches must sum to the pooled total"
+        );
+        assert_eq!(
+            stats.per_worker.iter().map(|w| w.latency.count).sum::<u64>(),
+            stats.latency.count
+        );
+    }
+
+    #[test]
+    fn queue_full_is_an_explicit_response_not_a_dropped_channel() {
+        // max_batch above queue_depth and an hour-long deadline: rows pile
+        // up in the batcher until it rejects; the rejected clients must see
+        // an explicit "queue full" error, never a dead channel (which
+        // recv() would misreport as "server shut down").
+        let srv = InferenceServer::start(
+            64,
+            Duration::from_secs(3600),
+            2,
+            0,
+            1,
+            |_| Ok(Doubler { fail: false }),
+            |_| Ok(None::<Doubler>),
+        )
+        .unwrap();
+
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            rxs.push(srv.submit(vec![i as f32, 0.0, 0.0]).unwrap());
+            // stats() round-trips through the dispatcher's FIFO queue, so
+            // on return the row above has been pushed into (or rejected
+            // by) the batcher — making the rejection split deterministic
+            let _ = srv.stats().unwrap();
+        }
+
+        let mut explicit_rejects = 0u64;
+        let mut accepted = Vec::new();
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(Err(e)) => {
+                    assert!(e.contains("queue full"), "unexpected reject text: {e}");
+                    explicit_rejects += 1;
+                }
+                Err(_) => accepted.push(rx), // still queued; answered at shutdown
+                Ok(Ok(_)) => panic!("no batch can have fired before the deadline"),
+            }
+        }
+        // queue_depth = 2, so rows 0..2 were accepted and 2..6 rejected —
+        // every rejection as an explicit response, none as a dead channel
+        assert_eq!(explicit_rejects, 4);
+        assert_eq!(accepted.len(), 2);
+
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rejected, explicit_rejects);
+        // the two queued rows are flushed on shutdown and answered Ok
+        for rx in accepted {
+            let out = rx.recv().unwrap();
+            assert!(out.is_ok(), "queued request lost at shutdown: {out:?}");
+        }
+    }
+
     /// shadow that disagrees on purpose
     struct WrongShadow;
 
@@ -444,13 +813,125 @@ mod tests {
             Duration::from_millis(1),
             64,
             1,
-            || Ok(Doubler { fail: false }),
-            || Ok(Some(WrongShadow)),
+            1,
+            |_| Ok(Doubler { fail: false }),
+            |_| Ok(Some(WrongShadow)),
         )
         .unwrap();
         let _ = srv.infer(vec![1.0, 1.0, 1.0]).unwrap();
         let stats = srv.shutdown().unwrap();
         assert!(stats.shadow_checks >= 1);
         assert_eq!(stats.shadow_failures, stats.shadow_checks);
+        assert_eq!(stats.shadow_errors, 0);
+    }
+
+    /// shadow that crashes on purpose
+    struct CrashingShadow;
+
+    impl BatchExecutor for CrashingShadow {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, _rows_flat: &[f32]) -> Result<Vec<f32>> {
+            Err(anyhow!("shadow exploded"))
+        }
+    }
+
+    #[test]
+    fn shadow_error_counts_as_failure_not_pass() {
+        let srv = InferenceServer::start(
+            4,
+            Duration::from_millis(1),
+            64,
+            1,
+            1,
+            |_| Ok(Doubler { fail: false }),
+            |_| Ok(Some(CrashingShadow)),
+        )
+        .unwrap();
+        // the primary still answers — shadow trouble must not break serving
+        let out = srv.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+        let stats = srv.shutdown().unwrap();
+        assert!(stats.shadow_checks >= 1);
+        assert_eq!(
+            stats.shadow_errors, stats.shadow_checks,
+            "every shadow call errored, so every check must count an error"
+        );
+        assert_eq!(
+            stats.shadow_failures, stats.shadow_checks,
+            "a crashing shadow must count as a failed check, not a pass"
+        );
+    }
+
+    /// executor that panics (not errors) on its first batch
+    struct PanickingExec;
+
+    impl BatchExecutor for PanickingExec {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, _rows_flat: &[f32]) -> Result<Vec<f32>> {
+            panic!("executor died mid-batch");
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_counted_not_hidden() {
+        let srv = InferenceServer::start(
+            4,
+            Duration::from_millis(1),
+            64,
+            0,
+            2,
+            |_| Ok(PanickingExec),
+            |_| Ok(None::<PanickingExec>),
+        )
+        .unwrap();
+        // the batch's worker panics: its response channels drop, so the
+        // client sees a dead channel for this (unrecoverable) case
+        let rx = srv.submit(vec![0.0; 3]).unwrap();
+        assert!(rx.recv().is_err(), "a panicked worker cannot answer");
+        // …but the pool must not pretend nothing happened: the dead
+        // worker is counted, and the survivor still reports
+        let stats = srv.stats().unwrap();
+        assert_eq!(stats.workers, 2);
+        assert_eq!(stats.lost_workers, 1);
+        assert_eq!(stats.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn failed_worker_init_surfaces_at_start() {
+        // one of four factories fails → start() must return the error
+        let err = InferenceServer::start(
+            4,
+            Duration::from_millis(1),
+            64,
+            0,
+            4,
+            |wid| {
+                if wid == 2 {
+                    Err(anyhow!("no device for worker {wid}"))
+                } else {
+                    Ok(Doubler { fail: false })
+                }
+            },
+            |_| Ok(None::<Doubler>),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("executor init"));
     }
 }

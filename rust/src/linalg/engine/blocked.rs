@@ -240,6 +240,15 @@ impl<T: SquareScalar> PreparedB<T> {
         (Self { b, sb }, OpCounts { squares: np, adds: np, ..OpCounts::ZERO })
     }
 
+    /// Prepare and wrap for sharing: the serving pool hands every worker
+    /// a clone of the returned `Arc`, so the one-time `N·P` correction
+    /// cost is paid exactly once no matter how many workers serve the
+    /// model (the §3 amortisation, extended across a whole pool).
+    pub fn new_shared(b: Matrix<T>) -> (std::sync::Arc<Self>, OpCounts) {
+        let (pb, ops) = Self::new(b);
+        (std::sync::Arc::new(pb), ops)
+    }
+
     pub fn matrix(&self) -> &Matrix<T> {
         &self.b
     }

@@ -14,6 +14,8 @@
 //!   [`PreparedB`], the precomputed-correction cache for constant weights:
 //!   the paper's §3 inference case, where `Sb_j = −Σ_k b_kj²` is computed
 //!   once per model and amortised across every request.
+//!   [`PreparedB::new_shared`] wraps the cache in an `Arc` so a sharded
+//!   serving pool pays that one-time cost once for *all* its workers.
 //! * [`threaded`] — a row-partitioned parallel driver on
 //!   `std::thread::scope` (no dependencies): output rows are split into
 //!   contiguous chunks, one scoped thread per chunk, no locks because the

@@ -22,7 +22,15 @@ where
     T: Send,
     F: Fn(usize, usize, &mut [T]) + Sync,
 {
-    debug_assert_eq!(data.len(), rows * cols);
+    // a real assert, not a debug_assert: in a release build a bad shape
+    // would otherwise silently mis-partition rows across threads (each
+    // chunk's row range is derived from `cols`), corrupting the output
+    // instead of failing fast
+    assert_eq!(
+        data.len(),
+        rows * cols,
+        "for_row_chunks: data.len() must equal rows*cols ({rows}x{cols})"
+    );
     if rows == 0 || cols == 0 {
         return;
     }
@@ -76,5 +84,15 @@ mod tests {
     #[test]
     fn max_threads_is_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "for_row_chunks: data.len() must equal rows*cols")]
+    fn mismatched_shape_panics_in_every_build() {
+        // 11 values cannot be 3 rows of 4 — must fail fast, not
+        // mis-partition (this is a plain assert!, so it fires in release
+        // builds too)
+        let mut data = vec![0i64; 11];
+        for_row_chunks(&mut data, 3, 4, 2, |_, _, _| {});
     }
 }

@@ -33,16 +33,27 @@ COMMANDS:
   simulate  [--size N]           cycle-accurate architecture runs
   errors                         float error of the square trick (E5)
   serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
-            [--native] [--threads T]
+            [--native] [--threads T] [--workers W]
                                  batching inference server demo (E6);
                                  --native serves the blocked square-kernel
-                                 engine in-process (no PJRT artifacts)
+                                 engine in-process (no PJRT artifacts);
+                                 --workers W shards the server into W
+                                 worker threads behind one dispatcher —
+                                 every worker shares one prepared weight
+                                 matrix, so the constant-weight (§3)
+                                 corrections are computed exactly once
+                                 for the whole pool. Native only: the
+                                 PJRT engine is not Send, so the artifact
+                                 path requires --workers 1 (the default).
+                                 --threads T is the total engine thread
+                                 budget, split across the workers.
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
 fn main() {
     let args = match Args::parse(
-        &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads"],
+        &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads",
+          "workers"],
         &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
@@ -284,42 +295,55 @@ fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 256)?;
     let rps = args.get_u64("rps", 2_000)? as f64;
     let shadow_wanted = !args.has("no-shadow");
+    let workers = args.get_usize("workers", 1)?.max(1);
 
     let srv = if args.has("native") {
         // native path: the blocked multi-threaded square-kernel engine
-        // serves a random-but-deterministic 784→10 linear model in-process
-        // (weight corrections cached once), shadowed by its direct twin
+        // serves a random-but-deterministic 784→10 linear model in-process,
+        // sharded across `workers` threads that share one prepared weight
+        // matrix (corrections computed once), shadowed by its direct twin
         let threads = args.get_usize("threads", fairsquare::linalg::engine::max_threads())?;
+        // the --threads budget is the whole pool's: each worker's engine
+        // gets an even share so W workers don't oversubscribe W× the cores
+        let per_worker_threads = (threads / workers).max(1);
         let mut rng = Rng::new(0xE6);
         let weights =
             Matrix::from_fn(784, 10, |_, _| (rng.normal() * 0.05) as f32);
         // report the parallelism this batch shape actually gets: the engine
         // caps workers by useful work, so small models run fewer threads
         // than requested no matter the knob
-        let effective =
-            fairsquare::linalg::engine::effective_threads(threads, 32, 784, 10);
+        let effective = fairsquare::linalg::engine::effective_threads(
+            per_worker_threads, 32, 784, 10,
+        );
         println!(
-            "starting server: native square-kernel engine \
-             ({threads} threads requested, {effective} effective per 32-row batch) \
-             shadow={}",
+            "starting server: native square-kernel engine, {workers} worker(s) \
+             ({per_worker_threads} engine threads each, {effective} effective \
+             per 32-row batch) shadow={}",
             if shadow_wanted { "direct twin" } else { "off" }
         );
-        let shadow_w = weights.clone();
-        let cfg = fairsquare::linalg::engine::EngineConfig::with_threads(threads);
+        let (prepared, _prep_ops) =
+            fairsquare::linalg::engine::PreparedB::new_shared(weights);
+        let shadow_w = prepared.matrix().clone();
+        let cfg =
+            fairsquare::linalg::engine::EngineConfig::with_threads(per_worker_threads);
         fairsquare::coordinator::InferenceServer::start(
             32,
             Duration::from_millis(2),
             1024,
             if shadow_wanted { 8 } else { 0 },
-            move || {
-                Ok(fairsquare::coordinator::SquareKernelExecutor::with_config(
-                    weights, 32, cfg,
+            workers,
+            move |_wid| {
+                Ok(fairsquare::coordinator::SquareKernelExecutor::from_shared(
+                    prepared.clone(),
+                    32,
+                    cfg.clone(),
                 ))
             },
-            move || {
+            move |_wid| {
                 if shadow_wanted {
                     Ok(Some(fairsquare::coordinator::DirectKernelExecutor::new(
-                        shadow_w, 32,
+                        shadow_w.clone(),
+                        32,
                     )))
                 } else {
                     Ok(None)
@@ -327,6 +351,12 @@ fn serve(args: &Args) -> Result<()> {
             },
         )?
     } else {
+        if workers > 1 {
+            bail!(
+                "the PJRT serving path is single-worker (its engine is not \
+                 `Send`); use --native for --workers {workers}"
+            );
+        }
         let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
         let model = args.get_or("model", "mlp_square").to_string();
         let baseline = model.replace("_square", "_direct");
@@ -342,8 +372,9 @@ fn serve(args: &Args) -> Result<()> {
             Duration::from_millis(2),
             1024,
             if shadow { 8 } else { 0 },
-            move || PjrtExecutor::new(&dir2, &model2),
-            move || {
+            1,
+            move |_wid| PjrtExecutor::new(&dir2, &model2),
+            move |_wid| {
                 if shadow {
                     Ok(Some(PjrtExecutor::new(&dir, &baseline2)?))
                 } else {
@@ -371,7 +402,8 @@ fn serve(args: &Args) -> Result<()> {
     let stats = srv.shutdown()?;
 
     let l = stats.latency;
-    let mut t = Table::new("E6 — serving report", &["metric", "value"]);
+    let mut t = Table::new("E6 — serving report (pooled)", &["metric", "value"]);
+    t.row(&["workers".into(), stats.workers.to_string()]);
     t.row(&["completed".into(), format!("{ok}/{requests}")]);
     t.row(&["wall time".into(), format!("{wall:.2?}")]);
     t.row(&["throughput".into(),
@@ -382,8 +414,29 @@ fn serve(args: &Args) -> Result<()> {
     t.row(&["p99 latency".into(), format!("{:.0} µs", l.p99_us)]);
     t.row(&["shadow checks".into(), stats.shadow_checks.to_string()]);
     t.row(&["shadow failures".into(), stats.shadow_failures.to_string()]);
+    t.row(&["shadow errors".into(), stats.shadow_errors.to_string()]);
     t.row(&["rejected".into(), stats.rejected.to_string()]);
+    t.row(&["lost workers".into(), stats.lost_workers.to_string()]);
     t.print();
+
+    if stats.workers > 1 {
+        let mut t = Table::new(
+            "E6 — per-worker view",
+            &["worker", "batches", "rows", "mean batch", "p50 µs", "p99 µs"],
+        );
+        for w in &stats.per_worker {
+            t.row(&[
+                w.worker.to_string(),
+                w.batches.to_string(),
+                w.rows.to_string(),
+                f(w.mean_batch, 2),
+                format!("{:.0}", w.latency.p50_us),
+                format!("{:.0}", w.latency.p99_us),
+            ]);
+        }
+        t.print();
+    }
+
     if stats.shadow_failures > 0 {
         bail!("shadow verification failed");
     }

@@ -180,7 +180,9 @@ fn systolic_worst_case_fits_budget() {
 }
 
 /// Serving-layer property: batcher + mock executor preserve request→
-/// response mapping under load (the coordinator invariant).
+/// response mapping under load (the coordinator invariant) — at every
+/// pool width, since the dispatcher may interleave batches across
+/// workers in any order.
 #[test]
 fn server_preserves_request_mapping() {
     use fairsquare::coordinator::{BatchExecutor, InferenceServer};
@@ -202,23 +204,29 @@ fn server_preserves_request_mapping() {
         }
     }
 
-    let srv = InferenceServer::start(
-        8,
-        Duration::from_millis(1),
-        4096,
-        0,
-        || Ok(Echo),
-        || Ok(None::<Echo>),
-    )
-    .unwrap();
-    let pending: Vec<_> = (0..200)
-        .map(|i| {
-            let row = vec![i as f32, 2.0 * i as f32, -(i as f32), 0.5];
-            (row.clone(), srv.submit(row).unwrap())
-        })
-        .collect();
-    for (sent, rx) in pending {
-        let got = rx.recv().unwrap().unwrap();
-        assert_eq!(got, sent, "response crossed requests");
+    for workers in [1usize, 4] {
+        let srv = InferenceServer::start(
+            8,
+            Duration::from_millis(1),
+            4096,
+            0,
+            workers,
+            |_| Ok(Echo),
+            |_| Ok(None::<Echo>),
+        )
+        .unwrap();
+        let pending: Vec<_> = (0..200)
+            .map(|i| {
+                let row = vec![i as f32, 2.0 * i as f32, -(i as f32), 0.5];
+                (row.clone(), srv.submit(row).unwrap())
+            })
+            .collect();
+        for (sent, rx) in pending {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got, sent, "response crossed requests (workers={workers})");
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rows, 200, "workers={workers}");
+        assert_eq!(stats.workers, workers);
     }
 }

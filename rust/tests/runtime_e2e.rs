@@ -174,8 +174,15 @@ fn native_square_executor_serves_without_artifacts() {
         Duration::from_millis(2),
         128,
         0,
-        move || Ok(SquareKernelExecutor::with_config(w32, 8, EngineConfig::with_threads(2))),
-        || Ok(None::<SquareKernelExecutor>),
+        1,
+        move |_| {
+            Ok(SquareKernelExecutor::with_config(
+                w32.clone(),
+                8,
+                EngineConfig::with_threads(2),
+            ))
+        },
+        |_| Ok(None::<SquareKernelExecutor>),
     )
     .unwrap();
 
@@ -202,6 +209,97 @@ fn native_square_executor_serves_without_artifacts() {
     assert_eq!(stats.rows, 20);
     assert_eq!(stats.rejected, 0);
     assert!(stats.mean_batch > 1.0, "batching never engaged");
+}
+
+/// The sharded pool end-to-end: many small requests through `workers = 1`
+/// and `workers = 4` must produce identical results (same seed, each
+/// response read from its own FIFO channel), the pooled `ServerStats`
+/// must equal the sum of the per-worker views, and the `PreparedB`
+/// weight corrections must be computed exactly once per pool — the §3
+/// amortisation extended across all workers.
+#[test]
+fn worker_pool_matches_single_worker_and_stats_add_up() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use fairsquare::coordinator::{InferenceServer, ServerStats, SquareKernelExecutor};
+    use fairsquare::linalg::engine::{EngineConfig, PreparedB};
+
+    let mut rng = Rng::new(0x9001);
+    let w_int = Matrix::random(&mut rng, 16, 4, -6, 6);
+    let w32 = w_int.map(|v| v as f32);
+    let inputs: Vec<Vec<f32>> = (0..120)
+        .map(|_| rng.vec_i64(16, -6, 6).iter().map(|&v| v as f32).collect())
+        .collect();
+
+    let run = |workers: usize| -> (Vec<Vec<f32>>, ServerStats, usize) {
+        // prepare once per pool, outside the factories: every worker
+        // clones the Arc, nobody re-derives the corrections
+        let (prepared, _prep_ops) = PreparedB::new_shared(w32.clone());
+        let executors_built = Arc::new(AtomicUsize::new(0));
+        let counter = executors_built.clone();
+        let srv = InferenceServer::start(
+            4,
+            Duration::from_millis(1),
+            4096,
+            0,
+            workers,
+            move |_wid| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                Ok(SquareKernelExecutor::from_shared(
+                    prepared.clone(),
+                    4,
+                    EngineConfig::with_threads(1),
+                ))
+            },
+            |_wid| Ok(None::<SquareKernelExecutor>),
+        )
+        .unwrap();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|row| srv.submit(row.clone()).unwrap())
+            .collect();
+        let outs: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let stats = srv.shutdown().unwrap();
+        (outs, stats, executors_built.load(Ordering::SeqCst))
+    };
+
+    let (outs1, stats1, built1) = run(1);
+    let (outs4, stats4, built4) = run(4);
+
+    // sharding must be invisible to clients
+    assert_eq!(outs1, outs4, "worker pool changed results");
+    assert_eq!(stats1.rows, 120);
+    assert_eq!(stats4.rows, 120);
+
+    // one executor per worker, each a clone of ONE prepared weight set
+    assert_eq!(built1, 1);
+    assert_eq!(built4, 4, "each pool worker builds its own executor");
+
+    // pooled totals are exactly the per-worker sums
+    assert_eq!(stats4.workers, 4);
+    assert_eq!(stats4.lost_workers, 0);
+    assert_eq!(stats4.per_worker.len(), 4);
+    assert_eq!(
+        stats4.per_worker.iter().map(|w| w.rows).sum::<u64>(),
+        stats4.rows
+    );
+    assert_eq!(
+        stats4.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+        stats4.batches
+    );
+    assert_eq!(
+        stats4
+            .per_worker
+            .iter()
+            .map(|w| w.shadow_checks)
+            .sum::<u64>(),
+        stats4.shadow_checks
+    );
 }
 
 #[test]

@@ -1,11 +1,16 @@
 #!/usr/bin/env bash
-# One-command verification: tier-1 build+tests plus the perf smoke gate.
+# One-command verification: tier-1 build+tests plus the perf smoke gates.
 #
-#   scripts/verify.sh          # tier-1 + blocked_engine bench in --quick mode
+#   scripts/verify.sh          # tier-1 + perf benches in --quick mode
 #   scripts/verify.sh --full   # same, but full bench budgets
 #
-# The bench enforces the blocked+threaded ≥ 2× naive gate at 256³ and
-# writes rust/BENCH_blocked_engine.json for the perf trajectory.
+# Gates enforced here:
+#   * blocked_engine: blocked+threaded ≥ 2× naive at 256³, writes
+#     rust/BENCH_blocked_engine.json
+#   * e2e_serving: the native worker-pool sweep (workers ∈ {1,2,4}) must
+#     produce rust/BENCH_e2e_serving.json — the serving perf trajectory —
+#     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1
+#   * a CLI smoke of the sharded server: `serve --native --workers 2`
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -24,5 +29,17 @@ cargo test -q
 echo "==> cargo bench --bench blocked_engine -- ${MODE:-(full)}"
 # shellcheck disable=SC2086
 cargo bench --bench blocked_engine -- $MODE
+
+echo "==> cargo bench --bench e2e_serving -- ${MODE:-(full)}"
+rm -f BENCH_e2e_serving.json
+# shellcheck disable=SC2086
+cargo bench --bench e2e_serving -- $MODE
+if [[ ! -f BENCH_e2e_serving.json ]]; then
+    echo "verify FAILED: BENCH_e2e_serving.json was not produced" >&2
+    exit 1
+fi
+
+echo "==> serve --native --workers 2 smoke"
+cargo run --release --quiet -- serve --native --workers 2 --requests 128 --rps 8000
 
 echo "==> verify OK"
