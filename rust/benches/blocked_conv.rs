@@ -1,0 +1,195 @@
+//! Perf gate for the conv2d / CPM3 lowering subsystem.
+//!
+//! Conv legs, per CNN-scale shape (image × filter bank):
+//!   * `naive`    — F independent `conv2d_square` reference calls (the
+//!     pre-lowering serving cost: per-call x² maps, tap-major sweeps)
+//!   * `blocked`  — one im2col + one blocked square matmul against the
+//!     prepared bank (`PreparedConvBank`), single thread
+//!   * `threaded` — same lowering, one engine worker per core
+//!   * `direct`   — the multiplier twin of the lowering, for context
+//!
+//! Acceptance: the threaded lowering ≥ 2× the naive per-filter reference
+//! at the 64×64-image / 16-filter CNN-scale shape (enforced whenever the
+//! machine has ≥ 2 cores; the im2col sharing and fused `(a+b)²` inner
+//! loop carry part of the margin, the row-partitioned driver the rest).
+//!
+//! Complex legs: the three-pass blocked CPM3 vs the reference
+//! element-walking `cmatmul_cpm3` at serving-ish shapes (informational —
+//! the conv gate is this bench's acceptance gate).
+//!
+//! Writes `BENCH_blocked_conv.json` (benchkit `JsonReport` schema) so the
+//! lowering's perf trajectory accumulates from this PR on. `--quick` (as
+//! passed by `scripts/verify.sh`) shrinks budgets, not coverage: every
+//! shape still runs and the JSON artifact is still written.
+
+use fairsquare::arith::Complex;
+use fairsquare::benchkit::{f, fmt_ns, Bench, JsonReport, Table};
+use fairsquare::linalg::complex::{cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix};
+use fairsquare::linalg::conv::{conv2d_direct, conv2d_square};
+use fairsquare::linalg::engine::{
+    cmatmul_cpm3_blocked, max_threads, CPlanes, EngineConfig, PreparedConvBank,
+};
+use fairsquare::linalg::Matrix;
+use fairsquare::testkit::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let threads = max_threads();
+    let mut rng = Rng::new(0xC04F);
+    let mut report = JsonReport::new("blocked_conv");
+
+    let single = EngineConfig::default();
+    let multi = EngineConfig::threaded();
+
+    // ---- conv legs ------------------------------------------------------
+    let mut t = Table::new(
+        &format!(
+            "blocked_conv — im2col lowering vs per-filter conv2d_square \
+             ({threads} threads)"
+        ),
+        &["image", "filters", "naive", "blocked", "threaded", "direct",
+          "blk/naive", "thr/naive"],
+    );
+
+    // (image side, kernel side, filters); the 64×64/16 row is the gate
+    let shapes: &[(usize, usize, usize)] =
+        if quick { &[(32, 3, 8), (64, 3, 16)] } else { &[(32, 3, 8), (64, 3, 16), (96, 5, 16)] };
+
+    for &(img_n, k_n, filters_n) in shapes {
+        let img = Matrix::random(&mut rng, img_n, img_n, -128, 128);
+        let filters: Vec<Matrix<i64>> = (0..filters_n)
+            .map(|_| Matrix::random(&mut rng, k_n, k_n, -64, 64))
+            .collect();
+        let (bank, _prep) = PreparedConvBank::new(&filters).unwrap();
+
+        // correctness cross-check before timing anything: every map must
+        // equal both reference kernels bit-for-bit
+        let (maps, _) = bank.apply(&img, &multi).unwrap();
+        for (fi, ker) in filters.iter().enumerate() {
+            let want = conv2d_direct(ker, &img).unwrap().0;
+            assert_eq!(maps[fi], want, "lowering diverged: filter {fi} at {img_n}²");
+            assert_eq!(conv2d_square(ker, &img).unwrap().0, want);
+        }
+
+        let m_naive = bench.run(|| {
+            filters
+                .iter()
+                .map(|ker| conv2d_square(ker, &img).unwrap().0)
+                .collect::<Vec<_>>()
+        });
+        let m_blocked = bench.run(|| bank.apply(&img, &single).unwrap());
+        let m_threaded = bench.run(|| bank.apply(&img, &multi).unwrap());
+        let m_direct = bench.run(|| {
+            filters
+                .iter()
+                .map(|ker| conv2d_direct(ker, &img).unwrap().0)
+                .collect::<Vec<_>>()
+        });
+
+        let blk_speedup = m_naive.mean_ns / m_blocked.mean_ns;
+        let thr_speedup = m_naive.mean_ns / m_threaded.mean_ns;
+        t.row(&[
+            format!("{img_n}x{img_n}"),
+            filters_n.to_string(),
+            fmt_ns(m_naive.mean_ns),
+            fmt_ns(m_blocked.mean_ns),
+            fmt_ns(m_threaded.mean_ns),
+            fmt_ns(m_direct.mean_ns),
+            f(blk_speedup, 2),
+            f(thr_speedup, 2),
+        ]);
+
+        let shape = [("img", img_n as f64), ("k", k_n as f64), ("filters", filters_n as f64)];
+        report.case(&format!("naive_{img_n}x{img_n}_f{filters_n}"), &m_naive, &shape);
+        report.case(
+            &format!("blocked_{img_n}x{img_n}_f{filters_n}"),
+            &m_blocked,
+            &[("speedup_vs_naive", blk_speedup), ("img", img_n as f64)],
+        );
+        report.case(
+            &format!("threaded_{img_n}x{img_n}_f{filters_n}"),
+            &m_threaded,
+            &[
+                ("speedup_vs_naive", thr_speedup),
+                ("threads", threads as f64),
+                ("img", img_n as f64),
+            ],
+        );
+        report.case(&format!("direct_{img_n}x{img_n}_f{filters_n}"), &m_direct, &shape);
+
+        if (img_n, filters_n) == (64, 16) {
+            // the PR's acceptance gate, enforced where the numbers are made
+            println!(
+                "\nCNN-scale gate (64×64, 16 filters): lowered+threaded is \
+                 {thr_speedup:.2}× the per-filter conv2d_square (target ≥ 2×)"
+            );
+            if threads >= 2 {
+                assert!(
+                    thr_speedup >= 2.0,
+                    "perf gate failed: lowered conv speedup {thr_speedup:.2}× < 2×"
+                );
+            } else {
+                println!("(gate not enforced: single-core machine)");
+            }
+        }
+    }
+    t.print();
+
+    // ---- complex legs ---------------------------------------------------
+    let mut t = Table::new(
+        "blocked_conv — three-pass CPM3 lowering vs reference cmatmul_cpm3",
+        &["M=N=P", "reference", "blocked", "threaded", "blk/ref", "thr/ref"],
+    );
+    let cshapes: &[usize] = if quick { &[64] } else { &[64, 128] };
+    for &n in cshapes {
+        let x = CMatrix::from_fn(n, n, |_, _| {
+            Complex::new(rng.i64_in(-200, 200), rng.i64_in(-200, 200))
+        });
+        let y = CMatrix::from_fn(n, n, |_, _| {
+            Complex::new(rng.i64_in(-200, 200), rng.i64_in(-200, 200))
+        });
+        let (xre, xim) = to_planes(&x);
+        let (yre, yim) = to_planes(&y);
+        let xp = CPlanes::new(xre, xim).unwrap();
+        let yp = CPlanes::new(yre, yim).unwrap();
+
+        // correctness cross-check before timing
+        let want = cmatmul_direct(&x, &y).0;
+        let (got, _) = cmatmul_cpm3_blocked(&xp, &yp, &multi).unwrap();
+        let (wre, wim) = to_planes(&want);
+        assert_eq!(got.re, wre, "CPM3 lowering diverged at {n}³");
+        assert_eq!(got.im, wim, "CPM3 lowering diverged at {n}³");
+
+        let m_ref = bench.run(|| cmatmul_cpm3(&x, &y));
+        let m_blocked = bench.run(|| cmatmul_cpm3_blocked(&xp, &yp, &single).unwrap());
+        let m_threaded = bench.run(|| cmatmul_cpm3_blocked(&xp, &yp, &multi).unwrap());
+        let blk = m_ref.mean_ns / m_blocked.mean_ns;
+        let thr = m_ref.mean_ns / m_threaded.mean_ns;
+        t.row(&[
+            n.to_string(),
+            fmt_ns(m_ref.mean_ns),
+            fmt_ns(m_blocked.mean_ns),
+            fmt_ns(m_threaded.mean_ns),
+            f(blk, 2),
+            f(thr, 2),
+        ]);
+        report.case(&format!("cpm3_reference_{n}"), &m_ref, &[("n", n as f64)]);
+        report.case(
+            &format!("cpm3_blocked_{n}"),
+            &m_blocked,
+            &[("n", n as f64), ("speedup_vs_reference", blk)],
+        );
+        report.case(
+            &format!("cpm3_threaded_{n}"),
+            &m_threaded,
+            &[("n", n as f64), ("speedup_vs_reference", thr), ("threads", threads as f64)],
+        );
+    }
+    t.print();
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_blocked_conv.json: {e}"),
+    }
+}

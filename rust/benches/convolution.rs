@@ -147,8 +147,8 @@ fn main() {
     for (kh, kw, h, w_) in [(3usize, 3usize, 32usize, 32usize), (5, 5, 64, 64)] {
         let ker = Matrix::random(&mut rng, kh, kw, -100, 100);
         let img = Matrix::random(&mut rng, h, w_, -100, 100);
-        let (d, od) = conv2d_direct(&ker, &img);
-        let (s, os) = conv2d_square(&ker, &img);
+        let (d, od) = conv2d_direct(&ker, &img).unwrap();
+        let (s, os) = conv2d_square(&ker, &img).unwrap();
         t.row(&[
             format!("{kh}x{kw}"),
             format!("{h}x{w_}"),

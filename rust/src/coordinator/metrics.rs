@@ -1,8 +1,25 @@
 //! Serving metrics: latency distribution + throughput counters.
+//!
+//! Long-lived servers must not grow (or ship) unbounded latency history:
+//! the recorder keeps *exact* running totals (count, sum, max — so count,
+//! mean and max in [`LatencyStats`] are always exact) plus a bounded ring
+//! of the most recent raw samples for percentiles. Periodic stats polls
+//! are served from per-worker summaries ([`merge_latency_summaries`]);
+//! raw-sample merging ([`latency_stats_from`]) is reserved for the one
+//! shutdown snapshot, where pooled percentiles over the retained windows
+//! are computed exactly.
 
 use std::time::{Duration, Instant};
 
-/// Summary statistics over recorded latencies.
+/// Raw latency samples retained per worker for percentile estimation.
+/// Bounds both memory and the size of the shutdown snapshot; counters
+/// stay exact regardless. 8k × 8 bytes = 64 KiB per worker.
+pub const DEFAULT_LATENCY_RETENTION: usize = 8192;
+
+/// Summary statistics over recorded latencies. `count`, `mean_us` and
+/// `max_us` are exact over *all* samples ever recorded; the percentiles
+/// are computed over the retained window (exact until a worker overflows
+/// its retention cap, most-recent-window estimates after).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencyStats {
     pub count: u64,
@@ -13,13 +30,30 @@ pub struct LatencyStats {
     pub max_us: f64,
 }
 
-/// Metrics recorder. Latencies are stored raw (µs) — serving runs here are
-/// bounded, so exact percentiles beat HDR approximations, and a worker
-/// pool can merge raw vectors into exact pooled percentiles instead of
-/// averaging per-worker summaries.
+impl LatencyStats {
+    pub const ZERO: Self = Self {
+        count: 0,
+        mean_us: 0.0,
+        p50_us: 0.0,
+        p95_us: 0.0,
+        p99_us: 0.0,
+        max_us: 0.0,
+    };
+}
+
+/// Metrics recorder: exact counters plus a bounded ring buffer of the
+/// most recent raw latency samples (µs). The ring keeps the shutdown
+/// snapshot's raw-merge exact for bounded runs (≤ cap samples — every
+/// bench and test here) while capping memory and snapshot size for
+/// long-lived servers.
 #[derive(Debug)]
 pub struct Metrics {
-    latencies_us: Vec<f64>,
+    retained_us: Vec<f64>,
+    next_slot: usize,
+    cap: usize,
+    lat_count: u64,
+    lat_sum_us: f64,
+    lat_max_us: f64,
     pub batches: u64,
     pub rows: u64,
     pub shadow_checks: u64,
@@ -38,8 +72,19 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
+        Self::with_retention(DEFAULT_LATENCY_RETENTION)
+    }
+
+    /// Recorder with an explicit raw-sample retention cap (≥ 1).
+    pub fn with_retention(cap: usize) -> Self {
+        let cap = cap.max(1);
         Self {
-            latencies_us: Vec::new(),
+            retained_us: Vec::with_capacity(cap.min(1024)),
+            next_slot: 0,
+            cap,
+            lat_count: 0,
+            lat_sum_us: 0.0,
+            lat_max_us: 0.0,
             batches: 0,
             rows: 0,
             shadow_checks: 0,
@@ -50,7 +95,19 @@ impl Metrics {
     }
 
     pub fn record_latency(&mut self, d: Duration) {
-        self.latencies_us.push(d.as_secs_f64() * 1e6);
+        let us = d.as_secs_f64() * 1e6;
+        self.lat_count += 1;
+        self.lat_sum_us += us;
+        if us > self.lat_max_us {
+            self.lat_max_us = us;
+        }
+        // ring: append until full, then overwrite the oldest slot
+        if self.retained_us.len() < self.cap {
+            self.retained_us.push(us);
+        } else {
+            self.retained_us[self.next_slot] = us;
+        }
+        self.next_slot = (self.next_slot + 1) % self.cap;
     }
 
     pub fn record_batch(&mut self, rows: usize) {
@@ -71,29 +128,38 @@ impl Metrics {
         }
     }
 
-    /// The raw recorded latencies (µs), for pooled-percentile merging.
+    /// Latency samples recorded, exact (not capped by retention).
+    pub fn latency_count(&self) -> u64 {
+        self.lat_count
+    }
+
+    /// The retained raw latency window (µs), most recent `cap` samples —
+    /// what the shutdown snapshot merges for pooled percentiles.
     pub fn latencies_us(&self) -> &[f64] {
-        &self.latencies_us
+        &self.retained_us
     }
 
     pub fn latency_stats(&self) -> LatencyStats {
-        latency_stats_from(&self.latencies_us)
+        let mut s = latency_stats_from(&self.retained_us);
+        // exact totals override the window-derived ones
+        s.count = self.lat_count;
+        s.mean_us = if self.lat_count == 0 {
+            0.0
+        } else {
+            self.lat_sum_us / self.lat_count as f64
+        };
+        s.max_us = self.lat_max_us;
+        s
     }
 }
 
-/// Exact summary statistics over any raw µs latency sample — one worker's
-/// recorder or a pool-merged view (percentiles of a union can't be
-/// recovered from per-worker summaries, so the pool merges raw samples).
+/// Exact summary statistics over a raw µs latency sample — one worker's
+/// retained window or the pool-merged union at shutdown (percentiles of a
+/// union can't be recovered from per-worker summaries, so the shutdown
+/// snapshot merges raw samples).
 pub fn latency_stats_from(latencies_us: &[f64]) -> LatencyStats {
     if latencies_us.is_empty() {
-        return LatencyStats {
-            count: 0,
-            mean_us: 0.0,
-            p50_us: 0.0,
-            p95_us: 0.0,
-            p99_us: 0.0,
-            max_us: 0.0,
-        };
+        return LatencyStats::ZERO;
     }
     let mut v = latencies_us.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -105,6 +171,30 @@ pub fn latency_stats_from(latencies_us: &[f64]) -> LatencyStats {
         p95_us: pct(0.95),
         p99_us: pct(0.99),
         max_us: *v.last().unwrap(),
+    }
+}
+
+/// Pool a set of per-worker summaries *without* raw samples — the
+/// periodic-poll path. `count` sums exactly, `mean` is the exact
+/// count-weighted mean, `max` is exact; the pooled percentiles are
+/// count-weighted averages of the per-worker percentiles (an
+/// approximation — exact pooled percentiles come from the raw-merging
+/// shutdown snapshot only).
+pub fn merge_latency_summaries(parts: &[LatencyStats]) -> LatencyStats {
+    let count: u64 = parts.iter().map(|s| s.count).sum();
+    if count == 0 {
+        return LatencyStats::ZERO;
+    }
+    let weighted = |f: fn(&LatencyStats) -> f64| {
+        parts.iter().map(|s| f(s) * s.count as f64).sum::<f64>() / count as f64
+    };
+    LatencyStats {
+        count,
+        mean_us: weighted(|s| s.mean_us),
+        p50_us: weighted(|s| s.p50_us),
+        p95_us: weighted(|s| s.p95_us),
+        p99_us: weighted(|s| s.p99_us),
+        max_us: parts.iter().map(|s| s.max_us).fold(0.0, f64::max),
     }
 }
 
@@ -138,6 +228,55 @@ mod tests {
         let s = Metrics::new().latency_stats();
         assert_eq!(s.count, 0);
         assert_eq!(s.max_us, 0.0);
+    }
+
+    #[test]
+    fn retention_is_bounded_but_counters_stay_exact() {
+        // a long-lived worker: 10_000 samples through a 64-slot ring must
+        // keep memory bounded while count/mean/max stay exact
+        let mut m = Metrics::with_retention(64);
+        for i in 1..=10_000u64 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        assert_eq!(m.latencies_us().len(), 64, "ring must cap raw retention");
+        let s = m.latency_stats();
+        assert_eq!(s.count, 10_000);
+        assert!((s.max_us - 10_000.0).abs() < 1e-6, "max={}", s.max_us);
+        assert!((s.mean_us - 5_000.5).abs() < 1e-3, "mean={}", s.mean_us);
+        // the ring holds the most recent window, so percentiles sit in it
+        assert!(s.p50_us > 9_900.0, "p50={} not from the recent window", s.p50_us);
+        // most recent sample is retained (ring overwrites the oldest)
+        assert!(m
+            .latencies_us()
+            .iter()
+            .any(|v| (v - 10_000.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn merged_summaries_are_exact_on_counters_weighted_on_percentiles() {
+        // two "workers": 100 fast samples and 300 slow ones
+        let a = LatencyStats {
+            count: 100,
+            mean_us: 10.0,
+            p50_us: 10.0,
+            p95_us: 12.0,
+            p99_us: 13.0,
+            max_us: 15.0,
+        };
+        let b = LatencyStats {
+            count: 300,
+            mean_us: 50.0,
+            p50_us: 50.0,
+            p95_us: 52.0,
+            p99_us: 53.0,
+            max_us: 90.0,
+        };
+        let m = merge_latency_summaries(&[a, b]);
+        assert_eq!(m.count, 400);
+        assert!((m.mean_us - 40.0).abs() < 1e-12, "exact weighted mean");
+        assert_eq!(m.max_us, 90.0, "exact max");
+        assert!((m.p50_us - 40.0).abs() < 1e-12, "count-weighted p50");
+        assert_eq!(merge_latency_summaries(&[]).count, 0);
     }
 
     #[test]

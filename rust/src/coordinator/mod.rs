@@ -24,7 +24,10 @@
 //! ([`PjrtExecutor`], needs the `pjrt` feature, pinned to `workers = 1`
 //! because its engine is not `Send`) and the native in-process path
 //! ([`native`]) running the blocked multi-threaded square-kernel engine
-//! with per-model cached corrections — no external runtime at all.
+//! with per-model cached corrections — no external runtime at all. The
+//! native family serves three model kinds: dense (one linear layer), conv
+//! (a CNN filter bank via the im2col lowering) and complex (plane-split
+//! CPM3 matmul) — each with a direct-multiplier shadow twin.
 
 pub mod batcher;
 pub mod metrics;
@@ -33,7 +36,13 @@ pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::{latency_stats_from, LatencyStats, Metrics};
-pub use native::{DirectKernelExecutor, SquareKernelExecutor};
+pub use metrics::{
+    latency_stats_from, merge_latency_summaries, LatencyStats, Metrics,
+    DEFAULT_LATENCY_RETENTION,
+};
+pub use native::{
+    ComplexMatmulDirectExecutor, ComplexMatmulExecutor, Conv2dDirectExecutor,
+    Conv2dExecutor, DirectKernelExecutor, SquareKernelExecutor,
+};
 pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats, WorkerStats};
 pub use workload::WorkloadGen;

@@ -12,13 +12,27 @@
 //! used as the shadow baseline so a cautious operator can cross-check the
 //! square-based model on sampled batches — exactly the rollout story the
 //! PJRT twins tell, but with zero external runtime.
+//!
+//! The engine's lowering subsystem adds two more native workloads:
+//!
+//! * [`Conv2dExecutor`] — a CNN layer: each request row is a flattened
+//!   image, convolved against a fixed filter bank via the im2col lowering
+//!   ([`PreparedConvBank`]) — one blocked square matmul per *batch*, the
+//!   bank's §3 corrections computed once per model (and once per pool via
+//!   `new_shared`). [`Conv2dDirectExecutor`] is its multiplier twin.
+//! * [`ComplexMatmulExecutor`] — a DSP beamforming layer: each request
+//!   row is a plane-split complex vector (`[re…, im…]`), multiplied by a
+//!   fixed complex weight matrix via the three-pass CPM3 lowering
+//!   ([`PreparedCpm3`]). [`ComplexMatmulDirectExecutor`] is the 4-mult
+//!   schoolbook twin.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::linalg::engine::{
-    matmul_direct_blocked, matmul_square_prepared, EngineConfig, PreparedB,
+    matmul_direct_blocked, matmul_square_prepared, plane_add, plane_sub, CPlanes,
+    EngineConfig, PreparedB, PreparedConvBank, PreparedCpm3,
 };
 use crate::linalg::Matrix;
 
@@ -137,6 +151,344 @@ impl BatchExecutor for DirectKernelExecutor {
     }
 }
 
+/// Shared geometry + plumbing of the two conv executors: one validated
+/// definition of the batch/row/output contract, so the square path and
+/// its shadow twin can never disagree on it. The twins differ only in
+/// the matmul flavour they hand to
+/// [`PreparedConvBank::apply_batch_with`].
+struct ConvExecutorCore {
+    bank: Arc<PreparedConvBank<f32>>,
+    in_h: usize,
+    in_w: usize,
+    out_pixels: usize,
+    batch_rows: usize,
+    cfg: EngineConfig,
+}
+
+impl ConvExecutorCore {
+    fn build(
+        bank: Arc<PreparedConvBank<f32>>,
+        in_h: usize,
+        in_w: usize,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        if batch_rows == 0 {
+            return Err(anyhow!("batch_rows must be positive"));
+        }
+        let (out_h, out_w) = bank.output_shape(in_h, in_w)?;
+        Ok(Self {
+            bank,
+            in_h,
+            in_w,
+            out_pixels: out_h * out_w,
+            batch_rows,
+            cfg,
+        })
+    }
+
+    fn row_len(&self) -> usize {
+        self.in_h * self.in_w
+    }
+
+    fn out_len(&self) -> usize {
+        self.bank.filters() * self.out_pixels
+    }
+
+    fn check_len(&self, rows_flat: &[f32]) -> Result<()> {
+        let expect = self.batch_rows * self.row_len();
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// CNN-layer batch executor on the im2col lowering: each request row is a
+/// flattened `in_h×in_w` image; the response row is the filter bank's
+/// output maps in `[filter][out_pixel]` order. The whole padded batch runs
+/// as ONE `(batch·K, T, F)` blocked square matmul, so batching widens the
+/// threaded driver's parallel section as well as amortising dispatch.
+pub struct Conv2dExecutor {
+    core: ConvExecutorCore,
+}
+
+impl Conv2dExecutor {
+    /// Prepare a filter bank (computing its cached corrections) for
+    /// `in_h×in_w` images in fixed batches, one engine worker per core.
+    pub fn new(
+        filters: &[Matrix<f32>],
+        in_h: usize,
+        in_w: usize,
+        batch_rows: usize,
+    ) -> Result<Self> {
+        let (bank, _prep_ops) = PreparedConvBank::new(filters)?;
+        Self::from_shared(Arc::new(bank), in_h, in_w, batch_rows, EngineConfig::threaded())
+    }
+
+    /// Build over a bank some other owner already prepared — the pool
+    /// path: every worker clones the `Arc`, the bank corrections are
+    /// computed exactly once per pool.
+    pub fn from_shared(
+        bank: Arc<PreparedConvBank<f32>>,
+        in_h: usize,
+        in_w: usize,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        Ok(Self { core: ConvExecutorCore::build(bank, in_h, in_w, batch_rows, cfg)? })
+    }
+}
+
+impl BatchExecutor for Conv2dExecutor {
+    fn row_len(&self) -> usize {
+        self.core.row_len()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.core.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.core.out_len()
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.core;
+        c.check_len(rows_flat)?;
+        let (out, _ops) =
+            c.bank
+                .apply_batch(rows_flat, c.batch_rows, c.in_h, c.in_w, &c.cfg)?;
+        Ok(out)
+    }
+}
+
+/// Multiplier twin of [`Conv2dExecutor`] over the same prepared bank:
+/// identical im2col lowering and output layout (shared core), direct
+/// (multiplier) matmul — the shadow baseline for the conv serving path.
+pub struct Conv2dDirectExecutor {
+    core: ConvExecutorCore,
+}
+
+impl Conv2dDirectExecutor {
+    pub fn from_shared(
+        bank: Arc<PreparedConvBank<f32>>,
+        in_h: usize,
+        in_w: usize,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        Ok(Self { core: ConvExecutorCore::build(bank, in_h, in_w, batch_rows, cfg)? })
+    }
+}
+
+impl BatchExecutor for Conv2dDirectExecutor {
+    fn row_len(&self) -> usize {
+        self.core.row_len()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.core.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.core.out_len()
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.core;
+        c.check_len(rows_flat)?;
+        // same lowering pipeline as the square executor, multiplier matmul
+        let (out, _ops) =
+            c.bank
+                .apply_batch_with(rows_flat, c.batch_rows, c.in_h, c.in_w, |a| {
+                    matmul_direct_blocked(a, c.bank.matrix(), &c.cfg)
+                })?;
+        Ok(out)
+    }
+}
+
+/// Shared wire-format plumbing of the two complex executors: one
+/// definition of the plane-split request/response layout
+/// (`[re_0..re_n, im_0..im_n]` per row) plus the length contract, so the
+/// CPM3 path and its schoolbook shadow twin can never disagree on it —
+/// the same role [`ConvExecutorCore`] plays for the conv pair.
+struct ComplexExecutorCore {
+    in_features: usize,
+    out_features: usize,
+    batch_rows: usize,
+    cfg: EngineConfig,
+}
+
+impl ComplexExecutorCore {
+    fn build(
+        in_features: usize,
+        out_features: usize,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        if batch_rows == 0 {
+            return Err(anyhow!("batch_rows must be positive"));
+        }
+        Ok(Self { in_features, out_features, batch_rows, cfg })
+    }
+
+    fn row_len(&self) -> usize {
+        2 * self.in_features
+    }
+
+    fn out_len(&self) -> usize {
+        2 * self.out_features
+    }
+
+    fn check_len(&self, rows_flat: &[f32]) -> Result<()> {
+        let expect = self.batch_rows * self.row_len();
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Deinterleave the batch into (re, im) planes of `batch × n`.
+    fn split_planes(&self, rows_flat: &[f32]) -> CPlanes<f32> {
+        let n = self.in_features;
+        let row_len = 2 * n;
+        let b = self.batch_rows;
+        let re = Matrix::from_fn(b, n, |i, j| rows_flat[i * row_len + j]);
+        let im = Matrix::from_fn(b, n, |i, j| rows_flat[i * row_len + n + j]);
+        CPlanes { re, im }
+    }
+
+    /// Interleave result planes back into per-row `[re…, im…]` order.
+    fn join_planes(&self, z: &CPlanes<f32>) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.batch_rows * self.out_len());
+        for i in 0..self.batch_rows {
+            out.extend_from_slice(z.re.row(i));
+            out.extend_from_slice(z.im.row(i));
+        }
+        out
+    }
+}
+
+/// Complex-matmul batch executor on the three-pass CPM3 lowering: each
+/// request row is a plane-split complex vector of `2·n` floats
+/// (`[re_0..re_n, im_0..im_n]`, e.g. one QPSK symbol per subcarrier), the
+/// response row is the plane-split product `[re_0..re_p, im_0..im_p]`
+/// against a fixed complex weight matrix whose three derived operands and
+/// correction caches were computed once at prepare time.
+pub struct ComplexMatmulExecutor {
+    weights: Arc<PreparedCpm3<f32>>,
+    core: ComplexExecutorCore,
+}
+
+impl ComplexMatmulExecutor {
+    /// Prepare a complex weight matrix from its planes.
+    pub fn new(y_re: Matrix<f32>, y_im: Matrix<f32>, batch_rows: usize) -> Result<Self> {
+        let y = CPlanes::new(y_re, y_im)?;
+        let (weights, _prep_ops) = PreparedCpm3::new_shared(&y)?;
+        Self::from_shared(weights, batch_rows, EngineConfig::threaded())
+    }
+
+    /// Build over weights some other owner already prepared (pool path).
+    pub fn from_shared(
+        weights: Arc<PreparedCpm3<f32>>,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        let core = ComplexExecutorCore::build(
+            weights.in_features(),
+            weights.out_features(),
+            batch_rows,
+            cfg,
+        )?;
+        Ok(Self { weights, core })
+    }
+}
+
+impl BatchExecutor for ComplexMatmulExecutor {
+    fn row_len(&self) -> usize {
+        self.core.row_len()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.core.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.core.out_len()
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        self.core.check_len(rows_flat)?;
+        let x = self.core.split_planes(rows_flat);
+        let (z, _ops) = self.weights.mul(&x, &self.core.cfg)?;
+        Ok(self.core.join_planes(&z))
+    }
+}
+
+/// 4-mult schoolbook twin of [`ComplexMatmulExecutor`] over the same
+/// weight planes: `Z_re = X_re·Y_re − X_im·Y_im`,
+/// `Z_im = X_im·Y_re + X_re·Y_im`, all four products through the blocked
+/// direct (multiplier) matmul — the shadow baseline, sharing the wire
+/// format via [`ComplexExecutorCore`].
+pub struct ComplexMatmulDirectExecutor {
+    y_re: Matrix<f32>,
+    y_im: Matrix<f32>,
+    core: ComplexExecutorCore,
+}
+
+impl ComplexMatmulDirectExecutor {
+    pub fn new(
+        y_re: Matrix<f32>,
+        y_im: Matrix<f32>,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        if (y_re.rows, y_re.cols) != (y_im.rows, y_im.cols) {
+            return Err(anyhow!(
+                "weight planes disagree: {}x{} vs {}x{}",
+                y_re.rows,
+                y_re.cols,
+                y_im.rows,
+                y_im.cols
+            ));
+        }
+        let core = ComplexExecutorCore::build(y_re.rows, y_re.cols, batch_rows, cfg)?;
+        Ok(Self { y_re, y_im, core })
+    }
+}
+
+impl BatchExecutor for ComplexMatmulDirectExecutor {
+    fn row_len(&self) -> usize {
+        self.core.row_len()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.core.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.core.out_len()
+    }
+
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        self.core.check_len(rows_flat)?;
+        let x = self.core.split_planes(rows_flat);
+        let (rr, _) = matmul_direct_blocked(&x.re, &self.y_re, &self.core.cfg);
+        let (ii, _) = matmul_direct_blocked(&x.im, &self.y_im, &self.core.cfg);
+        let (ir, _) = matmul_direct_blocked(&x.im, &self.y_re, &self.core.cfg);
+        let (ri, _) = matmul_direct_blocked(&x.re, &self.y_im, &self.core.cfg);
+        let z = CPlanes { re: plane_sub(&rr, &ii), im: plane_add(&ir, &ri) };
+        Ok(self.core.join_planes(&z))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,5 +553,130 @@ mod tests {
         let (w32, _) = int_matrix_f32(&mut rng, 4, 2, 5);
         let mut exec = SquareKernelExecutor::new(w32, 3);
         assert!(exec.run(&[0.0; 11]).is_err());
+    }
+
+    #[test]
+    fn conv_executor_matches_reference_conv_on_integer_data() {
+        use crate::linalg::conv::conv2d_direct;
+
+        let mut rng = Rng::new(0x62);
+        let filters_i: Vec<Matrix<i64>> = (0..3)
+            .map(|_| Matrix::random(&mut rng, 3, 3, -6, 6))
+            .collect();
+        let filters_f: Vec<Matrix<f32>> =
+            filters_i.iter().map(|f| f.map(|v| v as f32)).collect();
+        let (in_h, in_w, batch) = (7usize, 8usize, 2usize);
+        let mut exec = Conv2dExecutor::new(&filters_f, in_h, in_w, batch).unwrap();
+        assert_eq!(exec.row_len(), 56);
+        let (out_h, out_w) = (5usize, 6usize);
+        assert_eq!(exec.out_len(), 3 * out_h * out_w);
+
+        let imgs_i: Vec<Matrix<i64>> = (0..batch)
+            .map(|_| Matrix::random(&mut rng, in_h, in_w, -6, 6))
+            .collect();
+        let flat: Vec<f32> = imgs_i
+            .iter()
+            .flat_map(|m| m.data().iter().map(|&v| v as f32).collect::<Vec<_>>())
+            .collect();
+        let got = exec.run(&flat).unwrap();
+        // integer-valued f32 keeps every intermediate exact — compare
+        // bit-for-bit against the i64 reference conv
+        let k_out = out_h * out_w;
+        for (b, img) in imgs_i.iter().enumerate() {
+            for (f, ker) in filters_i.iter().enumerate() {
+                let (want, _) = conv2d_direct(ker, img).unwrap();
+                let slice = &got[(b * 3 + f) * k_out..(b * 3 + f + 1) * k_out];
+                for (g, w) in slice.iter().zip(want.data()) {
+                    assert_eq!(*g as i64, *w, "image {b} filter {f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_direct_twin_agrees_with_square_executor() {
+        let mut rng = Rng::new(0x63);
+        let filters: Vec<Matrix<f32>> = (0..4)
+            .map(|_| Matrix::random(&mut rng, 3, 3, -5, 5).map(|v| v as f32))
+            .collect();
+        let (bank, _) = PreparedConvBank::new_shared(&filters).unwrap();
+        let mut sq =
+            Conv2dExecutor::from_shared(bank.clone(), 9, 9, 2, EngineConfig::default())
+                .unwrap();
+        let mut di =
+            Conv2dDirectExecutor::from_shared(bank, 9, 9, 2, EngineConfig::default())
+                .unwrap();
+        assert_eq!(sq.row_len(), di.row_len());
+        assert_eq!(sq.out_len(), di.out_len());
+        let x: Vec<f32> = (0..2 * 81)
+            .map(|_| rng.i64_in(-5, 5) as f32)
+            .collect();
+        assert_eq!(sq.run(&x).unwrap(), di.run(&x).unwrap());
+    }
+
+    #[test]
+    fn conv_executor_rejects_bad_geometry() {
+        let filters = [Matrix::<f32>::zeros(5, 5)];
+        // kernel larger than the image must fail at construction
+        assert!(Conv2dExecutor::new(&filters, 4, 4, 1).is_err());
+        let filters = [Matrix::<f32>::zeros(3, 3)];
+        let mut exec = Conv2dExecutor::new(&filters, 6, 6, 2).unwrap();
+        assert!(exec.run(&[0.0; 10]).is_err(), "wrong batch length");
+    }
+
+    #[test]
+    fn complex_executor_matches_reference_cmatmul_on_integer_data() {
+        use crate::arith::Complex;
+        use crate::linalg::complex::{cmatmul_direct, CMatrix};
+
+        let mut rng = Rng::new(0x64);
+        let (n, p, batch) = (6usize, 4usize, 3usize);
+        let y = CMatrix::from_fn(n, p, |_, _| {
+            Complex::new(rng.i64_in(-7, 7), rng.i64_in(-7, 7))
+        });
+        let y_re = y.map(|v| v.re as f32);
+        let y_im = y.map(|v| v.im as f32);
+        let mut exec = ComplexMatmulExecutor::new(y_re, y_im, batch).unwrap();
+        assert_eq!(exec.row_len(), 2 * n);
+        assert_eq!(exec.out_len(), 2 * p);
+
+        let x = CMatrix::from_fn(batch, n, |_, _| {
+            Complex::new(rng.i64_in(-7, 7), rng.i64_in(-7, 7))
+        });
+        let mut flat = Vec::with_capacity(batch * 2 * n);
+        for i in 0..batch {
+            flat.extend(x.row(i).iter().map(|v| v.re as f32));
+            flat.extend(x.row(i).iter().map(|v| v.im as f32));
+        }
+        let got = exec.run(&flat).unwrap();
+        let (want, _) = cmatmul_direct(&x, &y);
+        for i in 0..batch {
+            for j in 0..p {
+                assert_eq!(got[i * 2 * p + j] as i64, want.get(i, j).re, "re {i},{j}");
+                assert_eq!(
+                    got[i * 2 * p + p + j] as i64,
+                    want.get(i, j).im,
+                    "im {i},{j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn complex_direct_twin_agrees_with_cpm3_executor() {
+        let mut rng = Rng::new(0x65);
+        let (n, p, batch) = (8usize, 5usize, 2usize);
+        let y_re = Matrix::random(&mut rng, n, p, -6, 6).map(|v| v as f32);
+        let y_im = Matrix::random(&mut rng, n, p, -6, 6).map(|v| v as f32);
+        let mut sq = ComplexMatmulExecutor::new(y_re.clone(), y_im.clone(), batch).unwrap();
+        let mut di =
+            ComplexMatmulDirectExecutor::new(y_re, y_im, batch, EngineConfig::default())
+                .unwrap();
+        assert_eq!(sq.row_len(), di.row_len());
+        assert_eq!(sq.out_len(), di.out_len());
+        let x: Vec<f32> = (0..batch * 2 * n)
+            .map(|_| rng.i64_in(-6, 6) as f32)
+            .collect();
+        assert_eq!(sq.run(&x).unwrap(), di.run(&x).unwrap());
     }
 }

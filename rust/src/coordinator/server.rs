@@ -21,6 +21,14 @@
 //! Back-pressure is explicit end to end: when the batcher rejects a row,
 //! the client's response channel receives an `Err("queue full …")`
 //! immediately — the request is never silently dropped.
+//!
+//! Stats are retention-bounded: each worker keeps exact counters plus a
+//! bounded ring of recent raw latency samples ([`Metrics`]). Periodic
+//! [`InferenceServer::stats`] polls ship per-worker *summaries* only
+//! (pooled percentiles are count-weighted estimates); the one shutdown
+//! snapshot merges the retained raw windows for exact pooled percentiles.
+//! A long-lived server therefore answers stats polls in O(workers), not
+//! O(requests served).
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -30,7 +38,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, Pending};
-use super::metrics::{latency_stats_from, LatencyStats, Metrics};
+use super::metrics::{
+    latency_stats_from, merge_latency_summaries, LatencyStats, Metrics,
+};
 
 /// Executes one padded batch of rows. Implemented by the PJRT engine and
 /// by in-process mocks for tests.
@@ -117,15 +127,21 @@ enum Msg {
 
 /// Dispatcher → worker jobs. At most one `Batch` is in flight per worker
 /// (the idle-token protocol guarantees it), so a worker's queue only ever
-/// holds small control messages plus that one batch.
+/// holds small control messages plus that one batch. A `Stats` request
+/// ships raw latency samples only when `include_raw` is set — the
+/// shutdown snapshot; periodic polls ride on summary stats alone, so a
+/// long-lived server never ships its latency history on every poll.
 enum Job {
     Batch(Vec<Pending<Request>>),
-    Stats(Sender<WorkerSnapshot>),
+    Stats { reply: Sender<WorkerSnapshot>, include_raw: bool },
     Shutdown,
 }
 
-/// Raw per-worker state shipped to the dispatcher on a stats request —
-/// includes the raw latency samples so pooled percentiles are exact.
+/// Per-worker state shipped to the dispatcher on a stats request. The
+/// summary (`latency`, counters) is always present and exact on
+/// count/mean/max; `raw_latencies_us` (the worker's bounded retained
+/// window, for exact pooled percentiles) is `Some` only on the shutdown
+/// snapshot.
 struct WorkerSnapshot {
     worker: usize,
     batches: u64,
@@ -133,7 +149,8 @@ struct WorkerSnapshot {
     shadow_checks: u64,
     shadow_failures: u64,
     shadow_errors: u64,
-    latencies_us: Vec<f64>,
+    latency: LatencyStats,
+    raw_latencies_us: Option<Vec<f64>>,
 }
 
 /// Public per-worker stats view.
@@ -393,8 +410,10 @@ fn dispatch_loop(
                 // dispatch of already-formed batches. (The poll itself
                 // still waits on each worker's FIFO — at most one
                 // in-flight batch — before routing resumes; lock-free
-                // counters are a noted follow-on if polling ever gets hot.)
-                let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
+                // counters are a noted follow-on if polling ever gets
+                // hot.) Periodic polls are summary-only: no raw latency
+                // history is shipped.
+                let _ = tx.send(pooled_stats(&job_txs, workers, rejected, false));
             }
             Ok(Msg::Shutdown(reply)) => {
                 final_reply = reply;
@@ -408,7 +427,7 @@ fn dispatch_loop(
             match msg {
                 Msg::Req(r) => push_or_reject(&mut batcher, r, &mut rejected),
                 Msg::Stats(tx) => {
-                    let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
+                    let _ = tx.send(pooled_stats(&job_txs, workers, rejected, false));
                 }
                 Msg::Shutdown(reply) => {
                     final_reply = reply;
@@ -441,26 +460,36 @@ fn dispatch_loop(
     }
     // the final snapshot happens before Job::Shutdown but after the flush:
     // each worker's stats reply queues FIFO behind its last batch, so the
-    // numbers include everything the server ever served
+    // numbers include everything the server ever served. Only this one
+    // snapshot ships raw latency samples (the bounded retained windows)
+    // for exact pooled percentiles.
     if let Some(tx) = final_reply {
-        let _ = tx.send(pooled_stats(&job_txs, workers, rejected));
+        let _ = tx.send(pooled_stats(&job_txs, workers, rejected, true));
     }
     for jt in &job_txs {
         let _ = jt.send(Job::Shutdown);
     }
 }
 
-/// Collect a snapshot from every worker and merge: counters sum, raw
-/// latencies concatenate (exact pooled percentiles), and the per-worker
-/// views ride along for skew diagnosis. A worker that no longer answers
-/// (its thread died, e.g. a panicking executor) is *counted*, not
-/// silently dropped: `lost_workers` makes the capacity loss visible.
-fn pooled_stats(job_txs: &[Sender<Job>], workers: usize, rejected: u64) -> ServerStats {
+/// Collect a snapshot from every worker and merge: counters sum exactly,
+/// and the per-worker views ride along for skew diagnosis. Pooled
+/// percentiles come from exact raw-sample merging when `include_raw` (the
+/// shutdown snapshot) and from count-weighted summary merging otherwise —
+/// so periodic polls never ship a long-lived server's latency history.
+/// A worker that no longer answers (its thread died, e.g. a panicking
+/// executor) is *counted*, not silently dropped: `lost_workers` makes the
+/// capacity loss visible.
+fn pooled_stats(
+    job_txs: &[Sender<Job>],
+    workers: usize,
+    rejected: u64,
+    include_raw: bool,
+) -> ServerStats {
     let rxs: Vec<_> = job_txs
         .iter()
         .map(|jt| {
             let (tx, rx) = mpsc::channel();
-            jt.send(Job::Stats(tx)).ok().map(|_| rx)
+            jt.send(Job::Stats { reply: tx, include_raw }).ok().map(|_| rx)
         })
         .collect();
     let mut snaps: Vec<WorkerSnapshot> = rxs
@@ -479,7 +508,6 @@ fn pooled_stats(job_txs: &[Sender<Job>], workers: usize, rejected: u64) -> Serve
         }
     }
 
-    let mut all_latencies: Vec<f64> = Vec::new();
     let (mut batches, mut rows) = (0u64, 0u64);
     let (mut checks, mut failures, mut errors) = (0u64, 0u64, 0u64);
     let mut per_worker = Vec::with_capacity(snaps.len());
@@ -489,10 +517,9 @@ fn pooled_stats(job_txs: &[Sender<Job>], workers: usize, rejected: u64) -> Serve
         checks += s.shadow_checks;
         failures += s.shadow_failures;
         errors += s.shadow_errors;
-        all_latencies.extend_from_slice(&s.latencies_us);
         per_worker.push(WorkerStats {
             worker: s.worker,
-            latency: latency_stats_from(&s.latencies_us),
+            latency: s.latency,
             batches: s.batches,
             rows: s.rows,
             mean_batch: mean_batch(s.rows, s.batches),
@@ -501,8 +528,26 @@ fn pooled_stats(job_txs: &[Sender<Job>], workers: usize, rejected: u64) -> Serve
             shadow_errors: s.shadow_errors,
         });
     }
+
+    // count/mean/max come from the exact per-worker totals (so the pooled
+    // count equals the per-worker sum even if a retention ring capped a
+    // raw window); the shutdown snapshot upgrades just the percentiles to
+    // the exact raw-merged values
+    let summaries: Vec<LatencyStats> = snaps.iter().map(|s| s.latency).collect();
+    let mut latency = merge_latency_summaries(&summaries);
+    if include_raw {
+        let all: Vec<f64> = snaps
+            .iter()
+            .flat_map(|s| s.raw_latencies_us.as_deref().unwrap_or(&[]).iter().copied())
+            .collect();
+        let raw = latency_stats_from(&all);
+        latency.p50_us = raw.p50_us;
+        latency.p95_us = raw.p95_us;
+        latency.p99_us = raw.p99_us;
+    }
+
     ServerStats {
-        latency: latency_stats_from(&all_latencies),
+        latency,
         batches,
         rows,
         mean_batch: mean_batch(rows, batches),
@@ -550,15 +595,17 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
                     break; // dispatcher is gone; no more work can arrive
                 }
             }
-            Job::Stats(tx) => {
-                let _ = tx.send(WorkerSnapshot {
+            Job::Stats { reply, include_raw } => {
+                let _ = reply.send(WorkerSnapshot {
                     worker: wid,
                     batches: metrics.batches,
                     rows: metrics.rows,
                     shadow_checks: metrics.shadow_checks,
                     shadow_failures: metrics.shadow_failures,
                     shadow_errors: metrics.shadow_errors,
-                    latencies_us: metrics.latencies_us().to_vec(),
+                    latency: metrics.latency_stats(),
+                    raw_latencies_us: include_raw
+                        .then(|| metrics.latencies_us().to_vec()),
                 });
             }
             Job::Shutdown => break,
@@ -786,6 +833,32 @@ mod tests {
             let out = rx.recv().unwrap();
             assert!(out.is_ok(), "queued request lost at shutdown: {out:?}");
         }
+    }
+
+    #[test]
+    fn periodic_polls_are_summary_only_but_still_exact_on_counters() {
+        let srv = start_doubler_pool(false, 2);
+        let rxs: Vec<_> = (0..24)
+            .map(|i| srv.submit(vec![i as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        // a periodic poll: counters exact, latency count = rows served
+        let mid = srv.stats().unwrap();
+        assert_eq!(mid.rows, 24);
+        assert_eq!(mid.latency.count, 24);
+        assert_eq!(
+            mid.per_worker.iter().map(|w| w.latency.count).sum::<u64>(),
+            24
+        );
+        assert!(mid.latency.mean_us > 0.0);
+        assert!(mid.latency.max_us >= mid.latency.p50_us);
+        // the shutdown snapshot (raw-merged) agrees on every counter
+        let fin = srv.shutdown().unwrap();
+        assert_eq!(fin.rows, 24);
+        assert_eq!(fin.latency.count, 24);
+        assert_eq!(fin.latency.max_us, mid.latency.max_us);
     }
 
     /// shadow that disagrees on purpose

@@ -84,6 +84,16 @@ impl WorkloadGen {
         }
         (re, im)
     }
+
+    /// One QPSK symbol in the complex serving wire format: a plane-split
+    /// row of `2·n` floats (`[re_0..re_n, im_0..im_n]`) — exactly what the
+    /// native `ComplexMatmulExecutor` expects per request.
+    pub fn qpsk_row(&mut self, n: usize) -> Vec<f32> {
+        let (re, im) = self.qpsk_symbol(n);
+        let mut row = re;
+        row.extend(im);
+        row
+    }
 }
 
 #[cfg(test)]
@@ -144,5 +154,14 @@ mod tests {
         for (r, i) in re.iter().zip(&im) {
             assert!((r * r + i * i - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn qpsk_row_is_the_plane_split_symbol() {
+        let (re, im) = WorkloadGen::new(9).qpsk_symbol(16);
+        let row = WorkloadGen::new(9).qpsk_row(16);
+        assert_eq!(row.len(), 32);
+        assert_eq!(&row[..16], &re[..]);
+        assert_eq!(&row[16..], &im[..]);
     }
 }

@@ -167,6 +167,13 @@ pub fn from_planes(re: &Matrix<i64>, im: &Matrix<i64>) -> CMatrix {
     CMatrix::from_fn(re.rows, re.cols, |i, j| Complex::new(re.get(i, j), im.get(i, j)))
 }
 
+/// Split a complex matrix into its (re, im) planes — the storage the
+/// engine's plane-split CPM3 lowering
+/// ([`engine::complex`](super::engine::complex)) operates on.
+pub fn to_planes(x: &CMatrix) -> (Matrix<i64>, Matrix<i64>) {
+    (x.map(|v| v.re), x.map(|v| v.im))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,5 +323,8 @@ mod tests {
         let im = Matrix::random(&mut rng, 3, 4, -9, 9);
         let c = from_planes(&re, &im);
         assert_eq!(c.get(2, 3), Complex::new(re.get(2, 3), im.get(2, 3)));
+        let (re2, im2) = to_planes(&c);
+        assert_eq!(re2, re);
+        assert_eq!(im2, im);
     }
 }

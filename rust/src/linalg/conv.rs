@@ -9,6 +9,30 @@ use crate::arith::complex::Complex;
 use super::counts::OpCounts;
 use super::engine::kernels;
 use super::matrix::Matrix;
+use super::LinalgError;
+
+/// Validated output shape of a valid-mode 2-D correlation: `kh×kw` kernel
+/// over an `in_h×in_w` input. The single place the output-size arithmetic
+/// happens, so a kernel larger than the input (or an empty operand) is a
+/// typed [`LinalgError`] everywhere — reference stack and engine lowering
+/// alike — never a panic or a silent `usize` underflow.
+pub fn conv2d_output_shape(
+    kh: usize,
+    kw: usize,
+    in_h: usize,
+    in_w: usize,
+) -> Result<(usize, usize), LinalgError> {
+    if kh == 0 || kw == 0 {
+        return Err(LinalgError::EmptyInput { what: "kernel" });
+    }
+    if in_h == 0 || in_w == 0 {
+        return Err(LinalgError::EmptyInput { what: "input" });
+    }
+    if in_h < kh || in_w < kw {
+        return Err(LinalgError::KernelLargerThanInput { kh, kw, in_h, in_w });
+    }
+    Ok((in_h - kh + 1, in_w - kw + 1))
+}
 
 /// Direct 1-D correlation (eq. 10): y_k = Σ_i w_i·x_{i+k}.
 ///
@@ -75,11 +99,14 @@ pub fn conv1d_square(w: &[i64], x: &[i64]) -> (Vec<i64>, OpCounts) {
 }
 
 /// Direct 2-D valid correlation (eq. 12), tap-major over contiguous
-/// output rows; hoisted ledger.
-pub fn conv2d_direct(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+/// output rows; hoisted ledger. Malformed shapes (kernel larger than the
+/// input, empty operands) are a typed [`LinalgError`].
+pub fn conv2d_direct(
+    w: &Matrix<i64>,
+    x: &Matrix<i64>,
+) -> Result<(Matrix<i64>, OpCounts), LinalgError> {
     let (kh, kw) = (w.rows, w.cols);
-    assert!(x.rows >= kh && x.cols >= kw);
-    let (out_h, out_w) = (x.rows - kh + 1, x.cols - kw + 1);
+    let (out_h, out_w) = conv2d_output_shape(kh, kw, x.rows, x.cols)?;
     let mut out = Matrix::zeros(out_h, out_w);
     for h in 0..out_h {
         let out_row = &mut out.data_mut()[h * out_w..(h + 1) * out_w];
@@ -93,17 +120,20 @@ pub fn conv2d_direct(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts
     }
     let taps = (kh * kw * out_h * out_w) as u64;
     let ops = OpCounts { mults: taps, adds: taps, ..OpCounts::ZERO };
-    (out, ops)
+    Ok((out, ops))
 }
 
 /// Square-based 2-D correlation (eq. 13/14): per-sample x² shared across
 /// every kernel placement covering it (§5.1). Tap-major: each kernel
 /// weight sweeps one contiguous output row through the fused
-/// `(s+x)² − x²` engine kernel; the ledger is hoisted.
-pub fn conv2d_square(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts) {
+/// `(s+x)² − x²` engine kernel; the ledger is hoisted. Malformed shapes
+/// are a typed [`LinalgError`], same as [`conv2d_direct`].
+pub fn conv2d_square(
+    w: &Matrix<i64>,
+    x: &Matrix<i64>,
+) -> Result<(Matrix<i64>, OpCounts), LinalgError> {
     let (kh, kw) = (w.rows, w.cols);
-    assert!(x.rows >= kh && x.cols >= kw);
-    let (out_h, out_w) = (x.rows - kh + 1, x.cols - kw + 1);
+    let (out_h, out_w) = conv2d_output_shape(kh, kw, x.rows, x.cols)?;
 
     // Sw = −Σ w² over the flat kernel
     let sw: i64 = -w.data().iter().map(|&v| v * v).sum::<i64>();
@@ -145,7 +175,7 @@ pub fn conv2d_square(w: &Matrix<i64>, x: &Matrix<i64>) -> (Matrix<i64>, OpCounts
         adds: t + k + 3 * t * k,
         shifts: k,
     };
-    (out, ops)
+    Ok((out, ops))
 }
 
 /// Direct complex correlation (eq. 27), tap-major with a hoisted ledger.
@@ -325,10 +355,44 @@ mod tests {
             let (h, w_) = (kh + rng.usize_in(0, 8), kw + rng.usize_in(0, 8));
             let ker = Matrix::random(&mut rng, kh, kw, -200, 200);
             let x = Matrix::random(&mut rng, h, w_, -200, 200);
-            let (d, _) = conv2d_direct(&ker, &x);
-            let (s, _) = conv2d_square(&ker, &x);
+            let (d, _) = conv2d_direct(&ker, &x).unwrap();
+            let (s, _) = conv2d_square(&ker, &x).unwrap();
             assert_eq!(d, s);
         }
+    }
+
+    #[test]
+    fn conv2d_shape_errors_are_typed_not_panics() {
+        use super::super::LinalgError;
+        let ker = Matrix::<i64>::zeros(5, 5);
+        let img = Matrix::<i64>::zeros(3, 8);
+        // kernel taller than the input: previously a panic (and, without
+        // the assert, a usize underflow in out_h = x.rows - kh + 1)
+        assert_eq!(
+            conv2d_direct(&ker, &img).unwrap_err(),
+            LinalgError::KernelLargerThanInput { kh: 5, kw: 5, in_h: 3, in_w: 8 }
+        );
+        assert_eq!(
+            conv2d_square(&ker, &img).unwrap_err(),
+            LinalgError::KernelLargerThanInput { kh: 5, kw: 5, in_h: 3, in_w: 8 }
+        );
+        // empty input
+        let empty = Matrix::<i64>::zeros(0, 4);
+        let one = Matrix::<i64>::zeros(1, 1);
+        assert_eq!(
+            conv2d_direct(&one, &empty).unwrap_err(),
+            LinalgError::EmptyInput { what: "input" }
+        );
+        // empty kernel
+        let ek = Matrix::<i64>::zeros(0, 3);
+        let x = Matrix::<i64>::zeros(4, 4);
+        assert_eq!(
+            conv2d_square(&ek, &x).unwrap_err(),
+            LinalgError::EmptyInput { what: "kernel" }
+        );
+        // the validator itself, including the exactly-fitting boundary
+        assert_eq!(conv2d_output_shape(3, 3, 3, 3), Ok((1, 1)));
+        assert!(conv2d_output_shape(4, 3, 3, 3).is_err());
     }
 
     #[test]
@@ -336,8 +400,8 @@ mod tests {
         let mut rng = Rng::new(23);
         let ker = Matrix::random(&mut rng, 3, 3, -50, 50);
         let x = Matrix::random(&mut rng, 10, 10, -50, 50);
-        let (_, d) = conv2d_direct(&ker, &x);
-        let (_, s) = conv2d_square(&ker, &x);
+        let (_, d) = conv2d_direct(&ker, &x).unwrap();
+        let (_, s) = conv2d_square(&ker, &x).unwrap();
         assert_eq!(d.mults, 9 * 8 * 8);
         assert_eq!(s.squares, 9 * 8 * 8 + 100 + 9); // window + shared x² + Sw
     }
@@ -469,8 +533,8 @@ mod tests {
             let ker = Matrix::random(&mut rng, kh, kw, -30, 30);
             let x = Matrix::random(&mut rng, h, w_, -30, 30);
             let (dref, sref) = conv2d_ref(kh, kw, h, w_);
-            assert_eq!(conv2d_direct(&ker, &x).1, dref);
-            assert_eq!(conv2d_square(&ker, &x).1, sref);
+            assert_eq!(conv2d_direct(&ker, &x).unwrap().1, dref);
+            assert_eq!(conv2d_square(&ker, &x).unwrap().1, sref);
         }
     }
 

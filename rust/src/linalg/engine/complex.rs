@@ -1,0 +1,425 @@
+//! Blocked CPM3 complex matmul: three square passes on plane-split data.
+//!
+//! The reference [`cmatmul_cpm3`](crate::linalg::complex::cmatmul_cpm3)
+//! walks `Complex<i64>` elements to make the §9 ledger auditable; this
+//! module runs the same arithmetic *fast* by storing complex matrices as
+//! separate re/im planes ([`CPlanes`]) and observing that the CPM3
+//! decomposition (eq. 32–35) is exactly three *real* products, each of
+//! which the blocked square core already computes with squares only:
+//!
+//! ```text
+//! Z = X·Y,  X = A + jB,  Y = C + jS        (planes A,B,C,S)
+//! M1 = (A + B)·C        — the shared (c+a+b)² pass
+//! M2 = B·(C + S)        — the (b+c+s)² pass
+//! M3 = A·(S − C)        — the (a+s−c)² pass
+//! Z_re = M1 − M2,   Z_im = M1 + M3
+//! ```
+//!
+//! Each pass runs through [`matmul_square_core`]: eq. (4) with its own
+//! rank-1 row/column corrections, cache-blocked and row-partition
+//! threaded. Squares spent: `3·(M·N·P + M·N + N·P)` — identical to the
+//! reference CPM3 ledger (§9), because the three passes' corrections *are*
+//! the `Sab/Sba/Scs/Ssc` terms of eq. (33)/(35) regrouped per pass.
+//!
+//! [`PreparedCpm3`] is the §3 constant-operand case for a fixed complex
+//! weight matrix (beamforming / matched filters over QPSK symbols): the
+//! three derived column operands `C`, `C+S`, `S−C` and their correction
+//! caches are computed once per model and shared by all three passes of
+//! every request — and, via `new_shared`, by every worker of a pool.
+
+use std::sync::Arc;
+
+use super::super::counts::OpCounts;
+use super::super::matrix::Matrix;
+use super::super::LinalgError;
+use super::blocked::{col_corrections_flat, matmul_square_core, row_corrections_flat, EngineConfig};
+use super::SquareScalar;
+
+/// A complex matrix stored as two same-shaped real planes — the storage
+/// the lowering (and the serving wire format) uses, so the square passes
+/// stream contiguous real rows instead of strided `Complex` fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CPlanes<T> {
+    pub re: Matrix<T>,
+    pub im: Matrix<T>,
+}
+
+impl<T: SquareScalar> CPlanes<T> {
+    /// Pair two planes; they must agree on shape.
+    pub fn new(re: Matrix<T>, im: Matrix<T>) -> Result<Self, LinalgError> {
+        if (re.rows, re.cols) != (im.rows, im.cols) {
+            return Err(LinalgError::ShapeMismatch {
+                what: "complex planes",
+                expected: (re.rows, re.cols),
+                got: (im.rows, im.cols),
+            });
+        }
+        Ok(Self { re, im })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { re: Matrix::zeros(rows, cols), im: Matrix::zeros(rows, cols) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.re.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.re.cols
+    }
+
+    /// Re-check the pairing invariant — the fields are public (the
+    /// executors build planes in place), so the fallible entry points
+    /// validate rather than trust, keeping a mismatched pair a typed
+    /// `Err` instead of a worker-killing `plane_add` panic.
+    fn check(&self) -> Result<(), LinalgError> {
+        if (self.re.rows, self.re.cols) != (self.im.rows, self.im.cols) {
+            return Err(LinalgError::ShapeMismatch {
+                what: "complex planes",
+                expected: (self.re.rows, self.re.cols),
+                got: (self.im.rows, self.im.cols),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Elementwise plane sum — forming the derived operands of the three
+/// passes (`A+B`, `C+S`).
+pub fn plane_add<T: SquareScalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "plane shape mismatch");
+    Matrix::from_vec(
+        a.rows,
+        a.cols,
+        a.data().iter().zip(b.data()).map(|(&x, &y)| x + y).collect(),
+    )
+}
+
+/// Elementwise plane difference (`S−C`, and the `M1 − M2` combination).
+pub fn plane_sub<T: SquareScalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "plane shape mismatch");
+    Matrix::from_vec(
+        a.rows,
+        a.cols,
+        a.data().iter().zip(b.data()).map(|(&x, &y)| x - y).collect(),
+    )
+}
+
+/// Hoisted ledger of the full blocked CPM3 (both operands fresh): three
+/// `(M,N,P)` square passes plus the plane-forming and combining adds.
+/// Squares match the reference CPM3 claim (§9): `3·(MNP + MN + NP)`.
+pub fn cpm3_blocked_ledger(m: usize, n: usize, p: usize) -> OpCounts {
+    let (m, n, p) = (m as u64, n as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        squares: 3 * (m * n * p + m * n + n * p),
+        // forming A+B (mn), C+S and S−C (2np); per pass: mn + np correction
+        // adds, mp seed adds, 2mnp window adds; combining M1∓M2/M3: 2mp
+        adds: 4 * m * n + 5 * n * p + 6 * m * n * p + 5 * m * p,
+        shifts: 3 * m * p,
+    }
+}
+
+/// Hoisted per-call ledger against a [`PreparedCpm3`] operand: the `3·N·P`
+/// column-correction squares and the `5·N·P` preparation adds are gone —
+/// the §3 amortisation, three passes at once.
+pub fn cpm3_prepared_ledger(m: usize, n: usize, p: usize) -> OpCounts {
+    let (m, n, p) = (m as u64, n as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        squares: 3 * (m * n * p + m * n),
+        adds: 4 * m * n + 6 * m * n * p + 5 * m * p,
+        shifts: 3 * m * p,
+    }
+}
+
+/// A constant complex right-hand operand, lowered and prepared once: the
+/// three derived real operands with their column-correction caches.
+#[derive(Debug, Clone)]
+pub struct PreparedCpm3<T> {
+    /// `C` (the re plane of Y) and its corrections — pass 1
+    q1: Matrix<T>,
+    sb1: Vec<T>,
+    /// `C + S` — pass 2
+    q2: Matrix<T>,
+    sb2: Vec<T>,
+    /// `S − C` — pass 3
+    q3: Matrix<T>,
+    sb3: Vec<T>,
+}
+
+impl<T: SquareScalar> PreparedCpm3<T> {
+    /// Validate, derive and cache the three pass operands and their
+    /// corrections. The returned ledger is the one-time cost: `3·N·P`
+    /// squares (the §3/§9 correction amortisation) and `5·N·P` adds.
+    pub fn new(y: &CPlanes<T>) -> Result<(Self, OpCounts), LinalgError> {
+        y.check()?;
+        let (n, p) = (y.rows(), y.cols());
+        let q1 = y.re.clone();
+        let q2 = plane_add(&y.re, &y.im);
+        let q3 = plane_sub(&y.im, &y.re);
+        let sb1 = col_corrections_flat(&q1);
+        let sb2 = col_corrections_flat(&q2);
+        let sb3 = col_corrections_flat(&q3);
+        let np = (n * p) as u64;
+        let prep = OpCounts { squares: 3 * np, adds: 5 * np, ..OpCounts::ZERO };
+        Ok((Self { q1, sb1, q2, sb2, q3, sb3 }, prep))
+    }
+
+    /// Prepare and wrap for sharing across a serving pool.
+    pub fn new_shared(y: &CPlanes<T>) -> Result<(Arc<Self>, OpCounts), LinalgError> {
+        let (prep, ops) = Self::new(y)?;
+        Ok((Arc::new(prep), ops))
+    }
+
+    /// Input features a request row must carry (rows of Y).
+    pub fn in_features(&self) -> usize {
+        self.q1.rows
+    }
+
+    /// Output features per request row (columns of Y).
+    pub fn out_features(&self) -> usize {
+        self.q1.cols
+    }
+
+    /// The original re plane of Y (`C` — cached verbatim as pass 1's
+    /// operand), for direct-twin shadows over the same weights.
+    pub fn re_plane(&self) -> &Matrix<T> {
+        &self.q1
+    }
+
+    /// The original im plane of Y, recovered as `(C+S) − C`.
+    pub fn im_plane(&self) -> Matrix<T> {
+        plane_sub(&self.q2, &self.q1)
+    }
+
+    /// `Z = X·Y` against the prepared operand: three blocked square
+    /// passes reusing the cached column corrections. Per-call ledger is
+    /// [`cpm3_prepared_ledger`].
+    pub fn mul(
+        &self,
+        x: &CPlanes<T>,
+        cfg: &EngineConfig,
+    ) -> Result<(CPlanes<T>, OpCounts), LinalgError> {
+        x.check()?;
+        let (m, n) = (x.rows(), x.cols());
+        if n != self.in_features() {
+            return Err(LinalgError::ContractionMismatch {
+                left_cols: n,
+                right_rows: self.in_features(),
+            });
+        }
+        let p = self.out_features();
+
+        // derived row operands and their corrections (per request)
+        let p1 = plane_add(&x.re, &x.im);
+        let sa1 = row_corrections_flat(&p1);
+        let sa2 = row_corrections_flat(&x.im);
+        let sa3 = row_corrections_flat(&x.re);
+
+        // the three square passes — all the multiplicative work
+        let m1 = matmul_square_core(&p1, &self.q1, &sa1, &self.sb1, cfg);
+        let m2 = matmul_square_core(&x.im, &self.q2, &sa2, &self.sb2, cfg);
+        let m3 = matmul_square_core(&x.re, &self.q3, &sa3, &self.sb3, cfg);
+
+        let z = CPlanes { re: plane_sub(&m1, &m2), im: plane_add(&m1, &m3) };
+        Ok((z, cpm3_prepared_ledger(m, n, p)))
+    }
+}
+
+/// Blocked (and, with `cfg.threads > 1`, threaded) CPM3 complex matmul on
+/// plane-split operands: `Z = X·Y` bit-exactly equal to
+/// [`cmatmul_direct`](crate::linalg::complex::cmatmul_direct) for `i64`
+/// (each pass's trailing ÷2 is exact). One-shot form: derives and ledgers
+/// the Y-side caches too ([`cpm3_blocked_ledger`]).
+pub fn cmatmul_cpm3_blocked<T: SquareScalar>(
+    x: &CPlanes<T>,
+    y: &CPlanes<T>,
+    cfg: &EngineConfig,
+) -> Result<(CPlanes<T>, OpCounts), LinalgError> {
+    y.check()?;
+    if x.cols() != y.rows() {
+        return Err(LinalgError::ContractionMismatch {
+            left_cols: x.cols(),
+            right_rows: y.rows(),
+        });
+    }
+    let (prep, prep_ops) = PreparedCpm3::new(y)?;
+    let (z, call_ops) = prep.mul(x, cfg)?;
+    let total = call_ops + prep_ops;
+    debug_assert_eq!(total, cpm3_blocked_ledger(x.rows(), x.cols(), y.cols()));
+    Ok((z, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::complex::{cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix};
+    use super::*;
+    use crate::arith::Complex;
+    use crate::testkit::{forall, Rng};
+
+    fn tiny_cfg(threads: usize) -> EngineConfig {
+        EngineConfig { block_k: 3, block_n: 5, threads }
+    }
+
+    fn random_c(rng: &mut Rng, r: usize, c: usize, lim: i64) -> CMatrix {
+        CMatrix::from_fn(r, c, |_, _| {
+            Complex::new(rng.i64_in(-lim, lim), rng.i64_in(-lim, lim))
+        })
+    }
+
+    fn planes_of(x: &CMatrix) -> CPlanes<i64> {
+        let (re, im) = to_planes(x);
+        CPlanes::new(re, im).unwrap()
+    }
+
+    #[test]
+    fn blocked_cpm3_matches_direct_across_shapes() {
+        forall(
+            0xC93,
+            40,
+            |rng, size| {
+                let m = rng.usize_in(1, size.max(1).min(9));
+                let n = rng.usize_in(1, size.max(1).min(9));
+                let p = rng.usize_in(1, size.max(1).min(9));
+                (random_c(rng, m, n, 300), random_c(rng, n, p, 300))
+            },
+            |(x, y)| {
+                let want = planes_of(&cmatmul_direct(x, y).0);
+                for threads in [1usize, 4] {
+                    let (got, _) =
+                        cmatmul_cpm3_blocked(&planes_of(x), &planes_of(y), &tiny_cfg(threads))
+                            .unwrap();
+                    if got != want {
+                        return Err(format!(
+                            "CPM3 lowering diverged at {}x{}x{} threads={threads}",
+                            x.rows, x.cols, y.cols
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ledger_squares_match_reference_cpm3() {
+        // the three passes must spend exactly the §9 square budget the
+        // reference CPM3 ledgers: 3·(MNP + MN + NP)
+        let mut rng = Rng::new(0xC94);
+        for (m, n, p) in [(1usize, 1usize, 1usize), (4, 6, 3), (8, 8, 8)] {
+            let x = random_c(&mut rng, m, n, 100);
+            let y = random_c(&mut rng, n, p, 100);
+            let (_, reference) = cmatmul_cpm3(&x, &y);
+            let (_, blocked) =
+                cmatmul_cpm3_blocked(&planes_of(&x), &planes_of(&y), &tiny_cfg(1)).unwrap();
+            assert_eq!(blocked.squares, reference.squares, "{m}x{n}x{p}");
+            assert_eq!(blocked.mults, 0);
+            assert_eq!(blocked, cpm3_blocked_ledger(m, n, p));
+        }
+    }
+
+    #[test]
+    fn ledger_equals_per_element_counting_of_the_three_passes() {
+        fn lowered_ref(m: usize, n: usize, p: usize) -> OpCounts {
+            let mut ops = OpCounts::ZERO;
+            for _ in 0..m * n {
+                ops.add(); // forming A+B
+            }
+            for _ in 0..2 * n * p {
+                ops.add(); // forming C+S and S−C
+            }
+            for _pass in 0..3 {
+                for _ in 0..m * n {
+                    ops.square(); // row corrections
+                    ops.add();
+                }
+                for _ in 0..n * p {
+                    ops.square(); // column corrections
+                    ops.add();
+                }
+                for _out in 0..m * p {
+                    ops.add(); // correction seed
+                    for _k in 0..n {
+                        ops.square();
+                        ops.add_n(2);
+                    }
+                    ops.shift();
+                }
+            }
+            for _ in 0..2 * m * p {
+                ops.add(); // Z_re = M1 − M2, Z_im = M1 + M3
+            }
+            ops
+        }
+        for (m, n, p) in [(1usize, 1usize, 1usize), (2, 5, 3), (7, 4, 6)] {
+            assert_eq!(cpm3_blocked_ledger(m, n, p), lowered_ref(m, n, p), "{m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn prepared_amortises_the_y_side() {
+        let mut rng = Rng::new(0xC95);
+        let x = random_c(&mut rng, 5, 7, 80);
+        let y = random_c(&mut rng, 7, 4, 80);
+        let (full, full_ops) =
+            cmatmul_cpm3_blocked(&planes_of(&x), &planes_of(&y), &tiny_cfg(1)).unwrap();
+        let (prep, prep_ops) = PreparedCpm3::new(&planes_of(&y)).unwrap();
+        assert_eq!(prep.in_features(), 7);
+        assert_eq!(prep.out_features(), 4);
+        let (amortised, call_ops) = prep.mul(&planes_of(&x), &tiny_cfg(2)).unwrap();
+        assert_eq!(amortised, full);
+        assert_eq!(call_ops, cpm3_prepared_ledger(5, 7, 4));
+        assert_eq!(call_ops + prep_ops, full_ops, "§3 amortisation must be exact");
+        // the cached planes round-trip to the original Y
+        let (yre, yim) = to_planes(&y);
+        assert_eq!(prep.re_plane(), &yre);
+        assert_eq!(prep.im_plane(), yim);
+    }
+
+    #[test]
+    fn f32_planes_are_exact_on_integer_data() {
+        // integer-valued f32 planes keep every intermediate below 2^24,
+        // so the float lowering must agree exactly with the i64 result
+        let mut rng = Rng::new(0xC96);
+        let x = random_c(&mut rng, 6, 9, 40);
+        let y = random_c(&mut rng, 9, 5, 40);
+        let want = planes_of(&cmatmul_direct(&x, &y).0);
+        let to_f32 = |p: &CPlanes<i64>| CPlanes {
+            re: p.re.map(|v| v as f32),
+            im: p.im.map(|v| v as f32),
+        };
+        let (got, _) =
+            cmatmul_cpm3_blocked(&to_f32(&planes_of(&x)), &to_f32(&planes_of(&y)), &tiny_cfg(2))
+                .unwrap();
+        for (g, w) in got.re.data().iter().zip(want.re.data()) {
+            assert_eq!(*g as i64, *w);
+        }
+        for (g, w) in got.im.data().iter().zip(want.im.data()) {
+            assert_eq!(*g as i64, *w);
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        let x = CPlanes::<i64>::zeros(2, 3);
+        let y = CPlanes::<i64>::zeros(4, 2);
+        assert_eq!(
+            cmatmul_cpm3_blocked(&x, &y, &EngineConfig::default()).unwrap_err(),
+            LinalgError::ContractionMismatch { left_cols: 3, right_rows: 4 }
+        );
+        assert!(matches!(
+            CPlanes::new(Matrix::<i64>::zeros(2, 2), Matrix::<i64>::zeros(3, 2)).unwrap_err(),
+            LinalgError::ShapeMismatch { .. }
+        ));
+        // a hand-built mismatched pair (the fields are public) must also
+        // surface as a typed error, not a plane_add panic
+        let bad = CPlanes { re: Matrix::<i64>::zeros(2, 3), im: Matrix::<i64>::zeros(2, 4) };
+        let ok = CPlanes::<i64>::zeros(3, 2);
+        assert!(matches!(
+            cmatmul_cpm3_blocked(&bad, &ok, &EngineConfig::default()).unwrap_err(),
+            LinalgError::ShapeMismatch { .. }
+        ));
+    }
+}

@@ -1,0 +1,245 @@
+//! im2col patch extraction: the data-movement half of the conv2d lowering.
+//!
+//! A valid-mode `kh×kw` correlation over an `in_h×in_w` image becomes one
+//! matmul once the image is unrolled into its *patch matrix* `A`:
+//! row `oh·out_w + ow` of `A` is the flattened (row-major) `kh×kw` window
+//! whose top-left corner sits at `(oh, ow)`, so
+//!
+//! ```text
+//! A: (out_h·out_w) × (kh·kw)       — one row per output pixel
+//! B: (kh·kw) × filters             — one column per flattened kernel
+//! C = A·B: (out_h·out_w) × filters — column f is filter f's output map
+//! ```
+//!
+//! and `C = A·B` runs on the cache-blocked, threaded square-matmul core,
+//! with the filter bank playing the paper's §3 *constant B* role: its
+//! column corrections are computed once per bank
+//! ([`PreparedConvBank`](super::conv::PreparedConvBank)) and amortised
+//! across every image and every filter.
+//!
+//! Extraction is pure data movement — zero arithmetic operations — so it
+//! never appears in an [`OpCounts`](crate::linalg::OpCounts) ledger. Each
+//! patch row is filled by `kh` contiguous `copy_from_slice` runs of `kw`
+//! samples, the only layout the cost of which the lowering pays for its
+//! locality win.
+//!
+//! Shape *policy* is the callers' job: the fallible entry points in
+//! [`conv`](super::conv) turn bad geometry into a typed
+//! [`LinalgError`](crate::linalg::LinalgError) via
+//! [`conv2d_output_shape`](crate::linalg::conv::conv2d_output_shape)
+//! before calling down here. These helpers are still exported, so they
+//! guard their preconditions with real `assert!`s — in a release build a
+//! wrong dimension must fail fast, not silently scatter values into the
+//! wrong image's output block (the same promotion PR 2 made for
+//! `for_row_chunks`).
+
+use super::super::matrix::Matrix;
+use super::SquareScalar;
+
+/// Unroll one image into its `(out_h·out_w) × (kh·kw)` patch matrix.
+///
+/// Caller must have validated `kh <= x.rows && kw <= x.cols` and non-empty
+/// operands (see module docs).
+pub fn im2col<T: SquareScalar>(x: &Matrix<T>, kh: usize, kw: usize) -> Matrix<T> {
+    assert!(
+        kh >= 1 && kw >= 1 && x.rows >= kh && x.cols >= kw,
+        "im2col: {kh}x{kw} kernel must fit a {}x{} image",
+        x.rows,
+        x.cols
+    );
+    let out_h = x.rows - kh + 1;
+    let out_w = x.cols - kw + 1;
+    let taps = kh * kw;
+    let mut a = Matrix::zeros(out_h * out_w, taps);
+    fill_patches(a.data_mut(), x.data(), x.cols, kh, kw, out_h, out_w);
+    a
+}
+
+/// Unroll a batch of row-major flattened images (each `in_h·in_w` values,
+/// concatenated) into one tall stacked patch matrix of
+/// `(batch·out_h·out_w) × (kh·kw)`: image `i`'s patches occupy the row
+/// block starting at `i·out_h·out_w`. One matmul against the bank then
+/// serves the whole batch — the serving path's layout.
+pub fn im2col_stacked<T: SquareScalar>(
+    images_flat: &[T],
+    batch: usize,
+    in_h: usize,
+    in_w: usize,
+    kh: usize,
+    kw: usize,
+) -> Matrix<T> {
+    assert!(
+        kh >= 1 && kw >= 1 && in_h >= kh && in_w >= kw,
+        "im2col_stacked: {kh}x{kw} kernel must fit a {in_h}x{in_w} image"
+    );
+    assert_eq!(
+        images_flat.len(),
+        batch * in_h * in_w,
+        "im2col_stacked: buffer is not {batch} images of {in_h}x{in_w}"
+    );
+    let out_h = in_h - kh + 1;
+    let out_w = in_w - kw + 1;
+    let k_out = out_h * out_w;
+    let taps = kh * kw;
+    let mut a = Matrix::zeros(batch * k_out, taps);
+    for b in 0..batch {
+        let img = &images_flat[b * in_h * in_w..(b + 1) * in_h * in_w];
+        let block = &mut a.data_mut()[b * k_out * taps..(b + 1) * k_out * taps];
+        fill_patches(block, img, in_w, kh, kw, out_h, out_w);
+    }
+    a
+}
+
+/// Fill `rows` (the row-major storage of `out_h·out_w` patch rows of
+/// `kh·kw` taps each) straight from a flat row-major image of width
+/// `in_w`: contiguous `kw`-sample runs, one per kernel row per patch —
+/// no intermediate image copy on the serving path.
+fn fill_patches<T: SquareScalar>(
+    rows: &mut [T],
+    img: &[T],
+    in_w: usize,
+    kh: usize,
+    kw: usize,
+    out_h: usize,
+    out_w: usize,
+) {
+    let taps = kh * kw;
+    debug_assert_eq!(rows.len(), out_h * out_w * taps);
+    for oh in 0..out_h {
+        for i in 0..kh {
+            let x_row = &img[(oh + i) * in_w..(oh + i + 1) * in_w];
+            for ow in 0..out_w {
+                let base = (oh * out_w + ow) * taps + i * kw;
+                rows[base..base + kw].copy_from_slice(&x_row[ow..ow + kw]);
+            }
+        }
+    }
+}
+
+/// Flatten a bank of same-shaped kernels into the `(kh·kw) × filters`
+/// weight matrix `B`: column `f` is kernel `f` in row-major order. Caller
+/// validates the bank (non-empty, uniform non-empty shapes).
+pub fn bank_matrix<T: SquareScalar>(filters: &[Matrix<T>]) -> Matrix<T> {
+    assert!(!filters.is_empty(), "bank_matrix: empty filter bank");
+    let (kh, kw) = (filters[0].rows, filters[0].cols);
+    assert!(
+        filters.iter().all(|f| f.rows == kh && f.cols == kw),
+        "bank_matrix: filters must share one {kh}x{kw} shape"
+    );
+    Matrix::from_fn(kh * kw, filters.len(), |t, f| filters[f].data()[t])
+}
+
+/// Re-scatter the lowered output `C` (`(batch·k_out) × filters`) into the
+/// serving layout: per image, per filter, the flattened `out_h·out_w` map
+/// — i.e. `out[(b·filters + f)·k_out + pix] = C[b·k_out + pix, f]`.
+/// Pure data movement, like the extraction.
+pub fn scatter_bank_output<T: SquareScalar>(
+    c: &Matrix<T>,
+    batch: usize,
+    k_out: usize,
+    filters: usize,
+) -> Vec<T> {
+    assert_eq!(
+        c.rows,
+        batch * k_out,
+        "scatter_bank_output: C rows must be batch*k_out"
+    );
+    assert_eq!(c.cols, filters, "scatter_bank_output: C cols must be the filter count");
+    let mut out = vec![T::default(); batch * filters * k_out];
+    for b in 0..batch {
+        for pix in 0..k_out {
+            let c_row = c.row(b * k_out + pix);
+            for (f, &v) in c_row.iter().enumerate() {
+                out[(b * filters + f) * k_out + pix] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn patches_match_manual_windows() {
+        let mut rng = Rng::new(0x12C);
+        let x = Matrix::random(&mut rng, 5, 7, -50, 50);
+        let (kh, kw) = (2usize, 3usize);
+        let a = im2col(&x, kh, kw);
+        let (out_h, out_w) = (4usize, 5usize);
+        assert_eq!((a.rows, a.cols), (out_h * out_w, kh * kw));
+        for oh in 0..out_h {
+            for ow in 0..out_w {
+                let row = a.row(oh * out_w + ow);
+                for i in 0..kh {
+                    for j in 0..kw {
+                        assert_eq!(row[i * kw + j], x.get(oh + i, ow + j));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_kernel_is_the_flat_image() {
+        let mut rng = Rng::new(0x12D);
+        let x = Matrix::random(&mut rng, 3, 4, -9, 9);
+        let a = im2col(&x, 1, 1);
+        assert_eq!((a.rows, a.cols), (12, 1));
+        assert_eq!(a.data(), x.data());
+    }
+
+    #[test]
+    fn stacked_batch_blocks_equal_per_image_extraction() {
+        let mut rng = Rng::new(0x12E);
+        let (in_h, in_w, kh, kw) = (4usize, 5usize, 3usize, 2usize);
+        let imgs: Vec<Matrix<i64>> = (0..3)
+            .map(|_| Matrix::random(&mut rng, in_h, in_w, -99, 99))
+            .collect();
+        let flat: Vec<i64> = imgs.iter().flat_map(|m| m.data().to_vec()).collect();
+        let stacked = im2col_stacked(&flat, 3, in_h, in_w, kh, kw);
+        let k_out = (in_h - kh + 1) * (in_w - kw + 1);
+        assert_eq!(stacked.rows, 3 * k_out);
+        for (b, img) in imgs.iter().enumerate() {
+            let single = im2col(img, kh, kw);
+            for pix in 0..k_out {
+                assert_eq!(stacked.row(b * k_out + pix), single.row(pix), "image {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bank_matrix_columns_are_flattened_kernels() {
+        let mut rng = Rng::new(0x12F);
+        let filters: Vec<Matrix<i64>> = (0..4)
+            .map(|_| Matrix::random(&mut rng, 2, 3, -20, 20))
+            .collect();
+        let b = bank_matrix(&filters);
+        assert_eq!((b.rows, b.cols), (6, 4));
+        for (f, ker) in filters.iter().enumerate() {
+            for t in 0..6 {
+                assert_eq!(b.get(t, f), ker.data()[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_round_trips_the_lowered_layout() {
+        // C[b*k_out + pix, f] must land at out[(b*F + f)*k_out + pix]
+        let (batch, k_out, filters) = (2usize, 3usize, 2usize);
+        let c = Matrix::from_fn(batch * k_out, filters, |r, f| (r * 10 + f) as i64);
+        let out = scatter_bank_output(&c, batch, k_out, filters);
+        for b in 0..batch {
+            for f in 0..filters {
+                for pix in 0..k_out {
+                    assert_eq!(
+                        out[(b * filters + f) * k_out + pix],
+                        c.get(b * k_out + pix, f)
+                    );
+                }
+            }
+        }
+    }
+}

@@ -21,6 +21,14 @@
 //!   contiguous chunks, one scoped thread per chunk, no locks because the
 //!   chunks are disjoint `&mut` slices.
 //!
+//! * [`im2col`]/[`conv`] — the convolution lowering: patch extraction plus
+//!   [`PreparedConvBank`], so a fixed CNN filter bank runs as one blocked
+//!   square matmul per image (or per batch) with its §3 corrections paid
+//!   once per model.
+//! * [`complex`] — the CPM3 lowering: plane-split complex matmul as three
+//!   blocked square passes ([`CPlanes`], [`PreparedCpm3`]), spending
+//!   exactly the §9 square budget.
+//!
 //! Ledgers are *hoisted*: an [`OpCounts`](super::OpCounts) is a
 //! deterministic function of the shape (asserted equal to per-element
 //! counting by the tests), so the engine spends zero instructions on
@@ -32,6 +40,9 @@
 //! the PJRT runtime.
 
 pub mod blocked;
+pub mod complex;
+pub mod conv;
+pub mod im2col;
 pub mod kernels;
 pub mod threaded;
 
@@ -41,6 +52,12 @@ pub use blocked::{
     row_corrections_flat, square_matmul_const_b_ledger, square_matmul_ledger,
     EngineConfig, PreparedB,
 };
+pub use complex::{
+    cmatmul_cpm3_blocked, cpm3_blocked_ledger, cpm3_prepared_ledger, plane_add,
+    plane_sub, CPlanes, PreparedCpm3,
+};
+pub use conv::{conv2d_square_blocked, PreparedConvBank};
+pub use im2col::{bank_matrix, im2col, im2col_stacked, scatter_bank_output};
 pub use threaded::max_threads;
 
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};

@@ -28,3 +28,59 @@ pub mod transform;
 pub use counts::OpCounts;
 pub use engine::{EngineConfig, PreparedB, SquareScalar};
 pub use matrix::Matrix;
+
+/// Shape-validation errors for the fallible linalg entry points.
+///
+/// The reference stack historically `assert!`ed its preconditions; for the
+/// serving-facing paths (2-D convolution and the engine lowering subsystem)
+/// a malformed request must surface as an `Err` the coordinator can return
+/// to the client, not a worker-killing panic — and never as silent
+/// `usize` underflow in output-size arithmetic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinalgError {
+    /// an operand has a zero dimension where real work is required
+    EmptyInput { what: &'static str },
+    /// valid-mode correlation needs the kernel to fit inside the input
+    KernelLargerThanInput {
+        kh: usize,
+        kw: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    /// `A·B` with `a.cols != b.rows`
+    ContractionMismatch {
+        left_cols: usize,
+        right_rows: usize,
+    },
+    /// operands that must share a shape (planes, batch buffers) disagree
+    ShapeMismatch {
+        what: &'static str,
+        expected: (usize, usize),
+        got: (usize, usize),
+    },
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::EmptyInput { what } => write!(f, "empty {what}: every dimension must be non-zero"),
+            Self::KernelLargerThanInput { kh, kw, in_h, in_w } => write!(
+                f,
+                "kernel {kh}x{kw} does not fit inside input {in_h}x{in_w} \
+                 (valid-mode correlation needs kernel <= input)"
+            ),
+            Self::ContractionMismatch { left_cols, right_rows } => write!(
+                f,
+                "contraction mismatch: left operand has {left_cols} columns, \
+                 right operand has {right_rows} rows"
+            ),
+            Self::ShapeMismatch { what, expected, got } => write!(
+                f,
+                "shape mismatch for {what}: expected {}x{}, got {}x{}",
+                expected.0, expected.1, got.0, got.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}

@@ -36,17 +36,29 @@ COMMANDS:
             [--native] [--threads T] [--workers W]
                                  batching inference server demo (E6);
                                  --native serves the blocked square-kernel
-                                 engine in-process (no PJRT artifacts);
-                                 --workers W shards the server into W
-                                 worker threads behind one dispatcher —
-                                 every worker shares one prepared weight
-                                 matrix, so the constant-weight (§3)
-                                 corrections are computed exactly once
-                                 for the whole pool. Native only: the
-                                 PJRT engine is not Send, so the artifact
-                                 path requires --workers 1 (the default).
-                                 --threads T is the total engine thread
-                                 budget, split across the workers.
+                                 engine in-process (no PJRT artifacts)
+                                 with --model one of
+                                   dense    784→10 linear layer (default)
+                                   conv     CNN filter bank (8×3×3 over
+                                            28×28 images) via the im2col
+                                            lowering, corrections cached
+                                            once per bank
+                                   complex  plane-split CPM3 complex
+                                            matmul (64→16) fed QPSK
+                                            symbols
+                                 each shadowed by its direct-multiplier
+                                 twin; without --native, --model names a
+                                 PJRT artifact. --workers W shards the
+                                 server into W worker threads behind one
+                                 dispatcher — every worker shares one
+                                 prepared weight/bank/plane set, so the
+                                 constant-operand (§3) corrections are
+                                 computed exactly once for the whole
+                                 pool. Native only: the PJRT engine is
+                                 not Send, so the artifact path requires
+                                 --workers 1 (the default). --threads T
+                                 is the total engine thread budget, split
+                                 across the workers.
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
@@ -296,60 +308,184 @@ fn serve(args: &Args) -> Result<()> {
     let rps = args.get_u64("rps", 2_000)? as f64;
     let shadow_wanted = !args.has("no-shadow");
     let workers = args.get_usize("workers", 1)?.max(1);
+    let native = args.has("native");
+    let model = args
+        .get_or("model", if native { "dense" } else { "mlp_square" })
+        .to_string();
 
-    let srv = if args.has("native") {
+    // complex requests are plane-split QPSK rows, everything else serves
+    // MNIST-like images; sized to match the executors built below
+    let complex_subcarriers = 64usize;
+    let complex_rows = native && model == "complex";
+
+    let srv = if native {
         // native path: the blocked multi-threaded square-kernel engine
-        // serves a random-but-deterministic 784→10 linear model in-process,
-        // sharded across `workers` threads that share one prepared weight
-        // matrix (corrections computed once), shadowed by its direct twin
+        // serves a random-but-deterministic model in-process, sharded
+        // across `workers` threads that share one prepared operand
+        // (corrections computed once), shadowed by its direct twin
         let threads = args.get_usize("threads", fairsquare::linalg::engine::max_threads())?;
         // the --threads budget is the whole pool's: each worker's engine
         // gets an even share so W workers don't oversubscribe W× the cores
         let per_worker_threads = (threads / workers).max(1);
-        let mut rng = Rng::new(0xE6);
-        let weights =
-            Matrix::from_fn(784, 10, |_, _| (rng.normal() * 0.05) as f32);
-        // report the parallelism this batch shape actually gets: the engine
-        // caps workers by useful work, so small models run fewer threads
-        // than requested no matter the knob
-        let effective = fairsquare::linalg::engine::effective_threads(
-            per_worker_threads, 32, 784, 10,
-        );
-        println!(
-            "starting server: native square-kernel engine, {workers} worker(s) \
-             ({per_worker_threads} engine threads each, {effective} effective \
-             per 32-row batch) shadow={}",
-            if shadow_wanted { "direct twin" } else { "off" }
-        );
-        let (prepared, _prep_ops) =
-            fairsquare::linalg::engine::PreparedB::new_shared(weights);
-        let shadow_w = prepared.matrix().clone();
         let cfg =
             fairsquare::linalg::engine::EngineConfig::with_threads(per_worker_threads);
-        fairsquare::coordinator::InferenceServer::start(
-            32,
-            Duration::from_millis(2),
-            1024,
-            if shadow_wanted { 8 } else { 0 },
-            workers,
-            move |_wid| {
-                Ok(fairsquare::coordinator::SquareKernelExecutor::from_shared(
-                    prepared.clone(),
+        let shadow_every = if shadow_wanted { 8 } else { 0 };
+        let shadow_str = if shadow_wanted { "direct twin" } else { "off" };
+
+        match model.as_str() {
+            "dense" => {
+                let mut rng = Rng::new(0xE6);
+                let weights =
+                    Matrix::from_fn(784, 10, |_, _| (rng.normal() * 0.05) as f32);
+                // report the parallelism this batch shape actually gets:
+                // the engine caps workers by useful work, so small models
+                // run fewer threads than requested no matter the knob
+                let effective = fairsquare::linalg::engine::effective_threads(
+                    per_worker_threads, 32, 784, 10,
+                );
+                println!(
+                    "starting server: native dense square-kernel model 784→10, \
+                     {workers} worker(s) ({per_worker_threads} engine threads \
+                     each, {effective} effective per 32-row batch) \
+                     shadow={shadow_str}"
+                );
+                let (prepared, _prep_ops) =
+                    fairsquare::linalg::engine::PreparedB::new_shared(weights);
+                let shadow_w = prepared.matrix().clone();
+                fairsquare::coordinator::InferenceServer::start(
                     32,
-                    cfg.clone(),
-                ))
-            },
-            move |_wid| {
-                if shadow_wanted {
-                    Ok(Some(fairsquare::coordinator::DirectKernelExecutor::new(
-                        shadow_w.clone(),
-                        32,
-                    )))
-                } else {
-                    Ok(None)
-                }
-            },
-        )?
+                    Duration::from_millis(2),
+                    1024,
+                    shadow_every,
+                    workers,
+                    move |_wid| {
+                        Ok(fairsquare::coordinator::SquareKernelExecutor::from_shared(
+                            prepared.clone(),
+                            32,
+                            cfg.clone(),
+                        ))
+                    },
+                    move |_wid| {
+                        if shadow_wanted {
+                            Ok(Some(fairsquare::coordinator::DirectKernelExecutor::new(
+                                shadow_w.clone(),
+                                32,
+                            )))
+                        } else {
+                            Ok(None)
+                        }
+                    },
+                )?
+            }
+            "conv" => {
+                // a CNN layer over the MNIST-like traffic: 8 3×3 filters
+                // on 28×28 images, one blocked square matmul per batch
+                // via the im2col lowering; bank corrections prepared once
+                // for the whole pool
+                let mut rng = Rng::new(0xC0);
+                let filters: Vec<Matrix<f32>> = (0..8)
+                    .map(|_| Matrix::from_fn(3, 3, |_, _| (rng.normal() * 0.2) as f32))
+                    .collect();
+                println!(
+                    "starting server: native conv model (8 filters 3×3 over \
+                     28×28, im2col lowering), {workers} worker(s) \
+                     ({per_worker_threads} engine threads each) \
+                     shadow={shadow_str}"
+                );
+                let (bank, _prep_ops) =
+                    fairsquare::linalg::engine::PreparedConvBank::new_shared(&filters)?;
+                let shadow_bank = bank.clone();
+                let shadow_cfg = cfg.clone();
+                fairsquare::coordinator::InferenceServer::start(
+                    16,
+                    Duration::from_millis(2),
+                    1024,
+                    shadow_every,
+                    workers,
+                    move |_wid| {
+                        fairsquare::coordinator::Conv2dExecutor::from_shared(
+                            bank.clone(),
+                            28,
+                            28,
+                            16,
+                            cfg.clone(),
+                        )
+                    },
+                    move |_wid| {
+                        if shadow_wanted {
+                            Ok(Some(
+                                fairsquare::coordinator::Conv2dDirectExecutor::from_shared(
+                                    shadow_bank.clone(),
+                                    28,
+                                    28,
+                                    16,
+                                    shadow_cfg.clone(),
+                                )?,
+                            ))
+                        } else {
+                            Ok(None)
+                        }
+                    },
+                )?
+            }
+            "complex" => {
+                // a DSP beamforming layer over QPSK traffic: plane-split
+                // 64→16 complex matmul via the three-pass CPM3 lowering;
+                // the three derived operands and their correction caches
+                // prepared once for the whole pool
+                let (n, p) = (complex_subcarriers, 16usize);
+                let mut rng = Rng::new(0xC3);
+                let y_re =
+                    Matrix::from_fn(n, p, |_, _| (rng.normal() * 0.1) as f32);
+                let y_im =
+                    Matrix::from_fn(n, p, |_, _| (rng.normal() * 0.1) as f32);
+                println!(
+                    "starting server: native complex CPM3 model {n}→{p} \
+                     (plane-split, 3 square passes), {workers} worker(s) \
+                     ({per_worker_threads} engine threads each) \
+                     shadow={shadow_str}"
+                );
+                let planes = fairsquare::linalg::engine::CPlanes::new(
+                    y_re.clone(),
+                    y_im.clone(),
+                )?;
+                let (prepared, _prep_ops) =
+                    fairsquare::linalg::engine::PreparedCpm3::new_shared(&planes)?;
+                let shadow_cfg = cfg.clone();
+                fairsquare::coordinator::InferenceServer::start(
+                    32,
+                    Duration::from_millis(2),
+                    1024,
+                    shadow_every,
+                    workers,
+                    move |_wid| {
+                        fairsquare::coordinator::ComplexMatmulExecutor::from_shared(
+                            prepared.clone(),
+                            32,
+                            cfg.clone(),
+                        )
+                    },
+                    move |_wid| {
+                        if shadow_wanted {
+                            Ok(Some(
+                                fairsquare::coordinator::ComplexMatmulDirectExecutor::new(
+                                    y_re.clone(),
+                                    y_im.clone(),
+                                    32,
+                                    shadow_cfg.clone(),
+                                )?,
+                            ))
+                        } else {
+                            Ok(None)
+                        }
+                    },
+                )?
+            }
+            other => bail!(
+                "unknown native model {other:?}; native models are \
+                 dense, conv, complex"
+            ),
+        }
     } else {
         if workers > 1 {
             bail!(
@@ -358,7 +494,7 @@ fn serve(args: &Args) -> Result<()> {
             );
         }
         let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-        let model = args.get_or("model", "mlp_square").to_string();
+        let model = model.clone();
         let baseline = model.replace("_square", "_direct");
         let shadow = shadow_wanted && baseline != model;
 
@@ -390,7 +526,12 @@ fn serve(args: &Args) -> Result<()> {
     let mut pending = Vec::with_capacity(requests);
     for gap in gaps {
         std::thread::sleep(Duration::from_micros(gap.min(5_000)));
-        pending.push(srv.submit(gen.mnist_like())?);
+        let input = if complex_rows {
+            gen.qpsk_row(complex_subcarriers)
+        } else {
+            gen.mnist_like()
+        };
+        pending.push(srv.submit(input)?);
     }
     let mut ok = 0usize;
     for rx in pending {

@@ -7,8 +7,12 @@ use fairsquare::arith::{self, Complex};
 use fairsquare::arith::fixed::{BitBudget, Q};
 use fairsquare::gates::multiplier::csa_multiplier;
 use fairsquare::gates::squarer::folded_squarer;
-use fairsquare::linalg::complex::{cmatmul_cpm3, cmatmul_direct, CMatrix};
-use fairsquare::linalg::conv::{conv1d_direct, conv1d_square};
+use fairsquare::linalg::complex::{cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix};
+use fairsquare::linalg::conv::{conv1d_direct, conv1d_square, conv2d_direct};
+use fairsquare::linalg::engine::{
+    cmatmul_cpm3_blocked, conv2d_square_blocked, cpm3_blocked_ledger, CPlanes,
+    EngineConfig, PreparedConvBank,
+};
 use fairsquare::linalg::matmul::{matmul_direct, matmul_square};
 use fairsquare::linalg::Matrix;
 use fairsquare::sim::conv::{run_fir, SquareFir};
@@ -110,6 +114,101 @@ fn fir_three_ways() {
             let mut e = SquareFir::new(w.clone());
             if run_fir(|v| e.step(v), x) != want {
                 return Err("Fig.8 engine".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The lowering subsystem against the reference kernels: blocked conv2d
+/// ≡ conv2d_direct and blocked CPM3 ≡ cmatmul_direct across randomized
+/// shapes — values AND ledgers, with threads ∈ {1, 4} byte-identity (the
+/// row-partitioned driver must be invisible in both).
+#[test]
+fn lowering_matches_references_values_and_ledgers() {
+    let cfg = |threads: usize| EngineConfig { block_k: 4, block_n: 8, threads };
+
+    // conv: single kernels and banks
+    forall(
+        0xA7,
+        30,
+        |rng, size| {
+            let kh = rng.usize_in(1, size.min(4).max(1));
+            let kw = rng.usize_in(1, size.min(4).max(1));
+            let h = kh + rng.usize_in(0, 10);
+            let w = kw + rng.usize_in(0, 10);
+            let nf = rng.usize_in(1, 4);
+            let filters: Vec<Matrix<i64>> = (0..nf)
+                .map(|_| Matrix::random(rng, kh, kw, -300, 300))
+                .collect();
+            let img = Matrix::random(rng, h, w, -300, 300);
+            (filters, img)
+        },
+        |(filters, img)| {
+            let (got1, ops1) = conv2d_square_blocked(&filters[0], img, &cfg(1)).unwrap();
+            let (got4, ops4) = conv2d_square_blocked(&filters[0], img, &cfg(4)).unwrap();
+            if got1 != got4 || ops1 != ops4 {
+                return Err("threaded conv lowering not byte-identical".into());
+            }
+            if got1 != conv2d_direct(&filters[0], img).unwrap().0 {
+                return Err("conv lowering diverged from conv2d_direct".into());
+            }
+            let (bank, prep) = PreparedConvBank::new(filters).unwrap();
+            let (maps1, bops1) = bank.apply(img, &cfg(1)).unwrap();
+            let (maps4, bops4) = bank.apply(img, &cfg(4)).unwrap();
+            if maps1 != maps4 || bops1 != bops4 {
+                return Err("threaded bank not byte-identical".into());
+            }
+            if prep.squares != (bank.taps() * bank.filters()) as u64 {
+                return Err("bank prep ledger wrong".into());
+            }
+            for (f, ker) in filters.iter().enumerate() {
+                if maps1[f] != conv2d_direct(ker, img).unwrap().0 {
+                    return Err(format!("bank map {f} diverged from conv2d_direct"));
+                }
+            }
+            Ok(())
+        },
+    );
+
+    // complex: plane-split CPM3
+    forall(
+        0xA8,
+        30,
+        |rng, size| {
+            let m = rng.usize_in(1, size.min(7).max(1));
+            let n = rng.usize_in(1, size.min(7).max(1));
+            let p = rng.usize_in(1, size.min(7).max(1));
+            let c = |rng: &mut fairsquare::testkit::Rng, r: usize, cc: usize| {
+                CMatrix::from_fn(r, cc, |_, _| {
+                    Complex::new(rng.i64_in(-300, 300), rng.i64_in(-300, 300))
+                })
+            };
+            let x = c(rng, m, n);
+            let y = c(rng, n, p);
+            (x, y)
+        },
+        |(x, y)| {
+            let planes = |m: &CMatrix| {
+                let (re, im) = to_planes(m);
+                CPlanes::new(re, im).unwrap()
+            };
+            let (z1, ops1) = cmatmul_cpm3_blocked(&planes(x), &planes(y), &cfg(1)).unwrap();
+            let (z4, ops4) = cmatmul_cpm3_blocked(&planes(x), &planes(y), &cfg(4)).unwrap();
+            if z1 != z4 || ops1 != ops4 {
+                return Err("threaded CPM3 lowering not byte-identical".into());
+            }
+            if ops1 != cpm3_blocked_ledger(x.rows, x.cols, y.cols) {
+                return Err("CPM3 lowering ledger diverged from its formula".into());
+            }
+            let want = cmatmul_direct(x, y).0;
+            let (wre, wim) = to_planes(&want);
+            if z1.re != wre || z1.im != wim {
+                return Err("CPM3 lowering diverged from cmatmul_direct".into());
+            }
+            // the lowering must spend exactly the reference CPM3 squares
+            if ops1.squares != cmatmul_cpm3(x, y).1.squares || ops1.mults != 0 {
+                return Err("CPM3 lowering square budget diverged from §9".into());
             }
             Ok(())
         },

@@ -302,6 +302,144 @@ fn worker_pool_matches_single_worker_and_stats_add_up() {
     );
 }
 
+/// The conv serving path end-to-end: flattened images flow client →
+/// batcher → worker → im2col lowering → blocked square matmul against the
+/// prepared filter bank, and every response is cross-checked against the
+/// i64 `conv2d_direct` reference kernel (integer-valued f32 data keeps
+/// the float path exact). Runs unconditionally — no artifacts, no PJRT.
+#[test]
+fn native_conv_executor_serves_and_matches_direct_reference() {
+    use std::time::Duration;
+
+    use fairsquare::coordinator::{Conv2dExecutor, InferenceServer};
+    use fairsquare::linalg::conv::conv2d_direct;
+    use fairsquare::linalg::engine::{EngineConfig, PreparedConvBank};
+
+    let mut rng = Rng::new(0xC0E2);
+    let (in_h, in_w, batch, nf) = (10usize, 9usize, 4usize, 3usize);
+    let filters_i: Vec<Matrix<i64>> = (0..nf)
+        .map(|_| Matrix::random(&mut rng, 3, 3, -7, 7))
+        .collect();
+    let filters_f: Vec<Matrix<f32>> = filters_i.iter().map(|f| f.map(|v| v as f32)).collect();
+    let (bank, prep_ops) = PreparedConvBank::new_shared(&filters_f).unwrap();
+    assert_eq!(prep_ops.squares, (9 * nf) as u64);
+
+    let srv = InferenceServer::start(
+        batch,
+        Duration::from_millis(2),
+        256,
+        0,
+        2, // the lowering must also hold across a worker pool
+        move |_wid| {
+            Conv2dExecutor::from_shared(
+                bank.clone(),
+                in_h,
+                in_w,
+                batch,
+                EngineConfig::with_threads(1),
+            )
+        },
+        |_wid| Ok(None::<Conv2dExecutor>),
+    )
+    .unwrap();
+
+    let images: Vec<Matrix<i64>> = (0..12)
+        .map(|_| Matrix::random(&mut rng, in_h, in_w, -7, 7))
+        .collect();
+    let rxs: Vec<_> = images
+        .iter()
+        .map(|img| {
+            srv.submit(img.data().iter().map(|&v| v as f32).collect())
+                .unwrap()
+        })
+        .collect();
+    let (out_h, out_w) = (8usize, 7usize);
+    let k_out = out_h * out_w;
+    for (img, rx) in images.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.len(), nf * k_out);
+        for (f, ker) in filters_i.iter().enumerate() {
+            let (want, _) = conv2d_direct(ker, img).unwrap();
+            let slice = &got[f * k_out..(f + 1) * k_out];
+            for (g, w) in slice.iter().zip(want.data()) {
+                assert_eq!(*g as i64, *w, "conv serving drifted from the reference");
+            }
+        }
+    }
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.rows, 12);
+    assert_eq!(stats.lost_workers, 0);
+}
+
+/// The complex serving path end-to-end: plane-split rows through the
+/// three-pass CPM3 lowering against prepared complex weights, every
+/// response cross-checked against the i64 `cmatmul_direct` reference.
+/// Runs unconditionally.
+#[test]
+fn native_complex_executor_serves_and_matches_direct_reference() {
+    use std::time::Duration;
+
+    use fairsquare::arith::Complex;
+    use fairsquare::coordinator::{ComplexMatmulExecutor, InferenceServer};
+    use fairsquare::linalg::complex::{cmatmul_direct, CMatrix};
+    use fairsquare::linalg::engine::{CPlanes, EngineConfig, PreparedCpm3};
+
+    let mut rng = Rng::new(0xC3E2);
+    let (n, p, batch) = (12usize, 5usize, 4usize);
+    let y = CMatrix::from_fn(n, p, |_, _| {
+        Complex::new(rng.i64_in(-8, 8), rng.i64_in(-8, 8))
+    });
+    let planes = CPlanes::new(y.map(|v| v.re as f32), y.map(|v| v.im as f32)).unwrap();
+    let (prepared, prep_ops) = PreparedCpm3::new_shared(&planes).unwrap();
+    assert_eq!(prep_ops.squares, (3 * n * p) as u64);
+
+    let srv = InferenceServer::start(
+        batch,
+        Duration::from_millis(2),
+        256,
+        0,
+        2,
+        move |_wid| {
+            ComplexMatmulExecutor::from_shared(
+                prepared.clone(),
+                batch,
+                EngineConfig::with_threads(1),
+            )
+        },
+        |_wid| Ok(None::<ComplexMatmulExecutor>),
+    )
+    .unwrap();
+
+    let symbols: Vec<Vec<Complex<i64>>> = (0..16)
+        .map(|_| {
+            (0..n)
+                .map(|_| Complex::new(rng.i64_in(-8, 8), rng.i64_in(-8, 8)))
+                .collect()
+        })
+        .collect();
+    let rxs: Vec<_> = symbols
+        .iter()
+        .map(|sym| {
+            let mut row: Vec<f32> = sym.iter().map(|v| v.re as f32).collect();
+            row.extend(sym.iter().map(|v| v.im as f32));
+            srv.submit(row).unwrap()
+        })
+        .collect();
+    for (sym, rx) in symbols.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.len(), 2 * p);
+        let x = CMatrix::from_fn(1, n, |_, j| sym[j]);
+        let (want, _) = cmatmul_direct(&x, &y);
+        for j in 0..p {
+            assert_eq!(got[j] as i64, want.get(0, j).re, "re {j}");
+            assert_eq!(got[p + j] as i64, want.get(0, j).im, "im {j}");
+        }
+    }
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.rows, 16);
+    assert_eq!(stats.lost_workers, 0);
+}
+
 #[test]
 fn wrong_arity_and_shape_are_rejected() {
     require_pjrt!();

@@ -5,12 +5,17 @@
 #   scripts/verify.sh --full   # same, but full bench budgets
 #
 # Gates enforced here:
+#   * cargo fmt --check: the tree must be rustfmt-clean
 #   * blocked_engine: blocked+threaded ≥ 2× naive at 256³, writes
 #     rust/BENCH_blocked_engine.json
+#   * blocked_conv: the im2col/CPM3 lowering subsystem — threaded lowering
+#     ≥ 2× the per-filter conv2d_square at CNN scale (64×64, 16 filters)
+#     on ≥2-core machines — writes rust/BENCH_blocked_conv.json
 #   * e2e_serving: the native worker-pool sweep (workers ∈ {1,2,4}) must
 #     produce rust/BENCH_e2e_serving.json — the serving perf trajectory —
 #     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1
-#   * a CLI smoke of the sharded server: `serve --native --workers 2`
+#   * CLI smokes: the sharded dense server (`serve --native --workers 2`)
+#     and the two lowering workloads (`--model conv`, `--model complex`)
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -30,6 +35,15 @@ echo "==> cargo bench --bench blocked_engine -- ${MODE:-(full)}"
 # shellcheck disable=SC2086
 cargo bench --bench blocked_engine -- $MODE
 
+echo "==> cargo bench --bench blocked_conv -- ${MODE:-(full)}"
+rm -f BENCH_blocked_conv.json
+# shellcheck disable=SC2086
+cargo bench --bench blocked_conv -- $MODE
+if [[ ! -f BENCH_blocked_conv.json ]]; then
+    echo "verify FAILED: BENCH_blocked_conv.json was not produced" >&2
+    exit 1
+fi
+
 echo "==> cargo bench --bench e2e_serving -- ${MODE:-(full)}"
 rm -f BENCH_e2e_serving.json
 # shellcheck disable=SC2086
@@ -41,5 +55,22 @@ fi
 
 echo "==> serve --native --workers 2 smoke"
 cargo run --release --quiet -- serve --native --workers 2 --requests 128 --rps 8000
+
+echo "==> serve --native --model conv smoke"
+cargo run --release --quiet -- serve --native --model conv --requests 64 --rps 4000
+
+echo "==> serve --native --model complex smoke"
+cargo run --release --quiet -- serve --native --model complex --requests 64 --rps 4000
+
+# last so a formatting slip never masks a functional/perf failure above
+echo "==> cargo fmt --check"
+if ! cargo fmt --version >/dev/null 2>&1; then
+    echo "verify WARNING: rustfmt not installed; skipping the fmt gate" >&2
+else
+    if ! (cd .. && cargo fmt --check); then
+        echo "verify FAILED: tree is not rustfmt-clean (run: cargo fmt)" >&2
+        exit 1
+    fi
+fi
 
 echo "==> verify OK"
