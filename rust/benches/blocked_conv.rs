@@ -17,20 +17,34 @@
 //! element-walking `cmatmul_cpm3` at serving-ish shapes (informational —
 //! the conv gate is this bench's acceptance gate).
 //!
+//! NCHW leg (the generalized subsystem's gate): a multi-channel, strided,
+//! padded `ConvSpec` runs through the workspace path
+//! (`apply_batch_ws`), is cross-checked bit-for-bit against the naive
+//! `conv2d_nchw_direct` reference, timed against it, and — under this
+//! binary's counting global allocator — must perform **zero** heap
+//! allocations once warm: the `allocs_steady_state` field in the JSON is
+//! asserted to be 0.
+//!
 //! Writes `BENCH_blocked_conv.json` (benchkit `JsonReport` schema) so the
 //! lowering's perf trajectory accumulates from this PR on. `--quick` (as
 //! passed by `scripts/verify.sh`) shrinks budgets, not coverage: every
 //! shape still runs and the JSON artifact is still written.
 
 use fairsquare::arith::Complex;
-use fairsquare::benchkit::{f, fmt_ns, Bench, JsonReport, Table};
+use fairsquare::benchkit::{f, fmt_ns, Bench, CountingAlloc, JsonReport, Table};
 use fairsquare::linalg::complex::{cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix};
-use fairsquare::linalg::conv::{conv2d_direct, conv2d_square};
+use fairsquare::linalg::conv::{conv2d_direct, conv2d_nchw_direct, conv2d_square};
 use fairsquare::linalg::engine::{
-    cmatmul_cpm3_blocked, max_threads, CPlanes, EngineConfig, PreparedConvBank,
+    cmatmul_cpm3_blocked, max_threads, CPlanes, ConvSpec, EngineConfig, EngineWorkspace,
+    PreparedConvBank,
 };
 use fairsquare::linalg::Matrix;
 use fairsquare::testkit::Rng;
+
+// counts every allocator touch so the steady-state-zero-allocations
+// claim is *measured*, not asserted from code reading
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc::new();
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -135,6 +149,115 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- NCHW multi-channel / strided / padded leg ----------------------
+    // the generalized subsystem at CNN scale: 16 filters of 3×3×3,
+    // stride 2, pad 1 over a batch of 3×64×64 NCHW images — one blocked
+    // square matmul per batch through the workspace arena, bit-identical
+    // to the naive direct NCHW reference
+    {
+        let spec = ConvSpec::new(3, 16, 3, 3).with_stride(2).with_padding(1);
+        let (in_h, in_w, batch) = (64usize, 64usize, 4usize);
+        let images = rng.vec_i64(batch * spec.image_len(in_h, in_w), -64, 64);
+        let filters = rng.vec_i64(spec.bank_len(), -64, 64);
+        let (bank, _prep) = PreparedConvBank::new_nchw(&filters, spec).unwrap();
+        let (out_h, out_w) = spec.output_shape(in_h, in_w).unwrap();
+
+        // correctness before timing: the lowering must equal the naive
+        // reference bit-for-bit, workspace path included
+        let (want, _) =
+            conv2d_nchw_direct(&images, batch, in_h, in_w, &filters, &spec).unwrap();
+        let mut ws = EngineWorkspace::new();
+        let mut out = Vec::new();
+        bank.apply_batch_ws(&images, batch, in_h, in_w, &single, &mut ws, &mut out)
+            .unwrap();
+        assert_eq!(out, want, "NCHW workspace lowering diverged from the reference");
+        let (alloc_out, _) = bank.apply_batch(&images, batch, in_h, in_w, &multi).unwrap();
+        assert_eq!(alloc_out, want, "NCHW threaded lowering diverged from the reference");
+
+        let m_direct =
+            bench.run(|| conv2d_nchw_direct(&images, batch, in_h, in_w, &filters, &spec));
+        let m_ws = bench.run(|| {
+            bank.apply_batch_ws(&images, batch, in_h, in_w, &single, &mut ws, &mut out)
+                .unwrap()
+        });
+        let m_threaded = bench.run(|| bank.apply_batch(&images, batch, in_h, in_w, &multi));
+
+        // the subsystem's allocation gate: after the warm-up above, a
+        // whole apply_batch_ws round trip must never touch the allocator
+        let before = ALLOCATOR.allocations();
+        bank.apply_batch_ws(&images, batch, in_h, in_w, &single, &mut ws, &mut out)
+            .unwrap();
+        let allocs_steady_state = ALLOCATOR.allocations() - before;
+
+        let mut t = Table::new(
+            &format!(
+                "blocked_conv — NCHW 3ch 16f 3×3 s2 p1 over {batch}×3×{in_h}×{in_w} \
+                 (out {out_h}×{out_w})"
+            ),
+            &["leg", "time", "vs direct", "steady-state allocs"],
+        );
+        let speedup_ws = m_direct.mean_ns / m_ws.mean_ns;
+        let speedup_thr = m_direct.mean_ns / m_threaded.mean_ns;
+        t.row(&[
+            "direct reference".into(),
+            fmt_ns(m_direct.mean_ns),
+            "1.00".into(),
+            "-".into(),
+        ]);
+        t.row(&[
+            "workspace (1 thread)".into(),
+            fmt_ns(m_ws.mean_ns),
+            f(speedup_ws, 2),
+            allocs_steady_state.to_string(),
+        ]);
+        t.row(&[
+            "threaded".into(),
+            fmt_ns(m_threaded.mean_ns),
+            f(speedup_thr, 2),
+            "-".into(),
+        ]);
+        t.print();
+        println!(
+            "NCHW steady-state allocations per apply_batch: {allocs_steady_state} \
+             (target 0; workspace retains {} buffers / {} values)",
+            ws.retained(),
+            ws.retained_capacity()
+        );
+        assert_eq!(
+            allocs_steady_state, 0,
+            "alloc gate failed: warmed apply_batch_ws touched the allocator"
+        );
+
+        let shape = [
+            ("in_ch", 3.0),
+            ("filters", 16.0),
+            ("k", 3.0),
+            ("stride", 2.0),
+            ("pad", 1.0),
+            ("img", in_h as f64),
+            ("batch", batch as f64),
+        ];
+        report.case("nchw_direct_3x64x64_s2p1", &m_direct, &shape);
+        report.case(
+            "nchw_workspace_3x64x64_s2p1",
+            &m_ws,
+            &[
+                ("speedup_vs_direct", speedup_ws),
+                ("allocs_steady_state", allocs_steady_state as f64),
+                ("img", in_h as f64),
+            ],
+        );
+        report.case(
+            "nchw_threaded_3x64x64_s2p1",
+            &m_threaded,
+            &[
+                ("speedup_vs_direct", speedup_thr),
+                ("threads", threads as f64),
+                ("img", in_h as f64),
+            ],
+        );
+    }
 
     // ---- complex legs ---------------------------------------------------
     let mut t = Table::new(

@@ -1,13 +1,20 @@
 //! E2/E3 (eq. 20/36): complex matmul — 4-square CPM and 3-square CPM3
 //! ratios, measured on instrumented runs, plus software timings of all
-//! four implementations (direct 4-mult, Karatsuba 3-mult, CPM, CPM3).
+//! four implementations (direct 4-mult, Karatsuba 3-mult, CPM, CPM3),
+//! and the §6 vs §9 budget comparison of the two *blocked* lowerings
+//! (4-square `cmatmul_cpm_blocked` twin vs 3-square
+//! `cmatmul_cpm3_blocked`) on the engine they actually serve from.
 
 use fairsquare::arith::Complex;
 use fairsquare::benchkit::{f, fmt_ns, Bench, Table};
 use fairsquare::linalg::complex::{
-    cmatmul_3mult, cmatmul_cpm, cmatmul_cpm3, cmatmul_direct, CMatrix,
+    cmatmul_3mult, cmatmul_cpm, cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix,
 };
 use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio};
+use fairsquare::linalg::engine::{
+    cmatmul_cpm3_blocked, cmatmul_cpm_blocked, cpm3_blocked_ledger, cpm_blocked_ledger,
+    CPlanes, EngineConfig,
+};
 use fairsquare::testkit::Rng;
 
 fn rand_c(rng: &mut Rng, r: usize, c: usize, lim: i64) -> CMatrix {
@@ -43,6 +50,44 @@ fn main() {
             f(eq36_ratio(n as u64, n as u64), 4),
             fmt_ns(td.mean_ns),
             fmt_ns(tk.mean_ns),
+            fmt_ns(t4.mean_ns),
+            fmt_ns(t3.mean_ns),
+        ]);
+    }
+    t.print();
+
+    // §6 vs §9 on the blocked engine: the 4-square CPM twin against the
+    // 3-square CPM3 lowering — identical plane-split inputs, identical
+    // matmul core, so the square-budget gap (4MNP+2MN+2NP vs
+    // 3·(MNP+MN+NP), → 4/3 asymptotically) is the whole story
+    let mut t = Table::new(
+        "E3b — blocked lowerings: 4-square CPM twin vs 3-square CPM3 (§6 vs §9)",
+        &["M=N=P", "CPM squares", "CPM3 squares", "CPM3/CPM", "t(CPM)", "t(CPM3)"],
+    );
+    let cfg = EngineConfig::default();
+    for n in [16usize, 32, 64] {
+        let x = rand_c(&mut rng, n, n, 300);
+        let y = rand_c(&mut rng, n, n, 300);
+        let (xre, xim) = to_planes(&x);
+        let (yre, yim) = to_planes(&y);
+        let xp = CPlanes::new(xre, xim).unwrap();
+        let yp = CPlanes::new(yre, yim).unwrap();
+
+        let want = to_planes(&cmatmul_direct(&x, &y).0);
+        let (z4, ops4) = cmatmul_cpm_blocked(&xp, &yp, &cfg).unwrap();
+        let (z3, ops3) = cmatmul_cpm3_blocked(&xp, &yp, &cfg).unwrap();
+        assert_eq!((z4.re.clone(), z4.im.clone()), want, "CPM twin diverged at {n}³");
+        assert_eq!((z3.re.clone(), z3.im.clone()), want, "CPM3 diverged at {n}³");
+        assert_eq!(ops4, cpm_blocked_ledger(n, n, n));
+        assert_eq!(ops3, cpm3_blocked_ledger(n, n, n));
+
+        let t4 = bench.run(|| cmatmul_cpm_blocked(&xp, &yp, &cfg).unwrap());
+        let t3 = bench.run(|| cmatmul_cpm3_blocked(&xp, &yp, &cfg).unwrap());
+        t.row(&[
+            n.to_string(),
+            ops4.squares.to_string(),
+            ops3.squares.to_string(),
+            f(ops3.squares as f64 / ops4.squares as f64, 4),
             fmt_ns(t4.mean_ns),
             fmt_ns(t3.mean_ns),
         ]);

@@ -6,11 +6,63 @@
 //! a machine-readable `BENCH_<name>.json` artifact so the perf trajectory
 //! accumulates PR over PR. Used by every file in `rust/benches/`.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::config::Json;
+
+/// A counting global allocator for the zero-allocation gates: forwards
+/// to the system allocator and counts every `alloc`/`realloc`/
+/// `alloc_zeroed` touch. Each gate binary (the `blocked_conv` bench, the
+/// `workspace_alloc` integration test) declares its own
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc::new();`
+/// and diffs [`CountingAlloc::allocations`] around the measured region —
+/// one definition, so the gates can never drift apart on what counts as
+/// an allocation.
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        Self { allocs: AtomicU64::new(0) }
+    }
+
+    /// Allocator touches so far (monotone; diff around a region).
+    pub fn allocations(&self) -> u64 {
+        self.allocs.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
 
 /// Result of measuring one benchmark case.
 #[derive(Debug, Clone, Copy)]

@@ -16,15 +16,30 @@
 //! The engine's lowering subsystem adds two more native workloads:
 //!
 //! * [`Conv2dExecutor`] — a CNN layer: each request row is a flattened
-//!   image, convolved against a fixed filter bank via the im2col lowering
-//!   ([`PreparedConvBank`]) — one blocked square matmul per *batch*, the
-//!   bank's §3 corrections computed once per model (and once per pool via
-//!   `new_shared`). [`Conv2dDirectExecutor`] is its multiplier twin.
+//!   NCHW image (`C·in_h·in_w` values), convolved against a fixed filter
+//!   bank via the generalized im2col lowering ([`PreparedConvBank`],
+//!   any [`ConvSpec`] stride/padding/dilation) — one blocked square
+//!   matmul per *batch*, the bank's §3 corrections computed once per
+//!   model (and once per pool via `new_shared`).
+//!   [`Conv2dDirectExecutor`] is its multiplier twin.
 //! * [`ComplexMatmulExecutor`] — a DSP beamforming layer: each request
 //!   row is a plane-split complex vector (`[re…, im…]`), multiplied by a
 //!   fixed complex weight matrix via the three-pass CPM3 lowering
 //!   ([`PreparedCpm3`]). [`ComplexMatmulDirectExecutor`] is the 4-mult
 //!   schoolbook twin.
+//!
+//! The hot-path executors each own an [`EngineWorkspace`]: every scratch
+//! buffer of the lowering (patch matrix, GEMM output, corrections, split
+//! input planes, CPM3 pass planes) is checked out of the worker's own
+//! arena and returned. With a single-threaded engine config the only
+//! steady-state allocation left is the response `Vec` handed to the
+//! client; with `threads > 1` the scoped threaded driver still
+//! allocates per spawn — that is the documented trade. The workspaces
+//! are per-executor — i.e. per worker thread — which keeps the sharded
+//! pool `Send`-clean with no cross-worker locking; only the prepared
+//! operand caches are shared (immutably, via `Arc`). The shadow twins
+//! keep the allocating pipeline: they run on sampled batches only, and
+//! an independent code path is exactly what a cross-check wants.
 
 use std::sync::Arc;
 
@@ -32,7 +47,7 @@ use anyhow::{anyhow, Result};
 
 use crate::linalg::engine::{
     matmul_direct_blocked, matmul_square_prepared, plane_add, plane_sub, CPlanes,
-    EngineConfig, PreparedB, PreparedConvBank, PreparedCpm3,
+    ConvSpec, EngineConfig, EngineWorkspace, PreparedB, PreparedConvBank, PreparedCpm3,
 };
 use crate::linalg::Matrix;
 
@@ -188,7 +203,7 @@ impl ConvExecutorCore {
     }
 
     fn row_len(&self) -> usize {
-        self.in_h * self.in_w
+        self.bank.spec().image_len(self.in_h, self.in_w)
     }
 
     fn out_len(&self) -> usize {
@@ -207,18 +222,26 @@ impl ConvExecutorCore {
     }
 }
 
-/// CNN-layer batch executor on the im2col lowering: each request row is a
-/// flattened `in_h×in_w` image; the response row is the filter bank's
-/// output maps in `[filter][out_pixel]` order. The whole padded batch runs
-/// as ONE `(batch·K, T, F)` blocked square matmul, so batching widens the
-/// threaded driver's parallel section as well as amortising dispatch.
+/// CNN-layer batch executor on the generalized im2col lowering: each
+/// request row is a flattened NCHW image (`C·in_h·in_w` values); the
+/// response row is the filter bank's output maps in
+/// `[filter][out_pixel]` order, with stride/padding/dilation taken from
+/// the bank's [`ConvSpec`]. The whole batch runs as ONE
+/// `(batch·K, T, F)` blocked square matmul, so batching widens the
+/// threaded driver's parallel section as well as amortising dispatch —
+/// and every scratch buffer comes from the executor's own
+/// [`EngineWorkspace`], so a warmed batch allocates nothing beyond the
+/// response row (with `threads == 1`; the threaded driver's spawns
+/// still allocate).
 pub struct Conv2dExecutor {
     core: ConvExecutorCore,
+    ws: EngineWorkspace<f32>,
 }
 
 impl Conv2dExecutor {
-    /// Prepare a filter bank (computing its cached corrections) for
-    /// `in_h×in_w` images in fixed batches, one engine worker per core.
+    /// Prepare a single-channel stride-1 filter bank (computing its
+    /// cached corrections) for `in_h×in_w` images in fixed batches, one
+    /// engine worker per core — the PR 3 constructor.
     pub fn new(
         filters: &[Matrix<f32>],
         in_h: usize,
@@ -229,9 +252,24 @@ impl Conv2dExecutor {
         Self::from_shared(Arc::new(bank), in_h, in_w, batch_rows, EngineConfig::threaded())
     }
 
+    /// Prepare a flattened `[filter][channel][kh][kw]` bank for any
+    /// [`ConvSpec`] geometry — the constructor behind
+    /// `serve --native --model conv --in-ch/--stride/--pad`.
+    pub fn new_nchw(
+        filters_flat: &[f32],
+        spec: ConvSpec,
+        in_h: usize,
+        in_w: usize,
+        batch_rows: usize,
+    ) -> Result<Self> {
+        let (bank, _prep_ops) = PreparedConvBank::new_nchw(filters_flat, spec)?;
+        Self::from_shared(Arc::new(bank), in_h, in_w, batch_rows, EngineConfig::threaded())
+    }
+
     /// Build over a bank some other owner already prepared — the pool
     /// path: every worker clones the `Arc`, the bank corrections are
-    /// computed exactly once per pool.
+    /// computed exactly once per pool, and each worker gets its own
+    /// fresh workspace (warmed by its first batch).
     pub fn from_shared(
         bank: Arc<PreparedConvBank<f32>>,
         in_h: usize,
@@ -239,7 +277,16 @@ impl Conv2dExecutor {
         batch_rows: usize,
         cfg: EngineConfig,
     ) -> Result<Self> {
-        Ok(Self { core: ConvExecutorCore::build(bank, in_h, in_w, batch_rows, cfg)? })
+        Ok(Self {
+            core: ConvExecutorCore::build(bank, in_h, in_w, batch_rows, cfg)?,
+            ws: EngineWorkspace::new(),
+        })
+    }
+
+    /// Checkouts that had to allocate — the workspace's warm-up count,
+    /// exposed so tests (and curious operators) can pin the steady state.
+    pub fn workspace_grows(&self) -> u64 {
+        self.ws.grows()
     }
 }
 
@@ -259,9 +306,18 @@ impl BatchExecutor for Conv2dExecutor {
     fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
         let c = &self.core;
         c.check_len(rows_flat)?;
-        let (out, _ops) =
-            c.bank
-                .apply_batch(rows_flat, c.batch_rows, c.in_h, c.in_w, &c.cfg)?;
+        // the response buffer is handed to the client, so it is the one
+        // allocation a batch keeps; all lowering scratch is workspace-reused
+        let mut out = Vec::with_capacity(c.batch_rows * c.out_len());
+        c.bank.apply_batch_ws(
+            rows_flat,
+            c.batch_rows,
+            c.in_h,
+            c.in_w,
+            &c.cfg,
+            &mut self.ws,
+            &mut out,
+        )?;
         Ok(out)
     }
 }
@@ -365,14 +421,47 @@ impl ComplexExecutorCore {
         CPlanes { re, im }
     }
 
-    /// Interleave result planes back into per-row `[re…, im…]` order.
-    fn join_planes(&self, z: &CPlanes<f32>) -> Vec<f32> {
+    /// [`Self::split_planes`] with the plane storage drawn from the
+    /// caller's workspace — the hot path's allocation-free split. The
+    /// caller gives the planes back via `into_data` after the multiply.
+    fn split_planes_ws(
+        &self,
+        rows_flat: &[f32],
+        ws: &mut EngineWorkspace<f32>,
+    ) -> CPlanes<f32> {
+        let n = self.in_features;
+        let row_len = 2 * n;
+        let b = self.batch_rows;
+        let mut re = ws.checkout(b * n);
+        let mut im = ws.checkout(b * n);
+        for i in 0..b {
+            let row = &rows_flat[i * row_len..(i + 1) * row_len];
+            re[i * n..(i + 1) * n].copy_from_slice(&row[..n]);
+            im[i * n..(i + 1) * n].copy_from_slice(&row[n..]);
+        }
+        CPlanes {
+            re: Matrix::from_vec(b, n, re),
+            im: Matrix::from_vec(b, n, im),
+        }
+    }
+
+    /// Interleave flat result planes (row-major `batch × out_features`)
+    /// back into per-row `[re…, im…]` order.
+    fn join_plane_rows(&self, re: &[f32], im: &[f32]) -> Vec<f32> {
+        let p = self.out_features;
+        debug_assert_eq!(re.len(), self.batch_rows * p);
+        debug_assert_eq!(im.len(), self.batch_rows * p);
         let mut out = Vec::with_capacity(self.batch_rows * self.out_len());
         for i in 0..self.batch_rows {
-            out.extend_from_slice(z.re.row(i));
-            out.extend_from_slice(z.im.row(i));
+            out.extend_from_slice(&re[i * p..(i + 1) * p]);
+            out.extend_from_slice(&im[i * p..(i + 1) * p]);
         }
         out
+    }
+
+    /// Interleave result planes back into per-row `[re…, im…]` order.
+    fn join_planes(&self, z: &CPlanes<f32>) -> Vec<f32> {
+        self.join_plane_rows(z.re.data(), z.im.data())
     }
 }
 
@@ -385,6 +474,12 @@ impl ComplexExecutorCore {
 pub struct ComplexMatmulExecutor {
     weights: Arc<PreparedCpm3<f32>>,
     core: ComplexExecutorCore,
+    /// per-worker arena for the CPM3 scratch planes (`A+B`, corrections,
+    /// pass outputs) plus the retained result planes below — the complex
+    /// path's share of the allocation-free steady state
+    ws: EngineWorkspace<f32>,
+    z_re: Vec<f32>,
+    z_im: Vec<f32>,
 }
 
 impl ComplexMatmulExecutor {
@@ -395,7 +490,8 @@ impl ComplexMatmulExecutor {
         Self::from_shared(weights, batch_rows, EngineConfig::threaded())
     }
 
-    /// Build over weights some other owner already prepared (pool path).
+    /// Build over weights some other owner already prepared (pool path);
+    /// each worker gets its own workspace, warmed by its first batch.
     pub fn from_shared(
         weights: Arc<PreparedCpm3<f32>>,
         batch_rows: usize,
@@ -407,7 +503,13 @@ impl ComplexMatmulExecutor {
             batch_rows,
             cfg,
         )?;
-        Ok(Self { weights, core })
+        Ok(Self {
+            weights,
+            core,
+            ws: EngineWorkspace::new(),
+            z_re: Vec::new(),
+            z_im: Vec::new(),
+        })
     }
 }
 
@@ -426,9 +528,21 @@ impl BatchExecutor for ComplexMatmulExecutor {
 
     fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
         self.core.check_len(rows_flat)?;
-        let x = self.core.split_planes(rows_flat);
-        let (z, _ops) = self.weights.mul(&x, &self.core.cfg)?;
-        Ok(self.core.join_planes(&z))
+        // input planes, derived operand, corrections and pass planes all
+        // come from this worker's arena; the response Vec handed to the
+        // client is the one allocation a steady-state batch keeps
+        let x = self.core.split_planes_ws(rows_flat, &mut self.ws);
+        let result = self.weights.mul_into(
+            &x,
+            &self.core.cfg,
+            &mut self.ws,
+            &mut self.z_re,
+            &mut self.z_im,
+        );
+        self.ws.give_back(x.re.into_data());
+        self.ws.give_back(x.im.into_data());
+        result?;
+        Ok(self.core.join_plane_rows(&self.z_re, &self.z_im))
     }
 }
 
@@ -622,6 +736,48 @@ mod tests {
         let filters = [Matrix::<f32>::zeros(3, 3)];
         let mut exec = Conv2dExecutor::new(&filters, 6, 6, 2).unwrap();
         assert!(exec.run(&[0.0; 10]).is_err(), "wrong batch length");
+        // a zero stride is a typed construction error, not a panic
+        let spec = ConvSpec::new(1, 2, 3, 3).with_stride(0);
+        assert!(Conv2dExecutor::new_nchw(&[0.0; 18], spec, 6, 6, 1).is_err());
+    }
+
+    #[test]
+    fn nchw_executor_matches_direct_reference_and_reuses_its_workspace() {
+        use crate::linalg::conv::conv2d_nchw_direct;
+
+        let mut rng = Rng::new(0x66);
+        let spec = ConvSpec::new(3, 4, 3, 3).with_stride(2).with_padding(1);
+        let (in_h, in_w, batch) = (9usize, 8usize, 2usize);
+        let filters_i = rng.vec_i64(spec.bank_len(), -5, 5);
+        let filters_f: Vec<f32> = filters_i.iter().map(|&v| v as f32).collect();
+        let mut exec = Conv2dExecutor::new_nchw(&filters_f, spec, in_h, in_w, batch).unwrap();
+        assert_eq!(exec.row_len(), 3 * in_h * in_w, "row is a whole NCHW image");
+        let (out_h, out_w) = spec.output_shape(in_h, in_w).unwrap();
+        assert_eq!(exec.out_len(), 4 * out_h * out_w);
+
+        let mut grows_after_first = 0;
+        for round in 0..3 {
+            let imgs_i = rng.vec_i64(batch * spec.image_len(in_h, in_w), -5, 5);
+            let flat: Vec<f32> = imgs_i.iter().map(|&v| v as f32).collect();
+            let got = exec.run(&flat).unwrap();
+            // integer-valued f32 keeps the lowering exact — compare
+            // bit-for-bit against the i64 NCHW reference
+            let (want, _) =
+                conv2d_nchw_direct(&imgs_i, batch, in_h, in_w, &filters_i, &spec).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(*g as i64, *w, "round {round}");
+            }
+            if round == 0 {
+                grows_after_first = exec.workspace_grows();
+                assert!(grows_after_first > 0, "warm-up must populate the arena");
+            }
+        }
+        assert_eq!(
+            exec.workspace_grows(),
+            grows_after_first,
+            "steady-state batches must reuse the per-worker workspace"
+        );
     }
 
     #[test]

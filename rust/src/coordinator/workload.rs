@@ -19,20 +19,34 @@ impl WorkloadGen {
     }
 
     /// One MNIST-like input: 784 values in [0, 1] with a sparse "stroke"
-    /// structure (most pixels near zero, a contiguous band activated).
+    /// structure (most pixels near zero, a contiguous band activated) —
+    /// exactly [`Self::nchw_image`]`(1, 28, 28)`.
     pub fn mnist_like(&mut self) -> Vec<f32> {
-        let mut v = vec![0.0f32; 784];
-        let strokes = self.rng.usize_in(2, 5);
-        for _ in 0..strokes {
-            let start = self.rng.usize_in(0, 783);
-            let len = self.rng.usize_in(10, 60);
-            for i in start..(start + len).min(784) {
-                v[i] = (self.rng.f64_in(0.3, 1.0)) as f32;
+        self.nchw_image(1, 28, 28)
+    }
+
+    /// One NCHW multi-channel image for the generalized conv serving
+    /// path: `channels` stacked `h×w` planes, each with the sparse-stroke
+    /// structure of [`Self::mnist_like`], flattened
+    /// `[channel][row][col]` — `channels·h·w` values, the wire format
+    /// `serve --native --model conv --in-ch C` requests carry.
+    pub fn nchw_image(&mut self, channels: usize, h: usize, w: usize) -> Vec<f32> {
+        assert!(channels >= 1 && h >= 1 && w >= 1, "nchw_image: empty geometry");
+        let plane = h * w;
+        let mut v = vec![0.0f32; channels * plane];
+        for chan in v.chunks_mut(plane) {
+            let strokes = self.rng.usize_in(2, 5);
+            for _ in 0..strokes {
+                let start = self.rng.usize_in(0, plane - 1);
+                let len = self.rng.usize_in(10, 60);
+                for x in chan[start..(start + len).min(plane)].iter_mut() {
+                    *x = self.rng.f64_in(0.3, 1.0) as f32;
+                }
             }
-        }
-        // sensor noise
-        for x in v.iter_mut() {
-            *x += self.rng.f64_in(0.0, 0.05) as f32;
+            // sensor noise
+            for x in chan.iter_mut() {
+                *x += self.rng.f64_in(0.0, 0.05) as f32;
+            }
         }
         v
     }
@@ -109,6 +123,30 @@ mod tests {
         // sparse-ish: plenty of near-zero pixels
         let dark = v.iter().filter(|&&x| x < 0.1).count();
         assert!(dark > 200, "dark={dark}");
+    }
+
+    #[test]
+    fn nchw_single_channel_is_exactly_mnist_like() {
+        // the conv serving path with --in-ch 1 must see the same traffic
+        // PR 3 served, bit for bit
+        let a = WorkloadGen::new(11).mnist_like();
+        let b = WorkloadGen::new(11).nchw_image(1, 28, 28);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nchw_image_stacks_independent_planes() {
+        let mut g = WorkloadGen::new(12);
+        let v = g.nchw_image(3, 28, 28);
+        assert_eq!(v.len(), 3 * 784);
+        for c in 0..3 {
+            let chan = &v[c * 784..(c + 1) * 784];
+            assert!(chan.iter().all(|&x| (0.0..=1.1).contains(&x)), "channel {c}");
+            let dark = chan.iter().filter(|&&x| x < 0.1).count();
+            assert!(dark > 200, "channel {c} not sparse: dark={dark}");
+        }
+        // planes differ (independent strokes per channel)
+        assert_ne!(&v[..784], &v[784..2 * 784]);
     }
 
     #[test]

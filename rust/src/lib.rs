@@ -31,6 +31,20 @@
 //! kernels, AOT via HLO text) is described in `DESIGN.md`; experiment
 //! mapping in `EXPERIMENTS.md`.
 
+// Style lints the hand-rolled kernel and reference code trips by design:
+// the loops mirror the paper's index notation (needless_range_loop), the
+// tiled drivers and lowering entry points take their geometry as scalars
+// (too_many_arguments), and the blocking arithmetic predates
+// usize::div_ceil (manual_div_ceil). scripts/verify.sh enforces the rest
+// of clippy with -D warnings; unknown_lints keeps the list forward- and
+// backward-compatible across clippy versions.
+#![allow(unknown_lints)]
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil
+)]
+
 pub mod arith;
 pub mod benchkit;
 pub mod cli;

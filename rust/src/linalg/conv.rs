@@ -8,30 +8,104 @@ use crate::arith::complex::Complex;
 
 use super::counts::OpCounts;
 use super::engine::kernels;
+use super::engine::spec::ConvSpec;
+use super::engine::SquareScalar;
 use super::matrix::Matrix;
 use super::LinalgError;
 
 /// Validated output shape of a valid-mode 2-D correlation: `kh×kw` kernel
-/// over an `in_h×in_w` input. The single place the output-size arithmetic
-/// happens, so a kernel larger than the input (or an empty operand) is a
-/// typed [`LinalgError`] everywhere — reference stack and engine lowering
-/// alike — never a panic or a silent `usize` underflow.
+/// over an `in_h×in_w` input — the stride-1, unpadded special case of
+/// [`ConvSpec::output_shape`], which is the single place the output-size
+/// arithmetic happens. A kernel that cannot be placed (or an empty
+/// operand) is a typed [`LinalgError`] everywhere — reference stack and
+/// engine lowering alike — never a panic or a silent `usize` underflow,
+/// and the error reports the full stride/padding/dilation geometry.
 pub fn conv2d_output_shape(
     kh: usize,
     kw: usize,
     in_h: usize,
     in_w: usize,
 ) -> Result<(usize, usize), LinalgError> {
-    if kh == 0 || kw == 0 {
-        return Err(LinalgError::EmptyInput { what: "kernel" });
+    ConvSpec::new(1, 1, kh, kw).output_shape(in_h, in_w)
+}
+
+/// Direct (multiplier) NCHW 2-D convolution reference: `batch` images of
+/// `spec.in_channels` planes of `in_h×in_w` (flattened
+/// `[image][channel][row][col]`), a flattened `[filter][channel][kh][kw]`
+/// bank of `spec.bank_len()` weights, stride/zero-padding/dilation
+/// honoured, output in the serving layout
+/// `[image][filter][out_row][out_col]`.
+///
+/// Deliberately naive — the independently-written oracle the generalized
+/// im2col lowering is property-tested against (so it shares *no* code
+/// with the engine's patch extraction). Hoisted ledger: every tap of
+/// every output is one multiply-add; taps that fall in the padding read
+/// zero but still count, keeping the ledger a function of the shape
+/// alone, exactly like the lowering's.
+pub fn conv2d_nchw_direct<T: SquareScalar>(
+    images: &[T],
+    batch: usize,
+    in_h: usize,
+    in_w: usize,
+    filters: &[T],
+    spec: &ConvSpec,
+) -> Result<(Vec<T>, OpCounts), LinalgError> {
+    let (out_h, out_w) = spec.output_shape(in_h, in_w)?;
+    if batch == 0 {
+        return Err(LinalgError::EmptyInput { what: "image batch" });
     }
-    if in_h == 0 || in_w == 0 {
-        return Err(LinalgError::EmptyInput { what: "input" });
+    if images.len() != batch * spec.image_len(in_h, in_w) {
+        return Err(LinalgError::ShapeMismatch {
+            what: "image batch buffer",
+            expected: (batch, spec.image_len(in_h, in_w)),
+            got: (1, images.len()),
+        });
     }
-    if in_h < kh || in_w < kw {
-        return Err(LinalgError::KernelLargerThanInput { kh, kw, in_h, in_w });
+    if filters.len() != spec.bank_len() {
+        return Err(LinalgError::ShapeMismatch {
+            what: "filter bank buffer",
+            expected: (spec.out_channels, spec.taps()),
+            got: (1, filters.len()),
+        });
     }
-    Ok((in_h - kh + 1, in_w - kw + 1))
+    let taps = spec.taps();
+    let plane = in_h * in_w;
+    let k_out = out_h * out_w;
+    let mut out = vec![T::default(); batch * spec.out_channels * k_out];
+    for b in 0..batch {
+        let img = &images[b * spec.in_channels * plane..][..spec.in_channels * plane];
+        for f in 0..spec.out_channels {
+            let ker = &filters[f * taps..][..taps];
+            let dst = &mut out[(b * spec.out_channels + f) * k_out..][..k_out];
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    let mut acc = T::default();
+                    for c in 0..spec.in_channels {
+                        let chan = &img[c * plane..][..plane];
+                        for i in 0..spec.kernel_h {
+                            for j in 0..spec.kernel_w {
+                                let ih = oh * spec.stride_h + i * spec.dilation_h;
+                                let iw = ow * spec.stride_w + j * spec.dilation_w;
+                                let x = if ih < spec.pad_h
+                                    || iw < spec.pad_w
+                                    || ih - spec.pad_h >= in_h
+                                    || iw - spec.pad_w >= in_w
+                                {
+                                    T::default()
+                                } else {
+                                    chan[(ih - spec.pad_h) * in_w + (iw - spec.pad_w)]
+                                };
+                                acc += ker[(c * spec.kernel_h + i) * spec.kernel_w + j] * x;
+                            }
+                        }
+                    }
+                    dst[oh * out_w + ow] = acc;
+                }
+            }
+        }
+    }
+    let total = (batch * spec.out_channels * k_out * taps) as u64;
+    Ok((out, OpCounts { mults: total, adds: total, ..OpCounts::ZERO }))
 }
 
 /// Direct 1-D correlation (eq. 10): y_k = Σ_i w_i·x_{i+k}.
@@ -367,15 +441,19 @@ mod tests {
         let ker = Matrix::<i64>::zeros(5, 5);
         let img = Matrix::<i64>::zeros(3, 8);
         // kernel taller than the input: previously a panic (and, without
-        // the assert, a usize underflow in out_h = x.rows - kh + 1)
-        assert_eq!(
-            conv2d_direct(&ker, &img).unwrap_err(),
-            LinalgError::KernelLargerThanInput { kh: 5, kw: 5, in_h: 3, in_w: 8 }
-        );
-        assert_eq!(
-            conv2d_square(&ker, &img).unwrap_err(),
-            LinalgError::KernelLargerThanInput { kh: 5, kw: 5, in_h: 3, in_w: 8 }
-        );
+        // the assert, a usize underflow in out_h = x.rows - kh + 1); the
+        // typed error now carries the (default) stride/pad/dilation too
+        let want_err = LinalgError::KernelDoesNotFit {
+            kh: 5,
+            kw: 5,
+            in_h: 3,
+            in_w: 8,
+            stride: (1, 1),
+            pad: (0, 0),
+            dilation: (1, 1),
+        };
+        assert_eq!(conv2d_direct(&ker, &img).unwrap_err(), want_err);
+        assert_eq!(conv2d_square(&ker, &img).unwrap_err(), want_err);
         // empty input
         let empty = Matrix::<i64>::zeros(0, 4);
         let one = Matrix::<i64>::zeros(1, 1);
@@ -404,6 +482,88 @@ mod tests {
         let (_, s) = conv2d_square(&ker, &x).unwrap();
         assert_eq!(d.mults, 9 * 8 * 8);
         assert_eq!(s.squares, 9 * 8 * 8 + 100 + 9); // window + shared x² + Sw
+    }
+
+    #[test]
+    fn nchw_direct_single_channel_defaults_equal_conv2d_direct() {
+        let mut rng = Rng::new(27);
+        let (kh, kw, h, w) = (3usize, 2usize, 7usize, 9usize);
+        let ker = Matrix::random(&mut rng, kh, kw, -60, 60);
+        let img = Matrix::random(&mut rng, h, w, -60, 60);
+        let spec = ConvSpec::new(1, 1, kh, kw);
+        let (got, ops) =
+            conv2d_nchw_direct(img.data(), 1, h, w, ker.data(), &spec).unwrap();
+        let (want, want_ops) = conv2d_direct(&ker, &img).unwrap();
+        assert_eq!(got, want.data());
+        assert_eq!(ops, want_ops, "C=1 stride-1 pad-0 ledger must match");
+    }
+
+    #[test]
+    fn nchw_direct_multi_channel_sums_per_channel_valid_convs() {
+        // with stride 1 / pad 0, an NCHW conv is the per-channel valid
+        // conv summed over channels — cross-check against conv2d_direct
+        let mut rng = Rng::new(28);
+        let spec = ConvSpec::new(3, 2, 2, 3);
+        let (h, w) = (6usize, 8usize);
+        let images = rng.vec_i64(spec.image_len(h, w), -40, 40);
+        let filters = rng.vec_i64(spec.bank_len(), -40, 40);
+        let (got, ops) = conv2d_nchw_direct(&images, 1, h, w, &filters, &spec).unwrap();
+        let (out_h, out_w) = spec.output_shape(h, w).unwrap();
+        let k_out = out_h * out_w;
+        let plane = h * w;
+        let khw = spec.kernel_h * spec.kernel_w;
+        for f in 0..spec.out_channels {
+            let mut want = Matrix::zeros(out_h, out_w);
+            for c in 0..spec.in_channels {
+                let ker = Matrix::from_vec(
+                    spec.kernel_h,
+                    spec.kernel_w,
+                    filters[(f * spec.in_channels + c) * khw..][..khw].to_vec(),
+                );
+                let img =
+                    Matrix::from_vec(h, w, images[c * plane..][..plane].to_vec());
+                let (part, _) = conv2d_direct(&ker, &img).unwrap();
+                for (acc, &v) in want.data_mut().iter_mut().zip(part.data()) {
+                    *acc += v;
+                }
+            }
+            assert_eq!(&got[f * k_out..(f + 1) * k_out], want.data(), "filter {f}");
+        }
+        // ledger: one multiply-add per tap per output
+        let taps = (spec.taps() * spec.out_channels * k_out) as u64;
+        assert_eq!(ops.mults, taps);
+        assert_eq!(ops.adds, taps);
+    }
+
+    #[test]
+    fn nchw_direct_padding_ring_is_zero_extended() {
+        // a 1×1 input with pad 1 under a 3×3 kernel sees the sample once,
+        // at the kernel centre — everything else reads padding zeros
+        let spec = ConvSpec::new(1, 1, 3, 3).with_padding(1);
+        let (got, _) = conv2d_nchw_direct(&[5i64], 1, 1, 1, &[1, 2, 3, 4, 7, 6, 8, 9, 10], &spec)
+            .unwrap();
+        assert_eq!(got, vec![5 * 7]);
+    }
+
+    #[test]
+    fn nchw_direct_rejects_malformed_buffers() {
+        let spec = ConvSpec::new(2, 1, 2, 2);
+        assert_eq!(
+            conv2d_nchw_direct(&[0i64; 8], 0, 2, 2, &[0; 8], &spec).unwrap_err(),
+            LinalgError::EmptyInput { what: "image batch" }
+        );
+        assert!(matches!(
+            conv2d_nchw_direct(&[0i64; 7], 1, 2, 2, &[0; 8], &spec).unwrap_err(),
+            LinalgError::ShapeMismatch { what: "image batch buffer", .. }
+        ));
+        assert!(matches!(
+            conv2d_nchw_direct(&[0i64; 8], 1, 2, 2, &[0; 7], &spec).unwrap_err(),
+            LinalgError::ShapeMismatch { what: "filter bank buffer", .. }
+        ));
+        assert!(matches!(
+            conv2d_nchw_direct(&[0i64; 2], 1, 1, 1, &[0; 8], &spec).unwrap_err(),
+            LinalgError::KernelDoesNotFit { stride: (1, 1), pad: (0, 0), .. }
+        ));
     }
 
     fn rand_cvec(rng: &mut Rng, n: usize, lim: i64) -> Vec<Complex<i64>> {

@@ -10,6 +10,7 @@
 
 use super::super::counts::OpCounts;
 use super::super::matrix::Matrix;
+use super::workspace::EngineWorkspace;
 use super::{kernels, threaded, SquareScalar};
 
 /// Tiling / parallelism knobs for the engine.
@@ -55,6 +56,23 @@ pub fn row_corrections_flat<T: SquareScalar>(a: &Matrix<T>) -> Vec<T> {
             -acc
         })
         .collect()
+}
+
+/// Row corrections written into a caller-provided buffer — the workspace
+/// path of [`row_corrections_flat`]: same values, zero allocations.
+pub fn row_corrections_into<T: SquareScalar>(a: &Matrix<T>, sa: &mut [T]) {
+    assert_eq!(
+        sa.len(),
+        a.rows,
+        "row_corrections_into: buffer must hold one correction per row"
+    );
+    for (i, out) in sa.iter_mut().enumerate() {
+        let mut acc = T::default();
+        for &v in a.row(i) {
+            acc += v * v;
+        }
+        *out = -acc;
+    }
 }
 
 /// Column corrections `Sb_j = −Σ_k b_kj²`, accumulated row-sweep so the
@@ -179,6 +197,33 @@ pub fn effective_threads(cfg_threads: usize, m: usize, n: usize, p: usize) -> us
         .min(work / MIN_WORK_PER_THREAD + 1)
 }
 
+/// Compute-only core writing into a caller-provided buffer (any prior
+/// contents — the correction seeding overwrites every element): the
+/// workspace path, shared by [`matmul_square_core`] and the lowering's
+/// allocation-free entry points.
+pub(crate) fn matmul_square_core_into<T: SquareScalar>(
+    c_data: &mut [T],
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    sa: &[T],
+    sb: &[T],
+    cfg: &EngineConfig,
+) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let (m, p) = (a.rows, b.cols);
+    assert_eq!(c_data.len(), m * p, "output buffer shape mismatch");
+    debug_assert_eq!(sa.len(), m);
+    debug_assert_eq!(sb.len(), p);
+    let threads = effective_threads(cfg.threads, m, a.cols, p);
+    if threads <= 1 {
+        block_rows_into(c_data, 0, m, a, b, sa, sb, cfg);
+    } else {
+        threaded::for_row_chunks(c_data, m, p, threads, |i0, i1, chunk| {
+            block_rows_into(chunk, i0, i1, a, b, sa, sb, cfg);
+        });
+    }
+}
+
 /// Compute-only core shared by every public entry point (and by the
 /// reference stack in `linalg::matmul`): corrections are supplied by the
 /// caller, the ledger is the caller's business.
@@ -189,19 +234,8 @@ pub(crate) fn matmul_square_core<T: SquareScalar>(
     sb: &[T],
     cfg: &EngineConfig,
 ) -> Matrix<T> {
-    assert_eq!(a.cols, b.rows, "contraction mismatch");
-    debug_assert_eq!(sa.len(), a.rows);
-    debug_assert_eq!(sb.len(), b.cols);
-    let (m, p) = (a.rows, b.cols);
-    let mut c = Matrix::zeros(m, p);
-    let threads = effective_threads(cfg.threads, m, a.cols, p);
-    if threads <= 1 {
-        block_rows_into(c.data_mut(), 0, m, a, b, sa, sb, cfg);
-    } else {
-        threaded::for_row_chunks(c.data_mut(), m, p, threads, |i0, i1, chunk| {
-            block_rows_into(chunk, i0, i1, a, b, sa, sb, cfg);
-        });
-    }
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_square_core_into(c.data_mut(), a, b, sa, sb, cfg);
     c
 }
 
@@ -281,6 +315,35 @@ pub fn matmul_square_prepared<T: SquareScalar>(
     let sa = row_corrections_flat(a);
     let c = matmul_square_core(a, &pb.b, &sa, &pb.sb, cfg);
     (c, square_matmul_const_b_ledger(a.rows, a.cols, pb.b.cols))
+}
+
+/// [`matmul_square_prepared`] with every intermediate drawn from reusable
+/// buffers — the serving steady state: the activation corrections come
+/// from a workspace checkout and the output lands in `c_out` (cleared and
+/// resized to `M·P`), so once the buffers are warm the call performs
+/// **zero** heap allocations with `cfg.threads == 1` (the scoped threaded
+/// driver allocates per spawn by construction). Same values, same
+/// hoisted ledger as the allocating form.
+pub fn matmul_square_prepared_into<T: SquareScalar>(
+    a: &Matrix<T>,
+    pb: &PreparedB<T>,
+    cfg: &EngineConfig,
+    ws: &mut EngineWorkspace<T>,
+    c_out: &mut Vec<T>,
+) -> OpCounts {
+    assert_eq!(a.cols, pb.b.rows, "contraction mismatch");
+    let (m, p) = (a.rows, pb.b.cols);
+    let mut sa = ws.checkout(m);
+    row_corrections_into(a, &mut sa);
+    // no zero-fill when the buffer is already the right length: the
+    // core's correction seeding overwrites every element anyway
+    if c_out.len() != m * p {
+        c_out.clear();
+        c_out.resize(m * p, T::default());
+    }
+    matmul_square_core_into(c_out, a, &pb.b, &sa, &pb.sb, cfg);
+    ws.give_back(sa);
+    square_matmul_const_b_ledger(m, a.cols, p)
 }
 
 /// Direct `C = AB` in the same blocked row-sliced form — the multiplier
@@ -453,6 +516,27 @@ mod tests {
         let (got, ops) = matmul_direct_blocked(&a, &b, &tiny_cfg(3));
         assert_eq!(got, want);
         assert_eq!(ops, want_ops);
+    }
+
+    #[test]
+    fn prepared_into_matches_allocating_form() {
+        let mut rng = Rng::new(0x17E0);
+        let a = Matrix::random(&mut rng, 9, 7, -60, 60);
+        let b = Matrix::random(&mut rng, 7, 5, -60, 60);
+        let (pb, _) = PreparedB::new(b);
+        let (want, want_ops) = matmul_square_prepared(&a, &pb, &tiny_cfg(1));
+        let mut ws = EngineWorkspace::new();
+        let mut c = Vec::new();
+        for round in 0..3 {
+            let ops = matmul_square_prepared_into(&a, &pb, &tiny_cfg(1), &mut ws, &mut c);
+            assert_eq!(c, want.data(), "round {round}");
+            assert_eq!(ops, want_ops);
+        }
+        assert_eq!(ws.grows(), 1, "only the warm-up checkout may allocate");
+
+        let mut sa = vec![0i64; a.rows];
+        row_corrections_into(&a, &mut sa);
+        assert_eq!(sa, row_corrections_flat(&a));
     }
 
     #[test]

@@ -1,23 +1,34 @@
-//! Blocked 2-D convolution: im2col lowering onto the square-matmul core.
+//! Blocked 2-D convolution: the generalized im2col lowering onto the
+//! square-matmul core.
 //!
 //! The reference [`conv2d_square`](crate::linalg::conv::conv2d_square)
 //! makes the paper's §5 op-count claims auditable one filter at a time;
 //! this module makes convolution *fast in software* the way the tiled
 //! hardware papers lower it: extract the patch matrix once
-//! ([`im2col`](super::im2col)), then run one cache-blocked, threaded
-//! square matmul against the whole filter bank.
+//! ([`im2col_nchw`]), then run one cache-blocked, threaded square matmul
+//! against the whole filter bank. Any [`ConvSpec`] geometry lowers the
+//! same way — multi-channel NCHW, stride, zero-padding and dilation are
+//! all absorbed by the extraction, so the matmul core never knows they
+//! exist: the lowering is always a `(K, T, F)` square product with
+//! `K = batch·out_h·out_w` output pixels, `T = C·kh·kw` taps and `F`
+//! filters.
 //!
 //! [`PreparedConvBank`] is the §3 constant-matrix case for CNNs: a fixed
 //! filter bank's column corrections `Sb_f = −Σ_t b_tf²` are computed once
 //! per model ([`PreparedB`]) and amortised across every image, every
 //! filter and — via `new_shared` — every worker of a serving pool.
+//! [`PreparedConvBank::apply_batch_ws`] is the steady-state serving form:
+//! the patch matrix, GEMM output, row corrections and scattered serving
+//! buffer are all [`EngineWorkspace`] checkouts, so a warmed batch
+//! performs zero heap allocations (single-threaded engine config).
 //!
 //! Ledgers are hoisted and shape-deterministic: the lowering *is* a
-//! `(K, T, F)` square matmul (`K = out_h·out_w` output pixels,
-//! `T = kh·kw` taps, `F` filters), so its ledger is exactly
+//! `(K, T, F)` square matmul, so its ledger is exactly
 //! [`square_matmul_ledger`]`(K, T, F)` (one-shot) or
 //! [`square_matmul_const_b_ledger`]`(K, T, F)` (prepared bank), asserted
-//! equal to per-element counting by the tests below.
+//! equal to per-element counting by the tests below — padding zeros flow
+//! through the same window squares as real samples, keeping the ledger a
+//! function of the shape alone.
 
 use std::sync::Arc;
 
@@ -26,10 +37,15 @@ use super::super::counts::OpCounts;
 use super::super::matrix::Matrix;
 use super::super::LinalgError;
 use super::blocked::{
-    matmul_square_blocked, matmul_square_prepared, square_matmul_const_b_ledger,
-    square_matmul_ledger, EngineConfig, PreparedB,
+    matmul_square_blocked, matmul_square_prepared, matmul_square_prepared_into,
+    square_matmul_const_b_ledger, square_matmul_ledger, EngineConfig, PreparedB,
 };
-use super::im2col::{bank_matrix, im2col, im2col_stacked, scatter_bank_output};
+use super::im2col::{
+    bank_matrix, im2col, im2col_nchw, im2col_nchw_into, nchw_bank_matrix,
+    scatter_bank_output, scatter_bank_output_into,
+};
+use super::spec::ConvSpec;
+use super::workspace::EngineWorkspace;
 use super::SquareScalar;
 
 /// Blocked (and, with `cfg.threads > 1`, threaded) square-based 2-D valid
@@ -51,19 +67,22 @@ pub fn conv2d_square_blocked<T: SquareScalar>(
 }
 
 /// A constant CNN filter bank, lowered and prepared once: the flattened
-/// `(kh·kw) × filters` weight matrix with its column corrections cached
-/// ([`PreparedB`]). Build per model, reuse for every image — and share
-/// across a worker pool via [`PreparedConvBank::new_shared`].
+/// `(C·kh·kw) × filters` weight matrix with its column corrections cached
+/// ([`PreparedB`]) and the full [`ConvSpec`] geometry it was built for.
+/// Build per model, reuse for every image — and share across a worker
+/// pool via [`PreparedConvBank::new_shared`] /
+/// [`PreparedConvBank::new_nchw_shared`].
 #[derive(Debug, Clone)]
 pub struct PreparedConvBank<T> {
-    kh: usize,
-    kw: usize,
+    spec: ConvSpec,
     pb: PreparedB<T>,
 }
 
 impl<T: SquareScalar> PreparedConvBank<T> {
-    /// Validate and prepare a filter bank. The returned ledger is the
-    /// one-time preparation cost: `T·F` correction squares (§3).
+    /// Validate and prepare a single-channel stride-1 unpadded bank from
+    /// per-filter kernel matrices — the PR 3 constructor, now a special
+    /// case of [`Self::new_nchw`]. The returned ledger is the one-time
+    /// preparation cost: `T·F` correction squares (§3).
     pub fn new(filters: &[Matrix<T>]) -> Result<(Self, OpCounts), LinalgError> {
         if filters.is_empty() {
             return Err(LinalgError::EmptyInput { what: "filter bank" });
@@ -81,8 +100,27 @@ impl<T: SquareScalar> PreparedConvBank<T> {
                 });
             }
         }
+        let spec = ConvSpec::new(1, filters.len(), kh, kw);
         let (pb, prep_ops) = PreparedB::new(bank_matrix(filters));
-        Ok((Self { kh, kw, pb }, prep_ops))
+        Ok((Self { spec, pb }, prep_ops))
+    }
+
+    /// Validate and prepare a generalized NCHW bank: `filters_flat` is
+    /// the `[filter][channel][kh][kw]` buffer of `spec.bank_len()`
+    /// values, `spec` carries channels/stride/padding/dilation. The
+    /// returned ledger is the one-time §3 cost: `T·F = C·kh·kw·F`
+    /// correction squares.
+    pub fn new_nchw(filters_flat: &[T], spec: ConvSpec) -> Result<(Self, OpCounts), LinalgError> {
+        spec.validate()?;
+        if filters_flat.len() != spec.bank_len() {
+            return Err(LinalgError::ShapeMismatch {
+                what: "filter bank buffer",
+                expected: (spec.out_channels, spec.taps()),
+                got: (1, filters_flat.len()),
+            });
+        }
+        let (pb, prep_ops) = PreparedB::new(nchw_bank_matrix(filters_flat, &spec));
+        Ok((Self { spec, pb }, prep_ops))
     }
 
     /// Prepare and wrap for sharing across a serving pool: the bank's
@@ -93,59 +131,86 @@ impl<T: SquareScalar> PreparedConvBank<T> {
         Ok((Arc::new(bank), ops))
     }
 
+    /// [`Self::new_nchw`], wrapped for a pool.
+    pub fn new_nchw_shared(
+        filters_flat: &[T],
+        spec: ConvSpec,
+    ) -> Result<(Arc<Self>, OpCounts), LinalgError> {
+        let (bank, ops) = Self::new_nchw(filters_flat, spec)?;
+        Ok((Arc::new(bank), ops))
+    }
+
+    /// The full geometry this bank was prepared for.
+    pub fn spec(&self) -> &ConvSpec {
+        &self.spec
+    }
+
     pub fn kernel_h(&self) -> usize {
-        self.kh
+        self.spec.kernel_h
     }
 
     pub fn kernel_w(&self) -> usize {
-        self.kw
+        self.spec.kernel_w
     }
 
-    /// Taps per kernel (`kh·kw` — the contraction dimension).
+    /// Input planes per image (the C of NCHW).
+    pub fn in_channels(&self) -> usize {
+        self.spec.in_channels
+    }
+
+    /// Taps per output pixel (`C·kh·kw` — the contraction dimension).
     pub fn taps(&self) -> usize {
-        self.kh * self.kw
+        self.spec.taps()
     }
 
     pub fn filters(&self) -> usize {
         self.pb.out_features()
     }
 
-    /// The lowered `(kh·kw) × filters` weight matrix (for direct-twin
+    /// The lowered `(C·kh·kw) × filters` weight matrix (for direct-twin
     /// shadow executors that want the exact same weights).
     pub fn matrix(&self) -> &Matrix<T> {
         self.pb.matrix()
     }
 
-    /// Validated output map shape for an `in_h×in_w` input.
+    /// Validated output map shape for an `in_h×in_w` (per-channel) input.
     pub fn output_shape(&self, in_h: usize, in_w: usize) -> Result<(usize, usize), LinalgError> {
-        conv2d_output_shape(self.kh, self.kw, in_h, in_w)
+        self.spec.output_shape(in_h, in_w)
     }
 
-    /// Convolve the whole bank over one image: one `(K, T, F)` square
-    /// matmul against the prepared weights, split back into one
-    /// `out_h×out_w` map per filter. The per-call ledger drops the `T·F`
-    /// correction squares [`Self::new`] already paid.
+    /// Convolve the whole bank over one single-plane image: one
+    /// `(K, T, F)` square matmul against the prepared weights, split back
+    /// into one `out_h×out_w` map per filter. Convenience for
+    /// single-channel banks (multi-channel banks take NCHW batches
+    /// through [`Self::apply_batch`]). The per-call ledger drops the
+    /// `T·F` correction squares [`Self::new`] already paid.
     pub fn apply(
         &self,
         x: &Matrix<T>,
         cfg: &EngineConfig,
     ) -> Result<(Vec<Matrix<T>>, OpCounts), LinalgError> {
+        if self.spec.in_channels != 1 {
+            return Err(LinalgError::ShapeMismatch {
+                what: "apply() image planes (multi-channel banks take NCHW batches)",
+                expected: (1, 1),
+                got: (self.spec.in_channels, 1),
+            });
+        }
         let (out_h, out_w) = self.output_shape(x.rows, x.cols)?;
-        let a = im2col(x, self.kh, self.kw);
-        let (c, ops) = matmul_square_prepared(&a, &self.pb, cfg);
-        debug_assert_eq!(
-            ops,
-            square_matmul_const_b_ledger(out_h * out_w, self.taps(), self.filters())
-        );
+        let (flat, ops) = self.apply_batch(x.data(), 1, x.rows, x.cols, cfg)?;
+        let k_out = out_h * out_w;
         let maps = (0..self.filters())
-            .map(|f| Matrix::from_fn(out_h, out_w, |i, j| c.get(i * out_w + j, f)))
+            .map(|f| {
+                Matrix::from_vec(out_h, out_w, flat[f * k_out..(f + 1) * k_out].to_vec())
+            })
             .collect();
         Ok((maps, ops))
     }
 
-    /// Convolve the bank over a batch of flattened images (the serving
-    /// path): one tall stacked im2col, one `(B·K, T, F)` square matmul,
-    /// outputs scattered to `[image][filter][out_pixel]` order. The row
+    /// Convolve the bank over a batch of flattened NCHW images (the
+    /// serving path): one tall stacked im2col honouring the spec's
+    /// stride/padding/dilation, one `(B·K, T, F)` square matmul, outputs
+    /// scattered to `[image][filter][out_pixel]` order. The row
     /// partitioned threaded driver splits the `B·K` patch rows across
     /// workers, so batching widens the parallel section.
     pub fn apply_batch(
@@ -174,27 +239,79 @@ impl<T: SquareScalar> PreparedConvBank<T> {
         in_w: usize,
         matmul: impl FnOnce(&Matrix<T>) -> (Matrix<T>, OpCounts),
     ) -> Result<(Vec<T>, OpCounts), LinalgError> {
-        let (out_h, out_w) = self.output_shape(in_h, in_w)?;
+        let (out_h, out_w) = self.check_batch(images_flat, batch, in_h, in_w)?;
+        let k_out = out_h * out_w;
+        let a = im2col_nchw(images_flat, batch, in_h, in_w, &self.spec);
+        let (c, ops) = matmul(&a);
+        Ok((scatter_bank_output(&c, batch, k_out, self.filters()), ops))
+    }
+
+    /// [`Self::apply_batch`] with every intermediate drawn from an
+    /// [`EngineWorkspace`]: the patch matrix, the GEMM output, the row
+    /// corrections and the scattered output all reuse checked-out
+    /// buffers, so a warmed steady state performs **zero** heap
+    /// allocations per batch with `cfg.threads == 1` (the scoped threaded
+    /// driver allocates per spawn — the threaded path trades the
+    /// guarantee for parallelism). `out` is cleared and refilled with the
+    /// same `[image][filter][out_pixel]` layout; values and ledger are
+    /// identical to the allocating form.
+    pub fn apply_batch_ws(
+        &self,
+        images_flat: &[T],
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        cfg: &EngineConfig,
+        ws: &mut EngineWorkspace<T>,
+        out: &mut Vec<T>,
+    ) -> Result<OpCounts, LinalgError> {
+        let (out_h, out_w) = self.check_batch(images_flat, batch, in_h, in_w)?;
+        let k_out = out_h * out_w;
+        let taps = self.taps();
+        let rows = batch * k_out;
+
+        let mut patch = ws.checkout(rows * taps);
+        im2col_nchw_into(&mut patch, images_flat, batch, in_h, in_w, &self.spec);
+        let a = Matrix::from_vec(rows, taps, patch);
+
+        let mut c = ws.checkout(rows * self.filters());
+        let ops = matmul_square_prepared_into(&a, &self.pb, cfg, ws, &mut c);
+        debug_assert_eq!(ops, square_matmul_const_b_ledger(rows, taps, self.filters()));
+
+        scatter_bank_output_into(&c, batch, k_out, self.filters(), out);
+        ws.give_back(a.into_data());
+        ws.give_back(c);
+        Ok(ops)
+    }
+
+    /// The shared batch-contract check: validated output shape, non-empty
+    /// batch, buffer length `batch · C·in_h·in_w`.
+    fn check_batch(
+        &self,
+        images_flat: &[T],
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+    ) -> Result<(usize, usize), LinalgError> {
+        let shape = self.output_shape(in_h, in_w)?;
         if batch == 0 {
             return Err(LinalgError::EmptyInput { what: "image batch" });
         }
-        if images_flat.len() != batch * in_h * in_w {
+        let img_len = self.spec.image_len(in_h, in_w);
+        if images_flat.len() != batch * img_len {
             return Err(LinalgError::ShapeMismatch {
                 what: "image batch buffer",
-                expected: (batch, in_h * in_w),
+                expected: (batch, img_len),
                 got: (1, images_flat.len()),
             });
         }
-        let k_out = out_h * out_w;
-        let a = im2col_stacked(images_flat, batch, in_h, in_w, self.kh, self.kw);
-        let (c, ops) = matmul(&a);
-        Ok((scatter_bank_output(&c, batch, k_out, self.filters()), ops))
+        Ok(shape)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::super::conv::{conv2d_direct, conv2d_square};
+    use super::super::super::conv::{conv2d_direct, conv2d_nchw_direct, conv2d_square};
     use super::*;
     use crate::testkit::{forall, Rng};
 
@@ -279,6 +396,8 @@ mod tests {
         assert_eq!(prep_ops.squares, 9 * 5);
         assert_eq!(bank.filters(), 5);
         assert_eq!(bank.taps(), 9);
+        assert_eq!(bank.in_channels(), 1);
+        assert_eq!(*bank.spec(), ConvSpec::new(1, 5, 3, 3));
 
         let (maps, call_ops) = bank.apply(&img, &tiny_cfg(2)).unwrap();
         assert_eq!(maps.len(), 5);
@@ -347,6 +466,84 @@ mod tests {
     }
 
     #[test]
+    fn nchw_bank_matches_direct_reference_across_geometries() {
+        forall(
+            0xC07,
+            30,
+            |rng, size| {
+                let in_ch = rng.usize_in(1, 3);
+                let filters_n = rng.usize_in(1, 4);
+                let k = rng.usize_in(1, size.max(1).min(3));
+                let spec = ConvSpec::new(in_ch, filters_n, k, k)
+                    .with_stride(rng.usize_in(1, 3))
+                    .with_padding(rng.usize_in(0, 2));
+                let in_h = k + rng.usize_in(0, 7);
+                let in_w = k + rng.usize_in(0, 7);
+                let batch = rng.usize_in(1, 3);
+                let images = rng.vec_i64(batch * spec.image_len(in_h, in_w), -60, 60);
+                let filters = rng.vec_i64(spec.bank_len(), -60, 60);
+                (spec, in_h, in_w, batch, images, filters)
+            },
+            |(spec, in_h, in_w, batch, images, filters)| {
+                let (want, _) =
+                    conv2d_nchw_direct(images, *batch, *in_h, *in_w, filters, spec).unwrap();
+                let (bank, prep) = PreparedConvBank::new_nchw(filters, *spec).unwrap();
+                if prep.squares != (spec.taps() * spec.out_channels) as u64 {
+                    return Err("NCHW bank prep ledger wrong".into());
+                }
+                let k = *batch * spec.output_pixels(*in_h, *in_w).unwrap();
+                let mut runs = Vec::new();
+                for threads in [1usize, 4] {
+                    let (got, ops) = bank
+                        .apply_batch(images, *batch, *in_h, *in_w, &tiny_cfg(threads))
+                        .unwrap();
+                    if got != want {
+                        return Err(format!(
+                            "NCHW lowering diverged from direct reference at {spec:?} \
+                             {in_h}x{in_w} batch {batch} threads {threads}"
+                        ));
+                    }
+                    if ops != square_matmul_const_b_ledger(k, spec.taps(), spec.out_channels) {
+                        return Err("NCHW lowering ledger diverged from its formula".into());
+                    }
+                    runs.push((got, ops));
+                }
+                if runs[0] != runs[1] {
+                    return Err("threaded NCHW lowering not byte-identical".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn workspace_path_is_byte_identical_and_stops_allocating() {
+        let mut rng = Rng::new(0xC08);
+        let spec = ConvSpec::new(2, 4, 3, 3).with_stride(2).with_padding(1);
+        let (in_h, in_w, batch) = (11usize, 9usize, 3usize);
+        let filters = rng.vec_i64(spec.bank_len(), -40, 40);
+        let (bank, _) = PreparedConvBank::new_nchw(&filters, spec).unwrap();
+
+        let mut ws = EngineWorkspace::new();
+        let mut out = Vec::new();
+        for round in 0..4 {
+            let images = rng.vec_i64(batch * spec.image_len(in_h, in_w), -40, 40);
+            let (want, want_ops) = bank
+                .apply_batch(&images, batch, in_h, in_w, &tiny_cfg(1))
+                .unwrap();
+            let ops = bank
+                .apply_batch_ws(&images, batch, in_h, in_w, &tiny_cfg(1), &mut ws, &mut out)
+                .unwrap();
+            assert_eq!(out, want, "round {round}");
+            assert_eq!(ops, want_ops, "round {round}");
+        }
+        // three checkouts per batch (patch, GEMM output, row corrections):
+        // only the first round may touch the allocator
+        assert_eq!(ws.checkouts(), 12);
+        assert_eq!(ws.grows(), 3, "steady state must reuse retained buffers");
+    }
+
+    #[test]
     fn threaded_bank_is_byte_identical() {
         let mut rng = Rng::new(0xC06);
         let filters: Vec<Matrix<i64>> = (0..4)
@@ -366,7 +563,15 @@ mod tests {
         let img = Matrix::<i64>::zeros(3, 3);
         assert_eq!(
             conv2d_square_blocked(&ker, &img, &EngineConfig::default()).unwrap_err(),
-            LinalgError::KernelLargerThanInput { kh: 4, kw: 4, in_h: 3, in_w: 3 }
+            LinalgError::KernelDoesNotFit {
+                kh: 4,
+                kw: 4,
+                in_h: 3,
+                in_w: 3,
+                stride: (1, 1),
+                pad: (0, 0),
+                dilation: (1, 1),
+            }
         );
         assert_eq!(
             PreparedConvBank::<i64>::new(&[]).unwrap_err(),
@@ -382,7 +587,15 @@ mod tests {
         assert_eq!(
             bank.apply(&Matrix::zeros(2, 9), &EngineConfig::default())
                 .unwrap_err(),
-            LinalgError::KernelLargerThanInput { kh: 3, kw: 3, in_h: 2, in_w: 9 }
+            LinalgError::KernelDoesNotFit {
+                kh: 3,
+                kw: 3,
+                in_h: 2,
+                in_w: 9,
+                stride: (1, 1),
+                pad: (0, 0),
+                dilation: (1, 1),
+            }
         );
         // batch buffer size must match the declared geometry
         assert!(matches!(
@@ -395,5 +608,49 @@ mod tests {
                 .unwrap_err(),
             LinalgError::EmptyInput { what: "image batch" }
         );
+    }
+
+    #[test]
+    fn nchw_spec_errors_are_typed() {
+        // a misconfigured spec fails at construction with the full story
+        let spec = ConvSpec::new(0, 4, 3, 3);
+        assert_eq!(
+            PreparedConvBank::<i64>::new_nchw(&[], spec).unwrap_err(),
+            LinalgError::InvalidConvSpec { field: "in_channels" }
+        );
+        let spec = ConvSpec::new(2, 2, 3, 3).with_stride(2);
+        // wrong bank buffer length
+        assert!(matches!(
+            PreparedConvBank::<i64>::new_nchw(&[0; 7], spec).unwrap_err(),
+            LinalgError::ShapeMismatch { .. }
+        ));
+        let filters = vec![0i64; spec.bank_len()];
+        let (bank, _) = PreparedConvBank::new_nchw(&filters, spec).unwrap();
+        // stride/pad are reported when the kernel cannot be placed
+        assert_eq!(
+            bank.apply_batch(&[0i64; 2 * 2 * 2], 1, 2, 2, &EngineConfig::default())
+                .unwrap_err(),
+            LinalgError::KernelDoesNotFit {
+                kh: 3,
+                kw: 3,
+                in_h: 2,
+                in_w: 2,
+                stride: (2, 2),
+                pad: (0, 0),
+                dilation: (1, 1),
+            }
+        );
+        // a multi-channel bank refuses the single-plane apply()
+        assert!(matches!(
+            bank.apply(&Matrix::<i64>::zeros(8, 8), &EngineConfig::default())
+                .unwrap_err(),
+            LinalgError::ShapeMismatch { .. }
+        ));
+        // wrong batch buffer length for the channel count
+        assert!(matches!(
+            bank.apply_batch(&[0i64; 64], 1, 8, 8, &EngineConfig::default())
+                .unwrap_err(),
+            LinalgError::ShapeMismatch { .. }
+        ));
     }
 }

@@ -34,6 +34,7 @@
 //! `for_row_chunks`).
 
 use super::super::matrix::Matrix;
+use super::spec::ConvSpec;
 use super::SquareScalar;
 
 /// Unroll one image into its `(out_h·out_w) × (kh·kw)` patch matrix.
@@ -116,6 +117,106 @@ fn fill_patches<T: SquareScalar>(
     }
 }
 
+/// Fill the stacked NCHW patch matrix for `spec` into `rows`: the
+/// row-major storage of `(batch·out_h·out_w)` patch rows of
+/// `spec.taps() = C·kh·kw` taps each, channel-major within a row
+/// (`[c][i][j]` — the same order a flattened NCHW filter uses, so the
+/// bank columns line up). Stride, zero-padding and dilation are honoured:
+/// taps that fall in the padding are written as `T::default()`. Pure data
+/// movement into a caller-provided (typically workspace-checked-out)
+/// buffer — zero allocations. Geometry must have been validated by the
+/// caller; like the other extraction helpers this guards with real
+/// `assert!`s.
+pub fn im2col_nchw_into<T: SquareScalar>(
+    rows: &mut [T],
+    images_flat: &[T],
+    batch: usize,
+    in_h: usize,
+    in_w: usize,
+    spec: &ConvSpec,
+) {
+    let (out_h, out_w) = spec
+        .output_shape(in_h, in_w)
+        .expect("im2col_nchw_into: invalid conv geometry (callers validate)");
+    let taps = spec.taps();
+    let k_out = out_h * out_w;
+    let plane = in_h * in_w;
+    assert_eq!(
+        images_flat.len(),
+        batch * spec.in_channels * plane,
+        "im2col_nchw_into: buffer is not {batch} NCHW images of {}x{in_h}x{in_w}",
+        spec.in_channels
+    );
+    assert_eq!(
+        rows.len(),
+        batch * k_out * taps,
+        "im2col_nchw_into: patch buffer must hold {batch}*{k_out} rows of {taps} taps"
+    );
+    let khw = spec.kernel_h * spec.kernel_w;
+    for b in 0..batch {
+        let img = &images_flat[b * spec.in_channels * plane..][..spec.in_channels * plane];
+        let block = &mut rows[b * k_out * taps..][..k_out * taps];
+        for oh in 0..out_h {
+            for ow in 0..out_w {
+                let patch = &mut block[(oh * out_w + ow) * taps..][..taps];
+                for c in 0..spec.in_channels {
+                    let chan = &img[c * plane..][..plane];
+                    for i in 0..spec.kernel_h {
+                        let dst = &mut patch[c * khw + i * spec.kernel_w..][..spec.kernel_w];
+                        let ih = oh * spec.stride_h + i * spec.dilation_h;
+                        if ih < spec.pad_h || ih - spec.pad_h >= in_h {
+                            dst.fill(T::default()); // whole kernel row in padding
+                            continue;
+                        }
+                        let x_row = &chan[(ih - spec.pad_h) * in_w..][..in_w];
+                        for (j, v) in dst.iter_mut().enumerate() {
+                            let iw = ow * spec.stride_w + j * spec.dilation_w;
+                            *v = if iw < spec.pad_w || iw - spec.pad_w >= in_w {
+                                T::default()
+                            } else {
+                                x_row[iw - spec.pad_w]
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Allocating wrapper over [`im2col_nchw_into`]: unroll a batch of NCHW
+/// images into one tall `(batch·out_h·out_w) × (C·kh·kw)` patch matrix.
+/// The one-shot path; the serving path reuses a workspace buffer instead.
+pub fn im2col_nchw<T: SquareScalar>(
+    images_flat: &[T],
+    batch: usize,
+    in_h: usize,
+    in_w: usize,
+    spec: &ConvSpec,
+) -> Matrix<T> {
+    let (out_h, out_w) = spec
+        .output_shape(in_h, in_w)
+        .expect("im2col_nchw: invalid conv geometry (callers validate)");
+    let mut a = Matrix::zeros(batch * out_h * out_w, spec.taps());
+    im2col_nchw_into(a.data_mut(), images_flat, batch, in_h, in_w, spec);
+    a
+}
+
+/// Flatten an NCHW filter bank buffer (`[filter][channel][kh][kw]` order,
+/// `spec.bank_len()` values) into the `(C·kh·kw) × F` weight matrix `B`:
+/// column `f` is filter `f`'s taps in the same channel-major order the
+/// patch rows use. Caller validates the length; asserted here too.
+pub fn nchw_bank_matrix<T: SquareScalar>(filters_flat: &[T], spec: &ConvSpec) -> Matrix<T> {
+    let taps = spec.taps();
+    assert_eq!(
+        filters_flat.len(),
+        spec.out_channels * taps,
+        "nchw_bank_matrix: bank buffer must hold {} filters of {taps} taps",
+        spec.out_channels
+    );
+    Matrix::from_fn(taps, spec.out_channels, |t, f| filters_flat[f * taps + t])
+}
+
 /// Flatten a bank of same-shaped kernels into the `(kh·kw) × filters`
 /// weight matrix `B`: column `f` is kernel `f` in row-major order. Caller
 /// validates the bank (non-empty, uniform non-empty shapes).
@@ -145,16 +246,37 @@ pub fn scatter_bank_output<T: SquareScalar>(
         "scatter_bank_output: C rows must be batch*k_out"
     );
     assert_eq!(c.cols, filters, "scatter_bank_output: C cols must be the filter count");
-    let mut out = vec![T::default(); batch * filters * k_out];
+    let mut out = Vec::new();
+    scatter_bank_output_into(c.data(), batch, k_out, filters, &mut out);
+    out
+}
+
+/// [`scatter_bank_output`] into a reused buffer: `c_rows` is the
+/// row-major storage of the lowered `(batch·k_out) × filters` output and
+/// `out` is cleared + resized to `batch·filters·k_out` — zero allocations
+/// once warm. The workspace half of the serving layout.
+pub fn scatter_bank_output_into<T: SquareScalar>(
+    c_rows: &[T],
+    batch: usize,
+    k_out: usize,
+    filters: usize,
+    out: &mut Vec<T>,
+) {
+    assert_eq!(
+        c_rows.len(),
+        batch * k_out * filters,
+        "scatter_bank_output_into: C must be (batch*k_out) x filters"
+    );
+    out.clear();
+    out.resize(batch * filters * k_out, T::default());
     for b in 0..batch {
         for pix in 0..k_out {
-            let c_row = c.row(b * k_out + pix);
+            let c_row = &c_rows[(b * k_out + pix) * filters..][..filters];
             for (f, &v) in c_row.iter().enumerate() {
                 out[(b * filters + f) * k_out + pix] = v;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -208,6 +330,104 @@ mod tests {
                 assert_eq!(stacked.row(b * k_out + pix), single.row(pix), "image {b}");
             }
         }
+    }
+
+    #[test]
+    fn nchw_single_channel_defaults_equal_the_legacy_extraction() {
+        let mut rng = Rng::new(0x130);
+        let (in_h, in_w, kh, kw, batch) = (5usize, 6usize, 3usize, 2usize, 3usize);
+        let flat = rng.vec_i64(batch * in_h * in_w, -99, 99);
+        let legacy = im2col_stacked(&flat, batch, in_h, in_w, kh, kw);
+        let spec = ConvSpec::new(1, 1, kh, kw);
+        let nchw = im2col_nchw(&flat, batch, in_h, in_w, &spec);
+        assert_eq!(nchw, legacy, "C=1 stride-1 pad-0 NCHW must be the PR 3 layout");
+    }
+
+    #[test]
+    fn nchw_strided_padded_patches_match_manual_windows() {
+        let mut rng = Rng::new(0x131);
+        let spec = ConvSpec {
+            dilation_h: 2,
+            ..ConvSpec::new(2, 1, 2, 3).with_stride(2).with_padding(1)
+        };
+        let (in_h, in_w, batch) = (6usize, 7usize, 2usize);
+        let (out_h, out_w) = spec.output_shape(in_h, in_w).unwrap();
+        let flat = rng.vec_i64(batch * spec.image_len(in_h, in_w), -50, 50);
+        let a = im2col_nchw(&flat, batch, in_h, in_w, &spec);
+        assert_eq!((a.rows, a.cols), (batch * out_h * out_w, spec.taps()));
+        let plane = in_h * in_w;
+        for b in 0..batch {
+            for oh in 0..out_h {
+                for ow in 0..out_w {
+                    let row = a.row((b * out_h + oh) * out_w + ow);
+                    for c in 0..spec.in_channels {
+                        for i in 0..spec.kernel_h {
+                            for j in 0..spec.kernel_w {
+                                let ih = (oh * spec.stride_h + i * spec.dilation_h) as i64
+                                    - spec.pad_h as i64;
+                                let iw = (ow * spec.stride_w + j * spec.dilation_w) as i64
+                                    - spec.pad_w as i64;
+                                let want = if ih < 0
+                                    || iw < 0
+                                    || ih >= in_h as i64
+                                    || iw >= in_w as i64
+                                {
+                                    0
+                                } else {
+                                    flat[(b * spec.in_channels + c) * plane
+                                        + ih as usize * in_w
+                                        + iw as usize]
+                                };
+                                let tap = (c * spec.kernel_h + i) * spec.kernel_w + j;
+                                assert_eq!(
+                                    row[tap], want,
+                                    "b={b} oh={oh} ow={ow} c={c} i={i} j={j}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nchw_into_reuses_a_dirty_buffer() {
+        // workspace checkouts have unspecified contents, so the fill must
+        // fully define the output: every element written or explicitly
+        // zeroed — never inherited from the previous batch
+        let mut rng = Rng::new(0x132);
+        let spec = ConvSpec::new(2, 1, 3, 3).with_padding(2);
+        let (in_h, in_w) = (4usize, 4usize);
+        let flat = rng.vec_i64(spec.image_len(in_h, in_w), -30, 30);
+        let want = im2col_nchw(&flat, 1, in_h, in_w, &spec);
+        let mut dirty = vec![i64::MIN; want.rows * want.cols];
+        im2col_nchw_into(&mut dirty, &flat, 1, in_h, in_w, &spec);
+        assert_eq!(dirty, want.data());
+    }
+
+    #[test]
+    fn nchw_bank_matrix_columns_are_channel_major_filters() {
+        let mut rng = Rng::new(0x133);
+        let spec = ConvSpec::new(3, 4, 2, 2);
+        let flat = rng.vec_i64(spec.bank_len(), -20, 20);
+        let b = nchw_bank_matrix(&flat, &spec);
+        assert_eq!((b.rows, b.cols), (12, 4));
+        for f in 0..4 {
+            for t in 0..12 {
+                assert_eq!(b.get(t, f), flat[f * 12 + t]);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_into_matches_allocating_scatter() {
+        let (batch, k_out, filters) = (2usize, 4usize, 3usize);
+        let c = Matrix::from_fn(batch * k_out, filters, |r, f| (r * 100 + f) as i64);
+        let want = scatter_bank_output(&c, batch, k_out, filters);
+        let mut out = vec![0i64; 1]; // wrong size on purpose: must be resized
+        scatter_bank_output_into(c.data(), batch, k_out, filters, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

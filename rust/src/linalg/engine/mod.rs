@@ -21,13 +21,23 @@
 //!   contiguous chunks, one scoped thread per chunk, no locks because the
 //!   chunks are disjoint `&mut` slices.
 //!
-//! * [`im2col`]/[`conv`] — the convolution lowering: patch extraction plus
-//!   [`PreparedConvBank`], so a fixed CNN filter bank runs as one blocked
-//!   square matmul per image (or per batch) with its §3 corrections paid
-//!   once per model.
+//! * [`spec`]/[`im2col`]/[`conv`] — the generalized convolution
+//!   subsystem: [`ConvSpec`] names any NCHW multi-channel / strided /
+//!   padded / dilated geometry once and validates it once; the NCHW
+//!   patch extraction absorbs all of it, so every spec lowers to the
+//!   same `(K, C·kh·kw, F)` square matmul; [`PreparedConvBank`] pays a
+//!   fixed CNN filter bank's §3 corrections once per model (or pool).
+//! * [`workspace`] — [`EngineWorkspace`], the buffer arena behind the
+//!   allocation-free steady state: patch matrices, GEMM outputs,
+//!   corrections and CPM3 scratch planes are checked out per batch and
+//!   returned, so a warmed serving worker performs zero heap
+//!   allocations per batch (single-threaded engine config; the scoped
+//!   threaded driver allocates per spawn).
 //! * [`complex`] — the CPM3 lowering: plane-split complex matmul as three
 //!   blocked square passes ([`CPlanes`], [`PreparedCpm3`]), spending
-//!   exactly the §9 square budget.
+//!   exactly the §9 square budget — plus the 4-square CPM twin
+//!   ([`PreparedCpm`]) for the §6 comparison and the 1-D correlation
+//!   lowering ([`PreparedCpm3Conv1d`]).
 //!
 //! Ledgers are *hoisted*: an [`OpCounts`](super::OpCounts) is a
 //! deterministic function of the shape (asserted equal to per-element
@@ -44,21 +54,30 @@ pub mod complex;
 pub mod conv;
 pub mod im2col;
 pub mod kernels;
+pub mod spec;
 pub mod threaded;
+pub mod workspace;
 
 pub use blocked::{
     col_corrections_flat, effective_threads, matmul_direct_blocked,
     matmul_square_blocked, matmul_square_naive, matmul_square_prepared,
-    row_corrections_flat, square_matmul_const_b_ledger, square_matmul_ledger,
-    EngineConfig, PreparedB,
+    matmul_square_prepared_into, row_corrections_flat, row_corrections_into,
+    square_matmul_const_b_ledger, square_matmul_ledger, EngineConfig, PreparedB,
 };
 pub use complex::{
-    cmatmul_cpm3_blocked, cpm3_blocked_ledger, cpm3_prepared_ledger, plane_add,
-    plane_sub, CPlanes, PreparedCpm3,
+    cconv1d_cpm3_blocked, cmatmul_cpm3_blocked, cmatmul_cpm_blocked,
+    cpm3_blocked_ledger, cpm3_prepared_ledger, cpm_blocked_ledger,
+    cpm_prepared_ledger, plane_add, plane_sub, CPlanes, PreparedCpm,
+    PreparedCpm3, PreparedCpm3Conv1d,
 };
 pub use conv::{conv2d_square_blocked, PreparedConvBank};
-pub use im2col::{bank_matrix, im2col, im2col_stacked, scatter_bank_output};
+pub use im2col::{
+    bank_matrix, im2col, im2col_nchw, im2col_nchw_into, im2col_stacked,
+    nchw_bank_matrix, scatter_bank_output, scatter_bank_output_into,
+};
+pub use spec::ConvSpec;
 pub use threaded::max_threads;
+pub use workspace::EngineWorkspace;
 
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};
 

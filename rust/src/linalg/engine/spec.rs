@@ -1,0 +1,264 @@
+//! `ConvSpec` — the shape descriptor of the generalized convolution
+//! subsystem.
+//!
+//! PR 3's lowering handled exactly one convolution shape: single-channel,
+//! stride-1, zero-padding valid correlation. Real CNN serving traffic is
+//! NCHW — `in_channels` stacked planes per image, `out_channels` filters
+//! that each span *every* input channel — with stride and padding (and,
+//! on dilated architectures, dilation). `ConvSpec` names that whole
+//! family once, validates it once, and is the single source of the
+//! output-size arithmetic for the reference kernel
+//! ([`conv2d_nchw_direct`](crate::linalg::conv::conv2d_nchw_direct)), the
+//! im2col lowering ([`im2col_nchw`](super::im2col::im2col_nchw)), the
+//! prepared bank ([`PreparedConvBank`](super::conv::PreparedConvBank))
+//! and the serving executors — so none of them can disagree on geometry.
+//!
+//! A misconfigured spec fails with a typed [`LinalgError`] carrying the
+//! full stride/padding/dilation picture
+//! ([`LinalgError::KernelDoesNotFit`] /
+//! [`LinalgError::InvalidConvSpec`]), never a panic or a silent `usize`
+//! underflow in the output-size subtraction.
+
+use super::super::LinalgError;
+
+/// Shape descriptor for an NCHW 2-D convolution: channel counts, kernel
+/// size, stride, padding and dilation. `new` gives the PR 3 defaults
+/// (stride 1, no padding, no dilation); the `with_*` builders set the
+/// rest. Fields are public so asymmetric (h ≠ w) geometry can be spelled
+/// directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// input planes per image (the C of NCHW)
+    pub in_channels: usize,
+    /// filters in the bank — output planes per image
+    pub out_channels: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    /// zero-padding added to each side of the input, per axis
+    pub pad_h: usize,
+    pub pad_w: usize,
+    /// tap spacing; 1 = dense kernel (the subsystem is dilation-ready,
+    /// the serving CLI currently exposes stride/padding only)
+    pub dilation_h: usize,
+    pub dilation_w: usize,
+}
+
+impl ConvSpec {
+    /// A dense stride-1 unpadded spec — the PR 3 geometry, generalized
+    /// over channels.
+    pub fn new(
+        in_channels: usize,
+        out_channels: usize,
+        kernel_h: usize,
+        kernel_w: usize,
+    ) -> Self {
+        Self {
+            in_channels,
+            out_channels,
+            kernel_h,
+            kernel_w,
+            stride_h: 1,
+            stride_w: 1,
+            pad_h: 0,
+            pad_w: 0,
+            dilation_h: 1,
+            dilation_w: 1,
+        }
+    }
+
+    /// Uniform stride on both axes.
+    pub fn with_stride(mut self, stride: usize) -> Self {
+        self.stride_h = stride;
+        self.stride_w = stride;
+        self
+    }
+
+    /// Uniform zero-padding on both axes.
+    pub fn with_padding(mut self, pad: usize) -> Self {
+        self.pad_h = pad;
+        self.pad_w = pad;
+        self
+    }
+
+    /// Uniform dilation on both axes.
+    pub fn with_dilation(mut self, dilation: usize) -> Self {
+        self.dilation_h = dilation;
+        self.dilation_w = dilation;
+        self
+    }
+
+    /// Taps per output pixel (`C·kh·kw`) — the contraction dimension of
+    /// the `(K, T, F)` lowering.
+    pub fn taps(&self) -> usize {
+        self.in_channels * self.kernel_h * self.kernel_w
+    }
+
+    /// Values one NCHW image occupies on the wire (`C·in_h·in_w`).
+    pub fn image_len(&self, in_h: usize, in_w: usize) -> usize {
+        self.in_channels * in_h * in_w
+    }
+
+    /// Values the flattened `[filter][channel][kh][kw]` bank occupies
+    /// (`F·C·kh·kw`).
+    pub fn bank_len(&self) -> usize {
+        self.out_channels * self.taps()
+    }
+
+    /// Dilated kernel extent along one axis: `dilation·(k−1) + 1`.
+    fn extent(k: usize, dilation: usize) -> usize {
+        dilation * (k - 1) + 1
+    }
+
+    /// Structural validity: every count that must be positive is.
+    pub fn validate(&self) -> Result<(), LinalgError> {
+        if self.kernel_h == 0 || self.kernel_w == 0 {
+            return Err(LinalgError::EmptyInput { what: "kernel" });
+        }
+        if self.in_channels == 0 {
+            return Err(LinalgError::InvalidConvSpec { field: "in_channels" });
+        }
+        if self.out_channels == 0 {
+            return Err(LinalgError::InvalidConvSpec { field: "out_channels" });
+        }
+        if self.stride_h == 0 || self.stride_w == 0 {
+            return Err(LinalgError::InvalidConvSpec { field: "stride" });
+        }
+        if self.dilation_h == 0 || self.dilation_w == 0 {
+            return Err(LinalgError::InvalidConvSpec { field: "dilation" });
+        }
+        Ok(())
+    }
+
+    fn does_not_fit(&self, in_h: usize, in_w: usize) -> LinalgError {
+        LinalgError::KernelDoesNotFit {
+            kh: self.kernel_h,
+            kw: self.kernel_w,
+            in_h,
+            in_w,
+            stride: (self.stride_h, self.stride_w),
+            pad: (self.pad_h, self.pad_w),
+            dilation: (self.dilation_h, self.dilation_w),
+        }
+    }
+
+    /// Validated output map shape for an `in_h×in_w` (per-channel) input:
+    /// `out = (in + 2·pad − dilation·(k−1) − 1) / stride + 1` per axis.
+    /// The one place this arithmetic happens for the whole subsystem.
+    pub fn output_shape(&self, in_h: usize, in_w: usize) -> Result<(usize, usize), LinalgError> {
+        self.validate()?;
+        if in_h == 0 || in_w == 0 {
+            return Err(LinalgError::EmptyInput { what: "input" });
+        }
+        let eh = Self::extent(self.kernel_h, self.dilation_h);
+        let ew = Self::extent(self.kernel_w, self.dilation_w);
+        let padded_h = in_h + 2 * self.pad_h;
+        let padded_w = in_w + 2 * self.pad_w;
+        if padded_h < eh || padded_w < ew {
+            return Err(self.does_not_fit(in_h, in_w));
+        }
+        Ok((
+            (padded_h - eh) / self.stride_h + 1,
+            (padded_w - ew) / self.stride_w + 1,
+        ))
+    }
+
+    /// Output pixels per image (`out_h·out_w`), validated.
+    pub fn output_pixels(&self, in_h: usize, in_w: usize) -> Result<usize, LinalgError> {
+        self.output_shape(in_h, in_w).map(|(h, w)| h * w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_valid_mode_shapes() {
+        let spec = ConvSpec::new(1, 1, 3, 3);
+        assert_eq!(spec.output_shape(8, 10), Ok((6, 8)));
+        assert_eq!(spec.output_shape(3, 3), Ok((1, 1)));
+        assert_eq!(spec.taps(), 9);
+        assert_eq!(spec.image_len(8, 10), 80);
+        assert_eq!(spec.bank_len(), 9);
+    }
+
+    #[test]
+    fn stride_padding_dilation_shapes_match_hand_calc() {
+        // 3×3 stride 2, pad 1 over 28×28: (28 + 2 − 3)/2 + 1 = 14
+        let spec = ConvSpec::new(3, 8, 3, 3).with_stride(2).with_padding(1);
+        assert_eq!(spec.output_shape(28, 28), Ok((14, 14)));
+        assert_eq!(spec.taps(), 27);
+        assert_eq!(spec.bank_len(), 8 * 27);
+
+        // dilation 2 makes a 3-tap kernel span 5 samples
+        let spec = ConvSpec::new(1, 1, 3, 3).with_dilation(2);
+        assert_eq!(spec.output_shape(5, 5), Ok((1, 1)));
+        assert_eq!(spec.output_shape(7, 9), Ok((3, 5)));
+
+        // asymmetric geometry through the public fields
+        let spec = ConvSpec {
+            stride_h: 3,
+            pad_w: 2,
+            ..ConvSpec::new(2, 4, 2, 5)
+        };
+        // h: (9 − 2)/3 + 1 = 3; w: (6 + 4 − 5)/1 + 1 = 6
+        assert_eq!(spec.output_shape(9, 6), Ok((3, 6)));
+    }
+
+    #[test]
+    fn padding_can_rescue_an_otherwise_too_small_input() {
+        let unpadded = ConvSpec::new(1, 1, 5, 5);
+        assert!(unpadded.output_shape(3, 3).is_err());
+        let padded = ConvSpec::new(1, 1, 5, 5).with_padding(1);
+        assert_eq!(padded.output_shape(3, 3), Ok((1, 1)));
+    }
+
+    #[test]
+    fn errors_carry_the_full_geometry() {
+        let spec = ConvSpec::new(2, 4, 5, 5).with_stride(2).with_padding(1).with_dilation(2);
+        // dilated extent 9 > 3 + 2·1
+        assert_eq!(
+            spec.output_shape(3, 3),
+            Err(LinalgError::KernelDoesNotFit {
+                kh: 5,
+                kw: 5,
+                in_h: 3,
+                in_w: 3,
+                stride: (2, 2),
+                pad: (1, 1),
+                dilation: (2, 2),
+            })
+        );
+        let msg = spec.output_shape(3, 3).unwrap_err().to_string();
+        assert!(msg.contains("stride 2x2"), "{msg}");
+        assert!(msg.contains("padding 1x1"), "{msg}");
+        assert!(msg.contains("dilation 2x2"), "{msg}");
+
+        assert_eq!(
+            ConvSpec::new(0, 4, 3, 3).output_shape(8, 8),
+            Err(LinalgError::InvalidConvSpec { field: "in_channels" })
+        );
+        assert_eq!(
+            ConvSpec::new(1, 0, 3, 3).output_shape(8, 8),
+            Err(LinalgError::InvalidConvSpec { field: "out_channels" })
+        );
+        assert_eq!(
+            ConvSpec::new(1, 1, 3, 3).with_stride(0).output_shape(8, 8),
+            Err(LinalgError::InvalidConvSpec { field: "stride" })
+        );
+        assert_eq!(
+            ConvSpec::new(1, 1, 3, 3).with_dilation(0).output_shape(8, 8),
+            Err(LinalgError::InvalidConvSpec { field: "dilation" })
+        );
+        assert_eq!(
+            ConvSpec::new(1, 1, 0, 3).output_shape(8, 8),
+            Err(LinalgError::EmptyInput { what: "kernel" })
+        );
+        assert_eq!(
+            ConvSpec::new(1, 1, 3, 3).output_shape(0, 8),
+            Err(LinalgError::EmptyInput { what: "input" })
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Allocation-free workspace arenas for the lowering subsystem.
+//!
+//! Every serving batch through the PR 3 lowering re-allocated its scratch:
+//! the im2col patch matrix, the GEMM output, the row-correction vector,
+//! the CPM3 derived operand and pass planes — each a fresh `Vec` on the
+//! hot path, freed microseconds later. [`EngineWorkspace`] is the arena
+//! those buffers live in instead: callers *check out* a buffer of the
+//! length they need and *give it back* when done, and because a serving
+//! worker sees the same shapes batch after batch, every checkout after
+//! the first warm-up batch is served from retained capacity — the steady
+//! state performs **zero** heap allocations (single-threaded engine
+//! config; the `std::thread::scope` driver allocates per spawn by
+//! construction, so the threaded path trades that guarantee for
+//! parallelism).
+//!
+//! The arena is deliberately dumb: a free list of `Vec<T>`s matched
+//! best-fit by capacity. No keys, no lifetimes, no unsafe — a checked-out
+//! buffer is an owned `Vec<T>` (so it can be wrapped in a
+//! [`Matrix`](crate::linalg::Matrix) via `from_vec`/`into_data` without
+//! copying), and forgetting to give one back merely costs its reuse, not
+//! correctness. Each worker of a serving pool owns its own workspace
+//! (`EngineWorkspace` is `Send` — plain `Vec`s), so the pool stays
+//! `Send`-clean with no cross-worker locking.
+//!
+//! [`Self::grows`](EngineWorkspace::grows) counts the checkouts that had
+//! to touch the allocator; the `blocked_conv` bench and the
+//! `workspace_alloc` integration test pin the steady state to zero with
+//! a counting global allocator on top.
+
+/// A reusable buffer arena: checked-out `Vec<T>`s returned to a free
+/// list, matched best-fit by capacity on the next checkout.
+#[derive(Debug, Default)]
+pub struct EngineWorkspace<T> {
+    free: Vec<Vec<T>>,
+    checkouts: u64,
+    grows: u64,
+}
+
+impl<T: Copy + Default> EngineWorkspace<T> {
+    /// An empty arena; buffers are created on first checkout (warm-up)
+    /// and retained from then on.
+    pub fn new() -> Self {
+        Self { free: Vec::new(), checkouts: 0, grows: 0 }
+    }
+
+    /// Check out a buffer of exactly `len` elements with *unspecified*
+    /// contents — every consumer fully overwrites its checkout (the NCHW
+    /// extraction writes padding zeros explicitly, the matmul core seeds
+    /// every output element), so a warmed same-length checkout is a
+    /// write-free no-op, not a redundant memset of the hot path's
+    /// largest buffers. Freshly grown elements do arrive as
+    /// `T::default()` (that is `Vec::resize` filling the delta). Reuses
+    /// the best-fitting retained buffer: among free buffers that already
+    /// hold `len`, the smallest; if none fits, the largest is grown
+    /// (counted in [`Self::grows`]).
+    pub fn checkout(&mut self, len: usize) -> Vec<T> {
+        self.checkouts += 1;
+        let mut pick: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            pick = match pick {
+                None => Some((i, cap)),
+                Some((pi, pc)) => {
+                    let better = match (cap >= len, pc >= len) {
+                        (true, false) => true,
+                        (false, true) => false,
+                        (true, true) => cap < pc,
+                        (false, false) => cap > pc,
+                    };
+                    if better {
+                        Some((i, cap))
+                    } else {
+                        Some((pi, pc))
+                    }
+                }
+            };
+        }
+        let mut buf = match pick {
+            Some((i, _)) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        if buf.capacity() < len {
+            self.grows += 1;
+        }
+        // no clear(): a same-length reuse truncates/extends nothing and
+        // writes nothing; only genuinely new elements get default-filled
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// Return a buffer to the free list for the next checkout. Accepts
+    /// any `Vec` (including one recovered from a `Matrix` via
+    /// `into_data`); its contents are irrelevant, only its capacity is
+    /// retained.
+    pub fn give_back(&mut self, buf: Vec<T>) {
+        self.free.push(buf);
+    }
+
+    /// Total checkouts served over the arena's lifetime.
+    pub fn checkouts(&self) -> u64 {
+        self.checkouts
+    }
+
+    /// Checkouts that had to grow a buffer (allocate). After warm-up this
+    /// must stop advancing — the steady-state-zero-allocations claim, as
+    /// seen from inside the arena.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Buffers currently retained on the free list.
+    pub fn retained(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total elements of retained capacity (the arena's memory footprint
+    /// in units of `T`).
+    pub fn retained_capacity(&self) -> usize {
+        self.free.iter().map(Vec::capacity).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_has_exact_length_and_default_fills_only_growth() {
+        let mut ws = EngineWorkspace::<i64>::new();
+        let mut buf = ws.checkout(7);
+        // a fresh buffer's elements are all newly grown, hence default
+        assert_eq!(buf, vec![0i64; 7]);
+        buf.iter_mut().for_each(|v| *v = 9);
+        ws.give_back(buf);
+        // recycled contents are unspecified (callers fully overwrite);
+        // only the length contract holds — and shrinking writes nothing
+        let again = ws.checkout(5);
+        assert_eq!(again.len(), 5);
+        ws.give_back(again);
+        // growing past the retained *length* default-fills the delta
+        let grown = ws.checkout(7);
+        assert_eq!(grown.len(), 7);
+        assert_eq!(ws.checkouts(), 3);
+        assert_eq!(ws.grows(), 1, "reuse within capacity must not count as growth");
+    }
+
+    #[test]
+    fn steady_state_stops_growing() {
+        let mut ws = EngineWorkspace::<i64>::new();
+        // the apply_batch_ws shape pattern: one large, one mid, one small
+        for _ in 0..4 {
+            let a = ws.checkout(640);
+            let b = ws.checkout(120);
+            let c = ws.checkout(16);
+            ws.give_back(c);
+            ws.give_back(a);
+            ws.give_back(b);
+        }
+        assert_eq!(ws.checkouts(), 12);
+        assert_eq!(ws.grows(), 3, "only the warm-up round may allocate");
+        assert_eq!(ws.retained(), 3);
+        assert!(ws.retained_capacity() >= 640 + 120 + 16);
+    }
+
+    #[test]
+    fn best_fit_prefers_the_smallest_sufficient_buffer() {
+        let mut ws = EngineWorkspace::<i64>::new();
+        let big = ws.checkout(1000);
+        let small = ws.checkout(10);
+        ws.give_back(big);
+        ws.give_back(small);
+        // a 10-element request must take the 10-capacity buffer, not
+        // shred the 1000-capacity one
+        let got = ws.checkout(10);
+        assert!(got.capacity() < 1000);
+        assert_eq!(ws.grows(), 2);
+        // and the big request still finds the big buffer
+        let got_big = ws.checkout(1000);
+        assert!(got_big.capacity() >= 1000);
+        assert_eq!(ws.grows(), 2, "warm big buffer must not re-grow");
+    }
+
+    #[test]
+    fn growing_reuses_the_largest_free_buffer() {
+        let mut ws = EngineWorkspace::<i64>::new();
+        let a = ws.checkout(100);
+        ws.give_back(a);
+        // nothing fits 200: the 100-capacity buffer is grown, counted
+        let b = ws.checkout(200);
+        assert_eq!(b.len(), 200);
+        assert_eq!(ws.grows(), 2);
+        assert_eq!(ws.retained(), 0);
+    }
+}

@@ -69,6 +69,13 @@ impl<T: Copy + Default> Matrix<T> {
         &mut self.data
     }
 
+    /// Consume the matrix and recover its storage — how the workspace
+    /// path returns a checked-out buffer to its arena without copying
+    /// (the inverse of [`Matrix::from_vec`]).
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
     pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Matrix<U> {
         Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|&x| f(x)).collect())
     }

@@ -26,7 +26,7 @@ pub mod matrix;
 pub mod transform;
 
 pub use counts::OpCounts;
-pub use engine::{EngineConfig, PreparedB, SquareScalar};
+pub use engine::{ConvSpec, EngineConfig, EngineWorkspace, PreparedB, SquareScalar};
 pub use matrix::Matrix;
 
 /// Shape-validation errors for the fallible linalg entry points.
@@ -40,13 +40,25 @@ pub use matrix::Matrix;
 pub enum LinalgError {
     /// an operand has a zero dimension where real work is required
     EmptyInput { what: &'static str },
-    /// valid-mode correlation needs the kernel to fit inside the input
-    KernelLargerThanInput {
+    /// correlation needs at least one placement of the (dilated) kernel
+    /// inside the (padded) input — reported with the full [`ConvSpec`]
+    /// geometry so a stride/padding misconfiguration is actionable, not
+    /// just the kernel-vs-image sizes
+    KernelDoesNotFit {
         kh: usize,
         kw: usize,
         in_h: usize,
         in_w: usize,
+        /// `(stride_h, stride_w)` of the failing spec (`(1, 1)` for the
+        /// legacy valid-mode entry points)
+        stride: (usize, usize),
+        /// `(pad_h, pad_w)` of the failing spec
+        pad: (usize, usize),
+        /// `(dilation_h, dilation_w)` of the failing spec
+        dilation: (usize, usize),
     },
+    /// a [`ConvSpec`] field that must be positive is zero
+    InvalidConvSpec { field: &'static str },
     /// `A·B` with `a.cols != b.rows`
     ContractionMismatch {
         left_cols: usize,
@@ -64,11 +76,16 @@ impl std::fmt::Display for LinalgError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Self::EmptyInput { what } => write!(f, "empty {what}: every dimension must be non-zero"),
-            Self::KernelLargerThanInput { kh, kw, in_h, in_w } => write!(
+            Self::KernelDoesNotFit { kh, kw, in_h, in_w, stride, pad, dilation } => write!(
                 f,
-                "kernel {kh}x{kw} does not fit inside input {in_h}x{in_w} \
-                 (valid-mode correlation needs kernel <= input)"
+                "kernel {kh}x{kw} (dilation {}x{}) does not fit inside input \
+                 {in_h}x{in_w} with padding {}x{} at stride {}x{} \
+                 (correlation needs at least one kernel placement)",
+                dilation.0, dilation.1, pad.0, pad.1, stride.0, stride.1
             ),
+            Self::InvalidConvSpec { field } => {
+                write!(f, "invalid ConvSpec: {field} must be positive")
+            }
             Self::ContractionMismatch { left_cols, right_rows } => write!(
                 f,
                 "contraction mismatch: left operand has {left_cols} columns, \

@@ -34,15 +34,27 @@ COMMANDS:
   errors                         float error of the square trick (E5)
   serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
             [--native] [--threads T] [--workers W]
+            [--in-ch C] [--stride S] [--pad P]
                                  batching inference server demo (E6);
                                  --native serves the blocked square-kernel
                                  engine in-process (no PJRT artifacts)
                                  with --model one of
                                    dense    784→10 linear layer (default)
-                                   conv     CNN filter bank (8×3×3 over
-                                            28×28 images) via the im2col
-                                            lowering, corrections cached
-                                            once per bank
+                                   conv     CNN filter bank (8 filters of
+                                            C×3×3 over C×28×28 NCHW
+                                            images) via the generalized
+                                            im2col lowering, corrections
+                                            cached once per bank;
+                                            --in-ch C (default 1),
+                                            --stride S (default 1) and
+                                            --pad P (default 0) set the
+                                            ConvSpec geometry, and every
+                                            worker reuses a per-worker
+                                            workspace arena (allocation
+                                            free steady state with
+                                            --threads 1; the threaded
+                                            driver's spawns still
+                                            allocate)
                                    complex  plane-split CPM3 complex
                                             matmul (64→16) fed QPSK
                                             symbols
@@ -65,7 +77,7 @@ COMMANDS:
 fn main() {
     let args = match Args::parse(
         &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads",
-          "workers"],
+          "workers", "in-ch", "stride", "pad"],
         &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
@@ -313,10 +325,17 @@ fn serve(args: &Args) -> Result<()> {
         .get_or("model", if native { "dense" } else { "mlp_square" })
         .to_string();
 
-    // complex requests are plane-split QPSK rows, everything else serves
-    // MNIST-like images; sized to match the executors built below
+    // complex requests are plane-split QPSK rows, conv requests are NCHW
+    // images with --in-ch planes, everything else serves MNIST-like
+    // vectors; sized to match the executors built below
     let complex_subcarriers = 64usize;
     let complex_rows = native && model == "complex";
+    // no clamping: a zero --in-ch or --stride must surface as the typed
+    // InvalidConvSpec error the subsystem produces, not run silently as 1
+    let conv_rows = native && model == "conv";
+    let in_ch = args.get_usize("in-ch", 1)?;
+    let conv_stride = args.get_usize("stride", 1)?;
+    let conv_pad = args.get_usize("pad", 0)?;
 
     let srv = if native {
         // native path: the blocked multi-threaded square-kernel engine
@@ -378,22 +397,32 @@ fn serve(args: &Args) -> Result<()> {
                 )?
             }
             "conv" => {
-                // a CNN layer over the MNIST-like traffic: 8 3×3 filters
-                // on 28×28 images, one blocked square matmul per batch
-                // via the im2col lowering; bank corrections prepared once
-                // for the whole pool
+                // a CNN layer over NCHW traffic: 8 filters of in_ch×3×3
+                // with the requested stride/padding on in_ch×28×28
+                // images, one blocked square matmul per batch via the
+                // generalized im2col lowering; bank corrections prepared
+                // once for the whole pool, per-worker workspace arenas
+                // reusing all lowering scratch across batches
+                let spec = fairsquare::linalg::engine::ConvSpec::new(in_ch, 8, 3, 3)
+                    .with_stride(conv_stride)
+                    .with_padding(conv_pad);
+                let (out_h, out_w) = spec.output_shape(28, 28)?;
                 let mut rng = Rng::new(0xC0);
-                let filters: Vec<Matrix<f32>> = (0..8)
-                    .map(|_| Matrix::from_fn(3, 3, |_, _| (rng.normal() * 0.2) as f32))
+                let filters: Vec<f32> = (0..spec.bank_len())
+                    .map(|_| (rng.normal() * 0.2) as f32)
                     .collect();
                 println!(
-                    "starting server: native conv model (8 filters 3×3 over \
-                     28×28, im2col lowering), {workers} worker(s) \
+                    "starting server: native conv model (8 filters \
+                     {in_ch}×3×3 over {in_ch}×28×28 NCHW, stride \
+                     {conv_stride}, pad {conv_pad} → {out_h}×{out_w} \
+                     maps, im2col lowering), {workers} worker(s) \
                      ({per_worker_threads} engine threads each) \
                      shadow={shadow_str}"
                 );
                 let (bank, _prep_ops) =
-                    fairsquare::linalg::engine::PreparedConvBank::new_shared(&filters)?;
+                    fairsquare::linalg::engine::PreparedConvBank::new_nchw_shared(
+                        &filters, spec,
+                    )?;
                 let shadow_bank = bank.clone();
                 let shadow_cfg = cfg.clone();
                 fairsquare::coordinator::InferenceServer::start(
@@ -528,6 +557,8 @@ fn serve(args: &Args) -> Result<()> {
         std::thread::sleep(Duration::from_micros(gap.min(5_000)));
         let input = if complex_rows {
             gen.qpsk_row(complex_subcarriers)
+        } else if conv_rows {
+            gen.nchw_image(in_ch, 28, 28)
         } else {
             gen.mnist_like()
         };

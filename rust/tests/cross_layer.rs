@@ -8,10 +8,13 @@ use fairsquare::arith::fixed::{BitBudget, Q};
 use fairsquare::gates::multiplier::csa_multiplier;
 use fairsquare::gates::squarer::folded_squarer;
 use fairsquare::linalg::complex::{cmatmul_cpm3, cmatmul_direct, to_planes, CMatrix};
-use fairsquare::linalg::conv::{conv1d_direct, conv1d_square, conv2d_direct};
+use fairsquare::linalg::conv::{
+    conv1d_direct, conv1d_square, conv2d_direct, conv2d_nchw_direct,
+};
 use fairsquare::linalg::engine::{
-    cmatmul_cpm3_blocked, conv2d_square_blocked, cpm3_blocked_ledger, CPlanes,
-    EngineConfig, PreparedConvBank,
+    cmatmul_cpm3_blocked, conv2d_square_blocked, cpm3_blocked_ledger,
+    square_matmul_const_b_ledger, CPlanes, ConvSpec, EngineConfig, EngineWorkspace,
+    PreparedConvBank,
 };
 use fairsquare::linalg::matmul::{matmul_direct, matmul_square};
 use fairsquare::linalg::Matrix;
@@ -209,6 +212,81 @@ fn lowering_matches_references_values_and_ledgers() {
             // the lowering must spend exactly the reference CPM3 squares
             if ops1.squares != cmatmul_cpm3(x, y).1.squares || ops1.mults != 0 {
                 return Err("CPM3 lowering square budget diverged from §9".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The generalized NCHW subsystem against its naive oracle: strided,
+/// padded, multi-channel specs on *integer-valued f32* (the serving
+/// dtype — exact while every intermediate stays below 2²⁴) must be
+/// byte-identical to the independently-written i64 `conv2d_nchw_direct`
+/// reference, across threads ∈ {1, 4}, through both the allocating and
+/// the workspace paths, with the hoisted `(B·K, C·kh·kw, F)` ledger.
+#[test]
+fn nchw_lowering_matches_direct_reference_on_integer_f32() {
+    forall(
+        0xA9,
+        30,
+        |rng, size| {
+            let in_ch = rng.usize_in(1, 3);
+            let filters_n = rng.usize_in(1, 4);
+            let k = rng.usize_in(1, size.min(3).max(1));
+            let spec = ConvSpec::new(in_ch, filters_n, k, k)
+                .with_stride(rng.usize_in(1, 3))
+                .with_padding(rng.usize_in(0, 2));
+            let in_h = k + rng.usize_in(0, 8);
+            let in_w = k + rng.usize_in(0, 8);
+            let batch = rng.usize_in(1, 3);
+            let images = rng.vec_i64(batch * spec.image_len(in_h, in_w), -50, 50);
+            let filters = rng.vec_i64(spec.bank_len(), -50, 50);
+            (spec, in_h, in_w, batch, images, filters)
+        },
+        |(spec, in_h, in_w, batch, images, filters)| {
+            let (want, _) =
+                conv2d_nchw_direct(images, *batch, *in_h, *in_w, filters, spec).unwrap();
+            let img32: Vec<f32> = images.iter().map(|&v| v as f32).collect();
+            let fil32: Vec<f32> = filters.iter().map(|&v| v as f32).collect();
+            let (bank, _) = PreparedConvBank::new_nchw(&fil32, *spec).unwrap();
+            let k_rows = *batch * spec.output_pixels(*in_h, *in_w).unwrap();
+
+            let mut runs: Vec<Vec<f32>> = Vec::new();
+            for threads in [1usize, 4] {
+                let cfg = EngineConfig { block_k: 4, block_n: 8, threads };
+                let (out, ops) = bank
+                    .apply_batch(&img32, *batch, *in_h, *in_w, &cfg)
+                    .unwrap();
+                // integer-valued f32 must reproduce the i64 oracle exactly
+                for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+                    if *g as i64 != *w {
+                        return Err(format!(
+                            "f32 lowering diverged from the i64 oracle at {i} \
+                             ({spec:?}, threads={threads})"
+                        ));
+                    }
+                }
+                if ops
+                    != square_matmul_const_b_ledger(k_rows, spec.taps(), spec.out_channels)
+                {
+                    return Err("NCHW ledger diverged from its hoisted formula".into());
+                }
+                // the workspace path must be byte-identical to the
+                // allocating path at every thread count
+                let mut ws = EngineWorkspace::new();
+                let mut ws_out = Vec::new();
+                let ws_ops = bank
+                    .apply_batch_ws(
+                        &img32, *batch, *in_h, *in_w, &cfg, &mut ws, &mut ws_out,
+                    )
+                    .unwrap();
+                if ws_out != out || ws_ops != ops {
+                    return Err("workspace path not byte-identical".into());
+                }
+                runs.push(out);
+            }
+            if runs[0] != runs[1] {
+                return Err("threads=4 NCHW lowering not byte-identical to threads=1".into());
             }
             Ok(())
         },

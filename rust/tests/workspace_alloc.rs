@@ -1,0 +1,60 @@
+//! Workspace-reuse guard: a warmed `apply_batch_ws` must perform ZERO
+//! heap allocations — the generalized convolution subsystem's
+//! allocation-free steady state, measured with a counting global
+//! allocator rather than asserted from code reading.
+//!
+//! This file deliberately holds ONLY this test: integration-test files
+//! compile to their own binaries, so the counting allocator sees no
+//! interference from sibling tests allocating on other threads.
+
+use fairsquare::benchkit::CountingAlloc;
+use fairsquare::linalg::engine::{ConvSpec, EngineConfig, EngineWorkspace, PreparedConvBank};
+use fairsquare::testkit::Rng;
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn warmed_apply_batch_ws_performs_zero_allocations() {
+    // a representative NCHW strided/padded spec — the steady state must
+    // hold for the generalized geometry, not just the PR 3 special case
+    let spec = ConvSpec::new(3, 4, 3, 3).with_stride(2).with_padding(1);
+    let (in_h, in_w, batch) = (16usize, 14usize, 3usize);
+    let mut rng = Rng::new(0xA110C);
+    let filters = rng.vec_i64(spec.bank_len(), -20, 20);
+    let (bank, _) = PreparedConvBank::new_nchw(&filters, spec).unwrap();
+    let imgs_a = rng.vec_i64(batch * spec.image_len(in_h, in_w), -20, 20);
+    let imgs_b = rng.vec_i64(batch * spec.image_len(in_h, in_w), -20, 20);
+
+    // the zero-allocation guarantee is the single-threaded engine's: the
+    // scoped threaded driver allocates per spawn by construction
+    let cfg = EngineConfig::default();
+    let mut ws = EngineWorkspace::new();
+    let mut out = Vec::new();
+
+    // warm-up: the arena and the output buffer grow to steady-state size
+    bank.apply_batch_ws(&imgs_a, batch, in_h, in_w, &cfg, &mut ws, &mut out)
+        .unwrap();
+    let first = out.clone();
+    let grows_warm = ws.grows();
+    assert!(grows_warm > 0, "warm-up must populate the arena");
+
+    // steady state: two more batches (fresh data, same shapes) must not
+    // touch the allocator at all
+    let before = ALLOCATOR.allocations();
+    bank.apply_batch_ws(&imgs_b, batch, in_h, in_w, &cfg, &mut ws, &mut out)
+        .unwrap();
+    bank.apply_batch_ws(&imgs_a, batch, in_h, in_w, &cfg, &mut ws, &mut out)
+        .unwrap();
+    let steady = ALLOCATOR.allocations() - before;
+    assert_eq!(steady, 0, "steady-state apply_batch_ws allocated {steady} time(s)");
+    assert_eq!(ws.grows(), grows_warm, "no workspace buffer may grow after warm-up");
+
+    // ...and it still computes the right thing: the third call re-ran
+    // imgs_a, so the reused buffers must reproduce the warm-up output
+    assert_eq!(out, first, "buffer reuse changed the results");
+    let (reference, _) = bank
+        .apply_batch(&imgs_a, batch, in_h, in_w, &cfg)
+        .unwrap();
+    assert_eq!(out, reference, "workspace path diverged from the allocating path");
+}

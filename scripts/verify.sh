@@ -10,12 +10,18 @@
 #     rust/BENCH_blocked_engine.json
 #   * blocked_conv: the im2col/CPM3 lowering subsystem — threaded lowering
 #     ≥ 2× the per-filter conv2d_square at CNN scale (64×64, 16 filters)
-#     on ≥2-core machines — writes rust/BENCH_blocked_conv.json
+#     on ≥2-core machines — writes rust/BENCH_blocked_conv.json, whose
+#     NCHW leg must report allocs_steady_state = 0 (the workspace-arena
+#     gate, enforced by an assert inside the bench's counting allocator)
 #   * e2e_serving: the native worker-pool sweep (workers ∈ {1,2,4}) must
 #     produce rust/BENCH_e2e_serving.json — the serving perf trajectory —
 #     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1
-#   * CLI smokes: the sharded dense server (`serve --native --workers 2`)
-#     and the two lowering workloads (`--model conv`, `--model complex`)
+#   * CLI smokes: the sharded dense server (`serve --native --workers 2`),
+#     the two lowering workloads (`--model conv`, `--model complex`) and
+#     the generalized NCHW conv geometry
+#     (`--model conv --in-ch 3 --stride 2 --pad 1`)
+#   * cargo clippy --all-targets -- -D warnings (skipped with a warning if
+#     clippy is not installed in the toolchain)
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -59,8 +65,19 @@ cargo run --release --quiet -- serve --native --workers 2 --requests 128 --rps 8
 echo "==> serve --native --model conv smoke"
 cargo run --release --quiet -- serve --native --model conv --requests 64 --rps 4000
 
+echo "==> serve --native --model conv --in-ch 3 --stride 2 --pad 1 smoke"
+cargo run --release --quiet -- serve --native --model conv \
+    --in-ch 3 --stride 2 --pad 1 --requests 64 --rps 4000
+
 echo "==> serve --native --model complex smoke"
 cargo run --release --quiet -- serve --native --model complex --requests 64 --rps 4000
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+if ! cargo clippy --version >/dev/null 2>&1; then
+    echo "verify WARNING: clippy not installed; skipping the clippy gate" >&2
+else
+    cargo clippy --all-targets --quiet -- -D warnings
+fi
 
 # last so a formatting slip never masks a functional/perf failure above
 echo "==> cargo fmt --check"
