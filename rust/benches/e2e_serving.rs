@@ -1,38 +1,88 @@
 //! E6: end-to-end serving benchmarks.
 //!
-//! Always runs (and always writes `BENCH_e2e_serving.json`):
+//! Always runs (and always writes `BENCH_e2e_serving.json` — the artifact
+//! is written *before* any gate asserts, so a failing gate still leaves
+//! the numbers behind for diagnosis):
 //!   * E6c — exact int8 quantized MLP inference (artifact-independent)
+//!   * E6e — steady-state allocation audit: every native executor — the
+//!     square hot paths AND their direct shadow twins — run warmed
+//!     batches under a counting global allocator; the JSON records
+//!     `allocs_steady_state`, gated to 0.
 //!   * E6d — the native square-kernel pool swept over workers ∈ {1, 2, 4}
 //!     on a many-small-requests load: one dispatcher, N workers, every
 //!     worker sharing one `Arc<PreparedB>` so the §3 weight corrections
 //!     are computed exactly once for the whole pool. This is the
 //!     sharding trajectory gate: `workers = 4` must reach ≥ 1.5× the
 //!     rows/s of `workers = 1` (enforced when the machine has ≥ 4 cores).
+//!   * E6f — the skewed-mix routing A/B: the same conv-heavy /
+//!     dense-light request stream served by 4 workers under FIFO
+//!     round-robin routing and under the work-stealing deque pool.
+//!     Stealing must cut p99 by ≥ 1.3× (enforced on ≥ 4-core machines),
+//!     with byte-identical responses between the two policies.
 //!
 //! The PJRT legs additionally require `make artifacts` and the `pjrt`
 //! feature (they skip gracefully otherwise, so `cargo bench` stays green
 //! on a fresh checkout).
 //!
 //! `--quick` (as passed by `scripts/verify.sh`) shrinks request counts,
-//! not coverage: every pool width still runs and the JSON artifact is
-//! still written.
+//! not coverage: every leg still runs and the JSON artifact is still
+//! written with every field.
 
 use std::time::{Duration, Instant};
 
-use fairsquare::benchkit::{f, fmt_ns, Bench, JsonReport, Measurement, Table};
+use fairsquare::benchkit::{f, fmt_ns, Bench, CountingAlloc, JsonReport, Measurement, Table};
 use fairsquare::coordinator::{
-    InferenceServer, PjrtExecutor, SquareKernelExecutor, WorkloadGen,
+    BatchExecutor, ComplexMatmulDirectExecutor, ComplexMatmulExecutor,
+    Conv2dDirectExecutor, Conv2dExecutor, DirectKernelExecutor, InferenceServer,
+    PjrtExecutor, Routing, SkewedKernelExecutor, SquareKernelExecutor, WorkloadGen,
 };
-use fairsquare::linalg::engine::{max_threads, EngineConfig, PreparedB};
+use fairsquare::linalg::engine::{
+    max_threads, CPlanes, ConvSpec, EngineConfig, PreparedB, PreparedConvBank,
+    PreparedCpm3,
+};
 use fairsquare::linalg::Matrix;
 use fairsquare::runtime::Engine;
 use fairsquare::testkit::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
 
     qnn_table(); // artifact-independent: exact integer inference
-    native_pool_sweep(quick); // artifact-independent: the sharded pool
+
+    let mut report = JsonReport::new("e2e_serving");
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    // the allocation audit runs first, while the process is still
+    // single-threaded, so the counting allocator sees only this harness
+    let allocs = steady_state_allocs_leg(&mut report);
+    if let Some(fail) = native_pool_sweep(quick, &mut report) {
+        gate_failures.push(fail);
+    }
+    if let Some(fail) = skewed_mix_leg(quick, &mut report) {
+        gate_failures.push(fail);
+    }
+
+    // write the trajectory artifact before enforcing anything: a failing
+    // gate should still leave the numbers behind for diagnosis
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_e2e_serving.json: {e}"),
+    }
+
+    if allocs != 0 {
+        gate_failures.push(format!(
+            "allocation gate failed: warmed executors (incl. shadow twins) \
+             performed {allocs} heap allocations, want 0"
+        ));
+    }
+    assert!(
+        gate_failures.is_empty(),
+        "e2e gates failed:\n  {}",
+        gate_failures.join("\n  ")
+    );
 
     if !fairsquare::runtime::client::HAVE_PJRT {
         println!("e2e_serving: built without the `pjrt` feature — PJRT legs skipped");
@@ -47,11 +97,104 @@ fn main() {
     serving_table();
 }
 
+/// E6e — the PR 5 allocation story, measured rather than asserted from
+/// code reading: every native executor (square hot path and direct
+/// shadow twin, dense / conv / complex) runs warmed same-shape batches
+/// through `run_into` with reused buffers, and the counting global
+/// allocator must not move at all. Single-threaded engine config — the
+/// scoped threaded driver allocates per spawn by construction, that is
+/// the documented trade.
+fn steady_state_allocs_leg(report: &mut JsonReport) -> u64 {
+    let cfg = EngineConfig::with_threads(1);
+    let mut rng = Rng::new(0xA110);
+
+    // dense pair (batch 8 × 64→16)
+    let dense_w = Matrix::from_fn(64, 16, |_, _| (rng.normal() * 0.1) as f32);
+    let (dense_pb, _) = PreparedB::new_shared(dense_w.clone());
+    let mut dense_sq = SquareKernelExecutor::from_shared(dense_pb, 8, cfg.clone());
+    let mut dense_di = DirectKernelExecutor::with_config(dense_w, 8, cfg.clone());
+    let dense_in: Vec<f32> = (0..8 * 64).map(|_| rng.normal() as f32).collect();
+
+    // conv pair (batch 2, strided/padded NCHW — the generalized geometry)
+    let spec = ConvSpec::new(2, 4, 3, 3).with_stride(2).with_padding(1);
+    let filters: Vec<f32> = (0..spec.bank_len())
+        .map(|_| (rng.normal() * 0.2) as f32)
+        .collect();
+    let (bank, _) = PreparedConvBank::new_nchw_shared(&filters, spec).unwrap();
+    let mut conv_sq =
+        Conv2dExecutor::from_shared(bank.clone(), 12, 10, 2, cfg.clone()).unwrap();
+    let mut conv_di =
+        Conv2dDirectExecutor::from_shared(bank, 12, 10, 2, cfg.clone()).unwrap();
+    let conv_in: Vec<f32> = (0..2 * spec.image_len(12, 10))
+        .map(|_| rng.normal() as f32)
+        .collect();
+
+    // complex pair (batch 4, 16→8 plane-split); the CPM3 side goes
+    // through the shared-weights path so its engine config is the
+    // single-threaded one the zero-allocation guarantee is stated for
+    let y_re = Matrix::from_fn(16, 8, |_, _| (rng.normal() * 0.1) as f32);
+    let y_im = Matrix::from_fn(16, 8, |_, _| (rng.normal() * 0.1) as f32);
+    let y = CPlanes::new(y_re.clone(), y_im.clone()).unwrap();
+    let (cpm3, _) = PreparedCpm3::new_shared(&y).unwrap();
+    let mut cplx_sq = ComplexMatmulExecutor::from_shared(cpm3, 4, cfg.clone()).unwrap();
+    let mut cplx_di =
+        ComplexMatmulDirectExecutor::new(y_re, y_im, 4, cfg.clone()).unwrap();
+    let cplx_in: Vec<f32> = (0..4 * 32).map(|_| rng.normal() as f32).collect();
+
+    let mut out = Vec::new();
+    let mut execs: Vec<(&str, &mut dyn BatchExecutor, &[f32])> = vec![
+        ("dense/square", &mut dense_sq as &mut dyn BatchExecutor, dense_in.as_slice()),
+        ("dense/direct", &mut dense_di as &mut dyn BatchExecutor, dense_in.as_slice()),
+        ("conv/square", &mut conv_sq as &mut dyn BatchExecutor, conv_in.as_slice()),
+        ("conv/direct", &mut conv_di as &mut dyn BatchExecutor, conv_in.as_slice()),
+        ("complex/cpm3", &mut cplx_sq as &mut dyn BatchExecutor, cplx_in.as_slice()),
+        ("complex/direct", &mut cplx_di as &mut dyn BatchExecutor, cplx_in.as_slice()),
+    ];
+
+    // warm-up: two batches each populate every arena and output buffer
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for (_, exec, input) in execs.iter_mut() {
+        exec.run_into(input, &mut out).unwrap();
+        exec.run_into(input, &mut out).unwrap();
+        outs.push(out.clone());
+    }
+
+    // steady state: three more rounds must not touch the allocator
+    let before = ALLOC.allocations();
+    for _ in 0..3 {
+        for (_, exec, input) in execs.iter_mut() {
+            exec.run_into(input, &mut out).unwrap();
+        }
+    }
+    let allocs = ALLOC.allocations() - before;
+    // and reuse must not have changed any result
+    for ((name, exec, input), want) in execs.iter_mut().zip(&outs) {
+        exec.run_into(input, &mut out).unwrap();
+        assert_eq!(&out, want, "{name}: buffer reuse changed the results");
+    }
+
+    let mut t = Table::new(
+        "E6e — steady-state heap allocations per warmed batch (primary + shadow)",
+        &["executors", "rounds", "allocations"],
+    );
+    t.row(&["6 (dense/conv/complex × square/direct)".into(), "3".into(), allocs.to_string()]);
+    t.print();
+
+    let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
+    report.case(
+        "steady_state_allocs",
+        &m,
+        &[("allocs_steady_state", allocs as f64), ("executors", 6.0), ("rounds", 3.0)],
+    );
+    allocs
+}
+
 /// E6d — many small requests against the native square-kernel pool.
 /// Throughput must come from replicating workers behind the dispatcher
 /// (each worker's engine runs single-threaded), exactly the multi-PE
-/// scaling the paper's hardware story tells.
-fn native_pool_sweep(quick: bool) {
+/// scaling the paper's hardware story tells. Returns a gate-failure
+/// message instead of asserting so the JSON is written first.
+fn native_pool_sweep(quick: bool, report: &mut JsonReport) -> Option<String> {
     let (in_f, out_f, batch) = (256usize, 128usize, 16usize);
     let requests = if quick { 1024 } else { 4096 };
     let cores = max_threads();
@@ -75,7 +218,6 @@ fn native_pool_sweep(quick: bool) {
         ),
         &["workers", "rows/s", "p50 µs", "p99 µs", "mean batch", "speedup"],
     );
-    let mut report = JsonReport::new("e2e_serving");
     let mut base_rps: Option<f64> = None;
     let mut reference_outs: Option<Vec<Vec<f32>>> = None;
     let mut w4_speedup = 0.0f64;
@@ -163,25 +305,181 @@ fn native_pool_sweep(quick: bool) {
     }
     t.print();
 
-    // write the trajectory artifact first: a failing gate should still
-    // leave the numbers behind for diagnosis
-    match report.write() {
-        Ok(path) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write BENCH_e2e_serving.json: {e}"),
-    }
-
     println!(
         "\npool gate: workers=4 is {w4_speedup:.2}× the rows/s of workers=1 \
          (target ≥ 1.5×)"
     );
     if cores >= 4 {
-        assert!(
-            w4_speedup >= 1.5,
-            "pool gate failed: workers=4 speedup {w4_speedup:.2}× < 1.5×"
-        );
+        if w4_speedup < 1.5 {
+            return Some(format!(
+                "pool gate failed: workers=4 speedup {w4_speedup:.2}× < 1.5×"
+            ));
+        }
     } else {
         println!("(gate not enforced: only {cores} cores available)");
     }
+    None
+}
+
+/// E6f — the head-of-line-blocking A/B this PR exists for: one paced
+/// skewed request stream (dense-light rows with an occasional
+/// conv-heavy-cost one) served by 4 workers under both routing policies.
+/// Under FIFO round-robin, every batch injected behind the heavy one on
+/// its worker's deque waits out the heavy runtime while siblings idle;
+/// under work stealing the siblings drain them, so the pooled p99 must
+/// drop ≥ 1.3× (gated on ≥ 4-core machines). Responses must be
+/// byte-identical between policies — routing is never allowed to change
+/// results.
+fn skewed_mix_leg(quick: bool, report: &mut JsonReport) -> Option<String> {
+    let (in_f, out_f, batch, workers) = (128usize, 64usize, 2usize, 4usize);
+    let requests = if quick { 2048 } else { 4096 };
+    // one heavy row per 256 and 2-row batches keep the rows that *must*
+    // be slow (each heavy row plus at most one batchmate: ≤ 2/256 ≈ 0.8%)
+    // strictly below the p99 cut, so the percentile isolates the
+    // queueing damage — which is the routing policy's fault alone
+    let heavy_every = 256usize;
+    let heavy_cost = 512u32;
+    let pace_rps = 8_000.0;
+    let cores = max_threads();
+
+    let mut rng = Rng::new(0xE6F);
+    let weights = Matrix::from_fn(in_f, out_f, |_, _| (rng.normal() * 0.05) as f32);
+    let (prepared, _) = PreparedB::new_shared(weights);
+    let inputs = WorkloadGen::new(0xE6F).skewed_stream(requests, in_f, heavy_every);
+    let gaps = WorkloadGen::new(0xE6F0).arrival_gaps_us(requests, pace_rps);
+
+    let mut t = Table::new(
+        &format!(
+            "E6f — skewed mix ({requests} paced requests, 1 heavy per \
+             {heavy_every} at {heavy_cost}× cost, {workers} workers, {cores} cores)"
+        ),
+        &["routing", "p50 µs", "p99 µs", "stolen", "steal attempts"],
+    );
+
+    let mut p99 = [0.0f64; 2];
+    let mut reference_outs: Option<Vec<Vec<f32>>> = None;
+    let mut stolen_steal_mode = 0u64;
+    for (idx, routing) in [Routing::Fifo, Routing::Steal].into_iter().enumerate() {
+        let pb = prepared.clone();
+        let srv = InferenceServer::start_routed(
+            batch,
+            Duration::from_micros(200),
+            requests,
+            0,
+            workers,
+            routing,
+            move |_wid| {
+                Ok(SkewedKernelExecutor::new(
+                    SquareKernelExecutor::from_shared(
+                        pb.clone(),
+                        batch,
+                        EngineConfig::with_threads(1),
+                    ),
+                    heavy_cost,
+                ))
+            },
+            |_wid| Ok(None::<SkewedKernelExecutor>),
+        )
+        .unwrap();
+        // warm round trip (inputs[0] is light by construction)
+        let _ = srv.infer(inputs[0].clone()).unwrap();
+
+        // paced open loop: queues stay shallow, so the FIFO pathology is
+        // the routing's fault, not saturation's
+        let mut pending = Vec::with_capacity(requests);
+        for (row, gap) in inputs.iter().zip(&gaps) {
+            std::thread::sleep(Duration::from_micros((*gap).min(2_000)));
+            pending.push(srv.submit(row.clone()).unwrap());
+        }
+        let outs: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let stats = srv.shutdown().unwrap();
+
+        // conservation + equivalence: same stream, same responses, no
+        // drops, no duplicates — whatever the routing policy (+1 is the
+        // warm-up round trip)
+        assert_eq!(outs.len(), requests);
+        assert_eq!(stats.rows, requests as u64 + 1, "rows lost or duplicated");
+        assert_eq!(stats.rejected, 0, "paced open loop must never reject");
+        if let Some(want) = &reference_outs {
+            assert_eq!(&outs, want, "routing policy changed results");
+        } else {
+            reference_outs = Some(outs);
+        }
+        if routing == Routing::Steal {
+            stolen_steal_mode = stats.stolen_batches;
+        } else {
+            assert_eq!(stats.stolen_batches, 0, "FIFO routing must never steal");
+        }
+
+        p99[idx] = stats.latency.p99_us;
+        let name = if routing == Routing::Steal { "steal" } else { "fifo" };
+        t.row(&[
+            name.into(),
+            f(stats.latency.p50_us, 0),
+            f(stats.latency.p99_us, 0),
+            stats.stolen_batches.to_string(),
+            stats.steal_attempts.to_string(),
+        ]);
+        let m = Measurement {
+            iters: 1,
+            mean_ns: stats.latency.mean_us * 1e3,
+            median_ns: stats.latency.p50_us * 1e3,
+            stddev_ns: 0.0,
+            min_ns: 0.0,
+        };
+        report.case(
+            &format!("skewed_mix_{name}"),
+            &m,
+            &[
+                ("workers", workers as f64),
+                ("requests", requests as f64),
+                ("heavy_every", heavy_every as f64),
+                ("heavy_cost", heavy_cost as f64),
+                ("p50_us", stats.latency.p50_us),
+                ("p99_us", stats.latency.p99_us),
+                ("stolen_batches", stats.stolen_batches as f64),
+                ("steal_attempts", stats.steal_attempts as f64),
+                ("cores", cores as f64),
+            ],
+        );
+    }
+    t.print();
+
+    let ratio = if p99[1] > 0.0 { p99[0] / p99[1] } else { 0.0 };
+    let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
+    report.case(
+        "skewed_mix_gate",
+        &m,
+        &[
+            ("steal_p99_ratio", ratio),
+            ("fifo_p99_us", p99[0]),
+            ("steal_p99_us", p99[1]),
+            ("stolen_batches", stolen_steal_mode as f64),
+            ("cores", cores as f64),
+        ],
+    );
+    println!(
+        "\nsteal gate: stealing p99 is {ratio:.2}× better than FIFO routing \
+         (target ≥ 1.3×, {stolen_steal_mode} batches stolen)"
+    );
+    if cores >= 4 {
+        if ratio < 1.3 {
+            return Some(format!(
+                "steal gate failed: FIFO p99 {:.0} µs / steal p99 {:.0} µs = \
+                 {ratio:.2}× < 1.3×",
+                p99[0], p99[1]
+            ));
+        }
+        if stolen_steal_mode == 0 {
+            return Some("steal gate failed: no batches were stolen under skew".into());
+        }
+    } else {
+        println!("(gate not enforced: only {cores} cores available)");
+    }
+    None
 }
 
 /// E6c — the paper's natural AI domain: int8 MLP inference where the

@@ -3,7 +3,17 @@
 //! Pure state machine (no threads, no clocks of its own) so its policy is
 //! unit- and property-testable in isolation; the server drives it with
 //! real time.
+//!
+//! Batches are handed off *into caller-provided buffers*
+//! ([`Batcher::take_into`] / [`Batcher::drain_into`]): the pending rows
+//! live in one internal `VecDeque` and are drained straight into the
+//! recycled `Vec` the dispatcher checked out of the worker pool, so a
+//! steady-state batch costs zero allocations on the formation side — no
+//! per-batch re-boxing. The allocating [`Batcher::take`] /
+//! [`Batcher::drain`] forms remain as thin wrappers for one-shot callers
+//! and the unit tests.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// One pending row with its enqueue timestamp and ticket.
@@ -25,7 +35,7 @@ pub struct Batch<T> {
 /// Size/deadline batching policy.
 #[derive(Debug)]
 pub struct Batcher<T> {
-    queue: Vec<Pending<T>>,
+    queue: VecDeque<Pending<T>>,
     next_ticket: u64,
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -36,7 +46,7 @@ impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration, queue_depth: usize) -> Self {
         assert!(max_batch >= 1);
         Self {
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             next_ticket: 0,
             max_batch,
             max_wait,
@@ -52,7 +62,7 @@ impl<T> Batcher<T> {
         }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
-        self.queue.push(Pending { ticket, enqueued: now, payload });
+        self.queue.push_back(Pending { ticket, enqueued: now, payload });
         Ok(ticket)
     }
 
@@ -66,33 +76,54 @@ impl<T> Batcher<T> {
 
     /// The head-of-line deadline, if any rows are waiting.
     pub fn deadline(&self) -> Option<Instant> {
-        self.queue.first().map(|p| p.enqueued + self.max_wait)
+        self.queue.front().map(|p| p.enqueued + self.max_wait)
     }
 
-    /// Form a batch if the policy fires: a full batch is always taken;
-    /// otherwise a partial batch is taken once the oldest row has waited
-    /// `max_wait`.
-    pub fn take(&mut self, now: Instant) -> Option<Batch<T>> {
-        if self.queue.len() >= self.max_batch {
-            let rest = self.queue.split_off(self.max_batch);
-            let items = std::mem::replace(&mut self.queue, rest);
-            return Some(Batch { items, full: true });
-        }
-        if !self.queue.is_empty() && self.deadline().unwrap() <= now {
-            let items = std::mem::take(&mut self.queue);
-            return Some(Batch { items, full: false });
-        }
-        None
-    }
-
-    /// Drain up to one batch regardless of policy (shutdown path).
-    pub fn drain(&mut self) -> Option<Batch<T>> {
-        if self.queue.is_empty() {
+    /// Form a batch into `out` (cleared first) if the policy fires: a
+    /// full batch is always taken; otherwise a partial batch is taken
+    /// once the oldest row has waited `max_wait`. Returns `Some(full)`
+    /// when a batch was formed. The hand-off path: `out` is typically a
+    /// recycled buffer, so a warmed batch allocates nothing here.
+    pub fn take_into(&mut self, now: Instant, out: &mut Vec<Pending<T>>) -> Option<bool> {
+        let by_size = self.queue.len() >= self.max_batch;
+        let by_deadline =
+            !self.queue.is_empty() && self.deadline().unwrap() <= now;
+        if !by_size && !by_deadline {
             return None;
         }
         let n = self.queue.len().min(self.max_batch);
-        let rest = self.queue.split_off(n);
-        let items = std::mem::replace(&mut self.queue, rest);
+        out.clear();
+        out.extend(self.queue.drain(..n));
+        Some(by_size)
+    }
+
+    /// Form a batch if the policy fires — the allocating wrapper over
+    /// [`Self::take_into`].
+    pub fn take(&mut self, now: Instant) -> Option<Batch<T>> {
+        let mut items = Vec::new();
+        self.take_into(now, &mut items)
+            .map(|full| Batch { items, full })
+    }
+
+    /// Drain up to one batch into `out` regardless of policy (the
+    /// shutdown flush); returns false once empty.
+    pub fn drain_into(&mut self, out: &mut Vec<Pending<T>>) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        out.clear();
+        out.extend(self.queue.drain(..n));
+        true
+    }
+
+    /// Drain up to one batch regardless of policy — the allocating
+    /// wrapper over [`Self::drain_into`].
+    pub fn drain(&mut self) -> Option<Batch<T>> {
+        let mut items = Vec::new();
+        if !self.drain_into(&mut items) {
+            return None;
+        }
         let full = items.len() == self.max_batch;
         Some(Batch { items, full })
     }
@@ -148,6 +179,29 @@ mod tests {
         assert_eq!(b.len(), 2);
         // remaining 2 only fire on deadline
         assert!(b.take(t).is_none());
+    }
+
+    #[test]
+    fn take_into_fills_the_caller_buffer_without_reboxing() {
+        let mut b = Batcher::new(3, Duration::from_secs(999), 64);
+        let t = now();
+        for i in 0..7 {
+            b.push(i, t).unwrap();
+        }
+        let mut buf: Vec<Pending<i32>> = Vec::with_capacity(3);
+        let warm_ptr = buf.as_ptr();
+        assert_eq!(b.take_into(t, &mut buf), Some(true));
+        assert_eq!(buf.iter().map(|p| p.payload).collect::<Vec<_>>(), [0, 1, 2]);
+        assert_eq!(buf.as_ptr(), warm_ptr, "a warmed buffer must be reused in place");
+        assert_eq!(b.take_into(t, &mut buf), Some(true));
+        assert_eq!(buf.iter().map(|p| p.payload).collect::<Vec<_>>(), [3, 4, 5]);
+        // the remaining row is below max_batch: deadline-triggered partial
+        assert_eq!(b.take_into(t, &mut buf), None);
+        let later = t + Duration::from_secs(1000);
+        assert_eq!(b.take_into(later, &mut buf), Some(false));
+        assert_eq!(buf.iter().map(|p| p.payload).collect::<Vec<_>>(), [6]);
+        assert!(b.is_empty());
+        assert!(!b.drain_into(&mut buf), "nothing left to drain");
     }
 
     #[test]

@@ -61,6 +61,13 @@ pub struct Metrics {
     pub shadow_failures: u64,
     /// shadow executor itself returned `Err` — distinct from a mismatch
     pub shadow_errors: u64,
+    /// batches this worker took from a *sibling's* deque (work stealing);
+    /// always ≤ `batches`, and zero under FIFO routing
+    pub stolen_batches: u64,
+    /// times this worker ran dry and scanned its siblings while some
+    /// deque held stealable work — successful or not; the steal pressure
+    /// gauge (idle wake-ups with nothing queued are not counted)
+    pub steal_attempts: u64,
     started: Instant,
 }
 
@@ -90,6 +97,8 @@ impl Metrics {
             shadow_checks: 0,
             shadow_failures: 0,
             shadow_errors: 0,
+            stolen_batches: 0,
+            steal_attempts: 0,
             started: Instant::now(),
         }
     }

@@ -4,12 +4,13 @@
 //! hardware models, so per the architecture rules the coordinator is the
 //! thin-but-real serving shell around them: a bounded request queue, a
 //! dynamic batcher (size- and deadline-triggered, vLLM-style), a
-//! dispatcher that routes formed batches to a pool of N worker threads
-//! (each owning its own executor, all sharing one `Arc<PreparedB>` of
-//! cached weight corrections), per-request latency metrics with pooled
-//! and per-worker views, and an optional shadow baseline that
-//! cross-checks the square-based model against the direct twin on
-//! sampled batches.
+//! dispatcher that injects formed batches onto a work-stealing pool of N
+//! worker deques (each worker owning its own executor, all sharing one
+//! `Arc<PreparedB>` of cached weight corrections; an idle worker steals
+//! its siblings' oldest batches, so one expensive batch never head-of-line
+//! blocks the pool), per-request latency metrics with pooled and
+//! per-worker views, and an optional shadow baseline that cross-checks
+//! the square-based model against the direct twin on sampled batches.
 //!
 //! Throughput scales the way the paper's multi-PE hardware does: by
 //! replicating cheap square units behind one dispatcher, not by growing
@@ -42,7 +43,9 @@ pub use metrics::{
 };
 pub use native::{
     ComplexMatmulDirectExecutor, ComplexMatmulExecutor, Conv2dDirectExecutor,
-    Conv2dExecutor, DirectKernelExecutor, SquareKernelExecutor,
+    Conv2dExecutor, DirectKernelExecutor, SkewedKernelExecutor, SquareKernelExecutor,
 };
-pub use server::{BatchExecutor, InferenceServer, PjrtExecutor, ServerStats, WorkerStats};
-pub use workload::WorkloadGen;
+pub use server::{
+    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, WorkerStats,
+};
+pub use workload::{is_heavy_row, WorkloadGen, SKEW_HEAVY_MARKER};

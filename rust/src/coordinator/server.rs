@@ -3,14 +3,39 @@
 //! (possibly non-`Send`) executor constructed in-thread.
 //!
 //! Request path: client → [`InferenceServer::submit`] → bounded queue →
-//! dispatcher (batcher) → per-worker channel → executor → per-request
+//! dispatcher (batcher) → per-worker deque → executor → per-request
 //! response channel. The paper's §3 constant-matrix case makes the cheap
 //! unit a *square kernel with cached corrections*; throughput therefore
 //! comes from replicating that unit behind one dispatcher (the same
 //! scaling story as multi-PE systolic arrays), not from growing one
-//! worker. Routing is idle-token based: a worker posts its id on a shared
-//! channel when free, the dispatcher pops an id per formed batch, so a
-//! slow batch never blocks the other workers.
+//! worker.
+//!
+//! Routing is a **work-stealing deque pool** ([`Routing::Steal`], the
+//! default): each worker owns a bounded `Mutex<VecDeque>` of formed
+//! batches; the dispatcher is a pure injector that places every batch on
+//! the shortest live deque and never blocks on a busy worker. The owner
+//! pops LIFO from the bottom of its deque (the freshest, cache-warm
+//! batch); a worker that runs dry steals FIFO from the top of a sibling's
+//! deque (the oldest, most latency-starved batch). One expensive batch —
+//! a big strided-NCHW conv request, say — therefore occupies exactly one
+//! worker while its siblings drain everything queued behind it, and the
+//! dispatcher keeps servicing the client queue the whole time (PR 2's
+//! idle-token dispatcher blocked on worker availability instead — it
+//! never queued behind a busy worker, but it also could not form or
+//! accept work while it waited). [`Routing::Fifo`] (eager round-robin
+//! injection, per-worker FIFO pops, no stealing) is the load-blind
+//! static-placement baseline `--steal off` exposes for A/B runs; the
+//! `e2e_serving` skewed-mix leg gates stealing against it.
+//!
+//! Correctness invariants (tested): a batch lives on exactly one deque or
+//! in exactly one worker's hands — pops and steals are mutex-atomic, so
+//! no request is dropped or double-executed during a steal; a panicked
+//! worker's deque is re-injected onto live siblings (extending PR 2's
+//! `lost_workers` fix — the batches a dead worker never started are
+//! re-served, not lost); and shutdown drains the batcher onto the deques,
+//! waits for every injected batch (stolen or not) to finish executing,
+//! and only then takes the final snapshot, so pooled latency percentiles
+//! stay exact.
 //!
 //! Optionally a *shadow baseline* runs every k-th batch (per worker)
 //! through the direct-multiplier twin and cross-checks outputs — how a
@@ -18,9 +43,18 @@
 //! *errors* counts as a failed check (plus a distinct `shadow_errors`
 //! counter): a crashing shadow must never look like a passing one.
 //!
-//! Back-pressure is explicit end to end: when the batcher rejects a row,
-//! the client's response channel receives an `Err("queue full …")`
+//! Back-pressure is explicit end to end: the deques are bounded (at most
+//! `max(2·workers, 4)` batches in flight; overflow waits in the batcher,
+//! whose own bound rejects), and when the batcher rejects a row the
+//! client's response channel receives an `Err("queue full …")`
 //! immediately — the request is never silently dropped.
+//!
+//! Steady-state batches are allocation-frugal: the batcher drains rows
+//! into recycled item buffers ([`Batcher::take_into`]), each worker
+//! reuses its padded input plane and batch output buffer
+//! ([`BatchExecutor::run_into`]), and empty item buffers return to the
+//! pool's freelist — the per-request response row handed to the client is
+//! the only allocation a warmed batch keeps on the primary path.
 //!
 //! Stats are retention-bounded: each worker keeps exact counters plus a
 //! bounded ring of recent raw latency samples ([`Metrics`]). Periodic
@@ -30,8 +64,13 @@
 //! A long-lived server therefore answers stats polls in O(workers), not
 //! O(requests served).
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::Arc;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{
+    self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -53,6 +92,15 @@ pub trait BatchExecutor {
     fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>>;
     /// output features per row
     fn out_len(&self) -> usize;
+    /// [`Self::run`] into a caller-provided buffer (cleared + refilled) —
+    /// the worker loop's steady-state form, so the batch output is reused
+    /// across batches instead of reallocated. The default delegates to
+    /// `run`; the native executors override it with their workspace paths
+    /// so a warmed batch performs zero executor-side heap allocations.
+    fn run_into(&mut self, rows_flat: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        *out = self.run(rows_flat)?;
+        Ok(())
+    }
 }
 
 /// PJRT-backed executor over a named artifact. Construct *inside* the
@@ -105,6 +153,24 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+/// How the dispatcher places formed batches on the worker deques, and
+/// whether idle workers raid their siblings — the `--steal` A/B knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Eager round-robin injection over the workers, per-worker FIFO
+    /// service, no stealing: the deliberately load-blind baseline of the
+    /// A/B (static placement, as a naive sharding would do it — NOT a
+    /// reimplementation of PR 2's idle-token protocol, which never
+    /// queued behind a busy worker but made the dispatcher block on
+    /// worker availability instead). One expensive batch head-of-line
+    /// blocks every batch queued behind its worker while siblings idle.
+    Fifo,
+    /// Shortest-queue injection plus work stealing (the default): a
+    /// worker that runs dry drains its siblings' oldest batches, so a
+    /// slow batch costs the pool exactly one worker.
+    Steal,
+}
+
 /// The explicit back-pressure response body; kept stable so clients and
 /// tests can match on it.
 const QUEUE_FULL: &str = "queue full: server rejected the request under back-pressure";
@@ -115,26 +181,333 @@ struct Request {
     resp: Sender<Result<Vec<f32>, String>>,
 }
 
+/// One formed batch's backing store — checked out of the pool's freelist,
+/// drained by the worker that executes it, and recycled.
+type Items = Vec<Pending<Request>>;
+
 /// Client → dispatcher messages. `Shutdown` optionally carries a reply
 /// channel so [`InferenceServer::shutdown`] can collect the *final*
-/// pooled stats — taken after the batcher flush, so batches served
-/// during the drain are counted too.
+/// pooled stats — taken after the batcher flush *and* after every
+/// injected batch has executed, so batches served during the drain
+/// (including stolen ones) are counted.
 enum Msg {
     Req(Request),
     Stats(Sender<ServerStats>),
     Shutdown(Option<Sender<ServerStats>>),
 }
 
-/// Dispatcher → worker jobs. At most one `Batch` is in flight per worker
-/// (the idle-token protocol guarantees it), so a worker's queue only ever
-/// holds small control messages plus that one batch. A `Stats` request
-/// ships raw latency samples only when `include_raw` is set — the
-/// shutdown snapshot; periodic polls ride on summary stats alone, so a
-/// long-lived server never ships its latency history on every poll.
+/// Dispatcher → worker control messages. Batches no longer ride this
+/// channel — they live on the shared deques — so it only ever carries
+/// small, rare control traffic. A `Stats` request ships raw latency
+/// samples only when `include_raw` is set — the shutdown snapshot;
+/// periodic polls ride on summary stats alone, so a long-lived server
+/// never ships its latency history on every poll.
 enum Job {
-    Batch(Vec<Pending<Request>>),
     Stats { reply: Sender<WorkerSnapshot>, include_raw: bool },
     Shutdown,
+}
+
+/// Shared state of the work-stealing pool: one bounded deque per worker
+/// plus the gate (a version clock + in-flight account) every wait parks
+/// on. `std`-only by design: `Mutex<VecDeque>` per deque, one `Condvar`
+/// for wake-ups — at serving batch granularity (hundreds of µs of matmul
+/// per pop) lock contention is noise, and the invariant is easy to audit:
+/// a batch is removed from a deque exactly once, under its mutex.
+struct DequePool {
+    queues: Vec<Mutex<VecDeque<Items>>>,
+    /// set by a panicking worker's guard; dead deques are skipped by the
+    /// injector and drained into live siblings by [`Self::abandon`]
+    dead: Vec<AtomicBool>,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+    /// recycled batch backings: the dispatcher checks one out per formed
+    /// batch, the executing worker drains it and gives it back — zero
+    /// per-batch allocations here at steady state
+    spares: Mutex<Vec<Items>>,
+    /// whether workers raid siblings ([`Routing::Steal`])
+    steal: bool,
+}
+
+struct Gate {
+    /// bumped on every push / completion / poke / close so parked workers
+    /// (and the dispatcher's capacity wait) re-scan
+    version: u64,
+    /// batches injected but not yet fully executed (or abandoned)
+    in_flight: usize,
+    /// batches sitting on some deque, not yet popped — lets a dry worker
+    /// skip the sibling scan (and the `steal_attempts` tick) entirely
+    /// when a wake-up carried no stealable work
+    queued: usize,
+    /// workers still running; a panicking executor decrements
+    alive: usize,
+    closed: bool,
+}
+
+impl DequePool {
+    fn new(workers: usize, steal: bool) -> Arc<Self> {
+        Arc::new(Self {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            gate: Mutex::new(Gate {
+                version: 0,
+                in_flight: 0,
+                queued: 0,
+                alive: workers,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            spares: Mutex::new(Vec::new()),
+            steal,
+        })
+    }
+
+    fn bump(&self, g: &mut Gate) {
+        g.version = g.version.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    fn version(&self) -> u64 {
+        self.gate.lock().unwrap().version
+    }
+
+    fn in_flight(&self) -> usize {
+        self.gate.lock().unwrap().in_flight
+    }
+
+    fn is_dead(&self, w: usize) -> bool {
+        self.dead[w].load(Ordering::Acquire)
+    }
+
+    fn checkout_items(&self) -> Items {
+        self.spares.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn recycle_items(&self, mut items: Items) {
+        items.clear();
+        self.spares.lock().unwrap().push(items);
+    }
+
+    /// Place a batch at the bottom (owner end) of worker `w`'s deque
+    /// WITHOUT touching the in-flight account — re-injection keeps the
+    /// original slot. The dead flag is re-checked *under the queue lock*:
+    /// [`Self::abandon`] sets it before draining, so a batch can never
+    /// land on a deque after its owner's corpse was emptied — `Err` hands
+    /// the batch back for rerouting instead of stranding it.
+    fn requeue(&self, w: usize, items: Items) -> Result<(), Items> {
+        let mut q = self.queues[w].lock().unwrap();
+        if self.dead[w].load(Ordering::Acquire) {
+            return Err(items);
+        }
+        q.push_back(items);
+        Ok(())
+    }
+
+    /// Injector: place a batch at the bottom (owner end) of worker `w`'s
+    /// deque and account it in flight. `Err` means `w` died first —
+    /// reroute and try again. The accounts are reserved BEFORE the batch
+    /// becomes poppable: a fast worker may pop, execute and `batch_done`
+    /// it before this thread would otherwise get back to the gate, and
+    /// the in-flight/queued counters must never underflow.
+    fn push(&self, w: usize, items: Items) -> Result<(), Items> {
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.in_flight += 1;
+            g.queued += 1;
+        }
+        let result = self.requeue(w, items);
+        let mut g = self.gate.lock().unwrap();
+        if result.is_err() {
+            g.in_flight -= 1;
+            g.queued -= 1;
+        }
+        self.bump(&mut g);
+        result
+    }
+
+    /// Workers that have not died — the thief population. Counted from
+    /// the dead flags (not the startup width), so the LIFO/FIFO choice
+    /// below degrades correctly as workers panic.
+    fn live_workers(&self) -> usize {
+        self.dead
+            .iter()
+            .filter(|d| !d.load(Ordering::Acquire))
+            .count()
+    }
+
+    /// The owner's end. On a stealing pool with *live* siblings this is
+    /// LIFO (the most recently injected, cache-warmest batch — the
+    /// classic work-stealing discipline, with thieves relieving the old
+    /// end; starvation of the old end is bounded because the
+    /// shortest-queue injector keeps deques at ~1 batch, so any 2-deep
+    /// deque implies an empty sibling whose owner will steal the front).
+    /// Everywhere that rescue cannot exist — [`Routing::Fifo`], a
+    /// single-worker pool, or a pool whose siblings have all died — the
+    /// owner takes the *oldest* batch instead: plain per-worker FIFO, so
+    /// no batch can starve.
+    fn pop_own(&self, w: usize) -> Option<Items> {
+        let lifo = self.steal && self.live_workers() > 1;
+        let popped = {
+            let mut q = self.queues[w].lock().unwrap();
+            if lifo {
+                q.pop_back()
+            } else {
+                q.pop_front()
+            }
+        };
+        if popped.is_some() {
+            self.gate.lock().unwrap().queued -= 1;
+        }
+        popped
+    }
+
+    /// Whether any deque holds an unpopped batch — the cheap peek that
+    /// lets a dry worker skip the sibling scan when a wake-up carried
+    /// nothing to steal.
+    fn has_queued(&self) -> bool {
+        self.gate.lock().unwrap().queued > 0
+    }
+
+    /// The thieves' end: scan the siblings (starting just past `w`) and
+    /// take the *oldest* batch — FIFO from the top — of the first
+    /// non-empty deque, so a steal always relieves the most
+    /// latency-starved work first.
+    fn steal_from(&self, w: usize) -> Option<Items> {
+        let n = self.queues.len();
+        for off in 1..n {
+            let v = (w + off) % n;
+            if let Some(items) = self.queues[v].lock().unwrap().pop_front() {
+                self.gate.lock().unwrap().queued -= 1;
+                return Some(items);
+            }
+        }
+        None
+    }
+
+    /// A batch finished executing and its metrics are recorded: release
+    /// its in-flight slot (waking the dispatcher's capacity/idle waits).
+    fn batch_done(&self) {
+        let mut g = self.gate.lock().unwrap();
+        g.in_flight -= 1;
+        self.bump(&mut g);
+    }
+
+    /// Wake every worker so it re-checks its control channel.
+    fn poke(&self) {
+        let mut g = self.gate.lock().unwrap();
+        self.bump(&mut g);
+    }
+
+    fn close(&self) {
+        let mut g = self.gate.lock().unwrap();
+        g.closed = true;
+        self.bump(&mut g);
+    }
+
+    /// Park a worker until anything changes from the version it last
+    /// scanned at; returns `false` once the pool is closed.
+    fn wait_change(&self, seen: u64) -> bool {
+        let mut g = self.gate.lock().unwrap();
+        while g.version == seen && !g.closed {
+            g = self.cv.wait(g).unwrap();
+        }
+        !g.closed
+    }
+
+    /// Dispatcher-side: block until every injected batch has executed —
+    /// the shutdown-drain barrier that makes the final snapshot exact —
+    /// or until no worker is left to execute them.
+    fn wait_idle(&self) {
+        let mut g = self.gate.lock().unwrap();
+        while g.in_flight > 0 && g.alive > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Dispatcher-side: the deques are bounded — wait (briefly) for a
+    /// slot before going back to servicing the client queue.
+    fn wait_capacity(&self, cap: usize, timeout: Duration) {
+        let g = self.gate.lock().unwrap();
+        let _ = self
+            .cv
+            .wait_timeout_while(g, timeout, |g| g.in_flight >= cap && g.alive > 0)
+            .unwrap();
+    }
+
+    /// The live worker with the shortest deque — the injector's target
+    /// under [`Routing::Steal`]. `None` once the whole pool is dead.
+    fn shortest_alive(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (w, q) in self.queues.iter().enumerate() {
+            if self.is_dead(w) {
+                continue;
+            }
+            let len = q.lock().unwrap().len();
+            let better = match best {
+                None => true,
+                Some((_, best_len)) => len < best_len,
+            };
+            if better {
+                best = Some((w, len));
+            }
+        }
+        best.map(|(w, _)| w)
+    }
+
+    /// A worker is dying mid-panic: mark it dead, re-inject its queued
+    /// batches onto live siblings (they stay accounted in flight and are
+    /// re-served — extending PR 2's lost-worker fix from "count the dead"
+    /// to "lose nothing the dead had not started"), and release the slot
+    /// of the batch it was executing, whose responses die with the stack.
+    fn abandon(&self, w: usize, executing: bool) {
+        self.dead[w].store(true, Ordering::Release);
+        let orphans: Vec<Items> = {
+            let mut q = self.queues[w].lock().unwrap();
+            q.drain(..).collect()
+        };
+        let mut dropped = 0usize;
+        for mut items in orphans {
+            loop {
+                match self.shortest_alive() {
+                    Some(v) => match self.requeue(v, items) {
+                        Ok(()) => break,
+                        // that sibling died in the meantime: pick again
+                        Err(back) => items = back,
+                    },
+                    None => {
+                        // the whole pool is gone: dropping the items
+                        // closes every response channel, which clients
+                        // observe
+                        dropped += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        let mut g = self.gate.lock().unwrap();
+        g.alive -= 1;
+        g.in_flight -= dropped + usize::from(executing);
+        // dropped orphans were still on a deque, so they were counted
+        // queued; re-queued ones stay queued (they were never popped)
+        g.queued -= dropped;
+        self.bump(&mut g);
+    }
+}
+
+/// Unwind sentinel a worker arms around executor calls: on panic it
+/// re-injects the worker's deque and squares the pool's accounts so the
+/// dispatcher's waits can never hang on a dead worker.
+struct PoolGuard {
+    pool: Arc<DequePool>,
+    wid: usize,
+    executing: Cell<bool>,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.pool.abandon(self.wid, self.executing.get());
+        }
+    }
 }
 
 /// Per-worker state shipped to the dispatcher on a stats request. The
@@ -149,6 +522,8 @@ struct WorkerSnapshot {
     shadow_checks: u64,
     shadow_failures: u64,
     shadow_errors: u64,
+    stolen_batches: u64,
+    steal_attempts: u64,
     latency: LatencyStats,
     raw_latencies_us: Option<Vec<f64>>,
 }
@@ -164,6 +539,11 @@ pub struct WorkerStats {
     pub shadow_checks: u64,
     pub shadow_failures: u64,
     pub shadow_errors: u64,
+    /// batches this worker pulled off a sibling's deque
+    pub stolen_batches: u64,
+    /// times this worker ran dry and scanned its siblings while work was
+    /// queued somewhere
+    pub steal_attempts: u64,
 }
 
 /// Snapshot of server metrics: the pooled view plus one entry per worker.
@@ -178,6 +558,11 @@ pub struct ServerStats {
     /// shadow executor calls that returned `Err` (each also counts as a
     /// `shadow_failures` entry — a crashing shadow is not a passing one)
     pub shadow_errors: u64,
+    /// pool-wide stolen-batch total (0 under [`Routing::Fifo`]); every
+    /// stolen batch is also counted once — and only once — in `batches`
+    pub stolen_batches: u64,
+    /// pool-wide sibling-scan total — how often workers went hunting
+    pub steal_attempts: u64,
     pub rejected: u64,
     /// pool width the server was started with
     pub workers: usize,
@@ -197,15 +582,7 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start a pool of `workers` worker threads behind one dispatcher.
-    ///
-    /// `make_exec(w)`/`make_shadow(w)` run *inside* worker thread `w`, so
-    /// non-`Send` engines are fine (at `workers = 1`); with `workers > 1`
-    /// the factories are invoked once per worker and should hand out
-    /// cheap clones of shared read-only state (e.g. an
-    /// `Arc<PreparedB<f32>>`, so the §3 weight corrections are computed
-    /// once for the whole pool). `shadow_every > 0` verifies every k-th
-    /// batch of each worker against its shadow executor.
+    /// [`Self::start_routed`] with the default work-stealing routing.
     pub fn start<E, S>(
         max_batch: usize,
         max_wait: Duration,
@@ -219,22 +596,59 @@ impl InferenceServer {
         E: BatchExecutor,
         S: BatchExecutor,
     {
+        Self::start_routed(
+            max_batch,
+            max_wait,
+            queue_depth,
+            shadow_every,
+            workers,
+            Routing::Steal,
+            make_exec,
+            make_shadow,
+        )
+    }
+
+    /// Start a pool of `workers` worker threads behind one dispatcher,
+    /// with an explicit batch-routing policy (the `--steal` A/B knob).
+    ///
+    /// `make_exec(w)`/`make_shadow(w)` run *inside* worker thread `w`, so
+    /// non-`Send` engines are fine (at `workers = 1`); with `workers > 1`
+    /// the factories are invoked once per worker and should hand out
+    /// cheap clones of shared read-only state (e.g. an
+    /// `Arc<PreparedB<f32>>`, so the §3 weight corrections are computed
+    /// once for the whole pool). `shadow_every > 0` verifies every k-th
+    /// batch of each worker against its shadow executor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_routed<E, S>(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        shadow_every: u64,
+        workers: usize,
+        routing: Routing,
+        make_exec: impl Fn(usize) -> Result<E> + Send + Sync + 'static,
+        make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
+    ) -> Result<Self>
+    where
+        E: BatchExecutor,
+        S: BatchExecutor,
+    {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth.max(1));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
-        let (idle_tx, idle_rx) = mpsc::channel::<usize>();
+        let pool = DequePool::new(workers, routing == Routing::Steal);
         let make_exec = Arc::new(make_exec);
         let make_shadow = Arc::new(make_shadow);
 
-        let mut job_txs = Vec::with_capacity(workers);
+        let mut ctl_txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
-            let (job_tx, job_rx) = mpsc::channel::<Job>();
-            job_txs.push(job_tx);
+            let (ctl_tx, ctl_rx) = mpsc::channel::<Job>();
+            ctl_txs.push(ctl_tx);
             let ready = ready_tx.clone();
-            let idle = idle_tx.clone();
             let me = Arc::clone(&make_exec);
             let ms = Arc::clone(&make_shadow);
+            let wpool = Arc::clone(&pool);
             let handle = std::thread::Builder::new()
                 .name(format!("fairsquare-worker-{wid}"))
                 .spawn(move || {
@@ -253,42 +667,51 @@ impl InferenceServer {
                         }
                     };
                     let _ = ready.send(Ok((exec.row_len(), exec.batch_rows())));
-                    worker_loop(wid, job_rx, idle, &mut exec, shadow.as_mut(), shadow_every);
+                    worker_loop(wid, ctl_rx, &wpool, &mut exec, shadow.as_mut(), shadow_every);
                 })
                 .expect("spawning worker");
             handles.push(handle);
         }
         drop(ready_tx);
-        drop(idle_tx);
 
         // all workers must come up with one consistent model shape; on any
-        // failure the job senders are dropped on return, which unblocks and
-        // terminates the workers that did start
-        let mut shape: Option<(usize, usize)> = None;
-        for _ in 0..workers {
-            let got = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("worker died during init"))?
-                .map_err(|e| anyhow!(e))?;
-            match shape {
-                None => shape = Some(got),
-                Some(s) if s != got => {
-                    return Err(anyhow!(
-                        "workers disagree on model shape: {s:?} vs {got:?}"
-                    ));
+        // failure the pool is closed (waking workers parked on its gate)
+        // and the dropped control senders terminate the rest
+        let collect_shape = || -> Result<(usize, usize)> {
+            let mut shape: Option<(usize, usize)> = None;
+            for _ in 0..workers {
+                let got = ready_rx
+                    .recv()
+                    .map_err(|_| anyhow!("worker died during init"))?
+                    .map_err(|e| anyhow!(e))?;
+                match shape {
+                    None => shape = Some(got),
+                    Some(s) if s != got => {
+                        return Err(anyhow!(
+                            "workers disagree on model shape: {s:?} vs {got:?}"
+                        ));
+                    }
+                    Some(_) => {}
                 }
-                Some(_) => {}
             }
-        }
-        let (row_len, batch_rows) = shape.expect("workers >= 1");
+            Ok(shape.expect("workers >= 1"))
+        };
+        let (row_len, batch_rows) = match collect_shape() {
+            Ok(s) => s,
+            Err(e) => {
+                pool.close();
+                return Err(e);
+            }
+        };
 
         let dispatcher = std::thread::Builder::new()
             .name("fairsquare-dispatch".into())
             .spawn(move || {
                 dispatch_loop(
                     rx,
-                    job_txs,
-                    idle_rx,
+                    ctl_txs,
+                    pool,
+                    routing,
                     workers,
                     max_batch.min(batch_rows).max(1),
                     max_wait,
@@ -342,8 +765,10 @@ impl InferenceServer {
     }
 
     /// Stop the server, flushing queued rows first. The returned stats
-    /// are taken *after* that flush, so every batch the server ever ran —
-    /// including ones drained at shutdown — is counted.
+    /// are taken *after* that flush has fully executed (the pool's
+    /// in-flight account drains to zero first), so every batch the server
+    /// ever ran — including ones drained or stolen at shutdown — is
+    /// counted.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         let (tx, rx) = mpsc::channel();
         self.tx
@@ -381,12 +806,50 @@ fn push_or_reject(batcher: &mut Batcher<Request>, r: Request, rejected: &mut u64
     }
 }
 
-/// The dispatcher: owns the batcher and the rejection counter, routes
-/// formed batches to idle workers, aggregates pool-wide stats on demand.
+/// The injector's target for one batch: shortest live deque under
+/// stealing (thieves even out any estimate error), strict round-robin
+/// over live workers under FIFO. `None` once every worker is dead.
+fn route(pool: &DequePool, routing: Routing, rr: &mut usize) -> Option<usize> {
+    match routing {
+        Routing::Steal => pool.shortest_alive(),
+        Routing::Fifo => {
+            let n = pool.queues.len();
+            for _ in 0..n {
+                let w = *rr % n;
+                *rr = (*rr + 1) % n;
+                if !pool.is_dead(w) {
+                    return Some(w);
+                }
+            }
+            None
+        }
+    }
+}
+
+/// Route + push one batch, rerouting if the chosen worker dies in the
+/// race window. With no live worker left the batch is dropped, which
+/// closes the clients' response channels — the only honest answer left.
+fn inject(pool: &DequePool, routing: Routing, rr: &mut usize, mut items: Items) {
+    loop {
+        match route(pool, routing, rr) {
+            Some(w) => match pool.push(w, items) {
+                Ok(()) => return,
+                Err(back) => items = back,
+            },
+            None => return,
+        }
+    }
+}
+
+/// The dispatcher: owns the batcher and the rejection counter, injects
+/// formed batches onto the worker deques (never blocking on a busy
+/// worker), aggregates pool-wide stats on demand.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
     rx: Receiver<Msg>,
-    job_txs: Vec<Sender<Job>>,
-    idle_rx: Receiver<usize>,
+    ctl_txs: Vec<Sender<Job>>,
+    pool: Arc<DequePool>,
+    routing: Routing,
     workers: usize,
     max_batch: usize,
     max_wait: Duration,
@@ -395,6 +858,11 @@ fn dispatch_loop(
     let mut batcher: Batcher<Request> = Batcher::new(max_batch, max_wait, queue_depth);
     let mut rejected = 0u64;
     let mut final_reply: Option<Sender<ServerStats>> = None;
+    let mut rr = 0usize;
+    // bounded deques: at most this many batches queued or executing at
+    // once — overflow waits in the batcher, whose own bound rejects with
+    // the explicit back-pressure error
+    let inflight_cap = (2 * workers).max(4);
 
     'outer: loop {
         // wait for work, bounded by the batcher's next deadline
@@ -407,13 +875,11 @@ fn dispatch_loop(
             Ok(Msg::Stats(tx)) => {
                 // no `continue` here: fall through to the drain and batch
                 // routing below, so a stream of stats polls cannot defer
-                // dispatch of already-formed batches. (The poll itself
-                // still waits on each worker's FIFO — at most one
-                // in-flight batch — before routing resumes; lock-free
-                // counters are a noted follow-on if polling ever gets
-                // hot.) Periodic polls are summary-only: no raw latency
-                // history is shipped.
-                let _ = tx.send(pooled_stats(&job_txs, workers, rejected, false));
+                // injection of already-formed batches. (The poll itself
+                // still waits on each worker's reply, which queues behind
+                // at most the batch it is currently executing.) Periodic
+                // polls are summary-only: no raw latency history shipped.
+                let _ = tx.send(pooled_stats(&ctl_txs, &pool, workers, rejected, false));
             }
             Ok(Msg::Shutdown(reply)) => {
                 final_reply = reply;
@@ -427,7 +893,7 @@ fn dispatch_loop(
             match msg {
                 Msg::Req(r) => push_or_reject(&mut batcher, r, &mut rejected),
                 Msg::Stats(tx) => {
-                    let _ = tx.send(pooled_stats(&job_txs, workers, rejected, false));
+                    let _ = tx.send(pooled_stats(&ctl_txs, &pool, workers, rejected, false));
                 }
                 Msg::Shutdown(reply) => {
                     final_reply = reply;
@@ -436,39 +902,45 @@ fn dispatch_loop(
             }
         }
 
-        // route every formed batch to the next idle worker; if all workers
-        // are busy this blocks until one frees, while submitted requests
-        // buffer in the bounded client queue
-        while let Some(batch) = batcher.take(Instant::now()) {
-            match idle_rx.recv() {
-                Ok(wid) => {
-                    let _ = job_txs[wid].send(Job::Batch(batch.items));
-                }
-                Err(_) => return, // every worker is gone; nothing to route to
+        // inject every formed batch; the dispatcher never waits on a busy
+        // worker — when the deques hit their bound it briefly waits for a
+        // slot and then goes back to servicing the client queue (the
+        // batcher holds the overflow)
+        loop {
+            if pool.in_flight() >= inflight_cap {
+                pool.wait_capacity(inflight_cap, Duration::from_millis(5));
+                break;
             }
+            let mut items = pool.checkout_items();
+            if batcher.take_into(Instant::now(), &mut items).is_none() {
+                pool.recycle_items(items);
+                break;
+            }
+            inject(&pool, routing, &mut rr, items);
         }
     }
 
-    // shutdown: flush what's left to whichever workers free up
-    while let Some(batch) = batcher.drain() {
-        match idle_rx.recv() {
-            Ok(wid) => {
-                let _ = job_txs[wid].send(Job::Batch(batch.items));
-            }
-            Err(_) => break,
+    // shutdown: flush everything left onto the deques (the bound does not
+    // apply — these rows were already admitted)…
+    loop {
+        let mut items = pool.checkout_items();
+        if !batcher.drain_into(&mut items) {
+            pool.recycle_items(items);
+            break;
         }
+        inject(&pool, routing, &mut rr, items);
     }
-    // the final snapshot happens before Job::Shutdown but after the flush:
-    // each worker's stats reply queues FIFO behind its last batch, so the
-    // numbers include everything the server ever served. Only this one
-    // snapshot ships raw latency samples (the bounded retained windows)
-    // for exact pooled percentiles.
+    // …then wait until every injected batch — routed, re-injected or
+    // stolen — has finished executing, so the final snapshot below counts
+    // everything the server ever served, with exact pooled percentiles.
+    pool.wait_idle();
     if let Some(tx) = final_reply {
-        let _ = tx.send(pooled_stats(&job_txs, workers, rejected, true));
+        let _ = tx.send(pooled_stats(&ctl_txs, &pool, workers, rejected, true));
     }
-    for jt in &job_txs {
-        let _ = jt.send(Job::Shutdown);
+    for ct in &ctl_txs {
+        let _ = ct.send(Job::Shutdown);
     }
+    pool.close();
 }
 
 /// Collect a snapshot from every worker and merge: counters sum exactly,
@@ -480,18 +952,21 @@ fn dispatch_loop(
 /// executor) is *counted*, not silently dropped: `lost_workers` makes the
 /// capacity loss visible.
 fn pooled_stats(
-    job_txs: &[Sender<Job>],
+    ctl_txs: &[Sender<Job>],
+    pool: &DequePool,
     workers: usize,
     rejected: u64,
     include_raw: bool,
 ) -> ServerStats {
-    let rxs: Vec<_> = job_txs
+    let rxs: Vec<_> = ctl_txs
         .iter()
-        .map(|jt| {
+        .map(|ct| {
             let (tx, rx) = mpsc::channel();
-            jt.send(Job::Stats { reply: tx, include_raw }).ok().map(|_| rx)
+            ct.send(Job::Stats { reply: tx, include_raw }).ok().map(|_| rx)
         })
         .collect();
+    // wake parked workers so the poll is answered promptly
+    pool.poke();
     let mut snaps: Vec<WorkerSnapshot> = rxs
         .into_iter()
         .flatten()
@@ -510,6 +985,7 @@ fn pooled_stats(
 
     let (mut batches, mut rows) = (0u64, 0u64);
     let (mut checks, mut failures, mut errors) = (0u64, 0u64, 0u64);
+    let (mut stolen, mut attempts) = (0u64, 0u64);
     let mut per_worker = Vec::with_capacity(snaps.len());
     for s in &snaps {
         batches += s.batches;
@@ -517,6 +993,8 @@ fn pooled_stats(
         checks += s.shadow_checks;
         failures += s.shadow_failures;
         errors += s.shadow_errors;
+        stolen += s.stolen_batches;
+        attempts += s.steal_attempts;
         per_worker.push(WorkerStats {
             worker: s.worker,
             latency: s.latency,
@@ -526,6 +1004,8 @@ fn pooled_stats(
             shadow_checks: s.shadow_checks,
             shadow_failures: s.shadow_failures,
             shadow_errors: s.shadow_errors,
+            stolen_batches: s.stolen_batches,
+            steal_attempts: s.steal_attempts,
         });
     }
 
@@ -554,6 +1034,8 @@ fn pooled_stats(
         shadow_checks: checks,
         shadow_failures: failures,
         shadow_errors: errors,
+        stolen_batches: stolen,
+        steal_attempts: attempts,
         rejected,
         workers,
         lost_workers,
@@ -561,13 +1043,29 @@ fn pooled_stats(
     }
 }
 
-/// One worker: pull jobs, run batches, announce idleness. The idle token
-/// is sent once at startup and once after every batch, so the dispatcher
-/// sees each worker in the idle channel exactly when it can accept work.
+fn snapshot(wid: usize, metrics: &Metrics, include_raw: bool) -> WorkerSnapshot {
+    WorkerSnapshot {
+        worker: wid,
+        batches: metrics.batches,
+        rows: metrics.rows,
+        shadow_checks: metrics.shadow_checks,
+        shadow_failures: metrics.shadow_failures,
+        shadow_errors: metrics.shadow_errors,
+        stolen_batches: metrics.stolen_batches,
+        steal_attempts: metrics.steal_attempts,
+        latency: metrics.latency_stats(),
+        raw_latencies_us: include_raw.then(|| metrics.latencies_us().to_vec()),
+    }
+}
+
+/// One worker: pop the own deque LIFO, steal FIFO when dry, park on the
+/// pool gate otherwise. Control traffic (stats polls, shutdown) rides a
+/// separate channel, drained between batches; the dispatcher pokes the
+/// gate after sending so a parked worker always wakes to answer.
 fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
     wid: usize,
-    jobs: Receiver<Job>,
-    idle: Sender<usize>,
+    ctl: Receiver<Job>,
+    pool: &Arc<DequePool>,
     exec: &mut E,
     mut shadow: Option<&mut S>,
     shadow_every: u64,
@@ -576,11 +1074,55 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
     let row_len = exec.row_len();
     let out_len = exec.out_len();
     let mut metrics = Metrics::new();
+    // per-worker reusable batch buffers: the padded input plane, the
+    // executor's batch output and the shadow's — together with the
+    // recycled item vecs, a steady-state batch's only allocations on the
+    // primary path are the per-request response rows handed to clients
+    let mut flat = vec![0.0f32; rows * row_len];
+    let mut out: Vec<f32> = Vec::new();
+    let mut shadow_out: Vec<f32> = Vec::new();
+    let guard = PoolGuard {
+        pool: Arc::clone(pool),
+        wid,
+        executing: Cell::new(false),
+    };
 
-    let _ = idle.send(wid);
-    while let Ok(job) = jobs.recv() {
-        match job {
-            Job::Batch(items) => {
+    loop {
+        // read the pool clock BEFORE draining control: any control
+        // message sent after this drain comes with a later version, so
+        // the park below can never sleep across an unseen message
+        let seen = pool.version();
+        loop {
+            match ctl.try_recv() {
+                Ok(Job::Stats { reply, include_raw }) => {
+                    let _ = reply.send(snapshot(wid, &metrics, include_raw));
+                }
+                // shutdown only arrives after the dispatcher drained the
+                // deques and waited for in-flight zero — nothing is left
+                Ok(Job::Shutdown) => return,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+
+        // own deque first, then raid the siblings FIFO (their oldest,
+        // most latency-starved batch) — but only scan (and count an
+        // attempt) when some deque actually holds work, so idle wake-ups
+        // from pokes and completions stay O(1)
+        let work = pool.pop_own(wid).map(|b| (b, false)).or_else(|| {
+            if pool.steal && pool.has_queued() {
+                metrics.steal_attempts += 1;
+                pool.steal_from(wid).map(|b| (b, true))
+            } else {
+                None
+            }
+        });
+        match work {
+            Some((items, stolen)) => {
+                if stolen {
+                    metrics.stolen_batches += 1;
+                }
+                guard.executing.set(true);
                 run_batch(
                     items,
                     exec,
@@ -590,32 +1132,34 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
                     out_len,
                     shadow_every,
                     &mut metrics,
+                    &mut flat,
+                    &mut out,
+                    &mut shadow_out,
+                    pool,
                 );
-                if idle.send(wid).is_err() {
-                    break; // dispatcher is gone; no more work can arrive
+                guard.executing.set(false);
+                pool.batch_done();
+            }
+            None => {
+                if !pool.wait_change(seen) {
+                    // pool closed: the dispatcher has already drained the
+                    // deques and queued our Job::Shutdown — answer any
+                    // final control traffic and exit
+                    while let Ok(job) = ctl.try_recv() {
+                        if let Job::Stats { reply, include_raw } = job {
+                            let _ = reply.send(snapshot(wid, &metrics, include_raw));
+                        }
+                    }
+                    return;
                 }
             }
-            Job::Stats { reply, include_raw } => {
-                let _ = reply.send(WorkerSnapshot {
-                    worker: wid,
-                    batches: metrics.batches,
-                    rows: metrics.rows,
-                    shadow_checks: metrics.shadow_checks,
-                    shadow_failures: metrics.shadow_failures,
-                    shadow_errors: metrics.shadow_errors,
-                    latency: metrics.latency_stats(),
-                    raw_latencies_us: include_raw
-                        .then(|| metrics.latencies_us().to_vec()),
-                });
-            }
-            Job::Shutdown => break,
         }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_batch<E: BatchExecutor, S: BatchExecutor>(
-    items: Vec<Pending<Request>>,
+    mut items: Items,
     exec: &mut E,
     shadow: Option<&mut S>,
     rows: usize,
@@ -623,26 +1167,31 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
     out_len: usize,
     shadow_every: u64,
     metrics: &mut Metrics,
+    flat: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+    shadow_out: &mut Vec<f32>,
+    pool: &DequePool,
 ) {
-    // pad to the artifact's fixed batch dimension
-    let mut flat = vec![0.0f32; rows * row_len];
+    // pad into the reused input plane (cleared so stale rows re-zero)
+    flat.clear();
+    flat.resize(rows * row_len, 0.0);
     for (i, p) in items.iter().enumerate() {
         flat[i * row_len..(i + 1) * row_len].copy_from_slice(&p.payload.input);
     }
     metrics.record_batch(items.len());
 
-    match exec.run(&flat) {
-        Ok(out) => {
+    match exec.run_into(flat, out) {
+        Ok(()) => {
             // optional shadow verification
             if let Some(sh) = shadow {
                 if shadow_every > 0 && (metrics.batches - 1) % shadow_every == 0 {
                     metrics.shadow_checks += 1;
-                    match sh.run(&flat) {
-                        Ok(want) => {
+                    match sh.run_into(flat, shadow_out) {
+                        Ok(()) => {
                             let used = items.len() * out_len;
                             let ok = out[..used]
                                 .iter()
-                                .zip(&want[..used])
+                                .zip(&shadow_out[..used])
                                 .all(|(a, b)| (a - b).abs() <= 1e-2 * b.abs().max(1.0));
                             if !ok {
                                 metrics.shadow_failures += 1;
@@ -658,7 +1207,7 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
                 }
             }
             let now = Instant::now();
-            for (i, p) in items.into_iter().enumerate() {
+            for (i, p) in items.drain(..).enumerate() {
                 metrics.record_latency(now - p.payload.enqueued);
                 let slice = out[i * out_len..(i + 1) * out_len].to_vec();
                 let _ = p.payload.resp.send(Ok(slice));
@@ -666,11 +1215,12 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            for p in items {
+            for p in items.drain(..) {
                 let _ = p.payload.resp.send(Err(msg.clone()));
             }
         }
     }
+    pool.recycle_items(items);
 }
 
 #[cfg(test)]
@@ -705,12 +1255,17 @@ mod tests {
     }
 
     fn start_doubler_pool(fail: bool, workers: usize) -> InferenceServer {
-        InferenceServer::start(
+        start_doubler_routed(fail, workers, Routing::Steal)
+    }
+
+    fn start_doubler_routed(fail: bool, workers: usize, routing: Routing) -> InferenceServer {
+        InferenceServer::start_routed(
             4,
             Duration::from_millis(2),
             64,
             0,
             workers,
+            routing,
             move |_| Ok(Doubler { fail }),
             |_| Ok(None::<Doubler>),
         )
@@ -754,33 +1309,48 @@ mod tests {
 
     #[test]
     fn pool_answers_every_request_and_stats_add_up() {
-        let srv = start_doubler_pool(false, 4);
-        let rxs: Vec<_> = (0..64)
-            .map(|i| srv.submit(vec![i as f32, 1.0, -1.0]).unwrap())
-            .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let out = rx.recv().unwrap().unwrap();
-            assert_eq!(out, vec![2.0 * i as f32, 2.0, -2.0]);
+        for routing in [Routing::Fifo, Routing::Steal] {
+            let srv = start_doubler_routed(false, 4, routing);
+            let rxs: Vec<_> = (0..64)
+                .map(|i| srv.submit(vec![i as f32, 1.0, -1.0]).unwrap())
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let out = rx.recv().unwrap().unwrap();
+                assert_eq!(out, vec![2.0 * i as f32, 2.0, -2.0]);
+            }
+            let stats = srv.shutdown().unwrap();
+            assert_eq!(stats.workers, 4);
+            assert_eq!(stats.lost_workers, 0);
+            assert_eq!(stats.rows, 64);
+            assert_eq!(stats.per_worker.len(), 4);
+            assert_eq!(
+                stats.per_worker.iter().map(|w| w.rows).sum::<u64>(),
+                stats.rows,
+                "per-worker rows must sum to the pooled total"
+            );
+            assert_eq!(
+                stats.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+                stats.batches,
+                "per-worker batches must sum to the pooled total"
+            );
+            assert_eq!(
+                stats.per_worker.iter().map(|w| w.latency.count).sum::<u64>(),
+                stats.latency.count
+            );
+            assert_eq!(
+                stats.per_worker.iter().map(|w| w.stolen_batches).sum::<u64>(),
+                stats.stolen_batches,
+                "per-worker steals must sum to the pooled total"
+            );
+            // a stolen batch is executed exactly once, by its thief: the
+            // steal total can never exceed the batch total…
+            assert!(stats.stolen_batches <= stats.batches);
+            // …and FIFO routing must never steal at all
+            if routing == Routing::Fifo {
+                assert_eq!(stats.stolen_batches, 0);
+                assert_eq!(stats.steal_attempts, 0);
+            }
         }
-        let stats = srv.shutdown().unwrap();
-        assert_eq!(stats.workers, 4);
-        assert_eq!(stats.lost_workers, 0);
-        assert_eq!(stats.rows, 64);
-        assert_eq!(stats.per_worker.len(), 4);
-        assert_eq!(
-            stats.per_worker.iter().map(|w| w.rows).sum::<u64>(),
-            stats.rows,
-            "per-worker rows must sum to the pooled total"
-        );
-        assert_eq!(
-            stats.per_worker.iter().map(|w| w.batches).sum::<u64>(),
-            stats.batches,
-            "per-worker batches must sum to the pooled total"
-        );
-        assert_eq!(
-            stats.per_worker.iter().map(|w| w.latency.count).sum::<u64>(),
-            stats.latency.count
-        );
     }
 
     #[test]
@@ -983,6 +1553,138 @@ mod tests {
         assert_eq!(stats.workers, 2);
         assert_eq!(stats.lost_workers, 1);
         assert_eq!(stats.per_worker.len(), 1);
+    }
+
+    /// executor that panics only on rows carrying a poison marker and is
+    /// deliberately slow otherwise, so deques actually build up
+    struct PoisonableExec;
+
+    impl BatchExecutor for PoisonableExec {
+        fn row_len(&self) -> usize {
+            2
+        }
+        fn batch_rows(&self) -> usize {
+            2
+        }
+        fn out_len(&self) -> usize {
+            2
+        }
+        fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+            if rows_flat.iter().any(|&x| x >= 9000.0) {
+                panic!("poisoned batch");
+            }
+            std::thread::sleep(Duration::from_micros(300));
+            Ok(rows_flat.to_vec())
+        }
+    }
+
+    #[test]
+    fn panicked_workers_queue_is_reinjected_not_lost() {
+        // FIFO routing (no stealing) is the adversarial case: without
+        // re-injection, every batch queued behind the poisoned one on the
+        // dead worker's deque would hang or die with it.
+        let srv = InferenceServer::start_routed(
+            2,
+            Duration::from_millis(1),
+            1024,
+            0,
+            2,
+            Routing::Fifo,
+            |_| Ok(PoisonableExec),
+            |_| Ok(None::<PoisonableExec>),
+        )
+        .unwrap();
+        let mut normal = Vec::new();
+        let mut poisoned = None;
+        for i in 0..80 {
+            if i == 10 {
+                poisoned = Some(srv.submit(vec![9001.0, 9001.0]).unwrap());
+            } else {
+                normal.push((i as f32, srv.submit(vec![i as f32, 0.5]).unwrap()));
+            }
+        }
+        // the poisoned batch dies with its worker: dead channel
+        assert!(
+            poisoned.unwrap().recv().is_err(),
+            "the poisoned batch itself cannot be answered"
+        );
+        // …but every other request must still be answered correctly, even
+        // the ones that were queued on the dead worker's deque (a row
+        // sharing the poisoned batch may legitimately die with it)
+        let mut answered = 0usize;
+        let mut dead = 0usize;
+        for (v, rx) in normal {
+            match rx.recv() {
+                Ok(out) => {
+                    assert_eq!(out.unwrap(), vec![v, 0.5]);
+                    answered += 1;
+                }
+                Err(_) => dead += 1,
+            }
+        }
+        // at most one innocent row (the poisoned batch's batchmate) may
+        // be lost; everything else must have been re-injected and served
+        assert!(dead <= 1, "{dead} re-injectable requests were lost");
+        assert!(answered >= 78, "only {answered} answered");
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.lost_workers, 1);
+        assert_eq!(stats.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn stealing_pool_actually_steals_under_skew() {
+        // one worker sleeps on a heavy batch while cheap batches pile up
+        // behind it: with stealing on, the idle sibling must drain them
+        struct SlowFirst {
+            first: bool,
+        }
+        impl BatchExecutor for SlowFirst {
+            fn row_len(&self) -> usize {
+                1
+            }
+            fn batch_rows(&self) -> usize {
+                1
+            }
+            fn out_len(&self) -> usize {
+                1
+            }
+            fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+                if rows_flat[0] >= 100.0 {
+                    std::thread::sleep(Duration::from_millis(40));
+                } else if self.first {
+                    // let the injector build a backlog before serving
+                    std::thread::sleep(Duration::from_millis(10));
+                    self.first = false;
+                }
+                Ok(rows_flat.to_vec())
+            }
+        }
+        let srv = InferenceServer::start_routed(
+            1,
+            Duration::from_micros(100),
+            1024,
+            0,
+            2,
+            Routing::Steal,
+            |_| Ok(SlowFirst { first: true }),
+            |_| Ok(None::<SlowFirst>),
+        )
+        .unwrap();
+        // a heavy request, then a burst of cheap ones
+        let mut rxs = vec![srv.submit(vec![100.0]).unwrap()];
+        for i in 0..32 {
+            rxs.push(srv.submit(vec![i as f32]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rows, 33);
+        assert!(
+            stats.stolen_batches > 0,
+            "a skewed load on 2 workers must trigger at least one steal"
+        );
+        assert!(stats.steal_attempts >= stats.stolen_batches);
     }
 
     #[test]

@@ -7,6 +7,21 @@
 
 use crate::testkit::Rng;
 
+/// Feature-0 value that tags a request row as *heavy* in the skewed
+/// serving mix ([`WorkloadGen::skewed_row`]): cost-model executors (the
+/// `SkewedKernelExecutor`) treat any batch containing a row for which
+/// [`is_heavy_row`] holds as expensive. Far outside the [0, 1]-ish range
+/// every light row uses, so the tag can never be hit by accident.
+pub const SKEW_HEAVY_MARKER: f32 = 4096.0;
+
+/// The single definition of the heavy tag's read side: a row is heavy
+/// when its feature 0 carries (at least half of) [`SKEW_HEAVY_MARKER`].
+/// Generators write the tag, cost-model executors and tests read it —
+/// all through this one predicate, so they can never drift apart.
+pub fn is_heavy_row(row: &[f32]) -> bool {
+    !row.is_empty() && row[0] >= 0.5 * SKEW_HEAVY_MARKER
+}
+
 /// Deterministic workload generator.
 #[derive(Debug)]
 pub struct WorkloadGen {
@@ -70,6 +85,43 @@ impl WorkloadGen {
                 let kill = 0.8 * (std::f64::consts::TAU * 0.40 * t).sin();
                 let noise = 0.05 * self.rng.normal();
                 (keep + kill + noise) as f32
+            })
+            .collect()
+    }
+
+    /// One row of the skewed serving mix: `features` values in [0, 1)
+    /// (a dense-light request), except that a *heavy* row carries
+    /// [`SKEW_HEAVY_MARKER`] in feature 0 — the tag a cost-model executor
+    /// reads as "this request costs like a large strided-NCHW conv, not
+    /// a cheap dense lookup". Everything else about the row stays a
+    /// valid model input, so FIFO and stealing pools must produce
+    /// byte-identical responses for the same stream.
+    pub fn skewed_row(&mut self, features: usize, heavy: bool) -> Vec<f32> {
+        assert!(features >= 1, "skewed_row: need at least the marker feature");
+        let mut row: Vec<f32> = (0..features)
+            .map(|_| self.rng.f64_in(0.0, 1.0) as f32)
+            .collect();
+        if heavy {
+            row[0] = SKEW_HEAVY_MARKER;
+        }
+        row
+    }
+
+    /// A deterministic skewed request stream: `n` rows of `features`
+    /// values, every `heavy_every`-th one heavy (none when
+    /// `heavy_every == 0`) — the conv-heavy / dense-light mix the
+    /// work-stealing e2e leg and the routing property tests replay
+    /// against both pool policies.
+    pub fn skewed_stream(
+        &mut self,
+        n: usize,
+        features: usize,
+        heavy_every: usize,
+    ) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| {
+                let heavy = heavy_every > 0 && i % heavy_every == heavy_every - 1;
+                self.skewed_row(features, heavy)
             })
             .collect()
     }
@@ -175,6 +227,28 @@ mod tests {
         assert!(energy(0.05) > 50.0);
         assert!(energy(0.40) > 50.0);
         assert!(energy(0.22) < 40.0); // quiet in between
+    }
+
+    #[test]
+    fn skewed_stream_marks_exactly_the_requested_rows() {
+        let mut g = WorkloadGen::new(21);
+        let rows = g.skewed_stream(32, 16, 8);
+        assert_eq!(rows.len(), 32);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), 16);
+            assert_eq!(is_heavy_row(row), i % 8 == 7, "row {i} mis-tagged");
+            // light features stay in the unit-ish range, far from the tag
+            for &v in &row[1..] {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        // deterministic per seed, like every other generator here
+        assert_eq!(rows, WorkloadGen::new(21).skewed_stream(32, 16, 8));
+        // heavy_every == 0 means an all-light stream
+        assert!(WorkloadGen::new(3)
+            .skewed_stream(16, 4, 0)
+            .iter()
+            .all(|r| !is_heavy_row(r)));
     }
 
     #[test]

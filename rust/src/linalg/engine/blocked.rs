@@ -353,19 +353,49 @@ pub fn matmul_direct_blocked<T: SquareScalar>(
     b: &Matrix<T>,
     cfg: &EngineConfig,
 ) -> (Matrix<T>, OpCounts) {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    let ops = matmul_direct_into_slice(c.data_mut(), a, b, cfg);
+    (c, ops)
+}
+
+/// [`matmul_direct_blocked`] into a reused output buffer (`c_out` is
+/// cleared, resized to `M·P` and zero-seeded — the multiplier kernel
+/// accumulates, so unlike the square core's correction seeding a fresh
+/// zero fill is required): the workspace path of the *shadow* twins, so
+/// a warmed shadowed batch allocates nothing either. Same values, same
+/// ledger as the allocating form.
+pub fn matmul_direct_blocked_into<T: SquareScalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    cfg: &EngineConfig,
+    c_out: &mut Vec<T>,
+) -> OpCounts {
+    let (m, p) = (a.rows, b.cols);
+    c_out.clear();
+    c_out.resize(m * p, T::default());
+    matmul_direct_into_slice(c_out, a, b, cfg)
+}
+
+/// The shared direct-matmul core over a zeroed output slice.
+fn matmul_direct_into_slice<T: SquareScalar>(
+    c_data: &mut [T],
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    cfg: &EngineConfig,
+) -> OpCounts {
     assert_eq!(a.cols, b.rows, "contraction mismatch");
     let (m, n, p) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, p);
+    assert_eq!(c_data.len(), m * p, "output buffer shape mismatch");
     let threads = effective_threads(cfg.threads, m, n, p);
     if threads <= 1 {
-        tile_sweep(c.data_mut(), 0, m, a, b, cfg, kernels::mul_acc_row);
+        tile_sweep(c_data, 0, m, a, b, cfg, kernels::mul_acc_row);
     } else {
-        threaded::for_row_chunks(c.data_mut(), m, p, threads, |i0, i1, chunk| {
+        threaded::for_row_chunks(c_data, m, p, threads, |i0, i1, chunk| {
             tile_sweep(chunk, i0, i1, a, b, cfg, kernels::mul_acc_row);
         });
     }
     let mnp = (m * n * p) as u64;
-    (c, OpCounts { mults: mnp, adds: mnp, ..OpCounts::ZERO })
+    OpCounts { mults: mnp, adds: mnp, ..OpCounts::ZERO }
 }
 
 /// The pre-engine baseline: per-element `get`/`set` square-based matmul,
@@ -516,6 +546,22 @@ mod tests {
         let (got, ops) = matmul_direct_blocked(&a, &b, &tiny_cfg(3));
         assert_eq!(got, want);
         assert_eq!(ops, want_ops);
+    }
+
+    #[test]
+    fn direct_into_matches_allocating_form_and_rezeroes() {
+        let mut rng = Rng::new(0xD2);
+        let a = Matrix::random(&mut rng, 8, 11, -90, 90);
+        let b = Matrix::random(&mut rng, 11, 6, -90, 90);
+        let (want, want_ops) = matmul_direct_blocked(&a, &b, &tiny_cfg(2));
+        let mut c = Vec::new();
+        // the multiplier kernel accumulates: round 2+ reuse a dirty
+        // buffer, so any missing re-zero would double the values
+        for round in 0..3 {
+            let ops = matmul_direct_blocked_into(&a, &b, &tiny_cfg(2), &mut c);
+            assert_eq!(c, want.data(), "round {round}: stale accumulation");
+            assert_eq!(ops, want_ops);
+        }
     }
 
     #[test]

@@ -37,8 +37,9 @@ use super::super::counts::OpCounts;
 use super::super::matrix::Matrix;
 use super::super::LinalgError;
 use super::blocked::{
-    matmul_square_blocked, matmul_square_prepared, matmul_square_prepared_into,
-    square_matmul_const_b_ledger, square_matmul_ledger, EngineConfig, PreparedB,
+    matmul_direct_blocked_into, matmul_square_blocked, matmul_square_prepared,
+    matmul_square_prepared_into, square_matmul_const_b_ledger, square_matmul_ledger,
+    EngineConfig, PreparedB,
 };
 use super::im2col::{
     bank_matrix, im2col, im2col_nchw, im2col_nchw_into, nchw_bank_matrix,
@@ -265,6 +266,52 @@ impl<T: SquareScalar> PreparedConvBank<T> {
         ws: &mut EngineWorkspace<T>,
         out: &mut Vec<T>,
     ) -> Result<OpCounts, LinalgError> {
+        let taps = self.taps();
+        let filters = self.filters();
+        self.apply_batch_ws_with(images_flat, batch, in_h, in_w, ws, out, |a, ws, c| {
+            let ops = matmul_square_prepared_into(a, &self.pb, cfg, ws, c);
+            debug_assert_eq!(ops, square_matmul_const_b_ledger(a.rows, taps, filters));
+            ops
+        })
+    }
+
+    /// [`Self::apply_batch_ws`] with the *direct multiplier* matmul — the
+    /// workspace path of the shadow twin, so a sampled cross-check batch
+    /// is as allocation-free as the square path it verifies. Identical
+    /// lowering pipeline and layout (shared
+    /// [`Self::apply_batch_ws_with`] core); only the matmul flavour — and
+    /// therefore the ledger — differs.
+    pub fn apply_batch_direct_ws(
+        &self,
+        images_flat: &[T],
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        cfg: &EngineConfig,
+        ws: &mut EngineWorkspace<T>,
+        out: &mut Vec<T>,
+    ) -> Result<OpCounts, LinalgError> {
+        self.apply_batch_ws_with(images_flat, batch, in_h, in_w, ws, out, |a, _ws, c| {
+            matmul_direct_blocked_into(a, self.pb.matrix(), cfg, c)
+        })
+    }
+
+    /// The workspace batch pipeline (validate → stacked im2col into a
+    /// checkout → one matmul into a checkout → scatter into `out`) with
+    /// the matmul flavour supplied by the caller — the single definition
+    /// of the zero-allocation serving layout, shared by the square path
+    /// and the direct shadow twin exactly as [`Self::apply_batch_with`]
+    /// is for the allocating forms.
+    fn apply_batch_ws_with(
+        &self,
+        images_flat: &[T],
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        ws: &mut EngineWorkspace<T>,
+        out: &mut Vec<T>,
+        matmul_into: impl FnOnce(&Matrix<T>, &mut EngineWorkspace<T>, &mut Vec<T>) -> OpCounts,
+    ) -> Result<OpCounts, LinalgError> {
         let (out_h, out_w) = self.check_batch(images_flat, batch, in_h, in_w)?;
         let k_out = out_h * out_w;
         let taps = self.taps();
@@ -275,8 +322,7 @@ impl<T: SquareScalar> PreparedConvBank<T> {
         let a = Matrix::from_vec(rows, taps, patch);
 
         let mut c = ws.checkout(rows * self.filters());
-        let ops = matmul_square_prepared_into(&a, &self.pb, cfg, ws, &mut c);
-        debug_assert_eq!(ops, square_matmul_const_b_ledger(rows, taps, self.filters()));
+        let ops = matmul_into(&a, ws, &mut c);
 
         scatter_bank_output_into(&c, batch, k_out, self.filters(), out);
         ws.give_back(a.into_data());
@@ -541,6 +587,44 @@ mod tests {
         // only the first round may touch the allocator
         assert_eq!(ws.checkouts(), 12);
         assert_eq!(ws.grows(), 3, "steady state must reuse retained buffers");
+    }
+
+    #[test]
+    fn direct_workspace_path_matches_the_allocating_shadow_pipeline() {
+        use super::super::blocked::matmul_direct_blocked;
+
+        let mut rng = Rng::new(0xC09);
+        let spec = ConvSpec::new(2, 3, 3, 3).with_stride(2).with_padding(1);
+        let (in_h, in_w, batch) = (10usize, 9usize, 2usize);
+        let filters = rng.vec_i64(spec.bank_len(), -40, 40);
+        let (bank, _) = PreparedConvBank::new_nchw(&filters, spec).unwrap();
+
+        let mut ws = EngineWorkspace::new();
+        let mut out = Vec::new();
+        for round in 0..3 {
+            let images = rng.vec_i64(batch * spec.image_len(in_h, in_w), -40, 40);
+            let (want, want_ops) = bank
+                .apply_batch_with(&images, batch, in_h, in_w, |a| {
+                    matmul_direct_blocked(a, bank.matrix(), &tiny_cfg(1))
+                })
+                .unwrap();
+            let ops = bank
+                .apply_batch_direct_ws(
+                    &images, batch, in_h, in_w, &tiny_cfg(1), &mut ws, &mut out,
+                )
+                .unwrap();
+            assert_eq!(out, want, "round {round}");
+            assert_eq!(ops, want_ops, "round {round}");
+            // the multiplier twin agrees with the square path on values
+            let (sq, _) = bank
+                .apply_batch(&images, batch, in_h, in_w, &tiny_cfg(1))
+                .unwrap();
+            assert_eq!(out, sq, "round {round}: twins disagree");
+        }
+        // two checkouts per direct batch (patch + GEMM output): only the
+        // first round may touch the allocator
+        assert_eq!(ws.checkouts(), 6);
+        assert_eq!(ws.grows(), 2, "shadow steady state must reuse retained buffers");
     }
 
     #[test]

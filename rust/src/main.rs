@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use fairsquare::benchkit::{f, Table};
 use fairsquare::cli::Args;
-use fairsquare::coordinator::{InferenceServer, PjrtExecutor, WorkloadGen};
+use fairsquare::coordinator::{InferenceServer, PjrtExecutor, Routing, WorkloadGen};
 use fairsquare::gates::report;
 use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio, eq6_ratio};
 use fairsquare::linalg::{error, Matrix};
@@ -33,8 +33,8 @@ COMMANDS:
   simulate  [--size N]           cycle-accurate architecture runs
   errors                         float error of the square trick (E5)
   serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
-            [--native] [--threads T] [--workers W]
-            [--in-ch C] [--stride S] [--pad P]
+            [--native] [--threads T] [--workers W] [--steal on|off]
+            [--in-ch C] [--stride S] [--pad P] [--dilation D]
                                  batching inference server demo (E6);
                                  --native serves the blocked square-kernel
                                  engine in-process (no PJRT artifacts)
@@ -46,15 +46,16 @@ COMMANDS:
                                             im2col lowering, corrections
                                             cached once per bank;
                                             --in-ch C (default 1),
-                                            --stride S (default 1) and
-                                            --pad P (default 0) set the
-                                            ConvSpec geometry, and every
-                                            worker reuses a per-worker
-                                            workspace arena (allocation
-                                            free steady state with
-                                            --threads 1; the threaded
-                                            driver's spawns still
-                                            allocate)
+                                            --stride S (default 1),
+                                            --pad P (default 0) and
+                                            --dilation D (default 1) set
+                                            the ConvSpec geometry, and
+                                            every worker reuses a
+                                            per-worker workspace arena
+                                            (allocation free steady state
+                                            with --threads 1; the
+                                            threaded driver's spawns
+                                            still allocate)
                                    complex  plane-split CPM3 complex
                                             matmul (64→16) fed QPSK
                                             symbols
@@ -62,22 +63,27 @@ COMMANDS:
                                  twin; without --native, --model names a
                                  PJRT artifact. --workers W shards the
                                  server into W worker threads behind one
-                                 dispatcher — every worker shares one
-                                 prepared weight/bank/plane set, so the
-                                 constant-operand (§3) corrections are
-                                 computed exactly once for the whole
-                                 pool. Native only: the PJRT engine is
-                                 not Send, so the artifact path requires
-                                 --workers 1 (the default). --threads T
-                                 is the total engine thread budget, split
-                                 across the workers.
+                                 dispatcher that injects batches onto
+                                 per-worker deques — every worker shares
+                                 one prepared weight/bank/plane set, so
+                                 the constant-operand (§3) corrections
+                                 are computed exactly once for the whole
+                                 pool. --steal on (default) lets an idle
+                                 worker steal its siblings' oldest
+                                 batches (shortest-queue injection);
+                                 --steal off is the round-robin FIFO
+                                 baseline for A/B runs. Native only: the
+                                 PJRT engine is not Send, so the artifact
+                                 path requires --workers 1 (the default).
+                                 --threads T is the total engine thread
+                                 budget, split across the workers.
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
 fn main() {
     let args = match Args::parse(
         &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads",
-          "workers", "in-ch", "stride", "pad"],
+          "workers", "steal", "in-ch", "stride", "pad", "dilation"],
         &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
@@ -320,6 +326,11 @@ fn serve(args: &Args) -> Result<()> {
     let rps = args.get_u64("rps", 2_000)? as f64;
     let shadow_wanted = !args.has("no-shadow");
     let workers = args.get_usize("workers", 1)?.max(1);
+    let routing = match args.get_or("steal", "on") {
+        "on" => Routing::Steal,
+        "off" => Routing::Fifo,
+        other => bail!("--steal expects on|off, got {other:?}"),
+    };
     let native = args.has("native");
     let model = args
         .get_or("model", if native { "dense" } else { "mlp_square" })
@@ -330,12 +341,14 @@ fn serve(args: &Args) -> Result<()> {
     // vectors; sized to match the executors built below
     let complex_subcarriers = 64usize;
     let complex_rows = native && model == "complex";
-    // no clamping: a zero --in-ch or --stride must surface as the typed
-    // InvalidConvSpec error the subsystem produces, not run silently as 1
+    // no clamping: a zero --in-ch, --stride or --dilation must surface as
+    // the typed InvalidConvSpec error the subsystem produces, not run
+    // silently as 1
     let conv_rows = native && model == "conv";
     let in_ch = args.get_usize("in-ch", 1)?;
     let conv_stride = args.get_usize("stride", 1)?;
     let conv_pad = args.get_usize("pad", 0)?;
+    let conv_dilation = args.get_usize("dilation", 1)?;
 
     let srv = if native {
         // native path: the blocked multi-threaded square-kernel engine
@@ -350,6 +363,7 @@ fn serve(args: &Args) -> Result<()> {
             fairsquare::linalg::engine::EngineConfig::with_threads(per_worker_threads);
         let shadow_every = if shadow_wanted { 8 } else { 0 };
         let shadow_str = if shadow_wanted { "direct twin" } else { "off" };
+        let steal_str = if routing == Routing::Steal { "on" } else { "off" };
 
         match model.as_str() {
             "dense" => {
@@ -366,17 +380,18 @@ fn serve(args: &Args) -> Result<()> {
                     "starting server: native dense square-kernel model 784→10, \
                      {workers} worker(s) ({per_worker_threads} engine threads \
                      each, {effective} effective per 32-row batch) \
-                     shadow={shadow_str}"
+                     steal={steal_str} shadow={shadow_str}"
                 );
                 let (prepared, _prep_ops) =
                     fairsquare::linalg::engine::PreparedB::new_shared(weights);
                 let shadow_w = prepared.matrix().clone();
-                fairsquare::coordinator::InferenceServer::start(
+                fairsquare::coordinator::InferenceServer::start_routed(
                     32,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
+                    routing,
                     move |_wid| {
                         Ok(fairsquare::coordinator::SquareKernelExecutor::from_shared(
                             prepared.clone(),
@@ -398,14 +413,15 @@ fn serve(args: &Args) -> Result<()> {
             }
             "conv" => {
                 // a CNN layer over NCHW traffic: 8 filters of in_ch×3×3
-                // with the requested stride/padding on in_ch×28×28
-                // images, one blocked square matmul per batch via the
-                // generalized im2col lowering; bank corrections prepared
-                // once for the whole pool, per-worker workspace arenas
-                // reusing all lowering scratch across batches
+                // with the requested stride/padding/dilation on
+                // in_ch×28×28 images, one blocked square matmul per batch
+                // via the generalized im2col lowering; bank corrections
+                // prepared once for the whole pool, per-worker workspace
+                // arenas reusing all lowering scratch across batches
                 let spec = fairsquare::linalg::engine::ConvSpec::new(in_ch, 8, 3, 3)
                     .with_stride(conv_stride)
-                    .with_padding(conv_pad);
+                    .with_padding(conv_pad)
+                    .with_dilation(conv_dilation);
                 let (out_h, out_w) = spec.output_shape(28, 28)?;
                 let mut rng = Rng::new(0xC0);
                 let filters: Vec<f32> = (0..spec.bank_len())
@@ -414,10 +430,11 @@ fn serve(args: &Args) -> Result<()> {
                 println!(
                     "starting server: native conv model (8 filters \
                      {in_ch}×3×3 over {in_ch}×28×28 NCHW, stride \
-                     {conv_stride}, pad {conv_pad} → {out_h}×{out_w} \
-                     maps, im2col lowering), {workers} worker(s) \
+                     {conv_stride}, pad {conv_pad}, dilation \
+                     {conv_dilation} → {out_h}×{out_w} maps, im2col \
+                     lowering), {workers} worker(s) \
                      ({per_worker_threads} engine threads each) \
-                     shadow={shadow_str}"
+                     steal={steal_str} shadow={shadow_str}"
                 );
                 let (bank, _prep_ops) =
                     fairsquare::linalg::engine::PreparedConvBank::new_nchw_shared(
@@ -425,12 +442,13 @@ fn serve(args: &Args) -> Result<()> {
                     )?;
                 let shadow_bank = bank.clone();
                 let shadow_cfg = cfg.clone();
-                fairsquare::coordinator::InferenceServer::start(
+                fairsquare::coordinator::InferenceServer::start_routed(
                     16,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
+                    routing,
                     move |_wid| {
                         fairsquare::coordinator::Conv2dExecutor::from_shared(
                             bank.clone(),
@@ -472,7 +490,7 @@ fn serve(args: &Args) -> Result<()> {
                     "starting server: native complex CPM3 model {n}→{p} \
                      (plane-split, 3 square passes), {workers} worker(s) \
                      ({per_worker_threads} engine threads each) \
-                     shadow={shadow_str}"
+                     steal={steal_str} shadow={shadow_str}"
                 );
                 let planes = fairsquare::linalg::engine::CPlanes::new(
                     y_re.clone(),
@@ -481,12 +499,13 @@ fn serve(args: &Args) -> Result<()> {
                 let (prepared, _prep_ops) =
                     fairsquare::linalg::engine::PreparedCpm3::new_shared(&planes)?;
                 let shadow_cfg = cfg.clone();
-                fairsquare::coordinator::InferenceServer::start(
+                fairsquare::coordinator::InferenceServer::start_routed(
                     32,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
+                    routing,
                     move |_wid| {
                         fairsquare::coordinator::ComplexMatmulExecutor::from_shared(
                             prepared.clone(),
@@ -532,12 +551,15 @@ fn serve(args: &Args) -> Result<()> {
         let dir2 = dir.clone();
         let model2 = model.clone();
         let baseline2 = baseline.clone();
-        InferenceServer::start(
+        // single worker, so routing only picks the (FIFO either way)
+        // service order — but the knob is honored, not silently dropped
+        InferenceServer::start_routed(
             32,
             Duration::from_millis(2),
             1024,
             if shadow { 8 } else { 0 },
             1,
+            routing,
             move |_wid| PjrtExecutor::new(&dir2, &model2),
             move |_wid| {
                 if shadow {
@@ -587,6 +609,8 @@ fn serve(args: &Args) -> Result<()> {
     t.row(&["shadow checks".into(), stats.shadow_checks.to_string()]);
     t.row(&["shadow failures".into(), stats.shadow_failures.to_string()]);
     t.row(&["shadow errors".into(), stats.shadow_errors.to_string()]);
+    t.row(&["stolen batches".into(), stats.stolen_batches.to_string()]);
+    t.row(&["steal attempts".into(), stats.steal_attempts.to_string()]);
     t.row(&["rejected".into(), stats.rejected.to_string()]);
     t.row(&["lost workers".into(), stats.lost_workers.to_string()]);
     t.print();
@@ -594,12 +618,13 @@ fn serve(args: &Args) -> Result<()> {
     if stats.workers > 1 {
         let mut t = Table::new(
             "E6 — per-worker view",
-            &["worker", "batches", "rows", "mean batch", "p50 µs", "p99 µs"],
+            &["worker", "batches", "stolen", "rows", "mean batch", "p50 µs", "p99 µs"],
         );
         for w in &stats.per_worker {
             t.row(&[
                 w.worker.to_string(),
                 w.batches.to_string(),
+                w.stolen_batches.to_string(),
                 w.rows.to_string(),
                 f(w.mean_batch, 2),
                 format!("{:.0}", w.latency.p50_us),

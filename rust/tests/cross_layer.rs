@@ -407,3 +407,112 @@ fn server_preserves_request_mapping() {
         assert_eq!(stats.workers, workers);
     }
 }
+
+/// Routing-policy property (the PR 5 tentpole's correctness contract):
+/// one identical skewed request stream — dense-light rows with
+/// occasional conv-heavy-cost ones, replayed from one seed — must
+/// produce byte-identical responses under FIFO round-robin routing and
+/// under the work-stealing deque pool, at every pool width. No request
+/// is dropped or double-served during a steal (rows served + rows
+/// rejected == rows submitted, each response channel yields exactly
+/// once), and the steal counters are conserved: per-worker totals sum to
+/// the pool totals, a stolen batch is still exactly one executed batch,
+/// and FIFO mode never steals.
+#[test]
+fn fifo_and_steal_policies_serve_identical_response_sets() {
+    use fairsquare::coordinator::{
+        InferenceServer, Routing, SkewedKernelExecutor, SquareKernelExecutor,
+        WorkloadGen,
+    };
+    use fairsquare::linalg::engine::{EngineConfig, PreparedB};
+    use std::time::Duration;
+
+    let (in_f, out_f, batch) = (24usize, 10usize, 4usize);
+    let requests = 240usize;
+    let mut rng = Rng::new(0x57EA);
+    let weights = Matrix::from_fn(in_f, out_f, |_, _| (rng.normal() * 0.1) as f32);
+    let (prepared, _) = PreparedB::new_shared(weights);
+    // every 16th row heavy: enough skew that the stealing pool actually
+    // interleaves steals with owned pops while we check equivalence
+    let inputs = WorkloadGen::new(0x57EA).skewed_stream(requests, in_f, 16);
+
+    for workers in [1usize, 4] {
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        // engine threads ∈ {1, 4} × routing ∈ {fifo, steal}: the scoped
+        // threaded driver must be byte-invisible even inside a stolen
+        // batch, so every combination reproduces one reference output
+        for threads in [1usize, 4] {
+            for routing in [Routing::Fifo, Routing::Steal] {
+                let pb = prepared.clone();
+                let srv = InferenceServer::start_routed(
+                    batch,
+                    Duration::from_micros(200),
+                    4096, // deep enough that nothing is rejected
+                    0,
+                    workers,
+                    routing,
+                    move |_| {
+                        Ok(SkewedKernelExecutor::new(
+                            SquareKernelExecutor::from_shared(
+                                pb.clone(),
+                                batch,
+                                EngineConfig::with_threads(threads),
+                            ),
+                            32,
+                        ))
+                    },
+                    |_| Ok(None::<SkewedKernelExecutor>),
+                )
+                .unwrap();
+                let pending: Vec<_> = inputs
+                    .iter()
+                    .map(|row| srv.submit(row.clone()).unwrap())
+                    .collect();
+                // each response channel yields exactly one response; a
+                // dropped request would hang/err here, a duplicate could
+                // not be sent at all (the sender is consumed per slot)
+                let outs: Vec<Vec<f32>> = pending
+                    .into_iter()
+                    .map(|rx| rx.recv().unwrap().unwrap())
+                    .collect();
+                let stats = srv.shutdown().unwrap();
+
+                // conservation: rows served + rejected == rows submitted
+                assert_eq!(
+                    stats.rows + stats.rejected,
+                    requests as u64,
+                    "rows lost or duplicated (workers={workers}, \
+                     threads={threads}, {routing:?})"
+                );
+                assert_eq!(stats.rejected, 0, "deep queue must never reject");
+                assert_eq!(
+                    stats.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+                    stats.batches
+                );
+                assert_eq!(
+                    stats
+                        .per_worker
+                        .iter()
+                        .map(|w| w.stolen_batches)
+                        .sum::<u64>(),
+                    stats.stolen_batches
+                );
+                // a stolen batch is an executed batch, counted exactly once
+                assert!(stats.stolen_batches <= stats.batches);
+                if routing == Routing::Fifo {
+                    assert_eq!(stats.stolen_batches, 0, "FIFO must never steal");
+                    assert_eq!(stats.steal_attempts, 0);
+                }
+
+                match &reference {
+                    Some(want) => assert_eq!(
+                        &outs, want,
+                        "routing/threads changed responses (workers={workers}, \
+                         threads={threads}, {routing:?})"
+                    ),
+                    None => reference = Some(outs),
+                }
+            }
+        }
+    }
+}

@@ -5,7 +5,10 @@
 //!
 //! This file deliberately holds ONLY this test: integration-test files
 //! compile to their own binaries, so the counting allocator sees no
-//! interference from sibling tests allocating on other threads.
+//! interference from sibling tests (or the libtest harness spawning
+//! their threads) allocating concurrently. The PR 5 shadow-executor
+//! twin gate lives in its own single-test binary,
+//! `workspace_alloc_shadow.rs`, for the same reason.
 
 use fairsquare::benchkit::CountingAlloc;
 use fairsquare::linalg::engine::{ConvSpec, EngineConfig, EngineWorkspace, PreparedConvBank};

@@ -1,0 +1,99 @@
+//! Shadow-path workspace guard (PR 5): the warmed *direct* shadow twins
+//! — `Conv2dDirectExecutor`, `DirectKernelExecutor`,
+//! `ComplexMatmulDirectExecutor` — must perform ZERO heap allocations
+//! per batch, measured with a counting global allocator. The PR 4 twins
+//! re-allocated on every sampled shadowed batch; they now ride the same
+//! workspace machinery as the hot paths they cross-check (still an
+//! independent multiplier arithmetic — that is what the shadow
+//! verifies).
+//!
+//! This file deliberately holds ONLY this test, in its own binary, so
+//! the counting allocator sees no interference from sibling tests (or
+//! the libtest harness spawning their threads) allocating concurrently —
+//! the same isolation rationale as `workspace_alloc.rs`.
+
+use fairsquare::benchkit::CountingAlloc;
+use fairsquare::coordinator::{
+    BatchExecutor, ComplexMatmulDirectExecutor, Conv2dDirectExecutor,
+    DirectKernelExecutor,
+};
+use fairsquare::linalg::engine::{ConvSpec, EngineConfig, PreparedConvBank};
+use fairsquare::linalg::Matrix;
+use fairsquare::testkit::Rng;
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn warmed_shadow_twins_perform_zero_allocations() {
+    // single-threaded engine config, as everywhere the zero-allocation
+    // guarantee is stated (the scoped threaded driver allocates per
+    // spawn by construction)
+    let cfg = EngineConfig::default();
+    let mut rng = Rng::new(0x5AD0);
+
+    // conv twin over the generalized strided/padded NCHW geometry
+    let spec = ConvSpec::new(3, 4, 3, 3).with_stride(2).with_padding(1);
+    let filters: Vec<f32> = rng
+        .vec_i64(spec.bank_len(), -20, 20)
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+    let (bank, _) = PreparedConvBank::new_nchw_shared(&filters, spec).unwrap();
+    let mut conv = Conv2dDirectExecutor::from_shared(bank, 16, 14, 2, cfg.clone()).unwrap();
+    let conv_in: Vec<f32> = rng
+        .vec_i64(2 * spec.image_len(16, 14), -20, 20)
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+
+    // dense twin
+    let dense_w = Matrix::from_fn(32, 8, |i, j| ((i * 7 + j) % 13) as f32 - 6.0);
+    let mut dense = DirectKernelExecutor::with_config(dense_w, 4, cfg.clone());
+    let dense_in: Vec<f32> = rng
+        .vec_i64(4 * 32, -9, 9)
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+
+    // complex (schoolbook 4-mult) twin
+    let y_re = Matrix::from_fn(12, 6, |i, j| ((i + 2 * j) % 7) as f32 - 3.0);
+    let y_im = Matrix::from_fn(12, 6, |i, j| ((2 * i + j) % 5) as f32 - 2.0);
+    let mut cplx = ComplexMatmulDirectExecutor::new(y_re, y_im, 3, cfg).unwrap();
+    let cplx_in: Vec<f32> = rng
+        .vec_i64(3 * 24, -9, 9)
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+
+    let mut out = Vec::new();
+    let mut execs: Vec<(&str, &mut dyn BatchExecutor, &[f32])> = vec![
+        ("conv shadow", &mut conv as &mut dyn BatchExecutor, conv_in.as_slice()),
+        ("dense shadow", &mut dense as &mut dyn BatchExecutor, dense_in.as_slice()),
+        ("complex shadow", &mut cplx as &mut dyn BatchExecutor, cplx_in.as_slice()),
+    ];
+
+    // warm-up: two batches each populate every arena and output buffer
+    let mut wants: Vec<Vec<f32>> = Vec::new();
+    for (_, exec, input) in execs.iter_mut() {
+        exec.run_into(input, &mut out).unwrap();
+        exec.run_into(input, &mut out).unwrap();
+        wants.push(out.clone());
+    }
+
+    // steady state: three more rounds of every twin, zero allocations
+    let before = ALLOCATOR.allocations();
+    for _ in 0..3 {
+        for (_, exec, input) in execs.iter_mut() {
+            exec.run_into(input, &mut out).unwrap();
+        }
+    }
+    let steady = ALLOCATOR.allocations() - before;
+    assert_eq!(steady, 0, "warmed shadow twins allocated {steady} time(s)");
+
+    // ...and buffer reuse never changed a value
+    for ((name, exec, input), want) in execs.iter_mut().zip(&wants) {
+        exec.run_into(input, &mut out).unwrap();
+        assert_eq!(&out, want, "{name}: buffer reuse changed the results");
+    }
+}

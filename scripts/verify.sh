@@ -15,11 +15,16 @@
 #     gate, enforced by an assert inside the bench's counting allocator)
 #   * e2e_serving: the native worker-pool sweep (workers ∈ {1,2,4}) must
 #     produce rust/BENCH_e2e_serving.json — the serving perf trajectory —
-#     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1
-#   * CLI smokes: the sharded dense server (`serve --native --workers 2`),
-#     the two lowering workloads (`--model conv`, `--model complex`) and
-#     the generalized NCHW conv geometry
-#     (`--model conv --in-ch 3 --stride 2 --pad 1`)
+#     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1; the
+#     JSON must also carry the PR 5 skewed-mix leg (work-stealing p99
+#     ≥ 1.3× over FIFO routing at 4 workers on ≥4-core machines) and the
+#     allocs_steady_state field (0 across every native executor incl.
+#     the shadow twins, enforced inside the bench)
+#   * CLI smokes: the sharded dense server under both routing policies
+#     (`serve --native --workers 2 --steal off|on`), the two lowering
+#     workloads (`--model conv`, `--model complex`) and the generalized
+#     NCHW conv geometry
+#     (`--model conv --in-ch 3 --stride 2 --pad 1 --dilation 2`)
 #   * cargo clippy --all-targets -- -D warnings (skipped with a warning if
 #     clippy is not installed in the toolchain)
 set -euo pipefail
@@ -58,16 +63,29 @@ if [[ ! -f BENCH_e2e_serving.json ]]; then
     echo "verify FAILED: BENCH_e2e_serving.json was not produced" >&2
     exit 1
 fi
+if ! grep -q "skewed_mix_gate" BENCH_e2e_serving.json; then
+    echo "verify FAILED: BENCH_e2e_serving.json is missing the skewed-mix leg" >&2
+    exit 1
+fi
+if ! grep -q "allocs_steady_state" BENCH_e2e_serving.json; then
+    echo "verify FAILED: BENCH_e2e_serving.json is missing allocs_steady_state" >&2
+    exit 1
+fi
 
-echo "==> serve --native --workers 2 smoke"
-cargo run --release --quiet -- serve --native --workers 2 --requests 128 --rps 8000
+echo "==> serve --native --workers 2 --steal off smoke (FIFO A/B baseline)"
+cargo run --release --quiet -- serve --native --workers 2 --steal off \
+    --requests 128 --rps 8000
+
+echo "==> serve --native --workers 2 --steal on smoke (work-stealing pool)"
+cargo run --release --quiet -- serve --native --workers 2 --steal on \
+    --requests 128 --rps 8000
 
 echo "==> serve --native --model conv smoke"
 cargo run --release --quiet -- serve --native --model conv --requests 64 --rps 4000
 
-echo "==> serve --native --model conv --in-ch 3 --stride 2 --pad 1 smoke"
+echo "==> serve --native --model conv --in-ch 3 --stride 2 --pad 1 --dilation 2 smoke"
 cargo run --release --quiet -- serve --native --model conv \
-    --in-ch 3 --stride 2 --pad 1 --requests 64 --rps 4000
+    --in-ch 3 --stride 2 --pad 1 --dilation 2 --requests 64 --rps 4000
 
 echo "==> serve --native --model complex smoke"
 cargo run --release --quiet -- serve --native --model complex --requests 64 --rps 4000
