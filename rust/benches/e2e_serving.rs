@@ -19,6 +19,12 @@
 //!     round-robin routing and under the work-stealing deque pool.
 //!     Stealing must cut p99 by ≥ 1.3× (enforced on ≥ 4-core machines),
 //!     with byte-identical responses between the two policies.
+//!   * E6g — the whale-mix tiling A/B: one giant request per ~10k small
+//!     ones, served with and without §3.3 tile-granular forking under
+//!     both routing policies. Batch-granular stealing can't help the
+//!     whale itself; the fork must cut p99 ≥ 2× vs untiled stealing
+//!     (enforced on ≥ 4-core machines), byte-identical across all four
+//!     combos.
 //!
 //! The PJRT legs additionally require `make artifacts` and the `pjrt`
 //! feature (they skip gracefully otherwise, so `cargo bench` stays green
@@ -32,9 +38,10 @@ use std::time::{Duration, Instant};
 
 use fairsquare::benchkit::{f, fmt_ns, Bench, CountingAlloc, JsonReport, Measurement, Table};
 use fairsquare::coordinator::{
-    BatchExecutor, ComplexMatmulDirectExecutor, ComplexMatmulExecutor,
+    is_heavy_row, BatchExecutor, ComplexMatmulDirectExecutor, ComplexMatmulExecutor,
     Conv2dDirectExecutor, Conv2dExecutor, DirectKernelExecutor, InferenceServer,
-    PjrtExecutor, Routing, SkewedKernelExecutor, SquareKernelExecutor, WorkloadGen,
+    PjrtExecutor, Routing, SkewedKernelExecutor, SquareKernelExecutor, TileConfig,
+    TilePrep, WorkloadGen,
 };
 use fairsquare::linalg::engine::{
     max_threads, CPlanes, ConvSpec, EngineConfig, PreparedB, PreparedConvBank,
@@ -62,6 +69,9 @@ fn main() {
         gate_failures.push(fail);
     }
     if let Some(fail) = skewed_mix_leg(quick, &mut report) {
+        gate_failures.push(fail);
+    }
+    if let Some(fail) = whale_mix_leg(quick, &mut report) {
         gate_failures.push(fail);
     }
 
@@ -172,21 +182,55 @@ fn steady_state_allocs_leg(report: &mut JsonReport) -> u64 {
         exec.run_into(input, &mut out).unwrap();
         assert_eq!(&out, want, "{name}: buffer reuse changed the results");
     }
+    drop(execs);
+
+    // the tiled path (§3.3): a warmed fork of the same shape must be
+    // allocation-free too — `prepare_tiles` refills the `TilePrep` in
+    // place and `run_tile_into` accumulates into reused disjoint slices
+    let mut prep = TilePrep::default();
+    let mut tile_out = vec![0.0f32; 8 * 16];
+    let tiles = [(0usize, 4usize), (4, 8)];
+    for _ in 0..2 {
+        dense_sq.prepare_tiles(&dense_in, 8, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            dense_sq
+                .run_tile_into(&prep, i0, i1, &mut tile_out[i0 * 16..i1 * 16])
+                .unwrap();
+        }
+    }
+    let before = ALLOC.allocations();
+    for _ in 0..3 {
+        dense_sq.prepare_tiles(&dense_in, 8, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            dense_sq
+                .run_tile_into(&prep, i0, i1, &mut tile_out[i0 * 16..i1 * 16])
+                .unwrap();
+        }
+    }
+    let tiled_allocs = ALLOC.allocations() - before;
+    // and the tile partition reproduces the untiled batch byte-for-byte
+    assert_eq!(tile_out, outs[0], "tiled dense output diverged from run_into");
 
     let mut t = Table::new(
         "E6e — steady-state heap allocations per warmed batch (primary + shadow)",
         &["executors", "rounds", "allocations"],
     );
     t.row(&["6 (dense/conv/complex × square/direct)".into(), "3".into(), allocs.to_string()]);
+    t.row(&["tiled dense (prepare + 2 tiles)".into(), "3".into(), tiled_allocs.to_string()]);
     t.print();
 
     let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
     report.case(
         "steady_state_allocs",
         &m,
-        &[("allocs_steady_state", allocs as f64), ("executors", 6.0), ("rounds", 3.0)],
+        &[
+            ("allocs_steady_state", allocs as f64),
+            ("allocs_steady_state_tiled", tiled_allocs as f64),
+            ("executors", 6.0),
+            ("rounds", 3.0),
+        ],
     );
-    allocs
+    allocs + tiled_allocs
 }
 
 /// E6d — many small requests against the native square-kernel pool.
@@ -475,6 +519,202 @@ fn skewed_mix_leg(quick: bool, report: &mut JsonReport) -> Option<String> {
         }
         if stolen_steal_mode == 0 {
             return Some("steal gate failed: no batches were stolen under skew".into());
+        }
+    } else {
+        println!("(gate not enforced: only {cores} cores available)");
+    }
+    None
+}
+
+/// E6g — the whale-mix A/B the tiling tentpole exists for: ONE giant
+/// request among ~10k small ones, served by 4 workers. Batch-granular
+/// stealing (E6f) cannot help the whale itself — its batch still runs
+/// on exactly one worker at heavy-cost × batch-size — so skewed p99 is
+/// bounded below by the whale's single-core runtime. The §3.3 fork
+/// splits that batch into tile tasks every sibling drains, and only the
+/// tile holding the heavy row pays the skew, so the whale's serial span
+/// shrinks by the batch/tile ratio. Gate: tiled p99 ≥ 2× better than
+/// untiled stealing (enforced on ≥ 4-core machines), with byte-identical
+/// response sets across all four tiled × routing combos.
+fn whale_mix_leg(quick: bool, report: &mut JsonReport) -> Option<String> {
+    let (in_f, out_f, batch, workers) = (128usize, 64usize, 128usize, 4usize);
+    let requests = if quick { 2_560 } else { 10_240 };
+    // exactly one whale, placed mid-stream: under the saturating closed
+    // submit loop below every mid-stream batch forms full, so the whale
+    // rides a full `batch`-row batch (1.25% of requests — above the p99
+    // cut, so the percentile sees the whale's runtime directly)
+    let heavy_every = requests / 2 + 1;
+    let heavy_cost = 512u32;
+    // light full batches cost `batch` light-row units — under the
+    // threshold, never forked; the whale batch costs (batch−1) + 512 and
+    // forks into 16-row tiles, of which only the heavy one re-runs at
+    // the skew cost
+    let tiling =
+        TileConfig { threshold: 256, tile_rows: 16, heavy_cost: heavy_cost as u64 };
+    let cores = max_threads();
+
+    let mut rng = Rng::new(0xE66);
+    let weights = Matrix::from_fn(in_f, out_f, |_, _| (rng.normal() * 0.05) as f32);
+    let (prepared, _) = PreparedB::new_shared(weights);
+    let inputs = WorkloadGen::new(0xE66).skewed_stream(requests, in_f, heavy_every);
+    assert_eq!(
+        inputs.iter().filter(|r| is_heavy_row(r)).count(),
+        1,
+        "the whale mix carries exactly one heavy request"
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "E6g — whale mix ({requests} requests, 1 whale at {heavy_cost}× cost, \
+             batch {batch}, {workers} workers, {cores} cores)"
+        ),
+        &["mode", "p50 µs", "p99 µs", "tiled reqs", "tiles", "stolen"],
+    );
+
+    let combos = [
+        ("untiled_fifo", false, Routing::Fifo),
+        ("untiled_steal", false, Routing::Steal),
+        ("tiled_fifo", true, Routing::Fifo),
+        ("tiled_steal", true, Routing::Steal),
+    ];
+    let mut p99 = [0.0f64; 4];
+    let mut tiles_steal_mode = 0u64;
+    let mut reference_outs: Option<Vec<Vec<f32>>> = None;
+    for (idx, (name, tiled, routing)) in combos.into_iter().enumerate() {
+        let pb = prepared.clone();
+        let srv = InferenceServer::start_tiled(
+            batch,
+            Duration::from_micros(200),
+            requests,
+            0,
+            workers,
+            routing,
+            tiled.then_some(tiling),
+            move |_wid| {
+                Ok(SkewedKernelExecutor::new(
+                    SquareKernelExecutor::from_shared(
+                        pb.clone(),
+                        batch,
+                        EngineConfig::with_threads(1),
+                    ),
+                    heavy_cost,
+                ))
+            },
+            |_wid| Ok(None::<SkewedKernelExecutor>),
+        )
+        .unwrap();
+        // warm round trip (inputs[0] is light by construction; its
+        // size-1 batch sits under the fork threshold either way)
+        let _ = srv.infer(inputs[0].clone()).unwrap();
+
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(requests);
+        for row in &inputs {
+            pending.push(srv.submit(row.clone()).unwrap());
+        }
+        let outs: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = srv.shutdown().unwrap();
+
+        // conservation: every row answered exactly once, tiled or not
+        // (+1 is the warm-up round trip); a forked batch's tiles span its
+        // rows without overlap, so the pooled row count must not move
+        assert_eq!(outs.len(), requests);
+        assert_eq!(stats.rows, requests as u64 + 1, "rows lost or duplicated");
+        assert_eq!(stats.rejected, 0, "queue_depth covers the closed loop");
+        if tiled {
+            assert!(stats.tiled_requests >= 1, "the whale batch never forked");
+            assert!(
+                stats.tiles_executed >= 2 * stats.tiled_requests,
+                "a fork must produce at least two tiles"
+            );
+        } else {
+            assert_eq!(stats.tiles_executed, 0, "untiled legs must not fork");
+            assert_eq!(stats.tiled_requests, 0, "untiled legs must not join");
+        }
+        // the accounting contract: per-worker sums equal pooled totals
+        let tile_sum: u64 = stats.per_worker.iter().map(|w| w.tiles_executed).sum();
+        assert_eq!(tile_sum, stats.tiles_executed, "tile accounting leak");
+        let join_sum: u64 = stats.per_worker.iter().map(|w| w.tiled_requests).sum();
+        assert_eq!(join_sum, stats.tiled_requests, "join accounting leak");
+        // forking must never change results: all four combos reproduce
+        // the same responses bit-for-bit
+        if let Some(want) = &reference_outs {
+            assert_eq!(&outs, want, "{name}: tiling/routing changed results");
+        } else {
+            reference_outs = Some(outs);
+        }
+        if tiled && routing == Routing::Steal {
+            tiles_steal_mode = stats.tiles_executed;
+        }
+
+        p99[idx] = stats.latency.p99_us;
+        t.row(&[
+            name.into(),
+            f(stats.latency.p50_us, 0),
+            f(stats.latency.p99_us, 0),
+            stats.tiled_requests.to_string(),
+            stats.tiles_executed.to_string(),
+            stats.stolen_batches.to_string(),
+        ]);
+        let m = Measurement {
+            iters: 1,
+            mean_ns: wall * 1e9 / requests as f64,
+            median_ns: stats.latency.p50_us * 1e3,
+            stddev_ns: 0.0,
+            min_ns: 0.0,
+        };
+        report.case(
+            &format!("whale_mix_{name}"),
+            &m,
+            &[
+                ("workers", workers as f64),
+                ("requests", requests as f64),
+                ("heavy_cost", heavy_cost as f64),
+                ("tiled", if tiled { 1.0 } else { 0.0 }),
+                ("p50_us", stats.latency.p50_us),
+                ("p99_us", stats.latency.p99_us),
+                ("tiled_requests", stats.tiled_requests as f64),
+                ("tiles_executed", stats.tiles_executed as f64),
+                ("stolen_batches", stats.stolen_batches as f64),
+                ("cores", cores as f64),
+            ],
+        );
+    }
+    t.print();
+
+    // the headline ratio: untiled stealing (the PR 5 best case) vs the
+    // §3.3 fork under the same stealing pool
+    let ratio = if p99[3] > 0.0 { p99[1] / p99[3] } else { 0.0 };
+    let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
+    report.case(
+        "whale_mix_gate",
+        &m,
+        &[
+            ("tiled_p99_ratio", ratio),
+            ("untiled_steal_p99_us", p99[1]),
+            ("tiled_steal_p99_us", p99[3]),
+            ("tiles_executed", tiles_steal_mode as f64),
+            ("cores", cores as f64),
+        ],
+    );
+    println!(
+        "\nwhale gate: tiled p99 is {ratio:.2}× better than untiled stealing \
+         (target ≥ 2.0×, {tiles_steal_mode} tiles executed)"
+    );
+    if cores >= 4 {
+        if ratio < 2.0 {
+            return Some(format!(
+                "whale gate failed: untiled-steal p99 {:.0} µs / tiled-steal p99 \
+                 {:.0} µs = {ratio:.2}× < 2.0×",
+                p99[1], p99[3]
+            ));
+        }
+        if tiles_steal_mode == 0 {
+            return Some("whale gate failed: the whale batch never forked".into());
         }
     } else {
         println!("(gate not enforced: only {cores} cores available)");

@@ -68,6 +68,13 @@ pub struct Metrics {
     /// deque held stealable work — successful or not; the steal pressure
     /// gauge (idle wake-ups with nothing queued are not counted)
     pub steal_attempts: u64,
+    /// §3.3 tile tasks this worker executed (each also counts one entry
+    /// in `batches` and its row span in `rows`)
+    pub tiles_executed: u64,
+    /// forked (whale) requests whose *join* stage this worker ran — the
+    /// last tile landed here; pool-wide this counts tiled requests
+    /// exactly once
+    pub tiled_requests: u64,
     started: Instant,
 }
 
@@ -99,6 +106,8 @@ impl Metrics {
             shadow_errors: 0,
             stolen_batches: 0,
             steal_attempts: 0,
+            tiles_executed: 0,
+            tiled_requests: 0,
             started: Instant::now(),
         }
     }

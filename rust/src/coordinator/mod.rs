@@ -11,6 +11,13 @@
 //! blocks the pool), per-request latency metrics with pooled and
 //! per-worker views, and an optional shadow baseline that cross-checks
 //! the square-based model against the direct twin on sampled batches.
+//! Whale batches — whose estimated cost clears a `--tile-threshold` —
+//! are *forked* by the dispatcher into row-tile tasks that ride the same
+//! deques ([`TileConfig`]/[`TilePrep`]): the §3.3 corrections are
+//! hoisted once per request, the tiles write disjoint slices of one
+//! output buffer, and an atomic join counter completes the response when
+//! the last tile lands, so one giant request occupies the whole pool
+//! instead of one worker.
 //!
 //! Throughput scales the way the paper's multi-PE hardware does: by
 //! replicating cheap square units behind one dispatcher, not by growing
@@ -46,6 +53,7 @@ pub use native::{
     Conv2dExecutor, DirectKernelExecutor, SkewedKernelExecutor, SquareKernelExecutor,
 };
 pub use server::{
-    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, WorkerStats,
+    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, TileConfig,
+    TilePrep, WorkerStats,
 };
 pub use workload::{is_heavy_row, WorkloadGen, SKEW_HEAVY_MARKER};

@@ -51,12 +51,13 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::linalg::engine::{
-    matmul_direct_blocked_into, matmul_square_prepared_into, CPlanes, ConvSpec,
+    im2col_nchw_into, matmul_direct_blocked_into, matmul_square_prepared_into,
+    matmul_square_prepared_tile_into, row_corrections_into, CPlanes, ConvSpec,
     EngineConfig, EngineWorkspace, PreparedB, PreparedConvBank, PreparedCpm3,
 };
 use crate::linalg::Matrix;
 
-use super::server::BatchExecutor;
+use super::server::{BatchExecutor, TilePrep};
 use super::workload::is_heavy_row;
 
 /// Square-kernel batch executor: one constant weight matrix
@@ -137,6 +138,54 @@ impl BatchExecutor for SquareKernelExecutor {
         let _ops =
             matmul_square_prepared_into(&x, &self.weights, &self.cfg, &mut self.ws, out);
         self.ws.give_back(x.into_data());
+        Ok(())
+    }
+
+    fn supports_tiles(&self) -> bool {
+        true
+    }
+
+    fn prepare_tiles(
+        &mut self,
+        rows_flat: &[f32],
+        rows: usize,
+        prep: &mut TilePrep,
+    ) -> Result<()> {
+        let n = self.weights.in_features();
+        if rows_flat.len() != rows * n {
+            return Err(anyhow!(
+                "tiled batch has {} values, {rows} rows of {n} expected",
+                rows_flat.len()
+            ));
+        }
+        let mut buf = prep.take_buf(0);
+        buf.clear();
+        buf.extend_from_slice(rows_flat);
+        prep.a[0] = Matrix::from_vec(rows, n, buf);
+        // the §3.3 hoist: full-row corrections computed ONCE per request
+        prep.sa[0].clear();
+        prep.sa[0].resize(rows, 0.0);
+        row_corrections_into(&prep.a[0], &mut prep.sa[0]);
+        prep.rows = rows;
+        Ok(())
+    }
+
+    fn run_tile_into(
+        &mut self,
+        prep: &TilePrep,
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [f32],
+    ) -> Result<()> {
+        let _ops = matmul_square_prepared_tile_into(
+            &prep.a[0],
+            &self.weights,
+            &prep.sa[0],
+            i0,
+            i1,
+            out_tile,
+            &self.cfg,
+        );
         Ok(())
     }
 }
@@ -355,6 +404,76 @@ impl BatchExecutor for Conv2dExecutor {
             &mut self.ws,
             out,
         )?;
+        Ok(())
+    }
+
+    fn supports_tiles(&self) -> bool {
+        true
+    }
+
+    fn prepare_tiles(
+        &mut self,
+        rows_flat: &[f32],
+        rows: usize,
+        prep: &mut TilePrep,
+    ) -> Result<()> {
+        let c = &self.core;
+        let img_len = c.row_len();
+        if rows_flat.len() != rows * img_len {
+            return Err(anyhow!(
+                "tiled batch has {} values, {rows} images of {img_len} expected",
+                rows_flat.len()
+            ));
+        }
+        // lower the whole request once: the patch matrix is the tile
+        // entry's A operand, each request row owning `k_out` patch rows
+        let taps = c.bank.taps();
+        let patch_rows = rows * c.out_pixels;
+        let mut buf = prep.take_buf(0);
+        buf.clear();
+        buf.resize(patch_rows * taps, 0.0);
+        im2col_nchw_into(&mut buf, rows_flat, rows, c.in_h, c.in_w, c.bank.spec());
+        prep.a[0] = Matrix::from_vec(patch_rows, taps, buf);
+        // the §3.3 hoist: full patch-row corrections computed ONCE
+        prep.sa[0].clear();
+        prep.sa[0].resize(patch_rows, 0.0);
+        row_corrections_into(&prep.a[0], &mut prep.sa[0]);
+        prep.rows = rows;
+        Ok(())
+    }
+
+    fn run_tile_into(
+        &mut self,
+        prep: &TilePrep,
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [f32],
+    ) -> Result<()> {
+        let c = &self.core;
+        let k_out = c.out_pixels;
+        let filters = c.bank.filters();
+        // a request-row tile [i0, i1) is the patch-row tile
+        // [i0·k_out, i1·k_out) of the lowered matmul
+        let mut ct = self.ws.checkout((i1 - i0) * k_out * filters);
+        let _ops = matmul_square_prepared_tile_into(
+            &prep.a[0],
+            c.bank.prepared(),
+            &prep.sa[0],
+            i0 * k_out,
+            i1 * k_out,
+            &mut ct,
+            &c.cfg,
+        );
+        // scatter [patch_row][filter] -> per-image [filter][out_pixel]
+        for r in 0..(i1 - i0) {
+            for pix in 0..k_out {
+                let c_row = &ct[(r * k_out + pix) * filters..][..filters];
+                for (f, &v) in c_row.iter().enumerate() {
+                    out_tile[(r * filters + f) * k_out + pix] = v;
+                }
+            }
+        }
+        self.ws.give_back(ct);
         Ok(())
     }
 }
@@ -590,6 +709,97 @@ impl BatchExecutor for ComplexMatmulExecutor {
         self.core.join_plane_rows_into(&self.z_re, &self.z_im, out);
         Ok(())
     }
+
+    fn supports_tiles(&self) -> bool {
+        true
+    }
+
+    fn prepare_tiles(
+        &mut self,
+        rows_flat: &[f32],
+        rows: usize,
+        prep: &mut TilePrep,
+    ) -> Result<()> {
+        let n = self.core.in_features;
+        let row_len = 2 * n;
+        if rows_flat.len() != rows * row_len {
+            return Err(anyhow!(
+                "tiled batch has {} values, {rows} rows of {row_len} expected",
+                rows_flat.len()
+            ));
+        }
+        // deinterleave once into the three CPM3 pass operands:
+        // slot 0 = A+B (derived sum plane), slot 1 = B (im), slot 2 = A (re)
+        let mut sum = prep.take_buf(0);
+        let mut im = prep.take_buf(1);
+        let mut re = prep.take_buf(2);
+        for buf in [&mut sum, &mut im, &mut re] {
+            buf.clear();
+            buf.resize(rows * n, 0.0);
+        }
+        for i in 0..rows {
+            let row = &rows_flat[i * row_len..(i + 1) * row_len];
+            re[i * n..(i + 1) * n].copy_from_slice(&row[..n]);
+            im[i * n..(i + 1) * n].copy_from_slice(&row[n..]);
+            for ((d, &a), &b) in sum[i * n..(i + 1) * n]
+                .iter_mut()
+                .zip(&row[..n])
+                .zip(&row[n..])
+            {
+                *d = a + b;
+            }
+        }
+        prep.a[0] = Matrix::from_vec(rows, n, sum);
+        prep.a[1] = Matrix::from_vec(rows, n, im);
+        prep.a[2] = Matrix::from_vec(rows, n, re);
+        // the §3.3 hoist: all three full-row correction vectors, ONCE
+        for slot in 0..3 {
+            prep.sa[slot].clear();
+            prep.sa[slot].resize(rows, 0.0);
+            row_corrections_into(&prep.a[slot], &mut prep.sa[slot]);
+        }
+        prep.rows = rows;
+        Ok(())
+    }
+
+    fn run_tile_into(
+        &mut self,
+        prep: &TilePrep,
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [f32],
+    ) -> Result<()> {
+        let p = self.core.out_features;
+        let mi = i1 - i0;
+        let mut zre = self.ws.checkout(mi * p);
+        let mut zim = self.ws.checkout(mi * p);
+        let result = self.weights.mul_tile_into(
+            &prep.a[0],
+            &prep.a[1],
+            &prep.a[2],
+            &prep.sa[0],
+            &prep.sa[1],
+            &prep.sa[2],
+            i0,
+            i1,
+            &self.core.cfg,
+            &mut self.ws,
+            &mut zre,
+            &mut zim,
+        );
+        if result.is_ok() {
+            // interleave the tile's result planes into [re…, im…] rows
+            for r in 0..mi {
+                let row = &mut out_tile[r * 2 * p..(r + 1) * 2 * p];
+                row[..p].copy_from_slice(&zre[r * p..(r + 1) * p]);
+                row[p..].copy_from_slice(&zim[r * p..(r + 1) * p]);
+            }
+        }
+        self.ws.give_back(zre);
+        self.ws.give_back(zim);
+        result?;
+        Ok(())
+    }
 }
 
 /// 4-mult schoolbook twin of [`ComplexMatmulExecutor`] over the same
@@ -728,6 +938,36 @@ impl BatchExecutor for SkewedKernelExecutor {
         let reps = if heavy { self.heavy_cost } else { 1 };
         for _ in 0..reps {
             self.inner.run_into(rows_flat, out)?;
+        }
+        Ok(())
+    }
+
+    fn supports_tiles(&self) -> bool {
+        true
+    }
+
+    fn prepare_tiles(
+        &mut self,
+        rows_flat: &[f32],
+        rows: usize,
+        prep: &mut TilePrep,
+    ) -> Result<()> {
+        self.inner.prepare_tiles(rows_flat, rows, prep)
+    }
+
+    fn run_tile_into(
+        &mut self,
+        prep: &TilePrep,
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [f32],
+    ) -> Result<()> {
+        // the tiling payoff: only the tile that holds a heavy row pays
+        // the skew — untiled, one heavy row taxes the whole batch
+        let heavy = (i0..i1).any(|i| is_heavy_row(prep.a[0].row(i)));
+        let reps = if heavy { self.heavy_cost } else { 1 };
+        for _ in 0..reps {
+            self.inner.run_tile_into(prep, i0, i1, out_tile)?;
         }
         Ok(())
     }

@@ -64,9 +64,9 @@
 //! A long-lived server therefore answers stats polls in O(workers), not
 //! O(requests served).
 
-use std::cell::Cell;
+use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
 };
@@ -76,10 +76,52 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::linalg::Matrix;
+
 use super::batcher::{Batcher, Pending};
 use super::metrics::{
     latency_stats_from, merge_latency_summaries, LatencyStats, Metrics,
 };
+use super::workload::is_heavy_row;
+
+/// Per-request state a tiled execution hoists exactly once at fork time
+/// (§3.3): the lowered pass operands (the dense row plane, the
+/// post-im2col patch matrix, or the CPM3 pass planes) plus their
+/// FULL-row corrections from
+/// [`row_corrections_into`](crate::linalg::engine::row_corrections_into).
+/// Every tile of the request reads this through its shared job handle —
+/// the corrections are computed once per request, never per tile, which
+/// the cross-layer ledger test asserts against
+/// [`square_matmul_const_b_ledger`](crate::linalg::engine::square_matmul_const_b_ledger).
+///
+/// The buffers are recycled through the pool's tile freelist: a warmed
+/// fork refills them in place (`clear` + `extend`/`resize`), so tiling a
+/// steady-state whale allocates nothing executor-side.
+pub struct TilePrep {
+    /// lowered row-operand matrices, one per square pass: dense and conv
+    /// use slot 0; CPM3 uses all three (`A+B`, `B`, `A`)
+    pub a: [Matrix<f32>; 3],
+    /// hoisted full-row corrections, aligned with `a`
+    pub sa: [Vec<f32>; 3],
+    /// request rows the tile ranges `[i0, i1)` partition
+    pub rows: usize,
+}
+
+impl Default for TilePrep {
+    fn default() -> Self {
+        let empty = || Matrix::from_vec(0, 0, Vec::new());
+        Self { a: [empty(), empty(), empty()], sa: Default::default(), rows: 0 }
+    }
+}
+
+impl TilePrep {
+    /// Reclaim pass-`slot`'s operand storage for refilling (capacity
+    /// intact, contents stale) — the executors' zero-allocation reuse
+    /// path between forks of the same shape.
+    pub fn take_buf(&mut self, slot: usize) -> Vec<f32> {
+        std::mem::replace(&mut self.a[slot], Matrix::from_vec(0, 0, Vec::new())).into_data()
+    }
+}
 
 /// Executes one padded batch of rows. Implemented by the PJRT engine and
 /// by in-process mocks for tests.
@@ -100,6 +142,40 @@ pub trait BatchExecutor {
     fn run_into(&mut self, rows_flat: &[f32], out: &mut Vec<f32>) -> Result<()> {
         *out = self.run(rows_flat)?;
         Ok(())
+    }
+    /// Whether [`Self::prepare_tiles`]/[`Self::run_tile_into`] are
+    /// implemented — i.e. whether the dispatcher may fork this executor's
+    /// whale batches into §3.3 tile tasks. Default: no; the native square
+    /// executors opt in.
+    fn supports_tiles(&self) -> bool {
+        false
+    }
+    /// Fork stage, run ONCE per tiled request batch: lower the occupied
+    /// rows (`rows · row_len()` values, unpadded) and hoist the full-row
+    /// corrections into `prep`, reusing its buffers. The contract:
+    /// [`Self::run_tile_into`] over any disjoint partition of `[0, rows)`
+    /// must reproduce [`Self::run_into`]'s occupied output rows
+    /// byte-identically.
+    fn prepare_tiles(
+        &mut self,
+        _rows_flat: &[f32],
+        _rows: usize,
+        _prep: &mut TilePrep,
+    ) -> Result<()> {
+        Err(anyhow!("executor does not support tiled execution"))
+    }
+    /// Execute one row tile of a prepared request: compute output rows
+    /// `[i0, i1)` into `out_tile` — exactly `(i1−i0)·out_len()` values,
+    /// the tile's disjoint sub-slice of the request's output buffer, so
+    /// concurrent tiles of one request need no locking.
+    fn run_tile_into(
+        &mut self,
+        _prep: &TilePrep,
+        _i0: usize,
+        _i1: usize,
+        _out_tile: &mut [f32],
+    ) -> Result<()> {
+        Err(anyhow!("executor does not support tiled execution"))
     }
 }
 
@@ -185,6 +261,97 @@ struct Request {
 /// drained by the worker that executes it, and recycled.
 type Items = Vec<Pending<Request>>;
 
+/// Fork policy for tile-granular intra-request parallelism — the
+/// `--tile-threshold` / `--tile` knobs. A formed batch whose estimated
+/// cost (in light-row units, with whale-marked rows weighted by
+/// `heavy_cost`) exceeds `threshold` is split into `tile_rows`-row tile
+/// tasks injected across the deques, so one whale request occupies the
+/// whole pool instead of one worker.
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    /// estimated batch cost above which the dispatcher forks
+    pub threshold: u64,
+    /// rows per tile task (`--tile`)
+    pub tile_rows: usize,
+    /// cost of one heavy ([`is_heavy_row`]) row in light-row units —
+    /// mirrors the executor's skew so the estimate sees what a worker
+    /// would pay
+    pub heavy_cost: u64,
+}
+
+/// The tiled request's output buffer. Tiles write their disjoint
+/// `[i0·out_len, i1·out_len)` ranges concurrently without locking — the
+/// engine tile contract — so the interior mutability is raw.
+///
+/// SAFETY argument, in full: (a) the fork stage assigns each tile task a
+/// distinct range of a partition of the rows, so no two live `range_mut`
+/// borrows overlap; (b) the join counter's `AcqRel` decrement in
+/// [`run_tile`] sequences every tile's writes before the join stage's
+/// read; (c) the buffer is never resized while tiles are in flight.
+struct TileOut(UnsafeCell<Vec<f32>>);
+
+// SAFETY: see the type-level argument — disjoint writes + AcqRel join.
+unsafe impl Sync for TileOut {}
+
+impl TileOut {
+    /// SAFETY: the caller must be the only live task touching `[lo, hi)`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+        &mut (*self.0.get())[lo..hi]
+    }
+
+    /// SAFETY: the caller must have established happens-before with every
+    /// writer (the join counter observed at zero).
+    unsafe fn all(&self, len: usize) -> &[f32] {
+        &(*self.0.get())[..len]
+    }
+}
+
+/// The shared fork/join state of one tiled (whale) request batch: the
+/// §3.3 prep hoisted exactly once, the pending requests, the
+/// request-wide output buffer the tiles' disjoint row ranges land in,
+/// and the atomic remaining-tile counter whose last decrementer runs the
+/// join stage.
+struct TileJob {
+    /// hoisted per-request state — lowered operands + full-row
+    /// corrections, computed once by the dispatcher's fork executor
+    prep: TilePrep,
+    /// the batch's pending requests, taken by the join-stage worker
+    items: Mutex<Option<Items>>,
+    /// per-request output buffer (`rows · out_len`), recycled through the
+    /// pool's tile freelist
+    out: TileOut,
+    /// tiles not yet landed; `fetch_sub(1, AcqRel) == 1` elects the join
+    remaining: AtomicUsize,
+    /// first tile error, if any — the join stage reports it to every
+    /// request of the batch
+    error: Mutex<Option<String>>,
+}
+
+/// One `(mi)` tile of a forked request: its row range plus the shared
+/// job handle. Rides the same deques (and steals) as whole batches.
+struct TileTask {
+    job: Arc<TileJob>,
+    i0: usize,
+    i1: usize,
+}
+
+/// Recyclable backing store of one tile job — checked out of the pool's
+/// tile freelist at fork, returned at join, so a warmed whale forks
+/// without fresh heap allocations for its prep planes or output buffer.
+#[derive(Default)]
+struct TileParts {
+    prep: TilePrep,
+    out: Vec<f32>,
+}
+
+/// One schedulable unit on a worker deque: a whole formed batch, or one
+/// tile of a forked whale batch.
+enum Work {
+    Batch(Items),
+    Tile(TileTask),
+}
+
 /// Client → dispatcher messages. `Shutdown` optionally carries a reply
 /// channel so [`InferenceServer::shutdown`] can collect the *final*
 /// pooled stats — taken after the batcher flush *and* after every
@@ -214,7 +381,7 @@ enum Job {
 /// per pop) lock contention is noise, and the invariant is easy to audit:
 /// a batch is removed from a deque exactly once, under its mutex.
 struct DequePool {
-    queues: Vec<Mutex<VecDeque<Items>>>,
+    queues: Vec<Mutex<VecDeque<Work>>>,
     /// set by a panicking worker's guard; dead deques are skipped by the
     /// injector and drained into live siblings by [`Self::abandon`]
     dead: Vec<AtomicBool>,
@@ -224,6 +391,9 @@ struct DequePool {
     /// batch, the executing worker drains it and gives it back — zero
     /// per-batch allocations here at steady state
     spares: Mutex<Vec<Items>>,
+    /// recycled tile-job backings (prep planes + output buffer): checked
+    /// out by the fork stage, returned by the join stage
+    tile_spares: Mutex<Vec<TileParts>>,
     /// whether workers raid siblings ([`Routing::Steal`])
     steal: bool,
 }
@@ -257,6 +427,7 @@ impl DequePool {
             }),
             cv: Condvar::new(),
             spares: Mutex::new(Vec::new()),
+            tile_spares: Mutex::new(Vec::new()),
             steal,
         })
     }
@@ -287,34 +458,43 @@ impl DequePool {
         self.spares.lock().unwrap().push(items);
     }
 
-    /// Place a batch at the bottom (owner end) of worker `w`'s deque
+    fn checkout_tile_parts(&self) -> TileParts {
+        self.tile_spares.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn recycle_tile_parts(&self, parts: TileParts) {
+        self.tile_spares.lock().unwrap().push(parts);
+    }
+
+    /// Place a work unit at the bottom (owner end) of worker `w`'s deque
     /// WITHOUT touching the in-flight account — re-injection keeps the
     /// original slot. The dead flag is re-checked *under the queue lock*:
-    /// [`Self::abandon`] sets it before draining, so a batch can never
+    /// [`Self::abandon`] sets it before draining, so a unit can never
     /// land on a deque after its owner's corpse was emptied — `Err` hands
-    /// the batch back for rerouting instead of stranding it.
-    fn requeue(&self, w: usize, items: Items) -> Result<(), Items> {
+    /// it back for rerouting instead of stranding it.
+    fn requeue(&self, w: usize, work: Work) -> Result<(), Work> {
         let mut q = self.queues[w].lock().unwrap();
         if self.dead[w].load(Ordering::Acquire) {
-            return Err(items);
+            return Err(work);
         }
-        q.push_back(items);
+        q.push_back(work);
         Ok(())
     }
 
-    /// Injector: place a batch at the bottom (owner end) of worker `w`'s
-    /// deque and account it in flight. `Err` means `w` died first —
-    /// reroute and try again. The accounts are reserved BEFORE the batch
-    /// becomes poppable: a fast worker may pop, execute and `batch_done`
-    /// it before this thread would otherwise get back to the gate, and
-    /// the in-flight/queued counters must never underflow.
-    fn push(&self, w: usize, items: Items) -> Result<(), Items> {
+    /// Injector: place a work unit (a formed batch or one tile of a
+    /// forked whale) at the bottom (owner end) of worker `w`'s deque and
+    /// account it in flight. `Err` means `w` died first — reroute and try
+    /// again. The accounts are reserved BEFORE the unit becomes poppable:
+    /// a fast worker may pop, execute and `batch_done` it before this
+    /// thread would otherwise get back to the gate, and the
+    /// in-flight/queued counters must never underflow.
+    fn push(&self, w: usize, work: Work) -> Result<(), Work> {
         {
             let mut g = self.gate.lock().unwrap();
             g.in_flight += 1;
             g.queued += 1;
         }
-        let result = self.requeue(w, items);
+        let result = self.requeue(w, work);
         let mut g = self.gate.lock().unwrap();
         if result.is_err() {
             g.in_flight -= 1;
@@ -344,7 +524,7 @@ impl DequePool {
     /// single-worker pool, or a pool whose siblings have all died — the
     /// owner takes the *oldest* batch instead: plain per-worker FIFO, so
     /// no batch can starve.
-    fn pop_own(&self, w: usize) -> Option<Items> {
+    fn pop_own(&self, w: usize) -> Option<Work> {
         let lifo = self.steal && self.live_workers() > 1;
         let popped = {
             let mut q = self.queues[w].lock().unwrap();
@@ -371,13 +551,13 @@ impl DequePool {
     /// take the *oldest* batch — FIFO from the top — of the first
     /// non-empty deque, so a steal always relieves the most
     /// latency-starved work first.
-    fn steal_from(&self, w: usize) -> Option<Items> {
+    fn steal_from(&self, w: usize) -> Option<Work> {
         let n = self.queues.len();
         for off in 1..n {
             let v = (w + off) % n;
-            if let Some(items) = self.queues[v].lock().unwrap().pop_front() {
+            if let Some(work) = self.queues[v].lock().unwrap().pop_front() {
                 self.gate.lock().unwrap().queued -= 1;
-                return Some(items);
+                return Some(work);
             }
         }
         None
@@ -460,23 +640,23 @@ impl DequePool {
     /// of the batch it was executing, whose responses die with the stack.
     fn abandon(&self, w: usize, executing: bool) {
         self.dead[w].store(true, Ordering::Release);
-        let orphans: Vec<Items> = {
+        let orphans: Vec<Work> = {
             let mut q = self.queues[w].lock().unwrap();
             q.drain(..).collect()
         };
         let mut dropped = 0usize;
-        for mut items in orphans {
+        for mut work in orphans {
             loop {
                 match self.shortest_alive() {
-                    Some(v) => match self.requeue(v, items) {
+                    Some(v) => match self.requeue(v, work) {
                         Ok(()) => break,
                         // that sibling died in the meantime: pick again
-                        Err(back) => items = back,
+                        Err(back) => work = back,
                     },
                     None => {
-                        // the whole pool is gone: dropping the items
-                        // closes every response channel, which clients
-                        // observe
+                        // the whole pool is gone: dropping the work
+                        // (items, or a tile's job handle) closes every
+                        // response channel, which clients observe
                         dropped += 1;
                         break;
                     }
@@ -524,6 +704,8 @@ struct WorkerSnapshot {
     shadow_errors: u64,
     stolen_batches: u64,
     steal_attempts: u64,
+    tiles_executed: u64,
+    tiled_requests: u64,
     latency: LatencyStats,
     raw_latencies_us: Option<Vec<f64>>,
 }
@@ -544,6 +726,11 @@ pub struct WorkerStats {
     /// times this worker ran dry and scanned its siblings while work was
     /// queued somewhere
     pub steal_attempts: u64,
+    /// §3.3 tile tasks this worker executed (each also counts once in
+    /// `batches`, with its row span in `rows`)
+    pub tiles_executed: u64,
+    /// forked whale batches whose join stage (last tile) landed here
+    pub tiled_requests: u64,
 }
 
 /// Snapshot of server metrics: the pooled view plus one entry per worker.
@@ -563,6 +750,13 @@ pub struct ServerStats {
     pub stolen_batches: u64,
     /// pool-wide sibling-scan total — how often workers went hunting
     pub steal_attempts: u64,
+    /// pool-wide §3.3 tile-task total: every tile of every forked whale
+    /// batch, counted once by its executing worker (and once in
+    /// `batches`) — per-worker sums equal this exactly
+    pub tiles_executed: u64,
+    /// whale batches the dispatcher forked into tiles — counted exactly
+    /// once each, by the worker that ran the join stage
+    pub tiled_requests: u64,
     pub rejected: u64,
     /// pool width the server was started with
     pub workers: usize,
@@ -626,6 +820,43 @@ impl InferenceServer {
         shadow_every: u64,
         workers: usize,
         routing: Routing,
+        make_exec: impl Fn(usize) -> Result<E> + Send + Sync + 'static,
+        make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
+    ) -> Result<Self>
+    where
+        E: BatchExecutor,
+        S: BatchExecutor,
+    {
+        Self::start_tiled(
+            max_batch,
+            max_wait,
+            queue_depth,
+            shadow_every,
+            workers,
+            routing,
+            None,
+            make_exec,
+            make_shadow,
+        )
+    }
+
+    /// [`Self::start_routed`] plus tile-granular intra-request
+    /// parallelism: with `tiling = Some(cfg)`, the dispatcher forks any
+    /// formed batch whose estimated cost exceeds `cfg.threshold` into
+    /// `cfg.tile_rows`-row [`TileTask`]s spread across the deques (§3.3 —
+    /// corrections hoisted once per request by a dispatcher-owned
+    /// executor instance, which `make_exec` is called one extra time to
+    /// build, with id `workers`). Executors that do not
+    /// [`BatchExecutor::supports_tiles`] silently disable the fork stage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_tiled<E, S>(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        shadow_every: u64,
+        workers: usize,
+        routing: Routing,
+        tiling: Option<TileConfig>,
         make_exec: impl Fn(usize) -> Result<E> + Send + Sync + 'static,
         make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
@@ -704,6 +935,7 @@ impl InferenceServer {
             }
         };
 
+        let fork_exec = Arc::clone(&make_exec);
         let dispatcher = std::thread::Builder::new()
             .name("fairsquare-dispatch".into())
             .spawn(move || {
@@ -716,6 +948,8 @@ impl InferenceServer {
                     max_batch.min(batch_rows).max(1),
                     max_wait,
                     queue_depth,
+                    tiling,
+                    fork_exec,
                 );
             })
             .expect("spawning dispatcher");
@@ -826,26 +1060,93 @@ fn route(pool: &DequePool, routing: Routing, rr: &mut usize) -> Option<usize> {
     }
 }
 
-/// Route + push one batch, rerouting if the chosen worker dies in the
-/// race window. With no live worker left the batch is dropped, which
+/// Route + push one work unit, rerouting if the chosen worker dies in
+/// the race window. With no live worker left the unit is dropped, which
 /// closes the clients' response channels — the only honest answer left.
-fn inject(pool: &DequePool, routing: Routing, rr: &mut usize, mut items: Items) {
+fn inject(pool: &DequePool, routing: Routing, rr: &mut usize, mut work: Work) {
     loop {
         match route(pool, routing, rr) {
-            Some(w) => match pool.push(w, items) {
+            Some(w) => match pool.push(w, work) {
                 Ok(()) => return,
-                Err(back) => items = back,
+                Err(back) => work = back,
             },
             None => return,
         }
     }
 }
 
+/// The dispatcher's fork-stage state: its own executor instance (for the
+/// executor-specific per-request prep — im2col, plane split, row
+/// corrections) plus the reused staging plane for the occupied rows.
+struct ForkState<E> {
+    exec: E,
+    cfg: TileConfig,
+    flat: Vec<f32>,
+}
+
+/// The fork stage: if the formed batch's estimated cost exceeds the
+/// threshold and it spans at least two tiles, hoist the request's §3.3
+/// prep ONCE (full-row corrections against the whole batch) and inject
+/// its row tiles across the deques — under [`Routing::Steal`] each tile
+/// lands on the then-shortest live deque. Returns the batch back
+/// unchanged when it is not a whale (or prep fails, in which case it is
+/// served whole rather than failed).
+fn try_fork<E: BatchExecutor>(
+    pool: &Arc<DequePool>,
+    routing: Routing,
+    rr: &mut usize,
+    items: Items,
+    fork: &mut ForkState<E>,
+) -> Result<(), Items> {
+    let rows = items.len();
+    let tile = fork.cfg.tile_rows.max(1);
+    let tiles = rows.div_ceil(tile);
+    if tiles < 2 {
+        return Err(items);
+    }
+    let cost: u64 = items
+        .iter()
+        .map(|p| if is_heavy_row(&p.payload.input) { fork.cfg.heavy_cost } else { 1 })
+        .sum();
+    if cost <= fork.cfg.threshold {
+        return Err(items);
+    }
+
+    let row_len = fork.exec.row_len();
+    fork.flat.clear();
+    fork.flat.resize(rows * row_len, 0.0);
+    for (i, p) in items.iter().enumerate() {
+        fork.flat[i * row_len..(i + 1) * row_len].copy_from_slice(&p.payload.input);
+    }
+    let mut parts = pool.checkout_tile_parts();
+    if fork.exec.prepare_tiles(&fork.flat, rows, &mut parts.prep).is_err() {
+        pool.recycle_tile_parts(parts);
+        return Err(items);
+    }
+    let TileParts { prep, mut out } = parts;
+    out.clear();
+    out.resize(rows * fork.exec.out_len(), 0.0);
+    let job = Arc::new(TileJob {
+        prep,
+        items: Mutex::new(Some(items)),
+        out: TileOut(UnsafeCell::new(out)),
+        remaining: AtomicUsize::new(tiles),
+        error: Mutex::new(None),
+    });
+    for t in 0..tiles {
+        let (i0, i1) = (t * tile, ((t + 1) * tile).min(rows));
+        let task = TileTask { job: Arc::clone(&job), i0, i1 };
+        inject(pool, routing, rr, Work::Tile(task));
+    }
+    Ok(())
+}
+
 /// The dispatcher: owns the batcher and the rejection counter, injects
 /// formed batches onto the worker deques (never blocking on a busy
-/// worker), aggregates pool-wide stats on demand.
+/// worker) — forking whale batches into tiles when tiling is configured —
+/// and aggregates pool-wide stats on demand.
 #[allow(clippy::too_many_arguments)]
-fn dispatch_loop(
+fn dispatch_loop<E: BatchExecutor>(
     rx: Receiver<Msg>,
     ctl_txs: Vec<Sender<Job>>,
     pool: Arc<DequePool>,
@@ -854,6 +1155,8 @@ fn dispatch_loop(
     max_batch: usize,
     max_wait: Duration,
     queue_depth: usize,
+    tiling: Option<TileConfig>,
+    make_exec: Arc<impl Fn(usize) -> Result<E> + Send + Sync + 'static>,
 ) {
     let mut batcher: Batcher<Request> = Batcher::new(max_batch, max_wait, queue_depth);
     let mut rejected = 0u64;
@@ -863,6 +1166,16 @@ fn dispatch_loop(
     // once — overflow waits in the batcher, whose own bound rejects with
     // the explicit back-pressure error
     let inflight_cap = (2 * workers).max(4);
+    // the fork stage's own executor (built in-thread, id one past the
+    // worker ids, so non-`Send` engines stay legal): prepare_tiles is
+    // executor-specific, and a dispatcher-owned instance guarantees the
+    // §3.3 hoist happens exactly once per request, raced by nobody. An
+    // executor that cannot tile (or fails to build) disables forking.
+    let mut fork: Option<ForkState<E>> = tiling.and_then(|cfg| {
+        let exec = make_exec(workers).ok()?;
+        exec.supports_tiles()
+            .then(|| ForkState { exec, cfg, flat: Vec::new() })
+    });
 
     'outer: loop {
         // wait for work, bounded by the batcher's next deadline
@@ -916,19 +1229,33 @@ fn dispatch_loop(
                 pool.recycle_items(items);
                 break;
             }
-            inject(&pool, routing, &mut rr, items);
+            let items = match fork.as_mut() {
+                Some(f) => match try_fork(&pool, routing, &mut rr, items, f) {
+                    Ok(()) => continue,
+                    Err(back) => back,
+                },
+                None => items,
+            };
+            inject(&pool, routing, &mut rr, Work::Batch(items));
         }
     }
 
     // shutdown: flush everything left onto the deques (the bound does not
-    // apply — these rows were already admitted)…
+    // apply — these rows were already admitted; whales still fork)…
     loop {
         let mut items = pool.checkout_items();
         if !batcher.drain_into(&mut items) {
             pool.recycle_items(items);
             break;
         }
-        inject(&pool, routing, &mut rr, items);
+        let items = match fork.as_mut() {
+            Some(f) => match try_fork(&pool, routing, &mut rr, items, f) {
+                Ok(()) => continue,
+                Err(back) => back,
+            },
+            None => items,
+        };
+        inject(&pool, routing, &mut rr, Work::Batch(items));
     }
     // …then wait until every injected batch — routed, re-injected or
     // stolen — has finished executing, so the final snapshot below counts
@@ -986,6 +1313,7 @@ fn pooled_stats(
     let (mut batches, mut rows) = (0u64, 0u64);
     let (mut checks, mut failures, mut errors) = (0u64, 0u64, 0u64);
     let (mut stolen, mut attempts) = (0u64, 0u64);
+    let (mut tiles, mut tiled) = (0u64, 0u64);
     let mut per_worker = Vec::with_capacity(snaps.len());
     for s in &snaps {
         batches += s.batches;
@@ -995,6 +1323,8 @@ fn pooled_stats(
         errors += s.shadow_errors;
         stolen += s.stolen_batches;
         attempts += s.steal_attempts;
+        tiles += s.tiles_executed;
+        tiled += s.tiled_requests;
         per_worker.push(WorkerStats {
             worker: s.worker,
             latency: s.latency,
@@ -1006,6 +1336,8 @@ fn pooled_stats(
             shadow_errors: s.shadow_errors,
             stolen_batches: s.stolen_batches,
             steal_attempts: s.steal_attempts,
+            tiles_executed: s.tiles_executed,
+            tiled_requests: s.tiled_requests,
         });
     }
 
@@ -1036,6 +1368,8 @@ fn pooled_stats(
         shadow_errors: errors,
         stolen_batches: stolen,
         steal_attempts: attempts,
+        tiles_executed: tiles,
+        tiled_requests: tiled,
         rejected,
         workers,
         lost_workers,
@@ -1053,6 +1387,8 @@ fn snapshot(wid: usize, metrics: &Metrics, include_raw: bool) -> WorkerSnapshot 
         shadow_errors: metrics.shadow_errors,
         stolen_batches: metrics.stolen_batches,
         steal_attempts: metrics.steal_attempts,
+        tiles_executed: metrics.tiles_executed,
+        tiled_requests: metrics.tiled_requests,
         latency: metrics.latency_stats(),
         raw_latencies_us: include_raw.then(|| metrics.latencies_us().to_vec()),
     }
@@ -1118,25 +1454,28 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
             }
         });
         match work {
-            Some((items, stolen)) => {
+            Some((unit, stolen)) => {
                 if stolen {
                     metrics.stolen_batches += 1;
                 }
                 guard.executing.set(true);
-                run_batch(
-                    items,
-                    exec,
-                    shadow.as_deref_mut(),
-                    rows,
-                    row_len,
-                    out_len,
-                    shadow_every,
-                    &mut metrics,
-                    &mut flat,
-                    &mut out,
-                    &mut shadow_out,
-                    pool,
-                );
+                match unit {
+                    Work::Batch(items) => run_batch(
+                        items,
+                        exec,
+                        shadow.as_deref_mut(),
+                        rows,
+                        row_len,
+                        out_len,
+                        shadow_every,
+                        &mut metrics,
+                        &mut flat,
+                        &mut out,
+                        &mut shadow_out,
+                        pool,
+                    ),
+                    Work::Tile(task) => run_tile(task, exec, out_len, &mut metrics, pool),
+                }
                 guard.executing.set(false);
                 pool.batch_done();
             }
@@ -1154,6 +1493,74 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
                 }
             }
         }
+    }
+}
+
+/// Execute one tile of a forked whale batch and, if its decrement
+/// empties the join counter, run the join stage. Tiles skip shadow
+/// verification — the shadow twin covers the untiled path (and whales
+/// are gated bit-exactly against the tensor-core oracle in the
+/// cross-layer tests instead).
+fn run_tile<E: BatchExecutor>(
+    task: TileTask,
+    exec: &mut E,
+    out_len: usize,
+    metrics: &mut Metrics,
+    pool: &DequePool,
+) {
+    let TileTask { job, i0, i1 } = task;
+    metrics.tiles_executed += 1;
+    metrics.record_batch(i1 - i0);
+    // SAFETY: the fork stage assigned `[i0, i1)` to exactly this task,
+    // so no other live borrow overlaps the range; the AcqRel decrement
+    // below orders the write before the join stage's read.
+    let out_tile = unsafe { job.out.range_mut(i0 * out_len, i1 * out_len) };
+    if let Err(e) = exec.run_tile_into(&job.prep, i0, i1, out_tile) {
+        let mut slot = job.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("{e:#}"));
+        }
+    }
+    if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        join_tile_job(job, out_len, metrics, pool);
+    }
+}
+
+/// The join/reduction stage, run by whichever worker lands the last
+/// tile: send every response row out of the shared output buffer, record
+/// the per-request latencies, and recycle the job's backing store.
+fn join_tile_job(job: Arc<TileJob>, out_len: usize, metrics: &mut Metrics, pool: &DequePool) {
+    metrics.tiled_requests += 1;
+    let mut items = job
+        .items
+        .lock()
+        .unwrap()
+        .take()
+        .expect("join stage runs exactly once");
+    let error = job.error.lock().unwrap().take();
+    match error {
+        None => {
+            // SAFETY: the counter hit zero — every tile's write
+            // happens-before this read via the AcqRel decrement.
+            let out = unsafe { job.out.all(items.len() * out_len) };
+            let now = Instant::now();
+            for (i, p) in items.drain(..).enumerate() {
+                metrics.record_latency(now - p.payload.enqueued);
+                let slice = out[i * out_len..(i + 1) * out_len].to_vec();
+                let _ = p.payload.resp.send(Ok(slice));
+            }
+        }
+        Some(msg) => {
+            for p in items.drain(..) {
+                let _ = p.payload.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+    pool.recycle_items(items);
+    // best-effort recycling: sibling tiles normally drop their handles
+    // before their decrement is observed here, making this the last one
+    if let Ok(job) = Arc::try_unwrap(job) {
+        pool.recycle_tile_parts(TileParts { prep: job.prep, out: job.out.0.into_inner() });
     }
 }
 

@@ -346,6 +346,83 @@ pub fn matmul_square_prepared_into<T: SquareScalar>(
     square_matmul_const_b_ledger(m, a.cols, p)
 }
 
+/// Hoisted ledger of ONE `mi`-row tile of the §3.3 tiled operation:
+/// `mi·N·P` window squares, the `mi·P` correction seeds, and the trailing
+/// exact ÷2 — and **zero** correction squares, because §3.3 hoists the
+/// full-row/full-column corrections once per request, never per tile.
+/// Summed over any disjoint tiling of `[0, M)` and added to the one-time
+/// [`row_corrections_ledger`] hoist, this reproduces
+/// [`square_matmul_const_b_ledger`] exactly (the tests assert it).
+pub fn square_matmul_tile_ledger(mi: usize, n: usize, p: usize) -> OpCounts {
+    let (mi, n, p) = (mi as u64, n as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        squares: mi * n * p,
+        adds: mi * p + 2 * mi * n * p,
+        shifts: mi * p,
+    }
+}
+
+/// The one-time per-request hoist ledger: the `M·N` squares and adds
+/// [`row_corrections_into`] spends computing `Sa_i` from the FULL rows of
+/// the request — paid exactly once no matter how many tiles the request
+/// is split into.
+pub fn row_corrections_ledger(m: usize, n: usize) -> OpCounts {
+    let mn = (m * n) as u64;
+    OpCounts { squares: mn, adds: mn, ..OpCounts::ZERO }
+}
+
+/// §3.3 tile entry, generic-B form: compute the contiguous output-row
+/// partition `[i0, i1)` of `C = A·B` into `c_rows` — exactly that
+/// partition's row-major storage, a *disjoint sub-slice* of the request's
+/// output, so concurrent tiles of one request need no locking. Both
+/// corrections are supplied by the caller, hoisted ONCE per request from
+/// the full rows/columns of the large operands (`sa` via
+/// [`row_corrections_into`], `sb` via a cache such as [`PreparedB`] or
+/// the CPM3 pass operands) — never recomputed per tile, which is why the
+/// returned [`square_matmul_tile_ledger`] carries no correction squares.
+/// Values are byte-identical to the untiled core: the per-row arithmetic
+/// (seed, k-blocked sweep, ÷2) is the same code path.
+pub fn matmul_square_tile_into<T: SquareScalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    sa: &[T],
+    sb: &[T],
+    i0: usize,
+    i1: usize,
+    c_rows: &mut [T],
+    cfg: &EngineConfig,
+) -> OpCounts {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    assert!(i0 <= i1 && i1 <= a.rows, "tile row range out of bounds");
+    assert_eq!(
+        c_rows.len(),
+        (i1 - i0) * b.cols,
+        "tile output slice must hold exactly its partition"
+    );
+    debug_assert_eq!(sa.len(), a.rows);
+    debug_assert_eq!(sb.len(), b.cols);
+    block_rows_into(c_rows, i0, i1, a, b, sa, sb, cfg);
+    square_matmul_tile_ledger(i1 - i0, a.cols, b.cols)
+}
+
+/// [`matmul_square_tile_into`] against a prepared (constant) B — the
+/// serving form: `Sb` comes from the [`PreparedB`] cache, `Sa` from the
+/// request-wide hoist the caller performed once. This is the entry point
+/// the tiled serving executors (dense, conv post-im2col, CPM3 passes)
+/// share.
+pub fn matmul_square_prepared_tile_into<T: SquareScalar>(
+    a: &Matrix<T>,
+    pb: &PreparedB<T>,
+    sa: &[T],
+    i0: usize,
+    i1: usize,
+    c_rows: &mut [T],
+    cfg: &EngineConfig,
+) -> OpCounts {
+    matmul_square_tile_into(a, &pb.b, sa, &pb.sb, i0, i1, c_rows, cfg)
+}
+
 /// Direct `C = AB` in the same blocked row-sliced form — the multiplier
 /// baseline for perf comparisons and the shadow executor.
 pub fn matmul_direct_blocked<T: SquareScalar>(

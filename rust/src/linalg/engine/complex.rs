@@ -33,8 +33,8 @@ use super::super::counts::OpCounts;
 use super::super::matrix::Matrix;
 use super::super::LinalgError;
 use super::blocked::{
-    col_corrections_flat, matmul_square_core, matmul_square_core_into, row_corrections_flat,
-    row_corrections_into, EngineConfig,
+    col_corrections_flat, matmul_square_core, matmul_square_core_into, matmul_square_tile_into,
+    row_corrections_flat, row_corrections_into, square_matmul_tile_ledger, EngineConfig,
 };
 use super::im2col::im2col;
 use super::workspace::EngineWorkspace;
@@ -258,6 +258,67 @@ impl<T: SquareScalar> PreparedCpm3<T> {
         ws.give_back(m2);
         ws.give_back(m3);
         Ok(cpm3_prepared_ledger(m, n, p))
+    }
+
+    /// §3.3 tile entry: compute output rows `[i0, i1)` of `Z = X·Y` as
+    /// three square-pass *tiles* against the cached operands, writing the
+    /// partition's row-major storage into `z_re_tile`/`z_im_tile`
+    /// (disjoint sub-slices of the request's output planes, so concurrent
+    /// tiles need no locking). The caller hoists the per-request state
+    /// ONCE — the derived `A+B` plane (`x_sum`) and the three full-row
+    /// corrections `sa_*` via [`row_corrections_into`] — exactly as the
+    /// paper prescribes for tiled operation; this method never recomputes
+    /// them. Values are byte-identical to [`Self::mul_into`]'s rows
+    /// because each pass runs the same per-row kernel. The returned
+    /// ledger is the tile's marginal cost: three
+    /// [`square_matmul_tile_ledger`]s plus the `2·mi·P` combining adds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mul_tile_into(
+        &self,
+        x_sum: &Matrix<T>,
+        x_im: &Matrix<T>,
+        x_re: &Matrix<T>,
+        sa_sum: &[T],
+        sa_im: &[T],
+        sa_re: &[T],
+        i0: usize,
+        i1: usize,
+        cfg: &EngineConfig,
+        ws: &mut EngineWorkspace<T>,
+        z_re_tile: &mut [T],
+        z_im_tile: &mut [T],
+    ) -> Result<OpCounts, LinalgError> {
+        let n = x_sum.cols;
+        if n != self.in_features() {
+            return Err(LinalgError::ContractionMismatch {
+                left_cols: n,
+                right_rows: self.in_features(),
+            });
+        }
+        let p = self.out_features();
+        let mi = i1 - i0;
+        let mut m1 = ws.checkout(mi * p);
+        matmul_square_tile_into(x_sum, &self.q1, sa_sum, &self.sb1, i0, i1, &mut m1, cfg);
+        let mut m2 = ws.checkout(mi * p);
+        matmul_square_tile_into(x_im, &self.q2, sa_im, &self.sb2, i0, i1, &mut m2, cfg);
+        let mut m3 = ws.checkout(mi * p);
+        matmul_square_tile_into(x_re, &self.q3, sa_re, &self.sb3, i0, i1, &mut m3, cfg);
+
+        for ((d, &u), &v) in z_re_tile.iter_mut().zip(&m1).zip(&m2) {
+            *d = u - v;
+        }
+        for ((d, &u), &v) in z_im_tile.iter_mut().zip(&m1).zip(&m3) {
+            *d = u + v;
+        }
+
+        ws.give_back(m1);
+        ws.give_back(m2);
+        ws.give_back(m3);
+        let mut ops = square_matmul_tile_ledger(mi, n, p)
+            + square_matmul_tile_ledger(mi, n, p)
+            + square_matmul_tile_ledger(mi, n, p);
+        ops.add_n(2 * (mi * p) as u64);
+        Ok(ops)
     }
 
     /// `Z = X·Y` against the prepared operand: three blocked square

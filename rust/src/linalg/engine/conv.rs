@@ -174,6 +174,15 @@ impl<T: SquareScalar> PreparedConvBank<T> {
         self.pb.matrix()
     }
 
+    /// The prepared lowered bank as a [`PreparedB`] — the constant-B
+    /// operand of the §3.3 tile entry points
+    /// ([`super::blocked::matmul_square_prepared_tile_into`]), so a tiled
+    /// conv executor can run disjoint post-im2col row partitions against
+    /// the bank's once-per-model `Sb` corrections.
+    pub fn prepared(&self) -> &PreparedB<T> {
+        &self.pb
+    }
+
     /// Validated output map shape for an `in_h×in_w` (per-channel) input.
     pub fn output_shape(&self, in_h: usize, in_w: usize) -> Result<(usize, usize), LinalgError> {
         self.spec.output_shape(in_h, in_w)

@@ -61,9 +61,11 @@ pub mod workspace;
 pub use blocked::{
     col_corrections_flat, effective_threads, matmul_direct_blocked,
     matmul_direct_blocked_into, matmul_square_blocked, matmul_square_naive,
-    matmul_square_prepared, matmul_square_prepared_into, row_corrections_flat,
-    row_corrections_into, square_matmul_const_b_ledger, square_matmul_ledger,
-    EngineConfig, PreparedB,
+    matmul_square_prepared, matmul_square_prepared_into,
+    matmul_square_prepared_tile_into, matmul_square_tile_into,
+    row_corrections_flat, row_corrections_into, row_corrections_ledger,
+    square_matmul_const_b_ledger, square_matmul_ledger,
+    square_matmul_tile_ledger, EngineConfig, PreparedB,
 };
 pub use complex::{
     cconv1d_cpm3_blocked, cmatmul_cpm3_blocked, cmatmul_cpm_blocked,

@@ -15,7 +15,9 @@ use anyhow::{bail, Result};
 
 use fairsquare::benchkit::{f, Table};
 use fairsquare::cli::Args;
-use fairsquare::coordinator::{InferenceServer, PjrtExecutor, Routing, WorkloadGen};
+use fairsquare::coordinator::{
+    InferenceServer, PjrtExecutor, Routing, TileConfig, WorkloadGen,
+};
 use fairsquare::gates::report;
 use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio, eq6_ratio};
 use fairsquare::linalg::{error, Matrix};
@@ -35,6 +37,8 @@ COMMANDS:
   serve     [--artifacts DIR] [--model NAME] [--requests N] [--rps R]
             [--native] [--threads T] [--workers W] [--steal on|off]
             [--in-ch C] [--stride S] [--pad P] [--dilation D]
+            [--tile-threshold COST] [--tile ROWS]
+            [--heavy-frac N] [--heavy-size X]
                                  batching inference server demo (E6);
                                  --native serves the blocked square-kernel
                                  engine in-process (no PJRT artifacts)
@@ -77,13 +81,31 @@ COMMANDS:
                                  path requires --workers 1 (the default).
                                  --threads T is the total engine thread
                                  budget, split across the workers.
+                                 --tile-threshold COST (native only)
+                                 turns on tile-granular intra-request
+                                 parallelism: the dispatcher forks any
+                                 batch whose estimated cost (light rows
+                                 count 1, heavy rows --heavy-size)
+                                 exceeds COST into --tile-row tile tasks
+                                 (default 8 rows) spread across the
+                                 whole pool — the §3.3 corrections are
+                                 hoisted once per request, tiles write
+                                 disjoint output slices, and the last
+                                 tile to land joins the response.
+                                 --heavy-frac N makes every N-th dense
+                                 request heavy (the whale mix the e2e
+                                 bench replays) and --heavy-size X
+                                 prices a heavy request at X× a light
+                                 one (default 32). All four knobs
+                                 reject 0 instead of clamping.
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
 fn main() {
     let args = match Args::parse(
         &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads",
-          "workers", "steal", "in-ch", "stride", "pad", "dilation"],
+          "workers", "steal", "in-ch", "stride", "pad", "dilation", "tile-threshold",
+          "tile", "heavy-frac", "heavy-size"],
         &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
@@ -336,6 +358,49 @@ fn serve(args: &Args) -> Result<()> {
         .get_or("model", if native { "dense" } else { "mlp_square" })
         .to_string();
 
+    // tile-granular whale forking (§3.3) and the skewed request mix.
+    // Same convention as the conv geometry below — no clamping: an
+    // explicit 0 on any of these knobs is a typed error, never a silent 1
+    // (or a silent "off").
+    let tile_threshold = args.get_u64("tile-threshold", 0)?;
+    if args.get("tile-threshold").is_some() && tile_threshold == 0 {
+        bail!("--tile-threshold must be >= 1 cost unit; omit the flag to disable tiling");
+    }
+    let tile_rows = args.get_usize("tile", 8)?;
+    if tile_rows == 0 {
+        bail!("--tile must be >= 1 row per tile");
+    }
+    let heavy_frac = args.get_usize("heavy-frac", 0)?;
+    if args.get("heavy-frac").is_some() && heavy_frac == 0 {
+        bail!("--heavy-frac must be >= 1 (every N-th request is heavy); omit for all-light");
+    }
+    let heavy_size = args.get_u64("heavy-size", 32)?;
+    if heavy_size == 0 {
+        bail!("--heavy-size must be >= 1 light-row cost unit");
+    }
+    if heavy_size > u32::MAX as u64 {
+        bail!("--heavy-size {heavy_size} exceeds the executor's u32 cost range");
+    }
+    let heavy_mix = heavy_frac > 0;
+    if heavy_mix && !(native && model == "dense") {
+        bail!(
+            "--heavy-frac shapes the dense native mix (the cost-model \
+             executor reads the heavy tag); use --native --model dense"
+        );
+    }
+    let tiling = if tile_threshold > 0 {
+        if !native {
+            bail!("--tile-threshold requires --native (the PJRT path is untiled)");
+        }
+        Some(TileConfig {
+            threshold: tile_threshold,
+            tile_rows,
+            heavy_cost: heavy_size,
+        })
+    } else {
+        None
+    };
+
     // complex requests are plane-split QPSK rows, conv requests are NCHW
     // images with --in-ch planes, everything else serves MNIST-like
     // vectors; sized to match the executors built below
@@ -385,18 +450,27 @@ fn serve(args: &Args) -> Result<()> {
                 let (prepared, _prep_ops) =
                     fairsquare::linalg::engine::PreparedB::new_shared(weights);
                 let shadow_w = prepared.matrix().clone();
-                fairsquare::coordinator::InferenceServer::start_routed(
+                // the cost-model wrapper is a no-op at cost 1 (light mix)
+                // and prices heavy-tagged rows at --heavy-size when the
+                // whale mix is on — same executor type either way, so the
+                // pool factory stays monomorphic
+                let skew_cost = if heavy_mix { heavy_size as u32 } else { 1 };
+                fairsquare::coordinator::InferenceServer::start_tiled(
                     32,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
                     routing,
+                    tiling,
                     move |_wid| {
-                        Ok(fairsquare::coordinator::SquareKernelExecutor::from_shared(
-                            prepared.clone(),
-                            32,
-                            cfg.clone(),
+                        Ok(fairsquare::coordinator::SkewedKernelExecutor::new(
+                            fairsquare::coordinator::SquareKernelExecutor::from_shared(
+                                prepared.clone(),
+                                32,
+                                cfg.clone(),
+                            ),
+                            skew_cost,
                         ))
                     },
                     move |_wid| {
@@ -442,13 +516,14 @@ fn serve(args: &Args) -> Result<()> {
                     )?;
                 let shadow_bank = bank.clone();
                 let shadow_cfg = cfg.clone();
-                fairsquare::coordinator::InferenceServer::start_routed(
+                fairsquare::coordinator::InferenceServer::start_tiled(
                     16,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
                     routing,
+                    tiling,
                     move |_wid| {
                         fairsquare::coordinator::Conv2dExecutor::from_shared(
                             bank.clone(),
@@ -499,13 +574,14 @@ fn serve(args: &Args) -> Result<()> {
                 let (prepared, _prep_ops) =
                     fairsquare::linalg::engine::PreparedCpm3::new_shared(&planes)?;
                 let shadow_cfg = cfg.clone();
-                fairsquare::coordinator::InferenceServer::start_routed(
+                fairsquare::coordinator::InferenceServer::start_tiled(
                     32,
                     Duration::from_millis(2),
                     1024,
                     shadow_every,
                     workers,
                     routing,
+                    tiling,
                     move |_wid| {
                         fairsquare::coordinator::ComplexMatmulExecutor::from_shared(
                             prepared.clone(),
@@ -573,11 +649,18 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut gen = WorkloadGen::new(0xE6);
     let gaps = gen.arrival_gaps_us(requests, rps);
+    // the CLI whale mix and the e2e bench replay the SAME generator path
+    // (WorkloadGen::skewed_stream): every --heavy-frac'th request carries
+    // the heavy tag the cost-model executor reads
+    let mut skewed = heavy_mix
+        .then(|| gen.skewed_stream(requests, 784, heavy_frac).into_iter());
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(requests);
     for gap in gaps {
         std::thread::sleep(Duration::from_micros(gap.min(5_000)));
-        let input = if complex_rows {
+        let input = if let Some(stream) = skewed.as_mut() {
+            stream.next().expect("skewed stream is sized to `requests`")
+        } else if complex_rows {
             gen.qpsk_row(complex_subcarriers)
         } else if conv_rows {
             gen.nchw_image(in_ch, 28, 28)
@@ -611,6 +694,8 @@ fn serve(args: &Args) -> Result<()> {
     t.row(&["shadow errors".into(), stats.shadow_errors.to_string()]);
     t.row(&["stolen batches".into(), stats.stolen_batches.to_string()]);
     t.row(&["steal attempts".into(), stats.steal_attempts.to_string()]);
+    t.row(&["tiled requests".into(), stats.tiled_requests.to_string()]);
+    t.row(&["tiles executed".into(), stats.tiles_executed.to_string()]);
     t.row(&["rejected".into(), stats.rejected.to_string()]);
     t.row(&["lost workers".into(), stats.lost_workers.to_string()]);
     t.print();
@@ -618,13 +703,15 @@ fn serve(args: &Args) -> Result<()> {
     if stats.workers > 1 {
         let mut t = Table::new(
             "E6 — per-worker view",
-            &["worker", "batches", "stolen", "rows", "mean batch", "p50 µs", "p99 µs"],
+            &["worker", "batches", "stolen", "tiles", "rows", "mean batch",
+              "p50 µs", "p99 µs"],
         );
         for w in &stats.per_worker {
             t.row(&[
                 w.worker.to_string(),
                 w.batches.to_string(),
                 w.stolen_batches.to_string(),
+                w.tiles_executed.to_string(),
                 w.rows.to_string(),
                 f(w.mean_batch, 2),
                 format!("{:.0}", w.latency.p50_us),

@@ -408,6 +408,186 @@ fn server_preserves_request_mapping() {
     }
 }
 
+/// The tiling tentpole's correctness contract, end to end: a whale
+/// request stream served through the §3.3 fork/join dispatcher must be
+/// byte-identical to the untiled engine AND bit-exact against the
+/// cycle-accurate `sim::tensor_core::tiled_matmul` oracle — across
+/// random (M, N, P), tile sizes, pool widths and both routing policies.
+/// Integer-valued f32 keeps every comparison exact (all intermediates
+/// stay far below 2²⁴).
+#[test]
+fn tiled_serving_matches_untiled_engine_and_tensor_core_oracle() {
+    use fairsquare::coordinator::{
+        BatchExecutor, InferenceServer, Routing, SquareKernelExecutor, TileConfig,
+    };
+    use fairsquare::linalg::engine::PreparedB;
+    use std::time::Duration;
+
+    let mut rng = Rng::new(0x711E);
+    for _ in 0..10 {
+        let m = rng.usize_in(2, 9);
+        let n = 2 * rng.usize_in(1, 5); // even, so the oracle tiles at tn=2
+        let p = rng.usize_in(1, 6);
+        // tile_rows ≤ m−1 ⇒ ≥ 2 tiles, so every served batch forks
+        let tile_rows = rng.usize_in(1, m - 1);
+        let tiles = ((m + tile_rows - 1) / tile_rows) as u64;
+        let w_i64 = Matrix::random(&mut rng, n, p, -9, 9);
+        let weights = w_i64.map(|v| v as f32);
+        let rows: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..n).map(|_| rng.i64_in(-9, 9) as f32).collect())
+            .collect();
+
+        // the oracle: the cycle-accurate square-PE tensor core over the
+        // same integers
+        let a_i64 = Matrix::from_fn(m, n, |i, j| rows[i][j] as i64);
+        let (oracle, _, _) = tiled_matmul(TcKind::Square, &a_i64, &w_i64, 2);
+
+        // the untiled engine reference, which must itself match the oracle
+        let (prepared, _) = PreparedB::new_shared(weights);
+        let mut reference = SquareKernelExecutor::from_shared(
+            prepared.clone(),
+            m,
+            EngineConfig::with_threads(1),
+        );
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let mut untiled = Vec::new();
+        reference.run_into(&flat, &mut untiled).unwrap();
+        for i in 0..m {
+            for j in 0..p {
+                assert_eq!(
+                    untiled[i * p + j] as i64,
+                    oracle.get(i, j),
+                    "untiled engine diverged from the tensor-core oracle \
+                     at ({i},{j}), m={m} n={n} p={p}"
+                );
+            }
+        }
+
+        for workers in [1usize, 4] {
+            for routing in [Routing::Fifo, Routing::Steal] {
+                let pb = prepared.clone();
+                let srv = InferenceServer::start_tiled(
+                    m,
+                    // generous deadline: the batch forms when all m rows
+                    // arrive (instantly below), never by timeout
+                    Duration::from_millis(250),
+                    64,
+                    0,
+                    workers,
+                    routing,
+                    // threshold 0: every ≥2-tile batch forks
+                    Some(TileConfig { threshold: 0, tile_rows, heavy_cost: 1 }),
+                    move |_| {
+                        Ok(SquareKernelExecutor::from_shared(
+                            pb.clone(),
+                            m,
+                            EngineConfig::with_threads(1),
+                        ))
+                    },
+                    |_| Ok(None::<SquareKernelExecutor>),
+                )
+                .unwrap();
+                let pending: Vec<_> = rows
+                    .iter()
+                    .map(|row| srv.submit(row.clone()).unwrap())
+                    .collect();
+                let outs: Vec<Vec<f32>> = pending
+                    .into_iter()
+                    .map(|rx| rx.recv().unwrap().unwrap())
+                    .collect();
+                let stats = srv.shutdown().unwrap();
+
+                // exactly one m-row batch formed, cleared the zero
+                // threshold, and forked into its full tile partition
+                let ctx = format!(
+                    "m={m} n={n} p={p} tile={tile_rows} workers={workers} {routing:?}"
+                );
+                assert_eq!(stats.tiled_requests, 1, "no fork ({ctx})");
+                assert_eq!(stats.tiles_executed, tiles, "tile count ({ctx})");
+                assert_eq!(stats.rows, m as u64, "rows lost or duplicated ({ctx})");
+                assert_eq!(
+                    stats.per_worker.iter().map(|w| w.tiles_executed).sum::<u64>(),
+                    stats.tiles_executed,
+                    "tile accounting leak ({ctx})"
+                );
+                assert_eq!(
+                    stats.per_worker.iter().map(|w| w.tiled_requests).sum::<u64>(),
+                    stats.tiled_requests,
+                    "join accounting leak ({ctx})"
+                );
+
+                // byte-identical to the untiled engine (and so bit-exact
+                // against the oracle, asserted above)
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        out[..],
+                        untiled[i * p..(i + 1) * p],
+                        "tiled response {i} diverged from untiled ({ctx})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// §3.3's accounting claim, ledger-asserted: the tile ledgers summed
+/// over any disjoint row partition, plus ONE full-row correction hoist
+/// ([`row_corrections_ledger`]), reproduce the hoisted constant-B ledger
+/// exactly — the corrections are counted once per request, never per
+/// tile — while the tile values rebuild the untiled prepared product
+/// byte-for-byte (bit-exact i64 domain).
+#[test]
+fn tile_ledgers_sum_to_hoisted_const_b_ledger() {
+    use fairsquare::linalg::counts::OpCounts;
+    use fairsquare::linalg::engine::{
+        matmul_square_prepared, matmul_square_prepared_tile_into, row_corrections_into,
+        row_corrections_ledger, PreparedB,
+    };
+
+    let mut rng = Rng::new(0x1ED6);
+    let cfg = EngineConfig { block_k: 4, block_n: 8, threads: 1 };
+    for _ in 0..20 {
+        let m = rng.usize_in(1, 12);
+        let n = rng.usize_in(1, 10);
+        let p = rng.usize_in(1, 8);
+        let a = Matrix::random(&mut rng, m, n, -50, 50);
+        let b = Matrix::random(&mut rng, n, p, -50, 50);
+        let (pb, _) = PreparedB::new(b);
+        let (want, want_ops) = matmul_square_prepared(&a, &pb, &cfg);
+        assert_eq!(want_ops, square_matmul_const_b_ledger(m, n, p));
+
+        // the hoist: corrections from the FULL rows, paid exactly once
+        let mut sa = vec![0i64; m];
+        row_corrections_into(&a, &mut sa);
+        let mut spent: OpCounts = row_corrections_ledger(m, n);
+
+        // a random disjoint partition of [0, m) into row tiles
+        let mut c = vec![0i64; m * p];
+        let mut i0 = 0usize;
+        while i0 < m {
+            let i1 = (i0 + rng.usize_in(1, 4)).min(m);
+            spent = spent
+                + matmul_square_prepared_tile_into(
+                    &a,
+                    &pb,
+                    &sa,
+                    i0,
+                    i1,
+                    &mut c[i0 * p..i1 * p],
+                    &cfg,
+                );
+            i0 = i1;
+        }
+        assert_eq!(c, want.into_data(), "tile partition changed values");
+        assert_eq!(
+            spent,
+            square_matmul_const_b_ledger(m, n, p),
+            "tile ledgers + one hoist must equal the §3 constant-B ledger \
+             (m={m} n={n} p={p})"
+        );
+    }
+}
+
 /// Routing-policy property (the PR 5 tentpole's correctness contract):
 /// one identical skewed request stream — dense-light rows with
 /// occasional conv-heavy-cost ones, replayed from one seed — must

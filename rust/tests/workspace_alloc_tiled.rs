@@ -1,0 +1,75 @@
+//! Tiled-path allocation guard: once warmed, the §3.3 fork/join serving
+//! path — `prepare_tiles` (request hoist into a reused [`TilePrep`])
+//! followed by `run_tile_into` over the tile partition — must perform
+//! ZERO heap allocations, measured with a counting global allocator.
+//! This extends the PR 4/PR 5 steady-state gates (`workspace_alloc.rs`,
+//! `workspace_alloc_shadow.rs`) to the PR 6 tile stage: a whale fork
+//! must not buy its latency win with per-tile garbage.
+//!
+//! This file deliberately holds ONLY this test: integration-test files
+//! compile to their own binaries, so the counting allocator sees no
+//! interference from sibling tests (or the libtest harness spawning
+//! their threads) allocating concurrently.
+
+use fairsquare::benchkit::CountingAlloc;
+use fairsquare::coordinator::{BatchExecutor, SquareKernelExecutor, TilePrep};
+use fairsquare::linalg::engine::EngineConfig;
+use fairsquare::linalg::Matrix;
+use fairsquare::testkit::Rng;
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn warmed_tile_fork_performs_zero_allocations() {
+    let (rows, in_f, out_f) = (12usize, 24usize, 16usize);
+    let mut rng = Rng::new(0x711EA);
+    let weights =
+        Matrix::random(&mut rng, in_f, out_f, -9, 9).map(|v| v as f32);
+    // single-threaded engine: the zero-allocation guarantee is the
+    // worker-local one (the scoped threaded driver spawns by design)
+    let mut exec =
+        SquareKernelExecutor::with_config(weights, rows, EngineConfig::with_threads(1));
+
+    let batch_a: Vec<f32> =
+        (0..rows * in_f).map(|_| rng.i64_in(-9, 9) as f32).collect();
+    let batch_b: Vec<f32> =
+        (0..rows * in_f).map(|_| rng.i64_in(-9, 9) as f32).collect();
+
+    // the untiled reference output for batch_a, computed up front so the
+    // measured region below stays pure tile work
+    let mut reference = Vec::new();
+    exec.run_into(&batch_a, &mut reference).unwrap();
+
+    // an uneven partition, as the dispatcher produces for rows % tile != 0
+    let tiles = [(0usize, 5usize), (5, 10), (10, 12)];
+    let mut prep = TilePrep::default();
+    let mut out = vec![0.0f32; rows * out_f];
+
+    // warm-up: TilePrep's batch copy and hoist buffers grow to size
+    for batch in [&batch_a, &batch_b] {
+        exec.prepare_tiles(batch, rows, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            exec.run_tile_into(&prep, i0, i1, &mut out[i0 * out_f..i1 * out_f])
+                .unwrap();
+        }
+    }
+
+    // steady state: three more forked requests (fresh data, same shape)
+    // must not touch the allocator at all — hoist included
+    let before = ALLOCATOR.allocations();
+    for batch in [&batch_b, &batch_b, &batch_a] {
+        exec.prepare_tiles(batch, rows, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            exec.run_tile_into(&prep, i0, i1, &mut out[i0 * out_f..i1 * out_f])
+                .unwrap();
+        }
+    }
+    let steady = ALLOCATOR.allocations() - before;
+    assert_eq!(steady, 0, "steady-state tile fork allocated {steady} time(s)");
+
+    // ...and the reused buffers still compute the right thing: the last
+    // round re-ran batch_a, so the stitched tiles must reproduce the
+    // untiled executor byte for byte
+    assert_eq!(out, reference, "tiled partition diverged from run_into");
+}

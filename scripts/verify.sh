@@ -17,14 +17,23 @@
 #     produce rust/BENCH_e2e_serving.json — the serving perf trajectory —
 #     and on ≥4-core machines workers=4 must reach ≥ 1.5× workers=1; the
 #     JSON must also carry the PR 5 skewed-mix leg (work-stealing p99
-#     ≥ 1.3× over FIFO routing at 4 workers on ≥4-core machines) and the
-#     allocs_steady_state field (0 across every native executor incl.
-#     the shadow twins, enforced inside the bench)
+#     ≥ 1.3× over FIFO routing at 4 workers on ≥4-core machines), the
+#     PR 6 whale-mix leg (tile-forked whales: tiled+steal p99 ≥ 2× over
+#     untiled stealing at 4 workers on ≥4-core machines) and the
+#     allocs_steady_state / allocs_steady_state_tiled fields (0 across
+#     every native executor incl. the shadow twins and the warmed
+#     prepare_tiles/run_tile_into fork path, enforced inside the bench)
 #   * CLI smokes: the sharded dense server under both routing policies
-#     (`serve --native --workers 2 --steal off|on`), the two lowering
-#     workloads (`--model conv`, `--model complex`) and the generalized
-#     NCHW conv geometry
+#     (`serve --native --workers 2 --steal off|on`), the tile-forking
+#     whale mix (`--tile-threshold/--tile/--heavy-frac/--heavy-size`),
+#     the two lowering workloads (`--model conv`, `--model complex`) and
+#     the generalized NCHW conv geometry
 #     (`--model conv --in-ch 3 --stride 2 --pad 1 --dilation 2`)
+#
+# Every bench leaves its JSON in rust/ AND a copy at the repo root
+# (BENCH_blocked_engine.json, BENCH_blocked_conv.json,
+# BENCH_e2e_serving.json), so downstream tooling reads one canonical
+# location without knowing the cargo layout.
 #   * cargo clippy --all-targets -- -D warnings (skipped with a warning if
 #     clippy is not installed in the toolchain)
 set -euo pipefail
@@ -67,10 +76,28 @@ if ! grep -q "skewed_mix_gate" BENCH_e2e_serving.json; then
     echo "verify FAILED: BENCH_e2e_serving.json is missing the skewed-mix leg" >&2
     exit 1
 fi
+if ! grep -q "whale_mix_gate" BENCH_e2e_serving.json; then
+    echo "verify FAILED: BENCH_e2e_serving.json is missing the whale-mix leg" >&2
+    exit 1
+fi
 if ! grep -q "allocs_steady_state" BENCH_e2e_serving.json; then
     echo "verify FAILED: BENCH_e2e_serving.json is missing allocs_steady_state" >&2
     exit 1
 fi
+if ! grep -q "allocs_steady_state_tiled" BENCH_e2e_serving.json; then
+    echo "verify FAILED: BENCH_e2e_serving.json is missing allocs_steady_state_tiled" >&2
+    exit 1
+fi
+
+echo "==> publishing BENCH_*.json to the repo root"
+for artifact in BENCH_blocked_engine.json BENCH_blocked_conv.json \
+    BENCH_e2e_serving.json; do
+    if [[ ! -f "$artifact" ]]; then
+        echo "verify FAILED: $artifact was not produced" >&2
+        exit 1
+    fi
+    cp "$artifact" ..
+done
 
 echo "==> serve --native --workers 2 --steal off smoke (FIFO A/B baseline)"
 cargo run --release --quiet -- serve --native --workers 2 --steal off \
@@ -78,6 +105,11 @@ cargo run --release --quiet -- serve --native --workers 2 --steal off \
 
 echo "==> serve --native --workers 2 --steal on smoke (work-stealing pool)"
 cargo run --release --quiet -- serve --native --workers 2 --steal on \
+    --requests 128 --rps 8000
+
+echo "==> serve --native whale-mix smoke (tile fork/join + skewed stream)"
+cargo run --release --quiet -- serve --native --workers 2 --steal on \
+    --tile-threshold 64 --tile 8 --heavy-frac 64 --heavy-size 32 \
     --requests 128 --rps 8000
 
 echo "==> serve --native --model conv smoke"
