@@ -1,0 +1,575 @@
+//! The four srclint rule passes. Each consumes [`FileScan`]s plus the
+//! [`Registry`] and appends [`Finding`]s; all matching runs on the code
+//! copy (strings/comments blanked), so tokens in messages and docs never
+//! trip a rule.
+
+use super::scanner::{find_word, FileScan};
+use super::{fnv64, Finding, InventoryCheck, LockRank, MatchKind, Registry};
+
+/// Allocating constructs banned inside registered warm paths. `anyhow!`
+/// / `bail!` stay permitted (typed-error discipline allocates only on
+/// the error exit), and `EngineWorkspace::checkout` is the sanctioned
+/// allocator (it grows arenas by design and is gated at runtime by
+/// CountingAlloc instead).
+pub const BANNED_ALLOC: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    "Box::new",
+    "format!",
+    ".clone(",
+    "String::new",
+    ".to_string(",
+    ".to_owned(",
+];
+
+/// Panicking constructs policed in request-serving modules.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+fn file_matches(rel: &str, pat: &str) -> bool {
+    rel.ends_with(pat) || rel.contains(pat)
+}
+
+/// Rule 1 — `unsafe-audit`. Every textual `unsafe` occurrence in
+/// shipping code must (a) have a `SAFETY` comment within three lines
+/// above (or on the line), and (b) appear in the checked-in inventory as
+/// `file hash` where the hash covers the site's three code lines —
+/// line-shift tolerant, edit detecting. Unmatched inventory entries are
+/// themselves findings, so the inventory can never go stale silently.
+///
+/// Returns `(site count, inventory check)`.
+pub fn unsafe_audit(
+    scans: &[FileScan],
+    reg: &Registry,
+    findings: &mut Vec<Finding>,
+) -> (usize, InventoryCheck) {
+    // (file, hash, used)
+    let mut entries: Vec<(String, String, bool)> = Vec::new();
+    for line in reg.inventory.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if let (Some(f), Some(h)) = (it.next(), it.next()) {
+            entries.push((f.to_string(), h.to_string(), false));
+        }
+    }
+    let total_entries = entries.len();
+    let mut sites = 0usize;
+
+    for scan in scans {
+        for i in 0..scan.code.len() {
+            if scan.in_test[i] || find_word(&scan.code[i], "unsafe").is_empty() {
+                continue;
+            }
+            sites += 1;
+            if !scan.has_comment_near(i, Some("SAFETY")) {
+                findings.push(Finding {
+                    rule: "unsafe-audit",
+                    file: scan.rel.clone(),
+                    line: i + 1,
+                    msg: "unsafe without a `// SAFETY:` comment within 3 lines".into(),
+                });
+            }
+            let hash = site_hash(scan, i);
+            let hit = entries.iter_mut().find(|(f, h, used)| {
+                !*used && *h == hash && (scan.rel.ends_with(f.as_str()) || f.ends_with(&scan.rel))
+            });
+            match hit {
+                Some(e) => e.2 = true,
+                None => findings.push(Finding {
+                    rule: "unsafe-audit",
+                    file: scan.rel.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "unsafe site not in analysis/unsafe_inventory.txt \
+                         (add: `{} {hash}`)",
+                        scan.rel
+                    ),
+                }),
+            }
+        }
+    }
+    let matched = entries.iter().filter(|e| e.2).count();
+    for (f, h, used) in &entries {
+        if !used {
+            findings.push(Finding {
+                rule: "unsafe-audit",
+                file: "analysis/unsafe_inventory.txt".into(),
+                line: 0,
+                msg: format!("stale inventory entry `{f} {h}` matches no unsafe site"),
+            });
+        }
+    }
+    let ok = matched == total_entries && sites == matched;
+    (
+        sites,
+        InventoryCheck {
+            entries: total_entries,
+            matched,
+            file_hash: format!("{:016x}", fnv64(&reg.inventory)),
+            ok,
+        },
+    )
+}
+
+/// Context hash of an unsafe site: FNV-1a over the trimmed code copy of
+/// the site's line and the two below, newline-joined. Independent of
+/// line numbers, indentation, comments and string contents; any edit to
+/// the surrounding *code* forces a reviewed inventory update.
+pub fn site_hash(scan: &FileScan, i: usize) -> String {
+    let hi = (i + 3).min(scan.code.len());
+    let ctx: Vec<&str> = scan.code[i..hi].iter().map(|l| l.trim()).collect();
+    format!("{:016x}", fnv64(&ctx.join("\n")))
+}
+
+/// Rule 2 — `warm-alloc`. Registered zero-alloc functions must not
+/// contain allocating constructs anywhere in their bodies, cold error
+/// branches included. A registered name that no longer resolves to a
+/// function in its file is itself a finding (rename drift).
+pub fn warm_alloc(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    for (filepat, names) in &reg.warm {
+        let file_scans: Vec<&FileScan> =
+            scans.iter().filter(|s| file_matches(&s.rel, filepat)).collect();
+        if file_scans.is_empty() {
+            continue; // partial scans (fixture runs) skip absent files
+        }
+        for name in names {
+            let mut found = false;
+            for scan in &file_scans {
+                for span in scan.fns.iter().filter(|f| f.name == *name) {
+                    if scan.in_test[span.sig_line] {
+                        continue;
+                    }
+                    found = true;
+                    for i in span.sig_line..=span.body_end.min(scan.code.len() - 1) {
+                        if scan.in_test[i] {
+                            continue;
+                        }
+                        for tok in BANNED_ALLOC {
+                            if scan.code[i].contains(tok)
+                                && !scan.lint_ok_covers("warm-alloc", i)
+                            {
+                                findings.push(Finding {
+                                    rule: "warm-alloc",
+                                    file: scan.rel.clone(),
+                                    line: i + 1,
+                                    msg: format!(
+                                        "`{tok}` inside zero-alloc warm path `{name}`"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            if !found {
+                findings.push(Finding {
+                    rule: "warm-alloc",
+                    file: (*filepat).into(),
+                    line: 0,
+                    msg: format!(
+                        "registered warm-path fn `{name}` not found (renamed? update the registry)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// A live lock guard during the lexical walk of one function body.
+struct Guard {
+    rank: Option<u8>,
+    /// guard is dropped once the line-end depth falls below this
+    dies_below: i32,
+    line: usize,
+}
+
+/// Rule 3a — `lock-order`. Within each function of a registered file,
+/// track lock guards by lexical scope and flag any `.lock()` whose rank
+/// is ≤ a live guard's rank (nested acquisition must be strictly
+/// rank-ascending; unranked receivers are leaf locks and unconstrained).
+///
+/// Guard liveness is the repo's own idiom set, checked lexically:
+/// `let g = x.lock().unwrap();` lives to the end of its block;
+/// `if let`/`while let` scrutinee temporaries live for the attached
+/// block (Rust 2021 temporary-lifetime rule); a chained
+/// `x.lock().unwrap().f()` is a statement temporary, live only on its
+/// line.
+pub fn lock_order(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    for scan in scans {
+        if !reg.lock_files.iter().any(|p| file_matches(&scan.rel, p)) {
+            continue;
+        }
+        // outermost spans only: a nested fn is walked as part of its parent
+        let mut max_end = 0usize;
+        for span in &scan.fns {
+            if span.sig_line > 0 && span.sig_line <= max_end {
+                continue;
+            }
+            max_end = span.body_end;
+            if scan.in_test[span.sig_line] {
+                continue;
+            }
+            walk_fn_locks(scan, span.sig_line, span.body_end, reg, findings);
+        }
+    }
+}
+
+fn walk_fn_locks(
+    scan: &FileScan,
+    start: usize,
+    end: usize,
+    reg: &Registry,
+    findings: &mut Vec<Finding>,
+) {
+    const TEMP: i32 = i32::MAX;
+    let mut live: Vec<Guard> = Vec::new();
+    for i in start..=end.min(scan.code.len() - 1) {
+        let line = &scan.code[i];
+        let mut from = 0usize;
+        while let Some(off) = line[from..].find(".lock()") {
+            let idx = from + off;
+            let recv = receiver_before(line, idx);
+            let rank = rank_of(&recv, &reg.lock_ranks);
+            if let Some(new) = rank {
+                for g in &live {
+                    if let Some(held) = g.rank {
+                        if new <= held && !scan.lint_ok_covers("lock-order", i) {
+                            findings.push(Finding {
+                                rule: "lock-order",
+                                file: scan.rel.clone(),
+                                line: i + 1,
+                                msg: format!(
+                                    "lock rank {new} (`{recv}`) acquired while rank {held} \
+                                     guard from line {} is live — declared order is \
+                                     deque(0) < gate(1) < spares(2)",
+                                    g.line + 1
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            let trimmed = line.trim_start();
+            let dies_below = if trimmed.starts_with("if let") || trimmed.starts_with("while let")
+            {
+                scan.depth_start(i) + 1
+            } else if trimmed.starts_with("let ") && chain_is_plain_binding(line, idx) {
+                scan.depth_start(i)
+            } else {
+                TEMP
+            };
+            live.push(Guard { rank, dies_below, line: i });
+            from = idx + ".lock()".len();
+        }
+        let depth = scan.depth_end[i];
+        live.retain(|g| g.dies_below != TEMP && depth >= g.dies_below);
+    }
+}
+
+/// After `.lock()` at `idx`, is the rest of the line only
+/// `.unwrap()`/`.expect(..)` then `;`? That makes the `let` a real guard
+/// binding; anything else chained makes it a statement temporary.
+fn chain_is_plain_binding(line: &str, idx: usize) -> bool {
+    let mut rest = &line[idx + ".lock()".len()..];
+    loop {
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r;
+        } else if rest.starts_with(".expect(") {
+            match rest.find(')') {
+                Some(p) => rest = &rest[p + 1..],
+                None => return false,
+            }
+        } else {
+            break;
+        }
+    }
+    rest.trim() == ";"
+}
+
+/// The receiver expression directly before a `.lock()` call: walk back
+/// over identifier chars, field dots and index brackets.
+fn receiver_before(line: &str, idx: usize) -> String {
+    let bytes = line.as_bytes();
+    let mut j = idx;
+    while j > 0 {
+        let b = bytes[j - 1];
+        if b.is_ascii_alphanumeric() || matches!(b, b'_' | b'.' | b'[' | b']') {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    line[j..idx].to_string()
+}
+
+fn rank_of(recv: &str, ranks: &[LockRank]) -> Option<u8> {
+    for r in ranks {
+        let hit = match r.kind {
+            MatchKind::Exact => recv == r.pat,
+            MatchKind::EndsWith => recv.ends_with(r.pat),
+            MatchKind::Contains => recv.contains(r.pat),
+        };
+        if hit {
+            return Some(r.rank);
+        }
+    }
+    None
+}
+
+/// Rule 3b — `atomic-ordering`. In protocol files, `Ordering::Relaxed`
+/// is an error outright (the join counter, gate counters and dead flags
+/// all carry cross-thread happens-before edges). Everywhere, an atomic
+/// op must have a rationale comment within three lines.
+pub fn atomic_ordering(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    for scan in scans {
+        let protocol = reg.relaxed_files.iter().any(|p| file_matches(&scan.rel, p));
+        for i in 0..scan.code.len() {
+            if scan.in_test[i] {
+                continue;
+            }
+            let code = &scan.code[i];
+            if !code.contains("Ordering::") || code.trim_start().starts_with("use ") {
+                continue;
+            }
+            if scan.lint_ok_covers("atomic-ordering", i) {
+                continue;
+            }
+            if protocol && code.contains("Ordering::Relaxed") {
+                findings.push(Finding {
+                    rule: "atomic-ordering",
+                    file: scan.rel.clone(),
+                    line: i + 1,
+                    msg: "Ordering::Relaxed on a protocol atomic (join counter / gate \
+                          counters / dead flags carry happens-before edges)"
+                        .into(),
+                });
+            }
+            if !scan.has_comment_near(i, None) {
+                findings.push(Finding {
+                    rule: "atomic-ordering",
+                    file: scan.rel.clone(),
+                    line: i + 1,
+                    msg: "atomic op without an ordering-rationale comment within 3 lines".into(),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 4 — `panic-path`. In request-serving modules, panicking
+/// constructs need a `lint-ok(panic-path)` annotation. The
+/// lock/condvar poisoning idiom — `.unwrap()` directly chained on
+/// `.lock()` / `.wait*()` (same line or the line below in a wrapped
+/// chain) — is exempt: propagating a poisoned mutex by panicking is the
+/// repo's sanctioned policy, and `PoolGuard` squares the pool accounts
+/// behind it.
+pub fn panic_path(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    for scan in scans {
+        if !reg.panic_files.iter().any(|p| scan.rel.contains(p)) {
+            continue;
+        }
+        for i in 0..scan.code.len() {
+            if scan.in_test[i] {
+                continue;
+            }
+            let code = &scan.code[i];
+            for tok in PANIC_TOKENS {
+                let mut from = 0usize;
+                while let Some(off) = code[from..].find(tok) {
+                    let idx = from + off;
+                    from = idx + tok.len();
+                    if *tok == ".unwrap()" && unwrap_is_poison_idiom(scan, i, idx) {
+                        continue;
+                    }
+                    if scan.lint_ok_covers("panic-path", i) {
+                        continue;
+                    }
+                    findings.push(Finding {
+                        rule: "panic-path",
+                        file: scan.rel.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "`{tok}` in a request-serving module without a \
+                             lint-ok(panic-path) annotation",
+                            tok = tok.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The `.unwrap()` at `code[i][idx..]` is the mutex/condvar poisoning
+/// idiom when a `.lock()`/`.wait*` call precedes it on the same line, or
+/// — for rustfmt-wrapped chains where the `.unwrap()` starts its own
+/// line — on the nearest non-empty code line above.
+fn unwrap_is_poison_idiom(scan: &FileScan, i: usize, idx: usize) -> bool {
+    let before = &scan.code[i][..idx];
+    if before.contains(".lock()") || before.contains(".wait") {
+        return true;
+    }
+    if scan.code[i].trim_start().starts_with('.') {
+        for k in (0..i).rev() {
+            let prev = scan.code[k].trim();
+            if prev.is_empty() {
+                continue;
+            }
+            return prev.contains(".lock()") || prev.contains(".wait");
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan_source;
+    use std::path::PathBuf;
+
+    fn scan_named(name: &str, src: &str) -> FileScan {
+        scan_source(PathBuf::from(name), name, src)
+    }
+
+    fn reg_for(name: &'static str) -> Registry {
+        Registry {
+            warm: vec![(name, vec!["warm_path_fn"])],
+            lock_files: vec![name],
+            lock_ranks: super::super::default_lock_ranks(),
+            relaxed_files: vec![name],
+            panic_files: vec![name],
+            inventory: String::new(),
+            allow: String::new(),
+        }
+    }
+
+    #[test]
+    fn missing_safety_and_inventory_trip() {
+        let s = scan_named("x.rs", "fn f(p: *mut f32) {\n    unsafe { *p = 1.0 };\n}\n");
+        let mut fs = Vec::new();
+        let (sites, inv) = unsafe_audit(&[s], &reg_for("x.rs"), &mut fs);
+        assert_eq!(sites, 1);
+        assert_eq!(fs.len(), 2); // no SAFETY + not in inventory
+        assert!(!inv.ok);
+    }
+
+    #[test]
+    fn safety_comment_and_inventory_entry_satisfy() {
+        let src = "fn f(p: *mut f32) {\n    // SAFETY: p is valid for writes\n    unsafe { *p = 1.0 };\n}\n";
+        let s = scan_named("x.rs", src);
+        let hash = site_hash(&s, 2);
+        let mut reg = reg_for("x.rs");
+        reg.inventory = format!("x.rs {hash}  # test site\n");
+        let mut fs = Vec::new();
+        let (sites, inv) = unsafe_audit(&[scan_named("x.rs", src)], &reg, &mut fs);
+        assert_eq!((sites, fs.len()), (1, 0));
+        assert!(inv.ok && inv.matched == 1);
+    }
+
+    #[test]
+    fn warm_alloc_flags_and_lint_ok_clears() {
+        let bad = "fn warm_path_fn(out: &mut Vec<f32>) {\n    let v = vec![0.0; 4];\n    out.extend(v);\n}\n";
+        let mut fs = Vec::new();
+        warm_alloc(&[scan_named("x.rs", bad)], &reg_for("x.rs"), &mut fs);
+        assert_eq!(fs.len(), 1);
+
+        let ok = "fn warm_path_fn(out: &mut Vec<f32>) {\n    // lint-ok(warm-alloc): test justification\n    let v = vec![0.0; 4];\n    out.extend(v);\n}\n";
+        let mut fs = Vec::new();
+        warm_alloc(&[scan_named("x.rs", ok)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn warm_registry_rename_drift_is_a_finding() {
+        let src = "fn other_name() {}\n";
+        let mut fs = Vec::new();
+        warm_alloc(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("warm_path_fn"));
+    }
+
+    #[test]
+    fn descending_lock_order_trips_ascending_passes() {
+        let bad = "fn f(&self) {\n    let mut g = self.gate.lock().unwrap();\n    let q = self.queues[0].lock().unwrap();\n    drop((g, q));\n}\n";
+        let mut fs = Vec::new();
+        lock_order(&[scan_named("x.rs", bad)], &reg_for("x.rs"), &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+
+        let ok = "fn f(&self) {\n    if let Some(w) = self.queues[0].lock().unwrap().pop_front() {\n        self.gate.lock().unwrap().queued -= 1;\n    }\n}\n";
+        let mut fs = Vec::new();
+        lock_order(&[scan_named("x.rs", ok)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn guard_scope_ends_with_block() {
+        // the gate guard dies at the inner block's close, so the later
+        // deque lock is NOT nested
+        let src = "fn f(&self) {\n    {\n        let mut g = self.gate.lock().unwrap();\n        g.queued += 1;\n    }\n    let q = self.queues[0].lock().unwrap();\n    drop(q);\n}\n";
+        let mut fs = Vec::new();
+        lock_order(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn statement_temporary_does_not_hold() {
+        let src = "fn f(&self) {\n    self.gate.lock().unwrap().queued -= 1;\n    let q = self.queues[0].lock().unwrap();\n    drop(q);\n}\n";
+        let mut fs = Vec::new();
+        lock_order(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn relaxed_and_missing_rationale_trip() {
+        let src = "fn f(c: &AtomicUsize) {\n    c.fetch_sub(1, Ordering::Relaxed);\n}\n";
+        let mut fs = Vec::new();
+        atomic_ordering(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        // one Relaxed finding + one missing-rationale finding
+        assert_eq!(fs.len(), 2, "{fs:?}");
+
+        let ok = "fn f(c: &AtomicUsize) {\n    // AcqRel: the last decrement must see every write\n    c.fetch_sub(1, Ordering::AcqRel);\n}\n";
+        let mut fs = Vec::new();
+        atomic_ordering(&[scan_named("x.rs", ok)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn panic_path_flags_and_poison_idiom_is_exempt() {
+        let src = "fn f(v: Vec<u32>, m: &Mutex<u32>) {\n    let x = v.first().unwrap();\n    let g = m.lock().unwrap();\n    drop((x, g));\n}\n";
+        let mut fs = Vec::new();
+        panic_path(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn wrapped_chain_unwrap_after_wait_is_exempt() {
+        let src = "fn f(&self) {\n    let _ = self\n        .cv\n        .wait_timeout_while(g, t, |g| g.busy)\n        .unwrap();\n}\n";
+        let mut fs = Vec::new();
+        panic_path(&[scan_named("x.rs", src)], &reg_for("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn tokens_inside_strings_do_not_trip() {
+        let src = "fn warm_path_fn() -> &'static str {\n    \"vec![] .unwrap() unsafe Ordering::Relaxed\"\n}\n";
+        let reg = reg_for("x.rs");
+        let s = scan_named("x.rs", src);
+        let mut fs = Vec::new();
+        warm_alloc(&[s], &reg, &mut fs);
+        let s = scan_named("x.rs", src);
+        panic_path(&[s], &reg, &mut fs);
+        let s = scan_named("x.rs", src);
+        atomic_ordering(&[s], &reg, &mut fs);
+        let s = scan_named("x.rs", src);
+        let (sites, _) = unsafe_audit(&[s], &reg, &mut fs);
+        assert_eq!(sites, 0);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -1,0 +1,668 @@
+//! Brace-aware line-level Rust source scanner — the parsing layer under
+//! the `srclint` rules.
+//!
+//! Deliberately **not** a full parser (the offline toolchain forbids
+//! `syn`): a character-level state machine separates every line into a
+//! *code copy* (string/char-literal contents and comments blanked out)
+//! and a *comment copy* (everything else blanked), tracks brace depth
+//! across lines, recovers named `fn` spans, and marks `#[cfg(test)]` /
+//! `#[test]` regions so the rules only police shipping code. That is
+//! enough structure for the invariants the rules enforce — token
+//! presence, comment proximity, lexical guard scopes — while staying
+//! robust against the one thing that breaks naive grepping: tokens
+//! hiding inside strings and comments.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One named `fn` item: signature line, body span (inclusive line
+/// indices, 0-based). Nested fns get their own span; a span includes
+/// every line of its body, nested items and closures included.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// line of the `fn` keyword
+    pub sig_line: usize,
+    /// line of the opening `{`
+    pub body_start: usize,
+    /// line of the matching `}`
+    pub body_end: usize,
+}
+
+/// A `// lint-ok(rule): reason` escape hatch found in the comments.
+#[derive(Debug, Clone)]
+pub struct LintOk {
+    pub rule: String,
+    /// the annotation's own line
+    pub line: usize,
+}
+
+/// A scanned source file: raw lines plus the derived views the rules
+/// consume.
+#[derive(Debug)]
+pub struct FileScan {
+    pub path: PathBuf,
+    /// normalized display path, relative to the scan root, `/`-separated
+    pub rel: String,
+    pub raw: Vec<String>,
+    /// per-line code copy: comments and string/char contents blanked
+    pub code: Vec<String>,
+    /// per-line comment copy: everything except comment text blanked
+    pub comments: Vec<String>,
+    /// brace depth after the last character of each line
+    pub depth_end: Vec<i32>,
+    /// line is inside a `#[cfg(test)]` module or `#[test]` item
+    pub in_test: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    pub lint_oks: Vec<LintOk>,
+}
+
+impl FileScan {
+    /// Brace depth before the first character of line `i`.
+    pub fn depth_start(&self, i: usize) -> i32 {
+        if i == 0 {
+            0
+        } else {
+            self.depth_end[i - 1]
+        }
+    }
+
+    /// Whether a `lint-ok(rule)` annotation covers line `i`: an
+    /// annotation covers its own line and the two lines below it, so it
+    /// works both as a trailing comment and as a comment line above the
+    /// flagged construct (including two-line formatted statements).
+    pub fn lint_ok_covers(&self, rule: &str, i: usize) -> bool {
+        self.lint_oks
+            .iter()
+            .any(|ok| ok.rule == rule && ok.line <= i && i <= ok.line + 2)
+    }
+
+    /// Whether any comment text appears on lines `[i-3, i]` — the
+    /// "rationale comment nearby" test.
+    pub fn has_comment_near(&self, i: usize, needle: Option<&str>) -> bool {
+        let lo = i.saturating_sub(3);
+        self.comments[lo..=i].iter().any(|c| match needle {
+            Some(n) => c.contains(n),
+            None => !c.trim().is_empty(),
+        })
+    }
+}
+
+/// Scan one file from disk. `rel` is the display path recorded in
+/// findings (use the path relative to the scan root).
+pub fn scan_file(path: &Path, rel: &str) -> Result<FileScan> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("srclint: reading {}", path.display()))?;
+    Ok(scan_source(path.to_path_buf(), rel, &text))
+}
+
+/// Recursively scan every `*.rs` file under `root` (or just `root` when
+/// it is a single file), sorted by path for deterministic reports.
+pub fn scan_tree(root: &Path) -> Result<Vec<FileScan>> {
+    let mut files = Vec::new();
+    if root.is_file() {
+        files.push(root.to_path_buf());
+    } else {
+        collect_rs(root, &mut files)?;
+    }
+    files.sort();
+    let mut scans = Vec::with_capacity(files.len());
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        let rel = if rel.is_empty() {
+            f.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+        } else {
+            rel
+        };
+        scans.push(scan_file(f, &rel)?);
+    }
+    Ok(scans)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("srclint: listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lexer state carried across lines.
+enum Lex {
+    Code,
+    LineComment,
+    /// nesting depth of `/* */`
+    BlockComment(u32),
+    Str,
+    /// number of `#` marks that close the raw string
+    RawStr(u32),
+    CharLit,
+}
+
+/// Build a [`FileScan`] from in-memory source (the entry point the
+/// fixture tests use directly).
+pub fn scan_source(path: PathBuf, rel: &str, text: &str) -> FileScan {
+    let (code, comments) = strip_lines(text);
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let n = raw.len();
+    debug_assert_eq!(code.len(), n);
+
+    let mut depth_end = Vec::with_capacity(n);
+    let mut depth: i32 = 0;
+    for line in &code {
+        for ch in line.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        depth_end.push(depth);
+    }
+
+    let fns = find_fn_spans(&code);
+    let mut scan = FileScan {
+        path,
+        rel: rel.to_string(),
+        raw,
+        code,
+        comments,
+        depth_end,
+        in_test: vec![false; n],
+        fns,
+        lint_oks: Vec::new(),
+    };
+    mark_test_regions(&mut scan);
+    scan.lint_oks = find_lint_oks(&scan.comments);
+    scan
+}
+
+/// Split source text into parallel per-line code and comment copies.
+/// Structural characters stay in the code copy; string/char-literal
+/// *contents* and all comment text are blanked from it (and vice versa
+/// for the comment copy), so rules can match tokens without being fooled
+/// by `"vec![...]"` inside a message string or an example in a doc
+/// comment.
+fn strip_lines(text: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = text.chars().collect();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = Lex::Code;
+    let mut i = 0usize;
+
+    macro_rules! flush_line {
+        () => {{
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, Lex::LineComment) {
+                state = Lex::Code;
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match state {
+            Lex::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = Lex::LineComment;
+                    comment.push_str("//");
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = Lex::BlockComment(1);
+                    comment.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                } else if let Some(hashes) = raw_string_at(&chars, i) {
+                    // consume the prefix (r/br + hashes + quote) into code
+                    let mut j = i;
+                    while chars[j] != '"' {
+                        code.push(chars[j]);
+                        comment.push(' ');
+                        j += 1;
+                    }
+                    code.push('"');
+                    comment.push(' ');
+                    i = j + 1;
+                    state = Lex::RawStr(hashes);
+                } else if c == '"' {
+                    code.push('"');
+                    comment.push(' ');
+                    state = Lex::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime/label: a backslash or a
+                    // closing quote two ahead means char literal
+                    let is_char = next == Some('\\')
+                        || chars.get(i + 2).copied() == Some('\'');
+                    if is_char {
+                        code.push(' ');
+                        comment.push(' ');
+                        state = Lex::CharLit;
+                        i += 1;
+                    } else {
+                        code.push('\'');
+                        comment.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    comment.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            Lex::BlockComment(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = Lex::BlockComment(d + 1);
+                    comment.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if d == 1 { Lex::Code } else { Lex::BlockComment(d - 1) };
+                    comment.push_str("*/");
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    comment.push(' ');
+                    if chars.get(i + 1).is_some_and(|&e| e != '\n') {
+                        code.push(' ');
+                        comment.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    comment.push(' ');
+                    state = Lex::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    comment.push(' ');
+                    for _ in 0..hashes {
+                        code.push('#');
+                        comment.push(' ');
+                    }
+                    i += 1 + hashes as usize;
+                    state = Lex::Code;
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::CharLit => {
+                if c == '\\' {
+                    code.push(' ');
+                    comment.push(' ');
+                    if chars.get(i + 1).is_some_and(|&e| e != '\n') {
+                        code.push(' ');
+                        comment.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    code.push(' ');
+                    comment.push(' ');
+                    state = Lex::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    // final line without trailing newline
+    if !text.is_empty() && !text.ends_with('\n') {
+        flush_line!();
+    }
+    (code_lines, comment_lines)
+}
+
+/// At `chars[i]`, does a raw-string literal start (`r"`, `r#"`, `br#"`,
+/// …)? Returns the closing `#` count. Requires the `r` not to be the
+/// tail of an identifier.
+fn raw_string_at(chars: &[char], i: usize) -> Option<u32> {
+    let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+    if prev_ident {
+        return None;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Whether `line[idx..]` starts the word `word` with identifier
+/// boundaries on both sides.
+pub fn word_at(line: &str, idx: usize, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    if !line[idx..].starts_with(word) {
+        return false;
+    }
+    let ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    if idx > 0 && ident(bytes[idx - 1]) {
+        return false;
+    }
+    match bytes.get(idx + word.len()) {
+        Some(&b) => !ident(b),
+        None => true,
+    }
+}
+
+/// Find every identifier-boundary occurrence of `word` in `line`.
+pub fn find_word(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = line[from..].find(word) {
+        let idx = from + off;
+        if word_at(line, idx, word) {
+            out.push(idx);
+        }
+        from = idx + word.len();
+    }
+    out
+}
+
+/// Recover named fn spans from the code copy: `fn <name>` arms a
+/// pending item whose body starts at the next `{` at signature level
+/// (a `;` first means a bodyless trait/extern declaration) and ends at
+/// the matching `}`.
+fn find_fn_spans(code: &[String]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    // (name, sig_line, signature bracket depth) — brackets tracked so a
+    // `;` inside `[f32; 4]` does not cancel the pending fn
+    let mut pending: Option<(String, usize, i32)> = None;
+    // open fn bodies: (name, sig_line, body_start, depth before `{`)
+    let mut open: Vec<(String, usize, usize, i32)> = Vec::new();
+    let mut depth: i32 = 0;
+
+    for (ln, line) in code.iter().enumerate() {
+        let bytes = line.as_bytes();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let b = bytes[i];
+            if b.is_ascii_alphabetic() || b == b'_' {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                let word = &line[start..i];
+                if word == "fn" && pending.is_none() {
+                    // peek: the next non-space char must start an
+                    // identifier, else this is an `fn(..)` pointer type
+                    let mut j = i;
+                    while j < bytes.len() && bytes[j] == b' ' {
+                        j += 1;
+                    }
+                    let named = bytes
+                        .get(j)
+                        .is_some_and(|&c| c.is_ascii_alphabetic() || c == b'_');
+                    if named {
+                        let ns = j;
+                        let mut ne = j;
+                        while ne < bytes.len()
+                            && (bytes[ne].is_ascii_alphanumeric() || bytes[ne] == b'_')
+                        {
+                            ne += 1;
+                        }
+                        pending = Some((line[ns..ne].to_string(), ln, 0));
+                        i = ne;
+                    }
+                }
+                continue;
+            }
+            match b {
+                b'(' | b'[' => {
+                    if let Some(p) = pending.as_mut() {
+                        p.2 += 1;
+                    }
+                }
+                b')' | b']' => {
+                    if let Some(p) = pending.as_mut() {
+                        p.2 -= 1;
+                    }
+                }
+                b';' => {
+                    if pending.as_ref().is_some_and(|p| p.2 == 0) {
+                        pending = None;
+                    }
+                }
+                b'{' => {
+                    if let Some((name, sig, _)) = pending.take() {
+                        open.push((name, sig, ln, depth));
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    while open.last().is_some_and(|o| o.3 == depth) {
+                        let (name, sig_line, body_start, _) = open.pop().unwrap();
+                        spans.push(FnSpan { name, sig_line, body_start, body_end: ln });
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    spans.sort_by_key(|s| s.sig_line);
+    spans
+}
+
+/// Mark lines under `#[cfg(test)]` / `#[test]` items. Handles stacked
+/// attributes; the marked span runs from the attribute through the
+/// item's closing brace (or just the item line when it has no body).
+fn mark_test_regions(scan: &mut FileScan) {
+    let n = scan.code.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = scan.code[i].trim();
+        if !(t.contains("#[cfg(test)]") || t.contains("#[test]")) {
+            i += 1;
+            continue;
+        }
+        let attr_line = i;
+        // skip the attribute stack and blank lines to the item itself
+        let mut item = i + 1;
+        while item < n {
+            let it = scan.code[item].trim();
+            if it.is_empty() || it.starts_with("#[") {
+                item += 1;
+            } else {
+                break;
+            }
+        }
+        if item >= n {
+            for k in attr_line..n {
+                scan.in_test[k] = true;
+            }
+            break;
+        }
+        let base = scan.depth_start(item);
+        // find the end of the item: the first line whose end depth comes
+        // back to the base *after* a brace opened (or the item line when
+        // it never opens one)
+        let mut end = item;
+        let mut opened = false;
+        for j in item..n {
+            if scan.depth_end[j] > base {
+                opened = true;
+            }
+            if opened && scan.depth_end[j] <= base {
+                end = j;
+                break;
+            }
+            if !opened && scan.code[j].contains(';') {
+                end = j;
+                break;
+            }
+            end = j;
+        }
+        for k in attr_line..=end {
+            scan.in_test[k] = true;
+        }
+        i = end + 1;
+    }
+}
+
+/// Parse every `lint-ok(rule)` annotation out of the comment copy.
+fn find_lint_oks(comments: &[String]) -> Vec<LintOk> {
+    let mut out = Vec::new();
+    for (ln, c) in comments.iter().enumerate() {
+        let mut from = 0;
+        while let Some(off) = c[from..].find("lint-ok(") {
+            let start = from + off + "lint-ok(".len();
+            if let Some(close) = c[start..].find(')') {
+                out.push(LintOk { rule: c[start..start + close].trim().to_string(), line: ln });
+                from = start + close;
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> FileScan {
+        scan_source(PathBuf::from("mem.rs"), "mem.rs", src)
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked_from_code() {
+        let s = scan("let x = \"vec![1]\"; // vec![2]\nlet y = 1; /* Box::new */\n");
+        assert!(!s.code[0].contains("vec!"));
+        assert!(!s.code[1].contains("Box::new"));
+        assert!(s.comments[0].contains("vec![2]"));
+        assert!(s.code[0].contains("let x ="));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> char {\n    let b = '{';\n    b\n}\n");
+        // the '{' char literal must not disturb brace depth
+        assert_eq!(*s.depth_end.last().unwrap(), 0);
+        assert!(s.code[0].contains("'a"));
+    }
+
+    #[test]
+    fn raw_strings() {
+        let s = scan("let p = r#\"unsafe { } \"#;\nlet q = 2;\n");
+        assert!(!s.code[0].contains("unsafe"));
+        assert_eq!(s.depth_end[0], 0);
+        assert!(s.code[1].contains("let q"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("/* a /* b */ still comment */ let x = 1;\n");
+        assert!(s.code[0].contains("let x = 1;"));
+        assert!(!s.code[0].contains('a'));
+    }
+
+    #[test]
+    fn fn_spans_nest() {
+        let src = "fn outer() {\n    fn inner(a: [f32; 4]) -> usize {\n        a.len()\n    }\n    inner([0.0; 4])\n}\n";
+        let s = scan(src);
+        let names: Vec<_> = s.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+        let outer = &s.fns[0];
+        assert_eq!((outer.sig_line, outer.body_end), (0, 5));
+        let inner = &s.fns[1];
+        assert_eq!((inner.sig_line, inner.body_end), (1, 3));
+    }
+
+    #[test]
+    fn trait_method_decls_have_no_span() {
+        let s = scan("trait T {\n    fn decl(&self) -> usize;\n    fn with_body(&self) -> usize {\n        1\n    }\n}\n");
+        let names: Vec<_> = s.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["with_body"]);
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        live();\n    }\n}\nfn after() {}\n";
+        let s = scan(src);
+        assert!(!s.in_test[0]);
+        assert!(s.in_test[1] && s.in_test[4] && s.in_test[7]);
+        assert!(!s.in_test[8]);
+    }
+
+    #[test]
+    fn lint_ok_parsing_and_coverage() {
+        let s = scan("// lint-ok(panic-path): justified\nlet x = v.pop().unwrap();\n");
+        assert!(s.lint_ok_covers("panic-path", 1));
+        assert!(!s.lint_ok_covers("warm-alloc", 1));
+        assert!(!s.lint_ok_covers("panic-path", 4));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert_eq!(find_word("unsafe { unsafety }", "unsafe"), vec![0]);
+        assert!(find_word("let fnord = 1;", "fn").is_empty());
+    }
+}

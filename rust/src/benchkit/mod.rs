@@ -33,6 +33,8 @@ impl CountingAlloc {
 
     /// Allocator touches so far (monotone; diff around a region).
     pub fn allocations(&self) -> u64 {
+        // SeqCst: counter reads sit outside any timing loop; total order
+        // costs nothing here and keeps the gate immune to reordering
         self.allocs.load(Ordering::SeqCst)
     }
 }
@@ -43,22 +45,33 @@ impl Default for CountingAlloc {
     }
 }
 
+// SAFETY: pure pass-through to `System` plus a counter bump — layout
+// contracts are forwarded verbatim, so System's guarantees carry over.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same layout handed to System.alloc; the count is a side
+    // effect with no aliasing.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // SeqCst: one uncontended RMW per allocation; see `allocations`
         self.allocs.fetch_add(1, Ordering::SeqCst);
         System.alloc(layout)
     }
 
+    // SAFETY: ptr/layout come from a matching alloc on this allocator,
+    // which forwarded to System.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: forwarded verbatim; System enforces the realloc contract.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // SeqCst: one uncontended RMW per allocation; see `allocations`
         self.allocs.fetch_add(1, Ordering::SeqCst);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: forwarded verbatim to System.alloc_zeroed.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // SeqCst: one uncontended RMW per allocation; see `allocations`
         self.allocs.fetch_add(1, Ordering::SeqCst);
         System.alloc_zeroed(layout)
     }

@@ -1,0 +1,134 @@
+//! `srclint` — the repo's std-only static-analysis gate.
+//!
+//! Scans `rust/src/**/*.rs` with the rules in [`fairsquare::analysis`],
+//! runs the bounded interleaving models in
+//! [`fairsquare::sim::interleave`], writes `ANALYSIS_report.json`, and
+//! exits nonzero on any finding, inventory mismatch, or interleaving
+//! violation. `scripts/verify.sh` runs this as a hard gate.
+//!
+//! ```text
+//! srclint [--root PATH] [--report PATH] [--clippy-ran true|false]
+//!         [--fixture-registry] [--no-interleave]
+//! ```
+//!
+//! `--root` may be a directory or a single file (the fixture tests point
+//! it at one known-bad snippet at a time). `--fixture-registry` swaps in
+//! the narrow fixture policy so the snippets under
+//! `rust/tests/srclint_fixtures/` trip exactly their intended rule.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fairsquare::analysis::{self, Registry};
+use fairsquare::sim::interleave;
+
+struct Opts {
+    root: PathBuf,
+    report: PathBuf,
+    clippy_ran: Option<bool>,
+    fixture_registry: bool,
+    run_interleave: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")),
+        report: PathBuf::from("ANALYSIS_report.json"),
+        clippy_ran: None,
+        fixture_registry: false,
+        run_interleave: true,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                opts.root = PathBuf::from(args.next().ok_or("--root needs a path")?);
+            }
+            "--report" => {
+                opts.report = PathBuf::from(args.next().ok_or("--report needs a path")?);
+            }
+            "--clippy-ran" => {
+                let v = args.next().ok_or("--clippy-ran needs true|false")?;
+                opts.clippy_ran = Some(match v.as_str() {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => return Err(format!("--clippy-ran: expected true|false, got {other}")),
+                });
+            }
+            "--fixture-registry" => opts.fixture_registry = true,
+            "--no-interleave" => opts.run_interleave = false,
+            "--help" | "-h" => {
+                println!(
+                    "srclint [--root PATH] [--report PATH] [--clippy-ran true|false] \
+                     [--fixture-registry] [--no-interleave]"
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument: {other}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("srclint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let reg = if opts.fixture_registry { Registry::fixtures() } else { Registry::builtin() };
+    let analysis = match analysis::run(&opts.root, &reg) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("srclint: scan failed: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let suite = if opts.run_interleave { interleave::standard_suite() } else { Vec::new() };
+
+    for f in &analysis.findings {
+        eprintln!("{f}");
+    }
+
+    let root_str = opts.root.display().to_string();
+    let doc = analysis::report_json(&analysis, &suite, opts.clippy_ran, &root_str);
+    if let Err(e) = std::fs::write(&opts.report, format!("{doc}\n")) {
+        eprintln!("srclint: writing {}: {e}", opts.report.display());
+        return ExitCode::from(2);
+    }
+
+    let interleave_bad =
+        suite.iter().filter(|(_, ex)| ex.violations > 0 || ex.truncated).count();
+    let schedules: u64 = suite.iter().map(|(_, ex)| ex.schedules).sum();
+    println!(
+        "srclint: {} files, {} findings, {} unsafe sites ({} inventoried), \
+         {} interleave models ({} schedules), report: {}",
+        analysis.files_scanned,
+        analysis.findings.len(),
+        analysis.unsafe_sites,
+        analysis.inventory.matched,
+        suite.len(),
+        schedules,
+        opts.report.display()
+    );
+
+    let ok = analysis.findings.is_empty() && analysis.inventory.ok && interleave_bad == 0;
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        if !analysis.inventory.ok {
+            eprintln!(
+                "srclint: unsafe inventory mismatch ({} entries, {} matched, {} sites)",
+                analysis.inventory.entries, analysis.inventory.matched, analysis.unsafe_sites
+            );
+        }
+        if interleave_bad > 0 {
+            eprintln!("srclint: {interleave_bad} interleave model(s) reported violations");
+        }
+        ExitCode::FAILURE
+    }
+}

@@ -86,6 +86,7 @@ impl<T> Batcher<T> {
     /// recycled buffer, so a warmed batch allocates nothing here.
     pub fn take_into(&mut self, now: Instant, out: &mut Vec<Pending<T>>) -> Option<bool> {
         let by_size = self.queue.len() >= self.max_batch;
+        // lint-ok(panic-path): deadline() is Some when the queue is non-empty
         let by_deadline =
             !self.queue.is_empty() && self.deadline().unwrap() <= now;
         if !by_size && !by_deadline {

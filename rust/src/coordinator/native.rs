@@ -858,6 +858,8 @@ impl BatchExecutor for ComplexMatmulDirectExecutor {
     fn run_into(&mut self, rows_flat: &[f32], out: &mut Vec<f32>) -> Result<()> {
         self.core.check_len(rows_flat)?;
         let (b, p) = (self.core.batch_rows, self.core.out_features);
+        // lint-ok(warm-alloc): EngineConfig is three usizes — a heap-free
+        // copy that splits the &mut self borrows below
         let cfg = self.core.cfg.clone();
         let x = self.core.split_planes_ws(rows_flat, &mut self.ws);
         let mut rr = self.ws.checkout(b * p);

@@ -225,6 +225,8 @@ impl BatchExecutor for PjrtExecutor {
 
     fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
         let out = self.engine.run_f32(&self.model, &[rows_flat.to_vec()])?;
+        // lint-ok(panic-path): run_f32 returns one output per input batch
+        // by the PJRT contract; an empty Vec would be an engine bug.
         Ok(out.into_iter().next().unwrap())
     }
 }
@@ -288,22 +290,69 @@ pub struct TileConfig {
 /// borrows overlap; (b) the join counter's `AcqRel` decrement in
 /// [`run_tile`] sequences every tile's writes before the join stage's
 /// read; (c) the buffer is never resized while tiles are in flight.
-struct TileOut(UnsafeCell<Vec<f32>>);
+///
+/// Debug builds additionally *check* invariant (a): every `range_mut`
+/// claim is recorded and tested for overlap against all earlier claims
+/// of the same job, so a fork-stage partitioning bug panics
+/// deterministically in tests instead of being silent UB. The tracker
+/// dies with the job (the recycled buffer is extracted by `into_buf`),
+/// so claims never leak across requests.
+struct TileOut {
+    buf: UnsafeCell<Vec<f32>>,
+    /// claimed `[lo, hi)` ranges of this job — debug-only overlap trap
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
+}
 
 // SAFETY: see the type-level argument — disjoint writes + AcqRel join.
+// The debug-only claims tracker is independently synchronized by its own
+// Mutex and does not weaken the argument.
 unsafe impl Sync for TileOut {}
 
 impl TileOut {
+    fn new(buf: Vec<f32>) -> Self {
+        Self {
+            buf: UnsafeCell::new(buf),
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Extract the backing buffer for recycling (join stage only).
+    fn into_buf(self) -> Vec<f32> {
+        self.buf.into_inner()
+    }
+
+    // The &mut-from-& shape is the whole point of the type: disjoint
+    // concurrent tile writes into one buffer, soundness carried by the
+    // fork-stage partition (checked in debug builds) rather than the
+    // borrow checker — hence the clippy::mut_from_ref allow.
     /// SAFETY: the caller must be the only live task touching `[lo, hi)`.
     #[allow(clippy::mut_from_ref)]
     unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
-        &mut (*self.0.get())[lo..hi]
+        debug_assert!(
+            lo <= hi && hi <= (*self.buf.get()).len(),
+            "TileOut: claim [{lo}, {hi}) outside buffer"
+        );
+        #[cfg(debug_assertions)]
+        {
+            let mut claims = self.claims.lock().unwrap();
+            for &(a, b) in claims.iter() {
+                assert!(
+                    hi <= a || b <= lo,
+                    "TileOut: tile claim [{lo}, {hi}) overlaps earlier claim [{a}, {b})"
+                );
+            }
+            claims.push((lo, hi));
+        }
+        &mut (*self.buf.get())[lo..hi]
     }
 
     /// SAFETY: the caller must have established happens-before with every
     /// writer (the join counter observed at zero).
     unsafe fn all(&self, len: usize) -> &[f32] {
-        &(*self.0.get())[..len]
+        debug_assert!(len <= (*self.buf.get()).len(), "TileOut: read past buffer");
+        &(*self.buf.get())[..len]
     }
 }
 
@@ -446,6 +495,8 @@ impl DequePool {
     }
 
     fn is_dead(&self, w: usize) -> bool {
+        // Acquire: pairs with `abandon`'s Release store, so a reader that
+        // observes the death also observes the drained deque behind it.
         self.dead[w].load(Ordering::Acquire)
     }
 
@@ -508,6 +559,7 @@ impl DequePool {
     /// the dead flags (not the startup width), so the LIFO/FIFO choice
     /// below degrades correctly as workers panic.
     fn live_workers(&self) -> usize {
+        // Acquire: pairs with `abandon`'s Release — see `is_dead`.
         self.dead
             .iter()
             .filter(|d| !d.load(Ordering::Acquire))
@@ -639,6 +691,7 @@ impl DequePool {
     /// to "lose nothing the dead had not started"), and release the slot
     /// of the batch it was executing, whose responses die with the stack.
     fn abandon(&self, w: usize, executing: bool) {
+        // Release: publishes the corpse state to `is_dead`'s Acquire loads.
         self.dead[w].store(true, Ordering::Release);
         let orphans: Vec<Work> = {
             let mut q = self.queues[w].lock().unwrap();
@@ -900,6 +953,8 @@ impl InferenceServer {
                     let _ = ready.send(Ok((exec.row_len(), exec.batch_rows())));
                     worker_loop(wid, ctl_rx, &wpool, &mut exec, shadow.as_mut(), shadow_every);
                 })
+                // lint-ok(panic-path): thread-spawn failure at server
+                // construction is unrecoverable setup, not request serving
                 .expect("spawning worker");
             handles.push(handle);
         }
@@ -925,6 +980,8 @@ impl InferenceServer {
                     Some(_) => {}
                 }
             }
+            // lint-ok(panic-path): the loop above ran `workers >= 1`
+            // times, so `shape` is always Some here
             Ok(shape.expect("workers >= 1"))
         };
         let (row_len, batch_rows) = match collect_shape() {
@@ -952,6 +1009,8 @@ impl InferenceServer {
                     fork_exec,
                 );
             })
+            // lint-ok(panic-path): thread-spawn failure at server
+            // construction is unrecoverable setup, not request serving
             .expect("spawning dispatcher");
 
         Ok(Self {
@@ -1129,7 +1188,7 @@ fn try_fork<E: BatchExecutor>(
     let job = Arc::new(TileJob {
         prep,
         items: Mutex::new(Some(items)),
-        out: TileOut(UnsafeCell::new(out)),
+        out: TileOut::new(out),
         remaining: AtomicUsize::new(tiles),
         error: Mutex::new(None),
     });
@@ -1521,6 +1580,9 @@ fn run_tile<E: BatchExecutor>(
             *slot = Some(format!("{e:#}"));
         }
     }
+    // AcqRel: the release half publishes this tile's writes before the
+    // decrement; the acquire half makes the elected joiner (the task that
+    // reads 1) see every sibling's writes and recorded errors.
     if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
         join_tile_job(job, out_len, metrics, pool);
     }
@@ -1536,6 +1598,8 @@ fn join_tile_job(job: Arc<TileJob>, out_len: usize, metrics: &mut Metrics, pool:
         .lock()
         .unwrap()
         .take()
+        // lint-ok(panic-path): the AcqRel counter elects exactly one
+        // joiner, so the items are present exactly once by construction
         .expect("join stage runs exactly once");
     let error = job.error.lock().unwrap().take();
     match error {
@@ -1560,7 +1624,7 @@ fn join_tile_job(job: Arc<TileJob>, out_len: usize, metrics: &mut Metrics, pool:
     // best-effort recycling: sibling tiles normally drop their handles
     // before their decrement is observed here, making this the last one
     if let Ok(job) = Arc::try_unwrap(job) {
-        pool.recycle_tile_parts(TileParts { prep: job.prep, out: job.out.0.into_inner() });
+        pool.recycle_tile_parts(TileParts { prep: job.prep, out: job.out.into_buf() });
     }
 }
 

@@ -24,6 +24,7 @@
 //! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts (`pjrt` feature; stub otherwise) |
 //! | [`coordinator`] | thread-based batching inference server over the runtime or the native square-kernel executors |
 //! | [`config`]      | configuration types + first-party JSON |
+//! | [`analysis`]    | std-only static analysis (`srclint`): unsafe audit, warm-path alloc lint, lock-order/atomic-ordering lint, panic-path lint |
 //! | [`testkit`]     | deterministic PRNG + property-testing runner (offline substitute for proptest) |
 //! | [`benchkit`]    | measurement harness + table printer (offline substitute for criterion) |
 //!
@@ -32,19 +33,15 @@
 //! mapping in `EXPERIMENTS.md`.
 
 // Style lints the hand-rolled kernel and reference code trips by design:
-// the loops mirror the paper's index notation (needless_range_loop), the
-// tiled drivers and lowering entry points take their geometry as scalars
-// (too_many_arguments), and the blocking arithmetic predates
-// usize::div_ceil (manual_div_ceil). scripts/verify.sh enforces the rest
-// of clippy with -D warnings; unknown_lints keeps the list forward- and
+// the loops mirror the paper's index notation (needless_range_loop) and
+// the tiled drivers and lowering entry points take their geometry as
+// scalars (too_many_arguments). scripts/verify.sh enforces the rest of
+// clippy with -D warnings; unknown_lints keeps the list forward- and
 // backward-compatible across clippy versions.
 #![allow(unknown_lints)]
-#![allow(
-    clippy::needless_range_loop,
-    clippy::too_many_arguments,
-    clippy::manual_div_ceil
-)]
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod arith;
 pub mod benchkit;
 pub mod cli;

@@ -39,7 +39,7 @@ where
         f(0, rows, data);
         return;
     }
-    let rows_per = (rows + threads - 1) / threads;
+    let rows_per = rows.div_ceil(threads);
     std::thread::scope(|scope| {
         for (ci, chunk) in data.chunks_mut(rows_per * cols).enumerate() {
             let i0 = ci * rows_per;

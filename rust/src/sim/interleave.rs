@@ -1,0 +1,585 @@
+//! Bounded exhaustive interleaving explorer — a mini-loom in pure std.
+//!
+//! The serving pool's two concurrency protocols (`coordinator/server.rs`)
+//! are modeled as small-step state machines over N ≤ 3 abstract threads,
+//! and [`explore`] enumerates **every** schedule (maximal interleaving of
+//! enabled transitions), checking invariants in every reached state:
+//!
+//! * [`TileJoinModel`] — the PR 6 `TileJob` join election: disjoint tile
+//!   writes, one `fetch_sub(AcqRel)` decrement per tile, last decrementer
+//!   runs the join. Checked: no lost/double join, the join observes every
+//!   tile's write (the happens-before edge the `AcqRel` pair carries),
+//!   and a failing tile's error is visible to the join stage.
+//! * [`GateModel`] — the PR 5 `DequePool` gate: version clock + condvar
+//!   with re-check under the lock, shortest-queue injection, owner pop /
+//!   sibling steal, close-after-drain shutdown, and dead-worker
+//!   re-injection. Checked: counter conservation (`queued` = deque
+//!   lengths, `in_flight` = queued + executing) in every state, no lost
+//!   wakeup (a deadlocked schedule is a violation), and nothing is lost
+//!   or double-executed by steal or worker death.
+//!
+//! Each model also ships *buggy* variants (decrement-before-write,
+//! missing condvar notify, leaked in-flight slot) asserted to be caught —
+//! the standard honesty check that the explorer has the power to see the
+//! bugs it claims to rule out. Schedule counts land in
+//! `ANALYSIS_report.json` via the `srclint` binary.
+//!
+//! Abstraction note: each enabled action is one *atomic* protocol step
+//! (one critical section or one atomic RMW in the real code), which is
+//! exactly the granularity at which the real protocol's interleavings
+//! differ; within-step tearing is excluded by the Mutex/atomic the step
+//! models.
+
+/// A cloneable protocol state with enumerable enabled transitions.
+pub trait InterleaveModel: Clone {
+    /// Enabled actions in this state, in a deterministic order. An empty
+    /// answer in a non-[`done`](Self::done) state is a deadlock — the
+    /// explorer reports it as a violation (this is how a lost wakeup
+    /// shows up).
+    fn enabled(&self) -> Vec<u32>;
+    /// Apply one enabled action.
+    fn step(&mut self, action: u32);
+    /// Invariants that must hold in *every* reachable state.
+    fn check(&self) -> Result<(), String>;
+    /// Whether this state is a legitimate terminal state.
+    fn done(&self) -> bool;
+    /// Invariants that must hold in terminal states.
+    fn check_done(&self) -> Result<(), String>;
+}
+
+/// Exhaustive-enumeration result.
+#[derive(Debug, Clone, Default)]
+pub struct Explored {
+    /// distinct maximal schedules (leaves of the interleaving tree)
+    pub schedules: u64,
+    /// states visited (interior + leaf)
+    pub states: u64,
+    pub violations: u64,
+    pub first_violation: Option<String>,
+    /// state budget exhausted — enumeration incomplete (never expected
+    /// for the shipped model sizes; reported, and gated, in the report)
+    pub truncated: bool,
+}
+
+impl Explored {
+    fn violate(&mut self, msg: String) {
+        self.violations += 1;
+        if self.first_violation.is_none() {
+            self.first_violation = Some(msg);
+        }
+    }
+}
+
+/// Depth-first enumeration of every schedule from `initial`, bounded by
+/// `max_states` explored states (a runaway backstop, not a tuning knob —
+/// the shipped models stay far under it).
+pub fn explore<M: InterleaveModel>(initial: &M, max_states: u64) -> Explored {
+    let mut out = Explored::default();
+    dfs(initial, &mut out, max_states);
+    out
+}
+
+fn dfs<M: InterleaveModel>(m: &M, out: &mut Explored, max_states: u64) {
+    if out.states >= max_states {
+        out.truncated = true;
+        return;
+    }
+    out.states += 1;
+    if let Err(e) = m.check() {
+        out.violate(e);
+        return;
+    }
+    let actions = m.enabled();
+    if actions.is_empty() {
+        if m.done() {
+            out.schedules += 1;
+            if let Err(e) = m.check_done() {
+                out.violate(e);
+            }
+        } else {
+            out.violate("deadlock: no enabled action in a non-terminal state".into());
+        }
+        return;
+    }
+    for a in actions {
+        let mut next = m.clone();
+        next.step(a);
+        dfs(&next, out, max_states);
+        if out.truncated {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model 1: the TileJob join election
+// ---------------------------------------------------------------------
+
+/// Per-tile two-step program: (1) write the tile's disjoint output range
+/// (or record the first error), (2) decrement the remaining counter;
+/// whoever decrements it to zero runs the join stage, which reads every
+/// range. `buggy_decrement_first` swaps the two steps — modeling code
+/// that releases its tile before publishing the write — and is caught by
+/// the join-visibility invariant.
+#[derive(Debug, Clone)]
+pub struct TileJoinModel {
+    tiles: usize,
+    /// tiles whose executor fails instead of writing
+    fail: Vec<bool>,
+    buggy_decrement_first: bool,
+    /// per-tile program counter: 0 = not started, 1 = first step done,
+    /// 2 = finished
+    pc: Vec<u8>,
+    written: Vec<bool>,
+    /// first-error-wins slot (models `TileJob::error`)
+    error_from: Option<usize>,
+    remaining: usize,
+    joins: usize,
+    join_saw_all_writes: bool,
+    join_saw_error: bool,
+}
+
+impl TileJoinModel {
+    pub fn new(tiles: usize, fail: &[usize], buggy_decrement_first: bool) -> Self {
+        let mut f = vec![false; tiles];
+        for &t in fail {
+            f[t] = true;
+        }
+        Self {
+            tiles,
+            fail: f,
+            buggy_decrement_first,
+            pc: vec![0; tiles],
+            written: vec![false; tiles],
+            error_from: None,
+            remaining: tiles,
+            joins: 0,
+            join_saw_all_writes: false,
+            join_saw_error: false,
+        }
+    }
+
+    fn write_step(&mut self, t: usize) {
+        if self.fail[t] {
+            // Mutex<Option<String>>: first error wins
+            if self.error_from.is_none() {
+                self.error_from = Some(t);
+            }
+        } else {
+            self.written[t] = true;
+        }
+    }
+
+    fn decrement_step(&mut self, t: usize) {
+        let _ = t;
+        self.remaining -= 1;
+        if self.remaining == 0 {
+            // join election: the last decrementer reads every range
+            self.joins += 1;
+            self.join_saw_all_writes =
+                (0..self.tiles).all(|i| self.fail[i] || self.written[i]);
+            self.join_saw_error = self.error_from.is_some();
+        }
+    }
+}
+
+impl InterleaveModel for TileJoinModel {
+    fn enabled(&self) -> Vec<u32> {
+        (0..self.tiles).filter(|&t| self.pc[t] < 2).map(|t| t as u32).collect()
+    }
+
+    fn step(&mut self, action: u32) {
+        let t = action as usize;
+        let first = self.pc[t] == 0;
+        self.pc[t] += 1;
+        let write_first = !self.buggy_decrement_first;
+        if first == write_first {
+            self.write_step(t);
+        } else {
+            self.decrement_step(t);
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.joins > 1 {
+            return Err("double join: counter elected two join stages".into());
+        }
+        if self.joins == 1 && self.remaining != 0 {
+            return Err("join ran while tiles were still outstanding".into());
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.pc.iter().all(|&p| p == 2)
+    }
+
+    fn check_done(&self) -> Result<(), String> {
+        if self.joins != 1 {
+            return Err(format!("terminal state has {} joins, want exactly 1", self.joins));
+        }
+        if !self.join_saw_all_writes {
+            return Err(
+                "join read the output before some tile's write (missing happens-before)".into(),
+            );
+        }
+        if self.fail.iter().any(|&f| f) && !self.join_saw_error {
+            return Err("a tile failed but the join stage observed no error".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model 2: the DequePool gate
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum WState {
+    Running,
+    /// found nothing on the scan that read `seen`; will park unless the
+    /// version moved (the re-check under the gate lock in `wait_change`)
+    Prepark { seen: u64 },
+    Executing,
+    Done,
+}
+
+/// Injection bugs the gate self-tests prove the explorer catches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GateBug {
+    #[default]
+    None,
+    /// `push`/`close` forget the version bump + notify → lost wakeup
+    MissingNotify,
+    /// `batch_done` forgets the in-flight decrement → conservation break
+    LeakInFlight,
+}
+
+/// Abstract DequePool: `to_inject` units flow through shortest-queue
+/// injection, owner pop / sibling steal, execution, and a
+/// close-after-drain shutdown (the dispatcher's `wait_idle` + `close`).
+/// `die_budget` lets one worker die mid-run, exercising the `abandon`
+/// re-injection path.
+#[derive(Debug, Clone)]
+pub struct GateModel {
+    steal: bool,
+    bug: GateBug,
+    to_inject: usize,
+    total: usize,
+    deques: Vec<usize>,
+    dead: Vec<bool>,
+    version: u64,
+    in_flight: usize,
+    queued: usize,
+    closed: bool,
+    workers: Vec<WState>,
+    executed: usize,
+    die_budget: usize,
+}
+
+const PRODUCER: u32 = 0;
+const DIE_BASE: u32 = 100;
+
+impl GateModel {
+    pub fn new(workers: usize, items: usize, steal: bool, die_budget: usize, bug: GateBug) -> Self {
+        Self {
+            steal,
+            bug,
+            to_inject: items,
+            total: items,
+            deques: vec![0; workers],
+            dead: vec![false; workers],
+            version: 0,
+            in_flight: 0,
+            queued: 0,
+            closed: false,
+            workers: vec![WState::Running; workers],
+            executed: 0,
+            die_budget,
+        }
+    }
+
+    fn bump(&mut self) {
+        self.version = self.version.wrapping_add(1);
+    }
+
+    fn shortest_alive(&self) -> Option<usize> {
+        (0..self.deques.len())
+            .filter(|&w| !self.dead[w])
+            .min_by_key(|&w| self.deques[w])
+    }
+
+    /// One worker scan: version snapshot, own pop (or sibling steal),
+    /// else arm the prepark re-check — the exact order of the real
+    /// worker loop.
+    fn scan(&mut self, w: usize) {
+        let seen = self.version;
+        if self.deques[w] > 0 {
+            self.deques[w] -= 1;
+            self.queued -= 1;
+            self.workers[w] = WState::Executing;
+            return;
+        }
+        if self.steal {
+            let n = self.deques.len();
+            for off in 1..n {
+                let v = (w + off) % n;
+                if self.deques[v] > 0 {
+                    self.deques[v] -= 1;
+                    self.queued -= 1;
+                    self.workers[w] = WState::Executing;
+                    return;
+                }
+            }
+        }
+        self.workers[w] = WState::Prepark { seen };
+    }
+}
+
+impl InterleaveModel for GateModel {
+    fn enabled(&self) -> Vec<u32> {
+        let mut acts = Vec::new();
+        // producer: inject while items remain; close only once drained
+        // (the dispatcher's shutdown does wait_idle() before close())
+        if self.to_inject > 0 || (!self.closed && self.in_flight == 0) {
+            acts.push(PRODUCER);
+        }
+        for (w, st) in self.workers.iter().enumerate() {
+            let a = w as u32 + 1;
+            match st {
+                WState::Running | WState::Executing => acts.push(a),
+                WState::Prepark { seen } => {
+                    // parked: wakes only when the version moved or the
+                    // pool closed — this is the condvar
+                    if self.version != *seen || self.closed {
+                        acts.push(a);
+                    }
+                }
+                WState::Done => {}
+            }
+            if self.die_budget > 0
+                && *st == WState::Running
+                && self.dead.iter().filter(|d| !**d).count() > 1
+            {
+                acts.push(DIE_BASE + w as u32);
+            }
+        }
+        acts
+    }
+
+    fn step(&mut self, action: u32) {
+        if action == PRODUCER {
+            if self.to_inject > 0 {
+                if let Some(w) = self.shortest_alive() {
+                    self.deques[w] += 1;
+                    self.in_flight += 1;
+                    self.queued += 1;
+                    self.to_inject -= 1;
+                    if self.bug != GateBug::MissingNotify {
+                        self.bump();
+                    }
+                }
+            } else {
+                self.closed = true;
+                if self.bug != GateBug::MissingNotify {
+                    self.bump();
+                }
+            }
+            return;
+        }
+        if action >= DIE_BASE {
+            // abandon: mark dead, re-inject the deque onto the shortest
+            // live sibling; accounts unchanged (nothing was executing)
+            let w = (action - DIE_BASE) as usize;
+            self.dead[w] = true;
+            let orphans = std::mem::take(&mut self.deques[w]);
+            if let Some(v) = self.shortest_alive() {
+                self.deques[v] += orphans;
+            } else {
+                self.queued -= orphans;
+                self.in_flight -= orphans;
+            }
+            self.die_budget -= 1;
+            self.workers[w] = WState::Done;
+            self.bump();
+            return;
+        }
+        let w = (action - 1) as usize;
+        match self.workers[w].clone() {
+            WState::Running => self.scan(w),
+            WState::Executing => {
+                self.executed += 1;
+                if self.bug != GateBug::LeakInFlight {
+                    self.in_flight -= 1;
+                }
+                self.bump();
+                self.workers[w] = WState::Running;
+            }
+            WState::Prepark { seen } => {
+                // wait_change: under the gate lock — closed ⇒ exit,
+                // version moved ⇒ rescan
+                if self.closed {
+                    self.workers[w] = WState::Done;
+                } else if self.version != seen {
+                    self.workers[w] = WState::Running;
+                }
+            }
+            WState::Done => {}
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let lens: usize = self.deques.iter().sum();
+        if self.queued != lens {
+            return Err(format!("queued={} but deques hold {lens}", self.queued));
+        }
+        let executing = self.workers.iter().filter(|w| **w == WState::Executing).count();
+        if self.in_flight != lens + executing {
+            return Err(format!(
+                "in_flight={} but queued({lens}) + executing({executing}) disagree",
+                self.in_flight
+            ));
+        }
+        if self.executed > self.total {
+            return Err("a unit was executed twice".into());
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.closed && self.workers.iter().all(|w| *w == WState::Done)
+    }
+
+    fn check_done(&self) -> Result<(), String> {
+        if self.executed != self.total {
+            return Err(format!(
+                "conservation broken: executed {} of {} injected units",
+                self.executed, self.total
+            ));
+        }
+        if self.in_flight != 0 || self.queued != 0 {
+            return Err(format!(
+                "terminal accounts nonzero: in_flight={} queued={}",
+                self.in_flight, self.queued
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// State-budget backstop, ~3× the largest shipped model (the 2-worker
+/// die-budget gate visits 616_013 states). Three workers or three
+/// in-flight items push past 4M states — raise deliberately if a model
+/// grows.
+pub const STATE_BUDGET: u64 = 2_000_000;
+
+/// The standard model suite the `srclint` binary runs and reports:
+/// every entry must enumerate completely with zero violations.
+pub fn standard_suite() -> Vec<(String, Explored)> {
+    vec![
+        ("tile_join_t2".into(), explore(&TileJoinModel::new(2, &[], false), STATE_BUDGET)),
+        ("tile_join_t3".into(), explore(&TileJoinModel::new(3, &[], false), STATE_BUDGET)),
+        (
+            "tile_join_t3_error".into(),
+            explore(&TileJoinModel::new(3, &[1], false), STATE_BUDGET),
+        ),
+        (
+            "gate_w2_p2_steal".into(),
+            explore(&GateModel::new(2, 2, true, 0, GateBug::None), STATE_BUDGET),
+        ),
+        (
+            "gate_w2_p2_fifo".into(),
+            explore(&GateModel::new(2, 2, false, 0, GateBug::None), STATE_BUDGET),
+        ),
+        (
+            "gate_w2_p2_steal_die".into(),
+            explore(&GateModel::new(2, 2, true, 1, GateBug::None), STATE_BUDGET),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// (2T)! / 2!^T — interleavings of T two-step threads.
+    fn two_step_schedules(t: u64) -> u64 {
+        let fact = |n: u64| (1..=n).product::<u64>();
+        fact(2 * t) / 2u64.pow(t as u32)
+    }
+
+    #[test]
+    fn tile_join_exhaustive_and_clean() {
+        for tiles in 1..=3usize {
+            let ex = explore(&TileJoinModel::new(tiles, &[], false), STATE_BUDGET);
+            assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+            assert!(!ex.truncated);
+            assert_eq!(ex.schedules, two_step_schedules(tiles as u64), "tiles={tiles}");
+        }
+    }
+
+    #[test]
+    fn tile_join_error_propagates_on_every_schedule() {
+        for fail in [vec![0], vec![2], vec![0, 2]] {
+            let ex = explore(&TileJoinModel::new(3, &fail, false), STATE_BUDGET);
+            assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+            assert_eq!(ex.schedules, two_step_schedules(3));
+        }
+    }
+
+    #[test]
+    fn buggy_decrement_first_is_caught() {
+        let ex = explore(&TileJoinModel::new(2, &[], true), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch decrement-before-write");
+        let msg = ex.first_violation.unwrap();
+        assert!(msg.contains("happens-before"), "{msg}");
+    }
+
+    #[test]
+    fn gate_exhaustive_and_clean() {
+        // the single-worker case is small enough to pin exactly: 18
+        // schedules over 103 states (independently enumerated)
+        let ex = explore(&GateModel::new(1, 2, false, 0, GateBug::None), STATE_BUDGET);
+        assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+        assert_eq!((ex.schedules, ex.states), (18, 103));
+
+        for (p, steal) in [(2, true), (2, false), (1, true)] {
+            let ex = explore(&GateModel::new(2, p, steal, 0, GateBug::None), STATE_BUDGET);
+            assert_eq!(ex.violations, 0, "p={p} steal={steal}: {:?}", ex.first_violation);
+            assert!(!ex.truncated);
+            assert!(ex.schedules > 0);
+        }
+    }
+
+    #[test]
+    fn gate_survives_a_worker_death() {
+        // schedules where a worker dies mid-run (deque re-injection) are
+        // part of the enumeration
+        let ex = explore(&GateModel::new(2, 2, true, 1, GateBug::None), STATE_BUDGET);
+        assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+        assert!(!ex.truncated);
+        assert!(ex.schedules > 0);
+    }
+
+    #[test]
+    fn missing_notify_deadlocks_and_is_caught() {
+        let ex = explore(&GateModel::new(2, 2, true, 0, GateBug::MissingNotify), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the lost wakeup");
+        assert!(ex.first_violation.unwrap().contains("deadlock"));
+    }
+
+    #[test]
+    fn leaked_in_flight_is_caught() {
+        let ex = explore(&GateModel::new(2, 2, true, 0, GateBug::LeakInFlight), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the leaked slot");
+    }
+
+    #[test]
+    fn standard_suite_is_green() {
+        for (name, ex) in standard_suite() {
+            assert_eq!(ex.violations, 0, "{name}: {:?}", ex.first_violation);
+            assert!(!ex.truncated, "{name} hit the state budget");
+            assert!(ex.schedules > 0, "{name} enumerated nothing");
+        }
+    }
+}

@@ -20,6 +20,7 @@
 pub mod complex_pe;
 pub mod conv;
 pub mod iir;
+pub mod interleave;
 pub mod mac;
 pub mod systolic;
 pub mod tensor_core;

@@ -1,0 +1,116 @@
+//! End-to-end tests of the `srclint` binary: the shipping tree must be
+//! clean under the builtin registry, and every seeded fixture under
+//! `tests/srclint_fixtures/` must trip exactly its intended rule.
+//!
+//! The fixtures are plain `.rs` files in a subdirectory, so cargo never
+//! compiles them — they exist only as scanner input.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/srclint_fixtures").join(name)
+}
+
+fn report_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("srclint_test_{tag}_{}.json", std::process::id()))
+}
+
+/// Run the srclint binary; returns (exit-ok, report text, stderr).
+fn run_srclint(tag: &str, extra: &[&str]) -> (bool, String, String) {
+    let report = report_path(tag);
+    let _ = std::fs::remove_file(&report);
+    let out = Command::new(env!("CARGO_BIN_EXE_srclint"))
+        .arg("--report")
+        .arg(&report)
+        .args(extra)
+        .output()
+        .expect("spawning srclint");
+    let doc = std::fs::read_to_string(&report).unwrap_or_default();
+    let _ = std::fs::remove_file(&report);
+    (out.status.success(), doc, String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+const ALL_RULES: &[&str] =
+    &["unsafe-audit", "warm-alloc", "lock-order", "atomic-ordering", "panic-path"];
+
+/// Assert the report's per-rule counters: nonzero exactly for `tripped`.
+fn assert_only_rule(doc: &str, tripped: &str, ctx: &str) {
+    for rule in ALL_RULES {
+        let zero = format!("\"{rule}\":0");
+        if *rule == tripped {
+            assert!(
+                !doc.contains(&zero),
+                "{ctx}: expected `{rule}` findings, got zero\nreport: {doc}"
+            );
+        } else {
+            assert!(
+                doc.contains(&zero),
+                "{ctx}: unexpected `{rule}` findings\nreport: {doc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shipping_tree_is_clean_and_exits_zero() {
+    let (ok, doc, stderr) = run_srclint("tree", &[]);
+    assert!(ok, "srclint failed on the shipping tree:\n{stderr}\nreport: {doc}");
+    assert!(doc.contains("\"findings_total\":0"), "report: {doc}");
+    assert!(doc.contains("\"inventory_ok\":true"), "report: {doc}");
+    assert!(doc.contains("\"interleave_ok\":true"), "report: {doc}");
+    // the interleave section reports exhaustive schedule counts
+    assert!(doc.contains("\"tile_join_t3\""), "report: {doc}");
+    assert!(doc.contains("\"gate_w2_p2_steal\""), "report: {doc}");
+}
+
+#[test]
+fn each_seeded_fixture_trips_exactly_its_rule() {
+    for (file, rule) in [
+        ("missing_safety.rs", "unsafe-audit"),
+        ("bad_lock_order.rs", "lock-order"),
+        ("relaxed_join_counter.rs", "atomic-ordering"),
+        ("alloc_in_warm_path.rs", "warm-alloc"),
+        ("unannotated_panic.rs", "panic-path"),
+    ] {
+        let root = fixture(file);
+        let tag = file.trim_end_matches(".rs");
+        let (ok, doc, stderr) = run_srclint(
+            tag,
+            &["--fixture-registry", "--no-interleave", "--root", root.to_str().unwrap()],
+        );
+        assert!(!ok, "{file}: srclint must exit nonzero on a seeded violation");
+        assert!(
+            stderr.contains(&format!("[{rule}]")),
+            "{file}: stderr must name the rule\n{stderr}"
+        );
+        assert_only_rule(&doc, rule, file);
+    }
+}
+
+#[test]
+fn clean_fixture_passes_every_rule_it_is_enrolled_in() {
+    let root = fixture("clean.rs");
+    let (ok, doc, stderr) = run_srclint(
+        "clean",
+        &["--fixture-registry", "--no-interleave", "--root", root.to_str().unwrap()],
+    );
+    assert!(ok, "clean.rs must produce zero findings:\n{stderr}\nreport: {doc}");
+    assert!(doc.contains("\"findings_total\":0"), "report: {doc}");
+}
+
+#[test]
+fn fixture_directory_trips_every_rule_at_once() {
+    let root = fixture("");
+    let (ok, doc, _) = run_srclint(
+        "dir",
+        &["--fixture-registry", "--no-interleave", "--root", root.to_str().unwrap()],
+    );
+    assert!(!ok);
+    for rule in ALL_RULES {
+        assert!(
+            !doc.contains(&format!("\"{rule}\":0")),
+            "directory run must trip `{rule}`\nreport: {doc}"
+        );
+    }
+}

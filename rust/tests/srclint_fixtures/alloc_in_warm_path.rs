@@ -1,0 +1,7 @@
+//! srclint fixture: a heap allocation inside a registered zero-alloc
+//! warm path. Must trip `warm-alloc` and no other rule.
+
+pub fn warm_path_fn(out: &mut Vec<f32>, rows: usize) {
+    let staged = vec![0.0f32; rows];
+    out.extend_from_slice(&staged);
+}

@@ -1,0 +1,20 @@
+//! srclint fixture: the gate (rank 1) held across a deque (rank 0)
+//! acquisition — against the declared deque < gate < spares order.
+//! Must trip `lock-order` and no other rule.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+pub struct Pool {
+    queues: Vec<Mutex<VecDeque<u32>>>,
+    gate: Mutex<u32>,
+}
+
+impl Pool {
+    pub fn backwards(&self) -> Option<u32> {
+        let mut g = self.gate.lock().unwrap();
+        let w = self.queues[0].lock().unwrap().pop_front();
+        *g += 1;
+        w
+    }
+}

@@ -1,0 +1,43 @@
+//! srclint fixture: enrolled in *every* rule and clean — proves the
+//! sanctioned idioms (lock-poisoning unwrap, rationale comments, the
+//! `lint-ok` escape hatch) produce zero findings, so the known-bad
+//! fixtures fail for their seeded reason and not for scanner noise.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub struct Gate {
+    gate: Mutex<usize>,
+    remaining: AtomicUsize,
+}
+
+/// Registered as a zero-alloc warm path; writes in place only.
+pub fn warm_ok_fn(out: &mut [f32], x: &[f32]) {
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += v * v;
+    }
+}
+
+impl Gate {
+    pub fn bump(&self) -> usize {
+        // the poisoning idiom: unwrap chained directly on lock() is the
+        // sanctioned propagate-poison-by-panicking policy
+        let mut g = self.gate.lock().unwrap();
+        *g += 1;
+        *g
+    }
+
+    pub fn finish(&self) -> bool {
+        // AcqRel: the elected joiner must observe every sibling write
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    pub fn force(&self) -> usize {
+        // lint-ok(panic-path): fixture demonstrating the escape hatch
+        self.checked().expect("fixture invariant")
+    }
+
+    fn checked(&self) -> Option<usize> {
+        Some(*self.gate.lock().unwrap())
+    }
+}

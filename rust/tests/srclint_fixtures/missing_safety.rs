@@ -1,0 +1,9 @@
+//! srclint fixture: an unsafe block with no SAFETY comment and no
+//! inventory entry — must trip `unsafe-audit` (both halves) and no
+//! other rule.
+
+pub fn write_through(p: *mut f32) {
+    unsafe {
+        *p = 1.0;
+    }
+}

@@ -1,0 +1,11 @@
+//! srclint fixture: `Ordering::Relaxed` on the join counter — drops the
+//! happens-before edge the join election depends on. Must trip
+//! `atomic-ordering` (the Relaxed ban) and no other rule.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn last_tile(remaining: &AtomicUsize) -> bool {
+    // decrement the remaining-tile counter; this rationale comment
+    // satisfies the comment-proximity half, isolating the Relaxed ban
+    remaining.fetch_sub(1, Ordering::Relaxed) == 1
+}

@@ -1,0 +1,7 @@
+//! srclint fixture: an unwrap on the serving path with no
+//! `lint-ok(panic-path)` annotation and outside the poisoning idiom.
+//! Must trip `panic-path` and no other rule.
+
+pub fn first_row(batch: &[Vec<f32>]) -> &Vec<f32> {
+    batch.first().unwrap()
+}

@@ -34,8 +34,17 @@
 # (BENCH_blocked_engine.json, BENCH_blocked_conv.json,
 # BENCH_e2e_serving.json), so downstream tooling reads one canonical
 # location without knowing the cargo layout.
+#   * srclint: the std-only static-analysis pass (unsafe audit vs the
+#     checked-in inventory, warm-path allocation lint, lock-order +
+#     atomic-ordering lint, panic-path lint) plus the bounded interleaving
+#     models of the TileJob join and the DequePool gate — writes
+#     rust/ANALYSIS_report.json (published to the repo root like the
+#     BENCH_*.json artifacts) and must report findings_total == 0,
+#     inventory_ok and interleave_ok
 #   * cargo clippy --all-targets -- -D warnings (skipped with a warning if
-#     clippy is not installed in the toolchain)
+#     clippy is not installed in the toolchain; whether it ran is recorded
+#     as clippy_ran in ANALYSIS_report.json, and VERIFY_REQUIRE_CLIPPY=1
+#     turns the skip into a hard failure)
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -123,11 +132,41 @@ echo "==> serve --native --model complex smoke"
 cargo run --release --quiet -- serve --native --model complex --requests 64 --rps 4000
 
 echo "==> cargo clippy --all-targets -- -D warnings"
+CLIPPY_RAN=false
 if ! cargo clippy --version >/dev/null 2>&1; then
+    if [[ "${VERIFY_REQUIRE_CLIPPY:-0}" == "1" ]]; then
+        echo "verify FAILED: VERIFY_REQUIRE_CLIPPY=1 but clippy is not installed" >&2
+        exit 1
+    fi
     echo "verify WARNING: clippy not installed; skipping the clippy gate" >&2
 else
     cargo clippy --all-targets --quiet -- -D warnings
+    CLIPPY_RAN=true
 fi
+
+echo "==> srclint (static analysis + interleaving models)"
+rm -f ANALYSIS_report.json
+if ! cargo run --release --quiet --bin srclint -- --clippy-ran "$CLIPPY_RAN"; then
+    echo "verify FAILED: srclint reported findings (see above)" >&2
+    exit 1
+fi
+if [[ ! -f ANALYSIS_report.json ]]; then
+    echo "verify FAILED: ANALYSIS_report.json was not produced" >&2
+    exit 1
+fi
+if ! grep -q '"findings_total":0' ANALYSIS_report.json; then
+    echo "verify FAILED: ANALYSIS_report.json has findings_total != 0" >&2
+    exit 1
+fi
+if ! grep -q '"inventory_ok":true' ANALYSIS_report.json; then
+    echo "verify FAILED: unsafe inventory does not match the tree" >&2
+    exit 1
+fi
+if ! grep -q '"interleave_ok":true' ANALYSIS_report.json; then
+    echo "verify FAILED: an interleaving model reported a violation" >&2
+    exit 1
+fi
+cp ANALYSIS_report.json ..
 
 # last so a formatting slip never masks a functional/perf failure above
 echo "==> cargo fmt --check"
