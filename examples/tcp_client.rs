@@ -1,0 +1,85 @@
+//! TCP serving client: talk to the square-trick engine over a socket.
+//!
+//!   # self-contained: starts its own in-process ingress on a free port
+//!   cargo run --release --example tcp_client
+//!
+//!   # or against an already-running front door
+//!   cargo run --release -- serve --listen 127.0.0.1:7878 &
+//!   cargo run --release --example tcp_client -- 127.0.0.1:7878
+//!
+//! Steps: (1) connect and LIST the advertised model table (name, arity,
+//! admission cost); (2) send one INFER per model — dense 784→10, conv
+//! NCHW 1×28×28, complex QPSK 64 — and print the response shape;
+//! (3) show a typed rejection: an unknown model name comes back as a
+//! `REJECTED` frame naming the valid set, never a silent drop.
+
+use anyhow::Result;
+
+use fairsquare::coordinator::WorkloadGen;
+use fairsquare::ingress::{
+    self, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
+};
+
+fn main() -> Result<()> {
+    // an explicit ADDR argument targets a running server; with none, we
+    // host the trio ourselves on a kernel-assigned port
+    let addr_arg = std::env::args().nth(1);
+    let own_server = if addr_arg.is_none() {
+        let cfg = NativeServing::default();
+        let mut reg = ModelRegistry::new();
+        for name in MODEL_NAMES {
+            ingress::register_native(&mut reg, name, &cfg)?;
+        }
+        Some(IngressServer::bind("127.0.0.1:0", reg)?)
+    } else {
+        None
+    };
+    let addr = match (&addr_arg, &own_server) {
+        (Some(a), _) => a.clone(),
+        (None, Some(s)) => s.local_addr().to_string(),
+        (None, None) => unreachable!(),
+    };
+
+    // (1) one connection, many requests — the wire protocol is
+    // request-serial per connection
+    let mut client = TcpClient::connect(addr.as_str())?;
+    let models = client.list_models()?;
+    println!("connected to {addr}; {} models advertised:", models.len());
+    for m in &models {
+        println!("  {:<8} {:>5} -> {:<5}  cost {}", m.name, m.row_len, m.out_len, m.row_cost);
+    }
+
+    // (2) one inference per model, inputs from the deterministic workload
+    // generator the benches use
+    let mut gen = WorkloadGen::new(2026);
+    for m in &models {
+        let row = ingress::sample_input(&mut gen, &m.name)?;
+        match client.infer(&m.name, &row)? {
+            Ok(out) => println!(
+                "{:<8} OK   {} features in, {} out (first: {:.4})",
+                m.name,
+                row.len(),
+                out.len(),
+                out[0]
+            ),
+            Err(rej) => println!("{:<8} {rej}", m.name),
+        }
+    }
+
+    // (3) rejections are typed frames, not dropped connections: the
+    // reply names the valid set and the session stays usable
+    match client.infer("mystery", &[0.0; 4])? {
+        Ok(_) => println!("mystery  unexpectedly served?!"),
+        Err(rej) => println!("mystery  {rej}"),
+    }
+
+    if let Some(server) = own_server {
+        let report = server.shutdown()?;
+        report.check_conservation()?;
+        println!(
+            "\nin-process server drained: {} submitted, {} served, {} unroutable — conserved",
+            report.totals.submitted, report.totals.served, report.unroutable
+        );
+    }
+    Ok(())
+}

@@ -26,6 +26,14 @@
 //!     (enforced on ≥ 4-core machines), byte-identical across all four
 //!     combos.
 //!
+//! Every leg here drives the pool through in-process `try_submit` —
+//! the socket boundary is deliberately out of frame. The network path
+//! (wire protocol, per-connection sessions, the multi-model registry)
+//! has its own artifact: `benches/ingress.rs` (E8) soaks the same
+//! engine over real TCP and gates byte-identity against this in-process
+//! path plus the front-door conservation law, writing
+//! `BENCH_ingress.json` alongside this bench's JSON.
+//!
 //! The PJRT legs additionally require `make artifacts` and the `pjrt`
 //! feature (they skip gracefully otherwise, so `cargo bench` stays green
 //! on a fresh checkout).

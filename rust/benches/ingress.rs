@@ -1,0 +1,292 @@
+//! E8: network ingress benchmarks — the TCP front door over the
+//! multi-model serving registry.
+//!
+//! Always runs and always writes `BENCH_ingress.json` (the artifact is
+//! written *before* any gate asserts, so a failing gate still leaves
+//! the numbers behind for diagnosis):
+//!
+//! * E8a — engine-side steady-state allocation audit: the exact
+//!   executors the ingress registers (dense square-kernel, conv im2col,
+//!   complex CPM3 — same seeds, same shapes) run warmed batches under
+//!   the counting global allocator; `allocs_steady_state` is gated
+//!   to 0. The network layer allocates per connection and per request
+//!   by design (sockets, session buffers, the one sanctioned input row)
+//!   — the zero-allocation law is an *engine* property and this leg
+//!   pins it for the served models.
+//! * E8b — mixed-model TCP soak: dense + conv + complex registered
+//!   concurrently behind one ingress (2 workers per model, stealing
+//!   on), driven by concurrent client connections walking the model
+//!   list round-robin over real loopback sockets. Gates: every response
+//!   byte-identical to the in-process executor path, exact per-model
+//!   conservation (per-model sums == pooled totals, no drops, no
+//!   duplicates), zero disconnects/errors, and the sustained
+//!   mixed-model throughput is reported.
+//!
+//! `--quick` (as passed by `scripts/verify.sh`) shrinks request counts,
+//! not coverage: both legs still run and the JSON artifact is still
+//! written with every field.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use fairsquare::benchkit::{f, CountingAlloc, JsonReport, Measurement, Table};
+use fairsquare::coordinator::{Routing, WorkloadGen};
+use fairsquare::ingress::{
+    self, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
+};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    let mut report = JsonReport::new("ingress");
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    // the allocation audit runs first, while the process is still
+    // single-threaded, so the counting allocator sees only this harness
+    let allocs = engine_allocs_leg(&mut report);
+    match tcp_soak_leg(quick, &mut report) {
+        Ok(Some(fail)) => gate_failures.push(fail),
+        Ok(None) => {}
+        Err(e) => gate_failures.push(format!("tcp soak errored: {e:#}")),
+    }
+
+    // write the artifact before enforcing anything
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ingress.json: {e}"),
+    }
+
+    if allocs != 0 {
+        gate_failures.push(format!(
+            "allocation gate failed: the warmed serving executors performed \
+             {allocs} heap allocations, want 0"
+        ));
+    }
+    assert!(
+        gate_failures.is_empty(),
+        "ingress gates failed:\n  {}",
+        gate_failures.join("\n  ")
+    );
+}
+
+/// E8a — the engine the ingress serves stays allocation-free at steady
+/// state: the three registered models' executors (identical
+/// construction to `register_native`) run warmed same-shape batches
+/// through `run_into` with reused buffers and the counting allocator
+/// must not move.
+fn engine_allocs_leg(report: &mut JsonReport) -> u64 {
+    let mut gen = WorkloadGen::new(0xE8A);
+    let mut out = Vec::new();
+    let mut total = 0u64;
+
+    let mut t = Table::new(
+        "E8a — engine-side steady-state heap allocations (the served models)",
+        &["model", "rounds", "allocations"],
+    );
+    for &name in MODEL_NAMES {
+        let mut exec = ingress::reference_executor(name).unwrap();
+        let (batch, row_len) = (exec.batch_rows(), exec.row_len());
+        // one full batch of model-shaped rows
+        let mut flat = Vec::with_capacity(batch * row_len);
+        for _ in 0..batch {
+            flat.extend_from_slice(&ingress::sample_input(&mut gen, name).unwrap());
+        }
+        // warm-up populates every arena and output buffer
+        exec.run_into(&flat, &mut out).unwrap();
+        exec.run_into(&flat, &mut out).unwrap();
+        let want = out.clone();
+
+        let before = ALLOC.allocations();
+        for _ in 0..3 {
+            exec.run_into(&flat, &mut out).unwrap();
+        }
+        let allocs = ALLOC.allocations() - before;
+        // and reuse must not have changed any result
+        exec.run_into(&flat, &mut out).unwrap();
+        assert_eq!(out, want, "{name}: buffer reuse changed the results");
+
+        t.row(&[name.into(), "3".into(), allocs.to_string()]);
+        total += allocs;
+    }
+    t.print();
+
+    let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
+    report.case(
+        "engine_allocs",
+        &m,
+        &[
+            ("allocs_steady_state", total as f64),
+            ("models", MODEL_NAMES.len() as f64),
+            ("rounds", 3.0),
+        ],
+    );
+    total
+}
+
+/// E8b — the mixed-model soak over real sockets. Returns a gate-failure
+/// message instead of asserting so the JSON is written first.
+fn tcp_soak_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> {
+    let clients = 4usize;
+    let requests = if quick { 480 } else { 1920 };
+
+    let cfg = NativeServing {
+        workers: 2,
+        routing: Routing::Steal,
+        shadow_every: 0,
+        engine_threads: 1,
+        queue_depth: requests.max(64),
+        cost_budget: u64::MAX,
+        max_wait: Duration::from_millis(2),
+    };
+    let mut reg = ModelRegistry::new();
+    for name in MODEL_NAMES {
+        ingress::register_native(&mut reg, name, &cfg)?;
+    }
+    let server = IngressServer::bind("127.0.0.1:0", reg)?;
+    let addr = server.local_addr();
+
+    // warm round trips: connection setup and first-batch effects stay
+    // off the soak clock
+    {
+        let mut warm = TcpClient::connect(addr)?;
+        let mut gen = WorkloadGen::new(0xE8);
+        for &name in MODEL_NAMES {
+            let row = ingress::sample_input(&mut gen, name)?;
+            warm.infer(name, &row)?
+                .map_err(|r| anyhow::anyhow!("warm-up rejected: {r}"))?;
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut drivers = Vec::new();
+    for c in 0..clients {
+        let n = requests / clients + usize::from(c < requests % clients);
+        drivers.push(std::thread::spawn(
+            move || -> Result<Vec<(usize, Vec<f32>, Vec<f32>)>> {
+                let mut gen = WorkloadGen::new(0xE8B + c as u64);
+                let mut client = TcpClient::connect(addr)?;
+                let mut served = Vec::with_capacity(n);
+                for k in 0..n {
+                    let mi = (c + k) % MODEL_NAMES.len();
+                    let row = ingress::sample_input(&mut gen, MODEL_NAMES[mi])?;
+                    let out = client
+                        .infer(MODEL_NAMES[mi], &row)?
+                        .map_err(|r| anyhow::anyhow!("soak request rejected: {r}"))?;
+                    served.push((mi, row, out));
+                }
+                Ok(served)
+            },
+        ));
+    }
+    let mut served: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::with_capacity(requests);
+    for d in drivers {
+        let rows = d.join().map_err(|_| anyhow::anyhow!("a soak client panicked"))??;
+        served.extend(rows);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = requests as f64 / wall;
+
+    let report_final = server.shutdown()?;
+    let mut fail = report_final.check_conservation().err().map(|e| format!("{e:#}"));
+
+    // byte-identity vs the in-process path, for every response
+    let mut mismatches = 0u64;
+    for (mi, name) in MODEL_NAMES.iter().enumerate() {
+        let inputs: Vec<Vec<f32>> = served
+            .iter()
+            .filter(|(m, _, _)| *m == mi)
+            .map(|(_, row, _)| row.clone())
+            .collect();
+        let mut exec = ingress::reference_executor(name)?;
+        let want = ingress::reference_rows(exec.as_mut(), &inputs)?;
+        for ((_, _, got), want) in served.iter().filter(|(m, _, _)| *m == mi).zip(&want) {
+            if got.len() != want.len()
+                || got.iter().zip(want).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                mismatches += 1;
+            }
+        }
+    }
+    if mismatches > 0 && fail.is_none() {
+        fail = Some(format!(
+            "byte-identity gate failed: {mismatches} TCP responses differ from \
+             the in-process executor path"
+        ));
+    }
+
+    // +3 for the warm-up round trips (one per model)
+    let totals = report_final.totals;
+    if fail.is_none() && totals.served != requests as u64 + 3 {
+        fail = Some(format!(
+            "soak conservation failed: served {} != {} requests + 3 warm-ups",
+            totals.served,
+            requests
+        ));
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "E8b — mixed-model TCP soak ({requests} requests, {clients} client \
+             connections, 3 models × 2 workers, steal on)"
+        ),
+        &["model", "cost", "submitted", "served", "mean batch", "p50 µs", "p99 µs"],
+    );
+    for m in &report_final.per_model {
+        t.row(&[
+            m.name.clone(),
+            m.row_cost.to_string(),
+            m.ingress.submitted.to_string(),
+            m.ingress.served.to_string(),
+            f(m.server.mean_batch, 2),
+            f(m.server.latency.p50_us, 0),
+            f(m.server.latency.p99_us, 0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nsoak: {rps:.0} rows/s sustained across 3 models over TCP \
+         ({mismatches} byte mismatches, {} disconnects, {} errors)",
+        totals.disconnects, totals.errored
+    );
+
+    let m = Measurement {
+        iters: 1,
+        mean_ns: wall * 1e9 / requests as f64,
+        median_ns: 0.0,
+        stddev_ns: 0.0,
+        min_ns: 0.0,
+    };
+    let mut fields: Vec<(&str, f64)> = vec![
+        ("requests", requests as f64),
+        ("clients", clients as f64),
+        ("rows_per_s", rps),
+        ("byte_mismatches", mismatches as f64),
+        ("submitted", totals.submitted as f64),
+        ("served", totals.served as f64),
+        ("rejected", totals.rejected as f64),
+        ("errored", totals.errored as f64),
+        ("disconnects", totals.disconnects as f64),
+        ("unroutable", report_final.unroutable as f64),
+        ("conserved", if fail.is_none() { 1.0 } else { 0.0 }),
+    ];
+    let per_model: Vec<(String, f64)> = report_final
+        .per_model
+        .iter()
+        .flat_map(|pm| {
+            [
+                (format!("{}_served", pm.name), pm.ingress.served as f64),
+                (format!("{}_p99_us", pm.name), pm.server.latency.p99_us),
+            ]
+        })
+        .collect();
+    for (k, v) in &per_model {
+        fields.push((k.as_str(), *v));
+    }
+    report.case("tcp_soak", &m, &fields);
+
+    Ok(fail)
+}

@@ -10,9 +10,9 @@
 //! |------|----------|
 //! | `unsafe-audit`     | every `unsafe` carries a `// SAFETY:` comment within 3 lines *and* an entry in [`unsafe_inventory.txt`](self::Registry) |
 //! | `warm-alloc`       | registered zero-alloc warm paths contain no allocating constructs |
-//! | `lock-order`       | nested `.lock()` in `coordinator/server.rs` follows deque (0) < gate (1) < spares/tile_spares (2) |
+//! | `lock-order`       | nested `.lock()` in `coordinator/server.rs` and the ingress follows deque (0) < gate (1) < spares/tile_spares (2) < counters (3) < totals (4) |
 //! | `atomic-ordering`  | no `Ordering::Relaxed` on protocol atomics; every atomic op has a rationale comment nearby |
-//! | `panic-path`       | `unwrap`/`expect`/`panic!` in `coordinator/` needs a `lint-ok` annotation (lock/condvar poisoning idiom exempt) |
+//! | `panic-path`       | `unwrap`/`expect`/`panic!` in `coordinator/` and `ingress/` needs a `lint-ok` annotation (lock/condvar poisoning idiom exempt) |
 //!
 //! Every rule has the same escape hatch: a `// lint-ok(rule): reason`
 //! comment on (or up to two lines above) the flagged line, or an entry
@@ -133,11 +133,21 @@ impl Registry {
                         "join_plane_rows_into",
                     ],
                 ),
+                (
+                    // the session read/write loop's warm encoders: one
+                    // frame per request, reusing the session's buffers
+                    "ingress/wire.rs",
+                    vec!["frame_into", "encode_infer_into", "encode_output_into"],
+                ),
             ],
-            lock_files: vec!["coordinator/server.rs"],
+            lock_files: vec![
+                "coordinator/server.rs",
+                "ingress/listener.rs",
+                "ingress/registry.rs",
+            ],
             lock_ranks: default_lock_ranks(),
-            relaxed_files: vec!["coordinator/server.rs"],
-            panic_files: vec!["coordinator/"],
+            relaxed_files: vec!["coordinator/server.rs", "ingress/listener.rs"],
+            panic_files: vec!["coordinator/", "ingress/"],
             inventory: include_str!("unsafe_inventory.txt").to_string(),
             allow: include_str!("lint_allow.txt").to_string(),
         }
@@ -163,10 +173,14 @@ impl Registry {
     }
 }
 
-/// The declared `coordinator/server.rs` lock order: worker deques
-/// (index-ascending among themselves) < gate < spares/tile_spares.
-/// `TileJob`'s `items`/`error` mutexes are leaf locks taken without
-/// nesting and stay unranked.
+/// The declared lock order: worker deques (index-ascending among
+/// themselves) < gate < spares/tile_spares in `coordinator/server.rs`,
+/// then the ingress accounts — a model's `.counters` (3) before the
+/// pooled `.totals` (4). The ingress code takes them in sequential
+/// scopes today, so the ranks are documentation plus a tripwire for
+/// future nesting. `TileJob`'s `items`/`error` mutexes and the
+/// listener's `conns` list are leaf locks taken without nesting and
+/// stay unranked.
 fn default_lock_ranks() -> Vec<LockRank> {
     vec![
         LockRank { kind: MatchKind::Contains, pat: "queues[", rank: 0 },
@@ -176,6 +190,8 @@ fn default_lock_ranks() -> Vec<LockRank> {
         LockRank { kind: MatchKind::Exact, pat: "gate", rank: 1 },
         LockRank { kind: MatchKind::EndsWith, pat: ".tile_spares", rank: 2 },
         LockRank { kind: MatchKind::EndsWith, pat: ".spares", rank: 2 },
+        LockRank { kind: MatchKind::EndsWith, pat: ".counters", rank: 3 },
+        LockRank { kind: MatchKind::EndsWith, pat: ".totals", rank: 4 },
     ]
 }
 

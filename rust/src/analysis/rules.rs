@@ -247,7 +247,7 @@ fn walk_fn_locks(
                                 msg: format!(
                                     "lock rank {new} (`{recv}`) acquired while rank {held} \
                                      guard from line {} is live — declared order is \
-                                     deque(0) < gate(1) < spares(2)",
+                                     deque(0) < gate(1) < spares(2) < counters(3) < totals(4)",
                                     g.line + 1
                                 ),
                             });

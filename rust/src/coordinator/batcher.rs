@@ -16,11 +16,15 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// One pending row with its enqueue timestamp and ticket.
+/// One pending row with its enqueue timestamp, ticket and admission cost.
 #[derive(Debug)]
 pub struct Pending<T> {
     pub ticket: u64,
     pub enqueued: Instant,
+    /// admission-cost units this row was charged at [`Batcher::push_costed`]
+    /// time (1 for the plain [`Batcher::push`] path) — credited back to the
+    /// queued-cost account when the row leaves the queue
+    pub cost: u64,
     pub payload: T,
 }
 
@@ -32,38 +36,80 @@ pub struct Batch<T> {
     pub full: bool,
 }
 
-/// Size/deadline batching policy.
+/// Size/deadline batching policy with two admission dimensions: a row
+/// *count* bound (`queue_depth`, the PR 5 back-pressure knob) and a
+/// queued-*cost* budget (`cost_budget`, the scattermind-style per-model
+/// admission account: each pending row carries a cost and the sum of
+/// queued costs may not exceed the budget). The default budget is
+/// `u64::MAX`, which degenerates to the pure count bound.
 #[derive(Debug)]
 pub struct Batcher<T> {
     queue: VecDeque<Pending<T>>,
     next_ticket: u64,
+    /// sum of `cost` over every queued row — maintained by
+    /// push/take/drain so admission is O(1)
+    queued_cost: u64,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_depth: usize,
+    pub cost_budget: u64,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration, queue_depth: usize) -> Self {
+        Self::with_cost_budget(max_batch, max_wait, queue_depth, u64::MAX)
+    }
+
+    /// Like [`Self::new`] but with a finite queued-cost budget for
+    /// cost-aware admission ([`Self::push_costed`]).
+    pub fn with_cost_budget(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        cost_budget: u64,
+    ) -> Self {
         assert!(max_batch >= 1);
         Self {
             queue: VecDeque::new(),
             next_ticket: 0,
+            queued_cost: 0,
             max_batch,
             max_wait,
             queue_depth,
+            cost_budget,
         }
     }
 
-    /// Enqueue a row; `Err` means the queue is full (back-pressure: the
-    /// caller should reject or retry).
+    /// Enqueue a unit-cost row; `Err` means the queue is full
+    /// (back-pressure: the caller should reject or retry).
     pub fn push(&mut self, payload: T, now: Instant) -> Result<u64, T> {
+        self.push_costed(payload, 1, now)
+    }
+
+    /// Enqueue a row carrying `cost` admission units. `Err` returns the
+    /// payload when either admission dimension would be exceeded: the
+    /// count bound (`queue_depth`) or the cost budget (`cost_budget`).
+    /// A single row costing more than the whole budget is only admitted
+    /// into an *empty* queue, so an oversized-but-legal request cannot
+    /// be starved forever.
+    pub fn push_costed(&mut self, payload: T, cost: u64, now: Instant) -> Result<u64, T> {
         if self.queue.len() >= self.queue_depth {
             return Err(payload);
         }
+        let would_be = self.queued_cost.saturating_add(cost);
+        if would_be > self.cost_budget && !self.queue.is_empty() {
+            return Err(payload);
+        }
+        self.queued_cost = would_be;
         let ticket = self.next_ticket;
         self.next_ticket += 1;
-        self.queue.push_back(Pending { ticket, enqueued: now, payload });
+        self.queue.push_back(Pending { ticket, enqueued: now, cost, payload });
         Ok(ticket)
+    }
+
+    /// Sum of admission costs over the rows currently queued.
+    pub fn queued_cost(&self) -> u64 {
+        self.queued_cost
     }
 
     pub fn len(&self) -> usize {
@@ -95,7 +141,14 @@ impl<T> Batcher<T> {
         let n = self.queue.len().min(self.max_batch);
         out.clear();
         out.extend(self.queue.drain(..n));
+        self.credit_cost(out);
         Some(by_size)
+    }
+
+    /// Credit the queued-cost account for rows just drained into `out`.
+    fn credit_cost(&mut self, out: &[Pending<T>]) {
+        let freed: u64 = out.iter().map(|p| p.cost).sum();
+        self.queued_cost = self.queued_cost.saturating_sub(freed);
     }
 
     /// Form a batch if the policy fires — the allocating wrapper over
@@ -115,6 +168,7 @@ impl<T> Batcher<T> {
         let n = self.queue.len().min(self.max_batch);
         out.clear();
         out.extend(self.queue.drain(..n));
+        self.credit_cost(out);
         true
     }
 
@@ -212,6 +266,53 @@ mod tests {
         b.push(1, t).unwrap();
         b.push(2, t).unwrap();
         assert!(b.push(3, t).is_err());
+    }
+
+    #[test]
+    fn cost_budget_rejects_before_count_bound() {
+        let mut b = Batcher::with_cost_budget(8, Duration::from_secs(999), 64, 10);
+        let t = now();
+        b.push_costed('a', 5, t).unwrap();
+        b.push_costed('b', 5, t).unwrap();
+        assert_eq!(b.queued_cost(), 10);
+        // count bound (64) is far away, but the budget (10) is exhausted
+        assert_eq!(b.push_costed('c', 1, t), Err('c'));
+        // draining the queue credits the account and re-opens admission
+        let mut buf = Vec::new();
+        assert_eq!(b.take_into(t, &mut buf), None, "below max_batch and deadline");
+        let later = t + Duration::from_secs(1000);
+        assert_eq!(b.take_into(later, &mut buf), Some(false));
+        assert_eq!(b.queued_cost(), 0);
+        b.push_costed('c', 10, t).unwrap();
+    }
+
+    #[test]
+    fn oversized_request_admitted_only_into_an_empty_queue() {
+        let mut b = Batcher::with_cost_budget(8, Duration::from_secs(999), 64, 4);
+        let t = now();
+        // a whale costing more than the whole budget still gets in when
+        // the queue is empty (no starvation)...
+        b.push_costed('w', 9, t).unwrap();
+        // ...but everything behind it is rejected until it drains
+        assert_eq!(b.push_costed('x', 1, t), Err('x'));
+        let mut buf = Vec::new();
+        assert!(b.drain_into(&mut buf));
+        assert_eq!(b.queued_cost(), 0);
+        b.push_costed('x', 1, t).unwrap();
+    }
+
+    #[test]
+    fn unit_cost_push_defaults_preserve_count_semantics() {
+        // the plain push path charges cost 1, so queued_cost mirrors len
+        let mut b = Batcher::new(4, Duration::from_secs(1), 8);
+        let t = now();
+        for i in 0..5 {
+            b.push(i, t).unwrap();
+        }
+        assert_eq!(b.queued_cost(), b.len() as u64);
+        let mut buf = Vec::new();
+        assert_eq!(b.take_into(t, &mut buf), Some(true));
+        assert_eq!(b.queued_cost(), b.len() as u64);
     }
 
     #[test]

@@ -220,9 +220,76 @@ pub fn merge_latency_summaries(parts: &[LatencyStats]) -> LatencyStats {
     }
 }
 
+/// Front-door accounting for one model (or, summed, for the whole
+/// ingress). Exactly one bucket is charged per decoded request, so the
+/// conservation law
+/// `submitted == served + rejected + errored + disconnects`
+/// holds at every quiescent point — the network-boundary analogue of the
+/// PR 5 engine invariant (`served + rejected == submitted`), checked by
+/// `ingress::check_conservation` at shutdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IngressCounters {
+    /// decoded infer requests routed to a registered model
+    pub submitted: u64,
+    /// responses computed AND delivered to a live client
+    pub served: u64,
+    /// typed wire-level rejections (arity, admission back-pressure,
+    /// shutdown) — always surfaced as a `Rejected` frame, never silent
+    pub rejected: u64,
+    /// executor-side failures relayed as typed `Exec` rejections
+    pub errored: u64,
+    /// responses computed but undeliverable: the client closed its
+    /// socket mid-request (the kill-the-client case)
+    pub disconnects: u64,
+}
+
+impl IngressCounters {
+    /// Field-wise accumulate (for per-model → pooled sums).
+    pub fn add(&mut self, o: &Self) {
+        self.submitted += o.submitted;
+        self.served += o.served;
+        self.rejected += o.rejected;
+        self.errored += o.errored;
+        self.disconnects += o.disconnects;
+    }
+
+    /// The ingress conservation law — every submitted request landed in
+    /// exactly one outcome bucket.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.served + self.rejected + self.errored + self.disconnects
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ingress_counters_conserve_and_sum() {
+        let a = IngressCounters {
+            submitted: 5,
+            served: 3,
+            rejected: 1,
+            errored: 0,
+            disconnects: 1,
+        };
+        let b = IngressCounters {
+            submitted: 2,
+            served: 1,
+            rejected: 0,
+            errored: 1,
+            disconnects: 0,
+        };
+        assert!(a.conserved() && b.conserved());
+        let mut pooled = IngressCounters::default();
+        pooled.add(&a);
+        pooled.add(&b);
+        assert!(pooled.conserved());
+        assert_eq!(pooled.submitted, 7);
+        assert_eq!(pooled.disconnects, 1);
+        let leaky = IngressCounters { submitted: 4, served: 3, ..Default::default() };
+        assert!(!leaky.conserved(), "a dropped outcome must be visible");
+    }
 
     #[test]
     fn percentiles_are_ordered() {

@@ -45,7 +45,7 @@ pub mod workload;
 
 pub use batcher::{Batch, Batcher};
 pub use metrics::{
-    latency_stats_from, merge_latency_summaries, LatencyStats, Metrics,
+    latency_stats_from, merge_latency_summaries, IngressCounters, LatencyStats, Metrics,
     DEFAULT_LATENCY_RETENTION,
 };
 pub use native::{
@@ -53,7 +53,7 @@ pub use native::{
     Conv2dExecutor, DirectKernelExecutor, SkewedKernelExecutor, SquareKernelExecutor,
 };
 pub use server::{
-    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, TileConfig,
-    TilePrep, WorkerStats,
+    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, SubmitError,
+    TileConfig, TilePrep, WorkerStats, QUEUE_FULL,
 };
 pub use workload::{is_heavy_row, WorkloadGen, SKEW_HEAVY_MARKER};

@@ -249,13 +249,44 @@ pub enum Routing {
     Steal,
 }
 
-/// The explicit back-pressure response body; kept stable so clients and
-/// tests can match on it.
-const QUEUE_FULL: &str = "queue full: server rejected the request under back-pressure";
+/// The explicit back-pressure response body; kept stable (and public)
+/// so clients, the ingress layer and tests can match on it.
+pub const QUEUE_FULL: &str = "queue full: server rejected the request under back-pressure";
+
+/// Typed submission failure for front-door callers. The network ingress
+/// layer maps each variant onto a wire-level `Rejected` code instead of
+/// string-matching anyhow messages; [`InferenceServer::submit`] wraps
+/// them back into `anyhow` for the in-process callers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// input arity does not match the model's `row_len`
+    WrongArity { got: usize, want: usize },
+    /// the dispatch channel is full — back-pressure at the front door,
+    /// before the batcher's own count/cost admission even runs
+    Full,
+    /// the server is shutting down (dispatcher gone)
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::WrongArity { got, want } => {
+                write!(f, "input has {got} features, model wants {want}")
+            }
+            Self::Full => write!(f, "{QUEUE_FULL}"),
+            Self::Closed => write!(f, "server shut down"),
+        }
+    }
+}
 
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
+    /// admission-cost units charged against the batcher's cost budget
+    /// (1 on the plain [`InferenceServer::submit`] path; per-model
+    /// `row_cost` through the ingress registry)
+    cost: u64,
     resp: Sender<Result<Vec<f32>, String>>,
 }
 
@@ -826,6 +857,7 @@ pub struct InferenceServer {
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     row_len: usize,
+    out_len: usize,
 }
 
 impl InferenceServer {
@@ -917,9 +949,47 @@ impl InferenceServer {
         E: BatchExecutor,
         S: BatchExecutor,
     {
+        Self::start_costed(
+            max_batch,
+            max_wait,
+            queue_depth,
+            u64::MAX,
+            shadow_every,
+            workers,
+            routing,
+            tiling,
+            make_exec,
+            make_shadow,
+        )
+    }
+
+    /// [`Self::start_tiled`] plus a finite queued-cost budget: every
+    /// request carries admission-cost units
+    /// ([`Self::submit_costed`], per-model `row_cost` through the
+    /// ingress registry) and the batcher rejects once the queued sum
+    /// would exceed `cost_budget` — scattermind-style cost-aware
+    /// admission riding the same explicit back-pressure path as the
+    /// count bound (`queue_depth`). `u64::MAX` disables the budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_costed<E, S>(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+        cost_budget: u64,
+        shadow_every: u64,
+        workers: usize,
+        routing: Routing,
+        tiling: Option<TileConfig>,
+        make_exec: impl Fn(usize) -> Result<E> + Send + Sync + 'static,
+        make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
+    ) -> Result<Self>
+    where
+        E: BatchExecutor,
+        S: BatchExecutor,
+    {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth.max(1));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize), String>>();
         let pool = DequePool::new(workers, routing == Routing::Steal);
         let make_exec = Arc::new(make_exec);
         let make_shadow = Arc::new(make_shadow);
@@ -950,7 +1020,7 @@ impl InferenceServer {
                             return;
                         }
                     };
-                    let _ = ready.send(Ok((exec.row_len(), exec.batch_rows())));
+                    let _ = ready.send(Ok((exec.row_len(), exec.batch_rows(), exec.out_len())));
                     worker_loop(wid, ctl_rx, &wpool, &mut exec, shadow.as_mut(), shadow_every);
                 })
                 // lint-ok(panic-path): thread-spawn failure at server
@@ -963,8 +1033,8 @@ impl InferenceServer {
         // all workers must come up with one consistent model shape; on any
         // failure the pool is closed (waking workers parked on its gate)
         // and the dropped control senders terminate the rest
-        let collect_shape = || -> Result<(usize, usize)> {
-            let mut shape: Option<(usize, usize)> = None;
+        let collect_shape = || -> Result<(usize, usize, usize)> {
+            let mut shape: Option<(usize, usize, usize)> = None;
             for _ in 0..workers {
                 let got = ready_rx
                     .recv()
@@ -984,7 +1054,7 @@ impl InferenceServer {
             // times, so `shape` is always Some here
             Ok(shape.expect("workers >= 1"))
         };
-        let (row_len, batch_rows) = match collect_shape() {
+        let (row_len, batch_rows, out_len) = match collect_shape() {
             Ok(s) => s,
             Err(e) => {
                 pool.close();
@@ -1005,6 +1075,7 @@ impl InferenceServer {
                     max_batch.min(batch_rows).max(1),
                     max_wait,
                     queue_depth,
+                    cost_budget,
                     tiling,
                     fork_exec,
                 );
@@ -1018,7 +1089,19 @@ impl InferenceServer {
             dispatcher: Some(dispatcher),
             workers: handles,
             row_len,
+            out_len,
         })
+    }
+
+    /// The model's input arity (features per row).
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// The model's output arity (values per response row) — the ingress
+    /// registry advertises this in its model list.
+    pub fn out_len(&self) -> usize {
+        self.out_len
     }
 
     /// Submit one row; blocks until the response arrives.
@@ -1029,23 +1112,37 @@ impl InferenceServer {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Submit one row; returns the response channel (pipelined use).
+    /// Submit one unit-cost row; returns the response channel
+    /// (pipelined use).
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+        self.try_submit(input, 1)
+            .map_err(|e| anyhow!("queue full or closed: {e}"))
+    }
+
+    /// Submit one row charged at `cost` admission units, with a typed
+    /// error instead of an anyhow wrapper — the ingress layer's entry
+    /// point. The cost is debited against the batcher's
+    /// [`Self::start_costed`] budget while the row waits for a batch.
+    pub fn try_submit(
+        &self,
+        input: Vec<f32>,
+        cost: u64,
+    ) -> std::result::Result<Receiver<Result<Vec<f32>, String>>, SubmitError> {
         if input.len() != self.row_len {
-            return Err(anyhow!(
-                "input has {} features, model wants {}",
-                input.len(),
-                self.row_len
-            ));
+            return Err(SubmitError::WrongArity { got: input.len(), want: self.row_len });
         }
         let (resp_tx, resp_rx) = mpsc::channel();
         self.tx
             .try_send(Msg::Req(Request {
                 input,
                 enqueued: Instant::now(),
+                cost,
                 resp: resp_tx,
             }))
-            .map_err(|e| anyhow!("queue full or closed: {e}"))?;
+            .map_err(|e| match e {
+                mpsc::TrySendError::Full(_) => SubmitError::Full,
+                mpsc::TrySendError::Disconnected(_) => SubmitError::Closed,
+            })?;
         Ok(resp_rx)
     }
 
@@ -1093,7 +1190,8 @@ impl Drop for InferenceServer {
 /// explicit `Err` on its response channel instead of a dropped sender
 /// (which `recv()` would misreport as "server shut down").
 fn push_or_reject(batcher: &mut Batcher<Request>, r: Request, rejected: &mut u64) {
-    if let Err(r) = batcher.push(r, Instant::now()) {
+    let cost = r.cost;
+    if let Err(r) = batcher.push_costed(r, cost, Instant::now()) {
         *rejected += 1;
         let _ = r.resp.send(Err(QUEUE_FULL.to_string()));
     }
@@ -1214,10 +1312,12 @@ fn dispatch_loop<E: BatchExecutor>(
     max_batch: usize,
     max_wait: Duration,
     queue_depth: usize,
+    cost_budget: u64,
     tiling: Option<TileConfig>,
     make_exec: Arc<impl Fn(usize) -> Result<E> + Send + Sync + 'static>,
 ) {
-    let mut batcher: Batcher<Request> = Batcher::new(max_batch, max_wait, queue_depth);
+    let mut batcher: Batcher<Request> =
+        Batcher::with_cost_budget(max_batch, max_wait, queue_depth, cost_budget);
     let mut rejected = 0u64;
     let mut final_reply: Option<Sender<ServerStats>> = None;
     let mut rr = 0usize;

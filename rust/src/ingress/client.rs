@@ -1,0 +1,109 @@
+//! A small synchronous client for the wire protocol — used by the e2e
+//! tests, the ingress bench, the CLI's traffic driver and
+//! `examples/tcp_client.rs`.
+//!
+//! The split [`TcpClient::send_infer`] / [`TcpClient::recv_response`]
+//! halves exist so tests can put a request on the wire and then drop
+//! the socket mid-flight (the kill-the-client scenario); [`TcpClient::infer`]
+//! is the composed request/response call.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire;
+use super::wire::{ModelInfo, ReadError, ReadOutcome};
+
+/// A typed rejection relayed from the server — the decoded form of a
+/// `REJECTED` frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejection {
+    /// stable [`wire::WireError::code`] value
+    pub code: u16,
+    pub message: String,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rejected (code {}): {}", self.code, self.message)
+    }
+}
+
+/// One inference's wire-level outcome: a response row, or the server's
+/// typed rejection. Transport/protocol breaches surface as the outer
+/// `anyhow` error instead.
+pub type InferOutcome = std::result::Result<Vec<f32>, Rejection>;
+
+/// Synchronous wire-protocol client over one TCP connection.
+pub struct TcpClient {
+    stream: TcpStream,
+    frame: Vec<u8>,
+    body: Vec<u8>,
+    payload: Vec<u8>,
+}
+
+impl TcpClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to the ingress")?;
+        Ok(Self { stream, frame: Vec::new(), body: Vec::new(), payload: Vec::new() })
+    }
+
+    /// The underlying socket (tests use it for half-close tricks).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Ask the server for its model table.
+    pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {
+        wire::write_frame(&mut self.stream, &mut self.frame, wire::kind::LIST, &[])
+            .context("writing LIST")?;
+        let kind = self.read_reply()?;
+        match kind {
+            wire::kind::MODELS => Ok(wire::decode_models(&self.payload)?),
+            wire::kind::REJECTED => {
+                let (code, msg) = wire::decode_rejected(&self.payload)?;
+                bail!("LIST rejected (code {code}): {msg}")
+            }
+            other => bail!("unexpected reply kind {other:#04x} to LIST"),
+        }
+    }
+
+    /// Put one `INFER` on the wire without waiting for the reply.
+    pub fn send_infer(&mut self, model: &str, row: &[f32]) -> Result<()> {
+        wire::encode_infer_into(&mut self.body, model, row);
+        wire::write_frame(&mut self.stream, &mut self.frame, wire::kind::INFER, &self.body)
+            .context("writing INFER")
+    }
+
+    /// Wait for the reply to an in-flight `INFER`.
+    pub fn recv_response(&mut self) -> Result<InferOutcome> {
+        let kind = self.read_reply()?;
+        match kind {
+            wire::kind::OUTPUT => {
+                let mut out = Vec::new();
+                wire::decode_output(&self.payload, &mut out)?;
+                Ok(Ok(out))
+            }
+            wire::kind::REJECTED => {
+                let (code, message) = wire::decode_rejected(&self.payload)?;
+                Ok(Err(Rejection { code, message }))
+            }
+            other => bail!("unexpected reply kind {other:#04x} to INFER"),
+        }
+    }
+
+    /// One request, one reply.
+    pub fn infer(&mut self, model: &str, row: &[f32]) -> Result<InferOutcome> {
+        self.send_infer(model, row)?;
+        self.recv_response()
+    }
+
+    fn read_reply(&mut self) -> Result<u8> {
+        match wire::read_frame(&mut self.stream, &mut self.payload) {
+            Ok(ReadOutcome::Frame { kind }) => Ok(kind),
+            Ok(ReadOutcome::Eof) => Err(anyhow!("server closed the connection")),
+            Err(ReadError::Io(e)) => Err(anyhow!("reading reply: {e}")),
+            Err(ReadError::Wire(e)) => Err(anyhow!("protocol error in reply: {e}")),
+        }
+    }
+}

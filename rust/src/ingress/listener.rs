@@ -1,0 +1,364 @@
+//! The TCP front door: accept loop + per-connection session tasks.
+//!
+//! One accept thread owns the listener; each accepted connection gets a
+//! session thread that speaks the `wire` protocol synchronously —
+//! decode a frame, route it through the [`ModelRegistry`], wait for the
+//! engine's response, write it back. Batching still happens *across*
+//! sessions: every session's `try_submit` lands in the same per-model
+//! batcher, so concurrent clients of one model fill real batches for
+//! the deque pool exactly like the in-process workload generator does.
+//!
+//! ## Failure containment at the socket boundary
+//!
+//! * **Partial frames / dirty disconnects while reading** close the
+//!   session without touching any account — the request never existed.
+//! * **Typed protocol errors** are answered with `REJECTED` frames;
+//!   only framing-level errors ([`WireError::fatal`]) also close the
+//!   connection (the byte stream can no longer be trusted).
+//! * **Client gone before the response write** (the kill-the-client
+//!   case): detected via a non-blocking `peek` — a `FIN` already queued
+//!   means nobody is listening — and counted in the model's
+//!   `disconnects` bucket instead of `served`. The worker that computed
+//!   the response is never involved: it already sent into the response
+//!   channel and moved on, so a vanished client cannot panic a worker
+//!   or leak an in-flight pool slot.
+//! * **Shutdown with live connections**: the accept thread is woken by
+//!   a self-connection, every session's *read* half is shut down (EOF
+//!   wakes blocked reads), but write halves stay open so in-flight
+//!   responses still reach their clients; only after every session
+//!   joined are the model servers drained and the final conserved
+//!   report assembled.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::server::SubmitError;
+use crate::coordinator::QUEUE_FULL;
+
+use super::registry::{IngressReport, ModelRegistry, Outcome, RegisteredModel};
+use super::wire;
+use super::wire::{ReadError, ReadOutcome, WireError};
+
+/// One live connection: the session thread plus a handle to its
+/// socket, kept so shutdown can half-close the read side.
+struct SessionHandle {
+    join: JoinHandle<()>,
+    stream: TcpStream,
+}
+
+/// A running TCP ingress. Dropping it stops the threads; use
+/// [`Self::shutdown`] to also drain the model servers and collect the
+/// conserved final report.
+pub struct IngressServer {
+    registry: Option<Arc<ModelRegistry>>,
+    closed: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<SessionHandle>>>,
+    addr: SocketAddr,
+}
+
+impl IngressServer {
+    /// Serve `registry` on an already-bound listener. The library
+    /// accepts any bound address (tests use an ephemeral port 0 bind);
+    /// the CLI layers its stricter typed validation on top.
+    pub fn serve(listener: TcpListener, registry: ModelRegistry) -> Result<Self> {
+        if registry.is_empty() {
+            bail!("refusing to serve an empty model registry");
+        }
+        let addr = listener.local_addr().context("reading the ingress local address")?;
+        let registry = Arc::new(registry);
+        let closed = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<SessionHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let areg = Arc::clone(&registry);
+        let aclosed = Arc::clone(&closed);
+        let aconns = Arc::clone(&conns);
+        let accept = std::thread::Builder::new()
+            .name("fairsquare-ingress-accept".into())
+            .spawn(move || accept_loop(listener, &areg, &aclosed, &aconns))
+            .map_err(|e| anyhow!("spawning the ingress accept thread: {e}"))?;
+        Ok(Self { registry: Some(registry), closed, accept: Some(accept), conns, addr })
+    }
+
+    /// Bind `addr` and serve. Port 0 is legal here (the OS picks an
+    /// ephemeral port, reported by [`Self::local_addr`]) — the CLI's
+    /// `--listen` validation rejects it *before* reaching this layer.
+    pub fn bind(addr: &str, registry: ModelRegistry) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the ingress listener on {addr}"))?;
+        Self::serve(listener, registry)
+    }
+
+    /// The bound address (resolves ephemeral-port binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain live sessions, shut down every model
+    /// server, and return the final per-model + pooled report with its
+    /// conservation invariants intact.
+    pub fn shutdown(mut self) -> Result<IngressReport> {
+        self.stop_threads();
+        let registry =
+            self.registry.take().ok_or_else(|| anyhow!("ingress already shut down"))?;
+        let registry = Arc::try_unwrap(registry)
+            .map_err(|_| anyhow!("an ingress session still holds the registry after join"))?;
+        registry.shutdown()
+    }
+
+    /// Wake + join the accept thread, then half-close and join every
+    /// session. Idempotent (shutdown and Drop both call it).
+    fn stop_threads(&mut self) {
+        // Release: pairs with the Acquire loads in the accept loop and
+        // the sessions' client_gone gate — everything written before
+        // the flag flips (nothing, here) is visible to them; the flag
+        // itself is the only protocol.
+        self.closed.store(true, Ordering::Release);
+        // a throwaway self-connection wakes the blocking accept() so it
+        // can observe the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // accept is gone, so no new sessions can appear: drain the list
+        let handles: Vec<SessionHandle> = {
+            let mut conns = self.conns.lock().unwrap();
+            conns.drain(..).collect()
+        };
+        for h in handles {
+            // EOF for blocked readers; the write half stays open so an
+            // in-flight response still reaches its client
+            let _ = h.stream.shutdown(Shutdown::Read);
+            let _ = h.join.join();
+        }
+    }
+}
+
+impl Drop for IngressServer {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+/// Accept connections until the closed flag flips, spawning one
+/// session thread per connection.
+fn accept_loop(
+    listener: TcpListener,
+    reg: &Arc<ModelRegistry>,
+    closed: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<Vec<SessionHandle>>>,
+) {
+    for stream in listener.incoming() {
+        // Acquire: pairs with the Release store in stop_threads(); once
+        // observed, the wake-up connection (or any later one) must not
+        // spawn a session.
+        if closed.load(Ordering::Acquire) {
+            return;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // reap finished sessions so a long-lived server's handle list
+        // stays proportional to *live* connections
+        conns.lock().unwrap().retain(|h| !h.join.is_finished());
+        let clone = match stream.try_clone() {
+            Ok(c) => c,
+            // no half-close handle → we could never drain this session
+            // at shutdown; refuse the connection instead
+            Err(_) => continue,
+        };
+        let sreg = Arc::clone(reg);
+        let sclosed = Arc::clone(closed);
+        let spawned = std::thread::Builder::new()
+            .name("fairsquare-ingress-session".into())
+            .spawn(move || session_loop(&mut stream, &sreg, &sclosed));
+        // on thread exhaustion (Err) the streams are dropped, closing
+        // the connection — the client sees a refusal, not a hang
+        if let Ok(join) = spawned {
+            conns.lock().unwrap().push(SessionHandle { join, stream: clone });
+        }
+    }
+}
+
+/// Encode + write a typed `REJECTED` frame; false once the peer is
+/// unreachable.
+fn send_rejected(
+    stream: &mut TcpStream,
+    frame: &mut Vec<u8>,
+    body: &mut Vec<u8>,
+    err: &WireError,
+) -> bool {
+    wire::encode_rejected_into(body, err);
+    wire::write_frame(stream, frame, wire::kind::REJECTED, body).is_ok()
+}
+
+/// A `FIN` is already queued on the socket: the client hung up and
+/// nobody will read a response. Non-blocking so a merely-idle client
+/// (`WouldBlock`) counts as alive; transient probe errors also count as
+/// alive — the following write settles it either way.
+fn client_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let gone = matches!(stream.peek(&mut probe), Ok(0));
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// One connection's serve loop: frames in, responses out, every
+/// outcome accounted exactly once.
+fn session_loop(stream: &mut TcpStream, reg: &ModelRegistry, closed: &AtomicBool) {
+    let mut payload = Vec::new();
+    let mut frame = Vec::new();
+    let mut body = Vec::new();
+    let mut row = Vec::new();
+    loop {
+        match wire::read_frame(stream, &mut payload) {
+            // clean close at a frame boundary
+            Ok(ReadOutcome::Eof) => return,
+            // dirty close / truncated frame: no request was decoded, so
+            // no account moves
+            Err(ReadError::Io(_)) => return,
+            // header-level protocol error: answer typed, then close if
+            // the framing can no longer be trusted
+            Err(ReadError::Wire(e)) => {
+                if !send_rejected(stream, &mut frame, &mut body, &e) || e.fatal() {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Frame { kind }) => match kind {
+                wire::kind::LIST => {
+                    let infos = reg.infos();
+                    wire::encode_models_into(&mut body, &infos);
+                    if wire::write_frame(stream, &mut frame, wire::kind::MODELS, &body).is_err() {
+                        return;
+                    }
+                }
+                wire::kind::INFER => {
+                    if !handle_infer(
+                        stream,
+                        reg,
+                        closed,
+                        &payload,
+                        &mut frame,
+                        &mut body,
+                        &mut row,
+                    ) {
+                        return;
+                    }
+                }
+                other => {
+                    let e = WireError::UnknownKind { got: other };
+                    if !send_rejected(stream, &mut frame, &mut body, &e) {
+                        return;
+                    }
+                }
+            },
+        }
+    }
+}
+
+/// Serve one decoded `INFER` frame end to end. Returns false when the
+/// session should close. Accounting contract: once the request is
+/// routed, exactly one `Outcome` is recorded on its model.
+fn handle_infer(
+    stream: &mut TcpStream,
+    reg: &ModelRegistry,
+    closed: &AtomicBool,
+    payload: &[u8],
+    frame: &mut Vec<u8>,
+    body: &mut Vec<u8>,
+    row: &mut Vec<f32>,
+) -> bool {
+    let name = match wire::decode_infer(payload, row) {
+        Ok(n) => n,
+        // malformed payload: typed answer, framing intact, no account
+        Err(e) => return send_rejected(stream, frame, body, &e),
+    };
+    let model: &RegisteredModel = match reg.route(name) {
+        Ok(m) => m,
+        Err(e) => {
+            // no per-model account exists; tallied separately so the
+            // per-model-sums == totals law stays exact
+            reg.count_unroutable();
+            return send_rejected(stream, frame, body, &e);
+        }
+    };
+    reg.count_submitted(model);
+    // the engine owns its input row: this per-request Vec is the
+    // ingress analogue of the pool's per-request response row (the one
+    // sanctioned steady-state allocation per PR 5)
+    let mut input = Vec::with_capacity(row.len());
+    input.extend_from_slice(row);
+    let rx = match reg.try_submit(model, input) {
+        Ok(rx) => rx,
+        Err(SubmitError::WrongArity { got, want }) => {
+            reg.record(model, Outcome::Rejected);
+            let e = WireError::WrongArity { model: model.name.clone(), got, want };
+            return send_rejected(stream, frame, body, &e);
+        }
+        Err(SubmitError::Full) => {
+            reg.record(model, Outcome::Rejected);
+            let e = WireError::QueueFull { model: model.name.clone() };
+            return send_rejected(stream, frame, body, &e);
+        }
+        Err(SubmitError::Closed) => {
+            reg.record(model, Outcome::Rejected);
+            let _ = send_rejected(stream, frame, body, &WireError::Shutdown);
+            return false;
+        }
+    };
+    match rx.recv() {
+        Ok(Ok(out)) => {
+            // Acquire: pairs with stop_threads()'s Release store. After
+            // shutdown begins, our own read half is (or is about to be)
+            // shut down, which makes peek() report EOF for a perfectly
+            // live client — so skip the probe and just write: in-flight
+            // responses are part of the drain.
+            if !closed.load(Ordering::Acquire) && client_gone(stream) {
+                reg.record(model, Outcome::Disconnect);
+                return false;
+            }
+            wire::encode_output_into(body, &out);
+            wire::frame_into(frame, wire::kind::OUTPUT, body);
+            match stream.write_all(frame).and_then(|()| stream.flush()) {
+                Ok(()) => {
+                    reg.record(model, Outcome::Served);
+                    true
+                }
+                Err(_) => {
+                    // the response was computed but undeliverable
+                    reg.record(model, Outcome::Disconnect);
+                    false
+                }
+            }
+        }
+        Ok(Err(msg)) => {
+            if msg == QUEUE_FULL {
+                // the batcher's own admission (count bound or cost
+                // budget) pushed back — same typed rejection as the
+                // front-door Full case
+                reg.record(model, Outcome::Rejected);
+                let e = WireError::QueueFull { model: model.name.clone() };
+                send_rejected(stream, frame, body, &e)
+            } else {
+                reg.record(model, Outcome::Errored);
+                let e = WireError::Exec { model: model.name.clone(), msg };
+                send_rejected(stream, frame, body, &e)
+            }
+        }
+        Err(_) => {
+            // the dispatcher dropped our response sender: the engine
+            // went away mid-request
+            reg.record(model, Outcome::Errored);
+            let _ = send_rejected(stream, frame, body, &WireError::Shutdown);
+            false
+        }
+    }
+}

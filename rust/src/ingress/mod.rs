@@ -1,0 +1,36 @@
+//! Layer-3.5 network ingress: the TCP front door over the serving
+//! pool — a std-only listener speaking a length-prefixed binary wire
+//! protocol ([`wire`]), per-connection session threads decoding typed
+//! requests, and a multi-model [`ModelRegistry`] routing them by name
+//! onto per-model batcher → deque-pool servers ([`registry`]).
+//!
+//! The design mirrors what the paper's §3 amortization argument needs
+//! from a serving system: corrections for every registered model are
+//! hoisted *once* at registration (shared `Arc<PreparedB>` /
+//! `PreparedConvBank` / `PreparedCpm3` across all workers), then an
+//! arbitrary number of network clients amortize them per request.
+//! Admission is cost-aware — each model prices a request in row-cost
+//! units against the batcher's queued-cost budget, and every refusal
+//! is an explicit wire-level `REJECTED` frame with a stable code,
+//! never a silent drop.
+//!
+//! Accounting is conservation-checked end to end, extending the PR 5
+//! pool invariant across the network boundary: per model,
+//! `submitted == served + rejected + errored + disconnects`, per-model
+//! sums equal the pooled totals, and unroutable (unknown-model)
+//! requests are tallied separately so the equality stays field-exact.
+
+pub mod client;
+pub mod listener;
+pub mod models;
+pub mod registry;
+pub mod wire;
+
+pub use client::{InferOutcome, Rejection, TcpClient};
+pub use listener::IngressServer;
+pub use models::{
+    default_row_cost, parse_listen_addr, parse_model_list, reference_executor, reference_rows,
+    register_native, sample_input, NativeServing, MODEL_NAMES,
+};
+pub use registry::{IngressReport, ModelRegistry, ModelReport, Outcome, RegisteredModel};
+pub use wire::{ModelInfo, WireError};

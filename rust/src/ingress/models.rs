@@ -1,0 +1,368 @@
+//! The native model catalogue for the network front door: the same
+//! three deterministic models `serve --native` builds in-process
+//! (dense 784→10, conv 8×C×3×3 over 28×28 NCHW, complex CPM3 64→16),
+//! constructed with the same seeds and batch shapes so a TCP response
+//! is *byte-identical* to the in-process executor path — every kernel
+//! computes output rows independently (the PR 6 tile contract pins
+//! this), so batch composition cannot perturb a row's bits.
+//!
+//! Also home to the typed `--listen` / `--models` CLI validation
+//! (PR 5/6 no-clamping convention: malformed input is a typed error,
+//! never a silent fixup).
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::server::Routing;
+use crate::coordinator::{
+    BatchExecutor, ComplexMatmulDirectExecutor, ComplexMatmulExecutor, Conv2dDirectExecutor,
+    Conv2dExecutor, DirectKernelExecutor, InferenceServer, SkewedKernelExecutor,
+    SquareKernelExecutor, WorkloadGen,
+};
+use crate::linalg::engine::{
+    CPlanes, ConvSpec, EngineConfig, PreparedB, PreparedConvBank, PreparedCpm3,
+};
+use crate::linalg::Matrix;
+use crate::runtime::registry::{ArtifactSpec, TensorSpec};
+use crate::testkit::Rng;
+
+use super::registry::ModelRegistry;
+
+/// The registrable native models, in canonical order.
+pub const MODEL_NAMES: &[&str] = &["dense", "conv", "complex"];
+
+/// Default admission cost per request, in the batcher's cost units —
+/// a coarse per-row work ratio (one conv request lowers 8 filter maps
+/// of patches; one complex request runs three square passes).
+pub fn default_row_cost(name: &str) -> u64 {
+    match name {
+        "conv" => 8,
+        "complex" => 2,
+        _ => 1,
+    }
+}
+
+/// Pool/admission shape shared by every model registered through
+/// [`register_native`].
+#[derive(Debug, Clone)]
+pub struct NativeServing {
+    pub workers: usize,
+    pub routing: Routing,
+    /// shadow-verify every k-th batch against the direct twin (0 = off)
+    pub shadow_every: u64,
+    /// engine threads per worker
+    pub engine_threads: usize,
+    pub queue_depth: usize,
+    /// queued-cost budget per model (`u64::MAX` = count bound only)
+    pub cost_budget: u64,
+    pub max_wait: Duration,
+}
+
+impl Default for NativeServing {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            routing: Routing::Steal,
+            shadow_every: 0,
+            engine_threads: 1,
+            queue_depth: 1024,
+            cost_budget: u64::MAX,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Deterministic dense weights — the same seed/shape as `serve
+/// --native --model dense`.
+fn dense_weights() -> Matrix<f32> {
+    let mut rng = Rng::new(0xE6);
+    Matrix::from_fn(784, 10, |_, _| (rng.normal() * 0.05) as f32)
+}
+
+/// Deterministic conv filter bank (8 filters of 1×3×3) and its spec.
+fn conv_bank() -> Result<(Vec<f32>, ConvSpec)> {
+    let spec = ConvSpec::new(1, 8, 3, 3);
+    let mut rng = Rng::new(0xC0);
+    let filters: Vec<f32> = (0..spec.bank_len()).map(|_| (rng.normal() * 0.2) as f32).collect();
+    Ok((filters, spec))
+}
+
+/// Deterministic complex weight planes (64→16).
+fn complex_planes() -> (Matrix<f32>, Matrix<f32>) {
+    let (n, p) = (64usize, 16usize);
+    let mut rng = Rng::new(0xC3);
+    let y_re = Matrix::from_fn(n, p, |_, _| (rng.normal() * 0.1) as f32);
+    let y_im = Matrix::from_fn(n, p, |_, _| (rng.normal() * 0.1) as f32);
+    (y_re, y_im)
+}
+
+/// Build and register one native model: hoist its shared prepared
+/// corrections once, start its batcher → deque pool with the
+/// cost-aware admission budget, and record its typed shape declaration
+/// through the manifest machinery.
+pub fn register_native(reg: &mut ModelRegistry, name: &str, cfg: &NativeServing) -> Result<()> {
+    let engine = EngineConfig::with_threads(cfg.engine_threads.max(1));
+    let shadow_wanted = cfg.shadow_every > 0;
+    match name {
+        "dense" => {
+            let (prepared, _prep_ops) = PreparedB::new_shared(dense_weights());
+            let shadow_w = prepared.matrix().clone();
+            let server = InferenceServer::start_costed(
+                32,
+                cfg.max_wait,
+                cfg.queue_depth,
+                cfg.cost_budget,
+                cfg.shadow_every,
+                cfg.workers,
+                cfg.routing,
+                None,
+                move |_wid| {
+                    Ok(SkewedKernelExecutor::new(
+                        SquareKernelExecutor::from_shared(prepared.clone(), 32, engine.clone()),
+                        1,
+                    ))
+                },
+                move |_wid| {
+                    if shadow_wanted {
+                        Ok(Some(DirectKernelExecutor::new(shadow_w.clone(), 32)))
+                    } else {
+                        Ok(None)
+                    }
+                },
+            )?;
+            let artifact = ArtifactSpec::declared(
+                name,
+                vec![TensorSpec::new(vec![32, 784], "float32")],
+                vec![TensorSpec::new(vec![32, 10], "float32")],
+            );
+            reg.register(name, artifact, default_row_cost(name), server)
+        }
+        "conv" => {
+            let (filters, spec) = conv_bank()?;
+            let (out_h, out_w) = spec.output_shape(28, 28)?;
+            let out_len = spec.out_channels * out_h * out_w;
+            let (bank, _prep_ops) = PreparedConvBank::new_nchw_shared(&filters, spec)?;
+            let shadow_bank = bank.clone();
+            let shadow_engine = engine.clone();
+            let server = InferenceServer::start_costed(
+                16,
+                cfg.max_wait,
+                cfg.queue_depth,
+                cfg.cost_budget,
+                cfg.shadow_every,
+                cfg.workers,
+                cfg.routing,
+                None,
+                move |_wid| Conv2dExecutor::from_shared(bank.clone(), 28, 28, 16, engine.clone()),
+                move |_wid| {
+                    if shadow_wanted {
+                        Ok(Some(Conv2dDirectExecutor::from_shared(
+                            shadow_bank.clone(),
+                            28,
+                            28,
+                            16,
+                            shadow_engine.clone(),
+                        )?))
+                    } else {
+                        Ok(None)
+                    }
+                },
+            )?;
+            let artifact = ArtifactSpec::declared(
+                name,
+                vec![TensorSpec::new(vec![16, 784], "float32")],
+                vec![TensorSpec::new(vec![16, out_len], "float32")],
+            );
+            reg.register(name, artifact, default_row_cost(name), server)
+        }
+        "complex" => {
+            let (y_re, y_im) = complex_planes();
+            let planes = CPlanes::new(y_re.clone(), y_im.clone())?;
+            let (prepared, _prep_ops) = PreparedCpm3::new_shared(&planes)?;
+            let shadow_engine = engine.clone();
+            let server = InferenceServer::start_costed(
+                32,
+                cfg.max_wait,
+                cfg.queue_depth,
+                cfg.cost_budget,
+                cfg.shadow_every,
+                cfg.workers,
+                cfg.routing,
+                None,
+                move |_wid| {
+                    ComplexMatmulExecutor::from_shared(prepared.clone(), 32, engine.clone())
+                },
+                move |_wid| {
+                    if shadow_wanted {
+                        Ok(Some(ComplexMatmulDirectExecutor::new(
+                            y_re.clone(),
+                            y_im.clone(),
+                            32,
+                            shadow_engine.clone(),
+                        )?))
+                    } else {
+                        Ok(None)
+                    }
+                },
+            )?;
+            let artifact = ArtifactSpec::declared(
+                name,
+                vec![TensorSpec::new(vec![32, 128], "float32")],
+                vec![TensorSpec::new(vec![32, 32], "float32")],
+            );
+            reg.register(name, artifact, default_row_cost(name), server)
+        }
+        other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
+    }
+}
+
+/// A single-threaded in-process executor of the same model the ingress
+/// serves — the oracle the e2e tests and the bench compare TCP
+/// responses against, bit for bit.
+pub fn reference_executor(name: &str) -> Result<Box<dyn BatchExecutor>> {
+    let engine = EngineConfig::with_threads(1);
+    match name {
+        "dense" => {
+            let (prepared, _prep_ops) = PreparedB::new_shared(dense_weights());
+            Ok(Box::new(SkewedKernelExecutor::new(
+                SquareKernelExecutor::from_shared(prepared, 32, engine),
+                1,
+            )))
+        }
+        "conv" => {
+            let (filters, spec) = conv_bank()?;
+            let (bank, _prep_ops) = PreparedConvBank::new_nchw_shared(&filters, spec)?;
+            Ok(Box::new(Conv2dExecutor::from_shared(bank, 28, 28, 16, engine)?))
+        }
+        "complex" => {
+            let (y_re, y_im) = complex_planes();
+            let planes = CPlanes::new(y_re, y_im)?;
+            let (prepared, _prep_ops) = PreparedCpm3::new_shared(&planes)?;
+            Ok(Box::new(ComplexMatmulExecutor::from_shared(prepared, 32, engine)?))
+        }
+        other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
+    }
+}
+
+/// Run each input as a zero-padded single-row batch through `exec` and
+/// return the occupied output rows. Because every native kernel
+/// computes output rows independently (zero padding rows contribute
+/// nothing), these rows are byte-identical to what the serving path
+/// returns for the same inputs regardless of how requests were batched
+/// together there.
+pub fn reference_rows(exec: &mut dyn BatchExecutor, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    let (batch, row_len, out_len) = (exec.batch_rows(), exec.row_len(), exec.out_len());
+    let mut flat = vec![0.0f32; batch * row_len];
+    let mut out = Vec::new();
+    let mut rows = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        if input.len() != row_len {
+            bail!("reference input has {} features, model wants {row_len}", input.len());
+        }
+        for v in flat.iter_mut() {
+            *v = 0.0;
+        }
+        flat[..row_len].copy_from_slice(input);
+        exec.run_into(&flat, &mut out)?;
+        rows.push(out[..out_len].to_vec());
+    }
+    Ok(rows)
+}
+
+/// One workload row of the right shape for `name` — the same generator
+/// paths the in-process CLI drives.
+pub fn sample_input(gen: &mut WorkloadGen, name: &str) -> Result<Vec<f32>> {
+    match name {
+        "dense" => Ok(gen.mnist_like()),
+        "conv" => Ok(gen.nchw_image(1, 28, 28)),
+        "complex" => Ok(gen.qpsk_row(64)),
+        other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
+    }
+}
+
+/// Typed `--listen` validation: a parseable `HOST:PORT` socket address
+/// with an explicit non-zero port. No clamping, no DNS: `0` would
+/// silently bind an ephemeral port nobody was told about.
+pub fn parse_listen_addr(spec: &str) -> Result<SocketAddr> {
+    let addr: SocketAddr = spec.parse().map_err(|_| {
+        anyhow!("--listen expects an IP:PORT socket address (e.g. 127.0.0.1:7878), got {spec:?}")
+    })?;
+    if addr.port() == 0 {
+        bail!("--listen rejects port 0 (no silent ephemeral-port pick); use an explicit port");
+    }
+    Ok(addr)
+}
+
+/// Typed `--models` validation: comma-separated, each name known,
+/// no duplicates — unknown or duplicate entries list the valid set.
+pub fn parse_model_list(spec: &str) -> Result<Vec<String>> {
+    let valid = MODEL_NAMES.join(", ");
+    let mut out: Vec<String> = Vec::new();
+    for raw in spec.split(',') {
+        let name = raw.trim();
+        if name.is_empty() {
+            bail!("--models has an empty entry in {spec:?}; valid models: {valid}");
+        }
+        if !MODEL_NAMES.contains(&name) {
+            bail!("--models does not know {name:?}; valid models: {valid}");
+        }
+        if out.iter().any(|m| m == name) {
+            bail!("--models lists {name:?} twice; valid models: {valid}");
+        }
+        out.push(name.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_addr_validation_is_typed() {
+        assert_eq!(
+            parse_listen_addr("127.0.0.1:7878").unwrap(),
+            "127.0.0.1:7878".parse::<SocketAddr>().unwrap()
+        );
+        let err = parse_listen_addr("not-an-addr").unwrap_err();
+        assert!(format!("{err:#}").contains("IP:PORT"), "got: {err:#}");
+        let err = parse_listen_addr("127.0.0.1").unwrap_err();
+        assert!(format!("{err:#}").contains("IP:PORT"), "got: {err:#}");
+        let err = parse_listen_addr("127.0.0.1:0").unwrap_err();
+        assert!(format!("{err:#}").contains("port 0"), "got: {err:#}");
+    }
+
+    #[test]
+    fn model_list_validation_is_typed() {
+        assert_eq!(parse_model_list("dense,conv,complex").unwrap(), MODEL_NAMES.to_vec());
+        assert_eq!(parse_model_list(" conv , dense ").unwrap(), ["conv", "dense"]);
+        let err = parse_model_list("dense,mystery").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mystery") && msg.contains("dense, conv, complex"), "got: {msg}");
+        let err = parse_model_list("dense,dense").unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "got: {err:#}");
+        let err = parse_model_list("dense,,conv").unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "got: {err:#}");
+    }
+
+    #[test]
+    fn default_costs_rank_conv_heaviest() {
+        assert!(default_row_cost("conv") > default_row_cost("complex"));
+        assert!(default_row_cost("complex") > default_row_cost("dense"));
+    }
+
+    #[test]
+    fn reference_executor_shapes_match_the_catalogue() {
+        let mut gen = WorkloadGen::new(0x1234);
+        for &name in MODEL_NAMES {
+            let mut exec = reference_executor(name).unwrap();
+            let input = sample_input(&mut gen, name).unwrap();
+            assert_eq!(input.len(), exec.row_len(), "model {name}");
+            let rows = reference_rows(exec.as_mut(), &[input]).unwrap();
+            assert_eq!(rows.len(), 1);
+            assert_eq!(rows[0].len(), exec.out_len(), "model {name}");
+        }
+    }
+}

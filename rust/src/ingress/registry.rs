@@ -1,0 +1,416 @@
+//! The multi-model serving registry: several prepared models living
+//! behind one front door.
+//!
+//! Each [`RegisteredModel`] owns a running [`InferenceServer`] (batcher
+//! → work-stealing deque pool) whose workers share the model's §3/§9
+//! corrections, hoisted exactly once at registration time — the
+//! amortization the paper's constant-weight premise is about. A request
+//! decoded off the wire is routed by model name, charged the model's
+//! `row_cost` against that server's cost budget (scattermind-style
+//! queue-cost admission), and its outcome lands in exactly one
+//! [`IngressCounters`] bucket on both the model's account and the
+//! pooled account, so the conservation law per-model-sums ==
+//! pooled-totals is checkable at shutdown ([`IngressReport::check_conservation`]).
+//!
+//! Shape/dtype declarations reuse the `runtime::registry` manifest
+//! machinery ([`ArtifactSpec`]/`TensorSpec`), so a native model
+//! registered here is described by the same typed spec an AOT artifact
+//! would be.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::IngressCounters;
+use crate::coordinator::server::{InferenceServer, ServerStats, SubmitError};
+use crate::runtime::registry::ArtifactSpec;
+
+use super::wire::{ModelInfo, WireError};
+
+/// The outcome bucket a request's accounting lands in — exactly one
+/// per routed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Served,
+    Rejected,
+    Errored,
+    Disconnect,
+}
+
+/// One registered model: typed spec + admission cost + its running
+/// server + its front-door account.
+pub struct RegisteredModel {
+    pub name: String,
+    /// shape/dtype declaration in the manifest's own vocabulary
+    pub artifact: ArtifactSpec,
+    /// admission-cost units one request is charged while queued
+    pub row_cost: u64,
+    server: InferenceServer,
+    counters: Mutex<IngressCounters>,
+}
+
+impl RegisteredModel {
+    pub fn row_len(&self) -> usize {
+        self.server.row_len()
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.server.out_len()
+    }
+
+    /// Snapshot this model's front-door account.
+    pub fn counters(&self) -> IngressCounters {
+        *self.counters.lock().unwrap()
+    }
+
+    /// Engine-side stats for this model's pool (periodic poll).
+    pub fn server_stats(&self) -> Result<ServerStats> {
+        self.server.stats()
+    }
+}
+
+/// Name-routed collection of registered models plus the pooled
+/// front-door account.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<RegisteredModel>,
+    /// pooled account: every session updates its model's counters and
+    /// then these, under separate (never nested) lock scopes
+    totals: Mutex<IngressCounters>,
+    /// decoded infer requests naming no registered model — they have no
+    /// per-model account to land in, so they are tallied separately to
+    /// keep per-model-sums == totals exact (and still answered with a
+    /// typed `UnknownModel` rejection, never dropped silently)
+    unroutable: Mutex<u64>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model under a unique name. The server (and therefore
+    /// the shared prepared corrections behind its workers) must already
+    /// be running; duplicate names are a typed error, matching the
+    /// CLI's no-silent-fixup convention.
+    pub fn register(
+        &mut self,
+        name: &str,
+        artifact: ArtifactSpec,
+        row_cost: u64,
+        server: InferenceServer,
+    ) -> Result<()> {
+        if self.models.iter().any(|m| m.name == name) {
+            bail!("model {name:?} is already registered");
+        }
+        self.models.push(RegisteredModel {
+            name: name.to_string(),
+            artifact,
+            row_cost,
+            server,
+            counters: Mutex::new(IngressCounters::default()),
+        });
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn models(&self) -> &[RegisteredModel] {
+        &self.models
+    }
+
+    /// The registered names, comma-joined — the `have` text of
+    /// `UnknownModel` rejections.
+    pub fn names_joined(&self) -> String {
+        let mut s = String::new();
+        for (i, m) in self.models.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&m.name);
+        }
+        s
+    }
+
+    /// The advertised model table (`MODELS` frames).
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        self.models
+            .iter()
+            .map(|m| ModelInfo {
+                name: m.name.clone(),
+                row_len: m.row_len() as u32,
+                out_len: m.out_len() as u32,
+                row_cost: m.row_cost,
+            })
+            .collect()
+    }
+
+    /// Route a request by model name; `UnknownModel` carries the valid
+    /// set so the client can self-correct.
+    pub fn route(&self, name: &str) -> Result<&RegisteredModel, WireError> {
+        self.models.iter().find(|m| m.name == name).ok_or_else(|| WireError::UnknownModel {
+            name: name.to_string(),
+            have: self.names_joined(),
+        })
+    }
+
+    /// Charge one decoded request to a model's `submitted` account.
+    /// Its outcome must later land in exactly one bucket via
+    /// [`Self::record`].
+    pub fn count_submitted(&self, model: &RegisteredModel) {
+        model.counters.lock().unwrap().submitted += 1;
+        // separate lock scope: the model lock is released before the
+        // pooled lock is taken (declared ranks 3 < 4 would also allow
+        // nesting, but sequential scopes keep the critical sections
+        // minimal)
+        self.totals.lock().unwrap().submitted += 1;
+    }
+
+    /// Land a routed request's outcome in exactly one bucket, on both
+    /// the model's account and the pooled account.
+    pub fn record(&self, model: &RegisteredModel, outcome: Outcome) {
+        {
+            let mut c = model.counters.lock().unwrap();
+            bump(&mut c, outcome);
+        }
+        let mut t = self.totals.lock().unwrap();
+        bump(&mut t, outcome);
+    }
+
+    /// Tally a decoded infer naming no registered model.
+    pub fn count_unroutable(&self) {
+        *self.unroutable.lock().unwrap() += 1;
+    }
+
+    /// Submit one row to a model's server, charged at the model's
+    /// `row_cost`. Typed errors; the caller translates them to wire
+    /// rejections and does the outcome accounting.
+    #[allow(clippy::type_complexity)]
+    pub fn try_submit(
+        &self,
+        model: &RegisteredModel,
+        input: Vec<f32>,
+    ) -> std::result::Result<Receiver<std::result::Result<Vec<f32>, String>>, SubmitError> {
+        model.server.try_submit(input, model.row_cost)
+    }
+
+    /// Snapshot the pooled front-door account.
+    pub fn totals(&self) -> IngressCounters {
+        *self.totals.lock().unwrap()
+    }
+
+    pub fn unroutable(&self) -> u64 {
+        *self.unroutable.lock().unwrap()
+    }
+
+    /// Shut every model's server down (flushing queued rows) and
+    /// assemble the final per-model + pooled report. Call only after
+    /// the sessions have drained — outcomes still in flight would be
+    /// missed by the snapshot.
+    pub fn shutdown(self) -> Result<IngressReport> {
+        // snapshot order follows the declared lock ranks: per-model
+        // `.counters` (3) before the pooled `.totals` (4)
+        let mut per_model = Vec::with_capacity(self.models.len());
+        for m in self.models {
+            let ingress = *m.counters.lock().unwrap();
+            let server = m.server.shutdown()?;
+            per_model.push(ModelReport {
+                name: m.name,
+                artifact: m.artifact,
+                row_cost: m.row_cost,
+                ingress,
+                server,
+            });
+        }
+        let totals = *self.totals.lock().unwrap();
+        let unroutable = *self.unroutable.lock().unwrap();
+        Ok(IngressReport { per_model, totals, unroutable })
+    }
+}
+
+fn bump(c: &mut IngressCounters, outcome: Outcome) {
+    match outcome {
+        Outcome::Served => c.served += 1,
+        Outcome::Rejected => c.rejected += 1,
+        Outcome::Errored => c.errored += 1,
+        Outcome::Disconnect => c.disconnects += 1,
+    }
+}
+
+/// One model's final account: front-door counters + the engine-side
+/// [`ServerStats`] snapshot taken after its pool drained.
+pub struct ModelReport {
+    pub name: String,
+    pub artifact: ArtifactSpec,
+    pub row_cost: u64,
+    pub ingress: IngressCounters,
+    pub server: ServerStats,
+}
+
+/// The shutdown report for the whole front door.
+pub struct IngressReport {
+    pub per_model: Vec<ModelReport>,
+    /// pooled front-door account (routed requests only)
+    pub totals: IngressCounters,
+    /// decoded infers that named no registered model (answered with
+    /// typed `UnknownModel` rejections; outside the per-model accounts)
+    pub unroutable: u64,
+}
+
+impl IngressReport {
+    /// Field-wise sum of the per-model accounts.
+    pub fn summed(&self) -> IngressCounters {
+        let mut sum = IngressCounters::default();
+        for m in &self.per_model {
+            sum.add(&m.ingress);
+        }
+        sum
+    }
+
+    /// The tentpole invariants, as typed errors:
+    /// * per-model sums == pooled totals, field by field;
+    /// * every model's account is conserved
+    ///   (`submitted == served + rejected + errored + disconnects`);
+    /// * every model's *engine* account is conserved too
+    ///   (`served + rejected == submitted` at the pool boundary, the
+    ///   PR 5 law — already asserted inside the pool, re-checked here
+    ///   across the socket boundary).
+    pub fn check_conservation(&self) -> Result<()> {
+        let sum = self.summed();
+        if sum != self.totals {
+            bail!(
+                "ingress conservation violated: per-model sums {sum:?} != totals {:?}",
+                self.totals
+            );
+        }
+        for m in &self.per_model {
+            if !m.ingress.conserved() {
+                bail!("model {:?} leaked an outcome: {:?}", m.name, m.ingress);
+            }
+            let s = &m.server;
+            if s.served + s.rejected != s.submitted {
+                bail!(
+                    "model {:?}: engine served {} + rejected {} != submitted {}",
+                    m.name,
+                    s.served,
+                    s.rejected,
+                    s.submitted
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Routing;
+    use crate::coordinator::BatchExecutor;
+    use crate::runtime::registry::TensorSpec;
+    use std::time::Duration;
+
+    /// The server.rs test mock, re-created here: doubles each feature.
+    struct Doubler;
+
+    impl BatchExecutor for Doubler {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+            Ok(rows_flat.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    fn start_doubler() -> InferenceServer {
+        InferenceServer::start(
+            4,
+            Duration::from_millis(2),
+            64,
+            0,
+            1,
+            |_| Ok(Doubler),
+            |_| Ok(None::<Doubler>),
+        )
+        .unwrap()
+    }
+
+    fn doubler_artifact() -> ArtifactSpec {
+        ArtifactSpec::declared(
+            "double",
+            vec![TensorSpec::new(vec![4, 3], "float32")],
+            vec![TensorSpec::new(vec![4, 3], "float32")],
+        )
+    }
+
+    #[test]
+    fn duplicate_registration_is_a_typed_error() {
+        let mut reg = ModelRegistry::new();
+        reg.register("double", doubler_artifact(), 1, start_doubler()).unwrap();
+        let err =
+            reg.register("double", doubler_artifact(), 1, start_doubler()).unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"));
+    }
+
+    #[test]
+    fn unknown_model_rejection_lists_the_valid_set() {
+        let mut reg = ModelRegistry::new();
+        reg.register("double", doubler_artifact(), 1, start_doubler()).unwrap();
+        match reg.route("mystery") {
+            Err(WireError::UnknownModel { name, have }) => {
+                assert_eq!(name, "mystery");
+                assert_eq!(have, "double");
+            }
+            other => panic!("unexpected {:?}", other.map(|m| m.name.as_str())),
+        }
+    }
+
+    #[test]
+    fn routed_requests_conserve_and_advertise() {
+        let mut reg = ModelRegistry::new();
+        reg.register("double", doubler_artifact(), 7, start_doubler()).unwrap();
+        let infos = reg.infos();
+        assert_eq!(infos.len(), 1);
+        assert_eq!((infos[0].row_len, infos[0].out_len, infos[0].row_cost), (3, 3, 7));
+
+        let m = reg.route("double").unwrap();
+        reg.count_submitted(m);
+        let rx = reg.try_submit(m, vec![1.0, 2.0, 3.0]).unwrap();
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out, [2.0, 4.0, 6.0]);
+        reg.record(m, Outcome::Served);
+
+        // arity mismatch is typed before anything is queued
+        match reg.try_submit(m, vec![1.0]) {
+            Err(SubmitError::WrongArity { got: 1, want: 3 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let report = reg.shutdown().unwrap();
+        report.check_conservation().unwrap();
+        assert_eq!(report.totals.submitted, 1);
+        assert_eq!(report.totals.served, 1);
+        assert_eq!(report.per_model[0].server.served, 1);
+        assert_eq!(report.per_model[0].artifact.args[0].shape, vec![4, 3]);
+    }
+
+    #[test]
+    fn conservation_check_catches_a_leak() {
+        let mut reg = ModelRegistry::new();
+        reg.register("double", doubler_artifact(), 1, start_doubler()).unwrap();
+        let m = reg.route("double").unwrap();
+        // submitted but no outcome recorded: a leaked request
+        reg.count_submitted(m);
+        let report = reg.shutdown().unwrap();
+        assert!(report.check_conservation().is_err());
+    }
+}

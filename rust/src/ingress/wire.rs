@@ -1,0 +1,568 @@
+//! The length-prefixed binary wire protocol spoken on the TCP front
+//! door.
+//!
+//! Every frame is an 8-byte little-endian header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  "FS"
+//! 2       1     version (currently 1)
+//! 3       1     kind    (see [`kind`])
+//! 4       4     payload length, u32 LE (≤ [`MAX_PAYLOAD`])
+//! ```
+//!
+//! Request payloads:
+//! * `INFER`: `u16 name_len · name bytes (utf-8) · u32 n · n × f32 LE`
+//! * `LIST`:  empty
+//!
+//! Response payloads:
+//! * `OUTPUT`:   `u32 n · n × f32 LE` — one inference result row
+//! * `MODELS`:   `u16 count · count × { u16 name_len · name · u32
+//!   row_len · u32 out_len · u64 row_cost }`
+//! * `REJECTED`: `u16 code · u16 msg_len · msg bytes` — every failure
+//!   the server can express is a *typed* rejection carried on the wire
+//!   ([`WireError::code`]), never a silent drop or a bare hang-up.
+//!
+//! The codec is split into `encode_*_into` / `decode_*` halves that
+//! work against caller-owned buffers, so a warmed session loop reuses
+//! its scratch space: the hot-path encoders (`frame_into`,
+//! `encode_infer_into`, `encode_output_into`) are registered with the
+//! srclint warm-alloc gate and only ever `clear`/`extend` their
+//! buffers.
+
+use std::io::{Read, Write};
+
+/// Frame magic: "FS" for Fair & Square.
+pub const MAGIC: [u8; 2] = *b"FS";
+/// Protocol version carried in every header.
+pub const VERSION: u8 = 1;
+/// Header size on the wire.
+pub const HEADER_LEN: usize = 8;
+/// Hard payload bound: anything larger is rejected before allocation
+/// (oversize frames must not let a client balloon server memory).
+pub const MAX_PAYLOAD: u32 = 4 << 20;
+
+/// Frame kinds. Requests have the high bit clear, responses set.
+pub mod kind {
+    /// client → server: run one row through a named model
+    pub const INFER: u8 = 0x01;
+    /// client → server: list registered models
+    pub const LIST: u8 = 0x02;
+    /// server → client: one inference output row
+    pub const OUTPUT: u8 = 0x81;
+    /// server → client: the model table
+    pub const MODELS: u8 = 0x82;
+    /// server → client: typed rejection (code + human-readable reason)
+    pub const REJECTED: u8 = 0xEE;
+}
+
+/// Typed wire-level failure — the `LinalgError` analogue for the
+/// socket boundary. Every variant has a stable numeric [`code`] so
+/// clients can match without parsing prose.
+///
+/// [`code`]: WireError::code
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// header did not start with "FS"
+    BadMagic { got: [u8; 2] },
+    /// header carried an unsupported protocol version
+    BadVersion { got: u8 },
+    /// header carried a kind this side does not handle
+    UnknownKind { got: u8 },
+    /// declared payload length exceeds [`MAX_PAYLOAD`]
+    Oversize { len: u32, max: u32 },
+    /// payload bytes did not decode as the declared kind
+    Malformed { what: &'static str },
+    /// infer named a model that is not registered; `have` lists the
+    /// valid set so the client can self-correct
+    UnknownModel { name: String, have: String },
+    /// infer row arity does not match the model's declared row_len
+    WrongArity { model: String, got: usize, want: usize },
+    /// cost-aware admission control rejected the request (queue full
+    /// or cost budget exhausted) — explicit back-pressure
+    QueueFull { model: String },
+    /// the executor failed; the engine-side error text is relayed
+    Exec { model: String, msg: String },
+    /// the server is shutting down
+    Shutdown,
+}
+
+impl WireError {
+    /// Stable numeric code carried in `REJECTED` frames.
+    pub fn code(&self) -> u16 {
+        match self {
+            Self::BadMagic { .. } => 1,
+            Self::BadVersion { .. } => 2,
+            Self::UnknownKind { .. } => 3,
+            Self::Oversize { .. } => 4,
+            Self::Malformed { .. } => 5,
+            Self::UnknownModel { .. } => 6,
+            Self::WrongArity { .. } => 7,
+            Self::QueueFull { .. } => 8,
+            Self::Exec { .. } => 9,
+            Self::Shutdown => 10,
+        }
+    }
+
+    /// Whether the framing itself is broken: after one of these the
+    /// byte stream cannot be trusted, so the session sends the typed
+    /// rejection and closes. Payload-level errors keep the connection
+    /// usable (the next frame boundary is still known).
+    pub fn fatal(&self) -> bool {
+        matches!(
+            self,
+            Self::BadMagic { .. }
+                | Self::BadVersion { .. }
+                | Self::Oversize { .. }
+                | Self::Malformed { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::BadMagic { got } => {
+                write!(f, "bad magic {got:?}, want {MAGIC:?}")
+            }
+            Self::BadVersion { got } => {
+                write!(f, "unsupported protocol version {got}, want {VERSION}")
+            }
+            Self::UnknownKind { got } => write!(f, "unknown frame kind {got:#04x}"),
+            Self::Oversize { len, max } => {
+                write!(f, "payload of {len} bytes exceeds the {max}-byte bound")
+            }
+            Self::Malformed { what } => write!(f, "malformed payload: {what}"),
+            Self::UnknownModel { name, have } => {
+                write!(f, "unknown model {name:?}; registered models: {have}")
+            }
+            Self::WrongArity { model, got, want } => {
+                write!(f, "model {model:?}: input has {got} features, model wants {want}")
+            }
+            Self::QueueFull { model } => {
+                write!(f, "model {model:?}: queue full — admission control rejected the request")
+            }
+            Self::Exec { model, msg } => write!(f, "model {model:?}: executor failed: {msg}"),
+            Self::Shutdown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// What [`read_frame`] produced.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// a complete frame; the payload bytes are in the caller's buffer
+    Frame { kind: u8 },
+    /// the peer closed cleanly at a frame boundary
+    Eof,
+}
+
+/// A read-side failure: either transport-level (broken pipe, partial
+/// frame then EOF) or protocol-level (typed, reportable to the peer).
+#[derive(Debug)]
+pub enum ReadError {
+    Io(std::io::Error),
+    Wire(WireError),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Wire(e) => write!(f, "wire: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Read exactly `buf.len()` bytes, tolerating short reads. Returns the
+/// number of bytes read before EOF (so 0 = clean EOF, `buf.len()` =
+/// success, anything between = truncated stream).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Read one frame into `payload` (resized to the declared length).
+/// `Ok(Eof)` means the peer closed *between* frames — the only clean
+/// close. EOF inside a header or payload is a truncated-stream
+/// [`ReadError::Io`]; header validation failures are typed
+/// [`ReadError::Wire`] errors the caller can echo back.
+pub fn read_frame(r: &mut impl Read, payload: &mut Vec<u8>) -> Result<ReadOutcome, ReadError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    let got = read_full(r, &mut hdr).map_err(ReadError::Io)?;
+    if got == 0 {
+        return Ok(ReadOutcome::Eof);
+    }
+    if got < HEADER_LEN {
+        return Err(ReadError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "eof inside frame header",
+        )));
+    }
+    if [hdr[0], hdr[1]] != MAGIC {
+        return Err(ReadError::Wire(WireError::BadMagic { got: [hdr[0], hdr[1]] }));
+    }
+    if hdr[2] != VERSION {
+        return Err(ReadError::Wire(WireError::BadVersion { got: hdr[2] }));
+    }
+    let kind = hdr[3];
+    let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(ReadError::Wire(WireError::Oversize { len, max: MAX_PAYLOAD }));
+    }
+    payload.resize(len as usize, 0);
+    let got = read_full(r, payload).map_err(ReadError::Io)?;
+    if got < payload.len() {
+        return Err(ReadError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "eof inside frame payload",
+        )));
+    }
+    Ok(ReadOutcome::Frame { kind })
+}
+
+/// Assemble one frame (header + payload) into `out` — cleared first,
+/// then only extended, so a warmed buffer is reused in place.
+pub fn frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
+    debug_assert!(payload.len() as u32 <= MAX_PAYLOAD);
+    out.clear();
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Frame + write in one step, against the session's scratch buffer.
+pub fn write_frame(
+    w: &mut impl Write,
+    scratch: &mut Vec<u8>,
+    kind: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    frame_into(scratch, kind, payload);
+    w.write_all(scratch)?;
+    w.flush()
+}
+
+/// Encode an `INFER` payload: model name + one input row.
+pub fn encode_infer_into(out: &mut Vec<u8>, model: &str, row: &[f32]) {
+    out.clear();
+    out.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Pull `n` bytes off the front of `b`, or fail typed.
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+    if b.len() < n {
+        return Err(WireError::Malformed { what });
+    }
+    let (head, tail) = b.split_at(n);
+    *b = tail;
+    Ok(head)
+}
+
+fn take_u16(b: &mut &[u8], what: &'static str) -> Result<u16, WireError> {
+    let s = take(b, 2, what)?;
+    Ok(u16::from_le_bytes([s[0], s[1]]))
+}
+
+fn take_u32(b: &mut &[u8], what: &'static str) -> Result<u32, WireError> {
+    let s = take(b, 4, what)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn take_u64(b: &mut &[u8], what: &'static str) -> Result<u64, WireError> {
+    let s = take(b, 8, what)?;
+    let mut a = [0u8; 8];
+    a.copy_from_slice(s);
+    Ok(u64::from_le_bytes(a))
+}
+
+/// Decode an `INFER` payload into `row` (cleared first); returns the
+/// model name borrowed from the payload.
+pub fn decode_infer<'a>(mut p: &'a [u8], row: &mut Vec<f32>) -> Result<&'a str, WireError> {
+    let name_len = take_u16(&mut p, "infer name length")? as usize;
+    let name = take(&mut p, name_len, "infer name bytes")?;
+    let name =
+        std::str::from_utf8(name).map_err(|_| WireError::Malformed { what: "infer name utf-8" })?;
+    let n = take_u32(&mut p, "infer row arity")? as usize;
+    if p.len() != n * 4 {
+        return Err(WireError::Malformed { what: "infer row bytes" });
+    }
+    row.clear();
+    for c in p.chunks_exact(4) {
+        row.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(name)
+}
+
+/// Encode an `OUTPUT` payload: one response row.
+pub fn encode_output_into(out: &mut Vec<u8>, row: &[f32]) {
+    out.clear();
+    out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode an `OUTPUT` payload into `row` (cleared first).
+pub fn decode_output(mut p: &[u8], row: &mut Vec<f32>) -> Result<(), WireError> {
+    let n = take_u32(&mut p, "output arity")? as usize;
+    if p.len() != n * 4 {
+        return Err(WireError::Malformed { what: "output row bytes" });
+    }
+    row.clear();
+    for c in p.chunks_exact(4) {
+        row.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(())
+}
+
+/// One row of the advertised model table (`MODELS` frames).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub row_len: u32,
+    pub out_len: u32,
+    /// admission-cost units one request of this model is charged
+    pub row_cost: u64,
+}
+
+/// Encode a `MODELS` payload.
+pub fn encode_models_into(out: &mut Vec<u8>, models: &[ModelInfo]) {
+    out.clear();
+    out.extend_from_slice(&(models.len() as u16).to_le_bytes());
+    for m in models {
+        out.extend_from_slice(&(m.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(m.name.as_bytes());
+        out.extend_from_slice(&m.row_len.to_le_bytes());
+        out.extend_from_slice(&m.out_len.to_le_bytes());
+        out.extend_from_slice(&m.row_cost.to_le_bytes());
+    }
+}
+
+/// Decode a `MODELS` payload.
+pub fn decode_models(mut p: &[u8]) -> Result<Vec<ModelInfo>, WireError> {
+    let count = take_u16(&mut p, "model count")? as usize;
+    let mut models = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = take_u16(&mut p, "model name length")? as usize;
+        let name = take(&mut p, name_len, "model name bytes")?;
+        let name = std::str::from_utf8(name)
+            .map_err(|_| WireError::Malformed { what: "model name utf-8" })?
+            .to_string();
+        let row_len = take_u32(&mut p, "model row_len")?;
+        let out_len = take_u32(&mut p, "model out_len")?;
+        let row_cost = take_u64(&mut p, "model row_cost")?;
+        models.push(ModelInfo { name, row_len, out_len, row_cost });
+    }
+    if !p.is_empty() {
+        return Err(WireError::Malformed { what: "trailing model bytes" });
+    }
+    Ok(models)
+}
+
+/// Encode a `REJECTED` payload: the error's stable code plus its
+/// rendered message. Cold path — rejections are not the steady state —
+/// so the `format!` is fine here (and this fn is deliberately NOT in
+/// the warm-alloc registry).
+pub fn encode_rejected_into(out: &mut Vec<u8>, err: &WireError) {
+    let msg = format!("{err}");
+    let msg = msg.as_bytes();
+    let take = msg.len().min(u16::MAX as usize);
+    out.clear();
+    out.extend_from_slice(&err.code().to_le_bytes());
+    out.extend_from_slice(&(take as u16).to_le_bytes());
+    out.extend_from_slice(&msg[..take]);
+}
+
+/// Decode a `REJECTED` payload into (code, message).
+pub fn decode_rejected(mut p: &[u8]) -> Result<(u16, String), WireError> {
+    let code = take_u16(&mut p, "rejected code")?;
+    let msg_len = take_u16(&mut p, "rejected msg length")? as usize;
+    let msg = take(&mut p, msg_len, "rejected msg bytes")?;
+    let msg = std::str::from_utf8(msg)
+        .map_err(|_| WireError::Malformed { what: "rejected msg utf-8" })?
+        .to_string();
+    Ok((code, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn infer_frame_roundtrips() {
+        let mut payload = Vec::new();
+        encode_infer_into(&mut payload, "dense", &[1.0, -2.5, 3.25]);
+        let mut frame = Vec::new();
+        frame_into(&mut frame, kind::INFER, &payload);
+        assert_eq!(frame.len(), HEADER_LEN + payload.len());
+
+        let mut rd = Cursor::new(frame);
+        let mut got_payload = Vec::new();
+        match read_frame(&mut rd, &mut got_payload).unwrap() {
+            ReadOutcome::Frame { kind: k } => assert_eq!(k, kind::INFER),
+            other => panic!("unexpected {other:?}"),
+        }
+        let mut row = Vec::new();
+        let name = decode_infer(&got_payload, &mut row).unwrap();
+        assert_eq!(name, "dense");
+        assert_eq!(row, [1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn output_and_models_roundtrip() {
+        let mut p = Vec::new();
+        encode_output_into(&mut p, &[0.5, f32::MIN_POSITIVE]);
+        let mut row = Vec::new();
+        decode_output(&p, &mut row).unwrap();
+        assert_eq!(row.len(), 2);
+        assert_eq!(row[1].to_bits(), f32::MIN_POSITIVE.to_bits());
+
+        let models = vec![
+            ModelInfo { name: "dense".into(), row_len: 784, out_len: 10, row_cost: 1 },
+            ModelInfo { name: "conv".into(), row_len: 784, out_len: 5408, row_cost: 8 },
+        ];
+        encode_models_into(&mut p, &models);
+        assert_eq!(decode_models(&p).unwrap(), models);
+    }
+
+    #[test]
+    fn rejected_roundtrips_with_stable_code() {
+        let err = WireError::UnknownModel { name: "mystery".into(), have: "dense, conv".into() };
+        let mut p = Vec::new();
+        encode_rejected_into(&mut p, &err);
+        let (code, msg) = decode_rejected(&p).unwrap();
+        assert_eq!(code, err.code());
+        assert!(msg.contains("mystery") && msg.contains("dense"), "got: {msg}");
+    }
+
+    #[test]
+    fn clean_eof_vs_truncated_frames() {
+        // clean EOF at a frame boundary
+        let mut payload = Vec::new();
+        let mut rd = Cursor::new(Vec::<u8>::new());
+        assert_eq!(read_frame(&mut rd, &mut payload).unwrap(), ReadOutcome::Eof);
+
+        // EOF inside the header is a transport error
+        let mut rd = Cursor::new(vec![b'F', b'S', VERSION]);
+        match read_frame(&mut rd, &mut payload) {
+            Err(ReadError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // EOF inside the payload is a transport error too
+        let mut frame = Vec::new();
+        frame_into(&mut frame, kind::LIST, &[1, 2, 3, 4]);
+        frame.truncate(frame.len() - 2);
+        let mut rd = Cursor::new(frame);
+        match read_frame(&mut rd, &mut payload) {
+            Err(ReadError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_validation_is_typed() {
+        let mut payload = Vec::new();
+
+        let mut bad_magic = Vec::new();
+        frame_into(&mut bad_magic, kind::LIST, &[]);
+        bad_magic[0] = b'X';
+        match read_frame(&mut Cursor::new(bad_magic), &mut payload) {
+            Err(ReadError::Wire(WireError::BadMagic { got })) => assert_eq!(got[0], b'X'),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let mut bad_ver = Vec::new();
+        frame_into(&mut bad_ver, kind::LIST, &[]);
+        bad_ver[2] = 9;
+        match read_frame(&mut Cursor::new(bad_ver), &mut payload) {
+            Err(ReadError::Wire(WireError::BadVersion { got: 9 })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // an oversize declaration is rejected from the header alone —
+        // no payload allocation happens
+        let mut oversize = Vec::new();
+        frame_into(&mut oversize, kind::INFER, &[]);
+        oversize[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        match read_frame(&mut Cursor::new(oversize), &mut payload) {
+            Err(ReadError::Wire(WireError::Oversize { len, max })) => {
+                assert_eq!((len, max), (MAX_PAYLOAD + 1, MAX_PAYLOAD));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_not_panics() {
+        let mut row = Vec::new();
+        // truncated name
+        let p = [5u8, 0, b'd'];
+        assert!(matches!(
+            decode_infer(&p, &mut row),
+            Err(WireError::Malformed { .. })
+        ));
+        // row byte count disagrees with declared arity
+        let mut p = Vec::new();
+        encode_infer_into(&mut p, "m", &[1.0]);
+        p.truncate(p.len() - 1);
+        assert!(matches!(
+            decode_infer(&p, &mut row),
+            Err(WireError::Malformed { .. })
+        ));
+        // invalid utf-8 in the name
+        let p = [1u8, 0, 0xFF, 0, 0, 0, 0];
+        assert!(matches!(
+            decode_infer(&p, &mut row),
+            Err(WireError::Malformed { what: "infer name utf-8" })
+        ));
+    }
+
+    #[test]
+    fn fatal_splits_framing_from_payload_errors() {
+        assert!(WireError::BadMagic { got: [0, 0] }.fatal());
+        assert!(WireError::Oversize { len: 1, max: 0 }.fatal());
+        assert!(!WireError::UnknownModel { name: String::new(), have: String::new() }.fatal());
+        assert!(!WireError::QueueFull { model: String::new() }.fatal());
+        assert!(!WireError::Shutdown.fatal());
+    }
+
+    #[test]
+    fn warm_encoders_reuse_the_buffer_in_place() {
+        let mut buf = Vec::with_capacity(256);
+        encode_output_into(&mut buf, &[1.0; 32]);
+        let warm = buf.as_ptr();
+        encode_output_into(&mut buf, &[2.0; 32]);
+        assert_eq!(buf.as_ptr(), warm, "warmed encode must not reallocate");
+        let mut frame = Vec::with_capacity(512);
+        frame_into(&mut frame, kind::OUTPUT, &buf);
+        let warm = frame.as_ptr();
+        frame_into(&mut frame, kind::OUTPUT, &buf);
+        assert_eq!(frame.as_ptr(), warm, "warmed frame must not reallocate");
+    }
+}

@@ -23,6 +23,7 @@
 //! | [`sim`]         | cycle-accurate simulators of the paper's Fig. 1–14 architectures |
 //! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts (`pjrt` feature; stub otherwise) |
 //! | [`coordinator`] | thread-based batching inference server over the runtime or the native square-kernel executors |
+//! | [`ingress`]     | TCP front door: length-prefixed wire protocol, per-connection sessions, multi-model registry routing onto the serving pool |
 //! | [`config`]      | configuration types + first-party JSON |
 //! | [`analysis`]    | std-only static analysis (`srclint`): unsafe audit, warm-path alloc lint, lock-order/atomic-ordering lint, panic-path lint |
 //! | [`testkit`]     | deterministic PRNG + property-testing runner (offline substitute for proptest) |
@@ -48,6 +49,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod gates;
+pub mod ingress;
 pub mod linalg;
 pub mod runtime;
 pub mod sim;

@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use fairsquare::benchkit::{f, Table};
 use fairsquare::cli::Args;
@@ -19,6 +19,7 @@ use fairsquare::coordinator::{
     InferenceServer, PjrtExecutor, Routing, TileConfig, WorkloadGen,
 };
 use fairsquare::gates::report;
+use fairsquare::ingress;
 use fairsquare::linalg::counts::{eq20_ratio, eq36_ratio, eq6_ratio};
 use fairsquare::linalg::{error, Matrix};
 use fairsquare::sim;
@@ -98,6 +99,29 @@ COMMANDS:
                                  prices a heavy request at X× a light
                                  one (default 32). All four knobs
                                  reject 0 instead of clamping.
+            [--listen IP:PORT] [--models NAMES] [--clients K]
+            [--cost-budget UNITS]
+                                 network serving mode: bind a TCP
+                                 ingress speaking the length-prefixed
+                                 wire protocol (see README \"Network
+                                 serving\"), register the --models set
+                                 (default dense,conv,complex — each
+                                 model's §3/§9 corrections hoisted once
+                                 at registration, shared by all
+                                 workers), then drive --requests
+                                 round-robin across the models from
+                                 --clients concurrent TCP connections
+                                 (default 3) and print the pooled +
+                                 per-model conservation-checked report.
+                                 --listen rejects malformed addresses
+                                 and port 0; --models rejects unknown
+                                 and duplicate names. --cost-budget
+                                 UNITS bounds each model's *queued*
+                                 admission cost (dense rows cost 1,
+                                 complex 2, conv 8); over-budget
+                                 requests get a typed wire rejection
+                                 (omit the flag for the count bound
+                                 only; 0 is rejected, not clamped).
   list      [--artifacts DIR]    artifacts in the manifest
 ";
 
@@ -105,7 +129,8 @@ fn main() {
     let args = match Args::parse(
         &["artifacts", "model", "requests", "rps", "widths", "size", "seed", "threads",
           "workers", "steal", "in-ch", "stride", "pad", "dilation", "tile-threshold",
-          "tile", "heavy-frac", "heavy-size"],
+          "tile", "heavy-frac", "heavy-size", "listen", "models", "clients",
+          "cost-budget"],
         &["verbose", "no-shadow", "native"],
     ) {
         Ok(a) => a,
@@ -344,6 +369,9 @@ fn errors(_args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(args, listen);
+    }
     let requests = args.get_usize("requests", 256)?;
     let rps = args.get_u64("rps", 2_000)? as f64;
     let shadow_wanted = !args.has("no-shadow");
@@ -722,6 +750,154 @@ fn serve(args: &Args) -> Result<()> {
     }
 
     if stats.shadow_failures > 0 {
+        bail!("shadow verification failed");
+    }
+    Ok(())
+}
+
+/// `serve --listen`: the network serving mode — bind the TCP ingress,
+/// register the requested native models (each model's §3/§9 corrections
+/// hoisted once at registration, shared by its whole worker pool),
+/// drive the request load over real sockets from concurrent client
+/// connections, and print the conservation-checked pooled + per-model
+/// report.
+fn serve_listen(args: &Args, listen: &str) -> Result<()> {
+    // knobs that only shape the in-process demo paths are refused, not
+    // ignored — the same no-silent-fixup convention as the conv geometry
+    for (flag, hint) in [
+        ("model", "pick the served set with --models NAMES"),
+        ("artifacts", "the network front door serves the native models"),
+        ("tile-threshold", "tiling is an in-process serving knob"),
+        ("heavy-frac", "the whale mix drives the in-process demo"),
+        ("in-ch", "the network conv model is fixed at 1×28×28 NCHW"),
+    ] {
+        if args.get(flag).is_some() {
+            bail!("--{flag} does not apply to --listen ({hint})");
+        }
+    }
+    let addr = ingress::parse_listen_addr(listen)?;
+    let names = ingress::parse_model_list(args.get_or("models", "dense,conv,complex"))?;
+    let requests = args.get_usize("requests", 96)?;
+    let rps = args.get_u64("rps", 2_000)? as f64;
+    let clients = args.get_usize("clients", 3)?;
+    if clients == 0 {
+        bail!("--clients must be >= 1 connection");
+    }
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let routing = match args.get_or("steal", "on") {
+        "on" => Routing::Steal,
+        "off" => Routing::Fifo,
+        other => bail!("--steal expects on|off, got {other:?}"),
+    };
+    let cost_budget = args.get_u64("cost-budget", 0)?;
+    if args.get("cost-budget").is_some() && cost_budget == 0 {
+        bail!("--cost-budget must be >= 1 cost unit; omit the flag for the count bound only");
+    }
+    let cost_budget = if cost_budget == 0 { u64::MAX } else { cost_budget };
+    let threads = args.get_usize("threads", fairsquare::linalg::engine::max_threads())?;
+    let per_worker_threads = (threads / workers).max(1);
+    let shadow_every = if args.has("no-shadow") { 0 } else { 8 };
+
+    let cfg = ingress::NativeServing {
+        workers,
+        routing,
+        shadow_every,
+        engine_threads: per_worker_threads,
+        queue_depth: 1024,
+        cost_budget,
+        max_wait: Duration::from_millis(2),
+    };
+    let mut reg = ingress::ModelRegistry::new();
+    for name in &names {
+        ingress::register_native(&mut reg, name, &cfg)?;
+    }
+    let server = ingress::IngressServer::bind(&addr.to_string(), reg)?;
+    let local = server.local_addr();
+    println!(
+        "ingress listening on {local}: models [{}], {workers} worker(s)/model \
+         ({per_worker_threads} engine threads each), steal={}, shadow={}, \
+         driving {requests} requests from {clients} client connection(s)",
+        names.join(", "),
+        if routing == Routing::Steal { "on" } else { "off" },
+        if shadow_every > 0 { "direct twin" } else { "off" },
+    );
+
+    // drive the load over real sockets: each client thread owns one TCP
+    // connection and walks the model list round-robin, offset by its
+    // index so concurrent in-flight requests mix models
+    let t0 = std::time::Instant::now();
+    let mut drivers = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let names = names.clone();
+        let n = requests / clients + usize::from(c < requests % clients);
+        let per_client_rps = (rps / clients as f64).max(1.0);
+        drivers.push(std::thread::spawn(move || -> Result<(u64, u64)> {
+            let mut gen = WorkloadGen::new(0xE8 + c as u64);
+            let gaps = gen.arrival_gaps_us(n, per_client_rps);
+            let mut client = ingress::TcpClient::connect(local)?;
+            let (mut ok, mut rejected) = (0u64, 0u64);
+            for (k, gap) in gaps.into_iter().enumerate() {
+                std::thread::sleep(Duration::from_micros(gap.min(5_000)));
+                let name = &names[(c + k) % names.len()];
+                let row = ingress::sample_input(&mut gen, name)?;
+                match client.infer(name, &row)? {
+                    Ok(_out) => ok += 1,
+                    Err(_rejection) => rejected += 1,
+                }
+            }
+            Ok((ok, rejected))
+        }));
+    }
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for d in drivers {
+        let (o, r) = d.join().map_err(|_| anyhow!("a client driver panicked"))??;
+        ok += o;
+        rejected += r;
+    }
+    let wall = t0.elapsed();
+
+    let report = server.shutdown()?;
+    report.check_conservation()?;
+    let totals = report.totals;
+    let mut t = Table::new("E8 — ingress report (pooled)", &["metric", "value"]);
+    t.row(&["models".into(), names.join(", ")]);
+    t.row(&["client connections".into(), clients.to_string()]);
+    t.row(&["client ok / rejected".into(), format!("{ok} / {rejected}")]);
+    t.row(&["submitted".into(), totals.submitted.to_string()]);
+    t.row(&["served".into(), totals.served.to_string()]);
+    t.row(&["rejected".into(), totals.rejected.to_string()]);
+    t.row(&["errored".into(), totals.errored.to_string()]);
+    t.row(&["disconnects".into(), totals.disconnects.to_string()]);
+    t.row(&["unroutable".into(), report.unroutable.to_string()]);
+    t.row(&["wall time".into(), format!("{wall:.2?}")]);
+    t.row(&[
+        "throughput".into(),
+        format!("{:.0} rows/s", totals.served as f64 / wall.as_secs_f64()),
+    ]);
+    t.print();
+
+    let mut t = Table::new(
+        "E8 — per-model view (sums == pooled totals, checked)",
+        &["model", "cost", "in→out", "submitted", "served", "rejected",
+          "mean batch", "p50 µs", "p99 µs"],
+    );
+    for m in &report.per_model {
+        t.row(&[
+            m.name.clone(),
+            m.row_cost.to_string(),
+            format!("{}→{}", m.artifact.args[0].shape[1], m.artifact.outputs[0].shape[1]),
+            m.ingress.submitted.to_string(),
+            m.ingress.served.to_string(),
+            m.ingress.rejected.to_string(),
+            f(m.server.mean_batch, 2),
+            format!("{:.0}", m.server.latency.p50_us),
+            format!("{:.0}", m.server.latency.p99_us),
+        ]);
+    }
+    t.print();
+
+    let shadow_failures: u64 = report.per_model.iter().map(|m| m.server.shadow_failures).sum();
+    if shadow_failures > 0 {
         bail!("shadow verification failed");
     }
     Ok(())

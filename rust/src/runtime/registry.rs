@@ -14,6 +14,14 @@ pub struct TensorSpec {
 }
 
 impl TensorSpec {
+    /// Declare a spec programmatically — the ingress `ModelRegistry`
+    /// builds its shape/dtype declarations through the same type the
+    /// manifest parser produces, so one machinery serves both the AOT
+    /// artifact path and the network front door.
+    pub fn new(shape: Vec<usize>, dtype: &str) -> Self {
+        Self { shape, dtype: dtype.to_string() }
+    }
+
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -43,6 +51,21 @@ pub struct ArtifactSpec {
     pub path: PathBuf,
     pub args: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Declare an in-memory spec for a model that was never AOT
+    /// compiled (the `serve --native` executors registered on the
+    /// ingress). The `path` records provenance (`native://<name>`)
+    /// rather than a real file.
+    pub fn declared(name: &str, args: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> Self {
+        Self {
+            name: name.to_string(),
+            path: PathBuf::from(format!("native://{name}")),
+            args,
+            outputs,
+        }
+    }
 }
 
 /// The parsed manifest.
@@ -153,5 +176,77 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), r#"{"format":"protobuf","entries":[]}"#)
             .unwrap();
         assert!(Registry::load(&dir).is_err());
+    }
+
+    /// A manifest with one entry whose tensor-spec body is `spec`.
+    fn manifest_with_spec(spec: &str) -> String {
+        format!(
+            r#"{{"format":"hlo-text","entries":[
+                {{"name":"m1","path":"m1.hlo.txt",
+                 "args":[{spec}],
+                 "outputs":[{{"shape":[2],"dtype":"float32"}}]}}]}}"#
+        )
+    }
+
+    fn load_with_spec(tag: &str, spec: &str) -> Result<Registry> {
+        let dir = std::env::temp_dir().join(format!("fairsq_registry_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_with_spec(spec)).unwrap();
+        Registry::load(&dir)
+    }
+
+    #[test]
+    fn missing_shape_is_a_typed_error() {
+        let err = load_with_spec("noshape", r#"{"dtype":"float32"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("missing shape"), "got: {err:#}");
+    }
+
+    #[test]
+    fn missing_dtype_is_a_typed_error() {
+        let err = load_with_spec("nodtype", r#"{"shape":[2,3]}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("missing dtype"), "got: {err:#}");
+    }
+
+    #[test]
+    fn non_integer_dim_is_a_typed_error() {
+        let err =
+            load_with_spec("baddim", r#"{"shape":[2,"wide"],"dtype":"float32"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("bad dim"), "got: {err:#}");
+    }
+
+    #[test]
+    fn absent_manifest_points_at_make_artifacts() {
+        let dir = std::env::temp_dir().join("fairsq_registry_absent");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let err = Registry::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"), "got: {err:#}");
+    }
+
+    #[test]
+    fn missing_entries_key_is_a_typed_error() {
+        let dir = std::env::temp_dir().join("fairsq_registry_noentries");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"hlo-text"}"#).unwrap();
+        let err = Registry::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("missing entries"), "got: {err:#}");
+    }
+
+    #[test]
+    fn declared_specs_match_the_parsed_form() {
+        // the ingress path and the manifest parser must agree on the
+        // TensorSpec representation, or shape declarations would drift
+        let dir = std::env::temp_dir().join("fairsq_registry_declared");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let parsed = Registry::load(&dir).unwrap().get("m1").unwrap().clone();
+        let declared = ArtifactSpec::declared(
+            "m1",
+            vec![TensorSpec::new(vec![2, 3], "float32")],
+            vec![TensorSpec::new(vec![2], "float32")],
+        );
+        assert_eq!(declared.args, parsed.args);
+        assert_eq!(declared.outputs, parsed.outputs);
+        assert_eq!(declared.path.to_string_lossy(), "native://m1");
     }
 }

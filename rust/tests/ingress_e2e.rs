@@ -1,0 +1,371 @@
+//! End-to-end tests of the TCP ingress: three concurrently registered
+//! models served over real sockets, byte-identical to the in-process
+//! executor path, with conservation-checked accounting through
+//! disconnects, typed rejections, cost-aware admission and shutdown
+//! with live connections.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use fairsquare::coordinator::{BatchExecutor, InferenceServer, Routing, WorkloadGen};
+use fairsquare::ingress::{
+    self, wire, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
+};
+use fairsquare::runtime::{ArtifactSpec, TensorSpec};
+
+/// The native trio behind a fresh ingress on an ephemeral loopback
+/// port: workers ≥ 2 per model, stealing on, shadow off (the shadow
+/// twins have their own gates; here they would only slow the sockets
+/// down).
+fn trio_server() -> IngressServer {
+    let cfg = NativeServing {
+        workers: 2,
+        routing: Routing::Steal,
+        shadow_every: 0,
+        engine_threads: 1,
+        queue_depth: 256,
+        cost_budget: u64::MAX,
+        max_wait: Duration::from_millis(2),
+    };
+    let mut reg = ModelRegistry::new();
+    for name in MODEL_NAMES {
+        ingress::register_native(&mut reg, name, &cfg).unwrap();
+    }
+    IngressServer::bind("127.0.0.1:0", reg).unwrap()
+}
+
+#[test]
+fn trio_over_tcp_byte_identical_and_conserved() {
+    let server = trio_server();
+    let addr = server.local_addr();
+
+    // the advertised model table matches the catalogue
+    let mut probe = TcpClient::connect(addr).unwrap();
+    let infos = probe.list_models().unwrap();
+    assert_eq!(infos.len(), 3);
+    for (info, name) in infos.iter().zip(MODEL_NAMES) {
+        assert_eq!(info.name, *name);
+        assert_eq!(info.row_cost, ingress::default_row_cost(name));
+    }
+    assert_eq!(infos[0].row_len, 784);
+    assert_eq!(infos[0].out_len, 10);
+    drop(probe);
+
+    // three concurrent clients, each walking the model list round-robin
+    // from a different offset so in-flight requests mix models
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 12;
+    let mut drivers = Vec::new();
+    for c in 0..CLIENTS {
+        drivers.push(std::thread::spawn(move || -> Result<Vec<(String, Vec<f32>, Vec<f32>)>> {
+            let mut gen = WorkloadGen::new(0xE8 + c as u64);
+            let mut client = TcpClient::connect(addr)?;
+            let mut served = Vec::new();
+            for k in 0..PER_CLIENT {
+                let name = MODEL_NAMES[(c + k) % MODEL_NAMES.len()];
+                let row = ingress::sample_input(&mut gen, name)?;
+                let out = client
+                    .infer(name, &row)?
+                    .map_err(|r| anyhow::anyhow!("unexpected rejection: {r}"))?;
+                served.push((name.to_string(), row, out));
+            }
+            Ok(served)
+        }));
+    }
+    let mut served = Vec::new();
+    for d in drivers {
+        served.extend(d.join().unwrap().unwrap());
+    }
+
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    let want = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(report.totals.submitted, want);
+    assert_eq!(report.totals.served, want);
+    assert_eq!(report.totals.rejected, 0);
+    assert_eq!(report.totals.errored, 0);
+    assert_eq!(report.totals.disconnects, 0);
+    assert_eq!(report.unroutable, 0);
+    // every model saw traffic, and per-model sums equal the totals
+    for m in &report.per_model {
+        assert!(m.ingress.submitted > 0, "model {} starved", m.name);
+    }
+
+    // byte-identity against the in-process executor path: the serving
+    // kernels compute output rows independently, so however the pool
+    // batched these requests, each response must match a single-row
+    // reference run bit for bit
+    for name in MODEL_NAMES {
+        let inputs: Vec<Vec<f32>> = served
+            .iter()
+            .filter(|(n, _, _)| n == name)
+            .map(|(_, row, _)| row.clone())
+            .collect();
+        let outputs: Vec<&Vec<f32>> = served
+            .iter()
+            .filter(|(n, _, _)| n == name)
+            .map(|(_, _, out)| out)
+            .collect();
+        let mut exec = ingress::reference_executor(name).unwrap();
+        let want = ingress::reference_rows(exec.as_mut(), &inputs).unwrap();
+        for (got, want) in outputs.iter().zip(&want) {
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "model {name} drifted over TCP");
+            }
+        }
+    }
+}
+
+/// The server.rs test mock: doubles each feature. Small and instant, so
+/// the timing-sensitive tests below control latency purely through the
+/// batcher's max_wait window.
+struct Doubler;
+
+impl BatchExecutor for Doubler {
+    fn row_len(&self) -> usize {
+        3
+    }
+    fn batch_rows(&self) -> usize {
+        8
+    }
+    fn out_len(&self) -> usize {
+        3
+    }
+    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>> {
+        Ok(rows_flat.iter().map(|v| v * 2.0).collect())
+    }
+}
+
+fn doubler_registry(max_wait: Duration, cost_budget: u64, row_cost: u64) -> ModelRegistry {
+    let server = InferenceServer::start_costed(
+        8,
+        max_wait,
+        64,
+        cost_budget,
+        0,
+        1,
+        Routing::Fifo,
+        None,
+        |_| Ok(Doubler),
+        |_| Ok(None::<Doubler>),
+    )
+    .unwrap();
+    let artifact = ArtifactSpec::declared(
+        "double",
+        vec![TensorSpec::new(vec![8, 3], "float32")],
+        vec![TensorSpec::new(vec![8, 3], "float32")],
+    );
+    let mut reg = ModelRegistry::new();
+    reg.register("double", artifact, row_cost, server).unwrap();
+    reg
+}
+
+#[test]
+fn kill_client_mid_request_counts_disconnect() {
+    // max_wait far above loopback FIN latency: the request is still
+    // queued in the batcher when the client vanishes, so the session
+    // sees the FIN before it can write the response
+    let server =
+        IngressServer::serve(std::net::TcpListener::bind("127.0.0.1:0").unwrap(),
+                             doubler_registry(Duration::from_millis(200), u64::MAX, 1))
+            .unwrap();
+    let addr = server.local_addr();
+
+    let mut doomed = TcpClient::connect(addr).unwrap();
+    doomed.send_infer("double", &[1.0, 2.0, 3.0]).unwrap();
+    drop(doomed); // FIN while the request is in flight
+
+    // let the batch window close and the session observe the FIN
+    std::thread::sleep(Duration::from_millis(800));
+
+    // the pool survived: a fresh client is served normally
+    let mut alive = TcpClient::connect(addr).unwrap();
+    let out = alive.infer("double", &[4.0, 5.0, 6.0]).unwrap().unwrap();
+    assert_eq!(out, [8.0, 10.0, 12.0]);
+    drop(alive);
+
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    let m = &report.per_model[0].ingress;
+    assert_eq!(m.submitted, 2);
+    assert_eq!(m.served, 1);
+    assert_eq!(m.disconnects, 1, "the vanished client must land in disconnects: {m:?}");
+    assert_eq!(m.errored, 0);
+    // the worker computed both responses; killing the client never
+    // leaked an in-flight pool slot
+    let s = &report.per_model[0].server;
+    assert_eq!(s.submitted, 2);
+    assert_eq!(s.served, 2);
+}
+
+#[test]
+fn shutdown_with_live_connections_drains() {
+    let server = IngressServer::serve(
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap(),
+        doubler_registry(Duration::from_millis(2), u64::MAX, 1),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut active = TcpClient::connect(addr).unwrap();
+    let out = active.infer("double", &[1.0, 1.5, -2.0]).unwrap().unwrap();
+    assert_eq!(out, [2.0, 3.0, -4.0]);
+    let idle = TcpClient::connect(addr).unwrap();
+
+    // shut down while both connections are still open
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.totals.served, 1);
+
+    // both sockets see a close, not a hang
+    let mut buf = [0u8; 1];
+    let mut s = active.stream().try_clone().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "active connection must see EOF");
+    let mut s = idle.stream().try_clone().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "idle connection must see EOF");
+}
+
+#[test]
+fn admission_cost_budget_rejects_with_typed_error() {
+    // budget == row_cost: exactly one request fits the queue; while it
+    // waits out the 400 ms batch window, concurrent arrivals must be
+    // rejected with the typed queue-full code — explicit wire-level
+    // back-pressure, never a silent drop
+    let server = IngressServer::serve(
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap(),
+        doubler_registry(Duration::from_millis(400), 5, 5),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    const CONNS: usize = 6;
+    let mut drivers = Vec::new();
+    for _ in 0..CONNS {
+        drivers.push(std::thread::spawn(move || -> Result<std::result::Result<(), u16>> {
+            let mut client = TcpClient::connect(addr)?;
+            match client.infer("double", &[1.0, 2.0, 3.0])? {
+                Ok(out) => {
+                    assert_eq!(out, [2.0, 4.0, 6.0]);
+                    Ok(Ok(()))
+                }
+                Err(rej) => Ok(Err(rej.code)),
+            }
+        }));
+    }
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for d in drivers {
+        match d.join().unwrap().unwrap() {
+            Ok(()) => ok += 1,
+            Err(code) => {
+                assert_eq!(
+                    code,
+                    wire::WireError::QueueFull { model: String::new() }.code(),
+                    "rejections must carry the stable queue-full code"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(ok >= 1, "the first request must be admitted (empty-queue exemption)");
+    assert!(rejected >= 1, "an over-budget burst must see explicit rejections");
+    assert_eq!(ok + rejected, CONNS as u64);
+
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    let m = &report.per_model[0].ingress;
+    assert_eq!(m.submitted, CONNS as u64);
+    assert_eq!(m.served, ok);
+    assert_eq!(m.rejected, rejected);
+}
+
+#[test]
+fn unknown_model_and_wrong_arity_are_typed_rejections() {
+    let server = IngressServer::serve(
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap(),
+        doubler_registry(Duration::from_millis(2), u64::MAX, 1),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut client = TcpClient::connect(addr).unwrap();
+
+    // unknown model: typed, lists the valid set, session survives
+    let rej = client.infer("mystery", &[1.0]).unwrap().unwrap_err();
+    let unknown = wire::WireError::UnknownModel { name: String::new(), have: String::new() };
+    assert_eq!(rej.code, unknown.code());
+    assert!(rej.message.contains("mystery") && rej.message.contains("double"), "got: {rej}");
+
+    // wrong arity: typed, names the expected arity, session survives
+    let rej = client.infer("double", &[1.0]).unwrap().unwrap_err();
+    assert_eq!(
+        rej.code,
+        wire::WireError::WrongArity { model: String::new(), got: 0, want: 0 }.code()
+    );
+    assert!(rej.message.contains('3'), "got: {rej}");
+
+    // and the same connection still serves real traffic
+    let out = client.infer("double", &[1.0, 2.0, 3.0]).unwrap().unwrap();
+    assert_eq!(out, [2.0, 4.0, 6.0]);
+    drop(client);
+
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.unroutable, 1, "unknown-model requests are tallied outside the accounts");
+    let m = &report.per_model[0].ingress;
+    assert_eq!(m.submitted, 2); // the arity miss and the served request
+    assert_eq!(m.served, 1);
+    assert_eq!(m.rejected, 1);
+}
+
+#[test]
+fn broken_framing_is_rejected_then_closed() {
+    let server = IngressServer::serve(
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap(),
+        doubler_registry(Duration::from_millis(2), u64::MAX, 1),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // bad magic: typed rejection, then the server hangs up (the byte
+    // stream can no longer be trusted)
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"XX\x01\x02\x00\x00\x00\x00").unwrap();
+    let mut payload = Vec::new();
+    match wire::read_frame(&mut s, &mut payload).unwrap() {
+        wire::ReadOutcome::Frame { kind } => assert_eq!(kind, wire::kind::REJECTED),
+        other => panic!("unexpected {other:?}"),
+    }
+    let (code, _msg) = wire::decode_rejected(&payload).unwrap();
+    assert_eq!(code, wire::WireError::BadMagic { got: [0, 0] }.code());
+    assert_eq!(wire::read_frame(&mut s, &mut payload).unwrap(), wire::ReadOutcome::Eof);
+
+    // oversize declaration: typed rejection from the header alone
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&wire::MAGIC);
+    hdr.push(wire::VERSION);
+    hdr.push(wire::kind::INFER);
+    hdr.extend_from_slice(&(wire::MAX_PAYLOAD + 1).to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    match wire::read_frame(&mut s, &mut payload).unwrap() {
+        wire::ReadOutcome::Frame { kind } => assert_eq!(kind, wire::kind::REJECTED),
+        other => panic!("unexpected {other:?}"),
+    }
+    let (code, _msg) = wire::decode_rejected(&payload).unwrap();
+    assert_eq!(code, wire::WireError::Oversize { len: 0, max: 0 }.code());
+    assert_eq!(wire::read_frame(&mut s, &mut payload).unwrap(), wire::ReadOutcome::Eof);
+
+    // neither episode touched any account
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.totals.submitted, 0);
+    assert_eq!(report.unroutable, 0);
+}
