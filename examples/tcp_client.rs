@@ -7,18 +7,21 @@
 //!   cargo run --release -- serve --listen 127.0.0.1:7878 &
 //!   cargo run --release --example tcp_client -- 127.0.0.1:7878
 //!
-//! Steps: (1) connect and LIST the advertised model table (name, arity,
-//! admission cost); (2) send one INFER per model — dense 784→10, conv
-//! NCHW 1×28×28, complex QPSK 64 — and print the response shape;
-//! (3) show a typed rejection: an unknown model name comes back as a
-//! `REJECTED` frame naming the valid set, never a silent drop.
+//! Steps: (1) connect and LIST the advertised model table (name, dtype,
+//! arity, admission cost); (2) send one INFER per model — dense 784→10,
+//! conv NCHW 1×28×28, complex QPSK 64, and the quantized qnn lane,
+//! whose int8 row travels as tagged int64 and whose exact logits are
+//! argmaxed into a class right here; (3) show a typed rejection: an
+//! unknown model name comes back as a `REJECTED` frame naming the valid
+//! set, never a silent drop.
 
 use anyhow::Result;
 
 use fairsquare::coordinator::WorkloadGen;
 use fairsquare::ingress::{
-    self, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
+    self, wire, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
 };
+use fairsquare::qnn::argmax_logits;
 
 fn main() -> Result<()> {
     // an explicit ADDR argument targets a running server; with none, we
@@ -46,29 +49,52 @@ fn main() -> Result<()> {
     let models = client.list_models()?;
     println!("connected to {addr}; {} models advertised:", models.len());
     for m in &models {
-        println!("  {:<8} {:>5} -> {:<5}  cost {}", m.name, m.row_len, m.out_len, m.row_cost);
+        println!(
+            "  {:<8} {:<7} {:>5} -> {:<5}  cost {}",
+            m.name,
+            wire::dtype_name(m.dtype),
+            m.row_len,
+            m.out_len,
+            m.row_cost
+        );
     }
 
     // (2) one inference per model, inputs from the deterministic workload
-    // generator the benches use
+    // generator the benches use; each row travels under its model's
+    // dtype tag, so the float lanes and the quantized lane share one
+    // connection
     let mut gen = WorkloadGen::new(2026);
     for m in &models {
-        let row = ingress::sample_input(&mut gen, &m.name)?;
-        match client.infer(&m.name, &row)? {
-            Ok(out) => println!(
-                "{:<8} OK   {} features in, {} out (first: {:.4})",
-                m.name,
-                row.len(),
-                out.len(),
-                out[0]
-            ),
-            Err(rej) => println!("{:<8} {rej}", m.name),
+        if wire::dtype_name(m.dtype) == "int64" {
+            let row = ingress::sample_input_i64(&mut gen, &m.name)?;
+            match client.infer(&m.name, &row)? {
+                Ok(out) => println!(
+                    "{:<8} OK   {} int8 features in, {} exact logits out -> class {}",
+                    m.name,
+                    row.len(),
+                    out.len(),
+                    argmax_logits(&out)
+                ),
+                Err(rej) => println!("{:<8} {rej}", m.name),
+            }
+        } else {
+            let row = ingress::sample_input(&mut gen, &m.name)?;
+            match client.infer(&m.name, &row)? {
+                Ok(out) => println!(
+                    "{:<8} OK   {} features in, {} out (first: {:.4})",
+                    m.name,
+                    row.len(),
+                    out.len(),
+                    out[0]
+                ),
+                Err(rej) => println!("{:<8} {rej}", m.name),
+            }
         }
     }
 
     // (3) rejections are typed frames, not dropped connections: the
     // reply names the valid set and the session stays usable
-    match client.infer("mystery", &[0.0; 4])? {
+    match client.infer("mystery", &[0.0f32; 4])? {
         Ok(_) => println!("mystery  unexpectedly served?!"),
         Err(rej) => println!("mystery  {rej}"),
     }

@@ -32,9 +32,12 @@ use anyhow::Result;
 
 use fairsquare::benchkit::{f, CountingAlloc, JsonReport, Measurement, Table};
 use fairsquare::coordinator::{Routing, WorkloadGen};
-use fairsquare::ingress::{
-    self, IngressServer, ModelRegistry, NativeServing, TcpClient, MODEL_NAMES,
-};
+use fairsquare::ingress::{self, IngressServer, ModelRegistry, NativeServing, TcpClient};
+
+/// The f32 serving lanes this bench soaks. The qnn (int64) lane has its
+/// own bench (`benches/qnn_serving.rs`) with its own allocation audit
+/// and oracle, so it is deliberately not in this list.
+const F32_MODELS: &[&str] = &["dense", "conv", "complex"];
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
@@ -87,7 +90,7 @@ fn engine_allocs_leg(report: &mut JsonReport) -> u64 {
         "E8a — engine-side steady-state heap allocations (the served models)",
         &["model", "rounds", "allocations"],
     );
-    for &name in MODEL_NAMES {
+    for &name in F32_MODELS {
         let mut exec = ingress::reference_executor(name).unwrap();
         let (batch, row_len) = (exec.batch_rows(), exec.row_len());
         // one full batch of model-shaped rows
@@ -120,7 +123,7 @@ fn engine_allocs_leg(report: &mut JsonReport) -> u64 {
         &m,
         &[
             ("allocs_steady_state", total as f64),
-            ("models", MODEL_NAMES.len() as f64),
+            ("models", F32_MODELS.len() as f64),
             ("rounds", 3.0),
         ],
     );
@@ -143,7 +146,7 @@ fn tcp_soak_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> 
         max_wait: Duration::from_millis(2),
     };
     let mut reg = ModelRegistry::new();
-    for name in MODEL_NAMES {
+    for name in F32_MODELS {
         ingress::register_native(&mut reg, name, &cfg)?;
     }
     let server = IngressServer::bind("127.0.0.1:0", reg)?;
@@ -154,7 +157,7 @@ fn tcp_soak_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> 
     {
         let mut warm = TcpClient::connect(addr)?;
         let mut gen = WorkloadGen::new(0xE8);
-        for &name in MODEL_NAMES {
+        for &name in F32_MODELS {
             let row = ingress::sample_input(&mut gen, name)?;
             warm.infer(name, &row)?
                 .map_err(|r| anyhow::anyhow!("warm-up rejected: {r}"))?;
@@ -171,10 +174,10 @@ fn tcp_soak_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> 
                 let mut client = TcpClient::connect(addr)?;
                 let mut served = Vec::with_capacity(n);
                 for k in 0..n {
-                    let mi = (c + k) % MODEL_NAMES.len();
-                    let row = ingress::sample_input(&mut gen, MODEL_NAMES[mi])?;
+                    let mi = (c + k) % F32_MODELS.len();
+                    let row = ingress::sample_input(&mut gen, F32_MODELS[mi])?;
                     let out = client
-                        .infer(MODEL_NAMES[mi], &row)?
+                        .infer(F32_MODELS[mi], &row)?
                         .map_err(|r| anyhow::anyhow!("soak request rejected: {r}"))?;
                     served.push((mi, row, out));
                 }
@@ -195,7 +198,7 @@ fn tcp_soak_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> 
 
     // byte-identity vs the in-process path, for every response
     let mut mismatches = 0u64;
-    for (mi, name) in MODEL_NAMES.iter().enumerate() {
+    for (mi, name) in F32_MODELS.iter().enumerate() {
         let inputs: Vec<Vec<f32>> = served
             .iter()
             .filter(|(m, _, _)| *m == mi)

@@ -1,0 +1,372 @@
+//! E9: exact int8 quantized serving benchmarks — the `--model qnn`
+//! pipeline from the fused engine out to the TCP front door.
+//!
+//! Always runs and always writes `BENCH_qnn_serving.json` (the artifact
+//! is written *before* any gate asserts, so a failing gate still leaves
+//! the numbers behind for diagnosis):
+//!
+//! * E9a — steady-state allocation audit: the exact executor the ingress
+//!   registers for `qnn` (same model, same construction as
+//!   `register_native`) runs warmed int8 batches — untiled `run_into`
+//!   AND the §3.3 `prepare_tiles`/`run_tile_into` fork path — under the
+//!   counting global allocator; `allocs_steady_state` is gated to 0.
+//!   This is the fused-pipeline claim measured, not asserted from code
+//!   reading: per-layer GEMMs land in workspace checkouts, the
+//!   requantisation happens in place, and no intermediate activation
+//!   matrix ever touches the heap.
+//! * E9b — fused square pipeline vs the scalar multiplier oracle:
+//!   batched rows/s for `PreparedQnn::forward_into` against the
+//!   per-call-allocating `QMlp::forward(…, Direct)` reference, with the
+//!   logits gated byte-identical (the exact-integer guarantee — the
+//!   speed comparison is only honest because the results are the same
+//!   bits). The throughput ratio is reported, not gated: on scalar CPUs
+//!   the square trick trades multiplies for squares+adds; the win the
+//!   paper claims is silicon area, which the gate-count benches carry.
+//! * E9c — qnn over real TCP: `register_native(…, "qnn", …)` behind an
+//!   `IngressServer`, concurrent clients submitting int64 rows down the
+//!   dtype-tagged v2 wire. Gates: every response byte-identical to the
+//!   scalar oracle (`reference_rows_qnn`), exact conservation
+//!   (`submitted == served + rejected + errored + disconnects`), zero
+//!   disconnects/errors.
+//!
+//! `--quick` (as passed by `scripts/verify.sh`) shrinks request counts,
+//! not coverage: every leg still runs and the JSON artifact is still
+//! written with every field.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use fairsquare::benchkit::{f, fmt_ns, Bench, CountingAlloc, JsonReport, Measurement, Table};
+use fairsquare::coordinator::{BatchExecutor, QnnExecutor, Routing, TilePrep, WorkloadGen};
+use fairsquare::ingress::{self, IngressServer, ModelRegistry, NativeServing, TcpClient};
+use fairsquare::linalg::engine::EngineConfig;
+use fairsquare::linalg::qnn::QArith;
+use fairsquare::linalg::Matrix;
+use fairsquare::qnn::PreparedQnn;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    let mut report = JsonReport::new("qnn_serving");
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    // the allocation audit runs first, while the process is still
+    // single-threaded, so the counting allocator sees only this harness
+    let allocs = fused_allocs_leg(&mut report);
+    if let Some(fail) = throughput_leg(quick, &mut report) {
+        gate_failures.push(fail);
+    }
+    match tcp_leg(quick, &mut report) {
+        Ok(Some(fail)) => gate_failures.push(fail),
+        Ok(None) => {}
+        Err(e) => gate_failures.push(format!("qnn TCP leg errored: {e:#}")),
+    }
+
+    // write the artifact before enforcing anything
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_qnn_serving.json: {e}"),
+    }
+
+    if allocs != 0 {
+        gate_failures.push(format!(
+            "allocation gate failed: the warmed fused qnn pipeline performed \
+             {allocs} heap allocations, want 0"
+        ));
+    }
+    assert!(
+        gate_failures.is_empty(),
+        "qnn serving gates failed:\n  {}",
+        gate_failures.join("\n  ")
+    );
+}
+
+/// One full batch of int8-ranged rows for the served model shape.
+fn quant_batch(gen: &mut WorkloadGen, rows: usize) -> Vec<i64> {
+    let mut flat = Vec::new();
+    for _ in 0..rows {
+        flat.extend_from_slice(&gen.quant_mnist_like());
+    }
+    flat
+}
+
+/// E9a — the fused pipeline stays allocation-free at steady state, in
+/// exactly the executor shape `register_native` serves: untiled batches
+/// through `run_into`, then the §3.3 fork through `prepare_tiles` +
+/// `run_tile_into`, all with reused buffers and a single-threaded engine
+/// (the scoped threaded driver allocates per spawn by construction).
+fn fused_allocs_leg(report: &mut JsonReport) -> u64 {
+    let batch = 8usize;
+    let mlp = ingress::qnn_model();
+    let (prepared, _) = PreparedQnn::new_shared(&mlp);
+    let mut exec =
+        QnnExecutor::from_shared(prepared, batch, EngineConfig::with_threads(1));
+    let mut gen = WorkloadGen::new(0xE9A);
+    let flat = quant_batch(&mut gen, batch);
+
+    // warm-up populates every arena and output buffer
+    let mut out = Vec::new();
+    exec.run_into(&flat, &mut out).unwrap();
+    exec.run_into(&flat, &mut out).unwrap();
+    let want = out.clone();
+    let warm_grows = exec.workspace_grows();
+
+    let before = ALLOC.allocations();
+    for _ in 0..3 {
+        exec.run_into(&flat, &mut out).unwrap();
+    }
+    let allocs = ALLOC.allocations() - before;
+    // and reuse must not have changed any logit
+    exec.run_into(&flat, &mut out).unwrap();
+    assert_eq!(out, want, "buffer reuse changed the qnn logits");
+    assert_eq!(exec.workspace_grows(), warm_grows, "arena grew past warm-up");
+
+    // the tiled path: a warmed fork of the same batch must be
+    // allocation-free too, and its tile partition must reassemble the
+    // untiled logits byte-for-byte
+    let out_len = exec.out_len();
+    let mut prep = TilePrep::<i64>::default();
+    let mut tile_out = vec![0i64; batch * out_len];
+    let tiles = [(0usize, 3usize), (3, 8)];
+    for _ in 0..2 {
+        exec.prepare_tiles(&flat, batch, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            exec.run_tile_into(&prep, i0, i1, &mut tile_out[i0 * out_len..i1 * out_len])
+                .unwrap();
+        }
+    }
+    let before = ALLOC.allocations();
+    for _ in 0..3 {
+        exec.prepare_tiles(&flat, batch, &mut prep).unwrap();
+        for (i0, i1) in tiles {
+            exec.run_tile_into(&prep, i0, i1, &mut tile_out[i0 * out_len..i1 * out_len])
+                .unwrap();
+        }
+    }
+    let tiled_allocs = ALLOC.allocations() - before;
+    assert_eq!(tile_out, want, "tiled qnn logits diverged from run_into");
+
+    let mut t = Table::new(
+        "E9a — steady-state heap allocations per warmed int8 batch",
+        &["path", "rounds", "allocations"],
+    );
+    t.row(&["fused pipeline (run_into)".into(), "3".into(), allocs.to_string()]);
+    t.row(&["tiled fork (prepare + 2 tiles)".into(), "3".into(), tiled_allocs.to_string()]);
+    t.print();
+
+    let m = Measurement { iters: 1, mean_ns: 0.0, median_ns: 0.0, stddev_ns: 0.0, min_ns: 0.0 };
+    report.case(
+        "fused_allocs",
+        &m,
+        &[
+            ("allocs_steady_state", (allocs + tiled_allocs) as f64),
+            ("allocs_steady_state_untiled", allocs as f64),
+            ("allocs_steady_state_tiled", tiled_allocs as f64),
+            ("rounds", 3.0),
+        ],
+    );
+    allocs + tiled_allocs
+}
+
+/// E9b — fused square pipeline vs the scalar multiplier oracle, same
+/// model, same batches, logits gated byte-identical. Returns a
+/// gate-failure message instead of asserting so the JSON is written
+/// first.
+fn throughput_leg(quick: bool, report: &mut JsonReport) -> Option<String> {
+    let batch = 32usize;
+    let mlp = ingress::qnn_model();
+    let (prepared, _) = PreparedQnn::new_shared(&mlp);
+    let mut exec =
+        QnnExecutor::from_shared(prepared, batch, EngineConfig::with_threads(1));
+    let mut gen = WorkloadGen::new(0xE9B);
+    let flat = quant_batch(&mut gen, batch);
+    let x = Matrix::from_vec(batch, exec.row_len(), flat.clone());
+
+    // the exactness gate the comparison rests on
+    let mut fused = Vec::new();
+    exec.run_into(&flat, &mut fused).unwrap();
+    let (want, _) = mlp.forward(&x, QArith::Direct);
+    let exact = fused == want.data();
+
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut out_buf = fused.clone();
+    let mf = bench.run(|| exec.run_into(&flat, &mut out_buf).unwrap());
+    let ms = bench.run(|| {
+        let _ = mlp.forward(&x, QArith::Direct);
+    });
+    let fused_rps = batch as f64 / (mf.mean_ns * 1e-9);
+    let scalar_rps = batch as f64 / (ms.mean_ns * 1e-9);
+    let ratio = fused_rps / scalar_rps;
+
+    let mut t = Table::new(
+        "E9b — fused square pipeline vs scalar oracle (784-64-10, batch 32)",
+        &["path", "time/batch", "rows/s", "bit-exact"],
+    );
+    t.row(&["fused square engine".into(), fmt_ns(mf.mean_ns), f(fused_rps, 0), exact.to_string()]);
+    t.row(&["scalar direct MACs".into(), fmt_ns(ms.mean_ns), f(scalar_rps, 0), exact.to_string()]);
+    t.print();
+    println!(
+        "\nfused pipeline is {ratio:.2}× the scalar oracle's rows/s \
+         (reported, not gated — the paper's win is area, not CPU time)"
+    );
+
+    report.case(
+        "fused_vs_scalar",
+        &mf,
+        &[
+            ("batch", batch as f64),
+            ("fused_rows_per_s", fused_rps),
+            ("scalar_rows_per_s", scalar_rps),
+            ("fused_vs_scalar", ratio),
+            ("bit_exact", if exact { 1.0 } else { 0.0 }),
+        ],
+    );
+    if exact {
+        None
+    } else {
+        Some("exactness gate failed: fused qnn logits differ from the scalar oracle".into())
+    }
+}
+
+/// E9c — qnn over real loopback sockets: int64 rows down the dtype-tagged
+/// wire, every response gated byte-identical to the scalar oracle, the
+/// front-door conservation law field-exact. Returns a gate-failure
+/// message instead of asserting so the JSON is written first.
+fn tcp_leg(quick: bool, report: &mut JsonReport) -> Result<Option<String>> {
+    let clients = 2usize;
+    let requests = if quick { 128 } else { 512 };
+
+    let cfg = NativeServing {
+        workers: 2,
+        routing: Routing::Steal,
+        shadow_every: 0,
+        engine_threads: 1,
+        queue_depth: requests.max(64),
+        cost_budget: u64::MAX,
+        max_wait: Duration::from_millis(2),
+    };
+    let mut reg = ModelRegistry::new();
+    ingress::register_native(&mut reg, "qnn", &cfg)?;
+    let server = IngressServer::bind("127.0.0.1:0", reg)?;
+    let addr = server.local_addr();
+
+    // warm round trip: connection setup and first-batch effects stay off
+    // the soak clock
+    {
+        let mut warm = TcpClient::connect(addr)?;
+        let mut gen = WorkloadGen::new(0xE9);
+        let row = gen.quant_mnist_like();
+        warm.infer("qnn", &row)?
+            .map_err(|r| anyhow::anyhow!("warm-up rejected: {r}"))?;
+    }
+
+    let t0 = Instant::now();
+    let mut drivers = Vec::new();
+    for c in 0..clients {
+        let n = requests / clients + usize::from(c < requests % clients);
+        drivers.push(std::thread::spawn(
+            move || -> Result<Vec<(Vec<i64>, Vec<i64>)>> {
+                let mut gen = WorkloadGen::new(0xE9C + c as u64);
+                let mut client = TcpClient::connect(addr)?;
+                let mut served = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let row = gen.quant_mnist_like();
+                    let out = client
+                        .infer("qnn", &row)?
+                        .map_err(|r| anyhow::anyhow!("qnn request rejected: {r}"))?;
+                    served.push((row, out));
+                }
+                Ok(served)
+            },
+        ));
+    }
+    let mut served: Vec<(Vec<i64>, Vec<i64>)> = Vec::with_capacity(requests);
+    for d in drivers {
+        let rows = d.join().map_err(|_| anyhow::anyhow!("a qnn client panicked"))??;
+        served.extend(rows);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = requests as f64 / wall;
+
+    let report_final = server.shutdown()?;
+    let mut fail = report_final.check_conservation().err().map(|e| format!("{e:#}"));
+
+    // byte-identity vs the scalar oracle, for every response
+    let inputs: Vec<Vec<i64>> = served.iter().map(|(row, _)| row.clone()).collect();
+    let want = ingress::reference_rows_qnn(&inputs)?;
+    let mismatches = served
+        .iter()
+        .zip(&want)
+        .filter(|((_, got), want)| got != *want)
+        .count() as u64;
+    if mismatches > 0 && fail.is_none() {
+        fail = Some(format!(
+            "byte-identity gate failed: {mismatches} qnn TCP responses differ \
+             from the scalar oracle"
+        ));
+    }
+
+    // +1 for the warm-up round trip
+    let totals = report_final.totals;
+    if fail.is_none() && totals.served != requests as u64 + 1 {
+        fail = Some(format!(
+            "qnn conservation failed: served {} != {} requests + 1 warm-up",
+            totals.served, requests
+        ));
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "E9c — qnn over TCP ({requests} int64 requests, {clients} client \
+             connections, 2 workers, steal on)"
+        ),
+        &["model", "submitted", "served", "mean batch", "p50 µs", "p99 µs"],
+    );
+    for m in &report_final.per_model {
+        t.row(&[
+            m.name.clone(),
+            m.ingress.submitted.to_string(),
+            m.ingress.served.to_string(),
+            f(m.server.mean_batch, 2),
+            f(m.server.latency.p50_us, 0),
+            f(m.server.latency.p99_us, 0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nqnn soak: {rps:.0} rows/s sustained over TCP ({mismatches} byte \
+         mismatches, {} disconnects, {} errors)",
+        totals.disconnects, totals.errored
+    );
+
+    let m = Measurement {
+        iters: 1,
+        mean_ns: wall * 1e9 / requests as f64,
+        median_ns: 0.0,
+        stddev_ns: 0.0,
+        min_ns: 0.0,
+    };
+    report.case(
+        "tcp_qnn",
+        &m,
+        &[
+            ("requests", requests as f64),
+            ("clients", clients as f64),
+            ("rows_per_s", rps),
+            ("byte_mismatches", mismatches as f64),
+            ("submitted", totals.submitted as f64),
+            ("served", totals.served as f64),
+            ("rejected", totals.rejected as f64),
+            ("errored", totals.errored as f64),
+            ("disconnects", totals.disconnects as f64),
+            ("unroutable", report_final.unroutable as f64),
+            ("conserved", if fail.is_none() { 1.0 } else { 0.0 }),
+        ],
+    );
+
+    Ok(fail)
+}

@@ -139,6 +139,13 @@ impl Registry {
                     "ingress/wire.rs",
                     vec!["frame_into", "encode_infer_into", "encode_output_into"],
                 ),
+                (
+                    // the fused qnn pipeline: per-layer GEMMs out of
+                    // workspace checkouts, requantisation in place — the
+                    // `qnn_serving` bench pins the steady state to zero
+                    "qnn/mod.rs",
+                    vec!["forward_into", "forward_tile_into", "requantise_rows"],
+                ),
             ],
             lock_files: vec![
                 "coordinator/server.rs",

@@ -33,9 +33,11 @@
 //! because its engine is not `Send`) and the native in-process path
 //! ([`native`]) running the blocked multi-threaded square-kernel engine
 //! with per-model cached corrections — no external runtime at all. The
-//! native family serves three model kinds: dense (one linear layer), conv
-//! (a CNN filter bank via the im2col lowering) and complex (plane-split
-//! CPM3 matmul) — each with a direct-multiplier shadow twin.
+//! native family serves four model kinds: dense (one linear layer), conv
+//! (a CNN filter bank via the im2col lowering), complex (plane-split
+//! CPM3 matmul) and qnn (the exact int8 multi-layer pipeline, served as
+//! `BatchExecutor<i64>` over the [`ServeScalar`] dtype abstraction) —
+//! each with a direct-multiplier shadow twin.
 
 pub mod batcher;
 pub mod metrics;
@@ -50,10 +52,11 @@ pub use metrics::{
 };
 pub use native::{
     ComplexMatmulDirectExecutor, ComplexMatmulExecutor, Conv2dDirectExecutor,
-    Conv2dExecutor, DirectKernelExecutor, SkewedKernelExecutor, SquareKernelExecutor,
+    Conv2dExecutor, DirectKernelExecutor, QnnExecutor, QnnScalarExecutor,
+    SkewedKernelExecutor, SquareKernelExecutor,
 };
 pub use server::{
-    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServerStats, SubmitError,
-    TileConfig, TilePrep, WorkerStats, QUEUE_FULL,
+    BatchExecutor, InferenceServer, PjrtExecutor, Routing, ServeScalar, ServerStats,
+    SubmitError, TileConfig, TilePrep, WorkerStats, QUEUE_FULL,
 };
 pub use workload::{is_heavy_row, WorkloadGen, SKEW_HEAVY_MARKER};

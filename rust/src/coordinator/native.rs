@@ -27,6 +27,13 @@
 //!   fixed complex weight matrix via the three-pass CPM3 lowering
 //!   ([`PreparedCpm3`]). [`ComplexMatmulDirectExecutor`] is the 4-mult
 //!   schoolbook twin.
+//! * [`QnnExecutor`] — the exact int8 path (`BatchExecutor<i64>`): a
+//!   whole quantized MLP ([`PreparedQnn`]) served as one fused pipeline,
+//!   per-layer §3 corrections hoisted once per pool, requantisation in
+//!   place, logits bit-exact vs the scalar
+//!   [`QMlp::forward`](crate::linalg::qnn::QMlp::forward) oracle that
+//!   [`QnnScalarExecutor`] runs as the shadow twin (multiplier
+//!   arithmetic — a genuinely independent check).
 //!
 //! *Every* executor — hot path and shadow twin alike — owns an
 //! [`EngineWorkspace`]: every scratch buffer of the lowering (input
@@ -55,7 +62,9 @@ use crate::linalg::engine::{
     matmul_square_prepared_tile_into, row_corrections_into, CPlanes, ConvSpec,
     EngineConfig, EngineWorkspace, PreparedB, PreparedConvBank, PreparedCpm3,
 };
+use crate::linalg::qnn::{QArith, QMlp};
 use crate::linalg::Matrix;
+use crate::qnn::PreparedQnn;
 
 use super::server::{BatchExecutor, TilePrep};
 use super::workload::is_heavy_row;
@@ -890,6 +899,210 @@ impl BatchExecutor for ComplexMatmulDirectExecutor {
     }
 }
 
+/// The exact int8 quantized-inference executor (`BatchExecutor<i64>`):
+/// each request row is `in_features` int8-ranged activations carried in
+/// i64 lanes, the response row the model's raw logits — bit-exact, per
+/// the §3 integer-domain guarantee. The whole multi-layer pipeline runs
+/// fused out of this worker's [`EngineWorkspace`]: per-layer GEMM into a
+/// checkout, requantisation in place, buffer handed to the next layer —
+/// no intermediate activation matrix on the heap, so a warmed batch
+/// performs zero executor-side allocations (single-threaded engine
+/// config). The prepared model lives behind an `Arc` so a sharded pool
+/// pays every layer's `N·P` correction squares exactly once.
+pub struct QnnExecutor {
+    model: Arc<PreparedQnn>,
+    batch_rows: usize,
+    cfg: EngineConfig,
+    ws: EngineWorkspace<i64>,
+}
+
+impl QnnExecutor {
+    /// Prepare `mlp` (computing every layer's cached corrections) for
+    /// fixed-size batches of `batch_rows`, one engine worker per core.
+    pub fn new(mlp: &QMlp, batch_rows: usize) -> Self {
+        let (model, _prep_ops) = PreparedQnn::new_shared(mlp);
+        Self::from_shared(model, batch_rows, EngineConfig::threaded())
+    }
+
+    /// Build over a model some other owner already prepared — the pool
+    /// path: every worker clones the `Arc`, so `PreparedQnn::new` runs
+    /// exactly once no matter how many workers serve the model.
+    pub fn from_shared(
+        model: Arc<PreparedQnn>,
+        batch_rows: usize,
+        cfg: EngineConfig,
+    ) -> Self {
+        assert!(batch_rows >= 1, "batch_rows must be positive");
+        Self { model, batch_rows, cfg, ws: EngineWorkspace::new() }
+    }
+
+    /// Checkouts that had to allocate — the workspace's warm-up count,
+    /// exposed so the qnn bench can pin the steady state to zero.
+    pub fn workspace_grows(&self) -> u64 {
+        self.ws.grows()
+    }
+
+    fn check_len(&self, rows_flat: &[i64]) -> Result<()> {
+        let expect = self.batch_rows * self.model.in_features();
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl BatchExecutor<i64> for QnnExecutor {
+    fn row_len(&self) -> usize {
+        self.model.in_features()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.model.out_features()
+    }
+
+    fn run(&mut self, rows_flat: &[i64]) -> Result<Vec<i64>> {
+        let mut out = Vec::new();
+        self.run_into(rows_flat, &mut out)?;
+        Ok(out)
+    }
+
+    fn run_into(&mut self, rows_flat: &[i64], out: &mut Vec<i64>) -> Result<()> {
+        self.check_len(rows_flat)?;
+        let mut x = self.ws.checkout(rows_flat.len());
+        x.copy_from_slice(rows_flat);
+        let x = Matrix::from_vec(self.batch_rows, self.model.in_features(), x);
+        let ops = self.model.forward_into(&x, &self.cfg, &mut self.ws, out);
+        debug_assert_eq!(
+            ops,
+            self.model.forward_ledger(self.batch_rows),
+            "hoisted qnn ledger drifted from per-element counting"
+        );
+        self.ws.give_back(x.into_data());
+        Ok(())
+    }
+
+    fn supports_tiles(&self) -> bool {
+        true
+    }
+
+    fn prepare_tiles(
+        &mut self,
+        rows_flat: &[i64],
+        rows: usize,
+        prep: &mut TilePrep<i64>,
+    ) -> Result<()> {
+        let n = self.model.in_features();
+        if rows_flat.len() != rows * n {
+            return Err(anyhow!(
+                "tiled batch has {} values, {rows} rows of {n} expected",
+                rows_flat.len()
+            ));
+        }
+        let mut buf = prep.take_buf(0);
+        buf.clear();
+        buf.extend_from_slice(rows_flat);
+        prep.a[0] = Matrix::from_vec(rows, n, buf);
+        // the §3.3 hoist: layer-0 full-row corrections computed ONCE per
+        // request; inner layers hoist tile-locally inside the pipeline
+        prep.sa[0].clear();
+        prep.sa[0].resize(rows, 0);
+        row_corrections_into(&prep.a[0], &mut prep.sa[0]);
+        prep.rows = rows;
+        Ok(())
+    }
+
+    fn run_tile_into(
+        &mut self,
+        prep: &TilePrep<i64>,
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [i64],
+    ) -> Result<()> {
+        let ops = self.model.forward_tile_into(
+            &prep.a[0],
+            &prep.sa[0],
+            i0,
+            i1,
+            out_tile,
+            &self.cfg,
+            &mut self.ws,
+        );
+        debug_assert_eq!(
+            ops,
+            self.model.tile_ledger(i1 - i0),
+            "hoisted qnn tile ledger drifted"
+        );
+        Ok(())
+    }
+}
+
+/// Scalar oracle twin of [`QnnExecutor`]: the reference
+/// [`QMlp::forward`] with **multiplier** arithmetic ([`QArith::Direct`])
+/// — a genuinely independent path (ordinary MACs vs fused square
+/// kernels) whose logits must be byte-identical, per the exact-integer
+/// guarantee. This is the shadow executor behind `--model qnn` and the
+/// oracle every qnn bit-exactness test compares against.
+pub struct QnnScalarExecutor {
+    mlp: Arc<QMlp>,
+    batch_rows: usize,
+    ws: EngineWorkspace<i64>,
+}
+
+impl QnnScalarExecutor {
+    pub fn new(mlp: Arc<QMlp>, batch_rows: usize) -> Self {
+        assert!(batch_rows >= 1, "batch_rows must be positive");
+        assert!(!mlp.layers.is_empty(), "empty model");
+        Self { mlp, batch_rows, ws: EngineWorkspace::new() }
+    }
+}
+
+impl BatchExecutor<i64> for QnnScalarExecutor {
+    fn row_len(&self) -> usize {
+        self.mlp.layers[0].w.rows
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+
+    fn out_len(&self) -> usize {
+        self.mlp.layers[self.mlp.layers.len() - 1].w.cols
+    }
+
+    fn run(&mut self, rows_flat: &[i64]) -> Result<Vec<i64>> {
+        let mut out = Vec::new();
+        self.run_into(rows_flat, &mut out)?;
+        Ok(out)
+    }
+
+    fn run_into(&mut self, rows_flat: &[i64], out: &mut Vec<i64>) -> Result<()> {
+        let expect = self.batch_rows * self.row_len();
+        if rows_flat.len() != expect {
+            return Err(anyhow!(
+                "batch has {} values, executor wants {expect}",
+                rows_flat.len()
+            ));
+        }
+        let mut x = self.ws.checkout(rows_flat.len());
+        x.copy_from_slice(rows_flat);
+        let x = Matrix::from_vec(self.batch_rows, self.row_len(), x);
+        // the reference forward allocates internally — it is the oracle,
+        // not the hot path; only sampled shadow batches pay it
+        let (z, _ops) = self.mlp.forward(&x, QArith::Direct);
+        self.ws.give_back(x.into_data());
+        out.clear();
+        out.extend_from_slice(z.data());
+        Ok(())
+    }
+}
+
 /// Cost-model wrapper for scheduling experiments: a real
 /// [`SquareKernelExecutor`] whose batch is re-run `heavy_cost` times
 /// whenever any of its rows carries the heavy marker
@@ -1283,6 +1496,57 @@ mod tests {
             }
             assert_eq!(skewed.run(&batch).unwrap(), plain.run(&batch).unwrap());
         }
+    }
+
+    #[test]
+    fn qnn_executor_is_bit_exact_vs_scalar_oracle_untiled_and_tiled() {
+        let mlp = QMlp::random(&[40, 24, 10], 0x70);
+        let shared = Arc::new(mlp.clone());
+        let (prep, _) = PreparedQnn::new_shared(&mlp);
+        let batch = 6;
+        let mut sq = QnnExecutor::from_shared(prep, batch, EngineConfig::with_threads(2));
+        let mut oracle = QnnScalarExecutor::new(shared, batch);
+        assert_eq!(sq.row_len(), 40);
+        assert_eq!(sq.out_len(), 10);
+        assert_eq!(oracle.row_len(), 40);
+        assert_eq!(oracle.out_len(), 10);
+
+        let mut rng = Rng::new(0x71);
+        let rows: Vec<i64> = (0..batch * 40).map(|_| rng.i64_in(0, 127)).collect();
+        let want = oracle.run(&rows).unwrap();
+        assert_eq!(sq.run(&rows).unwrap(), want, "fused pipeline drifted");
+
+        // the §3.3 fork path must reassemble the same bytes
+        assert!(sq.supports_tiles());
+        let mut prep_bufs = TilePrep::default();
+        sq.prepare_tiles(&rows, batch, &mut prep_bufs).unwrap();
+        let mut tiled = vec![0i64; batch * 10];
+        for (i0, i1) in [(0usize, 2usize), (2, 5), (5, 6)] {
+            sq.run_tile_into(&prep_bufs, i0, i1, &mut tiled[i0 * 10..i1 * 10])
+                .unwrap();
+        }
+        assert_eq!(tiled, want, "tiled qnn pipeline drifted");
+    }
+
+    #[test]
+    fn qnn_executor_rejects_bad_batches_and_reuses_its_workspace() {
+        let mlp = QMlp::random(&[16, 8], 0x72);
+        let mut exec = QnnExecutor::new(&mlp, 2);
+        assert!(exec.run(&[0i64; 7]).is_err(), "wrong batch length");
+        let mut rng = Rng::new(0x73);
+        let mut out = Vec::new();
+        let rows: Vec<i64> = (0..2 * 16).map(|_| rng.i64_in(0, 127)).collect();
+        exec.run_into(&rows, &mut out).unwrap();
+        let warm = exec.workspace_grows();
+        for _ in 0..4 {
+            let rows: Vec<i64> = (0..2 * 16).map(|_| rng.i64_in(0, 127)).collect();
+            exec.run_into(&rows, &mut out).unwrap();
+        }
+        assert_eq!(
+            exec.workspace_grows(),
+            warm,
+            "steady-state qnn batches must reuse the per-worker workspace"
+        );
     }
 
     #[test]

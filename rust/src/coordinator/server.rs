@@ -84,6 +84,85 @@ use super::metrics::{
 };
 use super::workload::is_heavy_row;
 
+/// The element type a serving pool moves end to end — request rows,
+/// batch planes, tile buffers and response rows are all `Vec<T>` for one
+/// `T: ServeScalar`. Two impls exist: `f32` (the PR 1–8 float models)
+/// and `i64` (the exact int8-weight / i64-accumulator quantized path,
+/// where the §3 square trick is *exact* and the squarer's silicon win is
+/// honest). The trait carries everything the serving layers need to stay
+/// dtype-generic:
+///
+/// * the wire identity (`DTYPE` name, one-byte `WIRE_TAG`, fixed
+///   little-endian `WIRE_SIZE`) the ingress codec and the model registry
+///   advertise and check, so an i64 row can never be decoded into an f32
+///   model (a typed `DtypeMismatch`, not a garbage inference);
+/// * the shadow-verification predicate (`shadow_close`): floats compare
+///   under the rollout tolerance, integers compare *exactly* — the
+///   quantized pipeline's whole point is bit-exactness;
+/// * the skew tag (`is_heavy`) the cost-model fork/steal machinery reads.
+pub trait ServeScalar:
+    Copy + Default + Send + Sync + PartialEq + std::fmt::Debug + 'static
+{
+    /// dtype name in the manifest vocabulary (`TensorSpec::dtype`)
+    const DTYPE: &'static str;
+    /// one-byte wire dtype tag (INFER/OUTPUT/MODELS frames)
+    const WIRE_TAG: u8;
+    /// serialized element width in bytes (little-endian)
+    const WIRE_SIZE: usize;
+    /// append this element's little-endian bytes
+    fn write_le(self, out: &mut Vec<u8>);
+    /// decode one element from exactly `WIRE_SIZE` little-endian bytes
+    fn read_le(bytes: &[u8]) -> Self;
+    /// shadow-check predicate: does the primary's output agree with the
+    /// shadow oracle's?
+    fn shadow_close(got: Self, want: Self) -> bool;
+    /// whether this row carries the skewed-mix heavy tag in feature 0
+    fn is_heavy(row: &[Self]) -> bool;
+}
+
+impl ServeScalar for f32 {
+    const DTYPE: &'static str = "float32";
+    const WIRE_TAG: u8 = 0x01;
+    const WIRE_SIZE: usize = 4;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        // lint-ok(panic-path): the codec hands exactly WIRE_SIZE bytes
+        f32::from_le_bytes(bytes.try_into().expect("f32 wire width"))
+    }
+    fn shadow_close(got: Self, want: Self) -> bool {
+        // the float rollout tolerance: relative to the shadow's value,
+        // floored at 1 so near-zero outputs compare absolutely
+        (got - want).abs() <= 1e-2 * want.abs().max(1.0)
+    }
+    fn is_heavy(row: &[Self]) -> bool {
+        is_heavy_row(row)
+    }
+}
+
+impl ServeScalar for i64 {
+    const DTYPE: &'static str = "int64";
+    const WIRE_TAG: u8 = 0x02;
+    const WIRE_SIZE: usize = 8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        // lint-ok(panic-path): the codec hands exactly WIRE_SIZE bytes
+        i64::from_le_bytes(bytes.try_into().expect("i64 wire width"))
+    }
+    fn shadow_close(got: Self, want: Self) -> bool {
+        // integer serving is exact by construction — any drift is a bug
+        got == want
+    }
+    fn is_heavy(row: &[Self]) -> bool {
+        // the integer twin of `is_heavy_row`: quantized activations live
+        // in [0, 127], so half the f32 marker is unreachable by accident
+        !row.is_empty() && row[0] >= super::workload::SKEW_HEAVY_MARKER as i64 / 2
+    }
+}
+
 /// Per-request state a tiled execution hoists exactly once at fork time
 /// (§3.3): the lowered pass operands (the dense row plane, the
 /// post-im2col patch matrix, or the CPM3 pass planes) plus their
@@ -97,41 +176,44 @@ use super::workload::is_heavy_row;
 /// The buffers are recycled through the pool's tile freelist: a warmed
 /// fork refills them in place (`clear` + `extend`/`resize`), so tiling a
 /// steady-state whale allocates nothing executor-side.
-pub struct TilePrep {
-    /// lowered row-operand matrices, one per square pass: dense and conv
-    /// use slot 0; CPM3 uses all three (`A+B`, `B`, `A`)
-    pub a: [Matrix<f32>; 3],
+pub struct TilePrep<T: ServeScalar = f32> {
+    /// lowered row-operand matrices, one per square pass: dense, conv and
+    /// the qnn pipeline use slot 0; CPM3 uses all three (`A+B`, `B`, `A`)
+    pub a: [Matrix<T>; 3],
     /// hoisted full-row corrections, aligned with `a`
-    pub sa: [Vec<f32>; 3],
+    pub sa: [Vec<T>; 3],
     /// request rows the tile ranges `[i0, i1)` partition
     pub rows: usize,
 }
 
-impl Default for TilePrep {
+impl<T: ServeScalar> Default for TilePrep<T> {
     fn default() -> Self {
         let empty = || Matrix::from_vec(0, 0, Vec::new());
         Self { a: [empty(), empty(), empty()], sa: Default::default(), rows: 0 }
     }
 }
 
-impl TilePrep {
+impl<T: ServeScalar> TilePrep<T> {
     /// Reclaim pass-`slot`'s operand storage for refilling (capacity
     /// intact, contents stale) — the executors' zero-allocation reuse
     /// path between forks of the same shape.
-    pub fn take_buf(&mut self, slot: usize) -> Vec<f32> {
+    pub fn take_buf(&mut self, slot: usize) -> Vec<T> {
         std::mem::replace(&mut self.a[slot], Matrix::from_vec(0, 0, Vec::new())).into_data()
     }
 }
 
-/// Executes one padded batch of rows. Implemented by the PJRT engine and
-/// by in-process mocks for tests.
-pub trait BatchExecutor {
+/// Executes one padded batch of rows of dtype `T` (default `f32`, so
+/// every float executor and mock stays unparameterized). Implemented by
+/// the PJRT engine, the native square-kernel executors, the quantized
+/// [`QnnExecutor`](super::native::QnnExecutor) (over `i64`), and by
+/// in-process mocks for tests.
+pub trait BatchExecutor<T: ServeScalar = f32> {
     /// number of features per row
     fn row_len(&self) -> usize;
     /// fixed batch size the artifact was compiled for
     fn batch_rows(&self) -> usize;
     /// run exactly `batch_rows()` rows (flattened) → flattened outputs
-    fn run(&mut self, rows_flat: &[f32]) -> Result<Vec<f32>>;
+    fn run(&mut self, rows_flat: &[T]) -> Result<Vec<T>>;
     /// output features per row
     fn out_len(&self) -> usize;
     /// [`Self::run`] into a caller-provided buffer (cleared + refilled) —
@@ -139,7 +221,7 @@ pub trait BatchExecutor {
     /// across batches instead of reallocated. The default delegates to
     /// `run`; the native executors override it with their workspace paths
     /// so a warmed batch performs zero executor-side heap allocations.
-    fn run_into(&mut self, rows_flat: &[f32], out: &mut Vec<f32>) -> Result<()> {
+    fn run_into(&mut self, rows_flat: &[T], out: &mut Vec<T>) -> Result<()> {
         *out = self.run(rows_flat)?;
         Ok(())
     }
@@ -158,9 +240,9 @@ pub trait BatchExecutor {
     /// byte-identically.
     fn prepare_tiles(
         &mut self,
-        _rows_flat: &[f32],
+        _rows_flat: &[T],
         _rows: usize,
-        _prep: &mut TilePrep,
+        _prep: &mut TilePrep<T>,
     ) -> Result<()> {
         Err(anyhow!("executor does not support tiled execution"))
     }
@@ -170,10 +252,10 @@ pub trait BatchExecutor {
     /// concurrent tiles of one request need no locking.
     fn run_tile_into(
         &mut self,
-        _prep: &TilePrep,
+        _prep: &TilePrep<T>,
         _i0: usize,
         _i1: usize,
-        _out_tile: &mut [f32],
+        _out_tile: &mut [T],
     ) -> Result<()> {
         Err(anyhow!("executor does not support tiled execution"))
     }
@@ -261,6 +343,10 @@ pub const QUEUE_FULL: &str = "queue full: server rejected the request under back
 pub enum SubmitError {
     /// input arity does not match the model's `row_len`
     WrongArity { got: usize, want: usize },
+    /// input dtype does not match the model's element type — constructed
+    /// at the registry layer, where a wire-tagged row meets a typed
+    /// model; the listener maps it onto the `DtypeMismatch` rejection
+    WrongDtype { got: &'static str, want: &'static str },
     /// the dispatch channel is full — back-pressure at the front door,
     /// before the batcher's own count/cost admission even runs
     Full,
@@ -274,25 +360,28 @@ impl std::fmt::Display for SubmitError {
             Self::WrongArity { got, want } => {
                 write!(f, "input has {got} features, model wants {want}")
             }
+            Self::WrongDtype { got, want } => {
+                write!(f, "input dtype {got}, model wants {want}")
+            }
             Self::Full => write!(f, "{QUEUE_FULL}"),
             Self::Closed => write!(f, "server shut down"),
         }
     }
 }
 
-struct Request {
-    input: Vec<f32>,
+struct Request<T: ServeScalar> {
+    input: Vec<T>,
     enqueued: Instant,
     /// admission-cost units charged against the batcher's cost budget
     /// (1 on the plain [`InferenceServer::submit`] path; per-model
     /// `row_cost` through the ingress registry)
     cost: u64,
-    resp: Sender<Result<Vec<f32>, String>>,
+    resp: Sender<Result<Vec<T>, String>>,
 }
 
 /// One formed batch's backing store — checked out of the pool's freelist,
 /// drained by the worker that executes it, and recycled.
-type Items = Vec<Pending<Request>>;
+type Items<T> = Vec<Pending<Request<T>>>;
 
 /// Fork policy for tile-granular intra-request parallelism — the
 /// `--tile-threshold` / `--tile` knobs. A formed batch whose estimated
@@ -328,20 +417,20 @@ pub struct TileConfig {
 /// deterministically in tests instead of being silent UB. The tracker
 /// dies with the job (the recycled buffer is extracted by `into_buf`),
 /// so claims never leak across requests.
-struct TileOut {
-    buf: UnsafeCell<Vec<f32>>,
+struct TileOut<T: ServeScalar> {
+    buf: UnsafeCell<Vec<T>>,
     /// claimed `[lo, hi)` ranges of this job — debug-only overlap trap
     #[cfg(debug_assertions)]
     claims: Mutex<Vec<(usize, usize)>>,
 }
 
 // SAFETY: see the type-level argument — disjoint writes + AcqRel join.
-// The debug-only claims tracker is independently synchronized by its own
-// Mutex and does not weaken the argument.
-unsafe impl Sync for TileOut {}
+// T: ServeScalar is Send + Sync, so sharing the buffer is sound; the
+// debug-only claims tracker is synchronized by its own Mutex.
+unsafe impl<T: ServeScalar> Sync for TileOut<T> {}
 
-impl TileOut {
-    fn new(buf: Vec<f32>) -> Self {
+impl<T: ServeScalar> TileOut<T> {
+    fn new(buf: Vec<T>) -> Self {
         Self {
             buf: UnsafeCell::new(buf),
             #[cfg(debug_assertions)]
@@ -350,7 +439,7 @@ impl TileOut {
     }
 
     /// Extract the backing buffer for recycling (join stage only).
-    fn into_buf(self) -> Vec<f32> {
+    fn into_buf(self) -> Vec<T> {
         self.buf.into_inner()
     }
 
@@ -360,7 +449,7 @@ impl TileOut {
     // borrow checker — hence the clippy::mut_from_ref allow.
     /// SAFETY: the caller must be the only live task touching `[lo, hi)`.
     #[allow(clippy::mut_from_ref)]
-    unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+    unsafe fn range_mut(&self, lo: usize, hi: usize) -> &mut [T] {
         debug_assert!(
             lo <= hi && hi <= (*self.buf.get()).len(),
             "TileOut: claim [{lo}, {hi}) outside buffer"
@@ -381,7 +470,7 @@ impl TileOut {
 
     /// SAFETY: the caller must have established happens-before with every
     /// writer (the join counter observed at zero).
-    unsafe fn all(&self, len: usize) -> &[f32] {
+    unsafe fn all(&self, len: usize) -> &[T] {
         debug_assert!(len <= (*self.buf.get()).len(), "TileOut: read past buffer");
         &(*self.buf.get())[..len]
     }
@@ -392,15 +481,15 @@ impl TileOut {
 /// request-wide output buffer the tiles' disjoint row ranges land in,
 /// and the atomic remaining-tile counter whose last decrementer runs the
 /// join stage.
-struct TileJob {
+struct TileJob<T: ServeScalar> {
     /// hoisted per-request state — lowered operands + full-row
     /// corrections, computed once by the dispatcher's fork executor
-    prep: TilePrep,
+    prep: TilePrep<T>,
     /// the batch's pending requests, taken by the join-stage worker
-    items: Mutex<Option<Items>>,
+    items: Mutex<Option<Items<T>>>,
     /// per-request output buffer (`rows · out_len`), recycled through the
     /// pool's tile freelist
-    out: TileOut,
+    out: TileOut<T>,
     /// tiles not yet landed; `fetch_sub(1, AcqRel) == 1` elects the join
     remaining: AtomicUsize,
     /// first tile error, if any — the join stage reports it to every
@@ -410,8 +499,8 @@ struct TileJob {
 
 /// One `(mi)` tile of a forked request: its row range plus the shared
 /// job handle. Rides the same deques (and steals) as whole batches.
-struct TileTask {
-    job: Arc<TileJob>,
+struct TileTask<T: ServeScalar> {
+    job: Arc<TileJob<T>>,
     i0: usize,
     i1: usize,
 }
@@ -420,16 +509,16 @@ struct TileTask {
 /// tile freelist at fork, returned at join, so a warmed whale forks
 /// without fresh heap allocations for its prep planes or output buffer.
 #[derive(Default)]
-struct TileParts {
-    prep: TilePrep,
-    out: Vec<f32>,
+struct TileParts<T: ServeScalar> {
+    prep: TilePrep<T>,
+    out: Vec<T>,
 }
 
 /// One schedulable unit on a worker deque: a whole formed batch, or one
 /// tile of a forked whale batch.
-enum Work {
-    Batch(Items),
-    Tile(TileTask),
+enum Work<T: ServeScalar> {
+    Batch(Items<T>),
+    Tile(TileTask<T>),
 }
 
 /// Client → dispatcher messages. `Shutdown` optionally carries a reply
@@ -437,8 +526,8 @@ enum Work {
 /// pooled stats — taken after the batcher flush *and* after every
 /// injected batch has executed, so batches served during the drain
 /// (including stolen ones) are counted.
-enum Msg {
-    Req(Request),
+enum Msg<T: ServeScalar> {
+    Req(Request<T>),
     Stats(Sender<ServerStats>),
     Shutdown(Option<Sender<ServerStats>>),
 }
@@ -460,8 +549,8 @@ enum Job {
 /// for wake-ups — at serving batch granularity (hundreds of µs of matmul
 /// per pop) lock contention is noise, and the invariant is easy to audit:
 /// a batch is removed from a deque exactly once, under its mutex.
-struct DequePool {
-    queues: Vec<Mutex<VecDeque<Work>>>,
+struct DequePool<T: ServeScalar> {
+    queues: Vec<Mutex<VecDeque<Work<T>>>>,
     /// set by a panicking worker's guard; dead deques are skipped by the
     /// injector and drained into live siblings by [`Self::abandon`]
     dead: Vec<AtomicBool>,
@@ -470,10 +559,10 @@ struct DequePool {
     /// recycled batch backings: the dispatcher checks one out per formed
     /// batch, the executing worker drains it and gives it back — zero
     /// per-batch allocations here at steady state
-    spares: Mutex<Vec<Items>>,
+    spares: Mutex<Vec<Items<T>>>,
     /// recycled tile-job backings (prep planes + output buffer): checked
     /// out by the fork stage, returned by the join stage
-    tile_spares: Mutex<Vec<TileParts>>,
+    tile_spares: Mutex<Vec<TileParts<T>>>,
     /// whether workers raid siblings ([`Routing::Steal`])
     steal: bool,
 }
@@ -493,7 +582,7 @@ struct Gate {
     closed: bool,
 }
 
-impl DequePool {
+impl<T: ServeScalar> DequePool<T> {
     fn new(workers: usize, steal: bool) -> Arc<Self> {
         Arc::new(Self {
             queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
@@ -531,20 +620,20 @@ impl DequePool {
         self.dead[w].load(Ordering::Acquire)
     }
 
-    fn checkout_items(&self) -> Items {
+    fn checkout_items(&self) -> Items<T> {
         self.spares.lock().unwrap().pop().unwrap_or_default()
     }
 
-    fn recycle_items(&self, mut items: Items) {
+    fn recycle_items(&self, mut items: Items<T>) {
         items.clear();
         self.spares.lock().unwrap().push(items);
     }
 
-    fn checkout_tile_parts(&self) -> TileParts {
+    fn checkout_tile_parts(&self) -> TileParts<T> {
         self.tile_spares.lock().unwrap().pop().unwrap_or_default()
     }
 
-    fn recycle_tile_parts(&self, parts: TileParts) {
+    fn recycle_tile_parts(&self, parts: TileParts<T>) {
         self.tile_spares.lock().unwrap().push(parts);
     }
 
@@ -554,7 +643,7 @@ impl DequePool {
     /// [`Self::abandon`] sets it before draining, so a unit can never
     /// land on a deque after its owner's corpse was emptied — `Err` hands
     /// it back for rerouting instead of stranding it.
-    fn requeue(&self, w: usize, work: Work) -> Result<(), Work> {
+    fn requeue(&self, w: usize, work: Work<T>) -> Result<(), Work<T>> {
         let mut q = self.queues[w].lock().unwrap();
         if self.dead[w].load(Ordering::Acquire) {
             return Err(work);
@@ -570,7 +659,7 @@ impl DequePool {
     /// a fast worker may pop, execute and `batch_done` it before this
     /// thread would otherwise get back to the gate, and the
     /// in-flight/queued counters must never underflow.
-    fn push(&self, w: usize, work: Work) -> Result<(), Work> {
+    fn push(&self, w: usize, work: Work<T>) -> Result<(), Work<T>> {
         {
             let mut g = self.gate.lock().unwrap();
             g.in_flight += 1;
@@ -607,7 +696,7 @@ impl DequePool {
     /// single-worker pool, or a pool whose siblings have all died — the
     /// owner takes the *oldest* batch instead: plain per-worker FIFO, so
     /// no batch can starve.
-    fn pop_own(&self, w: usize) -> Option<Work> {
+    fn pop_own(&self, w: usize) -> Option<Work<T>> {
         let lifo = self.steal && self.live_workers() > 1;
         let popped = {
             let mut q = self.queues[w].lock().unwrap();
@@ -634,7 +723,7 @@ impl DequePool {
     /// take the *oldest* batch — FIFO from the top — of the first
     /// non-empty deque, so a steal always relieves the most
     /// latency-starved work first.
-    fn steal_from(&self, w: usize) -> Option<Work> {
+    fn steal_from(&self, w: usize) -> Option<Work<T>> {
         let n = self.queues.len();
         for off in 1..n {
             let v = (w + off) % n;
@@ -724,7 +813,7 @@ impl DequePool {
     fn abandon(&self, w: usize, executing: bool) {
         // Release: publishes the corpse state to `is_dead`'s Acquire loads.
         self.dead[w].store(true, Ordering::Release);
-        let orphans: Vec<Work> = {
+        let orphans: Vec<Work<T>> = {
             let mut q = self.queues[w].lock().unwrap();
             q.drain(..).collect()
         };
@@ -760,13 +849,13 @@ impl DequePool {
 /// Unwind sentinel a worker arms around executor calls: on panic it
 /// re-injects the worker's deque and squares the pool's accounts so the
 /// dispatcher's waits can never hang on a dead worker.
-struct PoolGuard {
-    pool: Arc<DequePool>,
+struct PoolGuard<T: ServeScalar> {
+    pool: Arc<DequePool<T>>,
     wid: usize,
     executing: Cell<bool>,
 }
 
-impl Drop for PoolGuard {
+impl<T: ServeScalar> Drop for PoolGuard<T> {
     fn drop(&mut self) {
         if std::thread::panicking() {
             self.pool.abandon(self.wid, self.executing.get());
@@ -851,16 +940,18 @@ pub struct ServerStats {
     pub per_worker: Vec<WorkerStats>,
 }
 
-/// Handle to a running server.
-pub struct InferenceServer {
-    tx: SyncSender<Msg>,
+/// Handle to a running server, generic over the serving dtype
+/// (`f32` by default, so every pre-quantization call site is unchanged;
+/// `InferenceServer<i64>` is the exact quantized path).
+pub struct InferenceServer<T: ServeScalar = f32> {
+    tx: SyncSender<Msg<T>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     row_len: usize,
     out_len: usize,
 }
 
-impl InferenceServer {
+impl<T: ServeScalar> InferenceServer<T> {
     /// [`Self::start_routed`] with the default work-stealing routing.
     pub fn start<E, S>(
         max_batch: usize,
@@ -872,8 +963,8 @@ impl InferenceServer {
         make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
     where
-        E: BatchExecutor,
-        S: BatchExecutor,
+        E: BatchExecutor<T>,
+        S: BatchExecutor<T>,
     {
         Self::start_routed(
             max_batch,
@@ -909,8 +1000,8 @@ impl InferenceServer {
         make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
     where
-        E: BatchExecutor,
-        S: BatchExecutor,
+        E: BatchExecutor<T>,
+        S: BatchExecutor<T>,
     {
         Self::start_tiled(
             max_batch,
@@ -946,8 +1037,8 @@ impl InferenceServer {
         make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
     where
-        E: BatchExecutor,
-        S: BatchExecutor,
+        E: BatchExecutor<T>,
+        S: BatchExecutor<T>,
     {
         Self::start_costed(
             max_batch,
@@ -984,11 +1075,11 @@ impl InferenceServer {
         make_shadow: impl Fn(usize) -> Result<Option<S>> + Send + Sync + 'static,
     ) -> Result<Self>
     where
-        E: BatchExecutor,
-        S: BatchExecutor,
+        E: BatchExecutor<T>,
+        S: BatchExecutor<T>,
     {
         let workers = workers.max(1);
-        let (tx, rx) = mpsc::sync_channel::<Msg>(queue_depth.max(1));
+        let (tx, rx) = mpsc::sync_channel::<Msg<T>>(queue_depth.max(1));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize), String>>();
         let pool = DequePool::new(workers, routing == Routing::Steal);
         let make_exec = Arc::new(make_exec);
@@ -1105,7 +1196,7 @@ impl InferenceServer {
     }
 
     /// Submit one row; blocks until the response arrives.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+    pub fn infer(&self, input: Vec<T>) -> Result<Vec<T>> {
         self.submit(input)?
             .recv()
             .map_err(|_| anyhow!("server shut down"))?
@@ -1114,7 +1205,7 @@ impl InferenceServer {
 
     /// Submit one unit-cost row; returns the response channel
     /// (pipelined use).
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+    pub fn submit(&self, input: Vec<T>) -> Result<Receiver<Result<Vec<T>, String>>> {
         self.try_submit(input, 1)
             .map_err(|e| anyhow!("queue full or closed: {e}"))
     }
@@ -1125,9 +1216,9 @@ impl InferenceServer {
     /// [`Self::start_costed`] budget while the row waits for a batch.
     pub fn try_submit(
         &self,
-        input: Vec<f32>,
+        input: Vec<T>,
         cost: u64,
-    ) -> std::result::Result<Receiver<Result<Vec<f32>, String>>, SubmitError> {
+    ) -> std::result::Result<Receiver<Result<Vec<T>, String>>, SubmitError> {
         if input.len() != self.row_len {
             return Err(SubmitError::WrongArity { got: input.len(), want: self.row_len });
         }
@@ -1179,7 +1270,7 @@ impl InferenceServer {
     }
 }
 
-impl Drop for InferenceServer {
+impl<T: ServeScalar> Drop for InferenceServer<T> {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown(None));
         self.join();
@@ -1189,7 +1280,11 @@ impl Drop for InferenceServer {
 /// Push a row into the batcher; on back-pressure the client hears an
 /// explicit `Err` on its response channel instead of a dropped sender
 /// (which `recv()` would misreport as "server shut down").
-fn push_or_reject(batcher: &mut Batcher<Request>, r: Request, rejected: &mut u64) {
+fn push_or_reject<T: ServeScalar>(
+    batcher: &mut Batcher<Request<T>>,
+    r: Request<T>,
+    rejected: &mut u64,
+) {
     let cost = r.cost;
     if let Err(r) = batcher.push_costed(r, cost, Instant::now()) {
         *rejected += 1;
@@ -1200,7 +1295,7 @@ fn push_or_reject(batcher: &mut Batcher<Request>, r: Request, rejected: &mut u64
 /// The injector's target for one batch: shortest live deque under
 /// stealing (thieves even out any estimate error), strict round-robin
 /// over live workers under FIFO. `None` once every worker is dead.
-fn route(pool: &DequePool, routing: Routing, rr: &mut usize) -> Option<usize> {
+fn route<T: ServeScalar>(pool: &DequePool<T>, routing: Routing, rr: &mut usize) -> Option<usize> {
     match routing {
         Routing::Steal => pool.shortest_alive(),
         Routing::Fifo => {
@@ -1220,7 +1315,7 @@ fn route(pool: &DequePool, routing: Routing, rr: &mut usize) -> Option<usize> {
 /// Route + push one work unit, rerouting if the chosen worker dies in
 /// the race window. With no live worker left the unit is dropped, which
 /// closes the clients' response channels — the only honest answer left.
-fn inject(pool: &DequePool, routing: Routing, rr: &mut usize, mut work: Work) {
+fn inject<T: ServeScalar>(pool: &DequePool<T>, routing: Routing, rr: &mut usize, mut work: Work<T>) {
     loop {
         match route(pool, routing, rr) {
             Some(w) => match pool.push(w, work) {
@@ -1235,10 +1330,10 @@ fn inject(pool: &DequePool, routing: Routing, rr: &mut usize, mut work: Work) {
 /// The dispatcher's fork-stage state: its own executor instance (for the
 /// executor-specific per-request prep — im2col, plane split, row
 /// corrections) plus the reused staging plane for the occupied rows.
-struct ForkState<E> {
+struct ForkState<T: ServeScalar, E> {
     exec: E,
     cfg: TileConfig,
-    flat: Vec<f32>,
+    flat: Vec<T>,
 }
 
 /// The fork stage: if the formed batch's estimated cost exceeds the
@@ -1248,13 +1343,13 @@ struct ForkState<E> {
 /// lands on the then-shortest live deque. Returns the batch back
 /// unchanged when it is not a whale (or prep fails, in which case it is
 /// served whole rather than failed).
-fn try_fork<E: BatchExecutor>(
-    pool: &Arc<DequePool>,
+fn try_fork<T: ServeScalar, E: BatchExecutor<T>>(
+    pool: &Arc<DequePool<T>>,
     routing: Routing,
     rr: &mut usize,
-    items: Items,
-    fork: &mut ForkState<E>,
-) -> Result<(), Items> {
+    items: Items<T>,
+    fork: &mut ForkState<T, E>,
+) -> Result<(), Items<T>> {
     let rows = items.len();
     let tile = fork.cfg.tile_rows.max(1);
     let tiles = rows.div_ceil(tile);
@@ -1263,7 +1358,7 @@ fn try_fork<E: BatchExecutor>(
     }
     let cost: u64 = items
         .iter()
-        .map(|p| if is_heavy_row(&p.payload.input) { fork.cfg.heavy_cost } else { 1 })
+        .map(|p| if T::is_heavy(&p.payload.input) { fork.cfg.heavy_cost } else { 1 })
         .sum();
     if cost <= fork.cfg.threshold {
         return Err(items);
@@ -1271,7 +1366,7 @@ fn try_fork<E: BatchExecutor>(
 
     let row_len = fork.exec.row_len();
     fork.flat.clear();
-    fork.flat.resize(rows * row_len, 0.0);
+    fork.flat.resize(rows * row_len, T::default());
     for (i, p) in items.iter().enumerate() {
         fork.flat[i * row_len..(i + 1) * row_len].copy_from_slice(&p.payload.input);
     }
@@ -1282,7 +1377,7 @@ fn try_fork<E: BatchExecutor>(
     }
     let TileParts { prep, mut out } = parts;
     out.clear();
-    out.resize(rows * fork.exec.out_len(), 0.0);
+    out.resize(rows * fork.exec.out_len(), T::default());
     let job = Arc::new(TileJob {
         prep,
         items: Mutex::new(Some(items)),
@@ -1303,10 +1398,10 @@ fn try_fork<E: BatchExecutor>(
 /// worker) — forking whale batches into tiles when tiling is configured —
 /// and aggregates pool-wide stats on demand.
 #[allow(clippy::too_many_arguments)]
-fn dispatch_loop<E: BatchExecutor>(
-    rx: Receiver<Msg>,
+fn dispatch_loop<T: ServeScalar, E: BatchExecutor<T>>(
+    rx: Receiver<Msg<T>>,
     ctl_txs: Vec<Sender<Job>>,
-    pool: Arc<DequePool>,
+    pool: Arc<DequePool<T>>,
     routing: Routing,
     workers: usize,
     max_batch: usize,
@@ -1316,7 +1411,7 @@ fn dispatch_loop<E: BatchExecutor>(
     tiling: Option<TileConfig>,
     make_exec: Arc<impl Fn(usize) -> Result<E> + Send + Sync + 'static>,
 ) {
-    let mut batcher: Batcher<Request> =
+    let mut batcher: Batcher<Request<T>> =
         Batcher::with_cost_budget(max_batch, max_wait, queue_depth, cost_budget);
     let mut rejected = 0u64;
     let mut final_reply: Option<Sender<ServerStats>> = None;
@@ -1330,7 +1425,7 @@ fn dispatch_loop<E: BatchExecutor>(
     // executor-specific, and a dispatcher-owned instance guarantees the
     // §3.3 hoist happens exactly once per request, raced by nobody. An
     // executor that cannot tile (or fails to build) disables forking.
-    let mut fork: Option<ForkState<E>> = tiling.and_then(|cfg| {
+    let mut fork: Option<ForkState<T, E>> = tiling.and_then(|cfg| {
         let exec = make_exec(workers).ok()?;
         exec.supports_tiles()
             .then(|| ForkState { exec, cfg, flat: Vec::new() })
@@ -1437,9 +1532,9 @@ fn dispatch_loop<E: BatchExecutor>(
 /// A worker that no longer answers (its thread died, e.g. a panicking
 /// executor) is *counted*, not silently dropped: `lost_workers` makes the
 /// capacity loss visible.
-fn pooled_stats(
+fn pooled_stats<T: ServeScalar>(
     ctl_txs: &[Sender<Job>],
-    pool: &DequePool,
+    pool: &DequePool<T>,
     workers: usize,
     rejected: u64,
     include_raw: bool,
@@ -1557,10 +1652,10 @@ fn snapshot(wid: usize, metrics: &Metrics, include_raw: bool) -> WorkerSnapshot 
 /// pool gate otherwise. Control traffic (stats polls, shutdown) rides a
 /// separate channel, drained between batches; the dispatcher pokes the
 /// gate after sending so a parked worker always wakes to answer.
-fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
+fn worker_loop<T: ServeScalar, E: BatchExecutor<T>, S: BatchExecutor<T>>(
     wid: usize,
     ctl: Receiver<Job>,
-    pool: &Arc<DequePool>,
+    pool: &Arc<DequePool<T>>,
     exec: &mut E,
     mut shadow: Option<&mut S>,
     shadow_every: u64,
@@ -1573,9 +1668,9 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
     // executor's batch output and the shadow's — together with the
     // recycled item vecs, a steady-state batch's only allocations on the
     // primary path are the per-request response rows handed to clients
-    let mut flat = vec![0.0f32; rows * row_len];
-    let mut out: Vec<f32> = Vec::new();
-    let mut shadow_out: Vec<f32> = Vec::new();
+    let mut flat = vec![T::default(); rows * row_len];
+    let mut out: Vec<T> = Vec::new();
+    let mut shadow_out: Vec<T> = Vec::new();
     let guard = PoolGuard {
         pool: Arc::clone(pool),
         wid,
@@ -1660,12 +1755,12 @@ fn worker_loop<E: BatchExecutor, S: BatchExecutor>(
 /// verification — the shadow twin covers the untiled path (and whales
 /// are gated bit-exactly against the tensor-core oracle in the
 /// cross-layer tests instead).
-fn run_tile<E: BatchExecutor>(
-    task: TileTask,
+fn run_tile<T: ServeScalar, E: BatchExecutor<T>>(
+    task: TileTask<T>,
     exec: &mut E,
     out_len: usize,
     metrics: &mut Metrics,
-    pool: &DequePool,
+    pool: &DequePool<T>,
 ) {
     let TileTask { job, i0, i1 } = task;
     metrics.tiles_executed += 1;
@@ -1691,7 +1786,12 @@ fn run_tile<E: BatchExecutor>(
 /// The join/reduction stage, run by whichever worker lands the last
 /// tile: send every response row out of the shared output buffer, record
 /// the per-request latencies, and recycle the job's backing store.
-fn join_tile_job(job: Arc<TileJob>, out_len: usize, metrics: &mut Metrics, pool: &DequePool) {
+fn join_tile_job<T: ServeScalar>(
+    job: Arc<TileJob<T>>,
+    out_len: usize,
+    metrics: &mut Metrics,
+    pool: &DequePool<T>,
+) {
     metrics.tiled_requests += 1;
     let mut items = job
         .items
@@ -1729,8 +1829,8 @@ fn join_tile_job(job: Arc<TileJob>, out_len: usize, metrics: &mut Metrics, pool:
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_batch<E: BatchExecutor, S: BatchExecutor>(
-    mut items: Items,
+fn run_batch<T: ServeScalar, E: BatchExecutor<T>, S: BatchExecutor<T>>(
+    mut items: Items<T>,
     exec: &mut E,
     shadow: Option<&mut S>,
     rows: usize,
@@ -1738,14 +1838,14 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
     out_len: usize,
     shadow_every: u64,
     metrics: &mut Metrics,
-    flat: &mut Vec<f32>,
-    out: &mut Vec<f32>,
-    shadow_out: &mut Vec<f32>,
-    pool: &DequePool,
+    flat: &mut Vec<T>,
+    out: &mut Vec<T>,
+    shadow_out: &mut Vec<T>,
+    pool: &DequePool<T>,
 ) {
     // pad into the reused input plane (cleared so stale rows re-zero)
     flat.clear();
-    flat.resize(rows * row_len, 0.0);
+    flat.resize(rows * row_len, T::default());
     for (i, p) in items.iter().enumerate() {
         flat[i * row_len..(i + 1) * row_len].copy_from_slice(&p.payload.input);
     }
@@ -1763,7 +1863,7 @@ fn run_batch<E: BatchExecutor, S: BatchExecutor>(
                             let ok = out[..used]
                                 .iter()
                                 .zip(&shadow_out[..used])
-                                .all(|(a, b)| (a - b).abs() <= 1e-2 * b.abs().max(1.0));
+                                .all(|(a, b)| T::shadow_close(*a, *b));
                             if !ok {
                                 metrics.shadow_failures += 1;
                             }

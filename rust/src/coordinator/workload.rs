@@ -66,6 +66,28 @@ impl WorkloadGen {
         v
     }
 
+    /// One quantized MNIST-like input for the int8 serving path: the
+    /// [`Self::mnist_like`] stroke image quantised to the uint8-ish
+    /// activation range the qnn model consumes — 784 values in
+    /// `0..=127`, carried as `i64` because that is the accumulator
+    /// lane width the exact §3 integer datapath serves end to end.
+    pub fn quant_mnist_like(&mut self) -> Vec<i64> {
+        self.mnist_like()
+            .into_iter()
+            .map(|x| ((x * 127.0).round() as i64).clamp(0, 127))
+            .collect()
+    }
+
+    /// A batch of quantized MNIST-like rows, flattened row-major — the
+    /// qnn twin of [`Self::mnist_batch`].
+    pub fn quant_mnist_batch(&mut self, rows: usize) -> Vec<i64> {
+        let mut out = Vec::with_capacity(rows * 784);
+        for _ in 0..rows {
+            out.extend(self.quant_mnist_like());
+        }
+        out
+    }
+
     /// A batch of MNIST-like rows, flattened row-major.
     pub fn mnist_batch(&mut self, rows: usize) -> Vec<f32> {
         let mut out = Vec::with_capacity(rows * 784);
@@ -199,6 +221,29 @@ mod tests {
         }
         // planes differ (independent strokes per channel)
         assert_ne!(&v[..784], &v[784..2 * 784]);
+    }
+
+    #[test]
+    fn quant_mnist_like_is_int8_ranged_and_deterministic() {
+        let mut g = WorkloadGen::new(13);
+        let v = g.quant_mnist_like();
+        assert_eq!(v.len(), 784);
+        assert!(v.iter().all(|&x| (0..=127).contains(&x)));
+        // sparse-ish like the float original
+        let dark = v.iter().filter(|&&x| x < 13).count();
+        assert!(dark > 200, "dark={dark}");
+        // the quantisation is a pure function of the float stream
+        let want: Vec<i64> = WorkloadGen::new(13)
+            .mnist_like()
+            .into_iter()
+            .map(|x| ((x * 127.0).round() as i64).clamp(0, 127))
+            .collect();
+        assert_eq!(v, want);
+        // batches flatten rows in order, deterministically per seed
+        let batch = WorkloadGen::new(14).quant_mnist_batch(3);
+        assert_eq!(batch.len(), 3 * 784);
+        assert_eq!(batch, WorkloadGen::new(14).quant_mnist_batch(3));
+        assert_eq!(&batch[..784], &WorkloadGen::new(14).quant_mnist_like()[..]);
     }
 
     #[test]

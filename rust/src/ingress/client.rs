@@ -13,6 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::wire;
 use super::wire::{ModelInfo, ReadError, ReadOutcome};
+use crate::coordinator::ServeScalar;
 
 /// A typed rejection relayed from the server — the decoded form of a
 /// `REJECTED` frame.
@@ -29,10 +30,10 @@ impl std::fmt::Display for Rejection {
     }
 }
 
-/// One inference's wire-level outcome: a response row, or the server's
-/// typed rejection. Transport/protocol breaches surface as the outer
-/// `anyhow` error instead.
-pub type InferOutcome = std::result::Result<Vec<f32>, Rejection>;
+/// One inference's wire-level outcome: a response row in the model's
+/// serving dtype, or the server's typed rejection. Transport/protocol
+/// breaches surface as the outer `anyhow` error instead.
+pub type InferOutcome<T = f32> = std::result::Result<Vec<T>, Rejection>;
 
 /// Synchronous wire-protocol client over one TCP connection.
 pub struct TcpClient {
@@ -68,15 +69,18 @@ impl TcpClient {
         }
     }
 
-    /// Put one `INFER` on the wire without waiting for the reply.
-    pub fn send_infer(&mut self, model: &str, row: &[f32]) -> Result<()> {
+    /// Put one `INFER` on the wire without waiting for the reply. The
+    /// row's dtype tag travels with it; the server rejects a tag that
+    /// disagrees with the model's serving dtype (code 11).
+    pub fn send_infer<T: ServeScalar>(&mut self, model: &str, row: &[T]) -> Result<()> {
         wire::encode_infer_into(&mut self.body, model, row);
         wire::write_frame(&mut self.stream, &mut self.frame, wire::kind::INFER, &self.body)
             .context("writing INFER")
     }
 
-    /// Wait for the reply to an in-flight `INFER`.
-    pub fn recv_response(&mut self) -> Result<InferOutcome> {
+    /// Wait for the reply to an in-flight `INFER`, decoding the output
+    /// row as the model's serving dtype `T`.
+    pub fn recv_response<T: ServeScalar>(&mut self) -> Result<InferOutcome<T>> {
         let kind = self.read_reply()?;
         match kind {
             wire::kind::OUTPUT => {
@@ -93,7 +97,7 @@ impl TcpClient {
     }
 
     /// One request, one reply.
-    pub fn infer(&mut self, model: &str, row: &[f32]) -> Result<InferOutcome> {
+    pub fn infer<T: ServeScalar>(&mut self, model: &str, row: &[T]) -> Result<InferOutcome<T>> {
         self.send_infer(model, row)?;
         self.recv_response()
     }

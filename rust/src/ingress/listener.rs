@@ -32,12 +32,13 @@
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::server::SubmitError;
+use crate::coordinator::server::{ServeScalar, SubmitError};
 use crate::coordinator::QUEUE_FULL;
 
 use super::registry::{IngressReport, ModelRegistry, Outcome, RegisteredModel};
@@ -217,7 +218,9 @@ fn session_loop(stream: &mut TcpStream, reg: &ModelRegistry, closed: &AtomicBool
     let mut payload = Vec::new();
     let mut frame = Vec::new();
     let mut body = Vec::new();
-    let mut row = Vec::new();
+    // one row scratch per serving lane, both warmed across requests
+    let mut row_f32: Vec<f32> = Vec::new();
+    let mut row_i64: Vec<i64> = Vec::new();
     loop {
         match wire::read_frame(stream, &mut payload) {
             // clean close at a frame boundary
@@ -248,7 +251,8 @@ fn session_loop(stream: &mut TcpStream, reg: &ModelRegistry, closed: &AtomicBool
                         &payload,
                         &mut frame,
                         &mut body,
-                        &mut row,
+                        &mut row_f32,
+                        &mut row_i64,
                     ) {
                         return;
                     }
@@ -267,6 +271,13 @@ fn session_loop(stream: &mut TcpStream, reg: &ModelRegistry, closed: &AtomicBool
 /// Serve one decoded `INFER` frame end to end. Returns false when the
 /// session should close. Accounting contract: once the request is
 /// routed, exactly one `Outcome` is recorded on its model.
+///
+/// Decoding is split head-first: the name + dtype tag are read before
+/// any element bytes, the request is routed, and the row is then
+/// decoded down the *model's* serving lane — so an i64 row aimed at an
+/// f32 model is a typed [`WireError::DtypeMismatch`] (code 11), never
+/// a mis-decode.
+#[allow(clippy::too_many_arguments)]
 fn handle_infer(
     stream: &mut TcpStream,
     reg: &ModelRegistry,
@@ -274,14 +285,15 @@ fn handle_infer(
     payload: &[u8],
     frame: &mut Vec<u8>,
     body: &mut Vec<u8>,
-    row: &mut Vec<f32>,
+    row_f32: &mut Vec<f32>,
+    row_i64: &mut Vec<i64>,
 ) -> bool {
-    let name = match wire::decode_infer(payload, row) {
-        Ok(n) => n,
+    let head = match wire::decode_infer_head(payload) {
+        Ok(h) => h,
         // malformed payload: typed answer, framing intact, no account
         Err(e) => return send_rejected(stream, frame, body, &e),
     };
-    let model: &RegisteredModel = match reg.route(name) {
+    let model: &RegisteredModel = match reg.route(head.name) {
         Ok(m) => m,
         Err(e) => {
             // no per-model account exists; tallied separately so the
@@ -290,17 +302,69 @@ fn handle_infer(
             return send_rejected(stream, frame, body, &e);
         }
     };
+    if head.dtype != model.dtype() {
+        // the request is routed, so it is accounted like any other
+        // admission rejection: submitted, then rejected — typed, with
+        // the framing (and the connection) intact
+        reg.count_submitted(model);
+        reg.record(model, Outcome::Rejected);
+        let e = WireError::DtypeMismatch {
+            model: model.name.clone(),
+            got: wire::dtype_name(head.dtype),
+            want: model.dtype_str(),
+        };
+        return send_rejected(stream, frame, body, &e);
+    }
+    if model.dtype() == <i64 as ServeScalar>::WIRE_TAG {
+        serve_lane(stream, reg, model, closed, &head, frame, body, row_i64, |m, input| {
+            reg.try_submit_i64(m, input)
+        })
+    } else {
+        serve_lane(stream, reg, model, closed, &head, frame, body, row_f32, |m, input| {
+            reg.try_submit(m, input)
+        })
+    }
+}
+
+/// The dtype-generic tail of [`handle_infer`]: decode the row down the
+/// lane's scalar, submit, and relay the response (or the typed
+/// rejection) back in the same dtype.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn serve_lane<T: ServeScalar>(
+    stream: &mut TcpStream,
+    reg: &ModelRegistry,
+    model: &RegisteredModel,
+    closed: &AtomicBool,
+    head: &wire::InferHead<'_>,
+    frame: &mut Vec<u8>,
+    body: &mut Vec<u8>,
+    row: &mut Vec<T>,
+    submit: impl FnOnce(
+        &RegisteredModel,
+        Vec<T>,
+    ) -> std::result::Result<Receiver<std::result::Result<Vec<T>, String>>, SubmitError>,
+) -> bool {
+    if let Err(e) = wire::decode_infer_row(head, row) {
+        return send_rejected(stream, frame, body, &e);
+    }
     reg.count_submitted(model);
     // the engine owns its input row: this per-request Vec is the
     // ingress analogue of the pool's per-request response row (the one
     // sanctioned steady-state allocation per PR 5)
     let mut input = Vec::with_capacity(row.len());
     input.extend_from_slice(row);
-    let rx = match reg.try_submit(model, input) {
+    let rx = match submit(model, input) {
         Ok(rx) => rx,
         Err(SubmitError::WrongArity { got, want }) => {
             reg.record(model, Outcome::Rejected);
             let e = WireError::WrongArity { model: model.name.clone(), got, want };
+            return send_rejected(stream, frame, body, &e);
+        }
+        Err(SubmitError::WrongDtype { got, want }) => {
+            // unreachable once the head gate above matched, but kept
+            // typed for in-process callers of the registry lanes
+            reg.record(model, Outcome::Rejected);
+            let e = WireError::DtypeMismatch { model: model.name.clone(), got, want };
             return send_rejected(stream, frame, body, &e);
         }
         Err(SubmitError::Full) => {

@@ -29,8 +29,11 @@ pub mod wire;
 pub use client::{InferOutcome, Rejection, TcpClient};
 pub use listener::IngressServer;
 pub use models::{
-    default_row_cost, parse_listen_addr, parse_model_list, reference_executor, reference_rows,
-    register_native, sample_input, NativeServing, MODEL_NAMES,
+    default_row_cost, parse_listen_addr, parse_model_list, qnn_model, reference_executor,
+    reference_rows, reference_rows_qnn, register_native, sample_input, sample_input_i64,
+    NativeServing, MODEL_NAMES,
 };
-pub use registry::{IngressReport, ModelRegistry, ModelReport, Outcome, RegisteredModel};
+pub use registry::{
+    IngressReport, ModelRegistry, ModelReport, ModelServer, Outcome, RegisteredModel,
+};
 pub use wire::{ModelInfo, WireError};

@@ -1,16 +1,20 @@
 //! The native model catalogue for the network front door: the same
-//! three deterministic models `serve --native` builds in-process
-//! (dense 784→10, conv 8×C×3×3 over 28×28 NCHW, complex CPM3 64→16),
-//! constructed with the same seeds and batch shapes so a TCP response
-//! is *byte-identical* to the in-process executor path — every kernel
-//! computes output rows independently (the PR 6 tile contract pins
-//! this), so batch composition cannot perturb a row's bits.
+//! four deterministic models `serve --native` builds in-process
+//! (dense 784→10, conv 8×C×3×3 over 28×28 NCHW, complex CPM3 64→16,
+//! qnn int8 784→64→10), constructed with the same seeds and batch
+//! shapes so a TCP response is *byte-identical* to the in-process
+//! executor path — every kernel computes output rows independently
+//! (the PR 6 tile contract pins this), so batch composition cannot
+//! perturb a row's bits. The qnn model serves `int64` rows end to end
+//! (exact integer logits, no f32 lane anywhere), shadowed by the
+//! scalar `QMlp::forward` oracle.
 //!
 //! Also home to the typed `--listen` / `--models` CLI validation
 //! (PR 5/6 no-clamping convention: malformed input is a typed error,
 //! never a silent fixup).
 
 use std::net::SocketAddr;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -18,27 +22,31 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::server::Routing;
 use crate::coordinator::{
     BatchExecutor, ComplexMatmulDirectExecutor, ComplexMatmulExecutor, Conv2dDirectExecutor,
-    Conv2dExecutor, DirectKernelExecutor, InferenceServer, SkewedKernelExecutor,
-    SquareKernelExecutor, WorkloadGen,
+    Conv2dExecutor, DirectKernelExecutor, InferenceServer, QnnExecutor, QnnScalarExecutor,
+    SkewedKernelExecutor, SquareKernelExecutor, WorkloadGen,
 };
 use crate::linalg::engine::{
     CPlanes, ConvSpec, EngineConfig, PreparedB, PreparedConvBank, PreparedCpm3,
 };
+use crate::linalg::qnn::{QArith, QMlp};
 use crate::linalg::Matrix;
+use crate::qnn::PreparedQnn;
 use crate::runtime::registry::{ArtifactSpec, TensorSpec};
 use crate::testkit::Rng;
 
 use super::registry::ModelRegistry;
 
 /// The registrable native models, in canonical order.
-pub const MODEL_NAMES: &[&str] = &["dense", "conv", "complex"];
+pub const MODEL_NAMES: &[&str] = &["dense", "conv", "complex", "qnn"];
 
 /// Default admission cost per request, in the batcher's cost units —
 /// a coarse per-row work ratio (one conv request lowers 8 filter maps
-/// of patches; one complex request runs three square passes).
+/// of patches; one complex request runs three square passes; one qnn
+/// request runs a two-layer fused pipeline).
 pub fn default_row_cost(name: &str) -> u64 {
     match name {
         "conv" => 8,
+        "qnn" => 3,
         "complex" => 2,
         _ => 1,
     }
@@ -88,6 +96,16 @@ fn conv_bank() -> Result<(Vec<f32>, ConvSpec)> {
     let filters: Vec<f32> = (0..spec.bank_len()).map(|_| (rng.normal() * 0.2) as f32).collect();
     Ok((filters, spec))
 }
+
+/// Deterministic int8 two-layer MLP (784→64→10) — the same seed/dims
+/// as `serve --native --model qnn`. Public so tests and benches can
+/// rebuild the exact served model as their scalar oracle.
+pub fn qnn_model() -> QMlp {
+    QMlp::random(&[784, 64, 10], 0x9A)
+}
+
+/// Rows per qnn batch (matches the dense model's batch shape).
+const QNN_BATCH: usize = 32;
 
 /// Deterministic complex weight planes (64→16).
 fn complex_planes() -> (Matrix<f32>, Matrix<f32>) {
@@ -214,13 +232,45 @@ pub fn register_native(reg: &mut ModelRegistry, name: &str, cfg: &NativeServing)
             );
             reg.register(name, artifact, default_row_cost(name), server)
         }
+        "qnn" => {
+            let mlp = qnn_model();
+            let (prepared, _prep_ops) = PreparedQnn::new_shared(&mlp);
+            let shadow_mlp = Arc::new(mlp);
+            let server: InferenceServer<i64> = InferenceServer::start_costed(
+                QNN_BATCH,
+                cfg.max_wait,
+                cfg.queue_depth,
+                cfg.cost_budget,
+                cfg.shadow_every,
+                cfg.workers,
+                cfg.routing,
+                None,
+                move |_wid| {
+                    Ok(QnnExecutor::from_shared(prepared.clone(), QNN_BATCH, engine.clone()))
+                },
+                move |_wid| {
+                    if shadow_wanted {
+                        Ok(Some(QnnScalarExecutor::new(shadow_mlp.clone(), QNN_BATCH)))
+                    } else {
+                        Ok(None)
+                    }
+                },
+            )?;
+            let artifact = ArtifactSpec::declared(
+                name,
+                vec![TensorSpec::new(vec![QNN_BATCH, 784], "int64")],
+                vec![TensorSpec::new(vec![QNN_BATCH, 10], "int64")],
+            );
+            reg.register(name, artifact, default_row_cost(name), server)
+        }
         other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
     }
 }
 
 /// A single-threaded in-process executor of the same model the ingress
 /// serves — the oracle the e2e tests and the bench compare TCP
-/// responses against, bit for bit.
+/// responses against, bit for bit. f32 models only; the qnn oracle is
+/// [`reference_rows_qnn`] (the scalar `QMlp::forward`).
 pub fn reference_executor(name: &str) -> Result<Box<dyn BatchExecutor>> {
     let engine = EngineConfig::with_threads(1);
     match name {
@@ -242,8 +292,29 @@ pub fn reference_executor(name: &str) -> Result<Box<dyn BatchExecutor>> {
             let (prepared, _prep_ops) = PreparedCpm3::new_shared(&planes)?;
             Ok(Box::new(ComplexMatmulExecutor::from_shared(prepared, 32, engine)?))
         }
+        "qnn" => bail!("model \"qnn\" serves int64 rows; use reference_rows_qnn"),
         other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
     }
+}
+
+/// The qnn oracle: run each int8 input row through the *scalar*
+/// `QMlp::forward` (direct multiplies, no square trick, no blocking,
+/// no threads) and return the exact integer logits. This is the
+/// independent reference the served fused pipeline must match bit for
+/// bit.
+pub fn reference_rows_qnn(inputs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+    let mlp = qnn_model();
+    let row_len = mlp.layers[0].w.rows;
+    let mut rows = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        if input.len() != row_len {
+            bail!("reference input has {} features, model wants {row_len}", input.len());
+        }
+        let x = Matrix::from_vec(1, row_len, input.clone());
+        let (z, _ops) = mlp.forward(&x, QArith::Direct);
+        rows.push(z.data().to_vec());
+    }
+    Ok(rows)
 }
 
 /// Run each input as a zero-padded single-row batch through `exec` and
@@ -272,13 +343,23 @@ pub fn reference_rows(exec: &mut dyn BatchExecutor, inputs: &[Vec<f32>]) -> Resu
 }
 
 /// One workload row of the right shape for `name` — the same generator
-/// paths the in-process CLI drives.
+/// paths the in-process CLI drives. f32 models only; the qnn row is
+/// [`sample_input_i64`].
 pub fn sample_input(gen: &mut WorkloadGen, name: &str) -> Result<Vec<f32>> {
     match name {
         "dense" => Ok(gen.mnist_like()),
         "conv" => Ok(gen.nchw_image(1, 28, 28)),
         "complex" => Ok(gen.qpsk_row(64)),
+        "qnn" => bail!("model \"qnn\" serves int64 rows; use sample_input_i64"),
         other => bail!("unknown native model {other:?}; valid models: {}", MODEL_NAMES.join(", ")),
+    }
+}
+
+/// [`sample_input`]'s integer lane: one quantized workload row.
+pub fn sample_input_i64(gen: &mut WorkloadGen, name: &str) -> Result<Vec<i64>> {
+    match name {
+        "qnn" => Ok(gen.quant_mnist_like()),
+        other => bail!("model {other:?} does not serve int64 rows; only \"qnn\" does"),
     }
 }
 
@@ -336,11 +417,14 @@ mod tests {
 
     #[test]
     fn model_list_validation_is_typed() {
-        assert_eq!(parse_model_list("dense,conv,complex").unwrap(), MODEL_NAMES.to_vec());
+        assert_eq!(parse_model_list("dense,conv,complex,qnn").unwrap(), MODEL_NAMES.to_vec());
         assert_eq!(parse_model_list(" conv , dense ").unwrap(), ["conv", "dense"]);
         let err = parse_model_list("dense,mystery").unwrap_err();
         let msg = format!("{err:#}");
-        assert!(msg.contains("mystery") && msg.contains("dense, conv, complex"), "got: {msg}");
+        assert!(
+            msg.contains("mystery") && msg.contains("dense, conv, complex, qnn"),
+            "got: {msg}"
+        );
         let err = parse_model_list("dense,dense").unwrap_err();
         assert!(format!("{err:#}").contains("twice"), "got: {err:#}");
         let err = parse_model_list("dense,,conv").unwrap_err();
@@ -349,7 +433,8 @@ mod tests {
 
     #[test]
     fn default_costs_rank_conv_heaviest() {
-        assert!(default_row_cost("conv") > default_row_cost("complex"));
+        assert!(default_row_cost("conv") > default_row_cost("qnn"));
+        assert!(default_row_cost("qnn") > default_row_cost("complex"));
         assert!(default_row_cost("complex") > default_row_cost("dense"));
     }
 
@@ -357,6 +442,9 @@ mod tests {
     fn reference_executor_shapes_match_the_catalogue() {
         let mut gen = WorkloadGen::new(0x1234);
         for &name in MODEL_NAMES {
+            if name == "qnn" {
+                continue; // int64 lane, covered below
+            }
             let mut exec = reference_executor(name).unwrap();
             let input = sample_input(&mut gen, name).unwrap();
             assert_eq!(input.len(), exec.row_len(), "model {name}");
@@ -364,5 +452,25 @@ mod tests {
             assert_eq!(rows.len(), 1);
             assert_eq!(rows[0].len(), exec.out_len(), "model {name}");
         }
+    }
+
+    #[test]
+    fn qnn_reference_is_the_scalar_oracle() {
+        let mut gen = WorkloadGen::new(0x1234);
+        let input = sample_input_i64(&mut gen, "qnn").unwrap();
+        assert_eq!(input.len(), 784);
+        let rows = reference_rows_qnn(&[input.clone()]).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), 10);
+        // the helper is literally QMlp::forward on the catalogue model
+        let mlp = qnn_model();
+        let x = Matrix::from_vec(1, 784, input);
+        let (z, _ops) = mlp.forward(&x, QArith::Direct);
+        assert_eq!(rows[0], z.data());
+
+        // f32 helpers refuse the integer model, typed
+        assert!(reference_executor("qnn").is_err());
+        assert!(sample_input(&mut gen, "qnn").is_err());
+        assert!(sample_input_i64(&mut gen, "dense").is_err());
     }
 }

@@ -23,10 +23,77 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::coordinator::metrics::IngressCounters;
-use crate::coordinator::server::{InferenceServer, ServerStats, SubmitError};
+use crate::coordinator::server::{InferenceServer, ServeScalar, ServerStats, SubmitError};
 use crate::runtime::registry::ArtifactSpec;
 
 use super::wire::{ModelInfo, WireError};
+
+/// A registered model's running pool, tagged with its serving dtype.
+/// The listener routes a wire-tagged row onto the matching lane; a row
+/// whose tag disagrees gets the typed [`SubmitError::WrongDtype`] —
+/// never a lossy coercion through the wrong element type.
+pub enum ModelServer {
+    F32(InferenceServer<f32>),
+    I64(InferenceServer<i64>),
+}
+
+impl From<InferenceServer<f32>> for ModelServer {
+    fn from(s: InferenceServer<f32>) -> Self {
+        Self::F32(s)
+    }
+}
+
+impl From<InferenceServer<i64>> for ModelServer {
+    fn from(s: InferenceServer<i64>) -> Self {
+        Self::I64(s)
+    }
+}
+
+impl ModelServer {
+    fn row_len(&self) -> usize {
+        match self {
+            Self::F32(s) => s.row_len(),
+            Self::I64(s) => s.row_len(),
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        match self {
+            Self::F32(s) => s.out_len(),
+            Self::I64(s) => s.out_len(),
+        }
+    }
+
+    fn stats(&self) -> Result<ServerStats> {
+        match self {
+            Self::F32(s) => s.stats(),
+            Self::I64(s) => s.stats(),
+        }
+    }
+
+    fn shutdown(self) -> Result<ServerStats> {
+        match self {
+            Self::F32(s) => s.shutdown(),
+            Self::I64(s) => s.shutdown(),
+        }
+    }
+
+    /// The lane's wire dtype tag ([`ServeScalar::WIRE_TAG`]).
+    pub fn dtype(&self) -> u8 {
+        match self {
+            Self::F32(_) => <f32 as ServeScalar>::WIRE_TAG,
+            Self::I64(_) => <i64 as ServeScalar>::WIRE_TAG,
+        }
+    }
+
+    /// The lane's dtype name ([`ServeScalar::DTYPE`]).
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            Self::F32(_) => <f32 as ServeScalar>::DTYPE,
+            Self::I64(_) => <i64 as ServeScalar>::DTYPE,
+        }
+    }
+}
 
 /// The outcome bucket a request's accounting lands in — exactly one
 /// per routed request.
@@ -46,7 +113,7 @@ pub struct RegisteredModel {
     pub artifact: ArtifactSpec,
     /// admission-cost units one request is charged while queued
     pub row_cost: u64,
-    server: InferenceServer,
+    server: ModelServer,
     counters: Mutex<IngressCounters>,
 }
 
@@ -57,6 +124,16 @@ impl RegisteredModel {
 
     pub fn out_len(&self) -> usize {
         self.server.out_len()
+    }
+
+    /// The model's serving dtype as its wire tag.
+    pub fn dtype(&self) -> u8 {
+        self.server.dtype()
+    }
+
+    /// The model's serving dtype name (`"float32"` / `"int64"`).
+    pub fn dtype_str(&self) -> &'static str {
+        self.server.dtype_str()
     }
 
     /// Snapshot this model's front-door account.
@@ -99,7 +176,7 @@ impl ModelRegistry {
         name: &str,
         artifact: ArtifactSpec,
         row_cost: u64,
-        server: InferenceServer,
+        server: impl Into<ModelServer>,
     ) -> Result<()> {
         if self.models.iter().any(|m| m.name == name) {
             bail!("model {name:?} is already registered");
@@ -108,7 +185,7 @@ impl ModelRegistry {
             name: name.to_string(),
             artifact,
             row_cost,
-            server,
+            server: server.into(),
             counters: Mutex::new(IngressCounters::default()),
         });
         Ok(())
@@ -141,6 +218,7 @@ impl ModelRegistry {
             .iter()
             .map(|m| ModelInfo {
                 name: m.name.clone(),
+                dtype: m.dtype(),
                 row_len: m.row_len() as u32,
                 out_len: m.out_len() as u32,
                 row_cost: m.row_cost,
@@ -185,16 +263,42 @@ impl ModelRegistry {
         *self.unroutable.lock().unwrap() += 1;
     }
 
-    /// Submit one row to a model's server, charged at the model's
+    /// Submit one f32 row to a model's server, charged at the model's
     /// `row_cost`. Typed errors; the caller translates them to wire
-    /// rejections and does the outcome accounting.
+    /// rejections and does the outcome accounting. An f32 row meeting
+    /// an integer model is the typed [`SubmitError::WrongDtype`].
     #[allow(clippy::type_complexity)]
     pub fn try_submit(
         &self,
         model: &RegisteredModel,
         input: Vec<f32>,
     ) -> std::result::Result<Receiver<std::result::Result<Vec<f32>, String>>, SubmitError> {
-        model.server.try_submit(input, model.row_cost)
+        match &model.server {
+            ModelServer::F32(s) => s.try_submit(input, model.row_cost),
+            ModelServer::I64(_) => Err(SubmitError::WrongDtype {
+                got: <f32 as ServeScalar>::DTYPE,
+                want: model.dtype_str(),
+            }),
+        }
+    }
+
+    /// [`Self::try_submit`]'s integer lane: one i64 row to a quantized
+    /// model. An i64 row meeting an f32 model is the typed
+    /// [`SubmitError::WrongDtype`] — never a lossy coercion (f32 is
+    /// only exact to 2²⁴; the qnn logits are full-width).
+    #[allow(clippy::type_complexity)]
+    pub fn try_submit_i64(
+        &self,
+        model: &RegisteredModel,
+        input: Vec<i64>,
+    ) -> std::result::Result<Receiver<std::result::Result<Vec<i64>, String>>, SubmitError> {
+        match &model.server {
+            ModelServer::I64(s) => s.try_submit(input, model.row_cost),
+            ModelServer::F32(_) => Err(SubmitError::WrongDtype {
+                got: <i64 as ServeScalar>::DTYPE,
+                want: model.dtype_str(),
+            }),
+        }
     }
 
     /// Snapshot the pooled front-door account.
@@ -401,6 +505,82 @@ mod tests {
         assert_eq!(report.totals.served, 1);
         assert_eq!(report.per_model[0].server.served, 1);
         assert_eq!(report.per_model[0].artifact.args[0].shape, vec![4, 3]);
+    }
+
+    /// The integer-lane twin of [`Doubler`].
+    struct DoublerI64;
+
+    impl BatchExecutor<i64> for DoublerI64 {
+        fn row_len(&self) -> usize {
+            3
+        }
+        fn batch_rows(&self) -> usize {
+            4
+        }
+        fn out_len(&self) -> usize {
+            3
+        }
+        fn run(&mut self, rows_flat: &[i64]) -> Result<Vec<i64>> {
+            Ok(rows_flat.iter().map(|v| v * 2).collect())
+        }
+    }
+
+    fn start_doubler_i64() -> InferenceServer<i64> {
+        InferenceServer::start(
+            4,
+            Duration::from_millis(2),
+            64,
+            0,
+            1,
+            |_| Ok(DoublerI64),
+            |_| Ok(None::<DoublerI64>),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dtype_lanes_advertise_and_reject_typed() {
+        let mut reg = ModelRegistry::new();
+        reg.register("double", doubler_artifact(), 1, start_doubler()).unwrap();
+        reg.register(
+            "qdouble",
+            ArtifactSpec::declared(
+                "qdouble",
+                vec![TensorSpec::new(vec![4, 3], "int64")],
+                vec![TensorSpec::new(vec![4, 3], "int64")],
+            ),
+            3,
+            start_doubler_i64(),
+        )
+        .unwrap();
+
+        let infos = reg.infos();
+        assert_eq!(infos[0].dtype, <f32 as ServeScalar>::WIRE_TAG);
+        assert_eq!(infos[1].dtype, <i64 as ServeScalar>::WIRE_TAG);
+
+        // the integer lane serves exactly, beyond f32's 2^24 range
+        let m = reg.route("qdouble").unwrap();
+        assert_eq!(m.dtype_str(), "int64");
+        reg.count_submitted(m);
+        let big = (1i64 << 40) + 1;
+        let rx = reg.try_submit_i64(m, vec![big, -2, 3]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), [2 * big, -4, 6]);
+        reg.record(m, Outcome::Served);
+
+        // a row in the wrong lane is a typed error, not a coercion
+        match reg.try_submit(m, vec![1.0, 2.0, 3.0]) {
+            Err(SubmitError::WrongDtype { got: "float32", want: "int64" }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let f = reg.route("double").unwrap();
+        match reg.try_submit_i64(f, vec![1, 2, 3]) {
+            Err(SubmitError::WrongDtype { got: "int64", want: "float32" }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let report = reg.shutdown().unwrap();
+        report.check_conservation().unwrap();
+        assert_eq!(report.totals.served, 1);
     }
 
     #[test]

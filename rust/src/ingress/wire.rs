@@ -6,36 +6,52 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "FS"
-//! 2       1     version (currently 1)
+//! 2       1     version (currently 2)
 //! 3       1     kind    (see [`kind`])
 //! 4       4     payload length, u32 LE (≤ [`MAX_PAYLOAD`])
 //! ```
 //!
 //! Request payloads:
-//! * `INFER`: `u16 name_len · name bytes (utf-8) · u32 n · n × f32 LE`
+//! * `INFER`: `u16 name_len · name bytes (utf-8) · u8 dtype · u32 n ·
+//!   n × element LE`
 //! * `LIST`:  empty
 //!
 //! Response payloads:
-//! * `OUTPUT`:   `u32 n · n × f32 LE` — one inference result row
-//! * `MODELS`:   `u16 count · count × { u16 name_len · name · u32
-//!   row_len · u32 out_len · u64 row_cost }`
+//! * `OUTPUT`:   `u8 dtype · u32 n · n × element LE` — one inference
+//!   result row
+//! * `MODELS`:   `u16 count · count × { u16 name_len · name · u8 dtype
+//!   · u32 row_len · u32 out_len · u64 row_cost }`
 //! * `REJECTED`: `u16 code · u16 msg_len · msg bytes` — every failure
 //!   the server can express is a *typed* rejection carried on the wire
 //!   ([`WireError::code`]), never a silent drop or a bare hang-up.
+//!
+//! Since protocol version 2 every row-carrying payload leads its
+//! elements with a one-byte **dtype tag** ([`ServeScalar::WIRE_TAG`]:
+//! `0x01` = float32 at 4 bytes/element, `0x02` = int64 at 8) so a
+//! quantized model's i64 logits travel bit-exact — never squeezed
+//! through an f32 lane that is only exact to 2²⁴. A row whose tag
+//! disagrees with the model's serving dtype is rejected with the typed
+//! [`WireError::DtypeMismatch`], a payload-level (non-fatal) error: the
+//! framing is intact, the connection stays usable.
 //!
 //! The codec is split into `encode_*_into` / `decode_*` halves that
 //! work against caller-owned buffers, so a warmed session loop reuses
 //! its scratch space: the hot-path encoders (`frame_into`,
 //! `encode_infer_into`, `encode_output_into`) are registered with the
 //! srclint warm-alloc gate and only ever `clear`/`extend` their
-//! buffers.
+//! buffers. Decoding is likewise split: [`decode_infer_head`] reads the
+//! name + dtype tag (enough for the listener to route to the right
+//! typed serving lane), [`decode_infer_row`] then decodes the elements
+//! for the lane's concrete scalar.
 
 use std::io::{Read, Write};
 
+use crate::coordinator::ServeScalar;
+
 /// Frame magic: "FS" for Fair & Square.
 pub const MAGIC: [u8; 2] = *b"FS";
-/// Protocol version carried in every header.
-pub const VERSION: u8 = 1;
+/// Protocol version carried in every header (2 = dtype-tagged rows).
+pub const VERSION: u8 = 2;
 /// Header size on the wire.
 pub const HEADER_LEN: usize = 8;
 /// Hard payload bound: anything larger is rejected before allocation
@@ -78,6 +94,10 @@ pub enum WireError {
     UnknownModel { name: String, have: String },
     /// infer row arity does not match the model's declared row_len
     WrongArity { model: String, got: usize, want: usize },
+    /// infer row dtype does not match the model's serving dtype —
+    /// e.g. an i64 row sent to an f32 model: a typed rejection, never
+    /// a lossy coercion or a decode panic
+    DtypeMismatch { model: String, got: &'static str, want: &'static str },
     /// cost-aware admission control rejected the request (queue full
     /// or cost budget exhausted) — explicit back-pressure
     QueueFull { model: String },
@@ -101,6 +121,7 @@ impl WireError {
             Self::QueueFull { .. } => 8,
             Self::Exec { .. } => 9,
             Self::Shutdown => 10,
+            Self::DtypeMismatch { .. } => 11,
         }
     }
 
@@ -138,6 +159,9 @@ impl std::fmt::Display for WireError {
             }
             Self::WrongArity { model, got, want } => {
                 write!(f, "model {model:?}: input has {got} features, model wants {want}")
+            }
+            Self::DtypeMismatch { model, got, want } => {
+                write!(f, "model {model:?}: input dtype {got}, model wants {want}")
             }
             Self::QueueFull { model } => {
                 write!(f, "model {model:?}: queue full — admission control rejected the request")
@@ -257,14 +281,27 @@ pub fn write_frame(
     w.flush()
 }
 
-/// Encode an `INFER` payload: model name + one input row.
-pub fn encode_infer_into(out: &mut Vec<u8>, model: &str, row: &[f32]) {
+/// Human name of a wire dtype tag, for banners and rejection text.
+pub fn dtype_name(tag: u8) -> &'static str {
+    const F32: u8 = <f32 as ServeScalar>::WIRE_TAG;
+    const I64: u8 = <i64 as ServeScalar>::WIRE_TAG;
+    match tag {
+        F32 => <f32 as ServeScalar>::DTYPE,
+        I64 => <i64 as ServeScalar>::DTYPE,
+        _ => "unknown",
+    }
+}
+
+/// Encode an `INFER` payload: model name, the row's dtype tag, then the
+/// row elements in the scalar's own little-endian width.
+pub fn encode_infer_into<T: ServeScalar>(out: &mut Vec<u8>, model: &str, row: &[T]) {
     out.clear();
     out.extend_from_slice(&(model.len() as u16).to_le_bytes());
     out.extend_from_slice(model.as_bytes());
+    out.push(T::WIRE_TAG);
     out.extend_from_slice(&(row.len() as u32).to_le_bytes());
-    for v in row {
-        out.extend_from_slice(&v.to_le_bytes());
+    for &v in row {
+        v.write_le(out);
     }
 }
 
@@ -295,42 +332,92 @@ fn take_u64(b: &mut &[u8], what: &'static str) -> Result<u64, WireError> {
     Ok(u64::from_le_bytes(a))
 }
 
-/// Decode an `INFER` payload into `row` (cleared first); returns the
-/// model name borrowed from the payload.
-pub fn decode_infer<'a>(mut p: &'a [u8], row: &mut Vec<f32>) -> Result<&'a str, WireError> {
+/// Everything an `INFER` payload declares before its row bytes: the
+/// model name, the row's dtype tag and arity, plus the undecoded
+/// element bytes. The listener decodes this first, routes on the model's
+/// serving dtype, then hands the head to the matching
+/// [`decode_infer_row`] lane — so a mismatched dtype is a typed
+/// rejection *before* any element decoding can go wrong.
+#[derive(Debug)]
+pub struct InferHead<'a> {
+    /// model name borrowed from the payload
+    pub name: &'a str,
+    /// the row's [`ServeScalar::WIRE_TAG`]
+    pub dtype: u8,
+    /// declared element count
+    pub n: usize,
+    body: &'a [u8],
+}
+
+/// Decode the head of an `INFER` payload (name + dtype + arity).
+pub fn decode_infer_head(mut p: &[u8]) -> Result<InferHead<'_>, WireError> {
     let name_len = take_u16(&mut p, "infer name length")? as usize;
     let name = take(&mut p, name_len, "infer name bytes")?;
     let name =
         std::str::from_utf8(name).map_err(|_| WireError::Malformed { what: "infer name utf-8" })?;
+    let dtype = take(&mut p, 1, "infer dtype tag")?[0];
     let n = take_u32(&mut p, "infer row arity")? as usize;
-    if p.len() != n * 4 {
+    Ok(InferHead { name, dtype, n, body: p })
+}
+
+/// Decode the row elements of an `INFER` head into `row` (cleared
+/// first), for the concrete scalar `T`. The head's dtype tag must match
+/// `T` — the listener routes on the tag before picking the lane, so a
+/// mismatch here means the payload lied about itself.
+pub fn decode_infer_row<T: ServeScalar>(
+    head: &InferHead<'_>,
+    row: &mut Vec<T>,
+) -> Result<(), WireError> {
+    if head.dtype != T::WIRE_TAG {
+        return Err(WireError::Malformed { what: "infer dtype tag" });
+    }
+    if head.body.len() != head.n * T::WIRE_SIZE {
         return Err(WireError::Malformed { what: "infer row bytes" });
     }
     row.clear();
-    for c in p.chunks_exact(4) {
-        row.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    for c in head.body.chunks_exact(T::WIRE_SIZE) {
+        row.push(T::read_le(c));
     }
-    Ok(name)
+    Ok(())
 }
 
-/// Encode an `OUTPUT` payload: one response row.
-pub fn encode_output_into(out: &mut Vec<u8>, row: &[f32]) {
+/// Decode a whole `INFER` payload into `row` (cleared first); returns
+/// the model name borrowed from the payload. The composed head + row
+/// form, for callers that already know the dtype they expect.
+pub fn decode_infer<'a, T: ServeScalar>(
+    p: &'a [u8],
+    row: &mut Vec<T>,
+) -> Result<&'a str, WireError> {
+    let head = decode_infer_head(p)?;
+    decode_infer_row(&head, row)?;
+    Ok(head.name)
+}
+
+/// Encode an `OUTPUT` payload: the row's dtype tag, then one response
+/// row in the scalar's own little-endian width.
+pub fn encode_output_into<T: ServeScalar>(out: &mut Vec<u8>, row: &[T]) {
     out.clear();
+    out.push(T::WIRE_TAG);
     out.extend_from_slice(&(row.len() as u32).to_le_bytes());
-    for v in row {
-        out.extend_from_slice(&v.to_le_bytes());
+    for &v in row {
+        v.write_le(out);
     }
 }
 
-/// Decode an `OUTPUT` payload into `row` (cleared first).
-pub fn decode_output(mut p: &[u8], row: &mut Vec<f32>) -> Result<(), WireError> {
+/// Decode an `OUTPUT` payload into `row` (cleared first). The payload's
+/// dtype tag must match `T` — the client knows which model it queried.
+pub fn decode_output<T: ServeScalar>(mut p: &[u8], row: &mut Vec<T>) -> Result<(), WireError> {
+    let tag = take(&mut p, 1, "output dtype tag")?[0];
+    if tag != T::WIRE_TAG {
+        return Err(WireError::Malformed { what: "output dtype tag" });
+    }
     let n = take_u32(&mut p, "output arity")? as usize;
-    if p.len() != n * 4 {
+    if p.len() != n * T::WIRE_SIZE {
         return Err(WireError::Malformed { what: "output row bytes" });
     }
     row.clear();
-    for c in p.chunks_exact(4) {
-        row.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    for c in p.chunks_exact(T::WIRE_SIZE) {
+        row.push(T::read_le(c));
     }
     Ok(())
 }
@@ -339,6 +426,9 @@ pub fn decode_output(mut p: &[u8], row: &mut Vec<f32>) -> Result<(), WireError> 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelInfo {
     pub name: String,
+    /// the model's serving dtype ([`ServeScalar::WIRE_TAG`]) — rows
+    /// submitted to it must carry the same tag
+    pub dtype: u8,
     pub row_len: u32,
     pub out_len: u32,
     /// admission-cost units one request of this model is charged
@@ -352,6 +442,7 @@ pub fn encode_models_into(out: &mut Vec<u8>, models: &[ModelInfo]) {
     for m in models {
         out.extend_from_slice(&(m.name.len() as u16).to_le_bytes());
         out.extend_from_slice(m.name.as_bytes());
+        out.push(m.dtype);
         out.extend_from_slice(&m.row_len.to_le_bytes());
         out.extend_from_slice(&m.out_len.to_le_bytes());
         out.extend_from_slice(&m.row_cost.to_le_bytes());
@@ -368,10 +459,11 @@ pub fn decode_models(mut p: &[u8]) -> Result<Vec<ModelInfo>, WireError> {
         let name = std::str::from_utf8(name)
             .map_err(|_| WireError::Malformed { what: "model name utf-8" })?
             .to_string();
+        let dtype = take(&mut p, 1, "model dtype")?[0];
         let row_len = take_u32(&mut p, "model row_len")?;
         let out_len = take_u32(&mut p, "model out_len")?;
         let row_cost = take_u64(&mut p, "model row_cost")?;
-        models.push(ModelInfo { name, row_len, out_len, row_cost });
+        models.push(ModelInfo { name, dtype, row_len, out_len, row_cost });
     }
     if !p.is_empty() {
         return Err(WireError::Malformed { what: "trailing model bytes" });
@@ -423,24 +515,70 @@ mod tests {
             ReadOutcome::Frame { kind: k } => assert_eq!(k, kind::INFER),
             other => panic!("unexpected {other:?}"),
         }
-        let mut row = Vec::new();
+        let mut row: Vec<f32> = Vec::new();
         let name = decode_infer(&got_payload, &mut row).unwrap();
         assert_eq!(name, "dense");
         assert_eq!(row, [1.0, -2.5, 3.25]);
     }
 
     #[test]
+    fn i64_rows_travel_bit_exact() {
+        // values beyond 2^24 (and i64::MAX itself) prove the integer
+        // lane never rides the f32 encoding, which is only exact to 2^24
+        let logits = [i64::MAX, i64::MIN, (1 << 40) + 1, -5, 0];
+        let mut p = Vec::new();
+        encode_infer_into(&mut p, "qnn", &logits);
+        let mut row: Vec<i64> = Vec::new();
+        let name = decode_infer(&p, &mut row).unwrap();
+        assert_eq!(name, "qnn");
+        assert_eq!(row, logits);
+
+        encode_output_into(&mut p, &logits);
+        decode_output(&p, &mut row).unwrap();
+        assert_eq!(row, logits);
+    }
+
+    #[test]
+    fn dtype_tag_mismatch_is_typed_not_a_panic() {
+        // an i64 row decoded down the f32 lane fails on the tag, before
+        // any element bytes are touched
+        let mut p = Vec::new();
+        encode_infer_into(&mut p, "dense", &[7i64]);
+        let head = decode_infer_head(&p).unwrap();
+        assert_eq!(head.dtype, <i64 as ServeScalar>::WIRE_TAG);
+        let mut row: Vec<f32> = Vec::new();
+        assert_eq!(
+            decode_infer_row(&head, &mut row),
+            Err(WireError::Malformed { what: "infer dtype tag" })
+        );
+
+        let mut out = Vec::new();
+        encode_output_into(&mut out, &[7i64]);
+        assert_eq!(
+            decode_output::<f32>(&out, &mut row),
+            Err(WireError::Malformed { what: "output dtype tag" })
+        );
+
+        assert_eq!(dtype_name(<f32 as ServeScalar>::WIRE_TAG), "float32");
+        assert_eq!(dtype_name(<i64 as ServeScalar>::WIRE_TAG), "int64");
+        assert_eq!(dtype_name(0x7F), "unknown");
+    }
+
+    #[test]
     fn output_and_models_roundtrip() {
         let mut p = Vec::new();
         encode_output_into(&mut p, &[0.5, f32::MIN_POSITIVE]);
-        let mut row = Vec::new();
+        let mut row: Vec<f32> = Vec::new();
         decode_output(&p, &mut row).unwrap();
         assert_eq!(row.len(), 2);
         assert_eq!(row[1].to_bits(), f32::MIN_POSITIVE.to_bits());
 
+        let f32_tag = <f32 as ServeScalar>::WIRE_TAG;
+        let i64_tag = <i64 as ServeScalar>::WIRE_TAG;
         let models = vec![
-            ModelInfo { name: "dense".into(), row_len: 784, out_len: 10, row_cost: 1 },
-            ModelInfo { name: "conv".into(), row_len: 784, out_len: 5408, row_cost: 8 },
+            ModelInfo { name: "dense".into(), dtype: f32_tag, row_len: 784, out_len: 10, row_cost: 1 },
+            ModelInfo { name: "conv".into(), dtype: f32_tag, row_len: 784, out_len: 5408, row_cost: 8 },
+            ModelInfo { name: "qnn".into(), dtype: i64_tag, row_len: 784, out_len: 10, row_cost: 3 },
         ];
         encode_models_into(&mut p, &models);
         assert_eq!(decode_models(&p).unwrap(), models);
@@ -520,7 +658,7 @@ mod tests {
 
     #[test]
     fn malformed_payloads_are_typed_not_panics() {
-        let mut row = Vec::new();
+        let mut row: Vec<f32> = Vec::new();
         // truncated name
         let p = [5u8, 0, b'd'];
         assert!(matches!(
@@ -529,7 +667,7 @@ mod tests {
         ));
         // row byte count disagrees with declared arity
         let mut p = Vec::new();
-        encode_infer_into(&mut p, "m", &[1.0]);
+        encode_infer_into(&mut p, "m", &[1.0f32]);
         p.truncate(p.len() - 1);
         assert!(matches!(
             decode_infer(&p, &mut row),
@@ -555,9 +693,9 @@ mod tests {
     #[test]
     fn warm_encoders_reuse_the_buffer_in_place() {
         let mut buf = Vec::with_capacity(256);
-        encode_output_into(&mut buf, &[1.0; 32]);
+        encode_output_into(&mut buf, &[1.0f32; 32]);
         let warm = buf.as_ptr();
-        encode_output_into(&mut buf, &[2.0; 32]);
+        encode_output_into(&mut buf, &[2.0f32; 32]);
         assert_eq!(buf.as_ptr(), warm, "warmed encode must not reallocate");
         let mut frame = Vec::with_capacity(512);
         frame_into(&mut frame, kind::OUTPUT, &buf);

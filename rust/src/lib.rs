@@ -19,6 +19,7 @@
 //! | [`arith`]       | scalar square-trick primitives (eq. 1/2, CPM, CPM3), fixed-point bit budgets |
 //! | [`linalg`]      | op-counted reference stack: every operation in direct and square-based form |
 //! | [`linalg::engine`] | the serving hot path: cache-blocked, multi-threaded square kernels with cached constant-B corrections |
+//! | [`qnn`]         | exact int8 quantized inference: multi-layer `QMlp` pipelines fused onto the blocked square engine, requantisation in place, per-layer corrections hoisted once per pool |
 //! | [`gates`]       | gate-level cost models: array multiplier vs folded squarer, MAC/PMAC/CPM blocks |
 //! | [`sim`]         | cycle-accurate simulators of the paper's Fig. 1–14 architectures |
 //! | [`runtime`]     | PJRT CPU runtime loading the AOT-compiled JAX/Pallas artifacts (`pjrt` feature; stub otherwise) |
@@ -51,6 +52,7 @@ pub mod coordinator;
 pub mod gates;
 pub mod ingress;
 pub mod linalg;
+pub mod qnn;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

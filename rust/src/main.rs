@@ -9,6 +9,7 @@
 //! * `serve`    — batching inference server over the AOT artifacts (E6)
 //! * `list`     — artifacts available in the manifest
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -16,7 +17,8 @@ use anyhow::{anyhow, bail, Result};
 use fairsquare::benchkit::{f, Table};
 use fairsquare::cli::Args;
 use fairsquare::coordinator::{
-    InferenceServer, PjrtExecutor, Routing, TileConfig, WorkloadGen,
+    InferenceServer, PjrtExecutor, QnnExecutor, QnnScalarExecutor, Routing, ServerStats,
+    TileConfig, WorkloadGen,
 };
 use fairsquare::gates::report;
 use fairsquare::ingress;
@@ -64,8 +66,17 @@ COMMANDS:
                                    complex  plane-split CPM3 complex
                                             matmul (64→16) fed QPSK
                                             symbols
+                                   qnn      exact int8 two-layer MLP
+                                            (784→64→10) served as int64
+                                            rows end to end — requant
+                                            (shift + saturating ReLU)
+                                            fused into the blocked
+                                            square engine, logits
+                                            bit-exact vs the scalar
+                                            QMlp::forward oracle
                                  each shadowed by its direct-multiplier
-                                 twin; without --native, --model names a
+                                 twin (qnn: by the scalar integer
+                                 oracle); without --native, --model names a
                                  PJRT artifact. --workers W shards the
                                  server into W worker threads behind one
                                  dispatcher that injects batches onto
@@ -105,7 +116,7 @@ COMMANDS:
                                  ingress speaking the length-prefixed
                                  wire protocol (see README \"Network
                                  serving\"), register the --models set
-                                 (default dense,conv,complex — each
+                                 (default dense,conv,complex,qnn — each
                                  model's §3/§9 corrections hoisted once
                                  at registration, shared by all
                                  workers), then drive --requests
@@ -118,7 +129,7 @@ COMMANDS:
                                  and duplicate names. --cost-budget
                                  UNITS bounds each model's *queued*
                                  admission cost (dense rows cost 1,
-                                 complex 2, conv 8); over-budget
+                                 complex 2, qnn 3, conv 8); over-budget
                                  requests get a typed wire rejection
                                  (omit the flag for the count bound
                                  only; 0 is rejected, not clamped).
@@ -429,6 +440,12 @@ fn serve(args: &Args) -> Result<()> {
         None
     };
 
+    // the qnn model serves int64 rows, so it drives its own typed lane
+    // (same pool, same knobs, different scalar)
+    if native && model == "qnn" {
+        return serve_qnn(args, requests, rps, shadow_wanted, workers, routing, tiling);
+    }
+
     // complex requests are plane-split QPSK rows, conv requests are NCHW
     // images with --in-ch planes, everything else serves MNIST-like
     // vectors; sized to match the executors built below
@@ -635,7 +652,7 @@ fn serve(args: &Args) -> Result<()> {
             }
             other => bail!(
                 "unknown native model {other:?}; native models are \
-                 dense, conv, complex"
+                 dense, conv, complex, qnn"
             ),
         }
     } else {
@@ -705,7 +722,81 @@ fn serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     let stats = srv.shutdown()?;
+    print_serve_report(&stats, ok, requests, wall)
+}
 
+/// `serve --native --model qnn`: the int64 serving lane — the same
+/// pool/knob surface as the f32 models, but the fused int8 pipeline
+/// executor behind it and quantized MNIST-like rows in front of it.
+fn serve_qnn(
+    args: &Args,
+    requests: usize,
+    rps: f64,
+    shadow_wanted: bool,
+    workers: usize,
+    routing: Routing,
+    tiling: Option<TileConfig>,
+) -> Result<()> {
+    let threads = args.get_usize("threads", fairsquare::linalg::engine::max_threads())?;
+    let per_worker_threads = (threads / workers).max(1);
+    let cfg = fairsquare::linalg::engine::EngineConfig::with_threads(per_worker_threads);
+    let shadow_every = if shadow_wanted { 8 } else { 0 };
+    let steal_str = if routing == Routing::Steal { "on" } else { "off" };
+    let shadow_str = if shadow_wanted { "scalar QMlp oracle" } else { "off" };
+    println!(
+        "starting server: native qnn int8 model 784→64→10 (requant fused \
+         into the blocked square pipeline, exact integer logits), \
+         {workers} worker(s) ({per_worker_threads} engine threads each) \
+         steal={steal_str} shadow={shadow_str}"
+    );
+    let mlp = ingress::qnn_model();
+    let (prepared, _prep_ops) = fairsquare::qnn::PreparedQnn::new_shared(&mlp);
+    let shadow_mlp = Arc::new(mlp);
+    let srv: InferenceServer<i64> = InferenceServer::start_tiled(
+        32,
+        Duration::from_millis(2),
+        1024,
+        shadow_every,
+        workers,
+        routing,
+        tiling,
+        move |_wid| Ok(QnnExecutor::from_shared(prepared.clone(), 32, cfg.clone())),
+        move |_wid| {
+            if shadow_wanted {
+                Ok(Some(QnnScalarExecutor::new(shadow_mlp.clone(), 32)))
+            } else {
+                Ok(None)
+            }
+        },
+    )?;
+
+    let mut gen = WorkloadGen::new(0xE6);
+    let gaps = gen.arrival_gaps_us(requests, rps);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for gap in gaps {
+        std::thread::sleep(Duration::from_micros(gap.min(5_000)));
+        pending.push(srv.submit(gen.quant_mnist_like())?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = srv.shutdown()?;
+    print_serve_report(&stats, ok, requests, wall)
+}
+
+/// The pooled + per-worker E6 serving report, shared by the f32 and
+/// the int64 serving lanes (the stats are dtype-independent).
+fn print_serve_report(
+    stats: &ServerStats,
+    ok: usize,
+    requests: usize,
+    wall: Duration,
+) -> Result<()> {
     let l = stats.latency;
     let mut t = Table::new("E6 — serving report (pooled)", &["metric", "value"]);
     t.row(&["workers".into(), stats.workers.to_string()]);
@@ -776,7 +867,7 @@ fn serve_listen(args: &Args, listen: &str) -> Result<()> {
         }
     }
     let addr = ingress::parse_listen_addr(listen)?;
-    let names = ingress::parse_model_list(args.get_or("models", "dense,conv,complex"))?;
+    let names = ingress::parse_model_list(args.get_or("models", "dense,conv,complex,qnn"))?;
     let requests = args.get_usize("requests", 96)?;
     let rps = args.get_u64("rps", 2_000)? as f64;
     let clients = args.get_usize("clients", 3)?;
@@ -839,9 +930,17 @@ fn serve_listen(args: &Args, listen: &str) -> Result<()> {
             for (k, gap) in gaps.into_iter().enumerate() {
                 std::thread::sleep(Duration::from_micros(gap.min(5_000)));
                 let name = &names[(c + k) % names.len()];
-                let row = ingress::sample_input(&mut gen, name)?;
-                match client.infer(name, &row)? {
-                    Ok(_out) => ok += 1,
+                // the qnn model speaks the int64 wire lane; everything
+                // else rides f32 — same client, dtype picked per model
+                let outcome = if name == "qnn" {
+                    let row = ingress::sample_input_i64(&mut gen, name)?;
+                    client.infer(name, &row)?.map(|_out| ())
+                } else {
+                    let row = ingress::sample_input(&mut gen, name)?;
+                    client.infer(name, &row)?.map(|_out| ())
+                };
+                match outcome {
+                    Ok(()) => ok += 1,
                     Err(_rejection) => rejected += 1,
                 }
             }

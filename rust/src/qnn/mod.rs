@@ -1,0 +1,440 @@
+//! The exact int8 quantized-inference subsystem: multi-layer
+//! [`QMlp`](crate::linalg::qnn::QMlp) pipelines lowered onto the blocked,
+//! multi-threaded square-kernel engine — the paper's §3 deployment story
+//! served for real. An n-bit squarer costs roughly half an n×n
+//! multiplier, and over int8 weights with i64 accumulators the square
+//! trick is *exact*, so this is the datapath where the win is honest:
+//! integer ops/s with bit-identical results, not float ops/s with an
+//! error budget.
+//!
+//! [`PreparedQnn`] is the load-time artifact: every layer's weight
+//! corrections `Sb_j = −Σ_k w_kj²` (eq. 5) are computed **once** —
+//! [`PreparedB`] per layer — and shared across a whole serving pool via
+//! one `Arc`, the §3 "constant matrix" amortisation extended across
+//! layers and workers. The per-request pipeline
+//! ([`PreparedQnn::forward_into`]) is *fused*: each layer's GEMM lands in
+//! a workspace checkout, the requantisation (`+bias`, `>> shift`,
+//! `max(0)` ReLU) is applied **in place** on that buffer, and the buffer
+//! is handed to the next layer as its input matrix — no intermediate
+//! activation matrix is ever materialised on the heap, so a warmed
+//! single-threaded pipeline performs **zero** allocations per batch (the
+//! `qnn_serving` bench pins this under a counting allocator).
+//!
+//! The tile form ([`PreparedQnn::forward_tile_into`]) slots into the
+//! serving pool's §3.3 fork path: the request-wide layer-0 activation
+//! corrections are hoisted once per request
+//! ([`row_corrections_into`] over the full input), tiles then pay only
+//! their own rows — and because hidden activations are tile-local, inner
+//! layers hoist per tile. The hoisted ledgers
+//! ([`PreparedQnn::forward_ledger`], [`PreparedQnn::hoist_ledger`],
+//! [`PreparedQnn::tile_ledger`]) reproduce per-element counting exactly:
+//! `hoist(m) + Σ tiles == forward(m) ==` the scalar
+//! [`QMlp::forward`](crate::linalg::qnn::QMlp::forward) square-arithmetic
+//! ledger (the tests assert all three identities).
+
+use std::sync::Arc;
+
+use crate::linalg::engine::{
+    matmul_square_prepared_into, matmul_square_prepared_tile_into,
+    row_corrections_into, row_corrections_ledger, square_matmul_const_b_ledger,
+    square_matmul_tile_ledger, EngineConfig, EngineWorkspace, PreparedB,
+};
+use crate::linalg::qnn::QMlp;
+use crate::linalg::{Matrix, OpCounts};
+
+/// One quantized dense layer, serving form: the weight matrix behind a
+/// [`PreparedB`] correction cache (the load-time `Sb` hoist) plus the
+/// requantisation constants the fused pipeline applies in place.
+#[derive(Debug)]
+pub struct PreparedQLayer {
+    pb: PreparedB<i64>,
+    bias: Vec<i64>,
+    shift: u32,
+    linear: bool,
+}
+
+impl PreparedQLayer {
+    /// Input features this layer consumes.
+    pub fn in_features(&self) -> usize {
+        self.pb.in_features()
+    }
+
+    /// Output features this layer produces.
+    pub fn out_features(&self) -> usize {
+        self.pb.out_features()
+    }
+}
+
+/// A whole quantized MLP prepared for serving: per-layer `PreparedB`
+/// caches, built once per model (or per pool via [`PreparedQnn::new_shared`]).
+#[derive(Debug)]
+pub struct PreparedQnn {
+    layers: Vec<PreparedQLayer>,
+}
+
+impl PreparedQnn {
+    /// Prepare every layer of `mlp` (computing and caching each layer's
+    /// `N·P` correction squares). The returned ledger is the one-time
+    /// preparation cost, paid once per model lifetime.
+    pub fn new(mlp: &QMlp) -> (Self, OpCounts) {
+        assert!(!mlp.layers.is_empty(), "empty model");
+        let mut prep_ops = OpCounts::ZERO;
+        let mut layers = Vec::with_capacity(mlp.layers.len());
+        let mut expect_in = mlp.layers[0].w.rows;
+        for layer in &mlp.layers {
+            assert_eq!(layer.w.rows, expect_in, "layer arity chain");
+            expect_in = layer.w.cols;
+            let (pb, ops) = PreparedB::new(layer.w.clone());
+            prep_ops += ops;
+            layers.push(PreparedQLayer {
+                pb,
+                bias: layer.bias.clone(),
+                shift: layer.shift,
+                linear: layer.linear,
+            });
+        }
+        (Self { layers }, prep_ops)
+    }
+
+    /// Prepare and wrap for sharing: a serving pool hands every worker a
+    /// clone of the returned `Arc`, so the per-layer correction cost is
+    /// paid exactly once no matter how many workers serve the model.
+    pub fn new_shared(mlp: &QMlp) -> (Arc<Self>, OpCounts) {
+        let (p, ops) = Self::new(mlp);
+        (Arc::new(p), ops)
+    }
+
+    /// Features a request row must carry (layer 0's input arity).
+    pub fn in_features(&self) -> usize {
+        self.layers[0].pb.in_features()
+    }
+
+    /// Logits per request row (the last layer's output arity).
+    pub fn out_features(&self) -> usize {
+        self.layers[self.layers.len() - 1].pb.out_features()
+    }
+
+    /// The prepared layers, in pipeline order.
+    pub fn layers(&self) -> &[PreparedQLayer] {
+        &self.layers
+    }
+
+    /// Hoisted ledger of one fused forward over an `m`-row batch: per
+    /// layer the constant-B square matmul
+    /// ([`square_matmul_const_b_ledger`]) plus the fused requantisation
+    /// (`m·p` bias adds; `m·p` shifts unless the layer is linear).
+    /// Equals the scalar [`QMlp::forward`] square-arithmetic ledger,
+    /// which is itself asserted against per-element counting.
+    pub fn forward_ledger(&self, m: usize) -> OpCounts {
+        let mut ops = OpCounts::ZERO;
+        for layer in &self.layers {
+            ops += square_matmul_const_b_ledger(
+                m,
+                layer.pb.in_features(),
+                layer.pb.out_features(),
+            );
+            ops += requant_ledger(m, layer.pb.out_features(), layer.linear);
+        }
+        ops
+    }
+
+    /// The once-per-request tile hoist: layer 0's full-input activation
+    /// corrections (`m·n₀` squares), paid exactly once no matter how
+    /// many tiles the request forks into.
+    pub fn hoist_ledger(&self, m: usize) -> OpCounts {
+        row_corrections_ledger(m, self.in_features())
+    }
+
+    /// Hoisted ledger of ONE `mi`-row tile of the fused pipeline: layer 0
+    /// pays only its tile matmul (its corrections were hoisted — see
+    /// [`Self::hoist_ledger`]); every inner layer pays a tile-local
+    /// correction hoist (hidden activations exist only inside the tile)
+    /// plus its tile matmul; every layer pays its tile's requantisation.
+    /// Summed over any disjoint tiling of `[0, M)` and added to
+    /// [`Self::hoist_ledger`], this reproduces [`Self::forward_ledger`]
+    /// exactly (the tests assert it).
+    pub fn tile_ledger(&self, mi: usize) -> OpCounts {
+        let mut ops = OpCounts::ZERO;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (n, p) = (layer.pb.in_features(), layer.pb.out_features());
+            if li > 0 {
+                ops += row_corrections_ledger(mi, n);
+            }
+            ops += square_matmul_tile_ledger(mi, n, p);
+            ops += requant_ledger(mi, p, layer.linear);
+        }
+        ops
+    }
+
+    /// The fused forward: logits of the `m`-row batch `x` into `out`
+    /// (resized to `m·out_features`), every intermediate drawn from `ws`.
+    /// Each layer's GEMM lands in a workspace checkout, is requantised
+    /// **in place**, and becomes the next layer's input matrix via
+    /// `Matrix::from_vec` — no intermediate activation is materialised on
+    /// the heap, so once `ws` and `out` are warm the call performs zero
+    /// allocations with `cfg.threads == 1` (the scoped threaded driver
+    /// allocates per spawn by construction). Returns exactly
+    /// [`Self::forward_ledger`]`(m)`.
+    pub fn forward_into(
+        &self,
+        x: &Matrix<i64>,
+        cfg: &EngineConfig,
+        ws: &mut EngineWorkspace<i64>,
+        out: &mut Vec<i64>,
+    ) -> OpCounts {
+        assert_eq!(x.cols, self.in_features(), "input arity");
+        let m = x.rows;
+        let last = self.layers.len() - 1;
+        let mut ops = OpCounts::ZERO;
+        let mut prev: Option<Matrix<i64>> = None;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let p = layer.pb.out_features();
+            // the last layer lands in the caller's reused buffer, hidden
+            // layers in a workspace checkout that the next layer consumes
+            let mut z = if li == last {
+                std::mem::take(out)
+            } else {
+                ws.checkout(m * p)
+            };
+            {
+                let h = prev.as_ref().unwrap_or(x);
+                ops += matmul_square_prepared_into(h, &layer.pb, cfg, ws, &mut z);
+            }
+            ops += requantise_rows(&mut z, layer);
+            if let Some(h) = prev.take() {
+                ws.give_back(h.into_data());
+            }
+            if li == last {
+                *out = z;
+            } else {
+                prev = Some(Matrix::from_vec(m, p, z));
+            }
+        }
+        ops
+    }
+
+    /// The fused forward over one §3.3 tile `[i0, i1)` of a request:
+    /// `a_full` is the whole request batch, `sa0` its request-wide
+    /// layer-0 row corrections (hoisted once by the caller via
+    /// [`row_corrections_into`]), and `out_tile` exactly the tile's
+    /// logits partition (`(i1−i0)·out_features`, a disjoint sub-slice of
+    /// the request output, so concurrent tiles need no locking). Hidden
+    /// activations are tile-local, so inner layers hoist their own
+    /// corrections here. Values are byte-identical to the untiled
+    /// [`Self::forward_into`] rows; the returned ledger is exactly
+    /// [`Self::tile_ledger`]`(i1 − i0)`.
+    pub fn forward_tile_into(
+        &self,
+        a_full: &Matrix<i64>,
+        sa0: &[i64],
+        i0: usize,
+        i1: usize,
+        out_tile: &mut [i64],
+        cfg: &EngineConfig,
+        ws: &mut EngineWorkspace<i64>,
+    ) -> OpCounts {
+        assert!(i0 <= i1 && i1 <= a_full.rows, "tile row range out of bounds");
+        let mi = i1 - i0;
+        let last = self.layers.len() - 1;
+        let mut ops = OpCounts::ZERO;
+        let mut prev: Option<Matrix<i64>> = None;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let p = layer.pb.out_features();
+            // lint-ok(warm-alloc): an empty Vec never allocates — the
+            // last layer writes through `out_tile` and ignores `hidden`
+            let mut hidden = if li == last { Vec::new() } else { ws.checkout(mi * p) };
+            {
+                let dst: &mut [i64] =
+                    if li == last { &mut *out_tile } else { &mut hidden };
+                match prev.as_ref() {
+                    // layer 0 spends the request-wide hoist the caller paid
+                    None => {
+                        ops += matmul_square_prepared_tile_into(
+                            a_full, &layer.pb, sa0, i0, i1, dst, cfg,
+                        );
+                    }
+                    // hidden activations live only in this tile: hoist here
+                    Some(h) => {
+                        let mut sa = ws.checkout(mi);
+                        row_corrections_into(h, &mut sa);
+                        ops += row_corrections_ledger(mi, h.cols);
+                        ops += matmul_square_prepared_tile_into(
+                            h, &layer.pb, &sa, 0, mi, dst, cfg,
+                        );
+                        ws.give_back(sa);
+                    }
+                }
+                ops += requantise_rows(dst, layer);
+            }
+            if let Some(h) = prev.take() {
+                ws.give_back(h.into_data());
+            }
+            if li != last {
+                prev = Some(Matrix::from_vec(mi, p, hidden));
+            }
+        }
+        ops
+    }
+}
+
+/// The fused requantisation: `v = z + bias_j`, then unless the layer is
+/// linear `v = max(v >> shift, 0)` — applied **in place** on the layer's
+/// GEMM buffer, one pass, no scratch. Identical arithmetic (and ledger)
+/// to the scalar [`QMlp::forward`] requantisation.
+fn requantise_rows(z: &mut [i64], layer: &PreparedQLayer) -> OpCounts {
+    let p = layer.bias.len();
+    debug_assert_eq!(z.len() % p, 0);
+    for row in z.chunks_mut(p) {
+        for (v, &b) in row.iter_mut().zip(&layer.bias) {
+            let t = *v + b;
+            *v = if layer.linear { t } else { (t >> layer.shift).max(0) };
+        }
+    }
+    requant_ledger(z.len() / p, p, layer.linear)
+}
+
+/// Hoisted ledger of the fused requantisation over `m·p` elements.
+fn requant_ledger(m: usize, p: usize, linear: bool) -> OpCounts {
+    let mp = (m * p) as u64;
+    OpCounts {
+        adds: mp,
+        shifts: if linear { 0 } else { mp },
+        ..OpCounts::ZERO
+    }
+}
+
+/// Argmax class of one logits row, resolving ties to the **highest**
+/// index — exactly [`QMlp::classify`]'s `max_by_key` tie-breaking, so
+/// the wire client and the scalar oracle can never disagree on a class.
+pub fn argmax_logits(row: &[i64]) -> usize {
+    assert!(!row.is_empty(), "empty logits row");
+    let mut best = 0;
+    for (j, &v) in row.iter().enumerate() {
+        if v >= row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qnn::QArith;
+    use crate::testkit::Rng;
+
+    fn batch(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<i64> {
+        Matrix::random(rng, rows, cols, 0, 127)
+    }
+
+    #[test]
+    fn fused_pipeline_is_bit_identical_to_scalar_oracle() {
+        let mlp = QMlp::random(&[48, 32, 20, 10], 0x91);
+        let (prep, _) = PreparedQnn::new(&mlp);
+        assert_eq!(prep.in_features(), 48);
+        assert_eq!(prep.out_features(), 10);
+        assert_eq!(prep.layers().len(), 3);
+        let mut rng = Rng::new(0x92);
+        let mut ws = EngineWorkspace::new();
+        let mut out = Vec::new();
+        for cfg in [EngineConfig::default(), EngineConfig::with_threads(2)] {
+            for _ in 0..4 {
+                let x = batch(&mut rng, 6, 48);
+                let (want, _) = mlp.forward(&x, QArith::Direct);
+                let ops = prep.forward_into(&x, &cfg, &mut ws, &mut out);
+                assert_eq!(out, want.data(), "fused pipeline drifted");
+                assert_eq!(ops, prep.forward_ledger(6), "hoisted ledger drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_ledger_equals_scalar_per_element_counting() {
+        // the scalar QMlp square path counts per call (its own tests pin
+        // it to per-element counting); the fused ledger must match it
+        let mlp = QMlp::random(&[32, 24, 10], 0x93);
+        let (prep, prep_ops) = PreparedQnn::new(&mlp);
+        // load-time cost: each layer's N·P correction squares
+        assert_eq!(prep_ops.squares, (32 * 24 + 24 * 10) as u64);
+        let mut rng = Rng::new(0x94);
+        let x = batch(&mut rng, 8, 32);
+        let (_, scalar_ops) = mlp.forward(&x, QArith::Square);
+        assert_eq!(prep.forward_ledger(8), scalar_ops);
+    }
+
+    #[test]
+    fn tile_ledgers_and_values_reassemble_the_full_forward() {
+        let mlp = QMlp::random(&[24, 16, 8], 0x95);
+        let (prep, _) = PreparedQnn::new(&mlp);
+        let mut rng = Rng::new(0x96);
+        let m = 7;
+        let x = batch(&mut rng, m, 24);
+        let cfg = EngineConfig::default();
+        let mut ws = EngineWorkspace::new();
+        let mut full = Vec::new();
+        let full_ops = prep.forward_into(&x, &cfg, &mut ws, &mut full);
+
+        // the request-wide layer-0 hoist, once
+        let mut sa0 = vec![0i64; m];
+        row_corrections_into(&x, &mut sa0);
+        let mut tiled = vec![0i64; m * prep.out_features()];
+        let mut summed = prep.hoist_ledger(m);
+        for (i0, i1) in [(0usize, 3usize), (3, 4), (4, 7)] {
+            let out_tile =
+                &mut tiled[i0 * prep.out_features()..i1 * prep.out_features()];
+            let ops =
+                prep.forward_tile_into(&x, &sa0, i0, i1, out_tile, &cfg, &mut ws);
+            assert_eq!(ops, prep.tile_ledger(i1 - i0));
+            summed += ops;
+        }
+        assert_eq!(tiled, full, "tiled pipeline drifted from the untiled one");
+        assert_eq!(summed, full_ops, "hoist + tiles must reassemble the ledger");
+    }
+
+    #[test]
+    fn warmed_pipeline_stops_allocating() {
+        let mlp = QMlp::random(&[32, 24, 10], 0x97);
+        let (prep, _) = PreparedQnn::new(&mlp);
+        let mut rng = Rng::new(0x98);
+        let cfg = EngineConfig::default(); // threads == 1: the zero-alloc claim
+        let mut ws = EngineWorkspace::new();
+        let mut out = Vec::new();
+        let x = batch(&mut rng, 4, 32);
+        prep.forward_into(&x, &cfg, &mut ws, &mut out);
+        let warm = ws.grows();
+        assert!(warm > 0, "warm-up must populate the arena");
+        for _ in 0..5 {
+            let x = batch(&mut rng, 4, 32);
+            prep.forward_into(&x, &cfg, &mut ws, &mut out);
+        }
+        assert_eq!(ws.grows(), warm, "steady-state batches must not allocate");
+    }
+
+    #[test]
+    fn argmax_matches_classify_tie_breaking() {
+        let logits = Matrix::from_vec(3, 4, vec![1, 9, 9, 2, -5, -5, -9, -7, 3, 3, 3, 3]);
+        let want = QMlp::classify(&logits);
+        for i in 0..3 {
+            assert_eq!(argmax_logits(logits.row(i)), want[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn shared_prep_serves_identically_across_clones() {
+        let mlp = QMlp::random(&[16, 12, 6], 0x99);
+        let (shared, _) = PreparedQnn::new_shared(&mlp);
+        let mut rng = Rng::new(0x9A);
+        let x = batch(&mut rng, 3, 16);
+        let cfg = EngineConfig::default();
+        let mut outs = Vec::new();
+        for _worker in 0..3 {
+            let prep = shared.clone();
+            let mut ws = EngineWorkspace::new();
+            let mut out = Vec::new();
+            prep.forward_into(&x, &cfg, &mut ws, &mut out);
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+}

@@ -208,6 +208,45 @@ mod tests {
     }
 
     #[test]
+    fn non_string_dtype_is_a_typed_error() {
+        // a numeric dtype is a schema mismatch, not a coercible value
+        let err =
+            load_with_spec("numdtype", r#"{"shape":[2,3],"dtype":42}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("missing dtype"), "got: {err:#}");
+    }
+
+    #[test]
+    fn int64_specs_parse_and_match_declared() {
+        // the qnn serving lane declares int64 tensors through the same
+        // machinery float32 artifacts parse through; the two forms must
+        // agree or the ingress dtype advertisements would drift from the
+        // manifest vocabulary
+        let dir = std::env::temp_dir().join("fairsq_registry_int64");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","entries":[
+                {"name":"qnn","path":"qnn.hlo.txt",
+                 "args":[{"shape":[32,784],"dtype":"int64"}],
+                 "outputs":[{"shape":[32,10],"dtype":"int64"}]}]}"#,
+        )
+        .unwrap();
+        let parsed = Registry::load(&dir).unwrap().get("qnn").unwrap().clone();
+        assert_eq!(parsed.args[0].dtype, "int64");
+        assert_eq!(parsed.outputs[0].dtype, "int64");
+        let declared = ArtifactSpec::declared(
+            "qnn",
+            vec![TensorSpec::new(vec![32, 784], "int64")],
+            vec![TensorSpec::new(vec![32, 10], "int64")],
+        );
+        assert_eq!(declared.args, parsed.args);
+        assert_eq!(declared.outputs, parsed.outputs);
+        // dtype is part of spec identity: the same shape in a different
+        // dtype is a different tensor
+        assert_ne!(TensorSpec::new(vec![32, 784], "int64"), TensorSpec::new(vec![32, 784], "float32"));
+    }
+
+    #[test]
     fn non_integer_dim_is_a_typed_error() {
         let err =
             load_with_spec("baddim", r#"{"shape":[2,"wide"],"dtype":"float32"}"#).unwrap_err();

@@ -588,6 +588,120 @@ fn tile_ledgers_sum_to_hoisted_const_b_ledger() {
     }
 }
 
+/// The qnn tentpole's correctness contract, end to end: random quantized
+/// MLPs (random layer widths, random seeds) served through the deque
+/// pool must produce logits **byte-identical** to the scalar multiplier
+/// oracle `QMlp::forward(…, Direct)` — across pool widths {1, 4}, both
+/// routing policies, and the §3.3 tile fork — with the conservation law
+/// `rows served + rejected == rows submitted` holding in every combo.
+/// The exact-integer domain means there is no tolerance anywhere: one
+/// flipped bit anywhere in the fused pipeline fails this test.
+#[test]
+fn qnn_serving_bit_exact_vs_scalar_reference() {
+    use fairsquare::coordinator::{InferenceServer, QnnExecutor, Routing, TileConfig};
+    use fairsquare::linalg::qnn::{QArith, QMlp};
+    use fairsquare::qnn::PreparedQnn;
+    use std::time::Duration;
+
+    let mut rng = Rng::new(0x0977);
+    let (batch, requests) = (4usize, 80usize);
+    for round in 0..4 {
+        // random architecture: 2 or 3 layers, random widths, random seed
+        let mut dims = vec![rng.usize_in(6, 20), rng.usize_in(4, 16)];
+        if rng.usize_in(0, 1) == 1 {
+            dims.push(rng.usize_in(3, 12));
+        }
+        dims.push(rng.usize_in(2, 10));
+        let seed = rng.i64_in(1, 1 << 30) as u64;
+        let mlp = QMlp::random(&dims, seed);
+        let (prepared, _) = PreparedQnn::new_shared(&mlp);
+        let (in_f, out_f) = (dims[0], *dims.last().unwrap());
+
+        // int8-ranged request rows, one scalar-oracle logits row each
+        let inputs: Vec<Vec<i64>> = (0..requests)
+            .map(|_| (0..in_f).map(|_| rng.i64_in(0, 127)).collect())
+            .collect();
+        let oracle: Vec<Vec<i64>> = inputs
+            .iter()
+            .map(|row| {
+                let x = Matrix::from_vec(1, in_f, row.clone());
+                mlp.forward(&x, QArith::Direct).0.into_data()
+            })
+            .collect();
+
+        let mut reference: Option<Vec<Vec<i64>>> = None;
+        for workers in [1usize, 4] {
+            for routing in [Routing::Fifo, Routing::Steal] {
+                // tile_rows 2 under a zero threshold: every full batch forks
+                for tiling in [None, Some(TileConfig { threshold: 0, tile_rows: 2, heavy_cost: 1 })] {
+                    let pb = prepared.clone();
+                    let srv = InferenceServer::start_tiled(
+                        batch,
+                        Duration::from_micros(200),
+                        4096, // deep enough that nothing is rejected
+                        0,
+                        workers,
+                        routing,
+                        tiling,
+                        move |_| {
+                            Ok(QnnExecutor::from_shared(
+                                pb.clone(),
+                                batch,
+                                EngineConfig::with_threads(1),
+                            ))
+                        },
+                        |_| Ok(None::<QnnExecutor>),
+                    )
+                    .unwrap();
+                    let pending: Vec<_> = inputs
+                        .iter()
+                        .map(|row| srv.submit(row.clone()).unwrap())
+                        .collect();
+                    let outs: Vec<Vec<i64>> = pending
+                        .into_iter()
+                        .map(|rx| rx.recv().unwrap().unwrap())
+                        .collect();
+                    let stats = srv.shutdown().unwrap();
+
+                    let ctx = format!(
+                        "round={round} dims={dims:?} seed={seed:#x} \
+                         workers={workers} {routing:?} tiled={}",
+                        tiling.is_some()
+                    );
+                    // conservation: every submitted row served exactly once
+                    assert_eq!(
+                        stats.rows + stats.rejected,
+                        requests as u64,
+                        "rows lost or duplicated ({ctx})"
+                    );
+                    assert_eq!(stats.rejected, 0, "deep queue must never reject ({ctx})");
+                    if tiling.is_none() {
+                        assert_eq!(stats.tiles_executed, 0, "untiled combo forked ({ctx})");
+                    } else {
+                        assert!(stats.tiled_requests >= 1, "no batch ever forked ({ctx})");
+                        assert_eq!(
+                            stats.per_worker.iter().map(|w| w.tiles_executed).sum::<u64>(),
+                            stats.tiles_executed,
+                            "tile accounting leak ({ctx})"
+                        );
+                    }
+
+                    // byte-identical to the scalar multiplier oracle
+                    for (i, (got, want)) in outs.iter().zip(&oracle).enumerate() {
+                        assert_eq!(got.len(), out_f, "logits arity ({ctx})");
+                        assert_eq!(got, want, "logits row {i} drifted ({ctx})");
+                    }
+                    // and across every pool/routing/tiling combo
+                    match &reference {
+                        Some(want) => assert_eq!(&outs, want, "combo changed bits ({ctx})"),
+                        None => reference = Some(outs),
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Routing-policy property (the PR 5 tentpole's correctness contract):
 /// one identical skewed request stream — dense-light rows with
 /// occasional conv-heavy-cost ones, replayed from one seed — must

@@ -1,8 +1,9 @@
-//! End-to-end tests of the TCP ingress: three concurrently registered
-//! models served over real sockets, byte-identical to the in-process
-//! executor path, with conservation-checked accounting through
-//! disconnects, typed rejections, cost-aware admission and shutdown
-//! with live connections.
+//! End-to-end tests of the TCP ingress: four concurrently registered
+//! models — three float32 lanes and the int64 qnn lane — served over
+//! real sockets, byte-identical to the in-process executor path (and,
+//! for qnn, to the scalar integer oracle), with conservation-checked
+//! accounting through disconnects, typed rejections (arity, dtype,
+//! admission), cost-aware admission and shutdown with live connections.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -16,11 +17,11 @@ use fairsquare::ingress::{
 };
 use fairsquare::runtime::{ArtifactSpec, TensorSpec};
 
-/// The native trio behind a fresh ingress on an ephemeral loopback
+/// The native quartet behind a fresh ingress on an ephemeral loopback
 /// port: workers ≥ 2 per model, stealing on, shadow off (the shadow
 /// twins have their own gates; here they would only slow the sockets
 /// down).
-fn trio_server() -> IngressServer {
+fn quartet_server() -> IngressServer {
     let cfg = NativeServing {
         workers: 2,
         routing: Routing::Steal,
@@ -38,46 +39,65 @@ fn trio_server() -> IngressServer {
 }
 
 #[test]
-fn trio_over_tcp_byte_identical_and_conserved() {
-    let server = trio_server();
+fn quartet_over_tcp_byte_identical_and_conserved() {
+    let server = quartet_server();
     let addr = server.local_addr();
 
-    // the advertised model table matches the catalogue
+    // the advertised model table matches the catalogue, dtypes included
     let mut probe = TcpClient::connect(addr).unwrap();
     let infos = probe.list_models().unwrap();
-    assert_eq!(infos.len(), 3);
+    assert_eq!(infos.len(), 4);
     for (info, name) in infos.iter().zip(MODEL_NAMES) {
         assert_eq!(info.name, *name);
         assert_eq!(info.row_cost, ingress::default_row_cost(name));
+        let want_dtype = if *name == "qnn" { "int64" } else { "float32" };
+        assert_eq!(wire::dtype_name(info.dtype), want_dtype, "model {name}");
     }
     assert_eq!(infos[0].row_len, 784);
     assert_eq!(infos[0].out_len, 10);
+    let qnn_info = infos.iter().find(|i| i.name == "qnn").unwrap();
+    assert_eq!(qnn_info.row_len, 784);
+    assert_eq!(qnn_info.out_len, 10);
     drop(probe);
 
     // three concurrent clients, each walking the model list round-robin
-    // from a different offset so in-flight requests mix models
+    // from a different offset so in-flight requests mix models — and
+    // dtypes: float32 rows and int64 rows interleave on every connection
     const CLIENTS: usize = 3;
     const PER_CLIENT: usize = 12;
+    type Served = (Vec<(String, Vec<f32>, Vec<f32>)>, Vec<(Vec<i64>, Vec<i64>)>);
     let mut drivers = Vec::new();
     for c in 0..CLIENTS {
-        drivers.push(std::thread::spawn(move || -> Result<Vec<(String, Vec<f32>, Vec<f32>)>> {
+        drivers.push(std::thread::spawn(move || -> Result<Served> {
             let mut gen = WorkloadGen::new(0xE8 + c as u64);
             let mut client = TcpClient::connect(addr)?;
-            let mut served = Vec::new();
+            let mut served_f32 = Vec::new();
+            let mut served_qnn = Vec::new();
             for k in 0..PER_CLIENT {
                 let name = MODEL_NAMES[(c + k) % MODEL_NAMES.len()];
-                let row = ingress::sample_input(&mut gen, name)?;
-                let out = client
-                    .infer(name, &row)?
-                    .map_err(|r| anyhow::anyhow!("unexpected rejection: {r}"))?;
-                served.push((name.to_string(), row, out));
+                if name == "qnn" {
+                    let row = ingress::sample_input_i64(&mut gen, name)?;
+                    let out = client
+                        .infer(name, &row)?
+                        .map_err(|r| anyhow::anyhow!("unexpected rejection: {r}"))?;
+                    served_qnn.push((row, out));
+                } else {
+                    let row = ingress::sample_input(&mut gen, name)?;
+                    let out = client
+                        .infer(name, &row)?
+                        .map_err(|r| anyhow::anyhow!("unexpected rejection: {r}"))?;
+                    served_f32.push((name.to_string(), row, out));
+                }
             }
-            Ok(served)
+            Ok((served_f32, served_qnn))
         }));
     }
     let mut served = Vec::new();
+    let mut served_qnn = Vec::new();
     for d in drivers {
-        served.extend(d.join().unwrap().unwrap());
+        let (f32s, qnns) = d.join().unwrap().unwrap();
+        served.extend(f32s);
+        served_qnn.extend(qnns);
     }
 
     let report = server.shutdown().unwrap();
@@ -98,7 +118,7 @@ fn trio_over_tcp_byte_identical_and_conserved() {
     // kernels compute output rows independently, so however the pool
     // batched these requests, each response must match a single-row
     // reference run bit for bit
-    for name in MODEL_NAMES {
+    for name in MODEL_NAMES.iter().filter(|n| **n != "qnn") {
         let inputs: Vec<Vec<f32>> = served
             .iter()
             .filter(|(n, _, _)| n == name)
@@ -116,6 +136,63 @@ fn trio_over_tcp_byte_identical_and_conserved() {
             for (a, b) in got.iter().zip(want) {
                 assert_eq!(a.to_bits(), b.to_bits(), "model {name} drifted over TCP");
             }
+        }
+    }
+    // qnn byte-identity is against the scalar multiplier oracle — the
+    // exact-integer guarantee holds all the way through the socket
+    let qnn_inputs: Vec<Vec<i64>> = served_qnn.iter().map(|(row, _)| row.clone()).collect();
+    let qnn_want = ingress::reference_rows_qnn(&qnn_inputs).unwrap();
+    assert_eq!(served_qnn.len(), CLIENTS * PER_CLIENT / MODEL_NAMES.len());
+    for ((_, got), want) in served_qnn.iter().zip(&qnn_want) {
+        assert_eq!(got, want, "qnn logits drifted over TCP");
+    }
+}
+
+#[test]
+fn dtype_mismatch_is_a_typed_rejection_and_conserved() {
+    let server = quartet_server();
+    let addr = server.local_addr();
+    let mut client = TcpClient::connect(addr).unwrap();
+    let mut gen = WorkloadGen::new(0xD7);
+    let mismatch_code =
+        wire::WireError::DtypeMismatch { model: String::new(), got: "", want: "" }.code();
+
+    // a float32 row down the int64 qnn lane: typed dtype rejection that
+    // names both dtypes — never a decode error, never a wrong answer
+    let row_f32 = ingress::sample_input(&mut gen, "dense").unwrap();
+    let rej = client.infer("qnn", &row_f32).unwrap().unwrap_err();
+    assert_eq!(rej.code, mismatch_code, "got: {rej}");
+    assert!(
+        rej.message.contains("float32") && rej.message.contains("int64"),
+        "the rejection must name both dtypes: {rej}"
+    );
+
+    // and the mirror image: an int64 row down a float32 lane
+    let row_i64 = ingress::sample_input_i64(&mut gen, "qnn").unwrap();
+    let rej = client.infer("dense", &row_i64).unwrap().unwrap_err();
+    assert_eq!(rej.code, mismatch_code, "got: {rej}");
+
+    // the session survived both: the same connection serves real traffic
+    // on both lanes
+    let out = client.infer("dense", &row_f32).unwrap().unwrap();
+    assert_eq!(out.len(), 10);
+    let out = client.infer("qnn", &row_i64).unwrap().unwrap();
+    let want = ingress::reference_rows_qnn(std::slice::from_ref(&row_i64)).unwrap();
+    assert_eq!(out, want[0], "qnn logits drifted after a dtype rejection");
+    drop(client);
+
+    // dtype mismatches are real submissions that were rejected — the
+    // conservation law counts them, it does not lose them
+    let report = server.shutdown().unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.totals.submitted, 4);
+    assert_eq!(report.totals.served, 2);
+    assert_eq!(report.totals.rejected, 2);
+    for m in &report.per_model {
+        if m.name == "qnn" || m.name == "dense" {
+            assert_eq!(m.ingress.submitted, 2, "model {}", m.name);
+            assert_eq!(m.ingress.served, 1, "model {}", m.name);
+            assert_eq!(m.ingress.rejected, 1, "model {}", m.name);
         }
     }
 }

@@ -23,25 +23,35 @@
 #     allocs_steady_state / allocs_steady_state_tiled fields (0 across
 #     every native executor incl. the shadow twins and the warmed
 #     prepare_tiles/run_tile_into fork path, enforced inside the bench)
-#   * ingress: the TCP front door — mixed-model soak (dense + conv +
-#     complex registered concurrently, concurrent client connections
-#     over real loopback sockets) gated inside the bench on
-#     byte-identity vs the in-process path and on front-door
+#   * ingress: the TCP front door — mixed-model soak (the three float32
+#     lanes dense + conv + complex registered concurrently, concurrent
+#     client connections over real loopback sockets) gated inside the
+#     bench on byte-identity vs the in-process path and on front-door
 #     conservation; writes rust/BENCH_ingress.json, whose engine-side
 #     allocs_steady_state field must be 0 (grep-gated here as well)
+#   * qnn_serving: the exact int8 quantized lane — the fused requant
+#     pipeline must hold allocs_steady_state = 0 under the counting
+#     allocator (untiled and tile-forked), the fused logits must be
+#     bit-exact vs the scalar QMlp oracle, and the TCP leg must serve
+#     byte-identical int64 logits with front-door conservation; writes
+#     rust/BENCH_qnn_serving.json (allocs_steady_state / conserved /
+#     byte_mismatches / bit_exact grep-gated here as well)
 #   * CLI smokes: the sharded dense server under both routing policies
 #     (`serve --native --workers 2 --steal off|on`), the tile-forking
 #     whale mix (`--tile-threshold/--tile/--heavy-frac/--heavy-size`),
 #     the two lowering workloads (`--model conv`, `--model complex`),
 #     the generalized NCHW conv geometry
-#     (`--model conv --in-ch 3 --stride 2 --pad 1 --dilation 2`) and the
-#     network front door (`serve --listen --models dense,conv,complex`
-#     driving three TCP clients over loopback)
+#     (`--model conv --in-ch 3 --stride 2 --pad 1 --dilation 2`), the
+#     quantized int8 lane on the sharded pool
+#     (`--model qnn --workers 2`) and the network front door
+#     (`serve --listen --models dense,conv,complex,qnn` driving three
+#     TCP clients, mixed f32/int64 dtypes, over loopback)
 #
 # Every bench leaves its JSON in rust/ AND a copy at the repo root
 # (BENCH_blocked_engine.json, BENCH_blocked_conv.json,
-# BENCH_e2e_serving.json, BENCH_ingress.json), so downstream tooling
-# reads one canonical location without knowing the cargo layout.
+# BENCH_e2e_serving.json, BENCH_ingress.json, BENCH_qnn_serving.json),
+# so downstream tooling reads one canonical location without knowing
+# the cargo layout.
 #   * srclint: the std-only static-analysis pass (unsafe audit vs the
 #     checked-in inventory, warm-path allocation lint, lock-order +
 #     atomic-ordering lint, panic-path lint) plus the bounded interleaving
@@ -127,9 +137,34 @@ if ! grep -q '"byte_mismatches":0' BENCH_ingress.json; then
     exit 1
 fi
 
+echo "==> cargo bench --bench qnn_serving -- ${MODE:-(full)}"
+rm -f BENCH_qnn_serving.json
+# shellcheck disable=SC2086
+cargo bench --bench qnn_serving -- $MODE
+if [[ ! -f BENCH_qnn_serving.json ]]; then
+    echo "verify FAILED: BENCH_qnn_serving.json was not produced" >&2
+    exit 1
+fi
+if ! grep -q '"allocs_steady_state":0' BENCH_qnn_serving.json; then
+    echo "verify FAILED: BENCH_qnn_serving.json fused-pipeline allocs_steady_state != 0" >&2
+    exit 1
+fi
+if ! grep -q '"bit_exact":1' BENCH_qnn_serving.json; then
+    echo "verify FAILED: BENCH_qnn_serving.json fused logits diverged from the scalar oracle" >&2
+    exit 1
+fi
+if ! grep -q '"byte_mismatches":0' BENCH_qnn_serving.json; then
+    echo "verify FAILED: BENCH_qnn_serving.json TCP logits diverged from the in-process oracle" >&2
+    exit 1
+fi
+if ! grep -q '"conserved":1' BENCH_qnn_serving.json; then
+    echo "verify FAILED: BENCH_qnn_serving.json TCP soak was not conserved" >&2
+    exit 1
+fi
+
 echo "==> publishing BENCH_*.json to the repo root"
 for artifact in BENCH_blocked_engine.json BENCH_blocked_conv.json \
-    BENCH_e2e_serving.json BENCH_ingress.json; do
+    BENCH_e2e_serving.json BENCH_ingress.json BENCH_qnn_serving.json; do
     if [[ ! -f "$artifact" ]]; then
         echo "verify FAILED: $artifact was not produced" >&2
         exit 1
@@ -160,12 +195,16 @@ cargo run --release --quiet -- serve --native --model conv \
 echo "==> serve --native --model complex smoke"
 cargo run --release --quiet -- serve --native --model complex --requests 64 --rps 4000
 
-echo "==> serve --listen mixed-model TCP smoke (the network front door)"
+echo "==> serve --native --model qnn --workers 2 smoke (exact int8 lane)"
+cargo run --release --quiet -- serve --native --model qnn --workers 2 --steal on \
+    --requests 64 --rps 4000
+
+echo "==> serve --listen mixed-dtype TCP smoke (the network front door)"
 # a fixed high port: --listen validates addresses strictly and rejects
 # port 0 (no silent kernel-assigned fixup), so the smoke names its own
 INGRESS_PORT="${VERIFY_INGRESS_PORT:-17878}"
 cargo run --release --quiet -- serve --listen "127.0.0.1:${INGRESS_PORT}" \
-    --models dense,conv,complex --clients 3 --workers 2 --steal on \
+    --models dense,conv,complex,qnn --clients 3 --workers 2 --steal on \
     --requests 96 --rps 4000
 
 echo "==> cargo clippy --all-targets -- -D warnings"
