@@ -10,9 +10,11 @@
 //! |------|----------|
 //! | `unsafe-audit`     | every `unsafe` carries a `// SAFETY:` comment within 3 lines *and* an entry in [`unsafe_inventory.txt`](self::Registry) |
 //! | `warm-alloc`       | registered zero-alloc warm paths contain no allocating constructs |
-//! | `lock-order`       | nested `.lock()` in `coordinator/server.rs` and the ingress follows deque (0) < gate (1) < spares/tile_spares (2) < counters (3) < totals (4) |
+//! | `lock-order`       | nested `.lock()` in `coordinator/server.rs` and the ingress follows deque (0) < gate (1) < spares/tile_spares/conns (2) < counters (3) < totals (4) |
 //! | `atomic-ordering`  | no `Ordering::Relaxed` on protocol atomics; every atomic op has a rationale comment nearby |
 //! | `panic-path`       | `unwrap`/`expect`/`panic!` in `coordinator/` and `ingress/` needs a `lint-ok` annotation (lock/condvar poisoning idiom exempt) |
+//! | `ledger-audit`     | every square-engine entry point is paired in [`ledger_registry.txt`](self::Registry) with a hoisted `*_ledger` fn that a test asserts equal to per-element counting |
+//! | `wire-codes`       | the `WireError` code table matches [`wire_codes.txt`](self::Registry): dense, never reused, stable fatal/recoverable split, every code documented in README |
 //!
 //! Every rule has the same escape hatch: a `// lint-ok(rule): reason`
 //! comment on (or up to two lines above) the flagged line, or an entry
@@ -35,8 +37,15 @@ use crate::config::Json;
 use scanner::FileScan;
 
 /// Every rule name, in report order.
-pub const RULES: &[&str] =
-    &["unsafe-audit", "warm-alloc", "lock-order", "atomic-ordering", "panic-path"];
+pub const RULES: &[&str] = &[
+    "unsafe-audit",
+    "warm-alloc",
+    "lock-order",
+    "atomic-ordering",
+    "panic-path",
+    "ledger-audit",
+    "wire-codes",
+];
 
 /// One rule violation.
 #[derive(Debug, Clone)]
@@ -92,6 +101,20 @@ pub struct Registry {
     pub inventory: String,
     /// text of the allowlist (`rule | file | substring` per line)
     pub allow: String,
+    /// files `ledger-audit` discovers engine entry points in (path
+    /// suffix match)
+    pub ledger_files: Vec<&'static str>,
+    /// fn-name prefixes that mark a `pub fn` as an engine entry point
+    pub ledger_prefixes: Vec<&'static str>,
+    /// text of the ledger registry (`file | entry fn | ledger fn`)
+    pub ledger_registry: String,
+    /// files holding the `WireError` code table for `wire-codes`
+    pub wire_files: Vec<&'static str>,
+    /// text of the committed wire-code inventory (`code variant
+    /// fatal|recoverable`); empty skips the inventory cross-check
+    pub wire_inventory: String,
+    /// README text the wire codes must be documented in; empty skips
+    pub wire_doc: String,
 }
 
 impl Registry {
@@ -153,10 +176,30 @@ impl Registry {
                 "ingress/registry.rs",
             ],
             lock_ranks: default_lock_ranks(),
-            relaxed_files: vec!["coordinator/server.rs", "ingress/listener.rs"],
+            relaxed_files: vec!["coordinator/server.rs", "ingress/", "qnn/"],
             panic_files: vec!["coordinator/", "ingress/"],
             inventory: include_str!("unsafe_inventory.txt").to_string(),
             allow: include_str!("lint_allow.txt").to_string(),
+            ledger_files: vec![
+                "linalg/engine/blocked.rs",
+                "linalg/engine/conv.rs",
+                "linalg/engine/complex.rs",
+                "linalg/matmul.rs",
+                "qnn/mod.rs",
+            ],
+            ledger_prefixes: vec![
+                "matmul_square",
+                "conv2d_square",
+                "apply",
+                "mul",
+                "cmatmul_",
+                "cconv1d_",
+                "forward",
+            ],
+            ledger_registry: include_str!("ledger_registry.txt").to_string(),
+            wire_files: vec!["ingress/wire.rs"],
+            wire_inventory: include_str!("wire_codes.txt").to_string(),
+            wire_doc: include_str!("../../../README.md").to_string(),
         }
     }
 
@@ -176,18 +219,34 @@ impl Registry {
             panic_files: vec!["unannotated_panic.rs", "clean.rs"],
             inventory: String::new(),
             allow: String::new(),
+            ledger_files: vec!["ledgerless_engine_fn.rs", "clean.rs"],
+            ledger_prefixes: vec![
+                "matmul_square",
+                "conv2d_square",
+                "apply",
+                "mul",
+                "cmatmul_",
+                "cconv1d_",
+                "forward",
+            ],
+            ledger_registry: "clean.rs | matmul_square_toy | toy_square_ledger\n".to_string(),
+            wire_files: vec!["reused_wire_code.rs", "clean.rs"],
+            wire_inventory: String::new(),
+            wire_doc: String::new(),
         }
     }
 }
 
 /// The declared lock order: worker deques (index-ascending among
-/// themselves) < gate < spares/tile_spares in `coordinator/server.rs`,
-/// then the ingress accounts — a model's `.counters` (3) before the
-/// pooled `.totals` (4). The ingress code takes them in sequential
-/// scopes today, so the ranks are documentation plus a tripwire for
-/// future nesting. `TileJob`'s `items`/`error` mutexes and the
-/// listener's `conns` list are leaf locks taken without nesting and
-/// stay unranked.
+/// themselves) < gate < spares/tile_spares in `coordinator/server.rs`
+/// and the listener's `conns` session list (also rank 2 — a pool-level
+/// resource lock), then the ingress accounts — a model's `.counters`
+/// (3) before the pooled `.totals` (4). The ingress code takes them in
+/// sequential scopes today, so the ranks are documentation plus a
+/// tripwire for future nesting: holding `conns` while bumping an
+/// account is legal, the reverse deadlocks against the reaper.
+/// `TileJob`'s `items`/`error` mutexes are leaf locks taken without
+/// nesting and stay unranked.
 fn default_lock_ranks() -> Vec<LockRank> {
     vec![
         LockRank { kind: MatchKind::Contains, pat: "queues[", rank: 0 },
@@ -197,6 +256,8 @@ fn default_lock_ranks() -> Vec<LockRank> {
         LockRank { kind: MatchKind::Exact, pat: "gate", rank: 1 },
         LockRank { kind: MatchKind::EndsWith, pat: ".tile_spares", rank: 2 },
         LockRank { kind: MatchKind::EndsWith, pat: ".spares", rank: 2 },
+        LockRank { kind: MatchKind::EndsWith, pat: ".conns", rank: 2 },
+        LockRank { kind: MatchKind::Exact, pat: "conns", rank: 2 },
         LockRank { kind: MatchKind::EndsWith, pat: ".counters", rank: 3 },
         LockRank { kind: MatchKind::EndsWith, pat: ".totals", rank: 4 },
     ]
@@ -254,6 +315,8 @@ pub fn run_scans(scans: &[FileScan], reg: &Registry) -> Analysis {
     rules::lock_order(scans, reg, &mut findings);
     rules::atomic_ordering(scans, reg, &mut findings);
     rules::panic_path(scans, reg, &mut findings);
+    rules::ledger_audit(scans, reg, &mut findings);
+    rules::wire_codes(scans, reg, &mut findings);
 
     let allow = parse_allowlist(&reg.allow);
     findings.retain(|f| {
@@ -294,12 +357,20 @@ pub fn report_json(
     interleave: &[(String, crate::sim::interleave::Explored)],
     clippy_ran: Option<bool>,
     root: &str,
+    lanes: &[String],
 ) -> Json {
     let mut doc = Json::object();
     doc.insert("tool", Json::Str("srclint".into()));
+    doc.insert("report_version", Json::Num(2.0));
     doc.insert("root", Json::Str(root.into()));
     doc.insert("files_scanned", Json::Num(analysis.files_scanned as f64));
     doc.insert("findings_total", Json::Num(analysis.findings.len() as f64));
+    doc.insert("ledger_audit_ok", Json::Bool(analysis.count("ledger-audit") == 0));
+    doc.insert("wire_codes_ok", Json::Bool(analysis.count("wire-codes") == 0));
+    doc.insert(
+        "lanes",
+        Json::Arr(lanes.iter().map(|l| Json::Str(l.clone())).collect()),
+    );
 
     let mut rules_obj = Json::object();
     for rule in RULES {
@@ -338,6 +409,7 @@ pub fn report_json(
         interleave_ok &= ex.violations == 0 && !ex.truncated;
     }
     doc.insert("interleave", models);
+    doc.insert("interleave_models", Json::Num(interleave.len() as f64));
     doc.insert("interleave_ok", Json::Bool(interleave_ok));
 
     let mut items = Vec::new();
@@ -381,5 +453,28 @@ mod tests {
         assert!(!reg.warm.is_empty());
         assert!(reg.lock_ranks.iter().any(|r| r.rank == 0));
         assert!(reg.lock_ranks.iter().any(|r| r.rank == 2));
+        assert!(reg.lock_ranks.iter().any(|r| r.pat == ".conns" && r.rank == 2));
+        assert!(reg.relaxed_files.iter().any(|f| *f == "qnn/"));
+        assert!(!reg.ledger_files.is_empty());
+        assert!(reg.ledger_registry.contains("square_matmul_ledger"));
+        assert!(reg.wire_inventory.contains("BadMagic"));
+        assert!(reg.wire_doc.contains("`BadMagic` 1"));
+    }
+
+    #[test]
+    fn report_v2_carries_gate_fields_and_lanes() {
+        let analysis = Analysis {
+            files_scanned: 0,
+            findings: Vec::new(),
+            unsafe_sites: 0,
+            inventory: InventoryCheck::default(),
+        };
+        let doc = report_json(&analysis, &[], None, ".", &["default".to_string()]);
+        let text = format!("{doc}");
+        assert!(text.contains("\"report_version\":2"));
+        assert!(text.contains("\"ledger_audit_ok\":true"));
+        assert!(text.contains("\"wire_codes_ok\":true"));
+        assert!(text.contains("\"interleave_models\":0"));
+        assert!(text.contains("\"lanes\":[\"default\"]"));
     }
 }

@@ -1,4 +1,4 @@
-//! The four srclint rule passes. Each consumes [`FileScan`]s plus the
+//! The seven srclint rule passes. Each consumes [`FileScan`]s plus the
 //! [`Registry`] and appends [`Finding`]s; all matching runs on the code
 //! copy (strings/comments blanked), so tokens in messages and docs never
 //! trip a rule.
@@ -246,8 +246,8 @@ fn walk_fn_locks(
                                 line: i + 1,
                                 msg: format!(
                                     "lock rank {new} (`{recv}`) acquired while rank {held} \
-                                     guard from line {} is live — declared order is \
-                                     deque(0) < gate(1) < spares(2) < counters(3) < totals(4)",
+                                     guard from line {} is live — declared order is deque(0) \
+                                     < gate(1) < spares/conns(2) < counters(3) < totals(4)",
                                     g.line + 1
                                 ),
                             });
@@ -427,6 +427,322 @@ fn unwrap_is_poison_idiom(scan: &FileScan, i: usize, idx: usize) -> bool {
     false
 }
 
+/// Rule 5 — `ledger-audit`. The hoisted-ledger discipline, made
+/// mechanical. Discovery side: every non-test `pub fn` in a registered
+/// engine file whose name carries an engine prefix (and is not itself a
+/// `*_ledger`) must have a line in `analysis/ledger_registry.txt`
+/// pairing it with its hoisted ledger fn. Registry side: every entry fn
+/// must still exist (rename drift), every named ledger fn must exist
+/// somewhere in the tree, and every ledger must be referenced from at
+/// least one `#[cfg(test)]` region — the test that asserts its closed
+/// form equal to per-element counting.
+pub fn ledger_audit(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    // (file pattern, entry fn, ledger fn or "-")
+    let mut entries: Vec<(String, String, String)> = Vec::new();
+    for line in reg.ledger_registry.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, '|').map(str::trim);
+        if let (Some(f), Some(e), Some(l)) = (parts.next(), parts.next(), parts.next()) {
+            if !f.is_empty() && !e.is_empty() && !l.is_empty() {
+                entries.push((f.to_string(), e.to_string(), l.to_string()));
+            }
+        }
+    }
+
+    // discovery: unregistered engine entry points
+    for scan in scans {
+        if !reg.ledger_files.iter().any(|p| file_matches(&scan.rel, p)) {
+            continue;
+        }
+        for span in &scan.fns {
+            if scan.in_test[span.sig_line]
+                || span.name.ends_with("_ledger")
+                || !scan.code[span.sig_line].contains("pub fn ")
+                || !reg.ledger_prefixes.iter().any(|p| span.name.starts_with(p))
+            {
+                continue;
+            }
+            let registered = entries
+                .iter()
+                .any(|(f, e, _)| *e == span.name && file_matches(&scan.rel, f));
+            if !registered && !scan.lint_ok_covers("ledger-audit", span.sig_line) {
+                findings.push(Finding {
+                    rule: "ledger-audit",
+                    file: scan.rel.clone(),
+                    line: span.sig_line + 1,
+                    msg: format!(
+                        "engine entry `{}` has no analysis/ledger_registry.txt line pairing \
+                         it with a hoisted `*_ledger` fn",
+                        span.name
+                    ),
+                });
+            }
+        }
+    }
+
+    // registry side: drift, existence, and test coverage of each ledger
+    let mut checked: Vec<&str> = Vec::new();
+    for (f, e, l) in &entries {
+        let file_scans: Vec<&FileScan> =
+            scans.iter().filter(|s| file_matches(&s.rel, f)).collect();
+        if file_scans.is_empty() {
+            continue; // partial scans (fixture runs) skip absent files
+        }
+        let entry_exists = file_scans
+            .iter()
+            .any(|s| s.fns.iter().any(|sp| sp.name == *e && !s.in_test[sp.sig_line]));
+        if !entry_exists {
+            findings.push(Finding {
+                rule: "ledger-audit",
+                file: f.clone(),
+                line: 0,
+                msg: format!(
+                    "ledger_registry.txt entry `{e}` not found in `{f}` \
+                     (renamed? update the registry)"
+                ),
+            });
+        }
+        if l == "-" || checked.contains(&l.as_str()) {
+            continue; // reviewed exemption, or ledger already verified
+        }
+        checked.push(l);
+        let defined = scans.iter().any(|s| s.fns.iter().any(|sp| sp.name == *l));
+        if !defined {
+            findings.push(Finding {
+                rule: "ledger-audit",
+                file: f.clone(),
+                line: 0,
+                msg: format!("ledger fn `{l}` named in ledger_registry.txt does not exist"),
+            });
+            continue;
+        }
+        let tested = scans.iter().any(|s| {
+            (0..s.code.len()).any(|i| s.in_test[i] && !find_word(&s.code[i], l).is_empty())
+        });
+        if !tested {
+            findings.push(Finding {
+                rule: "ledger-audit",
+                file: f.clone(),
+                line: 0,
+                msg: format!(
+                    "ledger fn `{l}` is not asserted equal to per-element counting by any \
+                     test (no reference from a #[cfg(test)] region)"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule 6 — `wire-codes`. The `WireError` rejection-code table is
+/// wire-stable API. In each registered wire file, parse the `fn code`
+/// match arms into a `(variant, code)` table and the `fn fatal` arms
+/// into the fatal set, then check: codes are never reused, dense from 1,
+/// match the committed `analysis/wire_codes.txt` inventory both ways
+/// (including the fatal/recoverable split), and each is documented in
+/// README as `` `Variant` code ``. Empty inventory/doc texts skip those
+/// cross-checks (the fixture runs keep the structural checks only).
+pub fn wire_codes(scans: &[FileScan], reg: &Registry, findings: &mut Vec<Finding>) {
+    // committed inventory: (code, variant, fatal)
+    let mut inv: Vec<(u64, String, bool)> = Vec::new();
+    for line in reg.wire_inventory.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if let (Some(c), Some(v), Some(f)) = (it.next(), it.next(), it.next()) {
+            if let Ok(c) = c.parse::<u64>() {
+                inv.push((c, v.to_string(), f == "fatal"));
+            }
+        }
+    }
+
+    for scan in scans {
+        if !reg.wire_files.iter().any(|p| file_matches(&scan.rel, p)) {
+            continue;
+        }
+        let code_span = scan
+            .fns
+            .iter()
+            .find(|sp| sp.name == "code" && !scan.in_test[sp.sig_line]);
+        let span = match code_span {
+            Some(s) => s,
+            None => {
+                findings.push(Finding {
+                    rule: "wire-codes",
+                    file: scan.rel.clone(),
+                    line: 0,
+                    msg: "registered wire file has no `fn code` table".into(),
+                });
+                continue;
+            }
+        };
+
+        // (variant, code, line) from the `fn code` match arms
+        let mut table: Vec<(String, u64, usize)> = Vec::new();
+        for i in span.sig_line..=span.body_end.min(scan.code.len() - 1) {
+            let line = &scan.code[i];
+            let variant = match line.find("Self::") {
+                Some(p) => ident_after(line, p + "Self::".len()),
+                None => continue,
+            };
+            let arrow = match line.find("=>") {
+                Some(p) => p,
+                None => continue,
+            };
+            let num: String = line[arrow + 2..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            if variant.is_empty() || num.is_empty() {
+                continue;
+            }
+            table.push((variant, num.parse().unwrap_or(0), i));
+        }
+
+        // the fatal set from the `fn fatal` arms
+        let mut fatal: Vec<String> = Vec::new();
+        let fatal_span =
+            scan.fns.iter().find(|sp| sp.name == "fatal" && !scan.in_test[sp.sig_line]);
+        if let Some(fs) = fatal_span {
+            for i in fs.sig_line..=fs.body_end.min(scan.code.len() - 1) {
+                let line = &scan.code[i];
+                let mut from = 0usize;
+                while let Some(off) = line[from..].find("Self::") {
+                    let p = from + off + "Self::".len();
+                    let v = ident_after(line, p);
+                    from = p;
+                    if !v.is_empty() {
+                        fatal.push(v);
+                    }
+                }
+            }
+        }
+
+        // (a) reuse
+        for (k, (v, c, line)) in table.iter().enumerate() {
+            if let Some((v0, _, _)) = table[..k].iter().find(|(_, c0, _)| c0 == c) {
+                if !scan.lint_ok_covers("wire-codes", *line) {
+                    findings.push(Finding {
+                        rule: "wire-codes",
+                        file: scan.rel.clone(),
+                        line: line + 1,
+                        msg: format!(
+                            "wire code {c} reused by `{v}` (already assigned to `{v0}`) — \
+                             codes are append-only and never reused"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // (b) density from 1
+        let max = table.iter().map(|(_, c, _)| *c).max().unwrap_or(0);
+        for k in 1..=max {
+            if !table.iter().any(|(_, c, _)| *c == k) {
+                findings.push(Finding {
+                    rule: "wire-codes",
+                    file: scan.rel.clone(),
+                    line: span.sig_line + 1,
+                    msg: format!("wire code {k} is missing — the table must stay dense from 1"),
+                });
+            }
+        }
+
+        // (c) inventory cross-check, both directions + fatal split
+        if !inv.is_empty() {
+            for (v, c, line) in &table {
+                match inv.iter().find(|(ic, _, _)| ic == c) {
+                    None => findings.push(Finding {
+                        rule: "wire-codes",
+                        file: scan.rel.clone(),
+                        line: line + 1,
+                        msg: format!(
+                            "wire code {c} (`{v}`) not in analysis/wire_codes.txt — \
+                             protocol changes go through the committed inventory"
+                        ),
+                    }),
+                    Some((_, iv, _)) if iv != v => findings.push(Finding {
+                        rule: "wire-codes",
+                        file: scan.rel.clone(),
+                        line: line + 1,
+                        msg: format!(
+                            "wire code {c} is `{v}` in source but `{iv}` in \
+                             analysis/wire_codes.txt — codes are never renumbered"
+                        ),
+                    }),
+                    Some((_, _, ifatal)) => {
+                        let sfatal = fatal.contains(v);
+                        if sfatal != *ifatal {
+                            findings.push(Finding {
+                                rule: "wire-codes",
+                                file: scan.rel.clone(),
+                                line: line + 1,
+                                msg: format!(
+                                    "wire code {c} (`{v}`) is {} in source but recorded as \
+                                     {} — the fatal/recoverable split may not drift",
+                                    flag(sfatal),
+                                    flag(*ifatal)
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            for (ic, iv, _) in &inv {
+                if !table.iter().any(|(_, c, _)| c == ic) {
+                    findings.push(Finding {
+                        rule: "wire-codes",
+                        file: scan.rel.clone(),
+                        line: 0,
+                        msg: format!(
+                            "stale analysis/wire_codes.txt entry: code {ic} (`{iv}`) \
+                             matches no `fn code` arm"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // (d) README documentation
+        if !reg.wire_doc.is_empty() {
+            for (v, c, line) in &table {
+                if !reg.wire_doc.contains(&format!("`{v}` {c}")) {
+                    findings.push(Finding {
+                        rule: "wire-codes",
+                        file: scan.rel.clone(),
+                        line: line + 1,
+                        msg: format!(
+                            "wire code {c} (`{v}`) not documented in README \
+                             (expected \"`{v}` {c}\")"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn flag(fatal: bool) -> &'static str {
+    if fatal {
+        "fatal"
+    } else {
+        "recoverable"
+    }
+}
+
+/// The identifier starting at `line[p..]` (ASCII alphanumerics and `_`).
+fn ident_after(line: &str, p: usize) -> String {
+    line[p..]
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -444,8 +760,16 @@ mod tests {
             lock_ranks: super::super::default_lock_ranks(),
             relaxed_files: vec![name],
             panic_files: vec![name],
-            inventory: String::new(),
-            allow: String::new(),
+            ..Registry::default()
+        }
+    }
+
+    fn ledger_reg(name: &'static str, registry: &str) -> Registry {
+        Registry {
+            ledger_files: vec![name],
+            ledger_prefixes: vec!["matmul_square"],
+            ledger_registry: registry.to_string(),
+            ..Registry::default()
         }
     }
 
@@ -571,5 +895,109 @@ mod tests {
         let (sites, _) = unsafe_audit(&[s], &reg, &mut fs);
         assert_eq!(sites, 0);
         assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    const LEDGERED: &str = "pub fn matmul_square_x(n: usize) -> usize {\n    n\n}\npub fn x_ledger(n: usize) -> usize {\n    n\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn ledger_matches() {\n        assert_eq!(super::x_ledger(3), 3);\n    }\n}\n";
+
+    #[test]
+    fn unregistered_engine_entry_trips_ledger_audit() {
+        let mut fs = Vec::new();
+        let reg = ledger_reg("x.rs", "");
+        ledger_audit(&[scan_named("x.rs", LEDGERED)], &reg, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("matmul_square_x"));
+    }
+
+    #[test]
+    fn registered_and_tested_ledger_passes() {
+        let mut fs = Vec::new();
+        let reg = ledger_reg("x.rs", "x.rs | matmul_square_x | x_ledger\n");
+        ledger_audit(&[scan_named("x.rs", LEDGERED)], &reg, &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn ledger_without_test_reference_trips() {
+        let src = "pub fn matmul_square_x(n: usize) -> usize {\n    n\n}\npub fn x_ledger(n: usize) -> usize {\n    n\n}\n";
+        let mut fs = Vec::new();
+        let reg = ledger_reg("x.rs", "x.rs | matmul_square_x | x_ledger\n");
+        ledger_audit(&[scan_named("x.rs", src)], &reg, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("not asserted"));
+    }
+
+    #[test]
+    fn ledger_registry_rename_drift_trips() {
+        let mut fs = Vec::new();
+        let reg = ledger_reg(
+            "x.rs",
+            "x.rs | matmul_square_x | x_ledger\nx.rs | matmul_square_gone | x_ledger\n",
+        );
+        ledger_audit(&[scan_named("x.rs", LEDGERED)], &reg, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("matmul_square_gone"));
+    }
+
+    const WIRE_OK: &str = "impl WireError {\n    pub fn code(&self) -> u8 {\n        match self {\n            Self::BadMagic { .. } => 1,\n            Self::Oversize { .. } => 2,\n            Self::Busy => 3,\n        }\n    }\n    pub fn fatal(&self) -> bool {\n        matches!(self, Self::BadMagic { .. } | Self::Oversize { .. })\n    }\n}\n";
+
+    fn wire_reg(name: &'static str) -> Registry {
+        Registry { wire_files: vec![name], ..Registry::default() }
+    }
+
+    #[test]
+    fn clean_wire_table_passes() {
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", WIRE_OK)], &wire_reg("x.rs"), &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn reused_wire_code_trips() {
+        let src = WIRE_OK.replace("Self::Busy => 3,", "Self::Busy => 2,");
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", &src)], &wire_reg("x.rs"), &mut fs);
+        // the reuse plus the hole it leaves at 3... max is 2, so just reuse
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("reused"));
+    }
+
+    #[test]
+    fn wire_code_gap_trips_density() {
+        let src = WIRE_OK.replace("Self::Busy => 3,", "Self::Busy => 4,");
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", &src)], &wire_reg("x.rs"), &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("code 3 is missing"));
+    }
+
+    #[test]
+    fn wire_inventory_mismatch_and_doc_gap_trip() {
+        let mut reg = wire_reg("x.rs");
+        reg.wire_inventory =
+            "1 BadMagic fatal\n2 Oversize recoverable\n3 Busy recoverable\n".to_string();
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", WIRE_OK)], &reg, &mut fs);
+        // Oversize is fatal in source, recorded recoverable
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("split"));
+
+        reg.wire_inventory = "1 BadMagic fatal\n2 Oversize fatal\n3 Busy recoverable\n".into();
+        reg.wire_doc = "codes: `BadMagic` 1, `Oversize` 2.".to_string();
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", WIRE_OK)], &reg, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("not documented"));
+    }
+
+    #[test]
+    fn stale_wire_inventory_entry_trips() {
+        let mut reg = wire_reg("x.rs");
+        reg.wire_inventory = "1 BadMagic fatal\n2 Oversize fatal\n3 Busy recoverable\n\
+                              4 Gone recoverable\n"
+            .to_string();
+        let mut fs = Vec::new();
+        wire_codes(&[scan_named("x.rs", WIRE_OK)], &reg, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("stale"));
     }
 }

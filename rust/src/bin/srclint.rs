@@ -8,18 +8,23 @@
 //!
 //! ```text
 //! srclint [--root PATH] [--report PATH] [--clippy-ran true|false]
-//!         [--fixture-registry] [--no-interleave]
+//!         [--fixture-registry] [--no-interleave] [--lanes CSV]
+//!         [--update-inventory]
 //! ```
 //!
 //! `--root` may be a directory or a single file (the fixture tests point
 //! it at one known-bad snippet at a time). `--fixture-registry` swaps in
 //! the narrow fixture policy so the snippets under
 //! `rust/tests/srclint_fixtures/` trip exactly their intended rule.
+//! `--lanes` records which verification lanes ran (default / miri /
+//! tsan) in the report. `--update-inventory` regenerates
+//! `analysis/unsafe_inventory.txt` context hashes mechanically,
+//! preserving per-site comments keyed by `(file, hash)`, then exits.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use fairsquare::analysis::{self, Registry};
+use fairsquare::analysis::{self, rules, scanner, Registry};
 use fairsquare::sim::interleave;
 
 struct Opts {
@@ -28,6 +33,8 @@ struct Opts {
     clippy_ran: Option<bool>,
     fixture_registry: bool,
     run_interleave: bool,
+    lanes: Vec<String>,
+    update_inventory: bool,
 }
 
 fn parse_args() -> Result<Opts, String> {
@@ -37,6 +44,8 @@ fn parse_args() -> Result<Opts, String> {
         clippy_ran: None,
         fixture_registry: false,
         run_interleave: true,
+        lanes: vec!["default".to_string()],
+        update_inventory: false,
     };
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
@@ -57,10 +66,20 @@ fn parse_args() -> Result<Opts, String> {
             }
             "--fixture-registry" => opts.fixture_registry = true,
             "--no-interleave" => opts.run_interleave = false,
+            "--lanes" => {
+                let v = args.next().ok_or("--lanes needs a comma-separated list")?;
+                opts.lanes = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect();
+            }
+            "--update-inventory" => opts.update_inventory = true,
             "--help" | "-h" => {
                 println!(
                     "srclint [--root PATH] [--report PATH] [--clippy-ran true|false] \
-                     [--fixture-registry] [--no-interleave]"
+                     [--fixture-registry] [--no-interleave] [--lanes CSV] [--update-inventory]"
                 );
                 std::process::exit(0);
             }
@@ -68,6 +87,63 @@ fn parse_args() -> Result<Opts, String> {
         }
     }
     Ok(opts)
+}
+
+/// Regenerate `analysis/unsafe_inventory.txt` under `root`: rescan the
+/// tree, rehash every non-test unsafe site, keep the header and any
+/// comment whose `(file, hash)` pair still matches, and annotate new
+/// sites with their source line. The checked-in file is baked into the
+/// binary via `include_str!`, so a rebuild is needed before the updated
+/// inventory takes effect.
+fn update_inventory(root: &Path) -> Result<(), String> {
+    let scans = scanner::scan_tree(root).map_err(|e| format!("scan failed: {e:#}"))?;
+    let inv_path = root.join("analysis").join("unsafe_inventory.txt");
+    let old = std::fs::read_to_string(&inv_path).unwrap_or_default();
+
+    // header = leading comment/blank block; comments keyed by (file, hash)
+    let mut header = String::new();
+    let mut in_header = true;
+    let mut kept: Vec<(String, String, String)> = Vec::new();
+    for line in old.lines() {
+        let trimmed = line.trim();
+        if in_header && (trimmed.is_empty() || trimmed.starts_with('#')) {
+            header.push_str(line);
+            header.push('\n');
+            continue;
+        }
+        in_header = false;
+        let body = line.split('#').next().unwrap_or("").trim();
+        let comment = line.find('#').map(|p| line[p..].trim_end().to_string());
+        let mut it = body.split_whitespace();
+        if let (Some(f), Some(h)) = (it.next(), it.next()) {
+            kept.push((f.to_string(), h.to_string(), comment.unwrap_or_default()));
+        }
+    }
+
+    let mut out = header;
+    let mut sites = 0usize;
+    for scan in &scans {
+        for i in 0..scan.code.len() {
+            if scan.in_test[i] || scanner::find_word(&scan.code[i], "unsafe").is_empty() {
+                continue;
+            }
+            sites += 1;
+            let hash = rules::site_hash(scan, i);
+            let comment = kept
+                .iter()
+                .find(|(f, h, _)| *h == hash && scan.rel.ends_with(f.as_str()))
+                .map(|(_, _, c)| c.clone())
+                .filter(|c| !c.is_empty())
+                .unwrap_or_else(|| format!("# {}", scan.raw[i].trim()));
+            out.push_str(&format!("{} {hash}  {comment}\n", scan.rel));
+        }
+    }
+    std::fs::write(&inv_path, &out).map_err(|e| format!("writing {}: {e}", inv_path.display()))?;
+    println!(
+        "srclint: wrote {} ({sites} unsafe sites); rebuild to re-bake the include_str! copy",
+        inv_path.display()
+    );
+    Ok(())
 }
 
 fn main() -> ExitCode {
@@ -78,6 +154,16 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+
+    if opts.update_inventory {
+        return match update_inventory(&opts.root) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("srclint: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
 
     let reg = if opts.fixture_registry { Registry::fixtures() } else { Registry::builtin() };
     let analysis = match analysis::run(&opts.root, &reg) {
@@ -95,7 +181,7 @@ fn main() -> ExitCode {
     }
 
     let root_str = opts.root.display().to_string();
-    let doc = analysis::report_json(&analysis, &suite, opts.clippy_ran, &root_str);
+    let doc = analysis::report_json(&analysis, &suite, opts.clippy_ran, &root_str, &opts.lanes);
     if let Err(e) = std::fs::write(&opts.report, format!("{doc}\n")) {
         eprintln!("srclint: writing {}: {e}", opts.report.display());
         return ExitCode::from(2);

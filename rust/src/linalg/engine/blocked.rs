@@ -557,6 +557,34 @@ mod tests {
     }
 
     #[test]
+    fn tile_ledgers_and_one_hoist_equal_the_prepared_ledger() {
+        // the §3.3 amortisation, asserted per element: an uneven tile
+        // partition reassembles the untiled values byte-for-byte, and
+        // Σ square_matmul_tile_ledger + one row_corrections_ledger hoist
+        // == square_matmul_const_b_ledger
+        let mut rng = Rng::new(0x711E);
+        let a = Matrix::random(&mut rng, 9, 7, -200, 200);
+        let b = Matrix::random(&mut rng, 7, 5, -200, 200);
+        let (pb, _) = PreparedB::new(b.clone());
+        let (want, want_ops) = matmul_square_prepared(&a, &pb, &tiny_cfg(1));
+
+        let mut sa = vec![0i64; a.rows];
+        row_corrections_into(&a, &mut sa);
+        let mut ops = row_corrections_ledger(a.rows, a.cols);
+        let mut c = vec![0i64; a.rows * b.cols];
+        for (i0, i1) in [(0usize, 2usize), (2, 3), (3, 9)] {
+            let rows = &mut c[i0 * b.cols..i1 * b.cols];
+            let tile_ops =
+                matmul_square_prepared_tile_into(&a, &pb, &sa, i0, i1, rows, &tiny_cfg(1));
+            assert_eq!(tile_ops, square_matmul_tile_ledger(i1 - i0, a.cols, b.cols));
+            ops += tile_ops;
+        }
+        assert_eq!(&c[..], want.data(), "tiles must reassemble the untiled values");
+        assert_eq!(ops, want_ops, "tile ledgers + one hoist ≠ the prepared ledger");
+        assert_eq!(ops, square_matmul_const_b_ledger(a.rows, a.cols, b.cols));
+    }
+
+    #[test]
     fn threaded_equals_single_threaded() {
         let mut rng = Rng::new(0x7412);
         for (m, n, p) in [(1usize, 7usize, 9usize), (5, 16, 3), (33, 20, 41), (64, 64, 64)] {

@@ -17,9 +17,26 @@
 //!   lengths, `in_flight` = queued + executing) in every state, no lost
 //!   wakeup (a deadlocked schedule is a violation), and nothing is lost
 //!   or double-executed by steal or worker death.
+//! * [`SessionModel`] — the PR 8 ingress listener lifecycle: the accept
+//!   loop racing the `closed` store, the self-connect shutdown wake, the
+//!   `client_gone` mid-flight disconnect probe, and read-half shutdown
+//!   draining in-flight sessions. Checked: request conservation
+//!   (`submitted == served + disconnects + in_flight`) in every state,
+//!   no leaked in-flight slot at shutdown, and no deadlock (a shutdown
+//!   that never wakes the accept loop shows up as one).
+//! * [`ConservationModel`] — the PR 8 `IngressCounters`/totals ledger:
+//!   every request bumps its model's counters and then the pooled totals
+//!   in *separate* lock scopes (the real `count_submitted`/`record`
+//!   shape), across interleaved sessions. Checked: in every state each
+//!   pooled total lags the per-model sums by exactly the number of
+//!   requests caught between their two bumps, and terminally each
+//!   request landed in exactly one outcome bucket with per-model sums
+//!   equal to the pooled totals.
 //!
 //! Each model also ships *buggy* variants (decrement-before-write,
-//! missing condvar notify, leaked in-flight slot) asserted to be caught —
+//! missing condvar notify, missing shutdown wake, double-counted
+//! disconnect, skipped totals bump, leaked in-flight slot) asserted to
+//! be caught —
 //! the standard honesty check that the explorer has the power to see the
 //! bugs it claims to rule out. Schedule counts land in
 //! `ANALYSIS_report.json` via the `srclint` binary.
@@ -467,6 +484,443 @@ impl InterleaveModel for GateModel {
     }
 }
 
+// ---------------------------------------------------------------------
+// Model 3: the ingress session lifecycle
+// ---------------------------------------------------------------------
+
+/// Injection bugs the session-lifecycle self-tests prove the explorer
+/// catches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SessionBug {
+    #[default]
+    None,
+    /// `stop_threads` forgets the self-connect wake, so once clients
+    /// stop arriving the accept loop never observes `closed` → the
+    /// accept join deadlocks
+    MissingWake,
+    /// the mid-flight disconnect path bumps `disconnects` twice for one
+    /// request → conservation break
+    DoubleCountDisconnect,
+    /// the disconnect path forgets to release the request's in-flight
+    /// slot → the slot leaks past shutdown
+    LeakInFlight,
+}
+
+/// One client connection's lifecycle through the listener.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessState {
+    /// connected, waiting in the accept backlog
+    Pending,
+    /// session thread spawned; about to block in `read_frame`
+    Reading,
+    /// request decoded and handed to the engine (in-flight)
+    Submitted,
+    /// engine response sitting in the session's reply channel
+    Computed,
+    Done,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AcceptState {
+    Looping,
+    Done,
+}
+
+/// Abstract `IngressServer`: the accept thread races client
+/// connections against the shutdown sequence (`closed` store →
+/// self-connect wake → accept join → read-half shutdown → session join
+/// → snapshot), while each accepted session reads one request, submits
+/// it, and records exactly one outcome — `served`, or `disconnects`
+/// when its client hung up mid-flight (`gone`). The action space:
+/// shutdown (0), accept (1), session `i` (10 + i).
+#[derive(Debug, Clone)]
+pub struct SessionModel {
+    bug: SessionBug,
+    /// sessions whose client disconnects after submitting
+    gone: Vec<bool>,
+    sess: Vec<SessState>,
+    accept: AcceptState,
+    /// the `closed: AtomicBool` (Release store / Acquire loads)
+    closed: bool,
+    /// the shutdown self-connect is sitting in the accept backlog
+    wake_pending: bool,
+    /// every session's read half has been `Shutdown::Read`
+    read_shutdown: bool,
+    /// 0 = not started, 1 = closed stored, 2 = wake sent, 3 = accept
+    /// joined + read halves down, 4 = sessions joined + snapshot taken
+    shutdown_pc: u8,
+    submitted: u64,
+    served: u64,
+    disconnects: u64,
+    in_flight: u64,
+}
+
+const SHUTDOWN: u32 = 0;
+const ACCEPT: u32 = 1;
+const SESSION_BASE: u32 = 10;
+
+impl SessionModel {
+    pub fn new(sessions: usize, gone: &[usize], bug: SessionBug) -> Self {
+        let mut g = vec![false; sessions];
+        for &s in gone {
+            g[s] = true;
+        }
+        Self {
+            bug,
+            gone: g,
+            sess: vec![SessState::Pending; sessions],
+            accept: AcceptState::Looping,
+            closed: false,
+            wake_pending: false,
+            read_shutdown: false,
+            shutdown_pc: 0,
+            submitted: 0,
+            served: 0,
+            disconnects: 0,
+            in_flight: 0,
+        }
+    }
+
+    fn live_sessions(&self) -> bool {
+        self.sess
+            .iter()
+            .any(|s| matches!(s, SessState::Reading | SessState::Submitted | SessState::Computed))
+    }
+}
+
+impl InterleaveModel for SessionModel {
+    fn enabled(&self) -> Vec<u32> {
+        let mut acts = Vec::new();
+        let shutdown_on = match self.shutdown_pc {
+            0 | 1 => true,
+            // joining the accept thread blocks until it observed `closed`
+            2 => self.accept == AcceptState::Done,
+            // joining the sessions blocks until every spawned one exited
+            3 => !self.live_sessions(),
+            _ => false,
+        };
+        if shutdown_on {
+            acts.push(SHUTDOWN);
+        }
+        // the accept loop only runs when a connection arrives — a pending
+        // client or the shutdown self-connect
+        if self.accept == AcceptState::Looping
+            && (self.wake_pending || self.sess.contains(&SessState::Pending))
+        {
+            acts.push(ACCEPT);
+        }
+        for (i, s) in self.sess.iter().enumerate() {
+            if matches!(s, SessState::Reading | SessState::Submitted | SessState::Computed) {
+                acts.push(SESSION_BASE + i as u32);
+            }
+        }
+        acts
+    }
+
+    fn step(&mut self, action: u32) {
+        match action {
+            SHUTDOWN => {
+                match self.shutdown_pc {
+                    // Release store; accept loads it Acquire per iteration
+                    0 => self.closed = true,
+                    1 => {
+                        if self.bug != SessionBug::MissingWake {
+                            self.wake_pending = true;
+                        }
+                    }
+                    // accept joined; drain `conns`, shut down read halves
+                    2 => self.read_shutdown = true,
+                    // sessions joined; snapshot the registry
+                    3 => {}
+                    _ => unreachable!("shutdown past terminal"),
+                }
+                self.shutdown_pc += 1;
+            }
+            ACCEPT => {
+                if self.closed {
+                    // the post-accept flag check: return, dropping
+                    // whatever connection woke us (client or self-connect)
+                    self.accept = AcceptState::Done;
+                } else if let Some(i) =
+                    self.sess.iter().position(|s| *s == SessState::Pending)
+                {
+                    // spawn a session thread for the accepted client
+                    self.sess[i] = SessState::Reading;
+                }
+            }
+            a => {
+                let i = (a - SESSION_BASE) as usize;
+                match self.sess[i] {
+                    SessState::Reading => {
+                        if self.read_shutdown {
+                            // EOF from the half-close: drain without
+                            // submitting
+                            self.sess[i] = SessState::Done;
+                        } else {
+                            self.submitted += 1;
+                            self.in_flight += 1;
+                            self.sess[i] = SessState::Submitted;
+                        }
+                    }
+                    SessState::Submitted => self.sess[i] = SessState::Computed,
+                    SessState::Computed => {
+                        if self.gone[i] {
+                            // client_gone probe (or the failed write):
+                            // the response is dropped, the outcome lands
+                            // in the disconnects bucket
+                            self.disconnects += 1;
+                            if self.bug == SessionBug::DoubleCountDisconnect {
+                                self.disconnects += 1;
+                            }
+                            if self.bug != SessionBug::LeakInFlight {
+                                self.in_flight -= 1;
+                            }
+                        } else {
+                            self.served += 1;
+                            self.in_flight -= 1;
+                        }
+                        self.sess[i] = SessState::Done;
+                    }
+                    SessState::Pending | SessState::Done => {
+                        unreachable!("stepped an unspawned/finished session")
+                    }
+                }
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.submitted != self.served + self.disconnects + self.in_flight {
+            return Err(format!(
+                "request conservation broken: submitted={} but served={} + \
+                 disconnects={} + in_flight={}",
+                self.submitted, self.served, self.disconnects, self.in_flight
+            ));
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.shutdown_pc == 4
+    }
+
+    fn check_done(&self) -> Result<(), String> {
+        if self.in_flight != 0 {
+            return Err(format!(
+                "shutdown snapshot leaked {} in-flight slot(s)",
+                self.in_flight
+            ));
+        }
+        if self.submitted != self.served + self.disconnects {
+            return Err(format!(
+                "terminal buckets disagree: submitted={} served={} disconnects={}",
+                self.submitted, self.served, self.disconnects
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model 4: the IngressCounters / totals conservation ledger
+// ---------------------------------------------------------------------
+
+/// Injection bugs the conservation self-tests prove the explorer
+/// catches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConservationBug {
+    #[default]
+    None,
+    /// `record` bumps the model's counters but forgets the pooled totals
+    SkipTotals,
+    /// one request's outcome is recorded twice on its model
+    DoubleOutcome,
+}
+
+/// A request's terminal bucket (the `Outcome` enum in
+/// `ingress/registry.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bucket {
+    Served,
+    Rejected,
+    Errored,
+    Disconnect,
+}
+
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+struct Accounts {
+    submitted: u64,
+    served: u64,
+    rejected: u64,
+    errored: u64,
+    disconnects: u64,
+}
+
+impl Accounts {
+    fn bump(&mut self, b: Bucket) {
+        match b {
+            Bucket::Served => self.served += 1,
+            Bucket::Rejected => self.rejected += 1,
+            Bucket::Errored => self.errored += 1,
+            Bucket::Disconnect => self.disconnects += 1,
+        }
+    }
+
+    fn get(&self, b: Bucket) -> u64 {
+        match b {
+            Bucket::Served => self.served,
+            Bucket::Rejected => self.rejected,
+            Bucket::Errored => self.errored,
+            Bucket::Disconnect => self.disconnects,
+        }
+    }
+
+    fn outcomes(&self) -> u64 {
+        self.served + self.rejected + self.errored + self.disconnects
+    }
+}
+
+/// Abstract `ModelRegistry` accounting: each request (a session thread)
+/// walks a four-step program mirroring the two sequential lock scopes of
+/// `count_submitted` and `record` — (0) bump its model's `submitted`,
+/// (1) bump the pooled `submitted`, (2) bump its model's outcome bucket,
+/// (3) bump the pooled outcome bucket. Because the model lock and the
+/// totals lock are *separate* scopes (ranks 3 and 4, never nested), the
+/// pooled totals transiently lag the per-model sums — by exactly the
+/// number of requests sitting between their two bumps, which is the
+/// every-state invariant. Actions are request indices.
+#[derive(Debug, Clone)]
+pub struct ConservationModel {
+    bug: ConservationBug,
+    /// per-request (model index, terminal bucket)
+    reqs: Vec<(usize, Bucket)>,
+    /// per-request program counter, 0..=4
+    pc: Vec<u8>,
+    per_model: Vec<Accounts>,
+    totals: Accounts,
+}
+
+impl ConservationModel {
+    pub fn new(models: usize, reqs: &[(usize, Bucket)], bug: ConservationBug) -> Self {
+        assert!(reqs.iter().all(|&(m, _)| m < models));
+        Self {
+            bug,
+            reqs: reqs.to_vec(),
+            pc: vec![0; reqs.len()],
+            per_model: vec![Accounts::default(); models],
+            totals: Accounts::default(),
+        }
+    }
+
+    /// Requests currently between their model bump and totals bump for
+    /// the given ledger field (`None` = the submitted column).
+    fn in_between(&self, field: Option<Bucket>) -> u64 {
+        self.reqs
+            .iter()
+            .zip(&self.pc)
+            .filter(|(&(_, b), &pc)| match field {
+                None => pc == 1,
+                Some(f) => pc == 3 && b == f,
+            })
+            .count() as u64
+    }
+}
+
+impl InterleaveModel for ConservationModel {
+    fn enabled(&self) -> Vec<u32> {
+        (0..self.reqs.len()).filter(|&r| self.pc[r] < 4).map(|r| r as u32).collect()
+    }
+
+    fn step(&mut self, action: u32) {
+        let r = action as usize;
+        let (m, bucket) = self.reqs[r];
+        match self.pc[r] {
+            // count_submitted, model lock scope
+            0 => self.per_model[m].submitted += 1,
+            // count_submitted, totals lock scope
+            1 => self.totals.submitted += 1,
+            // record, model lock scope
+            2 => {
+                self.per_model[m].bump(bucket);
+                if self.bug == ConservationBug::DoubleOutcome {
+                    self.per_model[m].bump(bucket);
+                }
+            }
+            // record, totals lock scope
+            3 => {
+                if self.bug != ConservationBug::SkipTotals {
+                    self.totals.bump(bucket);
+                }
+            }
+            _ => unreachable!("stepped a finished request"),
+        }
+        self.pc[r] += 1;
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let sum =
+            |f: fn(&Accounts) -> u64| self.per_model.iter().map(f).sum::<u64>();
+        let submitted_sum = sum(|a| a.submitted);
+        if submitted_sum != self.totals.submitted + self.in_between(None) {
+            return Err(format!(
+                "submitted ledgers diverged: per-model sum {} vs pooled {} \
+                 (+{} between bumps)",
+                submitted_sum,
+                self.totals.submitted,
+                self.in_between(None)
+            ));
+        }
+        for b in [Bucket::Served, Bucket::Rejected, Bucket::Errored, Bucket::Disconnect] {
+            let model_sum = self.per_model.iter().map(|a| a.get(b)).sum::<u64>();
+            if model_sum != self.totals.get(b) + self.in_between(Some(b)) {
+                return Err(format!(
+                    "{b:?} ledgers diverged: per-model sum {} vs pooled {} \
+                     (+{} between bumps)",
+                    model_sum,
+                    self.totals.get(b),
+                    self.in_between(Some(b))
+                ));
+            }
+        }
+        // outcomes only ever trail submissions, per model
+        for (m, a) in self.per_model.iter().enumerate() {
+            if a.outcomes() > a.submitted {
+                return Err(format!(
+                    "model {m} recorded {} outcomes for {} submissions",
+                    a.outcomes(),
+                    a.submitted
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.pc.iter().all(|&p| p == 4)
+    }
+
+    fn check_done(&self) -> Result<(), String> {
+        let mut want_models = vec![Accounts::default(); self.per_model.len()];
+        let mut want_totals = Accounts::default();
+        for &(m, b) in &self.reqs {
+            want_models[m].submitted += 1;
+            want_models[m].bump(b);
+            want_totals.submitted += 1;
+            want_totals.bump(b);
+        }
+        if self.per_model != want_models {
+            return Err("per-model ledgers differ from exactly-one-bucket accounting".into());
+        }
+        if self.totals != want_totals {
+            return Err(format!(
+                "pooled totals differ from per-model sums at shutdown: {:?} vs {:?}",
+                self.totals, want_totals
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// State-budget backstop, ~3× the largest shipped model (the 2-worker
 /// die-budget gate visits 616_013 states). Three workers or three
 /// in-flight items push past 4M states — raise deliberately if a model
@@ -494,6 +948,40 @@ pub fn standard_suite() -> Vec<(String, Explored)> {
         (
             "gate_w2_p2_steal_die".into(),
             explore(&GateModel::new(2, 2, true, 1, GateBug::None), STATE_BUDGET),
+        ),
+        (
+            "session_s1".into(),
+            explore(&SessionModel::new(1, &[], SessionBug::None), STATE_BUDGET),
+        ),
+        (
+            "session_s2".into(),
+            explore(&SessionModel::new(2, &[], SessionBug::None), STATE_BUDGET),
+        ),
+        (
+            "session_s2_disconnect".into(),
+            explore(&SessionModel::new(2, &[1], SessionBug::None), STATE_BUDGET),
+        ),
+        (
+            "conservation_m2_r2".into(),
+            explore(
+                &ConservationModel::new(
+                    2,
+                    &[(0, Bucket::Served), (1, Bucket::Disconnect)],
+                    ConservationBug::None,
+                ),
+                STATE_BUDGET,
+            ),
+        ),
+        (
+            "conservation_m2_r3_mixed".into(),
+            explore(
+                &ConservationModel::new(
+                    2,
+                    &[(0, Bucket::Served), (0, Bucket::Rejected), (1, Bucket::Errored)],
+                    ConservationBug::None,
+                ),
+                STATE_BUDGET,
+            ),
         ),
     ]
 }
@@ -572,6 +1060,92 @@ mod tests {
     fn leaked_in_flight_is_caught() {
         let ex = explore(&GateModel::new(2, 2, true, 0, GateBug::LeakInFlight), STATE_BUDGET);
         assert!(ex.violations > 0, "checker must catch the leaked slot");
+    }
+
+    #[test]
+    fn session_lifecycle_exhaustive_and_clean() {
+        for (sessions, gone) in [(1usize, vec![]), (2, vec![]), (2, vec![1]), (2, vec![0, 1])] {
+            let ex = explore(&SessionModel::new(sessions, &gone, SessionBug::None), STATE_BUDGET);
+            assert_eq!(
+                ex.violations, 0,
+                "sessions={sessions} gone={gone:?}: {:?}",
+                ex.first_violation
+            );
+            assert!(!ex.truncated);
+            assert!(ex.schedules > 0);
+        }
+    }
+
+    #[test]
+    fn session_two_session_schedule_counts_are_pinned() {
+        // exact enumeration sizes for the 2-session models, pinned so a
+        // model edit that silently changes the explored space fails here
+        let ex = explore(&SessionModel::new(2, &[], SessionBug::None), STATE_BUDGET);
+        assert_eq!((ex.schedules, ex.states), (5_716, 23_705), "plain 2-session");
+        // the disconnect flag changes which bucket absorbs the request,
+        // not which schedules exist — identical enumeration size
+        let ex = explore(&SessionModel::new(2, &[1], SessionBug::None), STATE_BUDGET);
+        assert_eq!((ex.schedules, ex.states), (5_716, 23_705), "2-session with disconnect");
+        // and the 1-session model is small enough to eyeball: pinned too
+        let ex = explore(&SessionModel::new(1, &[], SessionBug::None), STATE_BUDGET);
+        assert_eq!((ex.schedules, ex.states), (37, 168), "1-session");
+    }
+
+    #[test]
+    fn missing_shutdown_wake_deadlocks_and_is_caught() {
+        let ex = explore(&SessionModel::new(1, &[], SessionBug::MissingWake), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the missing accept wake");
+        assert!(ex.first_violation.unwrap().contains("deadlock"));
+    }
+
+    #[test]
+    fn double_counted_disconnect_is_caught() {
+        let ex =
+            explore(&SessionModel::new(2, &[1], SessionBug::DoubleCountDisconnect), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the double-counted disconnect");
+        assert!(ex.first_violation.unwrap().contains("conservation"));
+    }
+
+    #[test]
+    fn leaked_session_slot_is_caught() {
+        let ex = explore(&SessionModel::new(1, &[0], SessionBug::LeakInFlight), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the leaked in-flight slot");
+    }
+
+    #[test]
+    fn conservation_exhaustive_and_clean() {
+        // two independent 4-step requests: C(8,4) = 70 maximal schedules
+        let reqs = [(0, Bucket::Served), (1, Bucket::Disconnect)];
+        let ex = explore(&ConservationModel::new(2, &reqs, ConservationBug::None), STATE_BUDGET);
+        assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+        assert_eq!((ex.schedules, ex.states), (70, 251));
+
+        let reqs =
+            [(0, Bucket::Served), (0, Bucket::Rejected), (1, Bucket::Errored)];
+        let ex = explore(&ConservationModel::new(2, &reqs, ConservationBug::None), STATE_BUDGET);
+        assert_eq!(ex.violations, 0, "{:?}", ex.first_violation);
+        // multinomial(12; 4,4,4) maximal interleavings of three requests
+        assert_eq!(ex.schedules, 34_650);
+        assert!(!ex.truncated);
+    }
+
+    #[test]
+    fn skipped_totals_bump_is_caught() {
+        let reqs = [(0, Bucket::Served), (1, Bucket::Rejected)];
+        let ex =
+            explore(&ConservationModel::new(2, &reqs, ConservationBug::SkipTotals), STATE_BUDGET);
+        assert!(ex.violations > 0, "checker must catch the skipped totals bump");
+        assert!(ex.first_violation.unwrap().contains("diverged"));
+    }
+
+    #[test]
+    fn double_recorded_outcome_is_caught() {
+        let reqs = [(0, Bucket::Served), (1, Bucket::Served)];
+        let ex = explore(
+            &ConservationModel::new(2, &reqs, ConservationBug::DoubleOutcome),
+            STATE_BUDGET,
+        );
+        assert!(ex.violations > 0, "checker must catch the double-recorded outcome");
     }
 
     #[test]

@@ -31,8 +31,15 @@ fn run_srclint(tag: &str, extra: &[&str]) -> (bool, String, String) {
     (out.status.success(), doc, String::from_utf8_lossy(&out.stderr).into_owned())
 }
 
-const ALL_RULES: &[&str] =
-    &["unsafe-audit", "warm-alloc", "lock-order", "atomic-ordering", "panic-path"];
+const ALL_RULES: &[&str] = &[
+    "unsafe-audit",
+    "warm-alloc",
+    "lock-order",
+    "atomic-ordering",
+    "panic-path",
+    "ledger-audit",
+    "wire-codes",
+];
 
 /// Assert the report's per-rule counters: nonzero exactly for `tripped`.
 fn assert_only_rule(doc: &str, tripped: &str, ctx: &str) {
@@ -59,9 +66,17 @@ fn shipping_tree_is_clean_and_exits_zero() {
     assert!(doc.contains("\"findings_total\":0"), "report: {doc}");
     assert!(doc.contains("\"inventory_ok\":true"), "report: {doc}");
     assert!(doc.contains("\"interleave_ok\":true"), "report: {doc}");
+    // report v2: the two new rule verdicts and the lane list
+    assert!(doc.contains("\"report_version\":2"), "report: {doc}");
+    assert!(doc.contains("\"ledger_audit_ok\":true"), "report: {doc}");
+    assert!(doc.contains("\"wire_codes_ok\":true"), "report: {doc}");
+    assert!(doc.contains("\"lanes\":[\"default\"]"), "report: {doc}");
     // the interleave section reports exhaustive schedule counts
     assert!(doc.contains("\"tile_join_t3\""), "report: {doc}");
     assert!(doc.contains("\"gate_w2_p2_steal\""), "report: {doc}");
+    // the PR 10 ingress/qnn models ship in the standard suite
+    assert!(doc.contains("\"session_s2_disconnect\""), "report: {doc}");
+    assert!(doc.contains("\"conservation_m2_r3_mixed\""), "report: {doc}");
 }
 
 #[test]
@@ -72,6 +87,8 @@ fn each_seeded_fixture_trips_exactly_its_rule() {
         ("relaxed_join_counter.rs", "atomic-ordering"),
         ("alloc_in_warm_path.rs", "warm-alloc"),
         ("unannotated_panic.rs", "panic-path"),
+        ("ledgerless_engine_fn.rs", "ledger-audit"),
+        ("reused_wire_code.rs", "wire-codes"),
     ] {
         let root = fixture(file);
         let tag = file.trim_end_matches(".rs");

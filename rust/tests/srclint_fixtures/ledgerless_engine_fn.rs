@@ -1,0 +1,22 @@
+//! srclint fixture: seeded `ledger-audit` violation. A new square-engine
+//! entry point (the ROADMAP's Strassen recursion, say) lands without a
+//! `ledger_registry.txt` line pairing it with a hoisted `*_ledger` fn —
+//! the exact drift the rule exists to catch: an engine lane whose
+//! multiplication count is no longer provably the paper's closed form.
+
+/// Square-trick matmul over n×n row-major slices — but nobody wrote the
+/// ledger, so nothing pins its op count to `square_matmul_ledger`'s
+/// formula.
+pub fn matmul_square_strassen(a: &[i64], b: &[i64], n: usize) -> Vec<i64> {
+    let mut c = vec![0i64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let av = a[i * n + k];
+            for j in 0..n {
+                let s = av + b[k * n + j];
+                c[i * n + j] += (s * s - av * av - b[k * n + j] * b[k * n + j]) / 2;
+            }
+        }
+    }
+    c
+}

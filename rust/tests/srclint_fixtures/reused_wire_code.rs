@@ -1,0 +1,25 @@
+//! srclint fixture: seeded `wire-codes` violation. A new error variant
+//! reuses a rejection code that already belongs to another variant —
+//! old clients would misclassify the failure, which is why codes are
+//! append-only and never reused.
+
+pub enum WireError {
+    BadMagic,
+    Oversize,
+    /// the new variant — its author grabbed `2` instead of appending `3`
+    Stale,
+}
+
+impl WireError {
+    pub fn code(&self) -> u8 {
+        match self {
+            Self::BadMagic => 1,
+            Self::Oversize => 2,
+            Self::Stale => 2,
+        }
+    }
+
+    pub fn fatal(&self) -> bool {
+        matches!(self, Self::BadMagic | Self::Oversize)
+    }
+}

@@ -54,15 +54,25 @@
 # the cargo layout.
 #   * srclint: the std-only static-analysis pass (unsafe audit vs the
 #     checked-in inventory, warm-path allocation lint, lock-order +
-#     atomic-ordering lint, panic-path lint) plus the bounded interleaving
-#     models of the TileJob join and the DequePool gate — writes
-#     rust/ANALYSIS_report.json (published to the repo root like the
-#     BENCH_*.json artifacts) and must report findings_total == 0,
-#     inventory_ok and interleave_ok
+#     atomic-ordering lint, panic-path lint, ledger-audit vs
+#     analysis/ledger_registry.txt, wire-codes vs analysis/wire_codes.txt)
+#     plus the bounded interleaving models of the TileJob join, the
+#     DequePool gate, the ingress session lifecycle and the ledger
+#     conservation accounts — writes rust/ANALYSIS_report.json v2
+#     (published to the repo root like the BENCH_*.json artifacts) and
+#     must report findings_total == 0, inventory_ok, interleave_ok,
+#     ledger_audit_ok, wire_codes_ok and >= 8 interleave models
 #   * cargo clippy --all-targets -- -D warnings (skipped with a warning if
 #     clippy is not installed in the toolchain; whether it ran is recorded
 #     as clippy_ran in ANALYSIS_report.json, and VERIFY_REQUIRE_CLIPPY=1
 #     turns the skip into a hard failure)
+#
+# Opt-in sanitizer lanes (each recorded in ANALYSIS_report.json "lanes";
+# the default lane stays offline and stable-only):
+#   * VERIFY_MIRI=1: `cargo +nightly miri test` over the coordinator
+#     unit tests — UB detection for the unsafe fork/join tile writes
+#   * VERIFY_TSAN=1: nightly -Zsanitizer=thread over the cross-layer and
+#     ingress e2e tests — data-race detection on the real thread pool
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -220,9 +230,36 @@ else
     CLIPPY_RAN=true
 fi
 
-echo "==> srclint (static analysis + interleaving models)"
+LANES="default"
+
+if [[ "${VERIFY_MIRI:-0}" == "1" ]]; then
+    echo "==> miri lane (VERIFY_MIRI=1): cargo +nightly miri test -- coordinator"
+    if ! cargo +nightly miri --version >/dev/null 2>&1; then
+        echo "verify FAILED: VERIFY_MIRI=1 but the nightly miri component is not installed" >&2
+        echo "  (rustup toolchain install nightly && rustup +nightly component add miri)" >&2
+        exit 1
+    fi
+    # the unsafe surface: TileOut's disjoint tile writes + the join
+    cargo +nightly miri test --lib -- coordinator
+    LANES="${LANES},miri"
+fi
+
+if [[ "${VERIFY_TSAN:-0}" == "1" ]]; then
+    echo "==> tsan lane (VERIFY_TSAN=1): -Zsanitizer=thread over cross_layer + ingress_e2e"
+    if ! cargo +nightly --version >/dev/null 2>&1; then
+        echo "verify FAILED: VERIFY_TSAN=1 but no nightly toolchain is installed" >&2
+        exit 1
+    fi
+    TSAN_TARGET="$(rustc -vV | awk '/^host:/ {print $2}')"
+    RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test --release \
+        --target "$TSAN_TARGET" --test cross_layer --test ingress_e2e
+    LANES="${LANES},tsan"
+fi
+
+echo "==> srclint (static analysis + interleaving models; lanes: ${LANES})"
 rm -f ANALYSIS_report.json
-if ! cargo run --release --quiet --bin srclint -- --clippy-ran "$CLIPPY_RAN"; then
+if ! cargo run --release --quiet --bin srclint -- --clippy-ran "$CLIPPY_RAN" \
+    --lanes "$LANES"; then
     echo "verify FAILED: srclint reported findings (see above)" >&2
     exit 1
 fi
@@ -240,6 +277,19 @@ if ! grep -q '"inventory_ok":true' ANALYSIS_report.json; then
 fi
 if ! grep -q '"interleave_ok":true' ANALYSIS_report.json; then
     echo "verify FAILED: an interleaving model reported a violation" >&2
+    exit 1
+fi
+if ! grep -q '"ledger_audit_ok":true' ANALYSIS_report.json; then
+    echo "verify FAILED: an engine entry point lost its ledger pairing" >&2
+    exit 1
+fi
+if ! grep -q '"wire_codes_ok":true' ANALYSIS_report.json; then
+    echo "verify FAILED: the WireError code table drifted from analysis/wire_codes.txt" >&2
+    exit 1
+fi
+MODELS="$(grep -o '"interleave_models":[0-9]*' ANALYSIS_report.json | grep -o '[0-9]*$')"
+if [[ -z "$MODELS" || "$MODELS" -lt 8 ]]; then
+    echo "verify FAILED: expected >= 8 interleaving models, report has '${MODELS:-none}'" >&2
     exit 1
 fi
 cp ANALYSIS_report.json ..
